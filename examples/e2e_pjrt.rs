@@ -1,0 +1,131 @@
+//! End-to-end three-layer validation driver (the EXPERIMENTS.md §E2E run).
+//!
+//!     make artifacts && cargo run --release --example e2e_pjrt
+//!
+//! Exercises the full stack on a real workload: the L1 Pallas map kernels
+//! and L2 JAX step function were AOT-lowered to `artifacts/*.hlo.txt`;
+//! this binary (L3) loads them through PJRT, serves a batch of simulation
+//! jobs, cross-checks every final state bit-for-bit against the native
+//! Rust engines, and reports latency/throughput per artifact.
+
+use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::catalog;
+use squeeze::runtime::Runtime;
+use squeeze::util::fmt::human_secs;
+use squeeze::util::timer::Timer;
+
+fn main() {
+    let dir = std::env::var("SQUEEZE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let mut rt = match Runtime::open(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot open artifacts ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "platform: {}  artifacts: {}",
+        rt.platform(),
+        rt.manifest().len()
+    );
+
+    // a small job batch over the squeeze artifacts — the serving workload
+    let jobs: Vec<(String, u32)> = rt
+        .manifest()
+        .iter()
+        .filter(|m| m.kind == "squeeze")
+        .map(|m| (m.name.clone(), if m.iters > 1 { 1 } else { 4 }))
+        .collect();
+
+    let mut all_ok = true;
+    for (name, outer) in jobs {
+        let meta = rt.meta(&name).unwrap().clone();
+        let spec = catalog::by_name(&meta.fractal).expect("catalog fractal");
+        let cells = meta.rows * meta.cols;
+        let state: Vec<f32> = (0..cells)
+            .map(|i| {
+                if squeeze::ca::engine::seeded_alive(42, i, 0.4) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        // compile (cold) then serve
+        let t = Timer::start();
+        rt.load(&name).expect("compile");
+        let compile_s = t.elapsed_s();
+        let t = Timer::start();
+        let out = rt.run_steps(&name, &state, outer).expect("execute");
+        let exec_s = t.elapsed_s();
+        let total_steps = outer * meta.iters;
+
+        // native cross-check
+        let mut engine = build(
+            &spec,
+            &EngineConfig {
+                kind: EngineKind::Squeeze { rho: 1, tensor: false },
+                r: meta.r,
+                rule: Rule::game_of_life(),
+                density: 0.4,
+                seed: 42,
+                workers: squeeze::util::pool::default_workers(),
+            },
+        );
+        let t = Timer::start();
+        for _ in 0..total_steps {
+            engine.step();
+        }
+        let native_s = t.elapsed_s();
+        let ok = (0..cells).all(|i| (out[i as usize] > 0.5) == (engine.cell(i) == 1));
+        all_ok &= ok;
+        println!(
+            "{:<38} steps={:<3} compile {:>9} exec {:>9} ({:.2e} upd/s) native {:>9}  {}",
+            name,
+            total_steps,
+            human_secs(compile_s),
+            human_secs(exec_s),
+            cells as f64 * total_steps as f64 / exec_s,
+            human_secs(native_s),
+            if ok { "STATE MATCH" } else { "STATE MISMATCH" }
+        );
+    }
+
+    // the ν-probe artifact: map evaluation as a service
+    if let Some(meta) = rt
+        .manifest()
+        .iter()
+        .find(|m| m.kind == "nu_probe")
+        .cloned()
+    {
+        let spec = catalog::by_name(&meta.fractal).unwrap();
+        let ctx = squeeze::maps::MapCtx::new(&spec, meta.r);
+        let pts: Vec<(f32, f32)> = (0..64u32)
+            .map(|i| ((i * 3 % 256) as f32, (i * 7 % 256) as f32))
+            .collect();
+        let t = Timer::start();
+        let got = rt.run_nu_probe(&meta.name, &pts).expect("probe");
+        let probe_s = t.elapsed_s();
+        let ok = pts.iter().zip(&got).all(|(&(x, y), res)| {
+            let want =
+                squeeze::maps::nu(&ctx, squeeze::fractal::Coord::new(x as u32, y as u32));
+            *res == want.map(|c| (c.x, c.y))
+        });
+        all_ok &= ok;
+        println!(
+            "{:<38} batch={:<3} exec {:>9}  {}",
+            meta.name,
+            pts.len(),
+            human_secs(probe_s),
+            if ok { "MAPS MATCH" } else { "MAPS MISMATCH" }
+        );
+    }
+
+    if all_ok {
+        println!("\nE2E OK: all PJRT artifacts agree bit-for-bit with the native engines");
+    } else {
+        println!("\nE2E FAILED");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,51 @@
+//! Fractal gallery: render every catalog NBB fractal in expanded and
+//! compact form (Fig. 11's grid/memory comparison, for all fractals), and
+//! demonstrate that λ/ν round-trip the two spaces exactly.
+//!
+//!     cargo run --release --example fractal_gallery
+
+use squeeze::fractal::{catalog, expanded, Coord};
+use squeeze::maps::{lambda_linear, nu, MapCtx};
+use squeeze::memory;
+use squeeze::util::fmt::human_bytes;
+
+fn main() {
+    for spec in catalog::all() {
+        let r = if spec.s == 2 { 4 } else { 2 };
+        let bm = expanded::rasterize_scan(&spec, r);
+        let ctx = MapCtx::new(&spec, r);
+        println!(
+            "=== {}  F^({},{}), r={r}: n={}, cells={}, dim={:.3} ===",
+            spec.name,
+            spec.k,
+            spec.s,
+            spec.n(r),
+            spec.cells(r),
+            spec.dimension()
+        );
+        println!("expanded ({0}x{0}):", bm.n);
+        print!("{}", expanded::to_ascii(&bm));
+
+        // verify λ/ν roundtrip over the whole compact space
+        for idx in 0..ctx.compact.area() {
+            let c = Coord::from_linear(idx, ctx.compact.w);
+            let e = lambda_linear(&ctx, idx);
+            assert_eq!(nu(&ctx, e), Some(c), "roundtrip failed at {c}");
+        }
+        println!(
+            "compact: {}x{} (dense rectangle, roundtrip λ/ν verified on all {} cells)",
+            ctx.compact.w,
+            ctx.compact.h,
+            ctx.compact.area()
+        );
+
+        // the three approaches' memory (Fig. 11's comparison) at scale
+        let big_r = if spec.s == 2 { 16 } else { 10 };
+        println!(
+            "at r={big_r}:  BB/λ(ω) memory {}  Squeeze memory {}  (MRF {:.1}x)\n",
+            human_bytes(memory::bb_bytes(&spec, big_r, memory::PAPER_CELL_BYTES)),
+            human_bytes(memory::squeeze_bytes(&spec, big_r, 1, memory::PAPER_CELL_BYTES)),
+            memory::mrf(&spec, big_r, 1)
+        );
+    }
+}

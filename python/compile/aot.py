@@ -1,0 +1,217 @@
+"""AOT lowering: JAX/Pallas step functions -> HLO *text* artifacts.
+
+The Rust runtime (`rust/src/runtime/`) loads these with
+`HloModuleProto::from_text_file`, compiles them on the PJRT CPU client and
+executes them on the request path — Python never runs at serve time.
+
+Interchange is HLO text, NOT a serialized `HloModuleProto`: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under --out, default ../artifacts):
+  {name}.hlo.txt        one per lowered config
+  manifest.tsv          name, file, kind, fractal, r, shapes, iters
+  golden_*.tsv          cross-layer golden vectors checked by Rust tests
+
+Usage: python -m compile.aot [--out DIR] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+import sys
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .fractal import CATALOG, FractalSpec
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals
+    # as `constant({...})`, which the 0.5.1 HLO text parser silently reads
+    # as zeros — baked masks/LUTs would vanish (found the hard way; see
+    # EXPERIMENTS.md §E2E).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+# ---------------------------------------------------------------------------
+# Config table: every artifact the Rust side can load.
+# ---------------------------------------------------------------------------
+
+def artifact_configs() -> List[dict]:
+    tri = CATALOG["sierpinski-triangle"]
+    vic = CATALOG["vicsek"]
+    cfgs: List[dict] = []
+    for r in (4, 6, 8):
+        cfgs.append(dict(kind="squeeze", spec=tri, r=r, iters=1))
+    cfgs.append(dict(kind="squeeze", spec=tri, r=6, iters=10))
+    cfgs.append(dict(kind="squeeze", spec=vic, r=4, iters=1))
+    for r in (4, 6, 8):
+        cfgs.append(dict(kind="bb", spec=tri, r=r, iters=1))
+    cfgs.append(dict(kind="nu_probe", spec=tri, r=8, iters=1, batch=1024))
+    return cfgs
+
+
+def config_name(cfg: dict) -> str:
+    base = f"{cfg['kind']}_{cfg['spec'].name}_r{cfg['r']}"
+    if cfg.get("batch"):
+        base += f"_b{cfg['batch']}"
+    if cfg["iters"] != 1:
+        base += f"_x{cfg['iters']}"
+    return base
+
+
+def build_fn_and_args(cfg: dict) -> Tuple[Callable, Tuple[jax.ShapeDtypeStruct, ...], str]:
+    spec: FractalSpec = cfg["spec"]
+    r: int = cfg["r"]
+    if cfg["kind"] == "squeeze":
+        w, h = spec.compact_extent(r)
+        step = model.make_squeeze_step(spec, r)
+        fn = model.make_multi_step(step, cfg["iters"])
+        arg = jax.ShapeDtypeStruct((h, w), jnp.float32)
+        return lambda s: (fn(s),), (arg,), f"{h}x{w}"
+    if cfg["kind"] == "bb":
+        n = spec.n(r)
+        step = model.make_bb_step(spec, r)
+        fn = model.make_multi_step(step, cfg["iters"])
+        arg = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        return lambda s: (fn(s),), (arg,), f"{n}x{n}"
+    if cfg["kind"] == "nu_probe":
+        batch = cfg["batch"]
+        probe = model.make_nu_probe(spec, r, batch)
+        arg = jax.ShapeDtypeStruct((batch, 2), jnp.float32)
+        return probe, (arg,), f"{batch}x2"
+    raise ValueError(f"unknown kind {cfg['kind']}")
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors: pin Python maps == Rust maps.
+# ---------------------------------------------------------------------------
+
+def write_golden(out_dir: str) -> List[str]:
+    files = []
+    spec = CATALOG["sierpinski-triangle"]
+    r = 8
+    rng = np.random.default_rng(0xC0FFEE)
+
+    # λ golden: compact idx -> expanded coordinate
+    w, h = spec.compact_extent(r)
+    idx = rng.integers(0, w * h, size=256)
+    cx, cy = idx % w, idx // w
+    ex, ey = ref.lambda_ref(spec, r, cx, cy)
+    path = os.path.join(out_dir, f"golden_lambda_{spec.name}_r{r}.tsv")
+    with open(path, "w") as f:
+        f.write("# idx cx cy ex ey\n")
+        for row in zip(idx, cx, cy, ex, ey):
+            f.write("\t".join(str(int(v)) for v in row) + "\n")
+    files.append(path)
+
+    # ν golden: expanded coordinate -> validity + compact coordinate
+    n = spec.n(r)
+    gx = rng.integers(0, n, size=256)
+    gy = rng.integers(0, n, size=256)
+    ncx, ncy, ok = ref.nu_ref(spec, r, gx, gy)
+    path = os.path.join(out_dir, f"golden_nu_{spec.name}_r{r}.tsv")
+    with open(path, "w") as f:
+        f.write("# ex ey valid cx cy\n")
+        for x, y, v, a, b in zip(gx, gy, ok, ncx, ncy):
+            f.write(f"{x}\t{y}\t{int(v)}\t{int(a) if v else 0}\t{int(b) if v else 0}\n")
+    files.append(path)
+
+    # step golden: seeded state idx=42 density=0.4, 3 squeeze steps -> popcounts
+    r2 = 5
+    state = ref.seed_compact(spec, r2, 0.4, 42).astype(np.int64)
+    pops = [int(state.sum())]
+    for _ in range(3):
+        state = ref.gol_step_compact_ref(spec, r2, state)
+        pops.append(int(state.sum()))
+    path = os.path.join(out_dir, f"golden_step_{spec.name}_r{r2}.tsv")
+    with open(path, "w") as f:
+        f.write("# step population (seed=42 density=0.4 rule=B3/S23)\n")
+        for i, p in enumerate(pops):
+            f.write(f"{i}\t{p}\n")
+    files.append(path)
+    return files
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile-path sources, for incremental `make artifacts`."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    digest = hashlib.sha256()
+    for root, _, names in sorted(os.walk(here)):
+        for name in sorted(names):
+            if name.endswith(".py"):
+                with open(os.path.join(root, name), "rb") as f:
+                    digest.update(f.read())
+    return digest.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    stamp_path = os.path.join(args.out, ".stamp")
+    fp = source_fingerprint()
+    if not args.force and os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            if f.read().strip() == fp:
+                print("artifacts up to date (fingerprint match); use --force to rebuild")
+                return 0
+
+    manifest_rows = []
+    for cfg in artifact_configs():
+        name = config_name(cfg)
+        fn, arg_specs, shape = build_fn_and_args(cfg)
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_rows.append(
+            dict(
+                name=name,
+                file=fname,
+                kind=cfg["kind"],
+                fractal=cfg["spec"].name,
+                r=cfg["r"],
+                shape=shape,
+                iters=cfg["iters"],
+            )
+        )
+        print(f"lowered {name}: {len(text)} chars, input {shape}")
+
+    golden = write_golden(args.out)
+    for g in golden:
+        print(f"golden {os.path.basename(g)}")
+
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write("name\tfile\tkind\tfractal\tr\tshape\titers\n")
+        for row in manifest_rows:
+            f.write(
+                f"{row['name']}\t{row['file']}\t{row['kind']}\t{row['fractal']}\t"
+                f"{row['r']}\t{row['shape']}\t{row['iters']}\n"
+            )
+    with open(stamp_path, "w") as f:
+        f.write(fp)
+    print(f"wrote {len(manifest_rows)} artifacts + manifest to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

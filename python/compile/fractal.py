@@ -1,0 +1,116 @@
+"""NBB fractal specifications — Python mirror of `rust/src/fractal/`.
+
+The build path (L1 Pallas kernels + L2 JAX model) needs the same fractal
+parameters the Rust coordinator uses: `k` (replicas per transition), `s`
+(linear scale factor), the placement table `tau` and its inverse `hnu`.
+Cross-layer agreement is pinned by golden vectors written by `aot.py` and
+checked by a Rust integration test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+#: Marker for holes in the flattened H_nu table. Using `k` (one past the
+#: last replica index) keeps validity checks branch-free: `digit < k`.
+def hole_marker(k: int) -> int:
+    return k
+
+
+@dataclasses.dataclass(frozen=True)
+class FractalSpec:
+    """One member of the NBB family `F_n^{k,s}` (paper §3)."""
+
+    name: str
+    k: int
+    s: int
+    tau: Tuple[Tuple[int, int], ...]
+
+    def __post_init__(self) -> None:
+        if not (1 <= self.k <= self.s * self.s):
+            raise ValueError(f"k={self.k} out of range for s={self.s}")
+        if len(self.tau) != self.k:
+            raise ValueError("tau length must equal k")
+        if len(set(self.tau)) != self.k:
+            raise ValueError("tau must be injective")
+        for tx, ty in self.tau:
+            if not (0 <= tx < self.s and 0 <= ty < self.s):
+                raise ValueError(f"tau entry {(tx, ty)} out of range")
+
+    # -- geometry ---------------------------------------------------------
+
+    def n(self, r: int) -> int:
+        """Expanded embedding side `s^r`."""
+        return self.s**r
+
+    def cells(self, r: int) -> int:
+        """Fractal cell count `k^r` (paper Eq. 1)."""
+        return self.k**r
+
+    def compact_extent(self, r: int) -> Tuple[int, int]:
+        """(width, height) of compact space: `k^⌊r/2⌋ × k^⌈r/2⌉`."""
+        return self.k ** (r // 2), self.k ** ((r + 1) // 2)
+
+    # -- tables -----------------------------------------------------------
+
+    def hnu_flat(self) -> np.ndarray:
+        """Flattened `s×s` inverse table (`θy*s+θx -> b`), holes = k."""
+        out = np.full(self.s * self.s, hole_marker(self.k), dtype=np.int32)
+        for b, (tx, ty) in enumerate(self.tau):
+            out[ty * self.s + tx] = b
+        return out
+
+    def tau_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(tau_x, tau_y) as int32 arrays of length k."""
+        tx = np.array([t[0] for t in self.tau], dtype=np.int32)
+        ty = np.array([t[1] for t in self.tau], dtype=np.int32)
+        return tx, ty
+
+    def contains(self, x: np.ndarray, y: np.ndarray, r: int) -> np.ndarray:
+        """Vectorized membership test over expanded coordinates."""
+        x = np.asarray(x, dtype=np.int64)
+        y = np.asarray(y, dtype=np.int64)
+        ok = (0 <= x) & (x < self.n(r)) & (0 <= y) & (y < self.n(r))
+        hnu = self.hnu_flat()
+        hole = hole_marker(self.k)
+        cx, cy = x.copy(), y.copy()
+        for _ in range(r):
+            theta = (cy % self.s) * self.s + (cx % self.s)
+            ok &= hnu[np.clip(theta, 0, self.s * self.s - 1)] != hole
+            cx //= self.s
+            cy //= self.s
+        return ok
+
+
+SIERPINSKI_TRIANGLE = FractalSpec(
+    "sierpinski-triangle", 3, 2, ((0, 0), (0, 1), (1, 1))
+)
+SIERPINSKI_CARPET = FractalSpec(
+    "sierpinski-carpet",
+    8,
+    3,
+    ((0, 0), (1, 0), (2, 0), (0, 1), (2, 1), (0, 2), (1, 2), (2, 2)),
+)
+VICSEK = FractalSpec("vicsek", 5, 3, ((1, 0), (0, 1), (1, 1), (2, 1), (1, 2)))
+EMPTY_BOTTLES = FractalSpec(
+    "empty-bottles", 7, 3, ((0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1), (1, 2))
+)
+CHANDELIER = FractalSpec("chandelier", 4, 3, ((1, 0), (0, 1), (2, 1), (1, 2)))
+
+CATALOG: Dict[str, FractalSpec] = {
+    f.name: f
+    for f in [
+        SIERPINSKI_TRIANGLE,
+        SIERPINSKI_CARPET,
+        VICSEK,
+        EMPTY_BOTTLES,
+        CHANDELIER,
+    ]
+}
+
+
+def all_specs() -> List[FractalSpec]:
+    return list(CATALOG.values())

@@ -1,0 +1,190 @@
+"""L1 Pallas kernels: the Squeeze space maps as MXU-shaped matmuls.
+
+The paper encodes λ/ν as 16×16 WMMA fragments (Eqs. 14–17). The TPU
+rethink (DESIGN.md §Hardware-Adaptation): digit extraction (θ_μ, Eq. 6) is
+elementwise shift/mask work for the VPU; the sum-of-products becomes one
+`(T, 16) @ (16, 2)` matmul per tile for the MXU, batched `T/16`× wider
+than a warp fragment. Kernels are lowered with `interpret=True` (CPU PJRT
+cannot execute Mosaic custom-calls); on a real TPU the same code targets
+the MXU.
+
+VMEM budget per tile (documented for DESIGN.md §Perf): points (T,2) i32 +
+H (T,16) f32 + out (T,2) f32 ≈ 80·T bytes ⇒ T = 1024 uses ~80 KiB, far
+inside the ~16 MiB VMEM of a TPU core; the A operand (16×2) and the H_ν
+table (s²≤16 entries) are resident constants.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..fractal import FractalSpec
+
+#: Fragment depth — one warp fragment's K dimension (paper §3.6); also the
+#: max level the single-fragment encoding supports.
+MMA_LEVELS = 16
+
+#: Default tile of points per Pallas grid step.
+DEFAULT_TILE = 256
+
+
+def nu_a_matrix(spec: FractalSpec, r: int) -> np.ndarray:
+    """ν's constant operand (paper Eq. 15, transposed to (16, 2)):
+    row μ-1 = (Δ^ν_μ·f_x(μ), Δ^ν_μ·f_y(μ))."""
+    if r > MMA_LEVELS:
+        raise ValueError(f"MMA encoding supports r <= {MMA_LEVELS}, got {r}")
+    a = np.zeros((MMA_LEVELS, 2), dtype=np.float32)
+    for mu in range(1, r + 1):
+        delta = float(spec.k ** ((mu - 1) // 2))
+        a[mu - 1, 0] = delta * ((mu - 1) % 2)  # f_x: even μ
+        a[mu - 1, 1] = delta * (mu % 2)  # f_y: odd μ
+    return a
+
+
+def lambda_a_matrix(spec: FractalSpec, r: int) -> np.ndarray:
+    """λ's constant operand: column vector of scale factors s^{μ-1}."""
+    if r > MMA_LEVELS:
+        raise ValueError(f"MMA encoding supports r <= {MMA_LEVELS}, got {r}")
+    a = np.zeros((MMA_LEVELS, 1), dtype=np.float32)
+    for mu in range(1, r + 1):
+        a[mu - 1, 0] = float(spec.s ** (mu - 1))
+    return a
+
+
+def _nu_kernel(pts_ref, hnu_ref, a_ref, out_ref, valid_ref, *, spec: FractalSpec, r: int):
+    """One tile: digit extraction (VPU) + (T,16)@(16,2) matmul (MXU)."""
+    x = pts_ref[:, 0]
+    y = pts_ref[:, 1]
+    n = spec.s**r
+    valid = (x >= 0) & (x < n) & (y >= 0) & (y < n)
+    # clamp so holes/out-of-range still index safely; masked out at the end
+    x = jnp.clip(x, 0, n - 1)
+    y = jnp.clip(y, 0, n - 1)
+    hnu = hnu_ref[...]
+    cols = []
+    for mu in range(1, r + 1):  # static unroll: r is a compile-time level
+        theta = (y % spec.s) * spec.s + (x % spec.s)
+        b = jnp.take(hnu, theta)
+        valid &= b < spec.k  # hole marker is k
+        cols.append(jnp.where(b < spec.k, b, 0).astype(jnp.float32))
+        x = x // spec.s
+        y = y // spec.s
+    tile = pts_ref.shape[0]
+    h = jnp.zeros((tile, MMA_LEVELS), dtype=jnp.float32)
+    if cols:
+        h = h.at[:, : len(cols)].set(jnp.stack(cols, axis=1))
+    # the tensor-core step: one MXU-shaped matmul per tile (Eq. 15–16)
+    coords = jnp.dot(h, a_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = coords.astype(jnp.int32)
+    valid_ref[...] = valid.astype(jnp.int32)
+
+
+def _lambda_kernel(pts_ref, taux_ref, tauy_ref, a_ref, out_ref, *, spec: FractalSpec, r: int):
+    """One tile of λ: compact digits -> (2T,16)@(16,1) matmul."""
+    cx = pts_ref[:, 0]
+    cy = pts_ref[:, 1]
+    taux = taux_ref[...]
+    tauy = tauy_ref[...]
+    xcols = []
+    ycols = []
+    for mu in range(1, r + 1):
+        if mu % 2 == 1:
+            b = cy % spec.k
+            cy = cy // spec.k
+        else:
+            b = cx % spec.k
+            cx = cx // spec.k
+        xcols.append(jnp.take(taux, b).astype(jnp.float32))
+        ycols.append(jnp.take(tauy, b).astype(jnp.float32))
+    tile = pts_ref.shape[0]
+    hx = jnp.zeros((tile, MMA_LEVELS), dtype=jnp.float32)
+    hy = jnp.zeros((tile, MMA_LEVELS), dtype=jnp.float32)
+    if xcols:
+        hx = hx.at[:, : len(xcols)].set(jnp.stack(xcols, axis=1))
+        hy = hy.at[:, : len(ycols)].set(jnp.stack(ycols, axis=1))
+    # single MXU matmul over the stacked digit matrices
+    g = jnp.concatenate([hx, hy], axis=0)  # (2T, 16)
+    e = jnp.dot(g, a_ref[...], preferred_element_type=jnp.float32)  # (2T, 1)
+    ex = e[:tile, 0]
+    ey = e[tile:, 0]
+    out_ref[...] = jnp.stack([ex, ey], axis=1).astype(jnp.int32)
+
+
+def _pad_to(arr: jnp.ndarray, multiple: int):
+    nrows = arr.shape[0]
+    padded = (nrows + multiple - 1) // multiple * multiple
+    if padded == nrows:
+        return arr, nrows
+    pad = [(0, padded - nrows)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad), nrows
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "r", "tile"))
+def nu_map(spec: FractalSpec, r: int, pts: jnp.ndarray, tile: int = DEFAULT_TILE):
+    """ν over a batch of expanded points.
+
+    Args:
+      pts: (N, 2) int32 expanded coordinates (x, y).
+    Returns:
+      coords: (N, 2) int32 compact coordinates (meaningless when invalid),
+      valid: (N,) bool — True iff the point is a fractal cell.
+    """
+    pts = pts.astype(jnp.int32)
+    padded, n_actual = _pad_to(pts, tile)
+    grid = padded.shape[0] // tile
+    kernel = functools.partial(_nu_kernel, spec=spec, r=r)
+    coords, valid = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((spec.s * spec.s,), lambda i: (0,)),
+            pl.BlockSpec((MMA_LEVELS, 2), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded.shape[0], 2), jnp.int32),
+            jax.ShapeDtypeStruct((padded.shape[0],), jnp.int32),
+        ],
+        interpret=True,
+    )(padded, jnp.asarray(spec.hnu_flat()), jnp.asarray(nu_a_matrix(spec, r)))
+    return coords[:n_actual], valid[:n_actual] != 0
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "r", "tile"))
+def lambda_map(spec: FractalSpec, r: int, pts: jnp.ndarray, tile: int = DEFAULT_TILE):
+    """λ over a batch of compact points.
+
+    Args:
+      pts: (N, 2) int32 compact coordinates (cx, cy).
+    Returns:
+      (N, 2) int32 expanded coordinates.
+    """
+    pts = pts.astype(jnp.int32)
+    padded, n_actual = _pad_to(pts, tile)
+    grid = padded.shape[0] // tile
+    taux, tauy = spec.tau_arrays()
+    kernel = functools.partial(_lambda_kernel, spec=spec, r=r)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+            pl.BlockSpec((spec.k,), lambda i: (0,)),
+            pl.BlockSpec((spec.k,), lambda i: (0,)),
+            pl.BlockSpec((MMA_LEVELS, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded.shape[0], 2), jnp.int32),
+        interpret=True,
+    )(padded, jnp.asarray(taux), jnp.asarray(tauy), jnp.asarray(lambda_a_matrix(spec, r)))
+    return out[:n_actual]

@@ -1,0 +1,162 @@
+"""Pure-numpy / pure-jnp oracles for every kernel — the CORE correctness
+signal for the Python layers.
+
+These implementations favour obviousness over speed: straight loops over
+scale levels, no Pallas, no tensor-core encoding. The Pallas kernels (and
+the Rust maps, via golden vectors) are all checked against this module.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..fractal import FractalSpec, hole_marker
+
+
+def lambda_ref(spec: FractalSpec, r: int, cx: np.ndarray, cy: np.ndarray):
+    """λ(ω): compact → expanded (vectorized reference).
+
+    Digit convention (DESIGN.md §4): odd scale levels come from base-k
+    digits of `cy`, even levels from `cx`; the expanded coordinate is
+    `Σ τ[b_μ]·s^{μ-1}`.
+    """
+    cx = np.asarray(cx, dtype=np.int64).copy()
+    cy = np.asarray(cy, dtype=np.int64).copy()
+    tau_x, tau_y = spec.tau_arrays()
+    ex = np.zeros_like(cx)
+    ey = np.zeros_like(cy)
+    scale = 1
+    for mu in range(1, r + 1):
+        if mu % 2 == 1:
+            b = cy % spec.k
+            cy //= spec.k
+        else:
+            b = cx % spec.k
+            cx //= spec.k
+        ex += tau_x[b] * scale
+        ey += tau_y[b] * scale
+        scale *= spec.s
+    return ex, ey
+
+
+def nu_ref(spec: FractalSpec, r: int, ex: np.ndarray, ey: np.ndarray):
+    """ν(ω): expanded → compact (vectorized reference).
+
+    Returns `(cx, cy, valid)`; `valid` is False for holes and coordinates
+    outside the `n × n` embedding (those `cx, cy` are meaningless).
+    """
+    ex = np.asarray(ex, dtype=np.int64)
+    ey = np.asarray(ey, dtype=np.int64)
+    n = spec.n(r)
+    valid = (0 <= ex) & (ex < n) & (0 <= ey) & (ey < n)
+    hnu = spec.hnu_flat()
+    hole = hole_marker(spec.k)
+    x = np.clip(ex, 0, None)
+    y = np.clip(ey, 0, None)
+    cx = np.zeros_like(x)
+    cy = np.zeros_like(y)
+    dx_pow = 1  # k^⌊(μ-1)/2⌋ for even μ accumulation
+    dy_pow = 1  # for odd μ accumulation
+    for mu in range(1, r + 1):
+        theta = (y % spec.s) * spec.s + (x % spec.s)
+        b = hnu[theta]
+        valid &= b != hole
+        b = np.where(b == hole, 0, b)
+        if mu % 2 == 1:
+            cy += b * dy_pow
+            dy_pow *= spec.k
+        else:
+            cx += b * dx_pow
+            dx_pow *= spec.k
+        x //= spec.s
+        y //= spec.s
+    return cx, cy, valid
+
+
+def compact_coords(spec: FractalSpec, r: int):
+    """All compact coordinates in canonical (row-major) order."""
+    w, h = spec.compact_extent(r)
+    idx = np.arange(w * h, dtype=np.int64)
+    return idx % w, idx // w
+
+
+def gol_step_compact_ref(spec: FractalSpec, r: int, state: np.ndarray,
+                         birth: int = 0b1000, survive: int = 0b1100):
+    """One game-of-life step directly over the compact state (reference
+    semantics used by the paper's experiment, §4).
+
+    `state` is the compact array of shape (h, w) with 0/1 cells. Rule
+    masks: bit i ⇒ count i triggers birth/survival (default B3/S23).
+    """
+    w, h = spec.compact_extent(r)
+    assert state.shape == (h, w)
+    cx, cy = compact_coords(spec, r)
+    ex, ey = lambda_ref(spec, r, cx, cy)
+    counts = np.zeros(w * h, dtype=np.int64)
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            if dx == 0 and dy == 0:
+                continue
+            nx, ny = ex + dx, ey + dy
+            ncx, ncy, ok = nu_ref(spec, r, nx, ny)
+            vals = np.where(ok, state[np.clip(ncy, 0, h - 1),
+                                      np.clip(ncx, 0, w - 1)], 0)
+            counts += vals
+    flat = state.reshape(-1)
+    mask = np.where(flat == 1, survive, birth)
+    nxt = ((mask >> counts) & 1).astype(state.dtype)
+    return nxt.reshape(h, w)
+
+
+def gol_step_bb_ref(spec: FractalSpec, r: int, grid: np.ndarray,
+                    birth: int = 0b1000, survive: int = 0b1100):
+    """One game-of-life step over the expanded bounding-box grid.
+
+    `grid` is (n, n) with 0/1 cells; holes must be 0 and stay 0.
+    """
+    n = spec.n(r)
+    assert grid.shape == (n, n)
+    padded = np.pad(grid, 1)
+    counts = np.zeros_like(grid, dtype=np.int64)
+    for dx in (-1, 0, 1):
+        for dy in (-1, 0, 1):
+            if dx == 0 and dy == 0:
+                continue
+            counts += padded[1 + dy : 1 + dy + n, 1 + dx : 1 + dx + n]
+    ys, xs = np.mgrid[0:n, 0:n]
+    member = spec.contains(xs.reshape(-1), ys.reshape(-1), r).reshape(n, n)
+    mask = np.where(grid == 1, survive, birth)
+    nxt = ((mask >> counts) & 1).astype(grid.dtype)
+    return np.where(member, nxt, 0)
+
+
+def seed_compact(spec: FractalSpec, r: int, density: float, seed: int):
+    """Deterministic compact-state seeding.
+
+    Mirrors `rust/src/ca/engine.rs::seeded_alive` exactly (same
+    splitmix64-based hash), so Rust engines and the JAX model start from
+    identical states.
+    """
+    w, h = spec.compact_extent(r)
+    idx = np.arange(w * h, dtype=np.uint64)
+    s = np.uint64(seed) ^ (idx * np.uint64(0x9E3779B97F4A7C15))
+    # splitmix64
+    with np.errstate(over="ignore"):
+        s = s + np.uint64(0x9E3779B97F4A7C15)
+        z = s
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+    u = (z >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+    return (u < density).astype(np.float32).reshape(h, w)
+
+
+def expanded_of_compact(spec: FractalSpec, r: int, state: np.ndarray):
+    """Scatter a compact state into the expanded embedding (test helper)."""
+    n = spec.n(r)
+    w, h = spec.compact_extent(r)
+    cx, cy = compact_coords(spec, r)
+    ex, ey = lambda_ref(spec, r, cx, cy)
+    grid = np.zeros((n, n), dtype=state.dtype)
+    grid[ey, ex] = state.reshape(-1)
+    return grid

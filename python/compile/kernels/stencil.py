@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: the BB baseline's expanded-grid stencil step.
+
+A single-block game-of-life step over the `n × n` embedding with a
+membership mask (holes forced dead). Used for the BB AOT artifacts at
+moderate `n`; the whole grid is one VMEM block (n=256 f32 ⇒ 256 KiB ×3
+operands — fine for TPU VMEM; the Squeeze point of course is that the
+compact kernels never need grids this large).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bb_kernel(state_ref, mask_ref, out_ref, *, birth: int, survive: int):
+    state = state_ref[...]
+    mask = mask_ref[...]
+    padded = jnp.pad(state, 1)
+    n = state.shape[0]
+    counts = jnp.zeros_like(state)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            if dx == 0 and dy == 0:
+                continue
+            counts = counts + padded[1 + dy : 1 + dy + n, 1 + dx : 1 + dx + n]
+    rule_mask = jnp.where(state > 0.5, survive, birth).astype(jnp.int32)
+    alive = jnp.right_shift(rule_mask, counts.astype(jnp.int32)) & 1
+    out_ref[...] = alive.astype(state.dtype) * mask
+
+
+@functools.partial(jax.jit, static_argnames=("birth", "survive"))
+def bb_step_pallas(state: jnp.ndarray, mask: jnp.ndarray, birth: int = 0b1000,
+                   survive: int = 0b1100) -> jnp.ndarray:
+    """One BB step. `state`: (n, n) f32 0/1; `mask`: (n, n) f32 membership."""
+    n = state.shape[0]
+    kernel = functools.partial(_bb_kernel, birth=birth, survive=survive)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, n), state.dtype),
+        interpret=True,
+    )(state, mask)

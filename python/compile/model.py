@@ -1,0 +1,116 @@
+"""L2 — the JAX compute graph: simulation step functions over fractal
+state, composing the L1 Pallas kernels.
+
+Python only runs at build time: `aot.py` lowers these functions once to
+HLO text and the Rust coordinator executes them via PJRT. The step
+functions mirror the Rust engines exactly (same maps, same rule masks,
+same seeding), which the shared golden vectors pin down.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fractal import FractalSpec
+from .kernels.maps_mma import lambda_map, nu_map
+from .kernels.stencil import bb_step_pallas
+
+#: Moore neighborhood, scanline order (matches rust::fractal::MOORE).
+MOORE = ((-1, -1), (0, -1), (1, -1), (-1, 0), (1, 0), (-1, 1), (0, 1), (1, 1))
+
+#: Conway rule masks (B3/S23).
+BIRTH = 0b1000
+SURVIVE = 0b1100
+
+
+def compact_grid(spec: FractalSpec, r: int) -> jnp.ndarray:
+    """(N, 2) int32 compact coordinates in canonical row-major order."""
+    w, h = spec.compact_extent(r)
+    idx = jnp.arange(w * h, dtype=jnp.int32)
+    return jnp.stack([idx % w, idx // w], axis=1)
+
+
+def make_squeeze_step(spec: FractalSpec, r: int,
+                      birth: int = BIRTH, survive: int = SURVIVE
+                      ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build the Squeeze step: compact state (h, w) f32 -> (h, w) f32.
+
+    Per step and per cell: one λ into virtual expanded space, eight ν maps
+    back to compact storage (all through the L1 Pallas MMA kernels), a
+    masked gather, and the totalistic rule. The expanded embedding never
+    exists in memory — the paper's contribution, as a JAX graph.
+    """
+    w, h = spec.compact_extent(r)
+
+    def step(state: jnp.ndarray) -> jnp.ndarray:
+        pts = compact_grid(spec, r)
+        e = lambda_map(spec, r, pts)  # (N, 2) — L1 kernel
+        flat = state.reshape(-1)
+        counts = jnp.zeros((w * h,), dtype=jnp.float32)
+        for dx, dy in MOORE:
+            nb = e + jnp.array([dx, dy], dtype=jnp.int32)
+            c, valid = nu_map(spec, r, nb)  # L1 kernel
+            idx = (
+                jnp.clip(c[:, 1], 0, h - 1) * w + jnp.clip(c[:, 0], 0, w - 1)
+            )
+            counts = counts + jnp.where(valid, flat[idx], 0.0)
+        rule_mask = jnp.where(flat > 0.5, survive, birth).astype(jnp.int32)
+        alive = jnp.right_shift(rule_mask, counts.astype(jnp.int32)) & 1
+        return alive.astype(state.dtype).reshape(h, w)
+
+    return step
+
+
+def make_bb_step(spec: FractalSpec, r: int,
+                 birth: int = BIRTH, survive: int = SURVIVE
+                 ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Build the BB baseline step: expanded state (n, n) f32 -> same.
+
+    The membership mask is baked into the graph as a constant — the BB
+    approach's "fractal representation in memory" (problem P2).
+    """
+    n = spec.n(r)
+    ys, xs = np.mgrid[0:n, 0:n]
+    mask = spec.contains(xs.reshape(-1), ys.reshape(-1), r).reshape(n, n)
+    mask = jnp.asarray(mask.astype(np.float32))
+
+    def step(state: jnp.ndarray) -> jnp.ndarray:
+        return bb_step_pallas(state, mask, birth=birth, survive=survive)
+
+    return step
+
+
+def make_multi_step(step: Callable[[jnp.ndarray], jnp.ndarray],
+                    iters: int) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    """Fuse `iters` steps into one call via `lax.fori_loop` (single fused
+    scan in the lowered HLO — no per-step host round-trip)."""
+
+    def run(state: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.fori_loop(0, iters, lambda _, s: step(s), state)
+
+    return run
+
+
+def make_nu_probe(spec: FractalSpec, r: int, batch: int
+                  ) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray, jnp.ndarray]]:
+    """A standalone ν artifact: (batch, 2) f32 expanded points ->
+    ((batch, 2) f32 compact coords, (batch,) f32 validity). Lets the Rust
+    runtime evaluate maps through PJRT (used by the e2e example and the
+    runtime integration tests)."""
+
+    def probe(pts_f: jnp.ndarray):
+        coords, valid = nu_map(spec, r, pts_f.astype(jnp.int32), tile=min(batch, 256))
+        return coords.astype(jnp.float32), valid.astype(jnp.float32)
+
+    return probe
+
+
+@functools.lru_cache(maxsize=None)
+def cached_squeeze_step(spec: FractalSpec, r: int):
+    """Jitted squeeze step (test convenience)."""
+    return jax.jit(make_squeeze_step(spec, r))

@@ -1,0 +1,81 @@
+"""AOT path: lowering produces loadable HLO text, manifest is consistent,
+golden vectors match the oracle."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.fractal import CATALOG
+from compile.kernels import ref
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_produces_module():
+    spec = CATALOG["sierpinski-triangle"]
+    step = model.make_squeeze_step(spec, 3)
+    lowered = jax.jit(lambda s: (step(s),)).lower(
+        jax.ShapeDtypeStruct(spec.compact_extent(3)[::-1], jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ROOT" in text
+
+
+def test_config_names_are_unique():
+    names = [aot.config_name(c) for c in aot.artifact_configs()]
+    assert len(names) == len(set(names))
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.tsv")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_rows_point_at_existing_files():
+    with open(os.path.join(ART, "manifest.tsv")) as f:
+        header = f.readline().strip().split("\t")
+        assert header == ["name", "file", "kind", "fractal", "r", "shape", "iters"]
+        rows = [line.strip().split("\t") for line in f if line.strip()]
+    assert len(rows) >= 8
+    for row in rows:
+        path = os.path.join(ART, row[1])
+        assert os.path.exists(path), row[1]
+        with open(path) as g:
+            head = g.read(200)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.tsv")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_golden_lambda_matches_oracle():
+    spec = CATALOG["sierpinski-triangle"]
+    path = os.path.join(ART, "golden_lambda_sierpinski-triangle_r8.tsv")
+    rows = np.loadtxt(path, dtype=np.int64)
+    idx, cx, cy, ex, ey = rows.T
+    gx, gy = ref.lambda_ref(spec, 8, cx, cy)
+    np.testing.assert_array_equal(gx, ex)
+    np.testing.assert_array_equal(gy, ey)
+    w, _ = spec.compact_extent(8)
+    np.testing.assert_array_equal(idx % w, cx)
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.tsv")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_golden_step_matches_oracle():
+    spec = CATALOG["sierpinski-triangle"]
+    path = os.path.join(ART, "golden_step_sierpinski-triangle_r5.tsv")
+    rows = np.loadtxt(path, dtype=np.int64)
+    state = ref.seed_compact(spec, 5, 0.4, 42).astype(np.int64)
+    assert rows[0][1] == state.sum()
+    for i in range(1, len(rows)):
+        state = ref.gol_step_compact_ref(spec, 5, state)
+        assert rows[i][1] == state.sum(), f"step {i}"
+
+
+def test_fingerprint_changes_with_source():
+    fp = aot.source_fingerprint()
+    assert len(fp) == 64
+    assert fp == aot.source_fingerprint()

@@ -1,0 +1,55 @@
+"""Spec-level invariants of the NBB fractal catalog."""
+
+import numpy as np
+import pytest
+
+from compile.fractal import CATALOG, FractalSpec, all_specs, hole_marker
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+@pytest.mark.parametrize("r", [0, 1, 2, 3, 4])
+def test_compact_extent_is_dense(spec, r):
+    w, h = spec.compact_extent(r)
+    assert w * h == spec.cells(r)
+    assert w == spec.k ** (r // 2)
+    assert h == spec.k ** ((r + 1) // 2)
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+def test_membership_count_matches_cells(spec):
+    r = 2
+    n = spec.n(r)
+    ys, xs = np.mgrid[0:n, 0:n]
+    ok = spec.contains(xs.reshape(-1), ys.reshape(-1), r)
+    assert int(ok.sum()) == spec.cells(r)
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+def test_hnu_inverts_tau(spec):
+    hnu = spec.hnu_flat()
+    for b, (tx, ty) in enumerate(spec.tau):
+        assert hnu[ty * spec.s + tx] == b
+    # holes marked with k
+    assert (hnu == hole_marker(spec.k)).sum() == spec.s**2 - spec.k
+
+
+def test_validation_rejects_bad_tables():
+    with pytest.raises(ValueError):
+        FractalSpec("dup", 2, 2, ((0, 0), (0, 0)))
+    with pytest.raises(ValueError):
+        FractalSpec("oob", 1, 2, ((2, 0),))
+    with pytest.raises(ValueError):
+        FractalSpec("toomany", 5, 2, ((0, 0), (0, 1), (1, 0), (1, 1), (1, 1)))
+
+
+def test_paper_parameters():
+    assert (CATALOG["sierpinski-triangle"].k, CATALOG["sierpinski-triangle"].s) == (3, 2)
+    assert (CATALOG["sierpinski-carpet"].k, CATALOG["sierpinski-carpet"].s) == (8, 3)
+    assert (CATALOG["vicsek"].k, CATALOG["vicsek"].s) == (5, 3)
+    assert (CATALOG["empty-bottles"].k, CATALOG["empty-bottles"].s) == (7, 3)
+
+
+def test_membership_out_of_range_is_false():
+    spec = CATALOG["sierpinski-triangle"]
+    assert not spec.contains(np.array([spec.n(3)]), np.array([0]), 3)[0]
+    assert not spec.contains(np.array([-1]), np.array([0]), 3)[0]

@@ -1,0 +1,144 @@
+"""L1 Pallas kernels vs the pure-numpy oracle, including a hypothesis
+sweep over fractal, level, batch shape and coordinate ranges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.fractal import CATALOG, all_specs
+from compile.kernels import ref
+from compile.kernels.maps_mma import (
+    MMA_LEVELS,
+    lambda_a_matrix,
+    lambda_map,
+    nu_a_matrix,
+    nu_map,
+)
+from compile.kernels.stencil import bb_step_pallas
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+@pytest.mark.parametrize("r", [1, 2, 3, 4])
+def test_lambda_kernel_matches_ref_exhaustive(spec, r):
+    cx, cy = ref.compact_coords(spec, r)
+    want_x, want_y = ref.lambda_ref(spec, r, cx, cy)
+    pts = jnp.stack([jnp.asarray(cx), jnp.asarray(cy)], axis=1).astype(jnp.int32)
+    got = np.asarray(lambda_map(spec, r, pts))
+    np.testing.assert_array_equal(got[:, 0], want_x)
+    np.testing.assert_array_equal(got[:, 1], want_y)
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+@pytest.mark.parametrize("r", [1, 2, 3])
+def test_nu_kernel_matches_ref_exhaustive(spec, r):
+    n = spec.n(r)
+    ys, xs = np.mgrid[0:n, 0:n]
+    xs, ys = xs.reshape(-1), ys.reshape(-1)
+    want_cx, want_cy, want_ok = ref.nu_ref(spec, r, xs, ys)
+    pts = jnp.stack([jnp.asarray(xs), jnp.asarray(ys)], axis=1).astype(jnp.int32)
+    coords, valid = nu_map(spec, r, pts)
+    coords, valid = np.asarray(coords), np.asarray(valid)
+    np.testing.assert_array_equal(valid, want_ok)
+    np.testing.assert_array_equal(coords[want_ok, 0], want_cx[want_ok])
+    np.testing.assert_array_equal(coords[want_ok, 1], want_cy[want_ok])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    spec_name=st.sampled_from(sorted(CATALOG.keys())),
+    r=st.integers(min_value=1, max_value=6),
+    batch=st.integers(min_value=1, max_value=700),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_nu_kernel_hypothesis_sweep(spec_name, r, batch, seed):
+    """Random batches (including ragged, non-tile-multiple sizes) of points
+    inside and slightly outside the embedding."""
+    spec = CATALOG[spec_name]
+    n = spec.n(r)
+    rng = np.random.default_rng(seed)
+    xs = rng.integers(-2, n + 2, size=batch)
+    ys = rng.integers(-2, n + 2, size=batch)
+    want_cx, want_cy, want_ok = ref.nu_ref(spec, r, xs, ys)
+    pts = jnp.stack([jnp.asarray(xs), jnp.asarray(ys)], axis=1).astype(jnp.int32)
+    coords, valid = nu_map(spec, r, pts)
+    coords, valid = np.asarray(coords), np.asarray(valid)
+    np.testing.assert_array_equal(valid, want_ok)
+    np.testing.assert_array_equal(coords[want_ok, 0], want_cx[want_ok])
+    np.testing.assert_array_equal(coords[want_ok, 1], want_cy[want_ok])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    spec_name=st.sampled_from(sorted(CATALOG.keys())),
+    r=st.integers(min_value=0, max_value=6),
+    batch=st.integers(min_value=1, max_value=500),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lambda_kernel_hypothesis_sweep(spec_name, r, batch, seed):
+    spec = CATALOG[spec_name]
+    w, h = spec.compact_extent(r)
+    rng = np.random.default_rng(seed)
+    cx = rng.integers(0, w, size=batch)
+    cy = rng.integers(0, h, size=batch)
+    want_x, want_y = ref.lambda_ref(spec, r, cx, cy)
+    pts = jnp.stack([jnp.asarray(cx), jnp.asarray(cy)], axis=1).astype(jnp.int32)
+    got = np.asarray(lambda_map(spec, r, pts))
+    np.testing.assert_array_equal(got[:, 0], want_x)
+    np.testing.assert_array_equal(got[:, 1], want_y)
+
+
+def test_roundtrip_at_high_level():
+    """λ then ν at r=10 (59049 cells, past any LUT-table shortcut)."""
+    spec = CATALOG["sierpinski-triangle"]
+    r = 10
+    rng = np.random.default_rng(3)
+    w, h = spec.compact_extent(r)
+    cx = rng.integers(0, w, size=2048)
+    cy = rng.integers(0, h, size=2048)
+    pts = jnp.stack([jnp.asarray(cx), jnp.asarray(cy)], axis=1).astype(jnp.int32)
+    e = lambda_map(spec, r, pts)
+    back, valid = nu_map(spec, r, e)
+    assert np.asarray(valid).all()
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(pts))
+
+
+def test_a_matrices_match_paper_equations():
+    spec = CATALOG["sierpinski-triangle"]
+    a = nu_a_matrix(spec, 6)
+    # Δ^ν_μ = 3^⌊(μ-1)/2⌋ (Eq. 19); x column live on even μ, y on odd μ
+    np.testing.assert_array_equal(a[:6, 0], [0, 1, 0, 3, 0, 9])
+    np.testing.assert_array_equal(a[:6, 1], [1, 0, 3, 0, 9, 0])
+    assert (a[6:] == 0).all()
+    la = lambda_a_matrix(spec, 6)
+    np.testing.assert_array_equal(la[:6, 0], [1, 2, 4, 8, 16, 32])
+
+
+def test_levels_beyond_fragment_rejected():
+    spec = CATALOG["sierpinski-triangle"]
+    with pytest.raises(ValueError):
+        nu_a_matrix(spec, MMA_LEVELS + 1)
+
+
+def test_bb_stencil_kernel_matches_ref():
+    spec = CATALOG["sierpinski-triangle"]
+    r = 4
+    state = ref.seed_compact(spec, r, 0.5, 11).astype(np.int64)
+    grid = ref.expanded_of_compact(spec, r, state).astype(np.float32)
+    n = spec.n(r)
+    ys, xs = np.mgrid[0:n, 0:n]
+    mask = spec.contains(xs.reshape(-1), ys.reshape(-1), r).reshape(n, n)
+    got = np.asarray(bb_step_pallas(jnp.asarray(grid), jnp.asarray(mask.astype(np.float32))))
+    want = ref.gol_step_bb_ref(spec, r, grid.astype(np.int64)).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_dtype_and_shape_contract():
+    spec = CATALOG["sierpinski-triangle"]
+    pts = jnp.zeros((5, 2), jnp.int32)
+    coords, valid = nu_map(spec, 3, pts)
+    assert coords.shape == (5, 2) and coords.dtype == jnp.int32
+    assert valid.shape == (5,) and valid.dtype == jnp.bool_
+    out = lambda_map(spec, 3, pts)
+    assert out.shape == (5, 2) and out.dtype == jnp.int32

@@ -1,0 +1,79 @@
+"""L2 model vs oracles: squeeze step, BB step, multi-step fusion."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.fractal import CATALOG, all_specs
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("spec", all_specs(), ids=lambda s: s.name)
+def test_squeeze_step_matches_compact_ref(spec):
+    r = 3
+    state = ref.seed_compact(spec, r, 0.4, 13)
+    step = model.cached_squeeze_step(spec, r)
+    got = np.asarray(step(jnp.asarray(state)))
+    want = ref.gol_step_compact_ref(spec, r, state.astype(np.int64)).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("r", [2, 3, 4])
+def test_bb_step_matches_ref(r):
+    spec = CATALOG["sierpinski-triangle"]
+    state = ref.seed_compact(spec, r, 0.5, 5).astype(np.int64)
+    grid = ref.expanded_of_compact(spec, r, state).astype(np.float32)
+    step = model.make_bb_step(spec, r)
+    got = np.asarray(step(jnp.asarray(grid)))
+    want = ref.gol_step_bb_ref(spec, r, grid.astype(np.int64)).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multi_step_equals_repeated_single_steps():
+    spec = CATALOG["sierpinski-triangle"]
+    r = 4
+    state = ref.seed_compact(spec, r, 0.45, 21)
+    step = model.cached_squeeze_step(spec, r)
+    fused = model.make_multi_step(step, 5)
+    got = np.asarray(fused(jnp.asarray(state)))
+    want = state.astype(np.int64)
+    for _ in range(5):
+        want = ref.gol_step_compact_ref(spec, r, want)
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_squeeze_and_bb_stay_in_lockstep():
+    spec = CATALOG["sierpinski-triangle"]
+    r = 4
+    state = ref.seed_compact(spec, r, 0.4, 77)
+    sq = model.cached_squeeze_step(spec, r)
+    bb = model.make_bb_step(spec, r)
+    s = jnp.asarray(state)
+    g = jnp.asarray(ref.expanded_of_compact(spec, r, state.astype(np.int64)).astype(np.float32))
+    for _ in range(6):
+        s = sq(s)
+        g = bb(g)
+    scattered = ref.expanded_of_compact(spec, r, np.asarray(s).astype(np.int64))
+    np.testing.assert_array_equal(scattered, np.asarray(g).astype(np.int64))
+
+
+def test_nu_probe_contract():
+    spec = CATALOG["sierpinski-triangle"]
+    probe = model.make_nu_probe(spec, 8, 64)
+    pts = np.zeros((64, 2), np.float32)
+    pts[0] = (1, 0)  # a hole
+    coords, valid = probe(jnp.asarray(pts))
+    assert coords.shape == (64, 2)
+    assert valid.shape == (64,)
+    assert float(valid[0]) == 0.0
+    assert float(valid[1]) == 1.0  # origin is a fractal cell
+
+
+def test_empty_state_stays_empty():
+    spec = CATALOG["vicsek"]
+    step = model.cached_squeeze_step(spec, 3)
+    w, h = spec.compact_extent(3)
+    out = np.asarray(step(jnp.zeros((h, w), jnp.float32)))
+    assert out.sum() == 0

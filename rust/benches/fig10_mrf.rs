@@ -1,0 +1,16 @@
+//! Regenerates paper Fig. 10: theoretical memory-reduction factor of
+//! Squeeze over BB for Vicsek, Sierpinski triangle and Sierpinski carpet,
+//! sampled at embedding sides n = 2^1 .. 2^16.
+//!
+//!     cargo bench --bench fig10_mrf
+
+fn main() {
+    squeeze::harness::figures::fig10(16).expect("fig10");
+    // pin the §3.7 headline values so a regression fails the bench
+    let tri = squeeze::memory::theoretical_mrf(
+        &squeeze::fractal::catalog::sierpinski_triangle(),
+        16.0,
+    );
+    assert!((tri - 99.77).abs() < 0.2, "triangle MRF at 2^16: {tri}");
+    println!("\nfig10 OK (triangle MRF at n=2^16 = {tri:.1}x, paper: ~100x)");
+}

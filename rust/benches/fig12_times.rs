@@ -1,0 +1,35 @@
+//! Regenerates paper Fig. 12: execution time per simulation step for BB,
+//! λ(ω) and Squeeze at block sizes ρ ∈ {1,2,4,8,16,32}, over fractal
+//! levels (the paper's x-axis n = 2^r).
+//!
+//!     cargo bench --bench fig12_times
+//!
+//! Environment knobs: SQUEEZE_BENCH_R_MAX (default 12),
+//! SQUEEZE_BENCH_BUDGET_S (seconds per measurement, default 2),
+//! SQUEEZE_THREADS.
+
+use squeeze::fractal::catalog;
+use squeeze::harness::{figures, BenchOpts};
+
+fn main() {
+    let r_max: u32 = std::env::var("SQUEEZE_BENCH_R_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let spec = catalog::sierpinski_triangle();
+    let opts = BenchOpts::sweep().from_env();
+    let workers = squeeze::util::pool::default_workers();
+    // 8 GiB embedding cap: the BB/λ OOM wall on this host (paper: 40 GB A100)
+    let pts = figures::fig12(
+        &spec,
+        &[1, 2, 4, 8, 16, 32],
+        4,
+        r_max,
+        workers,
+        8 << 30,
+        &opts,
+    )
+    .expect("fig12");
+    figures::fig13(&pts).expect("fig13 companion");
+    println!("\nfig12 OK ({} measurements)", pts.len());
+}

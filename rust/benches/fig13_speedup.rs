@@ -1,0 +1,68 @@
+//! Regenerates paper Fig. 13: speedup of Squeeze over BB per block size,
+//! and checks the two qualitative claims — speedup grows with the fractal
+//! level, and λ(ω) acts as a performance lower bound (i.e. λ is at least
+//! as fast as thread-level Squeeze).
+//!
+//!     cargo bench --bench fig13_speedup
+
+use squeeze::ca::EngineKind;
+use squeeze::fractal::catalog;
+use squeeze::harness::{figures, speedups_vs_bb, BenchOpts};
+
+fn main() {
+    let r_max: u32 = std::env::var("SQUEEZE_BENCH_R_MAX")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(12);
+    let spec = catalog::sierpinski_triangle();
+    let opts = BenchOpts::sweep().from_env();
+    let workers = squeeze::util::pool::default_workers();
+    let pts = figures::fig12(
+        &spec,
+        &[1, 4, 16],
+        6,
+        r_max,
+        workers,
+        8 << 30,
+        &opts,
+    )
+    .expect("sweep");
+    figures::fig13(&pts).expect("fig13");
+
+    // Claim 1: Squeeze-over-BB speedup grows with r (compare the smallest
+    // and largest common level for thread-level squeeze).
+    let sp = speedups_vs_bb(&pts);
+    let squeeze_rows: Vec<&(String, u32, f64)> = sp
+        .iter()
+        .filter(|(name, _, _)| name == "squeeze")
+        .collect();
+    if squeeze_rows.len() >= 2 {
+        let first = squeeze_rows.first().unwrap().2;
+        let last = squeeze_rows.last().unwrap().2;
+        println!("\nsqueeze speedup at r={}: {first:.2}x -> r={}: {last:.2}x",
+                 squeeze_rows.first().unwrap().1, squeeze_rows.last().unwrap().1);
+        assert!(
+            last > first,
+            "speedup must grow with level (paper Fig. 13): {first} -> {last}"
+        );
+    }
+
+    // Claim 2: λ(ω) is a lower bound for thread-level Squeeze's time.
+    for r in 6..=r_max {
+        let lam = pts
+            .iter()
+            .find(|p| p.kind == EngineKind::Lambda && p.r == r);
+        let sq = pts.iter().find(|p| {
+            p.kind == EngineKind::Squeeze { rho: 1, tensor: false } && p.r == r
+        });
+        if let (Some(l), Some(s)) = (lam, sq) {
+            assert!(
+                l.per_step_s <= s.per_step_s * 1.25, // 25% measurement slack
+                "λ(ω) should lower-bound Squeeze at r={r}: {} vs {}",
+                l.per_step_s,
+                s.per_step_s
+            );
+        }
+    }
+    println!("fig13 OK: speedup grows with r; λ(ω) is a performance lower bound");
+}

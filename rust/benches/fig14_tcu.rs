@@ -1,0 +1,36 @@
+//! Regenerates paper Fig. 14: the impact of tensor cores on Squeeze.
+//!
+//! Two tables (see DESIGN.md §2 for the substitution):
+//!  - modeled: per-generation cycle cost model — the headline shape
+//!    (Volta ~1.3x > Turing ~1.2x > Ampere ~1.11x, small batches can lose);
+//!  - measured: the simulated-WMMA map path vs scalar maps on this CPU
+//!    (validates the Eq. 15-16 encoding end to end; CPU ratios are not
+//!    GPU ratios).
+//!
+//!     cargo bench --bench fig14_tcu
+
+use squeeze::fractal::catalog;
+use squeeze::harness::{figures, BenchOpts};
+use squeeze::tcu::{CostModel, Generation};
+
+fn main() {
+    figures::fig14_modeled(6, 16, 0.6).expect("fig14 modeled");
+
+    // pin the paper's ordering + ranges at the plateau
+    let f = 0.6;
+    let v = CostModel::for_generation(Generation::Volta).fig14_speedup(1 << 20, 12, f);
+    let t = CostModel::for_generation(Generation::Turing).fig14_speedup(1 << 20, 12, f);
+    let a = CostModel::for_generation(Generation::Ampere).fig14_speedup(1 << 20, 12, f);
+    println!("\nplateau speedups: volta {v:.3} turing {t:.3} ampere {a:.3} (paper: 1.3 / 1.2 / 1.11)");
+    assert!(v > t && t > a, "generation ordering");
+    assert!(v > 1.2 && a > 1.05, "all generations must gain at scale");
+    // the Volta small-batch anomaly direction (paper: S ~ 0.75x)
+    let anomaly = CostModel::for_generation(Generation::Volta).fig14_speedup(4, 12, 0.9);
+    assert!(anomaly < 1.0, "small-batch Volta anomaly: {anomaly}");
+
+    let spec = catalog::sierpinski_triangle();
+    let opts = BenchOpts::sweep().from_env();
+    figures::fig14_measured(&spec, 6, 9, 16, squeeze::util::pool::default_workers(), &opts)
+        .expect("fig14 measured");
+    println!("fig14 OK");
+}

@@ -1,0 +1,30 @@
+//! Regenerates paper Table 2: total memory and memory-reduction factor
+//! for each approach on the Sierpinski triangle at r=16, across block
+//! sizes ρ ∈ {1,2,4,8,16,32} — plus the §4.3 r=20 feasibility numbers.
+//!
+//!     cargo bench --bench table2_memory
+
+use squeeze::fractal::catalog;
+use squeeze::harness::figures;
+use squeeze::memory;
+
+fn main() {
+    let spec = catalog::sierpinski_triangle();
+    figures::table2(&spec, 16, &[1, 2, 4, 8, 16, 32]).expect("table2");
+    figures::r20_feasibility(&spec).expect("r20");
+
+    // pin the paper's numbers to the digit
+    const GIB: f64 = (1u64 << 30) as f64;
+    let expect = [(1u32, 99.8), (2, 74.8), (4, 56.1), (8, 42.1), (16, 31.6), (32, 23.7)];
+    for (rho, want) in expect {
+        let got = memory::mrf(&spec, 16, rho);
+        assert!((got - want).abs() < 0.06, "rho={rho}: {got} vs paper {want}");
+    }
+    assert_eq!(
+        memory::bb_bytes(&spec, 16, memory::PAPER_CELL_BYTES) as f64 / GIB,
+        16.0
+    );
+    let r20 = memory::mrf(&spec, 20, 1);
+    assert!((r20 - 315.3).abs() < 0.5, "r=20 MRF: {r20}");
+    println!("\ntable2 OK: all MRF values match the paper to the digit (r=20: {r20:.1}x)");
+}

@@ -1,0 +1,218 @@
+//! BB — the classic expanded bounding-box engine (paper's baseline #1).
+//!
+//! Stores and processes the full `n × n` embedding: one thread per
+//! embedding cell, holes discarded at run time via a precomputed
+//! membership mask. This is exactly the resource/memory profile the paper
+//! criticizes (problems P1 and P2): work and storage grow as `s^{2r}`
+//! while only `k^r` cells are useful.
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::DoubleBuffer;
+use super::rule::Rule;
+use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::{lambda_linear, MapCtx};
+use crate::util::pool::parallel_for_chunks;
+
+pub struct BbEngine {
+    ctx: MapCtx,
+    rule: Rule,
+    buf: DoubleBuffer,
+    /// Membership mask of the embedding (1 = fractal cell).
+    mask: Vec<u8>,
+    workers: usize,
+}
+
+impl BbEngine {
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+    ) -> BbEngine {
+        let ctx = MapCtx::new(spec, r);
+        let n = ctx.n as u64;
+        let mut buf = DoubleBuffer::zeroed(n * n);
+        // Membership mask, built in parallel with the analytic test.
+        let mut mask = vec![0u8; (n * n) as usize];
+        {
+            let ctx_ref = &ctx;
+            let mask_ptr = MaskPtr(mask.as_mut_ptr());
+            parallel_for_chunks(n * n, workers, move |start, end| {
+                let p = mask_ptr;
+                for i in start..end {
+                    let e = Coord::from_linear(i, ctx_ref.n);
+                    if crate::maps::on_fractal(ctx_ref, e) {
+                        unsafe { p.0.add(i as usize).write(1) };
+                    }
+                }
+            });
+        }
+        // Seed through the canonical compact index so every engine starts
+        // from the identical logical state.
+        for idx in 0..ctx.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda_linear(&ctx, idx);
+                buf.cur[e.linear(ctx.n) as usize] = 1;
+            }
+        }
+        BbEngine {
+            ctx,
+            rule,
+            buf,
+            mask,
+            workers,
+        }
+    }
+}
+
+/// Disjoint-write pointer wrapper for the parallel mask build.
+#[derive(Clone, Copy)]
+struct MaskPtr(*mut u8);
+unsafe impl Send for MaskPtr {}
+unsafe impl Sync for MaskPtr {}
+
+impl Engine for BbEngine {
+    fn name(&self) -> String {
+        "bb".into()
+    }
+
+    fn step(&mut self) {
+        let n = self.ctx.n;
+        let total = n as u64 * n as u64;
+        let cur = &self.buf.cur;
+        let mask = &self.mask;
+        let rule = self.rule;
+        let next_ptr = MaskPtr(self.buf.next.as_mut_ptr());
+        parallel_for_chunks(total, self.workers, move |start, end| {
+            let p = next_ptr;
+            let ns = n as usize;
+            for i in start..end {
+                // Threads mapped over the whole embedding; non-fractal
+                // cells are discarded at run time (the BB inefficiency).
+                let out = if mask[i as usize] == 0 {
+                    0
+                } else {
+                    let x = (i % n as u64) as u32;
+                    let y = (i / n as u64) as u32;
+                    // interior fast path (same courtesy as the Squeeze
+                    // engines get — keeps the baseline honest)
+                    let count = if x >= 1 && y >= 1 && x + 1 < n && y + 1 < n {
+                        let c = i as usize;
+                        cur[c - ns - 1] as u32
+                            + cur[c - ns] as u32
+                            + cur[c - ns + 1] as u32
+                            + cur[c - 1] as u32
+                            + cur[c + 1] as u32
+                            + cur[c + ns - 1] as u32
+                            + cur[c + ns] as u32
+                            + cur[c + ns + 1] as u32
+                    } else {
+                        let mut count = 0u32;
+                        for (dx, dy) in MOORE {
+                            let nx = x as i64 + dx as i64;
+                            let ny = y as i64 + dy as i64;
+                            if nx >= 0 && ny >= 0 && nx < n as i64 && ny < n as i64 {
+                                // holes are permanently dead ⇒ raw read
+                                // counts exactly the live fractal neighbors
+                                count += cur[(ny * n as i64 + nx) as usize] as u32;
+                            }
+                        }
+                        count
+                    };
+                    rule.next_u8(cur[i as usize], count)
+                };
+                unsafe { p.0.add(i as usize).write(out) };
+            }
+        });
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.ctx.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.buf.bytes() + self.mask.len() as u64
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let e = lambda_linear(&self.ctx, idx);
+        self.buf.cur[e.linear(self.ctx.n) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    fn engine(r: u32, density: f64) -> BbEngine {
+        BbEngine::new(
+            &catalog::sierpinski_triangle(),
+            r,
+            Rule::game_of_life(),
+            density,
+            42,
+            2,
+        )
+    }
+
+    #[test]
+    fn holes_stay_dead_forever() {
+        let mut e = engine(4, 0.9);
+        for _ in 0..5 {
+            e.step();
+            for i in 0..e.mask.len() {
+                if e.mask[i] == 0 {
+                    assert_eq!(e.buf.cur[i], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_stays_empty() {
+        let mut e = engine(4, 0.0);
+        assert_eq!(e.population(), 0);
+        e.step();
+        assert_eq!(e.population(), 0);
+    }
+
+    #[test]
+    fn full_square_blinker_oscillates() {
+        // On the degenerate full-square "fractal" the engine must be plain
+        // Conway: a blinker has period 2.
+        let spec = catalog::full_square(2);
+        let mut e = BbEngine::new(&spec, 2, Rule::game_of_life(), 0.0, 0, 1);
+        // place a vertical blinker at x=1, y=0..2 (grid is 4x4)
+        for y in 0..3u32 {
+            e.buf.cur[Coord::new(1, y + 1).linear(4) as usize] = 1;
+        }
+        let before = e.buf.cur.clone();
+        e.step();
+        assert_ne!(e.buf.cur, before, "blinker must flip");
+        e.step();
+        assert_eq!(e.buf.cur, before, "blinker has period 2");
+    }
+
+    #[test]
+    fn seeding_population_matches_density() {
+        let e = engine(6, 0.5);
+        let cells = e.cells() as f64;
+        let pop = e.population() as f64;
+        assert!((pop / cells - 0.5).abs() < 0.05, "pop frac {}", pop / cells);
+    }
+
+    #[test]
+    fn memory_is_embedding_scale() {
+        let e = engine(5, 0.3);
+        let n = 32u64;
+        assert_eq!(e.memory_bytes(), n * n * 3); // two buffers + mask
+    }
+}

@@ -1,0 +1,160 @@
+//! Engine construction from a uniform description — the seam between the
+//! coordinator/CLI layer and the engine implementations.
+
+use super::bb::BbEngine;
+use super::engine::Engine;
+use super::lambda_engine::LambdaEngine;
+use super::rule::Rule;
+use super::squeeze::{MapPath, SqueezeEngine};
+use super::squeeze_block::SqueezeBlockEngine;
+use crate::fractal::FractalSpec;
+use crate::tcu::MmaMode;
+
+/// The paper's three approaches (§4): BB, λ(ω), Squeeze — the latter at
+/// thread level (ρ=1) or block level (ρ>1), with or without tensor cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Bb,
+    Lambda,
+    Squeeze { rho: u32, tensor: bool },
+}
+
+impl EngineKind {
+    /// Parse from CLI notation: `bb`, `lambda`, `squeeze`, `squeeze:16`,
+    /// `squeeze-tcu:16`.
+    pub fn parse(text: &str) -> Option<EngineKind> {
+        let (head, rho) = match text.split_once(':') {
+            Some((h, r)) => (h, r.parse::<u32>().ok()?),
+            None => (text, 1),
+        };
+        match head {
+            "bb" => Some(EngineKind::Bb),
+            "lambda" => Some(EngineKind::Lambda),
+            "squeeze" => Some(EngineKind::Squeeze { rho, tensor: false }),
+            "squeeze-tcu" => Some(EngineKind::Squeeze { rho, tensor: true }),
+            _ => None,
+        }
+    }
+}
+
+/// Everything needed to build one engine.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    pub r: u32,
+    pub rule: Rule,
+    pub density: f64,
+    pub seed: u64,
+    pub workers: usize,
+}
+
+/// Build an engine over the given fractal.
+pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
+    match cfg.kind {
+        EngineKind::Bb => Box::new(BbEngine::new(
+            spec,
+            cfg.r,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+        )),
+        EngineKind::Lambda => Box::new(LambdaEngine::new(
+            spec,
+            cfg.r,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+        )),
+        EngineKind::Squeeze { rho, tensor } => {
+            let path = if tensor {
+                MapPath::Tensor(MmaMode::Fp16)
+            } else {
+                MapPath::Scalar
+            };
+            if rho <= 1 {
+                Box::new(SqueezeEngine::new(
+                    spec,
+                    cfg.r,
+                    cfg.rule,
+                    cfg.density,
+                    cfg.seed,
+                    cfg.workers,
+                    path,
+                ))
+            } else {
+                Box::new(SqueezeBlockEngine::new(
+                    spec,
+                    cfg.r,
+                    rho,
+                    cfg.rule,
+                    cfg.density,
+                    cfg.seed,
+                    cfg.workers,
+                    path,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(EngineKind::parse("bb"), Some(EngineKind::Bb));
+        assert_eq!(EngineKind::parse("lambda"), Some(EngineKind::Lambda));
+        assert_eq!(
+            EngineKind::parse("squeeze"),
+            Some(EngineKind::Squeeze { rho: 1, tensor: false })
+        );
+        assert_eq!(
+            EngineKind::parse("squeeze:16"),
+            Some(EngineKind::Squeeze { rho: 16, tensor: false })
+        );
+        assert_eq!(
+            EngineKind::parse("squeeze-tcu:8"),
+            Some(EngineKind::Squeeze { rho: 8, tensor: true })
+        );
+        assert_eq!(EngineKind::parse("hilbert"), None);
+        assert_eq!(EngineKind::parse("squeeze:x"), None);
+    }
+
+    #[test]
+    fn all_kinds_build_and_agree() {
+        let spec = catalog::sierpinski_triangle();
+        let kinds = [
+            EngineKind::Bb,
+            EngineKind::Lambda,
+            EngineKind::Squeeze { rho: 1, tensor: false },
+            EngineKind::Squeeze { rho: 4, tensor: false },
+            EngineKind::Squeeze { rho: 4, tensor: true },
+        ];
+        let mut hashes = Vec::new();
+        for kind in kinds {
+            let mut e = build(
+                &spec,
+                &EngineConfig {
+                    kind,
+                    r: 4,
+                    rule: Rule::game_of_life(),
+                    density: 0.4,
+                    seed: 17,
+                    workers: 2,
+                },
+            );
+            for _ in 0..4 {
+                e.step();
+            }
+            hashes.push((e.name(), e.state_hash()));
+        }
+        let first = hashes[0].1;
+        for (name, h) in &hashes {
+            assert_eq!(*h, first, "{name} diverged");
+        }
+    }
+}

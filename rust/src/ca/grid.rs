@@ -1,0 +1,105 @@
+//! Double-buffered byte grids — the state storage shared by all engines.
+//!
+//! One byte per cell (0 = dead, 1 = alive). Holes of the embedding are
+//! represented as permanently-dead cells, which keeps neighbor counting
+//! branch-free: summing raw bytes counts exactly the live *fractal*
+//! neighbors, because a hole can never become alive.
+
+/// A pair of equally-sized byte buffers with swap semantics.
+#[derive(Clone, Debug)]
+pub struct DoubleBuffer {
+    pub cur: Vec<u8>,
+    pub next: Vec<u8>,
+}
+
+impl DoubleBuffer {
+    pub fn zeroed(len: u64) -> DoubleBuffer {
+        DoubleBuffer {
+            cur: vec![0u8; len as usize],
+            next: vec![0u8; len as usize],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.cur.len() as u64
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cur.is_empty()
+    }
+
+    /// Swap current and next after a step.
+    #[inline]
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    /// Total bytes held (both buffers).
+    pub fn bytes(&self) -> u64 {
+        (self.cur.len() + self.next.len()) as u64
+    }
+
+    /// Number of live cells in the current buffer.
+    pub fn population(&self) -> u64 {
+        self.cur.iter().map(|&b| b as u64).sum()
+    }
+}
+
+/// FNV-1a over a byte stream — canonical state hashing for cross-engine
+/// agreement checks.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    pub fn push(&mut self, byte: u8) {
+        self.0 ^= byte as u64;
+        self.0 = self.0.wrapping_mul(0x1000_0000_01b3);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_exchanges_buffers() {
+        let mut db = DoubleBuffer::zeroed(4);
+        db.cur[0] = 1;
+        db.next[3] = 7;
+        db.swap();
+        assert_eq!(db.cur[3], 7);
+        assert_eq!(db.next[0], 1);
+    }
+
+    #[test]
+    fn population_counts_live() {
+        let mut db = DoubleBuffer::zeroed(10);
+        db.cur[2] = 1;
+        db.cur[7] = 1;
+        assert_eq!(db.population(), 2);
+        assert_eq!(db.bytes(), 20);
+    }
+
+    #[test]
+    fn fnv_is_order_sensitive() {
+        let mut a = Fnv::default();
+        a.push(1);
+        a.push(2);
+        let mut b = Fnv::default();
+        b.push(2);
+        b.push(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

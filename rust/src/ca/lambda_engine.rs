@@ -1,0 +1,164 @@
+//! λ(ω) — compact grid, expanded memory (paper's baseline #2,
+//! Navarro et al. [7]).
+//!
+//! One thread per *fractal* cell (`k^r` threads — problem P1 solved), each
+//! mapped into the expanded embedding with `λ(ω)` where it reads its Moore
+//! neighborhood directly. Memory still holds the whole `n × n` embedding
+//! (problem P2 remains). The paper treats this engine as the performance
+//! lower bound for Squeeze, since Squeeze runs the same grid plus ν maps.
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::DoubleBuffer;
+use super::rule::Rule;
+use crate::fractal::{FractalSpec, MOORE};
+use crate::maps::lambda::LambdaTable;
+use crate::maps::{lambda_linear, MapCtx};
+use crate::util::pool::parallel_for_chunks;
+
+pub struct LambdaEngine {
+    ctx: MapCtx,
+    /// Separable λ tables (§Perf iteration 5).
+    lambda_table: LambdaTable,
+    rule: Rule,
+    /// Expanded-space state (holes permanently dead).
+    buf: DoubleBuffer,
+    workers: usize,
+}
+
+impl LambdaEngine {
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+    ) -> LambdaEngine {
+        let ctx = MapCtx::new(spec, r);
+        let n = ctx.n as u64;
+        let mut buf = DoubleBuffer::zeroed(n * n);
+        for idx in 0..ctx.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda_linear(&ctx, idx);
+                buf.cur[e.linear(ctx.n) as usize] = 1;
+            }
+        }
+        let lambda_table = LambdaTable::new(&ctx);
+        LambdaEngine {
+            ctx,
+            lambda_table,
+            rule,
+            buf,
+            workers,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct OutPtr(*mut u8);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl Engine for LambdaEngine {
+    fn name(&self) -> String {
+        "lambda".into()
+    }
+
+    fn step(&mut self) {
+        let ctx = &self.ctx;
+        let n = ctx.n;
+        let cur = &self.buf.cur;
+        let rule = self.rule;
+        let lam = &self.lambda_table;
+        let out = OutPtr(self.buf.next.as_mut_ptr());
+        // Compact grid: one thread per fractal cell.
+        parallel_for_chunks(ctx.compact.area(), self.workers, move |start, end| {
+            let p = out;
+            for idx in start..end {
+                let e = lam.eval_linear(idx);
+                let (x, y) = (e.x as i64, e.y as i64);
+                let lin = e.linear(n);
+                let mut count = 0u32;
+                for (dx, dy) in MOORE {
+                    let nx = x + dx as i64;
+                    let ny = y + dy as i64;
+                    if nx >= 0 && ny >= 0 && nx < n as i64 && ny < n as i64 {
+                        count += cur[(ny * n as i64 + nx) as usize] as u32;
+                    }
+                }
+                let v = rule.next_u8(cur[lin as usize], count);
+                unsafe { p.0.add(lin as usize).write(v) };
+            }
+        });
+        // Holes were never written in `next` — but dead fractal cells
+        // were, and holes start 0 in a zeroed buffer. Because `next` is
+        // recycled between steps, clear is implicit: every fractal cell is
+        // rewritten each step and holes are never touched after the
+        // initial zeroing.
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.ctx.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.buf.bytes() + self.lambda_table.bytes()
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let e = lambda_linear(&self.ctx, idx);
+        self.buf.cur[e.linear(self.ctx.n) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bb::BbEngine;
+    use crate::ca::engine::run_and_hash;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn agrees_with_bb_on_sierpinski() {
+        let spec = catalog::sierpinski_triangle();
+        for r in [2u32, 4, 6] {
+            let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 9, 2);
+            let mut la = LambdaEngine::new(&spec, r, Rule::game_of_life(), 0.4, 9, 3);
+            assert_eq!(bb.state_hash(), la.state_hash(), "seed state r={r}");
+            assert_eq!(
+                run_and_hash(&mut bb, 8),
+                run_and_hash(&mut la, 8),
+                "after 8 steps r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn agrees_with_bb_on_all_catalog() {
+        for spec in catalog::all() {
+            let mut bb = BbEngine::new(&spec, 3, Rule::game_of_life(), 0.35, 11, 2);
+            let mut la = LambdaEngine::new(&spec, 3, Rule::game_of_life(), 0.35, 11, 2);
+            assert_eq!(
+                run_and_hash(&mut bb, 5),
+                run_and_hash(&mut la, 5),
+                "{}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn memory_excludes_mask() {
+        let spec = catalog::sierpinski_triangle();
+        let la = LambdaEngine::new(&spec, 5, Rule::game_of_life(), 0.3, 1, 1);
+        assert_eq!(
+            la.memory_bytes(),
+            2 * 32 * 32 + la.lambda_table.bytes()
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Fractal cellular-automaton engines — the paper's three approaches plus
+//! the tensor-core variants, all over one exact shared semantics.
+
+pub mod bb;
+pub mod engine;
+pub mod factory;
+pub mod grid;
+pub mod lambda_engine;
+pub mod rule;
+pub mod squeeze;
+pub mod squeeze_block;
+
+pub use engine::Engine;
+pub use factory::{build, EngineConfig, EngineKind};
+pub use rule::Rule;
+pub use squeeze::MapPath;

@@ -1,0 +1,127 @@
+//! Cellular-automaton rules in B/S (birth/survival) notation.
+//!
+//! The paper runs "Conway's game of life adapted to fractals": the Moore
+//! neighborhood is taken in *expanded* space, only fractal cells count as
+//! neighbors (holes and out-of-embedding cells are always dead), and the
+//! life/death conditions are the standard B3/S23 applied to that reduced
+//! neighbor count. The rule is a pair of 9-bit masks so every engine
+//! (and the JAX model on the Python side) shares one exact semantics.
+
+/// A totalistic 2-state rule over ≤ 8 neighbors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rule {
+    /// Bit `i` set ⇒ a dead cell with `i` live neighbors is born.
+    pub birth: u16,
+    /// Bit `i` set ⇒ a live cell with `i` live neighbors survives.
+    pub survive: u16,
+}
+
+impl Rule {
+    /// Conway's game of life, B3/S23.
+    pub const fn game_of_life() -> Rule {
+        Rule {
+            birth: 1 << 3,
+            survive: (1 << 2) | (1 << 3),
+        }
+    }
+
+    /// Parse "B3/S23"-style notation (case-insensitive, digits 0..8).
+    pub fn parse(text: &str) -> Option<Rule> {
+        let (b_part, s_part) = text.split_once('/')?;
+        let b_digits = b_part.strip_prefix(['B', 'b'])?;
+        let s_digits = s_part.strip_prefix(['S', 's'])?;
+        let to_mask = |ds: &str| -> Option<u16> {
+            let mut m = 0u16;
+            for ch in ds.chars() {
+                let d = ch.to_digit(10)?;
+                if d > 8 {
+                    return None;
+                }
+                m |= 1 << d;
+            }
+            Some(m)
+        };
+        Some(Rule {
+            birth: to_mask(b_digits)?,
+            survive: to_mask(s_digits)?,
+        })
+    }
+
+    /// Render back to B/S notation.
+    pub fn notation(&self) -> String {
+        let digits = |m: u16| -> String {
+            (0..=8).filter(|i| m & (1 << i) != 0).map(|i| char::from(b'0' + i as u8)).collect()
+        };
+        format!("B{}/S{}", digits(self.birth), digits(self.survive))
+    }
+
+    /// Apply the rule: next state of a cell with state `alive` and
+    /// `neighbors` live (fractal) neighbors.
+    #[inline(always)]
+    pub fn next(&self, alive: bool, neighbors: u32) -> bool {
+        debug_assert!(neighbors <= 8);
+        let mask = if alive { self.survive } else { self.birth };
+        mask & (1 << neighbors) != 0
+    }
+
+    /// Branch-free byte variant for the hot loops (`state` ∈ {0,1}).
+    #[inline(always)]
+    pub fn next_u8(&self, state: u8, neighbors: u32) -> u8 {
+        let mask = self.survive * state as u16 + self.birth * (1 - state as u16);
+        ((mask >> neighbors) & 1) as u8
+    }
+}
+
+impl Default for Rule {
+    fn default() -> Rule {
+        Rule::game_of_life()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gol_truth_table() {
+        let r = Rule::game_of_life();
+        assert!(!r.next(false, 2));
+        assert!(r.next(false, 3));
+        assert!(r.next(true, 2));
+        assert!(r.next(true, 3));
+        assert!(!r.next(true, 1));
+        assert!(!r.next(true, 4));
+        assert!(!r.next(false, 8));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["B3/S23", "B36/S23", "B2/S", "B/S012345678"] {
+            let r = Rule::parse(s).unwrap();
+            assert_eq!(r.notation(), s.to_string());
+        }
+        assert_eq!(Rule::parse("B3/S23"), Some(Rule::game_of_life()));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Rule::parse("3/23").is_none());
+        assert!(Rule::parse("B9/S2").is_none());
+        assert!(Rule::parse("B3S23").is_none());
+        assert!(Rule::parse("Bx/S2").is_none());
+    }
+
+    #[test]
+    fn next_u8_matches_next() {
+        let r = Rule::parse("B36/S125").unwrap();
+        for state in [0u8, 1] {
+            for n in 0..=8u32 {
+                assert_eq!(
+                    r.next_u8(state, n) == 1,
+                    r.next(state == 1, n),
+                    "state={state} n={n}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! Squeeze (thread-level) — compact grid **and** compact memory: the
+//! paper's contribution (§3.2).
+//!
+//! One thread per fractal cell over the dense compact array. Each step,
+//! a cell's coordinate is lifted to *virtual* expanded space with one
+//! `λ(ω)`, offset to its ≤ 8 Moore neighbors there, and each neighbor is
+//! brought back to compact storage with `ν(ω)` (at most 8 ν per cell —
+//! exactly the count the paper batches into one tensor-core MMA). The
+//! expanded embedding never exists in memory: storage is `2·k^r` bytes.
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::DoubleBuffer;
+use super::rule::Rule;
+use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::mma::{nu_a_fragment, nu_batch_mma};
+use crate::maps::lambda::LambdaTable;
+use crate::maps::{nu, MapCtx};
+use crate::tcu::{Fragment, MmaMode};
+use crate::util::pool::parallel_for_chunks;
+
+/// How the space maps are evaluated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapPath {
+    /// Scalar `O(r)` loops ("CUDA cores only").
+    Scalar,
+    /// Simulated tensor-core MMA encoding (8 ν maps per 16×16 fragment,
+    /// paper §3.6/§4.1). `MmaMode::Fp16` is the paper's configuration.
+    Tensor(MmaMode),
+}
+
+pub struct SqueezeEngine {
+    ctx: MapCtx,
+    /// Separable λ tables (§Perf iteration 5): λ per cell is one add.
+    lambda_table: LambdaTable,
+    rule: Rule,
+    /// Compact-space state, row-major over the compact extent.
+    buf: DoubleBuffer,
+    workers: usize,
+    path: MapPath,
+    /// ν's constant A fragment (built once; only used on the tensor path).
+    nu_a: Option<Fragment>,
+}
+
+impl SqueezeEngine {
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+    ) -> SqueezeEngine {
+        let ctx = MapCtx::new(spec, r);
+        let mut buf = DoubleBuffer::zeroed(ctx.compact.area());
+        for idx in 0..ctx.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                buf.cur[idx as usize] = 1;
+            }
+        }
+        let nu_a = match path {
+            MapPath::Tensor(_) => Some(nu_a_fragment(&ctx)),
+            MapPath::Scalar => None,
+        };
+        let lambda_table = LambdaTable::new(&ctx);
+        SqueezeEngine {
+            ctx,
+            lambda_table,
+            rule,
+            buf,
+            workers,
+            path,
+            nu_a,
+        }
+    }
+}
+
+#[derive(Clone, Copy)]
+struct OutPtr(*mut u8);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl Engine for SqueezeEngine {
+    fn name(&self) -> String {
+        match self.path {
+            MapPath::Scalar => "squeeze".into(),
+            MapPath::Tensor(MmaMode::Fp16) => "squeeze-tcu".into(),
+            MapPath::Tensor(MmaMode::F32) => "squeeze-tcu-f32".into(),
+        }
+    }
+
+    fn step(&mut self) {
+        let ctx = &self.ctx;
+        let w = ctx.compact.w;
+        let n = ctx.n as i64;
+        let cur = &self.buf.cur;
+        let rule = self.rule;
+        let path = self.path;
+        let nu_a = self.nu_a.as_ref();
+        let lam = &self.lambda_table;
+        let out = OutPtr(self.buf.next.as_mut_ptr());
+        parallel_for_chunks(ctx.compact.area(), self.workers, move |start, end| {
+            let p = out;
+            let mut pts: [Coord; 8] = [Coord::new(0, 0); 8];
+            for idx in start..end {
+                let c = Coord::from_linear(idx, w);
+                // one λ: compact -> virtual expanded space (tabled)
+                let e = lam.eval(c);
+                let count = match path {
+                    MapPath::Scalar => {
+                        let mut count = 0u32;
+                        for (dx, dy) in MOORE {
+                            let nx = e.x as i64 + dx as i64;
+                            let ny = e.y as i64 + dy as i64;
+                            if nx < 0 || ny < 0 || nx >= n || ny >= n {
+                                continue;
+                            }
+                            // ν: neighbor back to compact storage
+                            if let Some(cn) = nu(ctx, Coord::new(nx as u32, ny as u32)) {
+                                count += cur[cn.linear(w) as usize] as u32;
+                            }
+                        }
+                        count
+                    }
+                    MapPath::Tensor(mode) => {
+                        // all 8 neighbor ν maps in one 16×16 MMA fragment
+                        let mut valid = 0usize;
+                        for (dx, dy) in MOORE {
+                            let nx = e.x as i64 + dx as i64;
+                            let ny = e.y as i64 + dy as i64;
+                            if nx >= 0 && ny >= 0 && nx < n && ny < n {
+                                pts[valid] = Coord::new(nx as u32, ny as u32);
+                                valid += 1;
+                            }
+                        }
+                        let mapped =
+                            nu_batch_mma(ctx, nu_a.unwrap(), &pts[..valid], mode);
+                        mapped
+                            .iter()
+                            .flatten()
+                            .map(|cn| cur[cn.linear(w) as usize] as u32)
+                            .sum()
+                    }
+                };
+                let v = rule.next_u8(cur[idx as usize], count);
+                unsafe { p.0.add(idx as usize).write(v) };
+            }
+        });
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.ctx.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.buf.bytes() + self.lambda_table.bytes()
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        self.buf.cur[idx as usize]
+    }
+
+    /// Compact state is already in canonical order — hash directly.
+    fn state_hash(&self) -> u64 {
+        let mut h = super::grid::Fnv::default();
+        for &b in &self.buf.cur {
+            h.push(b);
+        }
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bb::BbEngine;
+    use crate::ca::engine::run_and_hash;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn agrees_with_bb_on_all_catalog() {
+        for spec in catalog::all() {
+            let mut bb = BbEngine::new(&spec, 3, Rule::game_of_life(), 0.4, 5, 2);
+            let mut sq = SqueezeEngine::new(
+                &spec,
+                3,
+                Rule::game_of_life(),
+                0.4,
+                5,
+                2,
+                MapPath::Scalar,
+            );
+            assert_eq!(bb.state_hash(), sq.state_hash(), "{} seed", spec.name);
+            assert_eq!(
+                run_and_hash(&mut bb, 6),
+                run_and_hash(&mut sq, 6),
+                "{}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn tensor_path_agrees_with_scalar_path() {
+        let spec = catalog::sierpinski_triangle();
+        for mode in [MmaMode::Fp16, MmaMode::F32] {
+            let mut a = SqueezeEngine::new(
+                &spec,
+                5,
+                Rule::game_of_life(),
+                0.45,
+                3,
+                2,
+                MapPath::Scalar,
+            );
+            let mut b = SqueezeEngine::new(
+                &spec,
+                5,
+                Rule::game_of_life(),
+                0.45,
+                3,
+                2,
+                MapPath::Tensor(mode),
+            );
+            assert_eq!(run_and_hash(&mut a, 4), run_and_hash(&mut b, 4), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn memory_is_compact_scale() {
+        let spec = catalog::sierpinski_triangle();
+        let sq = SqueezeEngine::new(
+            &spec,
+            8,
+            Rule::game_of_life(),
+            0.3,
+            1,
+            1,
+            MapPath::Scalar,
+        );
+        assert_eq!(
+            sq.memory_bytes(),
+            2 * spec.cells(8) + sq.lambda_table.bytes()
+        );
+        // versus the BB embedding: (s²/k)^r reduction
+        let bb_cells = spec.n(8) * spec.n(8);
+        assert!(bb_cells / spec.cells(8) >= 9); // (4/3)^8 ≈ 9.99
+    }
+
+    #[test]
+    fn sparse_activity_dies_out_or_stabilizes() {
+        // a single live cell must die (underpopulation) in one step
+        let spec = catalog::sierpinski_triangle();
+        let mut sq = SqueezeEngine::new(
+            &spec,
+            4,
+            Rule::game_of_life(),
+            0.0,
+            0,
+            1,
+            MapPath::Scalar,
+        );
+        sq.buf.cur[10] = 1;
+        sq.step();
+        assert_eq!(sq.population(), 0);
+    }
+}

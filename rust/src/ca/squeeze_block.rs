@@ -1,0 +1,379 @@
+//! Block-level Squeeze (paper §3.5) — the configuration that wins the
+//! paper's performance plots (best at ρ = 16).
+//!
+//! The compact grid is built over *blocks*: a coarse level-`r_b` fractal
+//! whose cells are `ρ × ρ` expanded micro-tiles. The maps run once per
+//! block (on block coordinates), so their `O(log log n)` cost is amortized
+//! over `ρ²` cells, interior neighbor access is plain 2D indexing inside
+//! the tile, and only tile-boundary accesses touch one of the ≤ 8
+//! neighboring blocks — whose storage slots are resolved once per block
+//! (optionally as one tensor-core MMA fragment, 8 ν maps at a time,
+//! exactly the paper's grouping).
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::DoubleBuffer;
+use super::rule::Rule;
+use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::mma::{nu_a_fragment, nu_batch_mma};
+use crate::maps::{lambda, nu, BlockCtx, MapCtx};
+use crate::tcu::{Fragment, MmaMode};
+use crate::util::pool::parallel_for_chunks;
+use super::squeeze::MapPath;
+
+pub struct SqueezeBlockEngine {
+    block: BlockCtx,
+    /// Full-resolution context (canonical indexing only, not the hot path).
+    full: MapCtx,
+    rule: Rule,
+    /// Block-major storage: block slot × ρ² + intra offset.
+    buf: DoubleBuffer,
+    workers: usize,
+    path: MapPath,
+    nu_a: Option<Fragment>,
+}
+
+impl SqueezeBlockEngine {
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+    ) -> SqueezeBlockEngine {
+        let block = BlockCtx::new(spec, r, rho).expect("invalid rho for spec");
+        let full = MapCtx::new(spec, r);
+        let mut buf = DoubleBuffer::zeroed(block.stored_cells());
+        // Canonical seeding: compact linear index -> expanded -> slot.
+        for idx in 0..full.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda(&full, Coord::from_linear(idx, full.compact.w));
+                let slot = block.storage_index(e).expect("fractal cell must have a slot");
+                buf.cur[slot as usize] = 1;
+            }
+        }
+        let nu_a = match path {
+            MapPath::Tensor(_) => Some(nu_a_fragment(&block.coarse)),
+            MapPath::Scalar => None,
+        };
+        SqueezeBlockEngine {
+            block,
+            full,
+            rule,
+            buf,
+            workers,
+            path,
+            nu_a,
+        }
+    }
+
+    /// Resolve the storage base slots of the 8 Moore-neighbor blocks of
+    /// the block whose *expanded block coordinate* is `eb`. `None` =
+    /// outside the coarse fractal (or embedding).
+    fn neighbor_blocks(&self, eb: Coord) -> [Option<u64>; 8] {
+        let coarse = &self.block.coarse;
+        let tile = self.block.rho as u64 * self.block.rho as u64;
+        let mut out = [None; 8];
+        match self.path {
+            MapPath::Scalar => {
+                for (i, (dx, dy)) in MOORE.iter().enumerate() {
+                    if let Some(ne) = eb.offset(*dx, *dy) {
+                        out[i] = nu(coarse, ne).map(|cb| cb.linear(coarse.compact.w) * tile);
+                    }
+                }
+            }
+            MapPath::Tensor(mode) => {
+                // all 8 neighbor-block ν maps in one MMA fragment
+                let mut pts = [Coord::new(0, 0); 8];
+                let mut present = [false; 8];
+                let mut m = 0usize;
+                for (i, (dx, dy)) in MOORE.iter().enumerate() {
+                    if let Some(ne) = eb.offset(*dx, *dy) {
+                        pts[m] = ne;
+                        present[i] = true;
+                        m += 1;
+                    }
+                }
+                let mapped = nu_batch_mma(coarse, self.nu_a.as_ref().unwrap(), &pts[..m], mode);
+                let mut j = 0usize;
+                for i in 0..8 {
+                    if present[i] {
+                        out[i] = mapped[j].map(|cb| cb.linear(coarse.compact.w) * tile);
+                        j += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[derive(Clone, Copy)]
+struct OutPtr(*mut u8);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl Engine for SqueezeBlockEngine {
+    fn name(&self) -> String {
+        let base = match self.path {
+            MapPath::Scalar => "squeeze",
+            MapPath::Tensor(MmaMode::Fp16) => "squeeze-tcu",
+            MapPath::Tensor(MmaMode::F32) => "squeeze-tcu-f32",
+        };
+        format!("{base}-rho{}", self.block.rho)
+    }
+
+    fn step(&mut self) {
+        let block = &self.block;
+        let coarse = &block.coarse;
+        let rho = block.rho;
+        let tile = rho as u64 * rho as u64;
+        let cur = &self.buf.cur;
+        let rule = self.rule;
+        let out = OutPtr(self.buf.next.as_mut_ptr());
+        let this = &*self;
+        // one "thread block" per coarse fractal cell
+        parallel_for_chunks(block.blocks(), self.workers, move |start, end| {
+            let p = out;
+            for bidx in start..end {
+                let cb = Coord::from_linear(bidx, coarse.compact.w);
+                // one λ per block: coarse compact -> coarse expanded
+                let eb = lambda(coarse, cb);
+                // ≤ 8 ν per block: neighbor block base slots
+                let nb = this.neighbor_blocks(eb);
+                let base = bidx * tile;
+                // §Perf iteration 3: interior cells (all of whose Moore
+                // neighbors stay inside this tile) take a branch-free
+                // direct-indexing path — at ρ=16 that is (ρ-2)²/ρ² ≈ 77%
+                // of the tile. Only the 4ρ-4 rim cells pay the
+                // wrap/neighbor-block logic.
+                let interior = |ix: u32, iy: u32| -> bool {
+                    ix >= 1 && iy >= 1 && ix + 1 < rho && iy + 1 < rho
+                };
+                for iy in 0..rho {
+                    for ix in 0..rho {
+                        let intra = (iy * rho + ix) as u64;
+                        let slot = base + intra;
+                        // holes of the micro-tile stay dead
+                        if !block.intra_on_fractal(ix, iy) {
+                            unsafe { p.0.add(slot as usize).write(0) };
+                            continue;
+                        }
+                        let count = if interior(ix, iy) {
+                            let i = (base + intra) as usize;
+                            let rs = rho as usize;
+                            // row above, same row, row below — direct sums
+                            cur[i - rs - 1] as u32
+                                + cur[i - rs] as u32
+                                + cur[i - rs + 1] as u32
+                                + cur[i - 1] as u32
+                                + cur[i + 1] as u32
+                                + cur[i + rs - 1] as u32
+                                + cur[i + rs] as u32
+                                + cur[i + rs + 1] as u32
+                        } else {
+                            let mut count = 0u32;
+                            for (dx, dy) in MOORE {
+                                let jx = ix as i64 + dx as i64;
+                                let jy = iy as i64 + dy as i64;
+                                // which block does the neighbor land in?
+                                let (bx, wrapped_x) = wrap(jx, rho);
+                                let (by, wrapped_y) = wrap(jy, rho);
+                                let nslot = if bx == 0 && by == 0 {
+                                    Some(base + (wrapped_y * rho + wrapped_x) as u64)
+                                } else {
+                                    // map (bx,by) ∈ {-1,0,1}² to Moore slot
+                                    let mi = moore_index(bx, by);
+                                    nb[mi].map(|nbase| {
+                                        nbase + (wrapped_y * rho + wrapped_x) as u64
+                                    })
+                                };
+                                if let Some(ns) = nslot {
+                                    count += cur[ns as usize] as u32;
+                                }
+                            }
+                            count
+                        };
+                        let v = rule.next_u8(cur[slot as usize], count);
+                        unsafe { p.0.add(slot as usize).write(v) };
+                    }
+                }
+            }
+        });
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.full.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.buf.bytes()
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let e = lambda(&self.full, Coord::from_linear(idx, self.full.compact.w));
+        let slot = self.block.storage_index(e).expect("fractal cell");
+        self.buf.cur[slot as usize]
+    }
+}
+
+/// Split an intra coordinate that may have stepped out of `[0, rho)` into
+/// (block delta ∈ {-1,0,1}, wrapped intra coordinate).
+#[inline(always)]
+fn wrap(j: i64, rho: u32) -> (i64, u32) {
+    if j < 0 {
+        (-1, (j + rho as i64) as u32)
+    } else if j >= rho as i64 {
+        (1, (j - rho as i64) as u32)
+    } else {
+        (0, j as u32)
+    }
+}
+
+/// Index of direction (dx,dy) ∈ Moore order.
+#[inline(always)]
+fn moore_index(dx: i64, dy: i64) -> usize {
+    // MOORE = [(-1,-1),(0,-1),(1,-1),(-1,0),(1,0),(-1,1),(0,1),(1,1)]
+    match (dx, dy) {
+        (-1, -1) => 0,
+        (0, -1) => 1,
+        (1, -1) => 2,
+        (-1, 0) => 3,
+        (1, 0) => 4,
+        (-1, 1) => 5,
+        (0, 1) => 6,
+        (1, 1) => 7,
+        _ => unreachable!("not a Moore offset: ({dx},{dy})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bb::BbEngine;
+    use crate::ca::engine::run_and_hash;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn agrees_with_bb_for_every_rho() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 5;
+        let reference = {
+            let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 21, 2);
+            run_and_hash(&mut bb, 6)
+        };
+        for rho in [1u32, 2, 4, 8, 16, 32] {
+            let mut sq = SqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.4,
+                21,
+                2,
+                MapPath::Scalar,
+            );
+            assert_eq!(run_and_hash(&mut sq, 6), reference, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_bb_for_s3_fractals() {
+        for spec in [catalog::vicsek(), catalog::sierpinski_carpet()] {
+            let r = 3;
+            let reference = {
+                let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 2, 2);
+                run_and_hash(&mut bb, 5)
+            };
+            for rho in [1u32, 3, 9] {
+                let mut sq = SqueezeBlockEngine::new(
+                    &spec,
+                    r,
+                    rho,
+                    Rule::game_of_life(),
+                    0.5,
+                    2,
+                    2,
+                    MapPath::Scalar,
+                );
+                assert_eq!(run_and_hash(&mut sq, 5), reference, "{} rho={rho}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_path_agrees() {
+        let spec = catalog::sierpinski_triangle();
+        let mut a = SqueezeBlockEngine::new(
+            &spec,
+            6,
+            4,
+            Rule::game_of_life(),
+            0.4,
+            13,
+            2,
+            MapPath::Scalar,
+        );
+        let mut b = SqueezeBlockEngine::new(
+            &spec,
+            6,
+            4,
+            Rule::game_of_life(),
+            0.4,
+            13,
+            2,
+            MapPath::Tensor(MmaMode::Fp16),
+        );
+        assert_eq!(run_and_hash(&mut a, 5), run_and_hash(&mut b, 5));
+    }
+
+    #[test]
+    fn memory_matches_table2_model() {
+        let spec = catalog::sierpinski_triangle();
+        for rho in [1u32, 2, 4, 8] {
+            let sq = SqueezeBlockEngine::new(
+                &spec,
+                8,
+                rho,
+                Rule::game_of_life(),
+                0.3,
+                1,
+                1,
+                MapPath::Scalar,
+            );
+            // two u8 buffers of k^{r_b}·ρ² cells
+            assert_eq!(
+                sq.memory_bytes(),
+                2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1),
+                "rho={rho}"
+            );
+        }
+    }
+
+    #[test]
+    fn rho_equal_to_n_is_single_block_brute_force() {
+        // rho = n means r_b = 0: one block, pure micro-brute-force.
+        let spec = catalog::sierpinski_triangle();
+        let r = 4;
+        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 3, 1);
+        let mut sq = SqueezeBlockEngine::new(
+            &spec,
+            r,
+            16,
+            Rule::game_of_life(),
+            0.5,
+            3,
+            1,
+            MapPath::Scalar,
+        );
+        assert_eq!(sq.block.blocks(), 1);
+        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+}

@@ -1,0 +1,161 @@
+//! Simulation job specifications and results — the coordinator's wire
+//! types. Jobs are parseable from `key=value` lines (the `serve` mode's
+//! request protocol) and from config-file sections.
+
+use crate::ca::{EngineKind, Rule};
+
+/// One simulation request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub id: u64,
+    pub fractal: String,
+    pub engine: EngineKind,
+    pub r: u32,
+    pub steps: u32,
+    pub density: f64,
+    pub seed: u64,
+    pub rule: Rule,
+    pub workers: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            id: 0,
+            fractal: "sierpinski-triangle".into(),
+            engine: EngineKind::Squeeze { rho: 16, tensor: false },
+            r: 8,
+            steps: 10,
+            density: 0.4,
+            seed: 42,
+            rule: Rule::game_of_life(),
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+}
+
+impl JobSpec {
+    /// Parse a request line: whitespace-separated `key=value` tokens, e.g.
+    /// `engine=squeeze:16 fractal=sierpinski-triangle r=10 steps=100`.
+    pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
+        let mut spec = JobSpec {
+            id,
+            ..JobSpec::default()
+        };
+        for tok in line.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad token {tok:?} (want key=value)"))?;
+            match k {
+                "fractal" => spec.fractal = v.to_string(),
+                "engine" => {
+                    spec.engine = EngineKind::parse(v)
+                        .ok_or_else(|| format!("unknown engine {v:?}"))?
+                }
+                "r" => spec.r = v.parse().map_err(|_| format!("bad r={v}"))?,
+                "steps" => spec.steps = v.parse().map_err(|_| format!("bad steps={v}"))?,
+                "density" => {
+                    spec.density = v.parse().map_err(|_| format!("bad density={v}"))?
+                }
+                "seed" => spec.seed = v.parse().map_err(|_| format!("bad seed={v}"))?,
+                "rule" => {
+                    spec.rule = Rule::parse(v).ok_or_else(|| format!("bad rule {v:?}"))?
+                }
+                "workers" => {
+                    spec.workers = v.parse().map_err(|_| format!("bad workers={v}"))?
+                }
+                other => return Err(format!("unknown key {other:?}")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Outcome of one executed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub engine_name: String,
+    pub cells: u64,
+    pub steps: u32,
+    pub total_s: f64,
+    pub per_step_s: f64,
+    /// Cell updates per second (throughput headline).
+    pub updates_per_s: f64,
+    pub population: u64,
+    pub memory_bytes: u64,
+    pub state_hash: u64,
+}
+
+impl JobResult {
+    /// TSV row (the serve protocol's response line).
+    pub fn to_tsv(&self) -> String {
+        format!(
+            "{}\t{}\t{}\t{}\t{:.6}\t{:.6e}\t{:.3e}\t{}\t{}\t{:#018x}",
+            self.id,
+            self.engine_name,
+            self.cells,
+            self.steps,
+            self.total_s,
+            self.per_step_s,
+            self.updates_per_s,
+            self.population,
+            self.memory_bytes,
+            self.state_hash
+        )
+    }
+
+    pub fn tsv_header() -> &'static str {
+        "id\tengine\tcells\tsteps\ttotal_s\tper_step_s\tupdates_per_s\tpopulation\tmemory_bytes\tstate_hash"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_line() {
+        let j = JobSpec::parse_line(
+            3,
+            "fractal=vicsek engine=squeeze-tcu:4 r=5 steps=7 density=0.25 seed=9 rule=B36/S23 workers=2",
+        )
+        .unwrap();
+        assert_eq!(j.id, 3);
+        assert_eq!(j.fractal, "vicsek");
+        assert_eq!(j.engine, EngineKind::Squeeze { rho: 4, tensor: true });
+        assert_eq!((j.r, j.steps, j.seed, j.workers), (5, 7, 9, 2));
+        assert!((j.density - 0.25).abs() < 1e-12);
+        assert_eq!(j.rule.notation(), "B36/S23");
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        let j = JobSpec::parse_line(1, "r=6").unwrap();
+        assert_eq!(j.fractal, "sierpinski-triangle");
+        assert!(JobSpec::parse_line(1, "nope").is_err());
+        assert!(JobSpec::parse_line(1, "engine=warp").is_err());
+        assert!(JobSpec::parse_line(1, "volume=11").is_err());
+    }
+
+    #[test]
+    fn tsv_roundtrip_columns() {
+        let r = JobResult {
+            id: 1,
+            engine_name: "squeeze-rho16".into(),
+            cells: 100,
+            steps: 5,
+            total_s: 0.5,
+            per_step_s: 0.1,
+            updates_per_s: 1000.0,
+            population: 42,
+            memory_bytes: 4096,
+            state_hash: 0xABCD,
+        };
+        let row = r.to_tsv();
+        assert_eq!(
+            row.split('\t').count(),
+            JobResult::tsv_header().split('\t').count()
+        );
+    }
+}

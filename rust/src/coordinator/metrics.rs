@@ -1,0 +1,99 @@
+//! Coordinator metrics: atomic counters + aggregate throughput, cheap
+//! enough to update from every worker on every job.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    started: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Total busy time across workers, in microseconds.
+    busy_us: AtomicU64,
+    /// Total cell updates performed.
+    cell_updates: AtomicU64,
+}
+
+/// A point-in-time copy of the counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub started: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub busy_us: u64,
+    pub cell_updates: u64,
+}
+
+impl Metrics {
+    pub fn job_started(&self) {
+        self.started.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_finished(&self, seconds: f64, cell_updates: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.busy_us
+            .fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.cell_updates.fetch_add(cell_updates, Ordering::Relaxed);
+    }
+
+    pub fn job_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            started: self.started.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            cell_updates: self.cell_updates.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Aggregate throughput over worker busy time.
+    pub fn updates_per_busy_s(&self) -> f64 {
+        if self.busy_us == 0 {
+            0.0
+        } else {
+            self.cell_updates as f64 / (self.busy_us as f64 / 1e6)
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        format!(
+            "jobs started={} completed={} failed={} busy={:.3}s throughput={:.3e} upd/s",
+            self.started,
+            self.completed,
+            self.failed,
+            self.busy_us as f64 / 1e6,
+            self.updates_per_busy_s()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.job_started();
+        m.job_started();
+        m.job_finished(0.5, 1000);
+        m.job_failed();
+        let s = m.snapshot();
+        assert_eq!((s.started, s.completed, s.failed), (2, 1, 1));
+        assert_eq!(s.cell_updates, 1000);
+        assert!((s.updates_per_busy_s() - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn zero_busy_time_is_safe() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.updates_per_busy_s(), 0.0);
+        assert!(s.to_line().contains("completed=0"));
+    }
+}

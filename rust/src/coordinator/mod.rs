@@ -1,0 +1,12 @@
+//! L3 coordinator: job specifications, the scheduler/worker pool, the
+//! line-protocol service loop, and aggregate metrics. This is the layer a
+//! deployment talks to; it owns process topology and never calls Python.
+
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod service;
+
+pub use job::{JobResult, JobSpec};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use scheduler::{execute_job, Scheduler};

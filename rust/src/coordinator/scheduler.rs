@@ -1,0 +1,183 @@
+//! Job scheduler: a bounded work queue with worker threads executing
+//! simulation jobs. The L3 analogue of a serving router's request loop —
+//! requests (jobs) come in, get dispatched to workers, and results stream
+//! back over a channel in completion order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use super::job::{JobResult, JobSpec};
+use super::metrics::Metrics;
+use crate::ca::{build, EngineConfig};
+use crate::fractal::catalog;
+use crate::util::timer::Timer;
+
+/// Execute one job synchronously (the worker body; also usable directly).
+pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
+    let fractal = catalog::by_name(&spec.fractal)
+        .ok_or_else(|| format!("unknown fractal {:?}", spec.fractal))?;
+    let cfg = EngineConfig {
+        kind: spec.engine,
+        r: spec.r,
+        rule: spec.rule,
+        density: spec.density,
+        seed: spec.seed,
+        workers: spec.workers,
+    };
+    let mut engine = build(&fractal, &cfg);
+    let t = Timer::start();
+    for _ in 0..spec.steps {
+        engine.step();
+    }
+    let total_s = t.elapsed_s();
+    let cells = engine.cells();
+    let per_step_s = total_s / spec.steps.max(1) as f64;
+    Ok(JobResult {
+        id: spec.id,
+        engine_name: engine.name(),
+        cells,
+        steps: spec.steps,
+        total_s,
+        per_step_s,
+        updates_per_s: cells as f64 / per_step_s.max(1e-12),
+        population: engine.population(),
+        memory_bytes: engine.memory_bytes(),
+        state_hash: engine.state_hash(),
+    })
+}
+
+/// A running scheduler with `workers` concurrent job executors.
+pub struct Scheduler {
+    tx: Option<mpsc::Sender<JobSpec>>,
+    results_rx: mpsc::Receiver<Result<JobResult, String>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Scheduler {
+    /// Start `workers` job-executor threads.
+    pub fn start(workers: usize) -> Scheduler {
+        let (tx, rx) = mpsc::channel::<JobSpec>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (results_tx, results_rx) = mpsc::channel();
+        let metrics = Arc::new(Metrics::default());
+        let mut handles = Vec::new();
+        for _ in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let results_tx = results_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().expect("scheduler queue poisoned");
+                    guard.recv()
+                };
+                let Ok(job) = job else { break };
+                metrics.job_started();
+                let result = execute_job(&job);
+                match &result {
+                    Ok(r) => metrics.job_finished(r.total_s, r.cells * r.steps as u64),
+                    Err(_) => metrics.job_failed(),
+                }
+                if results_tx.send(result).is_err() {
+                    break;
+                }
+            }));
+        }
+        Scheduler {
+            tx: Some(tx),
+            results_rx,
+            handles,
+            metrics,
+        }
+    }
+
+    /// Enqueue a job.
+    pub fn submit(&self, spec: JobSpec) {
+        self.tx
+            .as_ref()
+            .expect("scheduler already closed")
+            .send(spec)
+            .expect("scheduler workers gone");
+    }
+
+    /// Receive the next finished result (blocking).
+    pub fn recv(&self) -> Option<Result<JobResult, String>> {
+        self.results_rx.recv().ok()
+    }
+
+    /// Close the queue and join workers; returns remaining results.
+    pub fn shutdown(mut self) -> Vec<Result<JobResult, String>> {
+        self.tx.take(); // drop sender: workers drain and exit
+        let mut rest = Vec::new();
+        while let Ok(r) = self.results_rx.recv() {
+            rest.push(r);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        rest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::EngineKind;
+
+    fn small_job(id: u64, engine: EngineKind) -> JobSpec {
+        JobSpec {
+            id,
+            engine,
+            r: 4,
+            steps: 3,
+            workers: 1,
+            ..JobSpec::default()
+        }
+    }
+
+    #[test]
+    fn executes_jobs_and_agrees_across_engines() {
+        let sched = Scheduler::start(2);
+        sched.submit(small_job(1, EngineKind::Bb));
+        sched.submit(small_job(2, EngineKind::Lambda));
+        sched.submit(small_job(3, EngineKind::Squeeze { rho: 1, tensor: false }));
+        sched.submit(small_job(4, EngineKind::Squeeze { rho: 4, tensor: false }));
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 4);
+        let hashes: Vec<u64> = results
+            .iter()
+            .map(|r| r.as_ref().unwrap().state_hash)
+            .collect();
+        assert!(hashes.windows(2).all(|w| w[0] == w[1]), "{hashes:?}");
+    }
+
+    #[test]
+    fn failed_jobs_report_errors() {
+        let sched = Scheduler::start(1);
+        sched.submit(JobSpec {
+            fractal: "not-a-fractal".into(),
+            ..small_job(9, EngineKind::Bb)
+        });
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].is_err());
+        assert_eq!(sched_failed(&results), 1);
+    }
+
+    fn sched_failed(results: &[Result<JobResult, String>]) -> usize {
+        results.iter().filter(|r| r.is_err()).count()
+    }
+
+    #[test]
+    fn metrics_count_jobs() {
+        let sched = Scheduler::start(2);
+        for i in 0..5 {
+            sched.submit(small_job(i, EngineKind::Squeeze { rho: 2, tensor: false }));
+        }
+        let metrics = Arc::clone(&sched.metrics);
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 5);
+        assert_eq!(metrics.snapshot().completed, 5);
+        assert_eq!(metrics.snapshot().failed, 0);
+    }
+}

@@ -1,0 +1,109 @@
+//! The serve loop: a line-oriented request protocol over any
+//! `BufRead`/`Write` pair (stdin/stdout in the CLI, in-memory buffers in
+//! tests).
+//!
+//! Protocol:
+//!   request line  = whitespace-separated `key=value` pairs (see
+//!                   [`JobSpec::parse_line`]), e.g.
+//!                   `engine=squeeze:16 r=10 steps=100 seed=7`
+//!   response line = TSV ([`JobResult::to_tsv`]); errors are
+//!                   `ERR <id> <message>`. `quit` ends the session, and
+//!                   `metrics` dumps the aggregate counters.
+
+use std::io::{BufRead, Write};
+
+use super::job::{JobResult, JobSpec};
+use super::scheduler::execute_job;
+use super::metrics::Metrics;
+
+/// Run the service until EOF or `quit`. Jobs execute synchronously in
+/// request order (each job parallelizes internally over its `workers`).
+pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()> {
+    let metrics = Metrics::default();
+    writeln!(output, "# squeeze coordinator ready")?;
+    writeln!(output, "# {}", JobResult::tsv_header())?;
+    let mut next_id = 1u64;
+    for line in input.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if trimmed == "quit" {
+            break;
+        }
+        if trimmed == "metrics" {
+            writeln!(output, "# {}", metrics.snapshot().to_line())?;
+            output.flush()?;
+            continue;
+        }
+        let id = next_id;
+        next_id += 1;
+        match JobSpec::parse_line(id, trimmed) {
+            Ok(spec) => {
+                metrics.job_started();
+                match execute_job(&spec) {
+                    Ok(result) => {
+                        metrics.job_finished(result.total_s, result.cells * result.steps as u64);
+                        writeln!(output, "{}", result.to_tsv())?;
+                    }
+                    Err(msg) => {
+                        metrics.job_failed();
+                        writeln!(output, "ERR {id} {msg}")?;
+                    }
+                }
+            }
+            Err(msg) => {
+                writeln!(output, "ERR {id} {msg}")?;
+            }
+        }
+        output.flush()?;
+    }
+    writeln!(output, "# {}", metrics.snapshot().to_line())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_session(script: &str) -> String {
+        let mut out = Vec::new();
+        serve(script.as_bytes(), &mut out).unwrap();
+        String::from_utf8(out).unwrap()
+    }
+
+    #[test]
+    fn serves_jobs_and_reports_results() {
+        let out = run_session(
+            "engine=squeeze:4 r=4 steps=2 workers=1\nengine=bb r=4 steps=2 workers=1\nquit\n",
+        );
+        let data_lines: Vec<&str> = out
+            .lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .collect();
+        assert_eq!(data_lines.len(), 2, "{out}");
+        // both engines simulated the same logical automaton
+        let h1 = data_lines[0].split('\t').last().unwrap();
+        let h2 = data_lines[1].split('\t').last().unwrap();
+        assert_eq!(h1, h2, "{out}");
+    }
+
+    #[test]
+    fn bad_requests_get_err_lines() {
+        let out = run_session("bogus line here\nengine=nope r=4\n");
+        assert_eq!(out.lines().filter(|l| l.starts_with("ERR")).count(), 2);
+    }
+
+    #[test]
+    fn metrics_command_reports() {
+        let out = run_session("engine=squeeze r=3 steps=1 workers=1\nmetrics\nquit\n");
+        assert!(out.contains("completed=1"), "{out}");
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored(){
+        let out = run_session("# hi\n\n   \nquit\n");
+        assert!(!out.contains("ERR"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Catalog of NBB fractals used across the paper.
+//!
+//! Each constructor returns a validated [`FractalSpec`]. Placement tables
+//! (`τ`) follow the paper where given; fractals the paper only shows as
+//! figures (empty-bottles, chandelier) are reconstructed from those figures
+//! and documented inline — the maps are generic over the table, so the
+//! exact pattern only changes the picture, not the algorithm.
+
+use super::spec::FractalSpec;
+
+/// Sierpinski triangle `F^{3,2}` (paper §4.1). Placement per the paper:
+/// replica 0 top(-left), 1 middle(-bottom-left), 2 right(-bottom-right):
+/// `τ(0)=(0,0), τ(1)=(0,1), τ(2)=(1,1)`, so `H_ν[θ] = θx + θy` (Eq. 22).
+pub fn sierpinski_triangle() -> FractalSpec {
+    FractalSpec::new("sierpinski-triangle", 3, 2, vec![(0, 0), (0, 1), (1, 1)]).unwrap()
+}
+
+/// Sierpinski carpet `F^{8,3}` (paper Fig. 1): a 3×3 arrangement with the
+/// center removed.
+pub fn sierpinski_carpet() -> FractalSpec {
+    FractalSpec::new(
+        "sierpinski-carpet",
+        8,
+        3,
+        vec![
+            (0, 0),
+            (1, 0),
+            (2, 0),
+            (0, 1),
+            (2, 1),
+            (0, 2),
+            (1, 2),
+            (2, 2),
+        ],
+    )
+    .unwrap()
+}
+
+/// Vicsek fractal `F^{5,3}` (paper Fig. 5): the 3×3 plus/cross pattern.
+pub fn vicsek() -> FractalSpec {
+    FractalSpec::new(
+        "vicsek",
+        5,
+        3,
+        vec![(1, 0), (0, 1), (1, 1), (2, 1), (1, 2)],
+    )
+    .unwrap()
+}
+
+/// "Empty bottles" `F^{7,3}` (paper Fig. 2). Reconstructed from the figure:
+/// full top and middle rows plus the bottom-center cell (a bottle
+/// silhouette). Any 7-of-9 pattern exercises identical code paths.
+pub fn empty_bottles() -> FractalSpec {
+    FractalSpec::new(
+        "empty-bottles",
+        7,
+        3,
+        vec![(0, 0), (1, 0), (2, 0), (0, 1), (1, 1), (2, 1), (1, 2)],
+    )
+    .unwrap()
+}
+
+/// "Chandelier" `F^{4,3}` (paper Fig. 11 shows it only as an illustration).
+/// Reconstructed as a hanging diamond: top center, middle sides, bottom
+/// center.
+pub fn chandelier() -> FractalSpec {
+    FractalSpec::new("chandelier", 4, 3, vec![(1, 0), (0, 1), (2, 1), (1, 2)]).unwrap()
+}
+
+/// A degenerate-but-valid NBB "fractal": the full square `k = s²`
+/// (occupancy 1, MRF 1). Useful as a boundary case in tests.
+pub fn full_square(s: u32) -> FractalSpec {
+    let mut tau = Vec::new();
+    for y in 0..s {
+        for x in 0..s {
+            tau.push((x as u8, y as u8));
+        }
+    }
+    FractalSpec::new(&format!("full-square-{s}"), s * s, s, tau).unwrap()
+}
+
+/// Every named fractal in the catalog.
+pub fn all() -> Vec<FractalSpec> {
+    vec![
+        sierpinski_triangle(),
+        sierpinski_carpet(),
+        vicsek(),
+        empty_bottles(),
+        chandelier(),
+    ]
+}
+
+/// Look up a fractal by its kebab-case name (CLI entry point).
+pub fn by_name(name: &str) -> Option<FractalSpec> {
+    all().into_iter().find(|f| f.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_parameters_match_paper() {
+        assert_eq!(
+            all()
+                .iter()
+                .map(|f| (f.k, f.s))
+                .collect::<Vec<_>>(),
+            vec![(3, 2), (8, 3), (5, 3), (7, 3), (4, 3)]
+        );
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for f in all() {
+            assert_eq!(by_name(&f.name).unwrap().name, f.name);
+        }
+        assert!(by_name("not-a-fractal").is_none());
+    }
+
+    #[test]
+    fn full_square_has_occupancy_one() {
+        let f = full_square(3);
+        assert_eq!(f.cells(4), f.expanded_extent(4).area());
+        assert!((f.occupancy(4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn carpet_center_is_a_hole() {
+        let c = sierpinski_carpet();
+        assert_eq!(c.replica_at(1, 1), None);
+        assert_eq!(c.tau.len(), 8);
+    }
+
+    #[test]
+    fn vicsek_is_a_cross() {
+        let v = vicsek();
+        assert!(v.replica_at(1, 1).is_some());
+        assert!(v.replica_at(0, 0).is_none());
+        assert!(v.replica_at(2, 2).is_none());
+    }
+}

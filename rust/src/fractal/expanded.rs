@@ -1,0 +1,127 @@
+//! Expanded-space rasterization of NBB fractals.
+//!
+//! Two independent constructions of the same set — a per-cell membership
+//! scan and a recursive replication (the fractal's transition function) —
+//! cross-check each other in tests and back the gallery example's ASCII /
+//! PBM rendering.
+
+use super::geometry::Coord;
+use super::spec::FractalSpec;
+
+/// A dense 0/1 bitmap of the expanded embedding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    pub n: u32,
+    pub bits: Vec<u8>, // one byte per cell, 0 or 1
+}
+
+impl Bitmap {
+    pub fn get(&self, c: Coord) -> bool {
+        self.bits[c.linear(self.n) as usize] != 0
+    }
+
+    pub fn popcount(&self) -> u64 {
+        self.bits.iter().map(|&b| b as u64).sum()
+    }
+}
+
+/// Rasterize by testing every embedding cell with [`FractalSpec::contains`].
+pub fn rasterize_scan(spec: &FractalSpec, r: u32) -> Bitmap {
+    let n = spec.n(r) as u32;
+    let mut bits = vec![0u8; (n as u64 * n as u64) as usize];
+    for y in 0..n {
+        for x in 0..n {
+            let c = Coord::new(x, y);
+            if spec.contains(c, r) {
+                bits[c.linear(n) as usize] = 1;
+            }
+        }
+    }
+    Bitmap { n, bits }
+}
+
+/// Rasterize by applying the transition function r times (replication).
+pub fn rasterize_replicate(spec: &FractalSpec, r: u32) -> Bitmap {
+    let mut cur: Vec<Coord> = vec![Coord::new(0, 0)];
+    let mut side: u32 = 1;
+    for _ in 0..r {
+        let mut next = Vec::with_capacity(cur.len() * spec.k as usize);
+        for &(tx, ty) in &spec.tau {
+            let ox = tx as u32 * side;
+            let oy = ty as u32 * side;
+            for &c in &cur {
+                next.push(Coord::new(c.x + ox, c.y + oy));
+            }
+        }
+        cur = next;
+        side *= spec.s;
+    }
+    let n = side;
+    let mut bits = vec![0u8; (n as u64 * n as u64) as usize];
+    for c in cur {
+        bits[c.linear(n) as usize] = 1;
+    }
+    Bitmap { n, bits }
+}
+
+/// Render a bitmap as ASCII art (`#` fractal, `.` hole), one row per line.
+pub fn to_ascii(bm: &Bitmap) -> String {
+    let mut s = String::with_capacity((bm.n as usize + 1) * bm.n as usize);
+    for y in 0..bm.n {
+        for x in 0..bm.n {
+            s.push(if bm.get(Coord::new(x, y)) { '#' } else { '.' });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render a bitmap as a PBM (P1) image string.
+pub fn to_pbm(bm: &Bitmap) -> String {
+    let mut s = format!("P1\n{} {}\n", bm.n, bm.n);
+    for y in 0..bm.n {
+        for x in 0..bm.n {
+            s.push(if bm.get(Coord::new(x, y)) { '1' } else { '0' });
+            s.push(if x + 1 == bm.n { '\n' } else { ' ' });
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn scan_and_replicate_agree_for_all_catalog() {
+        for spec in catalog::all() {
+            for r in 0..=3 {
+                let a = rasterize_scan(&spec, r);
+                let b = rasterize_replicate(&spec, r);
+                assert_eq!(a, b, "{} r={r}", spec.name);
+                assert_eq!(a.popcount(), spec.cells(r), "{} r={r}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sierpinski_level2_picture() {
+        let bm = rasterize_scan(&catalog::sierpinski_triangle(), 2);
+        let expect = "\
+#...
+##..
+#.#.
+####
+";
+        assert_eq!(to_ascii(&bm), expect);
+    }
+
+    #[test]
+    fn pbm_header() {
+        let bm = rasterize_scan(&catalog::sierpinski_triangle(), 1);
+        let pbm = to_pbm(&bm);
+        assert!(pbm.starts_with("P1\n2 2\n"));
+        assert_eq!(pbm.matches('1').count() - 1, 3); // header "P1" contains one '1'
+    }
+}

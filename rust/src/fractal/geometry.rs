@@ -1,0 +1,150 @@
+//! Discrete 2D geometry primitives shared by expanded and compact space.
+//!
+//! Coordinates follow the paper's convention: origin `(0,0)` at the
+//! upper-left corner of both `D²` (expanded) and `D²_c` (compact) space,
+//! `x` growing right, `y` growing down.
+
+/// A discrete 2D coordinate. `u32` is enough for every size in the paper:
+/// the largest expanded side is `n = 2^20` (level r=20 Sierpinski triangle)
+/// and the largest compact side is `3^10 = 59049`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: u32,
+    pub y: u32,
+}
+
+impl Coord {
+    pub const fn new(x: u32, y: u32) -> Coord {
+        Coord { x, y }
+    }
+
+    /// Offset by a signed delta; `None` if the result leaves quadrant I.
+    #[inline]
+    pub fn offset(self, dx: i32, dy: i32) -> Option<Coord> {
+        let x = self.x as i64 + dx as i64;
+        let y = self.y as i64 + dy as i64;
+        if x < 0 || y < 0 || x > u32::MAX as i64 || y > u32::MAX as i64 {
+            None
+        } else {
+            Some(Coord::new(x as u32, y as u32))
+        }
+    }
+
+    /// Row-major linear index within a grid of width `w`.
+    #[inline]
+    pub fn linear(self, w: u32) -> u64 {
+        (self.y as u64) * (w as u64) + self.x as u64
+    }
+
+    /// Inverse of [`Coord::linear`].
+    #[inline]
+    pub fn from_linear(idx: u64, w: u32) -> Coord {
+        Coord::new((idx % w as u64) as u32, (idx / w as u64) as u32)
+    }
+}
+
+impl std::fmt::Display for Coord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({}, {})", self.x, self.y)
+    }
+}
+
+/// Half-open rectangle `[0,w) × [0,h)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Extent {
+    pub w: u32,
+    pub h: u32,
+}
+
+impl Extent {
+    pub const fn new(w: u32, h: u32) -> Extent {
+        Extent { w, h }
+    }
+
+    #[inline]
+    pub fn contains(&self, c: Coord) -> bool {
+        c.x < self.w && c.y < self.h
+    }
+
+    #[inline]
+    pub fn area(&self) -> u64 {
+        self.w as u64 * self.h as u64
+    }
+}
+
+/// The 8 Moore-neighborhood offsets, in scanline order.
+pub const MOORE: [(i32, i32); 8] = [
+    (-1, -1),
+    (0, -1),
+    (1, -1),
+    (-1, 0),
+    (1, 0),
+    (-1, 1),
+    (0, 1),
+    (1, 1),
+];
+
+/// The 4 Von Neumann offsets.
+pub const VON_NEUMANN: [(i32, i32); 4] = [(0, -1), (-1, 0), (1, 0), (0, 1)];
+
+/// `base^exp` with u64 result; panics on overflow in debug builds.
+#[inline]
+pub const fn upow(base: u32, exp: u32) -> u64 {
+    let mut acc: u64 = 1;
+    let mut i = 0;
+    while i < exp {
+        acc *= base as u64;
+        i += 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offset_bounds() {
+        let c = Coord::new(0, 5);
+        assert_eq!(c.offset(-1, 0), None);
+        assert_eq!(c.offset(1, -1), Some(Coord::new(1, 4)));
+        assert_eq!(Coord::new(u32::MAX, 0).offset(1, 0), None);
+    }
+
+    #[test]
+    fn linear_roundtrip() {
+        let e = Extent::new(37, 19);
+        for y in 0..e.h {
+            for x in 0..e.w {
+                let c = Coord::new(x, y);
+                assert_eq!(Coord::from_linear(c.linear(e.w), e.w), c);
+            }
+        }
+    }
+
+    #[test]
+    fn extent_contains() {
+        let e = Extent::new(4, 2);
+        assert!(e.contains(Coord::new(3, 1)));
+        assert!(!e.contains(Coord::new(4, 1)));
+        assert!(!e.contains(Coord::new(0, 2)));
+        assert_eq!(e.area(), 8);
+    }
+
+    #[test]
+    fn moore_has_8_unique_nonzero() {
+        let mut set = std::collections::HashSet::new();
+        for d in MOORE {
+            assert_ne!(d, (0, 0));
+            set.insert(d);
+        }
+        assert_eq!(set.len(), 8);
+    }
+
+    #[test]
+    fn upow_small_values() {
+        assert_eq!(upow(3, 0), 1);
+        assert_eq!(upow(3, 16), 43_046_721);
+        assert_eq!(upow(2, 20), 1 << 20);
+    }
+}

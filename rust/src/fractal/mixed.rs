@@ -1,0 +1,224 @@
+//! Mixed-transition fractals — the paper's §5 future-work item ("build
+//! arbitrary fractal structures by combining different NBB fractals at
+//! each scale level").
+//!
+//! A [`MixedFractal`] applies a *different* NBB transition pattern at each
+//! scale level (all sharing the same `s` so the embedding stays a regular
+//! `s^r` box; `k_μ` may differ per level). Cell count becomes `Π_μ k_μ`
+//! and the compact extent interleaves per-level digit radices:
+//! `w = Π_{even μ} k_μ`, `h = Π_{odd μ} k_μ`. λ/ν generalize by using the
+//! level-μ tables at step μ — implemented here to show the Squeeze
+//! machinery is not tied to self-similar (single-table) fractals.
+
+use super::geometry::{Coord, Extent};
+use super::spec::FractalSpec;
+
+/// A per-level stack of transition patterns (level 1 first).
+#[derive(Clone, Debug)]
+pub struct MixedFractal {
+    pub name: String,
+    pub s: u32,
+    /// Transition pattern for each level μ = 1..=r.
+    pub levels: Vec<FractalSpec>,
+}
+
+impl MixedFractal {
+    /// Build from per-level specs; all must share the same `s`.
+    pub fn new(name: &str, levels: Vec<FractalSpec>) -> MixedFractal {
+        assert!(!levels.is_empty(), "need at least one level");
+        let s = levels[0].s;
+        assert!(
+            levels.iter().all(|l| l.s == s),
+            "all levels must share the scale factor s"
+        );
+        MixedFractal {
+            name: name.to_string(),
+            s,
+            levels,
+        }
+    }
+
+    pub fn r(&self) -> u32 {
+        self.levels.len() as u32
+    }
+
+    pub fn n(&self) -> u64 {
+        super::geometry::upow(self.s, self.r())
+    }
+
+    /// Total cells `Π_μ k_μ`.
+    pub fn cells(&self) -> u64 {
+        self.levels.iter().map(|l| l.k as u64).product()
+    }
+
+    /// Compact extent: odd levels contribute their radix to y, even to x.
+    pub fn compact_extent(&self) -> Extent {
+        let mut w = 1u64;
+        let mut h = 1u64;
+        for (i, l) in self.levels.iter().enumerate() {
+            let mu = i + 1;
+            if mu % 2 == 1 {
+                h *= l.k as u64;
+            } else {
+                w *= l.k as u64;
+            }
+        }
+        Extent::new(w as u32, h as u32)
+    }
+
+    /// Membership: level-μ sub-position must be a replica of *that
+    /// level's* pattern.
+    pub fn contains(&self, e: Coord) -> bool {
+        let n = self.n();
+        if e.x as u64 >= n || e.y as u64 >= n {
+            return false;
+        }
+        let s = self.s;
+        let mut x = e.x;
+        let mut y = e.y;
+        for l in &self.levels {
+            if l.replica_at(x % s, y % s).is_none() {
+                return false;
+            }
+            x /= s;
+            y /= s;
+        }
+        true
+    }
+
+    /// λ for mixed stacks: digits come from mixed-radix decompositions of
+    /// the compact coordinate (level μ uses radix `k_μ`).
+    pub fn lambda(&self, c: Coord) -> Coord {
+        let mut cx = c.x as u64;
+        let mut cy = c.y as u64;
+        let mut ex = 0u32;
+        let mut ey = 0u32;
+        let mut scale = 1u32;
+        for (i, l) in self.levels.iter().enumerate() {
+            let mu = i + 1;
+            let k = l.k as u64;
+            let b = if mu % 2 == 1 {
+                let d = cy % k;
+                cy /= k;
+                d
+            } else {
+                let d = cx % k;
+                cx /= k;
+                d
+            } as usize;
+            let (tx, ty) = l.tau[b];
+            ex += tx as u32 * scale;
+            ey += ty as u32 * scale;
+            scale *= self.s;
+        }
+        Coord::new(ex, ey)
+    }
+
+    /// ν for mixed stacks; `None` off the structure.
+    pub fn nu(&self, e: Coord) -> Option<Coord> {
+        let n = self.n();
+        if e.x as u64 >= n || e.y as u64 >= n {
+            return None;
+        }
+        let s = self.s;
+        let mut x = e.x;
+        let mut y = e.y;
+        let mut cx = 0u64;
+        let mut cy = 0u64;
+        let mut dx = 1u64; // mixed-radix place value for x
+        let mut dy = 1u64;
+        for (i, l) in self.levels.iter().enumerate() {
+            let mu = i + 1;
+            let b = l.replica_at(x % s, y % s)? as u64;
+            x /= s;
+            y /= s;
+            if mu % 2 == 1 {
+                cy += b * dy;
+                dy *= l.k as u64;
+            } else {
+                cx += b * dx;
+                dx *= l.k as u64;
+            }
+        }
+        Some(Coord::new(cx as u32, cy as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    fn tri_carpet_mix(r: u32) -> MixedFractal {
+        // alternate carpet and vicsek patterns (both s=3)
+        let levels = (0..r)
+            .map(|i| {
+                if i % 2 == 0 {
+                    catalog::sierpinski_carpet()
+                } else {
+                    catalog::vicsek()
+                }
+            })
+            .collect();
+        MixedFractal::new("carpet-vicsek-mix", levels)
+    }
+
+    #[test]
+    fn cells_and_extent_are_mixed_radix() {
+        let m = tri_carpet_mix(4); // k = 8,5,8,5
+        assert_eq!(m.cells(), 8 * 5 * 8 * 5);
+        let e = m.compact_extent();
+        assert_eq!((e.w, e.h), (5 * 5, 8 * 8)); // even μ (2,4): k=5,5; odd: 8,8
+        assert_eq!(e.area(), m.cells());
+    }
+
+    #[test]
+    fn nu_inverts_lambda_exhaustively() {
+        let m = tri_carpet_mix(3);
+        let ext = m.compact_extent();
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..ext.area() {
+            let c = Coord::from_linear(idx, ext.w);
+            let e = m.lambda(c);
+            assert!(m.contains(e), "λ({c}) = {e} off structure");
+            assert!(seen.insert(e), "λ not injective at {e}");
+            assert_eq!(m.nu(e), Some(c));
+        }
+        assert_eq!(seen.len() as u64, m.cells());
+    }
+
+    #[test]
+    fn membership_count_matches_cells() {
+        let m = tri_carpet_mix(2);
+        let n = m.n() as u32;
+        let count = (0..n)
+            .flat_map(|y| (0..n).map(move |x| Coord::new(x, y)))
+            .filter(|&c| m.contains(c))
+            .count() as u64;
+        assert_eq!(count, m.cells()); // 8 · 5 = 40
+    }
+
+    #[test]
+    fn uniform_stack_equals_plain_fractal() {
+        // a mixed stack of identical levels must reproduce the ordinary maps
+        let spec = catalog::sierpinski_carpet();
+        let r = 3;
+        let m = MixedFractal::new("carpet-uniform", vec![spec.clone(); r as usize]);
+        let ctx = crate::maps::MapCtx::new(&spec, r);
+        for idx in 0..m.compact_extent().area() {
+            let c = Coord::from_linear(idx, m.compact_extent().w);
+            assert_eq!(m.lambda(c), crate::maps::lambda(&ctx, c));
+            let e = m.lambda(c);
+            assert_eq!(m.nu(e), crate::maps::nu(&ctx, e));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_mismatched_scale_factors() {
+        let _ = MixedFractal::new(
+            "bad",
+            vec![catalog::sierpinski_triangle(), catalog::vicsek()],
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! NBB fractal geometry: specifications, the catalog from the paper, and
+//! expanded-space rasterization used for validation and rendering.
+
+pub mod catalog;
+pub mod mixed;
+pub mod expanded;
+pub mod geometry;
+pub mod spec;
+pub mod three_d;
+
+pub use geometry::{Coord, Extent, MOORE, VON_NEUMANN};
+pub use spec::FractalSpec;

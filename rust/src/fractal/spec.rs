@@ -1,0 +1,250 @@
+//! NBB fractal specification — the `F_n^{k,s}` family of the paper.
+//!
+//! An NBB (Non-overlapping Bounding-Boxes) fractal is defined by:
+//! - `s`: linear scale factor between levels (the level-μ fractal is an
+//!   `s × s` arrangement of level-(μ-1) copies, some cells empty),
+//! - `k`: number of replicas per transition (`k ≤ s²`),
+//! - `tau`: the replica placement table `τ: [0,k) → [0,s)²` — where replica
+//!   `b` sits inside the `s × s` arrangement (paper Eq. 4 / `H_λ`),
+//! - `hnu`: the inverse table `H_ν: [0,s)² → Option<[0,k)>` (paper §3.4);
+//!   `None` marks a hole of the transition pattern.
+//!
+//! Level `r` gives side `n = s^r` and exactly `k^r` fractal cells
+//! (paper Eq. 1). Replicas may translate but not rotate or overlap.
+
+use super::geometry::{upow, Coord, Extent};
+
+/// Immutable description of one NBB fractal family member.
+#[derive(Clone, Debug)]
+pub struct FractalSpec {
+    pub name: String,
+    /// Replicas per transition.
+    pub k: u32,
+    /// Linear scale factor.
+    pub s: u32,
+    /// Replica placement `b -> (θx, θy)`, length `k`.
+    pub tau: Vec<(u8, u8)>,
+    /// Flattened `s × s` inverse table: `θy * s + θx -> Some(b)` or `None`.
+    pub hnu: Vec<Option<u8>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SpecError {
+    KOutOfRange,
+    TauLenMismatch,
+    TauOutOfRange(u8, u8),
+    TauNotInjective,
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl FractalSpec {
+    /// Build and validate a spec from its placement table.
+    pub fn new(name: &str, k: u32, s: u32, tau: Vec<(u8, u8)>) -> Result<FractalSpec, SpecError> {
+        if k == 0 || k > s * s {
+            return Err(SpecError::KOutOfRange);
+        }
+        if tau.len() != k as usize {
+            return Err(SpecError::TauLenMismatch);
+        }
+        let mut hnu = vec![None; (s * s) as usize];
+        for (b, &(tx, ty)) in tau.iter().enumerate() {
+            if tx as u32 >= s || ty as u32 >= s {
+                return Err(SpecError::TauOutOfRange(tx, ty));
+            }
+            let slot = &mut hnu[(ty as u32 * s + tx as u32) as usize];
+            if slot.is_some() {
+                return Err(SpecError::TauNotInjective);
+            }
+            *slot = Some(b as u8);
+        }
+        Ok(FractalSpec {
+            name: name.to_string(),
+            k,
+            s,
+            tau,
+            hnu,
+        })
+    }
+
+    /// Expanded embedding side `n = s^r`.
+    #[inline]
+    pub fn n(&self, r: u32) -> u64 {
+        upow(self.s, r)
+    }
+
+    /// Fractal cell count `V = k^r` (paper Eq. 1).
+    #[inline]
+    pub fn cells(&self, r: u32) -> u64 {
+        upow(self.k, r)
+    }
+
+    /// Compact-space extent: width `k^⌊r/2⌋`, height `k^⌈r/2⌉`
+    /// (paper §3.1). Width × height = `k^r` exactly — compact space is
+    /// dense.
+    #[inline]
+    pub fn compact_extent(&self, r: u32) -> Extent {
+        Extent::new(upow(self.k, r / 2) as u32, upow(self.k, r.div_ceil(2)) as u32)
+    }
+
+    /// Expanded-space extent (`n × n`).
+    #[inline]
+    pub fn expanded_extent(&self, r: u32) -> Extent {
+        let n = self.n(r) as u32;
+        Extent::new(n, n)
+    }
+
+    /// Replica index for a level-μ sub-cell position, `None` for holes.
+    #[inline]
+    pub fn replica_at(&self, tx: u32, ty: u32) -> Option<u8> {
+        self.hnu[(ty * self.s + tx) as usize]
+    }
+
+    /// Membership test: is expanded coordinate `e` a fractal cell of the
+    /// level-`r` fractal? True iff at *every* level the sub-position lands
+    /// on a replica of the transition pattern (paper §3.4 / θ_μ).
+    pub fn contains(&self, e: Coord, r: u32) -> bool {
+        let s = self.s;
+        let mut x = e.x;
+        let mut y = e.y;
+        if (e.x as u64) >= self.n(r) || (e.y as u64) >= self.n(r) {
+            return false;
+        }
+        for _ in 0..r {
+            if self.replica_at(x % s, y % s).is_none() {
+                return false;
+            }
+            x /= s;
+            y /= s;
+        }
+        true
+    }
+
+    /// Hausdorff (similarity) dimension `log_s k`.
+    pub fn dimension(&self) -> f64 {
+        (self.k as f64).ln() / (self.s as f64).ln()
+    }
+
+    /// Fraction of the embedding occupied by fractal cells at level `r`:
+    /// `k^r / s^{2r}` — the reciprocal of the theoretical MRF (Fig. 10).
+    pub fn occupancy(&self, r: u32) -> f64 {
+        (self.k as f64 / (self.s as f64 * self.s as f64)).powi(r as i32)
+    }
+
+    /// Largest level whose expanded side fits in `u32` coordinates.
+    pub fn max_level_u32(&self) -> u32 {
+        let mut r = 0;
+        let mut n: u64 = 1;
+        while n * self.s as u64 <= u32::MAX as u64 + 1 {
+            n *= self.s as u64;
+            r += 1;
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn sierpinski_spec_is_valid() {
+        let f = catalog::sierpinski_triangle();
+        assert_eq!((f.k, f.s), (3, 2));
+        assert_eq!(f.cells(3), 27);
+        assert_eq!(f.n(3), 8);
+        let e = f.compact_extent(3);
+        assert_eq!((e.w, e.h), (3, 9)); // k^1 × k^2
+        assert_eq!(e.area(), f.cells(3));
+    }
+
+    #[test]
+    fn compact_extent_is_dense_for_all_catalog() {
+        for f in catalog::all() {
+            for r in 0..=6 {
+                assert_eq!(f.compact_extent(r).area(), f.cells(r), "{} r={r}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_tables() {
+        assert_eq!(
+            FractalSpec::new("dup", 2, 2, vec![(0, 0), (0, 0)]).unwrap_err(),
+            SpecError::TauNotInjective
+        );
+        assert_eq!(
+            FractalSpec::new("oob", 1, 2, vec![(2, 0)]).unwrap_err(),
+            SpecError::TauOutOfRange(2, 0)
+        );
+        assert_eq!(
+            FractalSpec::new("k", 5, 2, vec![(0, 0); 5]).unwrap_err(),
+            SpecError::KOutOfRange
+        );
+        assert_eq!(
+            FractalSpec::new("len", 2, 2, vec![(0, 0)]).unwrap_err(),
+            SpecError::TauLenMismatch
+        );
+    }
+
+    #[test]
+    fn sierpinski_membership_small() {
+        let f = catalog::sierpinski_triangle();
+        // level 1: the 2x2 pattern has replicas at (0,0), (0,1), (1,1)
+        assert!(f.contains(Coord::new(0, 0), 1));
+        assert!(f.contains(Coord::new(0, 1), 1));
+        assert!(f.contains(Coord::new(1, 1), 1));
+        assert!(!f.contains(Coord::new(1, 0), 1));
+        // out of range
+        assert!(!f.contains(Coord::new(2, 0), 1));
+        // level 2: count must equal k^2 = 9
+        let n = f.n(2) as u32;
+        let count = (0..n)
+            .flat_map(|y| (0..n).map(move |x| Coord::new(x, y)))
+            .filter(|&c| f.contains(c, 2))
+            .count();
+        assert_eq!(count, 9);
+    }
+
+    #[test]
+    fn membership_count_matches_cells_for_catalog() {
+        for f in catalog::all() {
+            let r = 2;
+            let n = f.n(r) as u32;
+            let count = (0..n)
+                .flat_map(|y| (0..n).map(move |x| Coord::new(x, y)))
+                .filter(|&c| f.contains(c, r))
+                .count() as u64;
+            assert_eq!(count, f.cells(r), "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn dimension_sanity() {
+        let f = catalog::sierpinski_triangle();
+        assert!((f.dimension() - 1.58496).abs() < 1e-4);
+        let c = catalog::sierpinski_carpet();
+        assert!((c.dimension() - 1.8928).abs() < 1e-4);
+    }
+
+    #[test]
+    fn occupancy_is_reciprocal_mrf() {
+        let f = catalog::sierpinski_triangle();
+        // at r=16, MRF should be (4/3)^16 ≈ 99.8 (paper Table 2, ρ=1)
+        let mrf = 1.0 / f.occupancy(16);
+        assert!((mrf - 99.77).abs() < 0.1, "mrf={mrf}");
+    }
+
+    #[test]
+    fn max_level_fits() {
+        let f = catalog::sierpinski_triangle();
+        assert!(f.max_level_u32() >= 20);
+    }
+}

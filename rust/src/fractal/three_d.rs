@@ -1,0 +1,223 @@
+//! 3D NBB fractals — the paper's §5 future-work item ("extend Squeeze to
+//! support compact processing on 3D and higher-dimensional fractals").
+//!
+//! The construction generalizes directly: a 3D NBB fractal is an `s×s×s`
+//! transition pattern with `k ≤ s³` replicas; level `r` occupies `k^r` of
+//! the `n³ = s^{3r}` embedding. Compact space becomes a box whose three
+//! side lengths interleave the replica digits round-robin across axes
+//! (μ ≡ 1 mod 3 → z, μ ≡ 2 → y, μ ≡ 0 → x), giving extents
+//! `k^⌊r/3⌋ × k^⌊(r+1)/3⌋ × k^⌊(r+2)/3⌋` — again exactly `k^r` dense
+//! cells. λ/ν generalize per-axis; see [`crate::maps::three_d`].
+
+use super::geometry::upow;
+
+/// A 3D coordinate (u32 per axis is ample: Menger level 8 has n=6561).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Coord3 {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+}
+
+impl Coord3 {
+    pub const fn new(x: u32, y: u32, z: u32) -> Coord3 {
+        Coord3 { x, y, z }
+    }
+}
+
+impl std::fmt::Display for Coord3 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({}, {}, {})", self.x, self.y, self.z)
+    }
+}
+
+/// 3D NBB fractal specification.
+#[derive(Clone, Debug)]
+pub struct Fractal3Spec {
+    pub name: String,
+    pub k: u32,
+    pub s: u32,
+    /// Replica placements `b -> (θx, θy, θz)`.
+    pub tau: Vec<(u8, u8, u8)>,
+    /// Flattened `s³` inverse table (`(θz·s + θy)·s + θx -> b`), u8::MAX
+    /// marks holes.
+    pub hnu: Vec<u8>,
+}
+
+/// Hole marker in the flattened table.
+pub const HOLE3: u8 = u8::MAX;
+
+impl Fractal3Spec {
+    pub fn new(name: &str, k: u32, s: u32, tau: Vec<(u8, u8, u8)>) -> Fractal3Spec {
+        assert!(k >= 1 && k <= s * s * s, "k out of range");
+        assert_eq!(tau.len(), k as usize, "tau length");
+        let mut hnu = vec![HOLE3; (s * s * s) as usize];
+        for (b, &(tx, ty, tz)) in tau.iter().enumerate() {
+            assert!((tx as u32) < s && (ty as u32) < s && (tz as u32) < s);
+            let idx = ((tz as u32 * s + ty as u32) * s + tx as u32) as usize;
+            assert_eq!(hnu[idx], HOLE3, "tau not injective");
+            hnu[idx] = b as u8;
+        }
+        Fractal3Spec {
+            name: name.to_string(),
+            k,
+            s,
+            tau,
+            hnu,
+        }
+    }
+
+    pub fn n(&self, r: u32) -> u64 {
+        upow(self.s, r)
+    }
+
+    pub fn cells(&self, r: u32) -> u64 {
+        upow(self.k, r)
+    }
+
+    /// Compact box extents `(wx, wy, wz)`: digits round-robin z, y, x.
+    pub fn compact_extent(&self, r: u32) -> (u32, u32, u32) {
+        (
+            upow(self.k, r / 3) as u32,          // axis x gets μ ≡ 0 (mod 3)
+            upow(self.k, (r + 1) / 3) as u32,    // axis y gets μ ≡ 2
+            upow(self.k, (r + 2) / 3) as u32,    // axis z gets μ ≡ 1
+        )
+    }
+
+    #[inline]
+    pub fn replica_at(&self, tx: u32, ty: u32, tz: u32) -> u8 {
+        self.hnu[((tz * self.s + ty) * self.s + tx) as usize]
+    }
+
+    /// Membership in the level-`r` fractal.
+    pub fn contains(&self, e: Coord3, r: u32) -> bool {
+        let n = self.n(r);
+        if e.x as u64 >= n || e.y as u64 >= n || e.z as u64 >= n {
+            return false;
+        }
+        let s = self.s;
+        let (mut x, mut y, mut z) = (e.x, e.y, e.z);
+        for _ in 0..r {
+            if self.replica_at(x % s, y % s, z % s) == HOLE3 {
+                return false;
+            }
+            x /= s;
+            y /= s;
+            z /= s;
+        }
+        true
+    }
+
+    /// Similarity dimension `log_s k`.
+    pub fn dimension(&self) -> f64 {
+        (self.k as f64).ln() / (self.s as f64).ln()
+    }
+}
+
+/// Menger sponge `F^{20,3}`: the 3×3×3 pattern minus the 6 face centers
+/// and the body center.
+pub fn menger_sponge() -> Fractal3Spec {
+    let mut tau = Vec::new();
+    for z in 0..3u8 {
+        for y in 0..3u8 {
+            for x in 0..3u8 {
+                // remove cells with ≥2 centered coordinates
+                let centered =
+                    (x == 1) as u32 + (y == 1) as u32 + (z == 1) as u32;
+                if centered < 2 {
+                    tau.push((x, y, z));
+                }
+            }
+        }
+    }
+    Fractal3Spec::new("menger-sponge", 20, 3, tau)
+}
+
+/// Sierpinski tetrahedron (as an axis-aligned NBB approximation)
+/// `F^{4,2}`: replicas at the 4 "even-parity corner" octants.
+pub fn sierpinski_tetrahedron() -> Fractal3Spec {
+    Fractal3Spec::new(
+        "sierpinski-tetrahedron",
+        4,
+        2,
+        vec![(0, 0, 0), (1, 1, 0), (1, 0, 1), (0, 1, 1)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn menger_parameters() {
+        let m = menger_sponge();
+        assert_eq!((m.k, m.s), (20, 3));
+        assert_eq!(m.cells(2), 400);
+        assert!((m.dimension() - 2.7268).abs() < 1e-3);
+        // body center and face centers are holes; edge cells are present
+        assert_eq!(m.replica_at(1, 1, 1), HOLE3);
+        assert_eq!(m.replica_at(1, 1, 0), HOLE3);
+        assert_eq!(m.replica_at(0, 1, 1), HOLE3);
+        assert_ne!(m.replica_at(0, 0, 1), HOLE3);
+        assert_ne!(m.replica_at(0, 0, 0), HOLE3);
+    }
+
+    #[test]
+    fn menger_membership_count() {
+        let m = menger_sponge();
+        let r = 2;
+        let n = m.n(r) as u32;
+        let mut count = 0u64;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    if m.contains(Coord3::new(x, y, z), r) {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(count, m.cells(r));
+    }
+
+    #[test]
+    fn tetrahedron_membership_count() {
+        let t = sierpinski_tetrahedron();
+        let r = 3;
+        let n = t.n(r) as u32;
+        let mut count = 0u64;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    if t.contains(Coord3::new(x, y, z), r) {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(count, t.cells(r)); // 4^3 = 64
+    }
+
+    #[test]
+    fn compact_extent_is_dense() {
+        for spec in [menger_sponge(), sierpinski_tetrahedron()] {
+            for r in 0..=4 {
+                let (wx, wy, wz) = spec.compact_extent(r);
+                assert_eq!(
+                    wx as u64 * wy as u64 * wz as u64,
+                    spec.cells(r),
+                    "{} r={r}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mrf_3d_is_cubic_ratio() {
+        // 3D MRF = s^{3r}/k^r — e.g. Menger at r=6: (27/20)^6 ≈ 6.05
+        let m = menger_sponge();
+        let mrf = (m.n(6) as f64).powi(3) / m.cells(6) as f64;
+        assert!((mrf - 6.05).abs() < 0.05, "{mrf}");
+    }
+}

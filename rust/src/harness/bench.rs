@@ -1,0 +1,137 @@
+//! Micro-benchmark framework (offline substitute for `criterion`).
+//!
+//! Measures a closure with warmup, an adaptive repeat count targeting the
+//! paper's "<1% standard error" criterion, and a wall-clock budget so full
+//! sweeps stay bounded. Returns a [`Summary`] (mean/σ/stderr/min/max).
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Measurement policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Warmup executions (not recorded).
+    pub warmup: u32,
+    /// Minimum recorded repetitions.
+    pub min_reps: u32,
+    /// Maximum recorded repetitions.
+    pub max_reps: u32,
+    /// Stop early once stderr falls below this fraction of the mean
+    /// (after `min_reps`).
+    pub target_stderr_pct: f64,
+    /// Hard wall-clock budget for one measurement, seconds.
+    pub budget_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> BenchOpts {
+        BenchOpts {
+            warmup: 1,
+            min_reps: 3,
+            max_reps: 100,
+            target_stderr_pct: 1.0,
+            budget_s: 5.0,
+        }
+    }
+}
+
+impl BenchOpts {
+    /// Fast preset for wide sweeps (benches over many configurations).
+    pub fn sweep() -> BenchOpts {
+        BenchOpts {
+            warmup: 1,
+            min_reps: 3,
+            max_reps: 20,
+            target_stderr_pct: 2.0,
+            budget_s: 2.0,
+        }
+    }
+
+    /// Honour `SQUEEZE_BENCH_BUDGET_S` (seconds per measurement) if set.
+    pub fn from_env(mut self) -> BenchOpts {
+        if let Ok(v) = std::env::var("SQUEEZE_BENCH_BUDGET_S") {
+            if let Ok(b) = v.parse::<f64>() {
+                self.budget_s = b;
+            }
+        }
+        self
+    }
+}
+
+/// Measure `f`, returning the per-execution timing summary in seconds.
+pub fn bench(opts: &BenchOpts, mut f: impl FnMut()) -> Summary {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let budget = Timer::start();
+    let mut samples = Vec::with_capacity(opts.min_reps as usize);
+    loop {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+        let n = samples.len() as u32;
+        if n >= opts.max_reps {
+            break;
+        }
+        if n >= opts.min_reps {
+            if budget.elapsed_s() > opts.budget_s {
+                break;
+            }
+            let s = Summary::of(&samples);
+            if s.stderr_pct() < opts.target_stderr_pct {
+                break;
+            }
+        }
+    }
+    Summary::of(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_at_least_min_reps() {
+        let mut count = 0u32;
+        let opts = BenchOpts {
+            warmup: 2,
+            min_reps: 5,
+            max_reps: 10,
+            target_stderr_pct: 0.0, // never early-stop on precision
+            budget_s: 1e9,
+        };
+        let s = bench(&opts, || count += 1);
+        assert_eq!(s.n, 10); // runs to max_reps since target is unreachable
+        assert_eq!(count, 12); // 2 warmup + 10 recorded
+    }
+
+    #[test]
+    fn budget_bounds_runtime() {
+        let opts = BenchOpts {
+            warmup: 0,
+            min_reps: 2,
+            max_reps: 1_000_000,
+            target_stderr_pct: 0.0,
+            budget_s: 0.05,
+        };
+        let t = Timer::start();
+        let s = bench(&opts, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(t.elapsed_s() < 1.0);
+        assert!(s.n >= 2);
+    }
+
+    #[test]
+    fn stable_workload_stops_early() {
+        let opts = BenchOpts {
+            warmup: 1,
+            min_reps: 3,
+            max_reps: 1000,
+            target_stderr_pct: 50.0, // easily met
+            budget_s: 10.0,
+        };
+        let s = bench(&opts, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.n < 1000);
+    }
+}

@@ -1,0 +1,235 @@
+//! Generators for every figure and table in the paper's evaluation
+//! (see DESIGN.md §6 for the experiment index). Each function builds the
+//! data, prints it, and persists CSV/markdown via [`super::report`].
+
+use super::bench::BenchOpts;
+use super::report::emit;
+use super::sweep::{speedups_vs_bb, sweep, SweepPoint};
+use crate::ca::EngineKind;
+use crate::fractal::{catalog, FractalSpec};
+use crate::memory;
+use crate::tcu::{CostModel, Generation};
+use crate::util::fmt::{human_bytes, Table};
+
+/// Fig. 10 — theoretical memory-reduction factor for three NBB fractals.
+pub fn fig10(log2_n_max: u32) -> std::io::Result<()> {
+    let specs = [
+        catalog::vicsek(),
+        catalog::sierpinski_triangle(),
+        catalog::sierpinski_carpet(),
+    ];
+    let mut t = Table::new(&["n", "vicsek", "sierpinski-triangle", "sierpinski-carpet"]);
+    let series: Vec<Vec<memory::MrfPoint>> = specs
+        .iter()
+        .map(|s| memory::fig10_series(s, log2_n_max))
+        .collect();
+    for i in 0..series[0].len() {
+        t.row(&[
+            format!("2^{}", i + 1),
+            format!("{:.2}", series[0][i].mrf),
+            format!("{:.2}", series[1][i].mrf),
+            format!("{:.2}", series[2][i].mrf),
+        ]);
+    }
+    emit("fig10_mrf", "Fig. 10 — theoretical MRF of Squeeze", &t)
+}
+
+/// The engine set of the paper's performance plots: BB, λ(ω), and Squeeze
+/// at every block size ρ ∈ {1, 2, 4, 8, 16, 32} (for s=2 fractals).
+pub fn paper_engines(rhos: &[u32]) -> Vec<EngineKind> {
+    let mut kinds = vec![EngineKind::Bb, EngineKind::Lambda];
+    for &rho in rhos {
+        kinds.push(EngineKind::Squeeze { rho, tensor: false });
+    }
+    kinds
+}
+
+/// Run the Fig. 12 sweep and emit the execution-time table.
+pub fn fig12(
+    spec: &FractalSpec,
+    rhos: &[u32],
+    r_lo: u32,
+    r_hi: u32,
+    workers: usize,
+    max_embedding_bytes: u64,
+    opts: &BenchOpts,
+) -> std::io::Result<Vec<SweepPoint>> {
+    let kinds = paper_engines(rhos);
+    let points = sweep(spec, &kinds, r_lo, r_hi, workers, max_embedding_bytes, opts);
+    let mut t = Table::new(&["engine", "r", "n", "cells", "per_step_s", "stderr_%", "memory"]);
+    for p in &points {
+        t.row(&[
+            p.engine.clone(),
+            p.r.to_string(),
+            p.n.to_string(),
+            p.cells.to_string(),
+            format!("{:.6e}", p.per_step_s),
+            format!("{:.2}", p.stderr_pct),
+            human_bytes(p.memory_bytes),
+        ]);
+    }
+    emit(
+        "fig12_times",
+        "Fig. 12 — execution time per step: BB vs λ(ω) vs Squeeze(ρ)",
+        &t,
+    )?;
+    Ok(points)
+}
+
+/// Fig. 13 — speedup of every engine over BB, per level.
+pub fn fig13(points: &[SweepPoint]) -> std::io::Result<()> {
+    let sp = speedups_vs_bb(points);
+    let mut t = Table::new(&["engine", "r", "n", "speedup_vs_bb"]);
+    for (engine, r, s) in &sp {
+        let n = points.iter().find(|p| p.r == *r).map(|p| p.n).unwrap_or(0);
+        t.row(&[
+            engine.clone(),
+            r.to_string(),
+            n.to_string(),
+            format!("{s:.3}"),
+        ]);
+    }
+    emit("fig13_speedup", "Fig. 13 — speedup of Squeeze over BB", &t)
+}
+
+/// Fig. 14 — tensor-core on/off speedup: the per-generation cost model
+/// (headline, see DESIGN.md §2) plus the CPU-side encoding check ratio.
+pub fn fig14_modeled(r_lo: u32, r_hi: u32, map_frac: f64) -> std::io::Result<()> {
+    let mut t = Table::new(&["r", "batch", "volta", "turing", "ampere"]);
+    for r in r_lo..=r_hi {
+        let batch = 3u64.pow(r.min(20));
+        let mut row = vec![r.to_string(), batch.to_string()];
+        for g in Generation::all() {
+            let m = CostModel::for_generation(g);
+            row.push(format!("{:.3}", m.fig14_speedup(batch, r, map_frac)));
+        }
+        t.row(&row);
+    }
+    emit(
+        "fig14_tcu_modeled",
+        "Fig. 14 — modeled TCU-on/TCU-off speedup (per generation)",
+        &t,
+    )
+}
+
+/// Fig. 14 measured companion: the simulated-WMMA path vs scalar maps on
+/// this host (validates the encoding; CPU ratios are not GPU ratios).
+pub fn fig14_measured(
+    spec: &FractalSpec,
+    r_lo: u32,
+    r_hi: u32,
+    rho: u32,
+    workers: usize,
+    opts: &BenchOpts,
+) -> std::io::Result<()> {
+    let mut t = Table::new(&["r", "scalar_s", "tcu_sim_s", "ratio"]);
+    for r in r_lo..=r_hi {
+        let scalar = super::sweep::measure(
+            spec,
+            EngineKind::Squeeze { rho, tensor: false },
+            r,
+            workers,
+            opts,
+        );
+        let tcu = super::sweep::measure(
+            spec,
+            EngineKind::Squeeze { rho, tensor: true },
+            r,
+            workers,
+            opts,
+        );
+        t.row(&[
+            r.to_string(),
+            format!("{:.6e}", scalar.per_step_s),
+            format!("{:.6e}", tcu.per_step_s),
+            format!("{:.3}", scalar.per_step_s / tcu.per_step_s),
+        ]);
+    }
+    emit(
+        "fig14_tcu_measured",
+        "Fig. 14 (companion) — simulated-WMMA vs scalar maps on CPU",
+        &t,
+    )
+}
+
+/// Table 2 — memory and MRF at level r per block size.
+pub fn table2(spec: &FractalSpec, r: u32, rhos: &[u32]) -> std::io::Result<()> {
+    let rows = memory::table2(spec, r, rhos, memory::PAPER_CELL_BYTES);
+    let mut t = Table::new(&["rho", "bb_lambda", "squeeze", "MRF"]);
+    for row in rows {
+        t.row(&[
+            format!("{0}x{0}", row.rho),
+            human_bytes(row.bb_bytes),
+            human_bytes(row.squeeze_bytes),
+            format!("{:.1}x", row.mrf),
+        ]);
+    }
+    emit(
+        "table2_memory",
+        &format!("Table 2 — memory and MRF ({} r={r})", spec.name),
+        &t,
+    )
+}
+
+/// §4.3's r=20 feasibility numbers.
+pub fn r20_feasibility(spec: &FractalSpec) -> std::io::Result<()> {
+    let mut t = Table::new(&["config", "bytes", "feasible on 40GB GPU?"]);
+    t.row(&[
+        "BB / λ(ω), r=20".into(),
+        human_bytes(memory::bb_bytes(spec, 20, memory::PAPER_CELL_BYTES)),
+        "no (4096 GB)".into(),
+    ]);
+    for rho in [1u32, 16, 32] {
+        let b = memory::squeeze_bytes(spec, 20, rho, memory::PAPER_CELL_BYTES);
+        t.row(&[
+            format!("Squeeze ρ={rho}, r=20"),
+            human_bytes(b),
+            if b <= 40 * (1 << 30) { "yes".into() } else { "no".into() },
+        ]);
+    }
+    t.row(&[
+        "MRF at r=20 (ρ=1)".into(),
+        format!("{:.1}x", memory::mrf(spec, 20, 1)),
+        "-".into(),
+    ]);
+    emit("r20_feasibility", "§4.3 — r=20 feasibility (A100 40 GB)", &t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet_results() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sq-fig-{}", std::process::id()));
+        std::env::set_var("SQUEEZE_RESULTS_DIR", &dir);
+        dir
+    }
+
+    #[test]
+    fn figures_generate_without_panic() {
+        let dir = quiet_results();
+        fig10(8).unwrap();
+        let spec = catalog::sierpinski_triangle();
+        table2(&spec, 16, &[1, 2, 4, 8, 16, 32]).unwrap();
+        r20_feasibility(&spec).unwrap();
+        fig14_modeled(8, 10, 0.6).unwrap();
+        let opts = BenchOpts {
+            warmup: 0,
+            min_reps: 1,
+            max_reps: 1,
+            target_stderr_pct: 100.0,
+            budget_s: 0.2,
+        };
+        let pts = fig12(&spec, &[1, 4], 4, 5, 1, u64::MAX, &opts).unwrap();
+        assert!(!pts.is_empty());
+        fig13(&pts).unwrap();
+        std::env::remove_var("SQUEEZE_RESULTS_DIR");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn paper_engine_set_is_complete() {
+        let kinds = paper_engines(&[1, 2, 4, 8, 16, 32]);
+        assert_eq!(kinds.len(), 8); // bb + lambda + 6 rho values
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark harness: the micro-bench framework, engine sweeps, and the
+//! per-figure/table generators that regenerate the paper's evaluation.
+
+pub mod bench;
+pub mod figures;
+pub mod report;
+pub mod sweep;
+
+pub use bench::{bench, BenchOpts};
+pub use sweep::{measure, speedups_vs_bb, sweep, SweepPoint};

@@ -1,0 +1,52 @@
+//! Result reporting: prints tables to stdout and persists CSV/markdown
+//! under `results/` so every figure/table regeneration leaves an artifact.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::fmt::Table;
+
+/// Where results land (override with `SQUEEZE_RESULTS_DIR`).
+pub fn results_dir() -> PathBuf {
+    std::env::var("SQUEEZE_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+/// Print a table and write `<name>.csv` + `<name>.md` under `results/`.
+pub fn emit(name: &str, title: &str, table: &Table) -> std::io::Result<()> {
+    println!("\n## {title}\n");
+    println!("{}", table.to_markdown());
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    write_file(&dir.join(format!("{name}.csv")), &table.to_csv())?;
+    write_file(
+        &dir.join(format!("{name}.md")),
+        &format!("# {title}\n\n{}", table.to_markdown()),
+    )?;
+    println!("[saved results/{name}.csv and .md]");
+    Ok(())
+}
+
+fn write_file(path: &Path, content: &str) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(content.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_writes_both_files() {
+        let dir = std::env::temp_dir().join(format!("sq-report-{}", std::process::id()));
+        std::env::set_var("SQUEEZE_RESULTS_DIR", &dir);
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into()]);
+        emit("unit_test_table", "Unit", &t).unwrap();
+        assert!(dir.join("unit_test_table.csv").exists());
+        assert!(dir.join("unit_test_table.md").exists());
+        std::env::remove_var("SQUEEZE_RESULTS_DIR");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,179 @@
+//! Engine measurement sweeps — the shared machinery behind the Fig. 12
+//! (execution time) and Fig. 13 (speedup) reproductions.
+
+use super::bench::{bench, BenchOpts};
+use crate::ca::{build, EngineConfig, EngineKind, Rule};
+use crate::fractal::FractalSpec;
+use crate::util::stats::Summary;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub engine: String,
+    pub kind: EngineKind,
+    pub r: u32,
+    /// Expanded side n = s^r.
+    pub n: u64,
+    /// Logical fractal cells k^r.
+    pub cells: u64,
+    /// Mean seconds per simulation step.
+    pub per_step_s: f64,
+    pub stderr_pct: f64,
+    pub memory_bytes: u64,
+}
+
+/// Measure one engine configuration: seconds per step.
+pub fn measure(
+    spec: &FractalSpec,
+    kind: EngineKind,
+    r: u32,
+    workers: usize,
+    opts: &BenchOpts,
+) -> SweepPoint {
+    let cfg = EngineConfig {
+        kind,
+        r,
+        rule: Rule::game_of_life(),
+        density: 0.4,
+        seed: 42,
+        workers,
+    };
+    let mut engine = build(spec, &cfg);
+    let summary: Summary = bench(opts, || engine.step());
+    SweepPoint {
+        engine: engine.name(),
+        kind,
+        r,
+        n: spec.n(r),
+        cells: spec.cells(r),
+        per_step_s: summary.mean,
+        stderr_pct: summary.stderr_pct(),
+        memory_bytes: engine.memory_bytes(),
+    }
+}
+
+/// Sweep engines × levels. Skips configurations whose embedding would not
+/// fit the `max_embedding_bytes` cap (the BB engine at high r is exactly
+/// the paper's out-of-memory wall).
+pub fn sweep(
+    spec: &FractalSpec,
+    kinds: &[EngineKind],
+    r_lo: u32,
+    r_hi: u32,
+    workers: usize,
+    max_embedding_bytes: u64,
+    opts: &BenchOpts,
+) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for &kind in kinds {
+        for r in r_lo..=r_hi {
+            let needs_embedding = matches!(kind, EngineKind::Bb | EngineKind::Lambda);
+            if needs_embedding {
+                let bytes = crate::memory::bb_bytes(spec, r, 1) * 2;
+                if bytes > max_embedding_bytes {
+                    continue; // the paper's OOM wall
+                }
+            }
+            if let EngineKind::Squeeze { rho, .. } = kind {
+                if crate::maps::block::intra_levels_for(rho, spec.s)
+                    .map(|l| l > r)
+                    .unwrap_or(true)
+                {
+                    continue; // block larger than fractal
+                }
+            }
+            out.push(measure(spec, kind, r, workers, opts));
+        }
+    }
+    out
+}
+
+/// Compute Fig. 13's speedup series: `S = T_bb / T_engine` per level, for
+/// every non-BB engine in the sweep.
+pub fn speedups_vs_bb(points: &[SweepPoint]) -> Vec<(String, u32, f64)> {
+    let mut out = Vec::new();
+    for p in points {
+        if p.kind == EngineKind::Bb {
+            continue;
+        }
+        if let Some(bb) = points
+            .iter()
+            .find(|q| q.kind == EngineKind::Bb && q.r == p.r)
+        {
+            out.push((p.engine.clone(), p.r, bb.per_step_s / p.per_step_s));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    fn quick() -> BenchOpts {
+        BenchOpts {
+            warmup: 0,
+            min_reps: 1,
+            max_reps: 2,
+            target_stderr_pct: 100.0,
+            budget_s: 0.5,
+        }
+    }
+
+    #[test]
+    fn measure_reports_consistent_metadata() {
+        let spec = catalog::sierpinski_triangle();
+        let p = measure(
+            &spec,
+            EngineKind::Squeeze { rho: 4, tensor: false },
+            5,
+            1,
+            &quick(),
+        );
+        assert_eq!(p.r, 5);
+        assert_eq!(p.n, 32);
+        assert_eq!(p.cells, 243);
+        assert!(p.per_step_s > 0.0);
+    }
+
+    #[test]
+    fn sweep_respects_memory_cap_and_rho_limits() {
+        let spec = catalog::sierpinski_triangle();
+        let kinds = [
+            EngineKind::Bb,
+            EngineKind::Squeeze { rho: 16, tensor: false },
+        ];
+        // cap below the r=6 embedding (2·4096 B): BB stops at r=5
+        let pts = sweep(&spec, &kinds, 4, 6, 1, 2 * 32 * 32, &quick());
+        let bb_max = pts
+            .iter()
+            .filter(|p| p.kind == EngineKind::Bb)
+            .map(|p| p.r)
+            .max()
+            .unwrap();
+        assert_eq!(bb_max, 5);
+        // squeeze rho=16 requires r >= 4, so r=4..6 all present
+        let sq: Vec<u32> = pts
+            .iter()
+            .filter(|p| matches!(p.kind, EngineKind::Squeeze { .. }))
+            .map(|p| p.r)
+            .collect();
+        assert_eq!(sq, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn speedups_pair_by_level() {
+        let spec = catalog::sierpinski_triangle();
+        let kinds = [
+            EngineKind::Bb,
+            EngineKind::Lambda,
+        ];
+        let pts = sweep(&spec, &kinds, 4, 5, 1, u64::MAX, &quick());
+        let sp = speedups_vs_bb(&pts);
+        assert_eq!(sp.len(), 2);
+        for (_, _, s) in sp {
+            assert!(s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! # Squeeze — efficient compact fractal processing
+//!
+//! A Rust + JAX + Pallas reproduction of *"Squeeze: Efficient Compact
+//! Fractals for Tensor Core GPUs"* (Quezada, Navarro, Hitschfeld, Bustos,
+//! 2022).
+//!
+//! Squeeze runs neighborhood-accessing simulations (stencils, cellular
+//! automata) directly on the **compact form** of a discrete NBB fractal —
+//! the `n × n` expanded embedding is never materialized. Two discrete-space
+//! maps make that possible:
+//!
+//! - [`maps::lambda`] — `λ(ω)`: compact → expanded embedded space,
+//! - [`maps::nu`] — `ν(ω)`: expanded → compact space (the paper's new map),
+//!
+//! both `O(log_2 log_s n)` per evaluation and both expressible as 16×16
+//! matrix-multiply-accumulate operations ([`maps::mma`], executed by the
+//! software tensor-core simulator in [`tcu`]).
+//!
+//! ## Layout (three-layer architecture)
+//!
+//! - **L3 (this crate)**: fractal geometry + maps + CA engines + the
+//!   coordinator that schedules simulation jobs and the PJRT runtime that
+//!   executes AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`).
+//! - **L2/L1 (`python/compile/`)**: JAX step functions and Pallas kernels,
+//!   lowered once at build time — Python is never on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod ca;
+pub mod coordinator;
+pub mod fractal;
+pub mod harness;
+pub mod maps;
+pub mod memory;
+pub mod runtime;
+pub mod tcu;
+pub mod util;

@@ -1,0 +1,386 @@
+//! `squeeze` — CLI for the Squeeze compact-fractal coordinator.
+//!
+//! Subcommands:
+//!   run        one simulation job on a native engine
+//!   serve      line-protocol coordinator loop on stdin/stdout
+//!   gallery    ASCII-render a catalog fractal (expanded + compact views)
+//!   validate   large randomized map/engine self-checks
+//!   artifacts  list + compile-check the AOT artifact store
+//!   e2e        PJRT end-to-end: run an AOT artifact, cross-check native
+//!   fig10|fig12|fig13|fig14|table2|r20   regenerate paper experiments
+//!   perf       hot-path microbenchmarks (§Perf log input)
+
+use squeeze::ca::{EngineKind, Rule};
+use squeeze::coordinator::{execute_job, service, JobResult, JobSpec};
+use squeeze::fractal::{catalog, expanded, Coord};
+use squeeze::harness::{figures, BenchOpts};
+use squeeze::maps::{lambda_linear, nu, MapCtx};
+use squeeze::runtime::Runtime;
+use squeeze::util::cli::Args;
+use squeeze::util::fmt::{human_bytes, human_secs};
+use squeeze::util::prng::Prng;
+use squeeze::util::timer::Timer;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(),
+        Some("gallery") => cmd_gallery(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("e2e") => cmd_e2e(&args),
+        Some("fig10") => figures::fig10(16).map_err(|e| e.to_string()),
+        Some("fig12") | Some("fig13") => cmd_fig12_13(&args),
+        Some("fig14") => cmd_fig14(&args),
+        Some("table2") => cmd_table2(&args),
+        Some("r20") => figures::r20_feasibility(&catalog::sierpinski_triangle())
+            .map_err(|e| e.to_string()),
+        Some("perf") => cmd_perf(&args),
+        other => {
+            usage(other);
+            Err(String::new())
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        if !e.is_empty() {
+            eprintln!("error: {e}");
+        }
+        1
+    });
+    std::process::exit(code);
+}
+
+fn usage(cmd: Option<&str>) {
+    if let Some(c) = cmd {
+        eprintln!("unknown command {c:?}\n");
+    }
+    eprintln!(
+        "usage: squeeze <command> [options]\n\n\
+         commands:\n  \
+         run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n  \
+         serve      (reads job lines from stdin; see coordinator::service)\n  \
+         gallery    --fractal vicsek --r 3\n  \
+         validate   --r 12 --samples 100000\n  \
+         artifacts  --dir artifacts [--check]\n  \
+         e2e        --name squeeze_sierpinski-triangle_r6 --steps 8\n  \
+         fig10 | fig12 | fig13 | fig14 | table2 | r20\n  \
+         perf       --r 12"
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let engine = EngineKind::parse(&args.get_or("engine", "squeeze:16"))
+        .ok_or("bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO])")?;
+    let spec = JobSpec {
+        id: 0,
+        fractal: args.get_or("fractal", "sierpinski-triangle"),
+        engine,
+        r: args.get_u32("r", 8).map_err(|e| e.to_string())?,
+        steps: args.get_u32("steps", 10).map_err(|e| e.to_string())?,
+        density: args.get_f64("density", 0.4).map_err(|e| e.to_string())?,
+        seed: args.get_u64("seed", 42).map_err(|e| e.to_string())?,
+        rule: Rule::parse(&args.get_or("rule", "B3/S23")).ok_or("bad --rule")?,
+        workers: args
+            .get_u64("workers", squeeze::util::pool::default_workers() as u64)
+            .map_err(|e| e.to_string())? as usize,
+    };
+    let result = execute_job(&spec)?;
+    println!("{}", JobResult::tsv_header());
+    println!("{}", result.to_tsv());
+    println!(
+        "\n{}: {} cells, {} steps in {} ({} per step, {:.3e} updates/s), memory {}",
+        result.engine_name,
+        result.cells,
+        result.steps,
+        human_secs(result.total_s),
+        human_secs(result.per_step_s),
+        result.updates_per_s,
+        human_bytes(result.memory_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_serve() -> Result<(), String> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    service::serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())
+}
+
+fn cmd_gallery(args: &Args) -> Result<(), String> {
+    let name = args.get_or("fractal", "sierpinski-triangle");
+    let spec = catalog::by_name(&name).ok_or_else(|| format!("unknown fractal {name}"))?;
+    let r = args.get_u32("r", 3).map_err(|e| e.to_string())?;
+    let bm = expanded::rasterize_scan(&spec, r);
+    println!(
+        "{} (k={}, s={}), level r={r}: n={}, cells={}, dimension={:.4}\n",
+        spec.name,
+        spec.k,
+        spec.s,
+        spec.n(r),
+        spec.cells(r),
+        spec.dimension()
+    );
+    println!("expanded embedding ({0}x{0}):", bm.n);
+    print!("{}", expanded::to_ascii(&bm));
+    let ctx = MapCtx::new(&spec, r);
+    println!(
+        "\ncompact form: {}x{} (dense; embedding uses {:.1}x more space)",
+        ctx.compact.w,
+        ctx.compact.h,
+        (spec.n(r) * spec.n(r)) as f64 / spec.cells(r) as f64
+    );
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<(), String> {
+    let r = args.get_u32("r", 12).map_err(|e| e.to_string())?;
+    let samples = args.get_u64("samples", 100_000).map_err(|e| e.to_string())?;
+    for spec in catalog::all() {
+        let r_eff = r.min(spec.max_level_u32());
+        let ctx = MapCtx::new(&spec, r_eff);
+        let mut prng = Prng::new(0xC0DE);
+        let t = Timer::start();
+        for _ in 0..samples {
+            let idx = prng.below(ctx.compact.area());
+            let c = Coord::from_linear(idx, ctx.compact.w);
+            let e = lambda_linear(&ctx, idx);
+            let back = nu(&ctx, e)
+                .ok_or_else(|| format!("{}: ν(λ({c})) invalid at r={r_eff}", spec.name))?;
+            if back != c {
+                return Err(format!(
+                    "{}: roundtrip failed at {c}: λ→{e}→ν→{back}",
+                    spec.name
+                ));
+            }
+        }
+        println!(
+            "{:<22} r={:<2} ν∘λ=id over {} random cells  ({})",
+            spec.name,
+            r_eff,
+            samples,
+            human_secs(t.elapsed_s())
+        );
+    }
+    println!("all map invariants hold");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args.get_or("dir", "artifacts");
+    let mut rt = Runtime::open(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}", rt.platform());
+    println!("{:<44} {:>10} {:>9} {:>6}", "name", "shape", "kind", "iters");
+    let metas: Vec<_> = rt.manifest().to_vec();
+    for m in &metas {
+        println!(
+            "{:<44} {:>10} {:>9} {:>6}",
+            m.name,
+            format!("{}x{}", m.rows, m.cols),
+            m.kind,
+            m.iters
+        );
+    }
+    if args.flag("check") {
+        for m in &metas {
+            let t = Timer::start();
+            rt.load(&m.name).map_err(|e| format!("{e:#}"))?;
+            println!("compiled {:<44} in {}", m.name, human_secs(t.elapsed_s()));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<(), String> {
+    let name = args.get_or("name", "squeeze_sierpinski-triangle_r6");
+    let steps = args.get_u32("steps", 8).map_err(|e| e.to_string())?;
+    let dir = args.get_or("dir", "artifacts");
+    let report = squeeze_e2e(&dir, &name, steps)?;
+    println!("{report}");
+    Ok(())
+}
+
+/// Shared by `squeeze e2e` and the e2e example: run an AOT squeeze
+/// artifact through PJRT and cross-check the final state bit-for-bit
+/// against the native engine. Returns a human-readable report.
+pub fn squeeze_e2e(dir: &str, name: &str, steps: u32) -> Result<String, String> {
+    let mut rt = Runtime::open(dir).map_err(|e| format!("{e:#}"))?;
+    let meta = rt
+        .meta(name)
+        .ok_or_else(|| format!("artifact {name} not found"))?
+        .clone();
+    if meta.kind != "squeeze" {
+        return Err(format!("{name} is not a squeeze artifact"));
+    }
+    let spec = catalog::by_name(&meta.fractal).ok_or("unknown fractal in manifest")?;
+    // seed identically to the native engines
+    let cells = meta.rows * meta.cols;
+    let state: Vec<f32> = (0..cells)
+        .map(|idx| {
+            if squeeze::ca::engine::seeded_alive(42, idx, 0.4) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let outer = (steps / meta.iters.max(1)).max(1);
+    let t = Timer::start();
+    let out = rt
+        .run_steps(name, &state, outer)
+        .map_err(|e| format!("{e:#}"))?;
+    let pjrt_s = t.elapsed_s();
+    let pjrt_pop: u64 = out.iter().map(|&v| v as u64).sum();
+    let total_steps = outer * meta.iters;
+
+    // native reference
+    let mut engine = squeeze::ca::build(
+        &spec,
+        &squeeze::ca::EngineConfig {
+            kind: EngineKind::Squeeze { rho: 1, tensor: false },
+            r: meta.r,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: squeeze::util::pool::default_workers(),
+        },
+    );
+    let t = Timer::start();
+    for _ in 0..total_steps {
+        engine.step();
+    }
+    let native_s = t.elapsed_s();
+    let native_pop = engine.population();
+
+    // exact state agreement, not just population
+    for idx in 0..cells {
+        let pjrt_alive = out[idx as usize] > 0.5;
+        let native_alive = engine.cell(idx) == 1;
+        if pjrt_alive != native_alive {
+            return Err(format!("state mismatch at compact idx {idx}"));
+        }
+    }
+    Ok(format!(
+        "e2e OK: {name} × {total_steps} steps  PJRT {} ({:.3e} upd/s)  native {}  population {pjrt_pop} == {native_pop}",
+        human_secs(pjrt_s),
+        (cells * total_steps as u64) as f64 / pjrt_s,
+        human_secs(native_s),
+    ))
+}
+
+fn cmd_fig12_13(args: &Args) -> Result<(), String> {
+    let spec = catalog::sierpinski_triangle();
+    let rhos = args
+        .get_u32_list("rhos", &[1, 2, 4, 8, 16, 32])
+        .map_err(|e| e.to_string())?;
+    let r_lo = args.get_u32("r-min", 4).map_err(|e| e.to_string())?;
+    let r_hi = args.get_u32("r-max", 11).map_err(|e| e.to_string())?;
+    let workers = args
+        .get_u64("workers", squeeze::util::pool::default_workers() as u64)
+        .map_err(|e| e.to_string())? as usize;
+    let cap = args
+        .get_u64("max-embedding-gb", 8)
+        .map_err(|e| e.to_string())?
+        * (1 << 30);
+    let opts = BenchOpts::sweep().from_env();
+    let pts = figures::fig12(&spec, &rhos, r_lo, r_hi, workers, cap, &opts)
+        .map_err(|e| e.to_string())?;
+    figures::fig13(&pts).map_err(|e| e.to_string())
+}
+
+fn cmd_fig14(args: &Args) -> Result<(), String> {
+    let r_lo = args.get_u32("r-min", 6).map_err(|e| e.to_string())?;
+    let r_hi = args.get_u32("r-max", 16).map_err(|e| e.to_string())?;
+    figures::fig14_modeled(r_lo, r_hi, 0.6).map_err(|e| e.to_string())?;
+    if !args.flag("no-measured") {
+        let spec = catalog::sierpinski_triangle();
+        let opts = BenchOpts::sweep().from_env();
+        figures::fig14_measured(
+            &spec,
+            r_lo.min(10),
+            r_hi.min(10),
+            16,
+            squeeze::util::pool::default_workers(),
+            &opts,
+        )
+        .map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<(), String> {
+    let spec = catalog::sierpinski_triangle();
+    let r = args.get_u32("r", 16).map_err(|e| e.to_string())?;
+    figures::table2(&spec, r, &[1, 2, 4, 8, 16, 32]).map_err(|e| e.to_string())
+}
+
+fn cmd_perf(args: &Args) -> Result<(), String> {
+    let r = args.get_u32("r", 12).map_err(|e| e.to_string())?;
+    let spec = catalog::sierpinski_triangle();
+    let ctx = MapCtx::new(&spec, r);
+    let samples = 2_000_000u64;
+    let mut prng = Prng::new(7);
+    let idxs: Vec<u64> = (0..samples)
+        .map(|_| prng.below(ctx.compact.area()))
+        .collect();
+
+    // λ throughput
+    let t = Timer::start();
+    let mut acc = 0u64;
+    for &i in &idxs {
+        let e = lambda_linear(&ctx, i);
+        acc = acc.wrapping_add(e.x as u64 + e.y as u64);
+    }
+    let lam_s = t.elapsed_s();
+    // ν throughput
+    let pts: Vec<Coord> = idxs.iter().map(|&i| lambda_linear(&ctx, i)).collect();
+    let t = Timer::start();
+    let mut acc2 = 0u64;
+    for &e in &pts {
+        if let Some(c) = nu(&ctx, e) {
+            acc2 = acc2.wrapping_add(c.x as u64);
+        }
+    }
+    let nu_s = t.elapsed_s();
+    std::hint::black_box((acc, acc2));
+    println!(
+        "maps at r={r}: λ {:.1} Meval/s, ν {:.1} Meval/s (single thread)",
+        samples as f64 / lam_s / 1e6,
+        samples as f64 / nu_s / 1e6
+    );
+
+    // step throughput per engine
+    let opts = BenchOpts::sweep().from_env();
+    for kind in [
+        EngineKind::Bb,
+        EngineKind::Lambda,
+        EngineKind::Squeeze { rho: 1, tensor: false },
+        EngineKind::Squeeze { rho: 16, tensor: false },
+    ] {
+        let needs_embedding = matches!(kind, EngineKind::Bb | EngineKind::Lambda);
+        let r_eff = if needs_embedding { r.min(12) } else { r };
+        let p = squeeze::harness::measure(
+            &spec,
+            kind,
+            r_eff,
+            squeeze::util::pool::default_workers(),
+            &opts,
+        );
+        println!(
+            "{:<16} r={:<2} {:>12}/step  {:>10.3e} upd/s  mem {}",
+            p.engine,
+            p.r,
+            human_secs(p.per_step_s),
+            p.cells as f64 / p.per_step_s,
+            human_bytes(p.memory_bytes)
+        );
+    }
+    Ok(())
+}

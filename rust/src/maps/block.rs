@@ -1,0 +1,262 @@
+//! Block-level Squeeze (paper §3.5).
+//!
+//! Instead of mapping thread coordinates, map *block* coordinates: a block
+//! of `ρ × ρ` cells becomes one coarse cell of a level
+//! `r_b = r − log_s ρ` fractal. Each compact block stores its `ρ × ρ`
+//! expanded micro-tile (an embedded micro-fractal, holes included), so
+//! space is compacted at block granularity — constant per-block overhead —
+//! while intra-block neighbor access is plain 2D indexing and only
+//! block-boundary accesses go through λ/ν on block coordinates.
+
+use super::ctx::MapCtx;
+use super::{lambda, nu};
+use crate::fractal::{Coord, FractalSpec};
+
+/// Context for block-level Squeeze at block size `ρ` (must be a power of
+/// the fractal's `s`, e.g. ρ ∈ {1,2,4,8,16,32} for s=2).
+#[derive(Clone, Debug)]
+pub struct BlockCtx {
+    /// Maps at the coarse level `r_b`.
+    pub coarse: MapCtx,
+    /// Block side ρ.
+    pub rho: u32,
+    /// Levels inside a block: `log_s ρ`.
+    pub intra_levels: u32,
+    /// ρ×ρ membership mask of the level-`log_s ρ` micro-fractal
+    /// (row-major; 1 = fractal cell). Constant, shared by every block.
+    pub micro_mask: Vec<u8>,
+    /// Full fractal level `r = r_b + log_s ρ`.
+    pub r: u32,
+    /// Expanded side at full resolution.
+    pub n: u32,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum BlockError {
+    /// ρ is not a power of s.
+    RhoNotPowerOfS { rho: u32, s: u32 },
+    /// ρ exceeds the whole fractal (`log_s ρ > r`).
+    RhoTooLarge { rho: u32, r: u32 },
+}
+
+impl std::fmt::Display for BlockError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for BlockError {}
+
+/// `log_s ρ` if ρ is an exact power of s.
+pub fn intra_levels_for(rho: u32, s: u32) -> Option<u32> {
+    let mut v = 1u64;
+    let mut l = 0u32;
+    while v < rho as u64 {
+        v *= s as u64;
+        l += 1;
+    }
+    (v == rho as u64).then_some(l)
+}
+
+impl BlockCtx {
+    pub fn new(spec: &FractalSpec, r: u32, rho: u32) -> Result<BlockCtx, BlockError> {
+        let intra = intra_levels_for(rho, spec.s).ok_or(BlockError::RhoNotPowerOfS {
+            rho,
+            s: spec.s,
+        })?;
+        if intra > r {
+            return Err(BlockError::RhoTooLarge { rho, r });
+        }
+        let rb = r - intra;
+        let coarse = MapCtx::new(spec, rb);
+        // Rasterize the micro-fractal once (level log_s ρ, side ρ).
+        let mut micro_mask = vec![0u8; (rho as u64 * rho as u64) as usize];
+        for y in 0..rho {
+            for x in 0..rho {
+                if spec.contains(Coord::new(x, y), intra) {
+                    micro_mask[(y * rho + x) as usize] = 1;
+                }
+            }
+        }
+        let n = coarse.n.checked_mul(rho).expect("n overflows u32");
+        Ok(BlockCtx {
+            coarse,
+            rho,
+            intra_levels: intra,
+            micro_mask,
+            r,
+            n,
+        })
+    }
+
+    /// Coarse (block-level) fractal cell count `k^{r_b}`.
+    pub fn blocks(&self) -> u64 {
+        self.coarse.spec.cells(self.coarse.r)
+    }
+
+    /// Stored cells: every compact block holds a full ρ×ρ micro-tile.
+    pub fn stored_cells(&self) -> u64 {
+        self.blocks() * (self.rho as u64 * self.rho as u64)
+    }
+
+    /// Cells inside one micro-tile that are fractal cells: `k^{log_s ρ}`.
+    pub fn micro_cells(&self) -> u64 {
+        self.coarse.spec.cells(self.intra_levels)
+    }
+
+    /// Split a full-resolution expanded coordinate into (block, intra).
+    #[inline]
+    pub fn split(&self, e: Coord) -> (Coord, u32, u32) {
+        (
+            Coord::new(e.x / self.rho, e.y / self.rho),
+            e.x % self.rho,
+            e.y % self.rho,
+        )
+    }
+
+    /// Is the intra-tile offset a micro-fractal cell?
+    #[inline]
+    pub fn intra_on_fractal(&self, ix: u32, iy: u32) -> bool {
+        self.micro_mask[(iy * self.rho + ix) as usize] != 0
+    }
+
+    /// Full-resolution membership = coarse membership × micro membership.
+    pub fn on_fractal(&self, e: Coord) -> bool {
+        if e.x >= self.n || e.y >= self.n {
+            return false;
+        }
+        let (eb, ix, iy) = self.split(e);
+        self.intra_on_fractal(ix, iy) && nu::on_fractal(&self.coarse, eb)
+    }
+
+    /// Storage slot of a full-resolution expanded coordinate: the compact
+    /// block index (row-major over the coarse compact extent) × ρ² plus the
+    /// intra offset. `None` when `e` is not a fractal cell.
+    pub fn storage_index(&self, e: Coord) -> Option<u64> {
+        if e.x >= self.n || e.y >= self.n {
+            return None;
+        }
+        let (eb, ix, iy) = self.split(e);
+        if !self.intra_on_fractal(ix, iy) {
+            return None;
+        }
+        let cb = nu::nu(&self.coarse, eb)?;
+        let block_idx = cb.linear(self.coarse.compact.w);
+        Some(block_idx * (self.rho as u64 * self.rho as u64) + (iy * self.rho + ix) as u64)
+    }
+
+    /// Expanded coordinate of a storage slot (inverse of
+    /// [`BlockCtx::storage_index`] on fractal slots).
+    pub fn expanded_of_slot(&self, slot: u64) -> Coord {
+        let tile = self.rho as u64 * self.rho as u64;
+        let block_idx = slot / tile;
+        let intra = (slot % tile) as u32;
+        let cb = Coord::from_linear(block_idx, self.coarse.compact.w);
+        let eb = lambda::lambda(&self.coarse, cb);
+        Coord::new(
+            eb.x * self.rho + intra % self.rho,
+            eb.y * self.rho + intra / self.rho,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn rho_validation() {
+        let spec = catalog::sierpinski_triangle();
+        assert!(BlockCtx::new(&spec, 6, 3).is_err()); // 3 not a power of 2
+        assert!(BlockCtx::new(&spec, 2, 8).is_err()); // log2(8) > 2
+        assert!(BlockCtx::new(&spec, 6, 4).is_ok());
+        let spec3 = catalog::vicsek();
+        assert!(BlockCtx::new(&spec3, 4, 9).is_ok()); // 9 = 3^2
+        assert!(BlockCtx::new(&spec3, 4, 4).is_err());
+    }
+
+    #[test]
+    fn rho_one_degenerates_to_thread_level() {
+        let spec = catalog::sierpinski_triangle();
+        let b = BlockCtx::new(&spec, 5, 1).unwrap();
+        assert_eq!(b.coarse.r, 5);
+        assert_eq!(b.stored_cells(), spec.cells(5));
+        assert_eq!(b.micro_cells(), 1);
+    }
+
+    #[test]
+    fn storage_counts_match_paper_formula() {
+        // Table 2 model: stored cells = k^{r - log2 ρ} · ρ²
+        let spec = catalog::sierpinski_triangle();
+        for (rho, intra) in [(1u32, 0u32), (2, 1), (4, 2), (8, 3)] {
+            let b = BlockCtx::new(&spec, 8, rho).unwrap();
+            assert_eq!(b.intra_levels, intra);
+            assert_eq!(
+                b.stored_cells(),
+                spec.cells(8 - intra) * (rho as u64).pow(2)
+            );
+        }
+    }
+
+    #[test]
+    fn membership_matches_full_resolution() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 6;
+        let full = MapCtx::new(&spec, r);
+        for rho in [1u32, 2, 4, 8] {
+            let b = BlockCtx::new(&spec, r, rho).unwrap();
+            assert_eq!(b.n, full.n);
+            for y in 0..b.n {
+                for x in 0..b.n {
+                    let e = Coord::new(x, y);
+                    assert_eq!(
+                        b.on_fractal(e),
+                        nu::on_fractal(&full, e),
+                        "rho={rho} {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_index_roundtrip_and_injective() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 6;
+        for rho in [1u32, 2, 4] {
+            let b = BlockCtx::new(&spec, r, rho).unwrap();
+            let mut seen = std::collections::HashSet::new();
+            for y in 0..b.n {
+                for x in 0..b.n {
+                    let e = Coord::new(x, y);
+                    if let Some(slot) = b.storage_index(e) {
+                        assert!(slot < b.stored_cells(), "slot bound");
+                        assert!(seen.insert(slot), "slot collision at {e}");
+                        assert_eq!(b.expanded_of_slot(slot), e, "roundtrip rho={rho}");
+                    }
+                }
+            }
+            assert_eq!(seen.len() as u64, spec.cells(r));
+        }
+    }
+
+    #[test]
+    fn vicsek_block_level_works_with_s3() {
+        let spec = catalog::vicsek();
+        let b = BlockCtx::new(&spec, 4, 3).unwrap();
+        assert_eq!(b.coarse.r, 3);
+        assert_eq!(b.stored_cells(), spec.cells(3) * 9);
+        // spot-check roundtrip
+        let mut count = 0;
+        for y in 0..b.n {
+            for x in 0..b.n {
+                if let Some(slot) = b.storage_index(Coord::new(x, y)) {
+                    assert_eq!(b.expanded_of_slot(slot), Coord::new(x, y));
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, spec.cells(4));
+    }
+}

@@ -1,0 +1,116 @@
+//! Precomputed per-(fractal, level) context for the space maps.
+//!
+//! Both maps are `O(r) = O(log_s n)` loops over scale levels; everything
+//! that depends only on `(k, s, r)` — the `s^{μ-1}` scale factors (λ,
+//! Eq. 3) and the `Δ^ν_μ = k^⌊(μ-1)/2⌋` compact offsets (ν, Eq. 7) — is
+//! precomputed here once and shared by every evaluation of a simulation
+//! step. This is the hot-path struct: engines hold one `MapCtx` per run.
+
+use crate::fractal::{Extent, FractalSpec};
+
+/// Precomputed tables for λ/ν evaluation at a fixed level `r`.
+#[derive(Clone, Debug)]
+pub struct MapCtx {
+    pub spec: FractalSpec,
+    pub r: u32,
+    /// Expanded side `n = s^r`.
+    pub n: u32,
+    /// Compact extent (`k^⌊r/2⌋ × k^⌈r/2⌉`).
+    pub compact: Extent,
+    /// `s^{μ-1}` for μ = 1..=r (λ's Eq. 3 scale factors).
+    pub s_pow: Vec<u32>,
+    /// `Δ^ν_μ = k^⌊(μ-1)/2⌋` for μ = 1..=r (ν's Eq. 7 offsets).
+    pub dnu: Vec<u32>,
+    /// Replica placement `τ` copied from the spec, as u32 pairs.
+    pub tau: Vec<(u32, u32)>,
+    /// Flattened `s×s` inverse table; `u8::MAX` marks holes (branch-free
+    /// hot-path encoding of `Option<u8>`).
+    pub hnu_flat: Vec<u8>,
+    /// True when `s` is a power of two (bit-trick fast paths apply).
+    pub s_pow2: bool,
+    /// log2(s) when `s_pow2`.
+    pub s_log2: u32,
+}
+
+/// Hole marker in `hnu_flat`.
+pub const HOLE: u8 = u8::MAX;
+
+impl MapCtx {
+    pub fn new(spec: &FractalSpec, r: u32) -> MapCtx {
+        assert!(
+            r <= spec.max_level_u32(),
+            "level {r} overflows u32 coordinates for {}",
+            spec.name
+        );
+        let n = spec.n(r) as u32;
+        let mut s_pow = Vec::with_capacity(r as usize);
+        let mut dnu = Vec::with_capacity(r as usize);
+        for mu in 1..=r {
+            s_pow.push(crate::fractal::geometry::upow(spec.s, mu - 1) as u32);
+            dnu.push(crate::fractal::geometry::upow(spec.k, (mu - 1) / 2) as u32);
+        }
+        let hnu_flat = spec
+            .hnu
+            .iter()
+            .map(|o| o.unwrap_or(HOLE))
+            .collect::<Vec<u8>>();
+        let tau = spec
+            .tau
+            .iter()
+            .map(|&(x, y)| (x as u32, y as u32))
+            .collect();
+        MapCtx {
+            r,
+            n,
+            compact: spec.compact_extent(r),
+            s_pow,
+            dnu,
+            tau,
+            hnu_flat,
+            s_pow2: spec.s.is_power_of_two(),
+            s_log2: spec.s.trailing_zeros(),
+            spec: spec.clone(),
+        }
+    }
+
+    /// `H_ν[θ]` lookup on the flattened table.
+    #[inline(always)]
+    pub fn hnu(&self, tx: u32, ty: u32) -> u8 {
+        // SAFETY-free fast path: tx, ty < s by construction of callers.
+        self.hnu_flat[(ty * self.spec.s + tx) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn precomputed_tables_match_definitions() {
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 6);
+        assert_eq!(ctx.n, 64);
+        assert_eq!(ctx.s_pow, vec![1, 2, 4, 8, 16, 32]);
+        // Δ^ν: μ=1..6 -> k^0,k^0,k^1,k^1,k^2,k^2
+        assert_eq!(ctx.dnu, vec![1, 1, 3, 3, 9, 9]);
+        assert!(ctx.s_pow2);
+        assert_eq!(ctx.s_log2, 1);
+    }
+
+    #[test]
+    fn hole_marker() {
+        let spec = catalog::sierpinski_carpet();
+        let ctx = MapCtx::new(&spec, 3);
+        assert_eq!(ctx.hnu(1, 1), HOLE);
+        assert_ne!(ctx.hnu(0, 0), HOLE);
+        assert!(!ctx.s_pow2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overflowing_level() {
+        let spec = catalog::sierpinski_triangle();
+        let _ = MapCtx::new(&spec, 33);
+    }
+}

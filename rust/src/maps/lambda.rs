@@ -1,0 +1,200 @@
+//! `λ(ω)`: compact space → expanded embedded space (paper §3.3, Eqs. 2–5).
+//!
+//! Convention note (DESIGN.md §4): the paper's Eq. 5 (inherited from the
+//! λ paper) and its new ν filters (Eqs. 8–10) disagree on which axis holds
+//! odd-level digits; we adopt the ν convention — odd μ digits live in the
+//! compact *y* coordinate, even μ digits in *x* — and define λ as the exact
+//! inverse of ν. Property tests (`rust/tests/proptests.rs`) enforce
+//! `ν(λ(c)) = c` on every compact cell.
+//!
+//! A compact coordinate `(c_x, c_y)` encodes the replica digit string
+//! `b_1..b_r` base-k (y holds b_1, b_3, …; x holds b_2, b_4, …). The
+//! expanded coordinate accumulates the placement offsets
+//! `Σ_μ τ[b_μ] · s^{μ-1}` (Eq. 2–3).
+
+use super::ctx::MapCtx;
+use crate::fractal::Coord;
+
+/// Thread-level λ: map one compact coordinate to expanded space.
+///
+/// Cost: `O(r)` scalar; the paper's block-parallel reduction (and our MMA
+/// encoding in [`super::mma`]) brings the span to `O(log_2 r) =
+/// O(log_2 log_s n)`.
+#[inline]
+pub fn lambda(ctx: &MapCtx, c: Coord) -> Coord {
+    debug_assert!(ctx.compact.contains(c), "compact coord out of range");
+    // §Perf iteration 2: monomorphize the digit loop on the catalog's k
+    // values so LLVM strength-reduces `% k` / `/ k` into multiply-shift
+    // sequences (k is a runtime value in the generic path, which forces a
+    // hardware divide per level per coordinate).
+    match ctx.spec.k {
+        3 => lambda_k::<3>(ctx, c),
+        4 => lambda_k::<4>(ctx, c),
+        5 => lambda_k::<5>(ctx, c),
+        7 => lambda_k::<7>(ctx, c),
+        8 => lambda_k::<8>(ctx, c),
+        9 => lambda_k::<9>(ctx, c),
+        _ => lambda_generic(ctx, c, ctx.spec.k),
+    }
+}
+
+#[inline(always)]
+fn lambda_k<const K: u32>(ctx: &MapCtx, c: Coord) -> Coord {
+    lambda_generic(ctx, c, K)
+}
+
+#[inline(always)]
+fn lambda_generic(ctx: &MapCtx, c: Coord, k: u32) -> Coord {
+    let mut cx = c.x;
+    let mut cy = c.y;
+    let mut ex: u32 = 0;
+    let mut ey: u32 = 0;
+    for mu in 1..=ctx.r {
+        // digit b_μ: odd μ comes from y, even μ from x (ν convention)
+        let b = if mu & 1 == 1 {
+            let d = cy % k;
+            cy /= k;
+            d
+        } else {
+            let d = cx % k;
+            cx /= k;
+            d
+        };
+        let (tx, ty) = ctx.tau[b as usize];
+        let scale = ctx.s_pow[(mu - 1) as usize];
+        ex += tx * scale;
+        ey += ty * scale;
+    }
+    Coord::new(ex, ey)
+}
+
+/// λ over a compact linear index (row-major in the compact extent).
+#[inline]
+pub fn lambda_linear(ctx: &MapCtx, idx: u64) -> Coord {
+    lambda(ctx, Coord::from_linear(idx, ctx.compact.w))
+}
+
+/// Precomputed separable λ (§Perf iteration 5).
+///
+/// λ splits by digit parity: odd-μ digits come only from `c_y`, even-μ
+/// digits only from `c_x`, so
+/// `λ(c) = X[c_x] + Y[c_y]` with two tables of `k^⌊r/2⌋` and `k^⌈r/2⌉`
+/// 2D offsets — tiny (they are the *sides* of the compact rectangle, not
+/// its area), static per run, and they turn the per-cell λ of the hot
+/// loop into one add. The per-cell `O(log n)` map is still exercised by
+/// table construction and by ν.
+#[derive(Clone, Debug)]
+pub struct LambdaTable {
+    /// Signed: x_part folds in `-λ(0,0)`, which can dip below zero per
+    /// component for fractals with `τ[0] ≠ (0,0)` (e.g. Vicsek).
+    pub x_part: Vec<(i32, i32)>,
+    pub y_part: Vec<(u32, u32)>,
+    w: u32,
+}
+
+impl LambdaTable {
+    pub fn new(ctx: &MapCtx) -> LambdaTable {
+        let w = ctx.compact.w;
+        let h = ctx.compact.h;
+        // λ(x,0) + λ(0,y) double-counts λ(0,0) (the all-zero digit string
+        // contributes τ[0]·Σ s^{μ-1}, nonzero for fractals with
+        // τ[0] ≠ (0,0), e.g. Vicsek). Fold the subtraction into x_part.
+        let zero = lambda(ctx, Coord::new(0, 0));
+        let x_part = (0..w)
+            .map(|x| {
+                let e = lambda(ctx, Coord::new(x, 0));
+                (e.x as i32 - zero.x as i32, e.y as i32 - zero.y as i32)
+            })
+            .collect();
+        let y_part = (0..h)
+            .map(|y| {
+                let e = lambda(ctx, Coord::new(0, y));
+                (e.x, e.y)
+            })
+            .collect();
+        LambdaTable { x_part, y_part, w }
+    }
+
+    #[inline(always)]
+    pub fn eval(&self, c: Coord) -> Coord {
+        let (ax, ay) = self.x_part[c.x as usize];
+        let (bx, by) = self.y_part[c.y as usize];
+        Coord::new((ax + bx as i32) as u32, (ay + by as i32) as u32)
+    }
+
+    #[inline(always)]
+    pub fn eval_linear(&self, idx: u64) -> Coord {
+        self.eval(Coord::from_linear(idx, self.w))
+    }
+
+    /// Bytes held by the tables (for engine memory accounting).
+    pub fn bytes(&self) -> u64 {
+        ((self.x_part.len() + self.y_part.len()) * std::mem::size_of::<(u32, u32)>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::{catalog, expanded};
+    use crate::maps::ctx::MapCtx;
+
+    #[test]
+    fn level_zero_is_identity_on_origin() {
+        let ctx = MapCtx::new(&catalog::sierpinski_triangle(), 0);
+        assert_eq!(lambda(&ctx, Coord::new(0, 0)), Coord::new(0, 0));
+    }
+
+    #[test]
+    fn level_one_sierpinski_matches_tau() {
+        let ctx = MapCtx::new(&catalog::sierpinski_triangle(), 1);
+        // compact space is 1 × 3 (w=k^0, h=k^1); digit b_1 = c_y
+        assert_eq!(lambda(&ctx, Coord::new(0, 0)), Coord::new(0, 0));
+        assert_eq!(lambda(&ctx, Coord::new(0, 1)), Coord::new(0, 1));
+        assert_eq!(lambda(&ctx, Coord::new(0, 2)), Coord::new(1, 1));
+    }
+
+    #[test]
+    fn image_is_exactly_the_fractal_set() {
+        // λ over all compact cells must hit every fractal cell exactly once.
+        for spec in catalog::all() {
+            let r = 3;
+            let ctx = MapCtx::new(&spec, r);
+            let bm = expanded::rasterize_scan(&spec, r);
+            let mut seen = std::collections::HashSet::new();
+            let ext = ctx.compact;
+            for idx in 0..ext.area() {
+                let e = lambda_linear(&ctx, idx);
+                assert!(bm.get(e), "{}: λ({idx}) = {e} is not a fractal cell", spec.name);
+                assert!(seen.insert(e), "{}: λ not injective at {e}", spec.name);
+            }
+            assert_eq!(seen.len() as u64, spec.cells(r));
+        }
+    }
+
+    #[test]
+    fn lambda_table_matches_lambda_everywhere() {
+        for spec in catalog::all() {
+            for r in 0..=5 {
+                let ctx = MapCtx::new(&spec, r);
+                let table = super::LambdaTable::new(&ctx);
+                for idx in 0..ctx.compact.area() {
+                    let c = Coord::from_linear(idx, ctx.compact.w);
+                    assert_eq!(table.eval(c), lambda(&ctx, c), "{} r={r} {c}", spec.name);
+                    assert_eq!(table.eval_linear(idx), lambda(&ctx, c));
+                }
+                assert!(table.bytes() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_stays_in_embedding() {
+        let spec = catalog::vicsek();
+        let ctx = MapCtx::new(&spec, 4);
+        for idx in 0..ctx.compact.area() {
+            let e = lambda_linear(&ctx, idx);
+            assert!((e.x as u64) < spec.n(4) && (e.y as u64) < spec.n(4));
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Tensor-core (MMA) encodings of the space maps (paper §3.6,
+//! Eqs. 14–17).
+//!
+//! Both maps are sums of products over scale levels, so a batch of
+//! evaluations becomes one 16×16×16 matrix-multiply-accumulate:
+//!
+//! - **ν**: `A` carries `Δ^ν_μ·f_x(μ)` in row 0 and `Δ^ν_μ·f_y(μ)` in
+//!   row 1 (Eq. 15); `B` carries one column per point with the replica
+//!   digits `H_ν[θ_μ]` (Eq. 16, extended from 1 to 16 columns — the paper
+//!   groups up to 8 neighbor maps per fragment, we fill all 16 columns).
+//!   `D = A·B` then holds `ν_x` of every point in row 0 and `ν_y` in
+//!   row 1.
+//! - **λ**: row 0 of `A` carries the scale factors `s^{μ-1}`; `B` packs
+//!   two columns per point (`τ_x[b_μ]` and `τ_y[b_μ]`), so one fragment
+//!   maps 8 points.
+//!
+//! Digit extraction (`θ_μ`, `b_μ`) is elementwise index arithmetic and
+//! stays on "CUDA cores" (scalar code here, the VPU in the Pallas kernel).
+//! The fragment feeds the [`crate::tcu`] simulator; `MmaMode::Fp16`
+//! reproduces the paper's FP16×FP16+FP32 configuration, including its
+//! exactness limit (Δ ≤ 2048 ⇒ thread-level r ≤ 14 for k=3; the paper's
+//! block-level ρ=16/32 keeps Δ at 3^5 = 243, well inside).
+
+use super::ctx::{MapCtx, HOLE};
+use crate::fractal::Coord;
+use crate::tcu::{mma, Fragment, MmaMode, FRAG};
+
+/// Max levels one fragment can encode.
+pub const MAX_MMA_LEVELS: u32 = FRAG as u32;
+
+/// Largest level `r` at which the FP16×FP16+FP32 configuration is exact
+/// for this fractal: every λ operand `s^{μ-1}` and every ν operand
+/// `Δ^ν_μ = k^⌊(μ-1)/2⌋` must be an integer binary16 represents exactly
+/// (all ≤ 2048, plus sparse larger values like powers of two).
+///
+/// Examples: Sierpinski triangle (k=3, s=2) → r=13 (3^6=729 ok, 3^7=2187
+/// not); carpet (k=8, s=3) → r=7 (3^7 breaks λ); Vicsek (k=5, s=3) → r=7.
+/// This is why the paper only uses tensor cores at block level (ρ=16/32
+/// keeps `r_b` small); see DESIGN.md §Hardware-Adaptation.
+pub fn fp16_exact_max_level(spec: &crate::fractal::FractalSpec) -> u32 {
+    use crate::tcu::fp16::f16_exact_int;
+    let mut r = 0u32;
+    while r < MAX_MMA_LEVELS {
+        let mu = r + 1;
+        let lambda_factor = (spec.s as f64).powi(mu as i32 - 1);
+        let nu_delta = (spec.k as f64).powi(((mu - 1) / 2) as i32);
+        if !f16_exact_int(lambda_factor) || !f16_exact_int(nu_delta) {
+            break;
+        }
+        r = mu;
+    }
+    r
+}
+
+/// Build ν's constant `A` fragment (Eq. 15) for a map context.
+pub fn nu_a_fragment(ctx: &MapCtx) -> Fragment {
+    assert!(ctx.r <= MAX_MMA_LEVELS, "MMA path supports r ≤ 16");
+    let mut a = Fragment::zero();
+    for mu in 1..=ctx.r {
+        let delta = ctx.dnu[(mu - 1) as usize] as f32;
+        // f_x(μ) = (μ-1) mod 2 (even μ), f_y(μ) = μ mod 2 (odd μ): Eqs. 9–10
+        let fx = ((mu - 1) % 2) as f32;
+        let fy = (mu % 2) as f32;
+        a.set(0, (mu - 1) as usize, delta * fx);
+        a.set(1, (mu - 1) as usize, delta * fy);
+    }
+    a
+}
+
+/// Build λ's constant `A` fragment: row 0 = `s^{μ-1}`.
+pub fn lambda_a_fragment(ctx: &MapCtx) -> Fragment {
+    assert!(ctx.r <= MAX_MMA_LEVELS, "MMA path supports r ≤ 16");
+    let mut a = Fragment::zero();
+    for mu in 1..=ctx.r {
+        a.set(0, (mu - 1) as usize, ctx.s_pow[(mu - 1) as usize] as f32);
+    }
+    a
+}
+
+/// ν over a batch of up to 16 expanded points via one MMA (plus scalar
+/// digit extraction). Returns one `Option<Coord>` per input point.
+pub fn nu_batch_mma(
+    ctx: &MapCtx,
+    a: &Fragment,
+    points: &[Coord],
+    mode: MmaMode,
+) -> Vec<Option<Coord>> {
+    assert!(points.len() <= FRAG);
+    let s = ctx.spec.s;
+    let mut b = Fragment::zero();
+    let mut valid = [true; FRAG];
+    for (col, &e) in points.iter().enumerate() {
+        if e.x >= ctx.n || e.y >= ctx.n {
+            valid[col] = false;
+            continue;
+        }
+        let mut x = e.x;
+        let mut y = e.y;
+        for mu in 1..=ctx.r {
+            let h = ctx.hnu(x % s, y % s);
+            x /= s;
+            y /= s;
+            if h == HOLE {
+                valid[col] = false;
+                break;
+            }
+            b.set((mu - 1) as usize, col, h as f32);
+        }
+    }
+    let d = mma(a, &b, &Fragment::zero(), mode);
+    points
+        .iter()
+        .enumerate()
+        .map(|(col, _)| {
+            valid[col].then(|| Coord::new(d.get(0, col) as u32, d.get(1, col) as u32))
+        })
+        .collect()
+}
+
+/// λ over a batch of up to 8 compact points via one MMA.
+pub fn lambda_batch_mma(
+    ctx: &MapCtx,
+    a: &Fragment,
+    points: &[Coord],
+    mode: MmaMode,
+) -> Vec<Coord> {
+    assert!(points.len() * 2 <= FRAG);
+    let k = ctx.spec.k;
+    let mut b = Fragment::zero();
+    for (p, &c) in points.iter().enumerate() {
+        debug_assert!(ctx.compact.contains(c));
+        let mut cx = c.x;
+        let mut cy = c.y;
+        for mu in 1..=ctx.r {
+            let digit = if mu & 1 == 1 {
+                let d = cy % k;
+                cy /= k;
+                d
+            } else {
+                let d = cx % k;
+                cx /= k;
+                d
+            };
+            let (tx, ty) = ctx.tau[digit as usize];
+            b.set((mu - 1) as usize, 2 * p, tx as f32);
+            b.set((mu - 1) as usize, 2 * p + 1, ty as f32);
+        }
+    }
+    let d = mma(a, &b, &Fragment::zero(), mode);
+    (0..points.len())
+        .map(|p| Coord::new(d.get(0, 2 * p) as u32, d.get(0, 2 * p + 1) as u32))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+    use crate::maps::{lambda::lambda, nu::nu};
+
+    #[test]
+    fn nu_mma_matches_scalar_all_catalog() {
+        for spec in catalog::all() {
+            let r = 3;
+            let ctx = MapCtx::new(&spec, r);
+            let a = nu_a_fragment(&ctx);
+            let n = ctx.n;
+            let points: Vec<Coord> = (0..n)
+                .flat_map(|y| (0..n).map(move |x| Coord::new(x, y)))
+                .collect();
+            for chunk in points.chunks(FRAG) {
+                let got = nu_batch_mma(&ctx, &a, chunk, MmaMode::Fp16);
+                for (i, &e) in chunk.iter().enumerate() {
+                    assert_eq!(got[i], nu(&ctx, e), "{} {e}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_mma_matches_scalar() {
+        for spec in catalog::all() {
+            let r = 4;
+            let ctx = MapCtx::new(&spec, r);
+            let a = lambda_a_fragment(&ctx);
+            let compact: Vec<Coord> = (0..ctx.compact.area())
+                .map(|i| Coord::from_linear(i, ctx.compact.w))
+                .collect();
+            for chunk in compact.chunks(FRAG / 2) {
+                let got = lambda_batch_mma(&ctx, &a, chunk, MmaMode::Fp16);
+                for (i, &c) in chunk.iter().enumerate() {
+                    assert_eq!(got[i], lambda(&ctx, c), "{} {c}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_exactness_cliff_at_thread_level_r16() {
+        // DESIGN.md §Hardware-Adaptation: Sierpinski r=16 ⇒ Δ^ν up to
+        // 3^7 = 2187 > 2048: the FP16 path must disagree with scalar for
+        // some cell, while F32 stays exact. This pins why the paper only
+        // used TCU at block level.
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 16);
+        let a = nu_a_fragment(&ctx);
+        // A cell whose μ=15 digit is nonzero: walk a known fractal point.
+        // Take compact cell with c_y having digit 2 at position 7 (μ=15):
+        let c = Coord::new(0, 2 * 3u32.pow(7));
+        let e = lambda(&ctx, c);
+        let f32_res = nu_batch_mma(&ctx, &a, &[e], MmaMode::F32)[0];
+        assert_eq!(f32_res, Some(c), "F32 MMA must stay exact");
+        let fp16_res = nu_batch_mma(&ctx, &a, &[e], MmaMode::Fp16)[0];
+        assert_ne!(fp16_res, Some(c), "FP16 MMA must hit the 2048 cliff");
+    }
+
+    #[test]
+    fn block_level_r12_is_fp16_safe() {
+        // ρ=16 on r=16 gives r_b=12: every Δ ≤ 3^5=243 — FP16 exact.
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 12);
+        let a = nu_a_fragment(&ctx);
+        let mut prng = crate::util::prng::Prng::new(0xF16);
+        for _ in 0..200 {
+            let idx = prng.below(ctx.compact.area());
+            let c = Coord::from_linear(idx, ctx.compact.w);
+            let e = lambda(&ctx, c);
+            assert_eq!(nu_batch_mma(&ctx, &a, &[e], MmaMode::Fp16)[0], Some(c));
+        }
+    }
+
+    #[test]
+    fn fp16_exactness_envelope_per_fractal() {
+        let levels: Vec<(String, u32)> = catalog::all()
+            .into_iter()
+            .map(|s| {
+                let l = fp16_exact_max_level(&s);
+                (s.name, l)
+            })
+            .collect();
+        // triangle: λ factors are powers of two (always exact); ν's
+        // Δ = 3^⌊(μ-1)/2⌋ needs the exponent ≤ 6 (3^7 = 2187 breaks),
+        // i.e. μ ≤ 14 ⇒ r = 14. Pin the envelope per fractal:
+        let get = |n: &str| levels.iter().find(|(a, _)| a == n).unwrap().1;
+        assert_eq!(get("sierpinski-triangle"), 14);
+        assert_eq!(get("sierpinski-carpet"), 7); // λ's 3^7 breaks at μ=8
+        assert_eq!(get("vicsek"), 7);
+        // and the property the envelope promises: MMA == scalar inside it
+        for spec in catalog::all() {
+            let r = fp16_exact_max_level(&spec).min(10);
+            let ctx = MapCtx::new(&spec, r);
+            let a = nu_a_fragment(&ctx);
+            let la = lambda_a_fragment(&ctx);
+            let mut prng = crate::util::prng::Prng::new(1);
+            for _ in 0..50 {
+                let c = Coord::from_linear(prng.below(ctx.compact.area()), ctx.compact.w);
+                let e = lambda(&ctx, c);
+                assert_eq!(
+                    lambda_batch_mma(&ctx, &la, &[c], MmaMode::Fp16)[0],
+                    e,
+                    "{} r={r}",
+                    spec.name
+                );
+                assert_eq!(
+                    nu_batch_mma(&ctx, &a, &[e], MmaMode::Fp16)[0],
+                    Some(c),
+                    "{} r={r}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_points_are_none() {
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 2);
+        let a = nu_a_fragment(&ctx);
+        let got = nu_batch_mma(
+            &ctx,
+            &a,
+            &[Coord::new(1, 0), Coord::new(0, 0), Coord::new(99, 0)],
+            MmaMode::Fp16,
+        );
+        assert_eq!(got[0], None); // hole
+        assert_eq!(got[1], Some(Coord::new(0, 0)));
+        assert_eq!(got[2], None); // out of range
+    }
+}

@@ -1,0 +1,14 @@
+//! The Squeeze space maps: `λ(ω)` (compact → expanded), `ν(ω)` (expanded →
+//! compact), their block-level forms, and their tensor-core MMA encodings.
+
+pub mod block;
+pub mod ctx;
+pub mod lambda;
+pub mod mma;
+pub mod nu;
+pub mod three_d;
+
+pub use block::BlockCtx;
+pub use ctx::MapCtx;
+pub use lambda::{lambda, lambda_linear};
+pub use nu::{nu, nu_unchecked, on_fractal};

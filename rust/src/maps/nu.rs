@@ -1,0 +1,226 @@
+//! `ν(ω)`: expanded embedded space → compact space (paper §3.4,
+//! Eqs. 6–13) — the paper's new map and the key to Squeeze.
+//!
+//! At each scale level μ the replica sub-position
+//! `θ_μ = (⌊e_x/s^{μ-1}⌋ mod s, ⌊e_y/s^{μ-1}⌋ mod s)` (Eq. 6, with the
+//! paper's typo `s^μ` in the divisor corrected to `s^{μ-1}`; see DESIGN.md)
+//! selects a replica index `b_μ = H_ν[θ_μ]`, and the compact offset
+//! `Δ^ν_μ = k^⌊(μ-1)/2⌋` (Eq. 7) accumulates into x for even μ and into y
+//! for odd μ (the `f_x/f_y` filters of Eqs. 8–10).
+//!
+//! ν doubles as the membership test: an expanded coordinate is on the
+//! fractal iff *every* `θ_μ` lands on a replica (no `H_ν` hole). The
+//! checked variant returns `None` for holes — exactly what a stencil needs
+//! to skip non-fractal neighbors.
+
+use super::ctx::{MapCtx, HOLE};
+use crate::fractal::Coord;
+
+/// Checked ν: `Some(compact)` if `e` is a fractal cell, `None` for holes
+/// or out-of-embedding coordinates.
+#[inline]
+pub fn nu(ctx: &MapCtx, e: Coord) -> Option<Coord> {
+    if e.x >= ctx.n || e.y >= ctx.n {
+        return None;
+    }
+    if ctx.s_pow2 {
+        return nu_pow2(ctx, e);
+    }
+    let s = ctx.spec.s;
+    let mut x = e.x;
+    let mut y = e.y;
+    let mut cx: u32 = 0;
+    let mut cy: u32 = 0;
+    for mu in 1..=ctx.r {
+        let (tx, ty) = (x % s, y % s);
+        x /= s;
+        y /= s;
+        let b = ctx.hnu(tx, ty);
+        if b == HOLE {
+            return None;
+        }
+        let delta = ctx.dnu[(mu - 1) as usize] * b as u32;
+        if mu & 1 == 1 {
+            cy += delta;
+        } else {
+            cx += delta;
+        }
+    }
+    Some(Coord::new(cx, cy))
+}
+
+/// ν fast path for `s` a power of two: θ extraction is shift/mask (no
+/// integer division in the hot loop — the §Perf iteration 1 change).
+#[inline]
+fn nu_pow2(ctx: &MapCtx, e: Coord) -> Option<Coord> {
+    debug_assert!(ctx.s_pow2);
+    let log2 = ctx.s_log2;
+    let mask = ctx.spec.s - 1;
+    let mut x = e.x;
+    let mut y = e.y;
+    let mut cx: u32 = 0;
+    let mut cy: u32 = 0;
+    let mut mu = 1u32;
+    while mu <= ctx.r {
+        let idx = ((y & mask) << log2) | (x & mask);
+        x >>= log2;
+        y >>= log2;
+        let b = ctx.hnu_flat[idx as usize];
+        if b == HOLE {
+            return None;
+        }
+        let delta = ctx.dnu[(mu - 1) as usize] * b as u32;
+        // odd μ accumulates into y, even μ into x
+        if mu & 1 == 1 {
+            cy += delta;
+        } else {
+            cx += delta;
+        }
+        mu += 1;
+    }
+    Some(Coord::new(cx, cy))
+}
+
+/// Unchecked ν for coordinates already known to be fractal cells (e.g. the
+/// output of λ). Holes would silently alias — debug asserts guard that.
+#[inline]
+pub fn nu_unchecked(ctx: &MapCtx, e: Coord) -> Coord {
+    debug_assert!(e.x < ctx.n && e.y < ctx.n);
+    let s = ctx.spec.s;
+    let mut x = e.x;
+    let mut y = e.y;
+    let mut cx: u32 = 0;
+    let mut cy: u32 = 0;
+    for mu in 1..=ctx.r {
+        let (tx, ty) = (x % s, y % s);
+        x /= s;
+        y /= s;
+        let b = ctx.hnu(tx, ty);
+        debug_assert_ne!(b, HOLE, "nu_unchecked on a hole at {e}");
+        let delta = ctx.dnu[(mu - 1) as usize] * b as u32;
+        if mu & 1 == 1 {
+            cy += delta;
+        } else {
+            cx += delta;
+        }
+    }
+    Coord::new(cx, cy)
+}
+
+/// Membership-only variant (no offset accumulation) — cheaper when only
+/// the fractal/hole decision is needed (BB engine's "skip holes").
+#[inline]
+pub fn on_fractal(ctx: &MapCtx, e: Coord) -> bool {
+    if e.x >= ctx.n || e.y >= ctx.n {
+        return false;
+    }
+    let s = ctx.spec.s;
+    if ctx.s_pow2 {
+        let log2 = ctx.s_log2;
+        let mask = s - 1;
+        let mut x = e.x;
+        let mut y = e.y;
+        for _ in 0..ctx.r {
+            if ctx.hnu_flat[(((y & mask) << log2) | (x & mask)) as usize] == HOLE {
+                return false;
+            }
+            x >>= log2;
+            y >>= log2;
+        }
+        return true;
+    }
+    let mut x = e.x;
+    let mut y = e.y;
+    for _ in 0..ctx.r {
+        if ctx.hnu(x % s, y % s) == HOLE {
+            return false;
+        }
+        x /= s;
+        y /= s;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+    use crate::maps::{ctx::MapCtx, lambda::lambda_linear};
+
+    #[test]
+    fn nu_inverts_lambda_exhaustively_small() {
+        for spec in catalog::all() {
+            for r in 0..=3 {
+                let ctx = MapCtx::new(&spec, r);
+                for idx in 0..ctx.compact.area() {
+                    let c = Coord::from_linear(idx, ctx.compact.w);
+                    let e = lambda_linear(&ctx, idx);
+                    assert_eq!(nu(&ctx, e), Some(c), "{} r={r} idx={idx}", spec.name);
+                    assert_eq!(nu_unchecked(&ctx, e), c);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nu_rejects_holes_and_out_of_range() {
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 2);
+        // (1,0) is the level-1 hole
+        assert_eq!(nu(&ctx, Coord::new(1, 0)), None);
+        assert_eq!(nu(&ctx, Coord::new(2, 1)), None); // hole inside replica 0? -> θ_1=(0,1) ok, θ_2=(1,0) hole
+        assert_eq!(nu(&ctx, Coord::new(4, 0)), None); // outside n=4
+        assert!(!on_fractal(&ctx, Coord::new(1, 0)));
+        assert!(on_fractal(&ctx, Coord::new(0, 0)));
+    }
+
+    #[test]
+    fn nu_matches_membership() {
+        for spec in catalog::all() {
+            let r = 3;
+            let ctx = MapCtx::new(&spec, r);
+            let n = ctx.n;
+            for y in 0..n {
+                for x in 0..n {
+                    let e = Coord::new(x, y);
+                    assert_eq!(
+                        nu(&ctx, e).is_some(),
+                        spec.contains(e, r),
+                        "{} {e}",
+                        spec.name
+                    );
+                    assert_eq!(on_fractal(&ctx, e), spec.contains(e, r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nu_is_injective_on_fractal_cells() {
+        let spec = catalog::empty_bottles();
+        let r = 2;
+        let ctx = MapCtx::new(&spec, r);
+        let mut seen = std::collections::HashMap::new();
+        for y in 0..ctx.n {
+            for x in 0..ctx.n {
+                if let Some(c) = nu(&ctx, Coord::new(x, y)) {
+                    assert!(ctx.compact.contains(c));
+                    if let Some(prev) = seen.insert(c, (x, y)) {
+                        panic!("ν collision: {prev:?} and ({x},{y}) -> {c}");
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len() as u64, spec.cells(r));
+    }
+
+    #[test]
+    fn sierpinski_hash_equivalence() {
+        // Paper Eq. 22: for the Sierpinski triangle H_ν[θ] = θx + θy.
+        let spec = catalog::sierpinski_triangle();
+        let ctx = MapCtx::new(&spec, 1);
+        for (tx, ty) in [(0u32, 0u32), (0, 1), (1, 1)] {
+            assert_eq!(ctx.hnu(tx, ty) as u32, tx + ty);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! λ/ν in three dimensions — the §5 future-work extension, showing the
+//! maps generalize beyond 2D with no structural change: replica digits
+//! are distributed round-robin across the three compact axes
+//! (μ ≡ 1 mod 3 → z, μ ≡ 2 → y, μ ≡ 0 → x), and the offsets become
+//! `Δ^ν_μ = k^⌊(μ-1)/3⌋`.
+
+use crate::fractal::three_d::{Coord3, Fractal3Spec, HOLE3};
+
+/// Precomputed context (mirrors [`crate::maps::MapCtx`]).
+#[derive(Clone, Debug)]
+pub struct Map3Ctx {
+    pub spec: Fractal3Spec,
+    pub r: u32,
+    pub n: u32,
+    /// Compact box extents (x, y, z).
+    pub extent: (u32, u32, u32),
+    /// `s^{μ-1}`.
+    s_pow: Vec<u32>,
+    /// `Δ^ν_μ = k^⌊(μ-1)/3⌋`.
+    dnu: Vec<u32>,
+}
+
+impl Map3Ctx {
+    pub fn new(spec: &Fractal3Spec, r: u32) -> Map3Ctx {
+        let n = spec.n(r);
+        assert!(n <= u32::MAX as u64 + 1, "level too large");
+        let s_pow = (1..=r)
+            .map(|mu| crate::fractal::geometry::upow(spec.s, mu - 1) as u32)
+            .collect();
+        let dnu = (1..=r)
+            .map(|mu| crate::fractal::geometry::upow(spec.k, (mu - 1) / 3) as u32)
+            .collect();
+        Map3Ctx {
+            r,
+            n: n as u32,
+            extent: spec.compact_extent(r),
+            s_pow,
+            dnu,
+            spec: spec.clone(),
+        }
+    }
+}
+
+/// λ₃: compact → expanded. Digits: μ≡1 (mod 3) from `c_z`, μ≡2 from
+/// `c_y`, μ≡0 from `c_x` (base-k each).
+pub fn lambda3(ctx: &Map3Ctx, c: Coord3) -> Coord3 {
+    let k = ctx.spec.k;
+    let (mut cx, mut cy, mut cz) = (c.x, c.y, c.z);
+    let (mut ex, mut ey, mut ez) = (0u32, 0u32, 0u32);
+    for mu in 1..=ctx.r {
+        let b = match mu % 3 {
+            1 => {
+                let d = cz % k;
+                cz /= k;
+                d
+            }
+            2 => {
+                let d = cy % k;
+                cy /= k;
+                d
+            }
+            _ => {
+                let d = cx % k;
+                cx /= k;
+                d
+            }
+        };
+        let (tx, ty, tz) = ctx.spec.tau[b as usize];
+        let scale = ctx.s_pow[(mu - 1) as usize];
+        ex += tx as u32 * scale;
+        ey += ty as u32 * scale;
+        ez += tz as u32 * scale;
+    }
+    Coord3::new(ex, ey, ez)
+}
+
+/// ν₃: expanded → compact; `None` for holes / out of range.
+pub fn nu3(ctx: &Map3Ctx, e: Coord3) -> Option<Coord3> {
+    if e.x >= ctx.n || e.y >= ctx.n || e.z >= ctx.n {
+        return None;
+    }
+    let s = ctx.spec.s;
+    let (mut x, mut y, mut z) = (e.x, e.y, e.z);
+    let (mut cx, mut cy, mut cz) = (0u32, 0u32, 0u32);
+    for mu in 1..=ctx.r {
+        let b = ctx.spec.replica_at(x % s, y % s, z % s);
+        x /= s;
+        y /= s;
+        z /= s;
+        if b == HOLE3 {
+            return None;
+        }
+        let delta = ctx.dnu[(mu - 1) as usize] * b as u32;
+        match mu % 3 {
+            1 => cz += delta,
+            2 => cy += delta,
+            _ => cx += delta,
+        }
+    }
+    Some(Coord3::new(cx, cy, cz))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::three_d::{menger_sponge, sierpinski_tetrahedron};
+
+    fn all_compact(ctx: &Map3Ctx) -> Vec<Coord3> {
+        let (wx, wy, wz) = ctx.extent;
+        let mut v = Vec::new();
+        for z in 0..wz {
+            for y in 0..wy {
+                for x in 0..wx {
+                    v.push(Coord3::new(x, y, z));
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn nu3_inverts_lambda3_exhaustively() {
+        for spec in [menger_sponge(), sierpinski_tetrahedron()] {
+            for r in 0..=3u32 {
+                if spec.cells(r) > 20_000 {
+                    continue;
+                }
+                let ctx = Map3Ctx::new(&spec, r);
+                let mut seen = std::collections::HashSet::new();
+                for c in all_compact(&ctx) {
+                    let e = lambda3(&ctx, c);
+                    assert!(spec.contains(e, r), "{} r={r}: λ₃({c}) = {e} off", spec.name);
+                    assert!(seen.insert(e), "λ₃ not injective at {e}");
+                    assert_eq!(nu3(&ctx, e), Some(c), "{} r={r}", spec.name);
+                }
+                assert_eq!(seen.len() as u64, spec.cells(r));
+            }
+        }
+    }
+
+    #[test]
+    fn nu3_validity_equals_membership() {
+        let spec = sierpinski_tetrahedron();
+        let r = 3;
+        let ctx = Map3Ctx::new(&spec, r);
+        let n = ctx.n;
+        for z in 0..n {
+            for y in 0..n {
+                for x in 0..n {
+                    let e = Coord3::new(x, y, z);
+                    assert_eq!(nu3(&ctx, e).is_some(), spec.contains(e, r), "{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_is_none() {
+        let spec = menger_sponge();
+        let ctx = Map3Ctx::new(&spec, 2);
+        assert_eq!(nu3(&ctx, Coord3::new(9, 0, 0)), None);
+        assert_eq!(nu3(&ctx, Coord3::new(1, 1, 1)), None); // body-center hole
+    }
+}

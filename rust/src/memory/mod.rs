@@ -1,0 +1,178 @@
+//! Memory accounting and Memory-Reduction-Factor (MRF) computation.
+//!
+//! The paper's memory claims (Fig. 10, Table 2, §4.3) are exact arithmetic
+//! over storage layouts, so this module reproduces them to the digit
+//! without allocating: BB and λ(ω) store the full `n × n` embedding;
+//! Squeeze stores `k^{r_b}` blocks of `ρ × ρ` cells.
+
+use crate::fractal::FractalSpec;
+use crate::maps::block::intra_levels_for;
+
+/// Bytes per cell in the paper's experiments (Table 2's 16 GB at r=16
+/// implies 4-byte cells: `(2^16)^2 · 4 B = 16 GiB`).
+pub const PAPER_CELL_BYTES: u64 = 4;
+
+/// Expanded bounding-box storage: `n² · cell_bytes` per buffer.
+pub fn bb_bytes(spec: &FractalSpec, r: u32, cell_bytes: u64) -> u64 {
+    let n = spec.n(r);
+    n * n * cell_bytes
+}
+
+/// λ(ω) storage — identical to BB (compact *grid*, expanded *memory*).
+pub fn lambda_bytes(spec: &FractalSpec, r: u32, cell_bytes: u64) -> u64 {
+    bb_bytes(spec, r, cell_bytes)
+}
+
+/// Squeeze block-level storage: `k^{r - log_s ρ} · ρ² · cell_bytes`.
+/// Panics if ρ is not a power of `s` (mirrors `BlockCtx::new`).
+pub fn squeeze_bytes(spec: &FractalSpec, r: u32, rho: u32, cell_bytes: u64) -> u64 {
+    let intra = intra_levels_for(rho, spec.s)
+        .unwrap_or_else(|| panic!("rho {rho} is not a power of s={}", spec.s));
+    assert!(intra <= r, "rho {rho} larger than the fractal");
+    spec.cells(r - intra) * (rho as u64 * rho as u64) * cell_bytes
+}
+
+/// Measured MRF of Squeeze at block size ρ over BB (Table 2's last column).
+pub fn mrf(spec: &FractalSpec, r: u32, rho: u32) -> f64 {
+    bb_bytes(spec, r, 1) as f64 / squeeze_bytes(spec, r, rho, 1) as f64
+}
+
+/// Theoretical MRF at thread level (Fig. 10): `s^{2r} / k^r`.
+/// `r` may be fractional (the paper's x-axis is `n`, so `r = log_s n`).
+pub fn theoretical_mrf(spec: &FractalSpec, r_f: f64) -> f64 {
+    let ratio = (spec.s as f64).powi(2) / spec.k as f64;
+    ratio.powf(r_f)
+}
+
+/// One row of Table 2.
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub rho: u32,
+    pub bb_bytes: u64,
+    pub squeeze_bytes: u64,
+    pub mrf: f64,
+}
+
+/// Regenerate Table 2 for a fractal/level over the given block sizes.
+pub fn table2(spec: &FractalSpec, r: u32, rhos: &[u32], cell_bytes: u64) -> Vec<Table2Row> {
+    rhos.iter()
+        .map(|&rho| Table2Row {
+            rho,
+            bb_bytes: bb_bytes(spec, r, cell_bytes),
+            squeeze_bytes: squeeze_bytes(spec, r, rho, cell_bytes),
+            mrf: mrf(spec, r, rho),
+        })
+        .collect()
+}
+
+/// A point of a Fig. 10 series.
+#[derive(Clone, Debug)]
+pub struct MrfPoint {
+    pub n: f64,
+    pub mrf: f64,
+}
+
+/// A Fig. 10 series: theoretical MRF of one fractal sampled at embedding
+/// sides `n = 2^e` for `e = 1..=log2(n_max)`.
+pub fn fig10_series(spec: &FractalSpec, log2_n_max: u32) -> Vec<MrfPoint> {
+    (1..=log2_n_max)
+        .map(|e| {
+            let n = (1u64 << e) as f64;
+            let r_f = n.ln() / (spec.s as f64).ln();
+            MrfPoint {
+                n,
+                mrf: theoretical_mrf(spec, r_f),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    const GIB: f64 = (1u64 << 30) as f64;
+
+    #[test]
+    fn table2_matches_paper_to_two_decimals() {
+        // Paper Table 2 (Sierpinski triangle, r=16, 4-byte cells):
+        // ρ:      1      2      4      8      16     32
+        // GB:     0.16   0.21   0.29   0.38   0.50   0.68
+        // MRF:    99.8   74.8   56.1   42.1   31.6   23.7
+        let spec = catalog::sierpinski_triangle();
+        let rows = table2(&spec, 16, &[1, 2, 4, 8, 16, 32], PAPER_CELL_BYTES);
+        let expect_gb = [0.16, 0.21, 0.29, 0.38, 0.50, 0.68];
+        let expect_mrf = [99.8, 74.8, 56.1, 42.1, 31.6, 23.7];
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.bb_bytes as f64 / GIB, 16.0, "BB is 16 GiB");
+            let gb = row.squeeze_bytes as f64 / GIB;
+            assert!(
+                (gb - expect_gb[i]).abs() < 0.01,
+                "rho={} gb={gb} want {}",
+                row.rho,
+                expect_gb[i]
+            );
+            assert!(
+                (row.mrf - expect_mrf[i]).abs() < 0.06,
+                "rho={} mrf={} want {}",
+                row.rho,
+                row.mrf,
+                expect_mrf[i]
+            );
+        }
+    }
+
+    #[test]
+    fn r20_headline_numbers() {
+        // §4.3: BB at r=20 needs 4096 GB; Squeeze ρ=1 needs ~13 GB;
+        // the MRF is ~315×.
+        let spec = catalog::sierpinski_triangle();
+        assert_eq!(bb_bytes(&spec, 20, PAPER_CELL_BYTES), 4096 * (1u64 << 30));
+        let squeeze_gb = squeeze_bytes(&spec, 20, 1, PAPER_CELL_BYTES) as f64 / GIB;
+        assert!((squeeze_gb - 12.99).abs() < 0.05, "got {squeeze_gb}");
+        let m = mrf(&spec, 20, 1);
+        assert!((m - 315.3).abs() < 0.5, "got {m}");
+        // largest-ρ end of the "~13 to ~55 GB" range
+        let squeeze32_gb = squeeze_bytes(&spec, 20, 32, PAPER_CELL_BYTES) as f64 / GIB;
+        assert!(squeeze32_gb > 50.0 && squeeze32_gb < 60.0, "got {squeeze32_gb}");
+    }
+
+    #[test]
+    fn fig10_values_at_n_2e16() {
+        // Paper §3.7: at n=2^16 the MRF is ≈400 (Vicsek), ≈105 (Sierpinski
+        // triangle — the text says "close to 105", exact (4/3)^16 = 99.8),
+        // and ≈3.4 (carpet).
+        let tri = theoretical_mrf(&catalog::sierpinski_triangle(), 16.0);
+        assert!((tri - 99.77).abs() < 0.1);
+        let r3 = (65536f64).ln() / 3f64.ln();
+        let vic = theoretical_mrf(&catalog::vicsek(), r3);
+        assert!(vic > 350.0 && vic < 420.0, "vicsek {vic}");
+        let car = theoretical_mrf(&catalog::sierpinski_carpet(), r3);
+        assert!(car > 3.0 && car < 3.8, "carpet {car}");
+    }
+
+    #[test]
+    fn mrf_grows_monotonically_with_n() {
+        let spec = catalog::sierpinski_triangle();
+        let series = fig10_series(&spec, 16);
+        for w in series.windows(2) {
+            assert!(w[1].mrf > w[0].mrf);
+        }
+    }
+
+    #[test]
+    fn full_square_has_mrf_one() {
+        let spec = catalog::full_square(2);
+        assert!((mrf(&spec, 8, 1) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lambda_storage_equals_bb() {
+        let spec = catalog::sierpinski_triangle();
+        assert_eq!(
+            lambda_bytes(&spec, 10, 4),
+            bb_bytes(&spec, 10, 4)
+        );
+    }
+}

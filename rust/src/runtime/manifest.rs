@@ -1,0 +1,129 @@
+//! Artifact manifest parsing (`artifacts/manifest.tsv`, written by
+//! `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered computation available to the runtime.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// File name inside the artifacts directory.
+    pub file: String,
+    /// `squeeze`, `bb` or `nu_probe`.
+    pub kind: String,
+    pub fractal: String,
+    pub r: u32,
+    /// Input shape `(rows, cols)`.
+    pub rows: u64,
+    pub cols: u64,
+    /// Simulation steps fused into one execution.
+    pub iters: u32,
+}
+
+impl ArtifactMeta {
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(String),
+    Parse { line: usize, detail: String },
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io error: {e}"),
+            ManifestError::Parse { line, detail } => {
+                write!(f, "manifest parse error at line {line}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// Parse the TSV manifest text.
+pub fn parse(text: &str) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().ok_or(ManifestError::Parse {
+        line: 0,
+        detail: "empty manifest".into(),
+    })?;
+    let expect = "name\tfile\tkind\tfractal\tr\tshape\titers";
+    if header.trim() != expect {
+        return Err(ManifestError::Parse {
+            line: 1,
+            detail: format!("unexpected header {header:?}"),
+        });
+    }
+    let mut out = Vec::new();
+    for (i, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 7 {
+            return Err(ManifestError::Parse {
+                line: i + 1,
+                detail: format!("expected 7 columns, got {}", cols.len()),
+            });
+        }
+        let (rows, cshape) = cols[5].split_once('x').ok_or(ManifestError::Parse {
+            line: i + 1,
+            detail: format!("bad shape {:?}", cols[5]),
+        })?;
+        let parse_u = |s: &str| {
+            s.parse::<u64>().map_err(|_| ManifestError::Parse {
+                line: i + 1,
+                detail: format!("bad number {s:?}"),
+            })
+        };
+        out.push(ArtifactMeta {
+            name: cols[0].to_string(),
+            file: cols[1].to_string(),
+            kind: cols[2].to_string(),
+            fractal: cols[3].to_string(),
+            r: parse_u(cols[4])? as u32,
+            rows: parse_u(rows)?,
+            cols: parse_u(cshape)?,
+            iters: parse_u(cols[6])? as u32,
+        });
+    }
+    Ok(out)
+}
+
+/// Load and parse `manifest.tsv` from an artifacts directory.
+pub fn load(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let text = std::fs::read_to_string(dir.join("manifest.tsv"))
+        .map_err(|e| ManifestError::Io(e.to_string()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tfile\tkind\tfractal\tr\tshape\titers\n\
+        squeeze_tri_r6\tsqueeze_tri_r6.hlo.txt\tsqueeze\tsierpinski-triangle\t6\t27x27\t1\n\
+        nu_probe\tnu.hlo.txt\tnu_probe\tsierpinski-triangle\t8\t1024x2\t1\n";
+
+    #[test]
+    fn parses_rows() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "squeeze_tri_r6");
+        assert_eq!((m[0].rows, m[0].cols), (27, 27));
+        assert_eq!(m[1].kind, "nu_probe");
+        assert_eq!(m[1].rows, 1024);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_shape() {
+        assert!(parse("wrong\n").is_err());
+        let bad = "name\tfile\tkind\tfractal\tr\tshape\titers\nx\ty\tz\tw\t1\tnotashape\t1\n";
+        assert!(parse(bad).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Software IEEE-754 binary16 (half precision).
+//!
+//! The paper's tensor-core path multiplies FP16 operands and accumulates in
+//! FP32 (CUDA WMMA `16×16×16 f16·f16+f32`). There is no `half` crate
+//! offline, so we implement the conversions: round-to-nearest-even
+//! `f32 → f16`, exact `f16 → f32`. The simulator uses these to reproduce
+//! the paper's numeric behaviour — including the exactness cliff at
+//! integers > 2048 that bounds the fractal level usable at thread level
+//! (DESIGN.md §Hardware-Adaptation).
+
+/// Convert `f32` to binary16 bits with round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // unbias (f32 bias 127 -> f16 bias 15)
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal range
+        let half_exp = (unbiased + 15) as u16;
+        let mant10 = (mant >> 13) as u16;
+        let round_bits = mant & 0x1FFF;
+        let mut out = sign | (half_exp << 10) | mant10;
+        // round to nearest even on the 13 dropped bits
+        if round_bits > 0x1000 || (round_bits == 0x1000 && (mant10 & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct behaviour
+        }
+        out
+    } else if unbiased >= -25 {
+        // subnormal half: value = mant_half · 2^-24, with
+        // x = full · 2^(unbiased-23)  ⇒  mant_half = full >> (-unbiased-1)
+        let shift = (-unbiased - 1) as u32;
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let mant_half = (full >> shift) as u16;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | mant_half;
+        if rem > halfway || (rem == halfway && (mant_half & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        out
+    } else {
+        sign // underflow to zero
+    }
+}
+
+/// Convert binary16 bits to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf/nan
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // zero
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            // value = (mant/1024)·2^-14, normalized to 1.m × 2^(114+e-127)
+            sign | (((114 + e) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an `f32` through f16 precision (the operand quantization tensor
+/// cores apply before multiplying).
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Is `x` an integer exactly representable in binary16?
+/// (all |x| ≤ 2048; above that only multiples of increasing powers of 2).
+pub fn f16_exact_int(x: f64) -> bool {
+    if x == 0.0 {
+        return true;
+    }
+    let q = quantize_f16(x as f32) as f64;
+    q == x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_exact_small_integers() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(quantize_f16(x), x, "i={i}");
+        }
+    }
+
+    #[test]
+    fn exactness_cliff_at_2048() {
+        assert!(f16_exact_int(2048.0));
+        assert!(!f16_exact_int(2049.0));
+        assert!(f16_exact_int(2050.0)); // multiple of 2 in [2048, 4096)
+        // the Sierpinski thread-level r=16 Δ value from DESIGN.md:
+        assert!(!f16_exact_int(2187.0)); // 3^7 — NOT exact: fp16 limit
+        assert!(f16_exact_int(243.0)); // 3^5 — block-level ρ=16 is fine
+        // powers of two stay exact far beyond 2048 (λ's s^{μ-1} factors)
+        assert!(f16_exact_int(32768.0)); // 2^15
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(quantize_f16(0.0), 0.0);
+        assert_eq!(quantize_f16(-0.0).to_bits(), (-0.0f32).to_bits());
+        assert_eq!(quantize_f16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(quantize_f16(-f32::INFINITY), f32::NEG_INFINITY);
+        assert!(quantize_f16(f32::NAN).is_nan());
+        // overflow
+        assert_eq!(quantize_f16(1e6), f32::INFINITY);
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        let tiny = (2.0f32).powi(-24); // smallest positive f16 subnormal
+        assert_eq!(quantize_f16(tiny), tiny);
+        // largest subnormal (1023 · 2^-24)
+        let big_sub = 1023.0 * (2.0f32).powi(-24);
+        assert_eq!(quantize_f16(big_sub), big_sub);
+        // exactly half the smallest subnormal ties-to-even down to 0
+        assert_eq!(quantize_f16((2.0f32).powi(-25)), 0.0);
+        // 1.5 × 2^-25 rounds up to the smallest subnormal
+        assert_eq!(quantize_f16(1.5 * (2.0f32).powi(-25)), tiny);
+        // far below -> 0
+        assert_eq!(quantize_f16(1e-9), 0.0);
+    }
+
+    #[test]
+    fn rounding_is_to_nearest_even() {
+        // 2049 sits exactly between 2048 and 2050; even mantissa -> 2048
+        assert_eq!(quantize_f16(2049.0), 2048.0);
+        // 2051 between 2050 and 2052 -> 2052 (even)
+        assert_eq!(quantize_f16(2051.0), 2052.0);
+    }
+
+    #[test]
+    fn fractions() {
+        assert_eq!(quantize_f16(0.5), 0.5);
+        assert_eq!(quantize_f16(0.25), 0.25);
+        let x = 0.1f32; // inexact in f16
+        assert!((quantize_f16(x) - x).abs() < 1e-3);
+        assert_ne!(quantize_f16(x), x);
+    }
+}

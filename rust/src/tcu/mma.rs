@@ -1,0 +1,147 @@
+//! 16×16×16 matrix-multiply-accumulate fragments — the software analogue
+//! of one CUDA WMMA tensor-core operation (`D = A × B + C`, paper Eq. 14).
+//!
+//! `MmaMode` selects operand precision:
+//! - `Fp16` — paper-faithful: operands quantized to binary16 before the
+//!   multiply, products/accumulation in f32 (Volta/Turing/Ampere WMMA).
+//! - `F32` — exact f32 operands; models the TPU path where the MXU takes
+//!   bf16/f32 inputs wide enough for these integer ranges.
+
+use super::fp16::quantize_f16;
+
+/// Fragment side (CUDA WMMA 16×16×16, paper §3.6).
+pub const FRAG: usize = 16;
+
+/// A 16×16 matrix fragment, row-major f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fragment {
+    pub data: [f32; FRAG * FRAG],
+}
+
+impl Default for Fragment {
+    fn default() -> Self {
+        Fragment::zero()
+    }
+}
+
+impl Fragment {
+    pub fn zero() -> Fragment {
+        Fragment {
+            data: [0.0; FRAG * FRAG],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> f32 {
+        self.data[row * FRAG + col]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: f32) {
+        self.data[row * FRAG + col] = v;
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(f: impl Fn(usize, usize) -> f32) -> Fragment {
+        let mut m = Fragment::zero();
+        for r in 0..FRAG {
+            for c in 0..FRAG {
+                m.set(r, c, f(r, c));
+            }
+        }
+        m
+    }
+}
+
+/// Operand precision mode for the simulated tensor core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmaMode {
+    /// FP16 operands, FP32 accumulate (the paper's configuration).
+    Fp16,
+    /// F32 operands (exact; TPU MXU analogue for this integer range).
+    F32,
+}
+
+/// One warp-level MMA: `D = A × B + C`.
+///
+/// In `Fp16` mode each operand element is first rounded through binary16 —
+/// exactly what loading a WMMA fragment from f16 storage does on real
+/// hardware. Products and accumulation stay in f32, matching the
+/// FP16×FP16+FP32 configuration the paper selected for correctness.
+pub fn mma(a: &Fragment, b: &Fragment, c: &Fragment, mode: MmaMode) -> Fragment {
+    let mut d = Fragment::zero();
+    let quant = |x: f32| match mode {
+        MmaMode::Fp16 => quantize_f16(x),
+        MmaMode::F32 => x,
+    };
+    for i in 0..FRAG {
+        for j in 0..FRAG {
+            let mut acc = c.get(i, j);
+            for p in 0..FRAG {
+                acc += quant(a.get(i, p)) * quant(b.get(p, j));
+            }
+            d.set(i, j, acc);
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_times_b_is_b() {
+        let ident = Fragment::from_fn(|r, c| if r == c { 1.0 } else { 0.0 });
+        let b = Fragment::from_fn(|r, c| (r * 16 + c) as f32 % 97.0);
+        let d = mma(&ident, &b, &Fragment::zero(), MmaMode::F32);
+        assert_eq!(d, b);
+    }
+
+    #[test]
+    fn accumulator_is_added() {
+        let zero = Fragment::zero();
+        let c = Fragment::from_fn(|r, _| r as f32);
+        let d = mma(&zero, &zero, &c, MmaMode::Fp16);
+        assert_eq!(d, c);
+    }
+
+    #[test]
+    fn fp16_mode_quantizes_operands() {
+        // 2187 (3^7) is not f16-exact; 2048 is. A 1×1 effective product.
+        let mut a = Fragment::zero();
+        let mut b = Fragment::zero();
+        a.set(0, 0, 2187.0);
+        b.set(0, 0, 1.0);
+        let d16 = mma(&a, &b, &Fragment::zero(), MmaMode::Fp16);
+        let d32 = mma(&a, &b, &Fragment::zero(), MmaMode::F32);
+        assert_eq!(d32.get(0, 0), 2187.0);
+        assert_ne!(d16.get(0, 0), 2187.0, "fp16 must round 3^7");
+    }
+
+    #[test]
+    fn small_integer_mma_is_exact_in_fp16() {
+        // All operands ≤ 2048 → every product and sum is exact.
+        let a = Fragment::from_fn(|r, c| ((r * 7 + c * 3) % 100) as f32);
+        let b = Fragment::from_fn(|r, c| ((r * 5 + c * 11) % 100) as f32);
+        let d16 = mma(&a, &b, &Fragment::zero(), MmaMode::Fp16);
+        let d32 = mma(&a, &b, &Fragment::zero(), MmaMode::F32);
+        assert_eq!(d16, d32);
+    }
+
+    #[test]
+    fn matches_naive_matmul() {
+        let a = Fragment::from_fn(|r, c| (r as f32) - (c as f32) * 0.5);
+        let b = Fragment::from_fn(|r, c| (c as f32) * 0.25 + r as f32);
+        let d = mma(&a, &b, &Fragment::zero(), MmaMode::F32);
+        for i in 0..FRAG {
+            for j in 0..FRAG {
+                let mut want = 0.0f32;
+                for p in 0..FRAG {
+                    want += a.get(i, p) * b.get(p, j);
+                }
+                assert!((d.get(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Software tensor-core unit (TCU) simulator.
+//!
+//! The substitution for real WMMA hardware (DESIGN.md §2): binary16
+//! arithmetic ([`fp16`]), 16×16 fragment MMA with selectable operand
+//! precision ([`mma`]), and a per-generation cycle cost model ([`cost`])
+//! used to reproduce the *shape* of the paper's Figure 14.
+
+pub mod cost;
+pub mod fp16;
+pub mod mma;
+
+pub use cost::{CostModel, Generation};
+pub use mma::{mma, Fragment, MmaMode, FRAG};

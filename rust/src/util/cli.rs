@@ -1,0 +1,224 @@
+//! Minimal command-line argument parser (the environment is offline, so no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`,
+//! typed getters with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for usage rendering.
+#[derive(Clone, Debug)]
+struct Decl {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Parsed argument bag for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    decls: Vec<Decl>,
+}
+
+#[derive(Debug)]
+pub enum CliError {
+    MissingValue(String),
+    BadValue { key: String, value: String, want: &'static str },
+    Unknown(String),
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::BadValue { key, value, want } => {
+                write!(f, "option --{key}={value} is not a valid {want}")
+            }
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw argv (excluding program name). The first non-dash token is
+    /// the subcommand; everything after is options/positionals.
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.command = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    a.values
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.values
+                        .insert(body.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    /// Declare an option (for usage text); returns `self` for chaining.
+    pub fn declare(&mut self, name: &str, help: &str, default: Option<&str>, is_flag: bool) {
+        self.decls.push(Decl {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_flag,
+        });
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                want: "u64",
+            }),
+        }
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32, CliError> {
+        Ok(self.get_u64(name, default as u64)? as u32)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                want: "f64",
+            }),
+        }
+    }
+
+    /// Comma-separated u32 list, e.g. `--rhos 1,2,4,8`.
+    pub fn get_u32_list(&self, name: &str, default: &[u32]) -> Result<Vec<u32>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| CliError::BadValue {
+                        key: name.to_string(),
+                        value: v.to_string(),
+                        want: "comma-separated u32 list",
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Render usage text from declared options.
+    pub fn usage(&self, program: &str, about: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{program} — {about}\n");
+        let _ = writeln!(s, "OPTIONS:");
+        for d in &self.decls {
+            let head = if d.is_flag {
+                format!("  --{}", d.name)
+            } else {
+                format!("  --{} <value>", d.name)
+            };
+            let def = d
+                .default
+                .as_ref()
+                .map(|v| format!(" [default: {v}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "{head:<28} {}{def}", d.help);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(&sv(&["bench", "--r", "12", "--fast", "--rho=4", "file.txt"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("r"), Some("12"));
+        assert_eq!(a.get("rho"), Some("4"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.positional(), &["file.txt".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&sv(&["x", "--n", "8", "--p", "0.5", "--list", "1,2,4"])).unwrap();
+        assert_eq!(a.get_u64("n", 0).unwrap(), 8);
+        assert_eq!(a.get_f64("p", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_u32_list("list", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_u64("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn bad_value_is_an_error() {
+        let a = Args::parse(&sv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&sv(&["run", "--verbose"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("verbose"), None);
+    }
+
+    #[test]
+    fn usage_renders_declared() {
+        let mut a = Args::default();
+        a.declare("r", "fractal level", Some("8"), false);
+        a.declare("fast", "skip slow parts", None, true);
+        let u = a.usage("squeeze", "compact fractals");
+        assert!(u.contains("--r <value>"));
+        assert!(u.contains("--fast"));
+        assert!(u.contains("[default: 8]"));
+    }
+}

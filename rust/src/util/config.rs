@@ -1,0 +1,195 @@
+//! INI-style configuration parser for experiment/sweep definitions.
+//!
+//! Grammar: `[section]` headers, `key = value` pairs, `#`/`;` comments,
+//! blank lines ignored. Values keep their raw string; typed accessors parse
+//! on demand. Used by the coordinator to load run plans (see
+//! `configs/*.ini` at the repo root).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    /// section -> key -> value. The pre-section area is section "".
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+#[derive(Debug)]
+pub enum ConfigError {
+    Io(String),
+    Syntax { line: usize, text: String },
+    Missing { section: String, key: String },
+    Bad { section: String, key: String, want: &'static str },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "config io error: {e}"),
+            ConfigError::Syntax { line, text } => {
+                write!(f, "config syntax error at line {line}: {text:?}")
+            }
+            ConfigError::Missing { section, key } => {
+                write!(f, "missing config key [{section}] {key}")
+            }
+            ConfigError::Bad { section, key, want } => {
+                write!(f, "config key [{section}] {key} is not a valid {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            match line.split_once('=') {
+                Some((k, v)) => {
+                    cfg.sections
+                        .entry(section.clone())
+                        .or_default()
+                        .insert(k.trim().to_string(), v.trim().to_string());
+                }
+                None => {
+                    return Err(ConfigError::Syntax {
+                        line: i + 1,
+                        text: raw.to_string(),
+                    })
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Io(e.to_string()))?;
+        Config::parse(&text)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        self.get(section, key).ok_or_else(|| ConfigError::Missing {
+            section: section.to_string(),
+            key: key.to_string(),
+        })
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::Bad {
+                section: section.to_string(),
+                key: key.to_string(),
+                want: "u64",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ConfigError::Bad {
+                section: section.to_string(),
+                key: key.to_string(),
+                want: "f64",
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(_) => Err(ConfigError::Bad {
+                section: section.to_string(),
+                key: key.to_string(),
+                want: "bool",
+            }),
+        }
+    }
+
+    /// Comma-separated u32 list.
+    pub fn get_u32_list(
+        &self,
+        section: &str,
+        key: &str,
+        default: &[u32],
+    ) -> Result<Vec<u32>, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse().map_err(|_| ConfigError::Bad {
+                        section: section.to_string(),
+                        key: key.to_string(),
+                        want: "u32 list",
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\n# experiment plan\nglobal_key = 1\n[sweep]\nr_min = 4\nr_max = 12\nrhos = 1,2,4\nshared = true\n; comment\n[job]\nname = gol-sierpinski\n";
+
+    #[test]
+    fn parses_sections_and_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("", "global_key"), Some("1"));
+        assert_eq!(c.get_u64("sweep", "r_min", 0).unwrap(), 4);
+        assert_eq!(c.get_u32_list("sweep", "rhos", &[]).unwrap(), vec![1, 2, 4]);
+        assert!(c.get_bool("sweep", "shared", false).unwrap());
+        assert_eq!(c.get("job", "name"), Some("gol-sierpinski"));
+    }
+
+    #[test]
+    fn missing_and_defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_u64("sweep", "nope", 7).unwrap(), 7);
+        assert!(c.require("sweep", "nope").is_err());
+    }
+
+    #[test]
+    fn syntax_error_reports_line() {
+        let err = Config::parse("ok = 1\nbroken-line\n").unwrap_err();
+        match err {
+            ConfigError::Syntax { line, .. } => assert_eq!(line, 2),
+            other => panic!("wrong error {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let c = Config::parse("[s]\nx = abc\n").unwrap();
+        assert!(c.get_u64("s", "x", 0).is_err());
+        assert!(c.get_bool("s", "x", false).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! General-purpose substrates built in-repo (the environment is offline, so
+//! `rand`, `clap`, `rayon`, `proptest` and friends are replaced by the small
+//! focused modules below).
+
+pub mod cli;
+pub mod config;
+pub mod fmt;
+pub mod pool;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod timer;

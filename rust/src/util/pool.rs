@@ -1,0 +1,156 @@
+//! Data-parallel execution substrate.
+//!
+//! The paper's engines run as CUDA grids of thread-blocks; our CPU analogue
+//! is a chunked fork-join over index ranges built on `std::thread::scope`
+//! (no rayon offline). `parallel_for_chunks` splits `[0, n)` into
+//! contiguous chunks, one logical chunk stream per worker, preserving the
+//! "block of threads works on a contiguous tile" structure that the
+//! block-level Squeeze engine relies on for locality.
+
+/// Number of workers to use: `SQUEEZE_THREADS` env or available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("SQUEEZE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `body(start, end)` over disjoint chunks of `[0, n)` on `workers`
+/// threads. `body` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_for_chunks<F>(n: u64, workers: usize, body: F)
+where
+    F: Fn(u64, u64) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min((n as usize).max(1));
+    if workers == 1 {
+        body(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers as u64);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let start = (w as u64) * chunk;
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            let body = &body;
+            scope.spawn(move || body(start, end));
+        }
+    });
+}
+
+/// Map `f` over `[0, n)` in parallel, writing into `out[i]` (disjoint
+/// writes, so safe). `out.len()` must equal `n`.
+pub fn parallel_map_into<T, F>(out: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(u64) -> T + Sync,
+{
+    let n = out.len() as u64;
+    if n == 0 {
+        return;
+    }
+    let ptr = SendPtr(out.as_mut_ptr());
+    parallel_for_chunks(n, workers, move |start, end| {
+        let p = ptr; // copy the Send wrapper into the closure
+        for i in start..end {
+            // SAFETY: chunks are disjoint; each index is written exactly once.
+            unsafe { p.0.add(i as usize).write(f(i)) }
+        }
+    });
+}
+
+/// Pointer wrapper asserting cross-thread use is safe for disjoint writes.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Parallel sum of `f(i)` over `[0, n)`.
+pub fn parallel_sum<F>(n: u64, workers: usize, f: F) -> u64
+where
+    F: Fn(u64) -> u64 + Sync,
+{
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let total = AtomicU64::new(0);
+    parallel_for_chunks(n, workers, |start, end| {
+        let mut local = 0u64;
+        for i in start..end {
+            local += f(i);
+        }
+        total.fetch_add(local, Ordering::Relaxed);
+    });
+    total.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_every_index_once() {
+        let n = 10_007u64; // prime, forces ragged chunks
+        let hits = AtomicU64::new(0);
+        parallel_for_chunks(n, 8, |s, e| {
+            hits.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn zero_and_one_workers() {
+        parallel_for_chunks(0, 4, |_, _| panic!("must not run"));
+        let hits = AtomicU64::new(0);
+        parallel_for_chunks(5, 1, |s, e| {
+            assert_eq!((s, e), (0, 5));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let hits = AtomicU64::new(0);
+        parallel_for_chunks(3, 64, |s, e| {
+            hits.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn map_into_writes_each_slot() {
+        let mut out = vec![0u64; 1000];
+        parallel_map_into(&mut out, 7, |i| i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as u64) * 2);
+        }
+    }
+
+    #[test]
+    fn sum_matches_closed_form() {
+        let n = 100_000u64;
+        let s = parallel_sum(n, 16, |i| i);
+        assert_eq!(s, n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

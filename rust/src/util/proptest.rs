@@ -1,0 +1,222 @@
+//! Miniature property-based testing framework (offline substitute for
+//! `proptest`). Provides seeded random case generation, a fixed case
+//! budget, and greedy integer shrinking: when a case fails, each integer
+//! input is independently shrunk toward its minimum while the property
+//! still fails, and the minimal counterexample is reported in the panic.
+//!
+//! Usage (`no_run`: rustdoc test binaries don't inherit the xla rpath):
+//! ```no_run
+//! use squeeze::util::proptest::Runner;
+//! let mut r = Runner::new("add-commutes", 0xC0FFEE);
+//! r.run(256, |g| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     Runner::check(a + b == b + a, &format!("a={a} b={b}"))
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Per-case value source. Records drawn integers so the runner can shrink.
+pub struct Gen {
+    prng: Prng,
+    /// Recorded draws for this case: (lo, hi, chosen).
+    trace: Vec<(u64, u64, u64)>,
+    /// When replaying a shrunk case, values come from here instead.
+    replay: Option<Vec<u64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(prng: Prng) -> Gen {
+        Gen {
+            prng,
+            trace: Vec::new(),
+            replay: None,
+            cursor: 0,
+        }
+    }
+
+    fn replaying(values: Vec<u64>) -> Gen {
+        Gen {
+            prng: Prng::new(0),
+            trace: Vec::new(),
+            replay: Some(values),
+            cursor: 0,
+        }
+    }
+
+    /// Draw a uniform integer in `[lo, hi]` inclusive.
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = if let Some(replay) = &self.replay {
+            replay.get(self.cursor).copied().unwrap_or(lo).clamp(lo, hi)
+        } else {
+            self.prng.range_inclusive(lo, hi)
+        };
+        self.cursor += 1;
+        self.trace.push((lo, hi, v));
+        v
+    }
+
+    pub fn u32(&mut self, lo: u32, hi: u32) -> u32 {
+        self.u64(lo as u64, hi as u64) as u32
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64(0, 1) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Result of a single property evaluation.
+pub type CaseResult = Result<(), String>;
+
+/// Property runner with shrinking.
+pub struct Runner {
+    name: String,
+    seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &str, seed: u64) -> Runner {
+        Runner {
+            name: name.to_string(),
+            seed,
+        }
+    }
+
+    /// Convenience assertion for property bodies.
+    pub fn check(cond: bool, detail: &str) -> CaseResult {
+        if cond {
+            Ok(())
+        } else {
+            Err(detail.to_string())
+        }
+    }
+
+    /// Run `cases` random cases; panics with the minimal counterexample on
+    /// failure.
+    pub fn run<F>(&mut self, cases: u64, prop: F)
+    where
+        F: Fn(&mut Gen) -> CaseResult,
+    {
+        let mut root = Prng::new(self.seed);
+        for case in 0..cases {
+            let mut g = Gen::new(root.fork(case));
+            if let Err(first_fail) = prop(&mut g) {
+                let (values, final_msg) = self.shrink(&g.trace, &prop, first_fail);
+                panic!(
+                    "property '{}' failed (case {case}, seed {:#x})\n  minimal inputs: {:?}\n  detail: {}",
+                    self.name, self.seed, values, final_msg
+                );
+            }
+        }
+    }
+
+    /// Greedy per-coordinate shrink toward each draw's lower bound.
+    fn shrink<F>(
+        &self,
+        trace: &[(u64, u64, u64)],
+        prop: &F,
+        first_msg: String,
+    ) -> (Vec<u64>, String)
+    where
+        F: Fn(&mut Gen) -> CaseResult,
+    {
+        let mut values: Vec<u64> = trace.iter().map(|t| t.2).collect();
+        let lows: Vec<u64> = trace.iter().map(|t| t.0).collect();
+        let mut msg = first_msg;
+        let mut progress = true;
+        let mut rounds = 0;
+        while progress && rounds < 64 {
+            progress = false;
+            rounds += 1;
+            for i in 0..values.len() {
+                loop {
+                    if values[i] == lows[i] {
+                        break;
+                    }
+                    let saved = values[i];
+                    // candidate ladder: the low bound, the midpoint, then
+                    // decrement — the decrement step guarantees the shrink
+                    // reaches the exact boundary counterexample.
+                    let mid = lows[i] + (saved - lows[i]) / 2;
+                    let mut shrunk = false;
+                    for candidate in [lows[i], mid, saved - 1] {
+                        if candidate >= saved {
+                            continue;
+                        }
+                        values[i] = candidate;
+                        let mut g = Gen::replaying(values.clone());
+                        if let Err(m) = prop(&mut g) {
+                            msg = m;
+                            progress = true;
+                            shrunk = true;
+                            break;
+                        }
+                        values[i] = saved;
+                    }
+                    if !shrunk {
+                        break;
+                    }
+                }
+            }
+        }
+        (values, msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Runner::new("sym", 1).run(200, |g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            Runner::check(a.max(b) == b.max(a), "max symmetric")
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimum() {
+        let result = std::panic::catch_unwind(|| {
+            Runner::new("fails-at-10", 2).run(500, |g| {
+                let x = g.u64(0, 1000);
+                Runner::check(x < 10, &format!("x={x}"))
+            });
+        });
+        let msg = match result {
+            Err(p) => *p.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // shrinker must land exactly on the boundary counterexample x=10
+        assert!(msg.contains("minimal inputs: [10]"), "got: {msg}");
+    }
+
+    #[test]
+    fn choose_and_bool_draw_within_domain() {
+        Runner::new("choose", 3).run(100, |g| {
+            let v = *g.choose(&[2u32, 4, 6]);
+            let b = g.bool();
+            Runner::check(v % 2 == 0 && (b || !b), "domain")
+        });
+    }
+
+    #[test]
+    fn replay_clamps_to_bounds() {
+        let mut g = Gen::replaying(vec![500]);
+        let x = g.u64(1, 10);
+        assert_eq!(x, 10);
+    }
+}

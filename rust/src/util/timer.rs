@@ -1,0 +1,69 @@
+//! Wall-clock timing helpers used by the bench harness and the coordinator
+//! metrics. All results are reported in seconds as `f64`.
+
+use std::time::Instant;
+
+/// A started stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap_s(&mut self) -> f64 {
+        let t = self.elapsed_s();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_s())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotonic() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = time(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let lap = t.lap_s();
+        assert!(lap > 0.0);
+        assert!(t.elapsed_s() <= lap + 0.5);
+    }
+}

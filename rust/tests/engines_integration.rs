@@ -1,0 +1,123 @@
+//! Cross-module integration: coordinator + engines + memory accounting,
+//! exercised the way the CLI does.
+
+use squeeze::ca::{EngineKind, Rule};
+use squeeze::coordinator::{execute_job, service, JobSpec, Scheduler};
+use squeeze::fractal::catalog;
+use squeeze::memory;
+
+fn job(engine: EngineKind, r: u32, steps: u32) -> JobSpec {
+    JobSpec {
+        id: 0,
+        fractal: "sierpinski-triangle".into(),
+        engine,
+        r,
+        steps,
+        density: 0.4,
+        seed: 42,
+        rule: Rule::game_of_life(),
+        workers: 2,
+    }
+}
+
+#[test]
+fn the_three_paper_approaches_agree_over_long_runs() {
+    let bb = execute_job(&job(EngineKind::Bb, 6, 30)).unwrap();
+    let lam = execute_job(&job(EngineKind::Lambda, 6, 30)).unwrap();
+    let sq = execute_job(&job(EngineKind::Squeeze { rho: 1, tensor: false }, 6, 30)).unwrap();
+    let sqb = execute_job(&job(EngineKind::Squeeze { rho: 8, tensor: false }, 6, 30)).unwrap();
+    assert_eq!(bb.state_hash, lam.state_hash);
+    assert_eq!(bb.state_hash, sq.state_hash);
+    assert_eq!(bb.state_hash, sqb.state_hash);
+    assert_eq!(bb.population, sq.population);
+}
+
+#[test]
+fn memory_ordering_matches_paper_p2() {
+    // BB ≥ λ(ω) >> Squeeze, and Squeeze grows with ρ (micro-fractal
+    // overhead) — Table 2's qualitative content, measured on live engines.
+    let r = 10;
+    let bb = execute_job(&job(EngineKind::Bb, r, 1)).unwrap();
+    let lam = execute_job(&job(EngineKind::Lambda, r, 1)).unwrap();
+    let sq1 = execute_job(&job(EngineKind::Squeeze { rho: 1, tensor: false }, r, 1)).unwrap();
+    let sq16 = execute_job(&job(EngineKind::Squeeze { rho: 16, tensor: false }, r, 1)).unwrap();
+    assert!(bb.memory_bytes >= lam.memory_bytes);
+    assert!(lam.memory_bytes > sq16.memory_bytes);
+    assert!(sq16.memory_bytes > sq1.memory_bytes);
+    // measured engine (u8 cells, 2 buffers + tiny λ tables) matches the
+    // accounting model to within the table overhead
+    let spec = catalog::sierpinski_triangle();
+    let model1 = 2 * memory::squeeze_bytes(&spec, r, 1, 1);
+    assert!(sq1.memory_bytes >= model1 && sq1.memory_bytes < model1 + model1 / 10);
+    assert_eq!(sq16.memory_bytes, 2 * memory::squeeze_bytes(&spec, r, 16, 1));
+}
+
+#[test]
+fn scheduler_handles_a_mixed_batch() {
+    let sched = Scheduler::start(3);
+    for (i, kind) in [
+        EngineKind::Bb,
+        EngineKind::Lambda,
+        EngineKind::Squeeze { rho: 1, tensor: false },
+        EngineKind::Squeeze { rho: 2, tensor: false },
+        EngineKind::Squeeze { rho: 4, tensor: true },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut j = job(kind, 4, 4);
+        j.id = i as u64;
+        sched.submit(j);
+    }
+    let results = sched.shutdown();
+    assert_eq!(results.len(), 5);
+    let hashes: Vec<u64> = results
+        .iter()
+        .map(|r| r.as_ref().unwrap().state_hash)
+        .collect();
+    assert!(hashes.windows(2).all(|w| w[0] == w[1]));
+}
+
+#[test]
+fn service_session_end_to_end() {
+    let script = "\
+engine=bb r=5 steps=10 workers=2
+engine=lambda r=5 steps=10 workers=2
+engine=squeeze:4 r=5 steps=10 workers=2
+metrics
+quit
+";
+    let mut out = Vec::new();
+    service::serve(script.as_bytes(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let rows: Vec<&str> = text
+        .lines()
+        .filter(|l| !l.starts_with('#') && !l.is_empty())
+        .collect();
+    assert_eq!(rows.len(), 3, "{text}");
+    let hashes: Vec<&str> = rows.iter().map(|r| r.split('\t').last().unwrap()).collect();
+    assert!(hashes.windows(2).all(|w| w[0] == w[1]), "{text}");
+    assert!(text.contains("completed=3"), "{text}");
+}
+
+#[test]
+fn tensor_engine_results_match_scalar_through_coordinator() {
+    let scalar =
+        execute_job(&job(EngineKind::Squeeze { rho: 4, tensor: false }, 5, 12)).unwrap();
+    let tensor =
+        execute_job(&job(EngineKind::Squeeze { rho: 4, tensor: true }, 5, 12)).unwrap();
+    assert_eq!(scalar.state_hash, tensor.state_hash);
+}
+
+#[test]
+fn all_catalog_fractals_run_through_coordinator() {
+    for fractal in ["vicsek", "sierpinski-carpet", "empty-bottles", "chandelier"] {
+        let mut j = job(EngineKind::Squeeze { rho: 3, tensor: false }, 3, 5);
+        j.fractal = fractal.into();
+        let sq = execute_job(&j).unwrap();
+        let mut jb = job(EngineKind::Bb, 3, 5);
+        jb.fractal = fractal.into();
+        let bb = execute_job(&jb).unwrap();
+        assert_eq!(sq.state_hash, bb.state_hash, "{fractal}");
+    }
+}

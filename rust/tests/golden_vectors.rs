@@ -1,0 +1,99 @@
+//! Cross-layer golden-vector tests: the Rust maps/engines must agree
+//! exactly with the Python (JAX/Pallas) layer. Vectors are written by
+//! `python/compile/aot.py` into `artifacts/`; run `make artifacts` first.
+
+use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::{catalog, Coord};
+use squeeze::maps::{lambda, nu, MapCtx};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.tsv").exists().then_some(dir)
+}
+
+fn load_rows(name: &str) -> Option<Vec<Vec<i64>>> {
+    let dir = artifacts_dir()?;
+    let text = std::fs::read_to_string(dir.join(name)).ok()?;
+    Some(
+        text.lines()
+            .filter(|l| !l.starts_with('#') && !l.trim().is_empty())
+            .map(|l| {
+                l.split_whitespace()
+                    .map(|t| t.parse::<i64>().expect("golden vector numeric"))
+                    .collect()
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn lambda_matches_python_golden() {
+    let Some(rows) = load_rows("golden_lambda_sierpinski-triangle_r8.tsv") else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let spec = catalog::sierpinski_triangle();
+    let ctx = MapCtx::new(&spec, 8);
+    for row in rows {
+        let (_idx, cx, cy, ex, ey) = (row[0], row[1], row[2], row[3], row[4]);
+        let e = lambda(&ctx, Coord::new(cx as u32, cy as u32));
+        assert_eq!(
+            (e.x as i64, e.y as i64),
+            (ex, ey),
+            "λ({cx},{cy}) diverges from python"
+        );
+    }
+}
+
+#[test]
+fn nu_matches_python_golden() {
+    let Some(rows) = load_rows("golden_nu_sierpinski-triangle_r8.tsv") else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let spec = catalog::sierpinski_triangle();
+    let ctx = MapCtx::new(&spec, 8);
+    for row in rows {
+        let (ex, ey, valid, cx, cy) = (row[0], row[1], row[2] != 0, row[3], row[4]);
+        let got = nu(&ctx, Coord::new(ex as u32, ey as u32));
+        match (valid, got) {
+            (true, Some(c)) => assert_eq!(
+                (c.x as i64, c.y as i64),
+                (cx, cy),
+                "ν({ex},{ey}) diverges from python"
+            ),
+            (false, None) => {}
+            (want, got) => panic!("ν({ex},{ey}) validity: python={want} rust={got:?}"),
+        }
+    }
+}
+
+#[test]
+fn step_populations_match_python_golden() {
+    let Some(rows) = load_rows("golden_step_sierpinski-triangle_r5.tsv") else {
+        eprintln!("skipped: artifacts not built");
+        return;
+    };
+    let spec = catalog::sierpinski_triangle();
+    let mut engine = build(
+        &spec,
+        &EngineConfig {
+            kind: EngineKind::Squeeze { rho: 1, tensor: false },
+            r: 5,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: 2,
+        },
+    );
+    assert_eq!(engine.population(), rows[0][1] as u64, "seed state");
+    for row in &rows[1..] {
+        engine.step();
+        assert_eq!(
+            engine.population(),
+            row[1] as u64,
+            "population after step {}",
+            row[0]
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! PJRT integration: load the AOT artifacts, execute them, and verify
+//! bit-exact agreement with the native Rust engines (the three-layer
+//! contract). Skips gracefully when artifacts are not built.
+
+use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::{catalog, Coord};
+use squeeze::maps::{nu, MapCtx};
+use squeeze::runtime::Runtime;
+
+fn open_runtime() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipped: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime"))
+}
+
+fn seeded_state(cells: u64) -> Vec<f32> {
+    (0..cells)
+        .map(|i| {
+            if squeeze::ca::engine::seeded_alive(42, i, 0.4) {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn squeeze_artifact_matches_native_engine() {
+    let Some(mut rt) = open_runtime() else { return };
+    let name = "squeeze_sierpinski-triangle_r4";
+    let meta = rt.meta(name).expect("artifact in manifest").clone();
+    let state = seeded_state(meta.rows * meta.cols);
+    let out = rt.run_steps(name, &state, 5).expect("execute");
+
+    let spec = catalog::by_name(&meta.fractal).unwrap();
+    let mut engine = build(
+        &spec,
+        &EngineConfig {
+            kind: EngineKind::Squeeze { rho: 1, tensor: false },
+            r: meta.r,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: 2,
+        },
+    );
+    for _ in 0..5 {
+        engine.step();
+    }
+    for idx in 0..meta.rows * meta.cols {
+        assert_eq!(
+            out[idx as usize] > 0.5,
+            engine.cell(idx) == 1,
+            "mismatch at compact idx {idx}"
+        );
+    }
+}
+
+#[test]
+fn fused_multistep_artifact_equals_repeated_single_steps() {
+    let Some(mut rt) = open_runtime() else { return };
+    let single = "squeeze_sierpinski-triangle_r6";
+    let fused = "squeeze_sierpinski-triangle_r6_x10";
+    let meta = rt.meta(single).expect("artifact").clone();
+    let state = seeded_state(meta.rows * meta.cols);
+    let a = rt.run_steps(single, &state, 10).expect("single x10");
+    let b = rt.run_steps(fused, &state, 1).expect("fused x10");
+    assert_eq!(a, b, "fori_loop fusion must not change results");
+}
+
+#[test]
+fn bb_artifact_matches_native_bb() {
+    let Some(mut rt) = open_runtime() else { return };
+    let name = "bb_sierpinski-triangle_r4";
+    let meta = rt.meta(name).expect("artifact").clone();
+    let spec = catalog::by_name(&meta.fractal).unwrap();
+    // scatter the canonical seed into expanded space
+    let ctx = MapCtx::new(&spec, meta.r);
+    let n = meta.rows;
+    let mut grid = vec![0f32; (n * n) as usize];
+    for idx in 0..spec.cells(meta.r) {
+        if squeeze::ca::engine::seeded_alive(42, idx, 0.4) {
+            let e = squeeze::maps::lambda_linear(&ctx, idx);
+            grid[(e.y as u64 * n + e.x as u64) as usize] = 1.0;
+        }
+    }
+    let out = rt.run_steps(name, &grid, 4).expect("execute");
+
+    let mut engine = build(
+        &spec,
+        &EngineConfig {
+            kind: EngineKind::Bb,
+            r: meta.r,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: 2,
+        },
+    );
+    for _ in 0..4 {
+        engine.step();
+    }
+    // compare in canonical compact order
+    for idx in 0..spec.cells(meta.r) {
+        let e = squeeze::maps::lambda_linear(&ctx, idx);
+        let pjrt = out[(e.y as u64 * n + e.x as u64) as usize] > 0.5;
+        assert_eq!(pjrt, engine.cell(idx) == 1, "mismatch at {idx}");
+    }
+}
+
+#[test]
+fn nu_probe_artifact_matches_rust_map() {
+    let Some(mut rt) = open_runtime() else { return };
+    let name = "nu_probe_sierpinski-triangle_r8_b1024";
+    let meta = rt.meta(name).expect("artifact").clone();
+    let spec = catalog::by_name(&meta.fractal).unwrap();
+    let ctx = MapCtx::new(&spec, meta.r);
+    let mut prng = squeeze::util::prng::Prng::new(99);
+    let pts: Vec<(f32, f32)> = (0..256)
+        .map(|_| {
+            (
+                prng.below(ctx.n as u64) as f32,
+                prng.below(ctx.n as u64) as f32,
+            )
+        })
+        .collect();
+    let got = rt.run_nu_probe(name, &pts).expect("probe");
+    for (i, &(x, y)) in pts.iter().enumerate() {
+        let want = nu(&ctx, Coord::new(x as u32, y as u32)).map(|c| (c.x, c.y));
+        assert_eq!(got[i], want, "ν({x},{y})");
+    }
+}
+
+#[test]
+fn vicsek_artifact_cross_fractal() {
+    let Some(mut rt) = open_runtime() else { return };
+    let name = "squeeze_vicsek_r4";
+    let meta = rt.meta(name).expect("artifact").clone();
+    let state = seeded_state(meta.rows * meta.cols);
+    let out = rt.run_steps(name, &state, 3).expect("execute");
+    let spec = catalog::by_name("vicsek").unwrap();
+    let mut engine = build(
+        &spec,
+        &EngineConfig {
+            kind: EngineKind::Squeeze { rho: 1, tensor: false },
+            r: 4,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: 2,
+        },
+    );
+    for _ in 0..3 {
+        engine.step();
+    }
+    for idx in 0..meta.rows * meta.cols {
+        assert_eq!(out[idx as usize] > 0.5, engine.cell(idx) == 1, "idx {idx}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Property-based tests over the core invariants, using the in-repo
+//! mini-proptest framework (`util::proptest`): randomized fractals,
+//! levels and coordinates with shrinking on failure.
+
+use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::{catalog, Coord};
+use squeeze::maps::mma::{lambda_a_fragment, lambda_batch_mma, nu_a_fragment, nu_batch_mma};
+use squeeze::maps::{lambda, nu, on_fractal, BlockCtx, MapCtx};
+use squeeze::tcu::MmaMode;
+use squeeze::util::proptest::Runner;
+
+fn specs() -> Vec<squeeze::fractal::FractalSpec> {
+    catalog::all()
+}
+
+#[test]
+fn prop_nu_inverts_lambda() {
+    let all = specs();
+    Runner::new("nu∘lambda=id", 0xA1).run(4000, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(0, 12);
+        let ctx = MapCtx::new(spec, r);
+        let idx = g.u64(0, ctx.compact.area() - 1);
+        let c = Coord::from_linear(idx, ctx.compact.w);
+        let e = lambda(&ctx, c);
+        Runner::check(
+            nu(&ctx, e) == Some(c),
+            &format!("{} r={r} c={c} e={e}", spec.name),
+        )
+    });
+}
+
+#[test]
+fn prop_nu_membership_equals_spec_contains() {
+    let all = specs();
+    Runner::new("nu-validity=membership", 0xA2).run(3000, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(1, 8);
+        let ctx = MapCtx::new(spec, r);
+        let x = g.u32(0, ctx.n * 2); // include out-of-range
+        let y = g.u32(0, ctx.n * 2);
+        let e = Coord::new(x, y);
+        let via_nu = nu(&ctx, e).is_some();
+        let via_spec = spec.contains(e, r);
+        Runner::check(
+            via_nu == via_spec && via_nu == on_fractal(&ctx, e),
+            &format!("{} r={r} e={e}: nu={via_nu} spec={via_spec}", spec.name),
+        )
+    });
+}
+
+#[test]
+fn prop_lambda_image_lies_on_fractal() {
+    let all = specs();
+    Runner::new("lambda-image-on-fractal", 0xA3).run(3000, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(0, 10);
+        let ctx = MapCtx::new(spec, r);
+        let idx = g.u64(0, ctx.compact.area() - 1);
+        let e = lambda(&ctx, Coord::from_linear(idx, ctx.compact.w));
+        Runner::check(
+            spec.contains(e, r),
+            &format!("{} r={r} idx={idx} -> {e} off fractal", spec.name),
+        )
+    });
+}
+
+#[test]
+fn prop_mma_encoding_matches_scalar_maps() {
+    let all = specs();
+    Runner::new("mma=scalar", 0xA4).run(600, |g| {
+        let spec = g.choose(&all);
+        // stay inside the FP16 exactness envelope (maps::mma documents it;
+        // outside it the paper's FP16 configuration is genuinely unsound,
+        // pinned by fp16_exactness_cliff_at_thread_level_r16)
+        let r_max = squeeze::maps::mma::fp16_exact_max_level(spec).min(10);
+        let r = g.u32(1, r_max);
+        let ctx = MapCtx::new(spec, r);
+        let nu_a = nu_a_fragment(&ctx);
+        let la = lambda_a_fragment(&ctx);
+        // batch of up to 8 compact points
+        let count = g.usize(1, 8);
+        let pts: Vec<Coord> = (0..count)
+            .map(|_| Coord::from_linear(g.u64(0, ctx.compact.area() - 1), ctx.compact.w))
+            .collect();
+        let lam_mma = lambda_batch_mma(&ctx, &la, &pts, MmaMode::Fp16);
+        for (i, &c) in pts.iter().enumerate() {
+            let want = lambda(&ctx, c);
+            if lam_mma[i] != want {
+                return Err(format!(
+                    "{} r={r} λ-mma {c}: {} != {want}",
+                    spec.name, lam_mma[i]
+                ));
+            }
+        }
+        let expanded: Vec<Coord> = pts.iter().map(|&c| lambda(&ctx, c)).collect();
+        let nu_mma = nu_batch_mma(&ctx, &nu_a, &expanded, MmaMode::Fp16);
+        for (i, &c) in pts.iter().enumerate() {
+            if nu_mma[i] != Some(c) {
+                return Err(format!("{} r={r} ν-mma: {:?} != {c}", spec.name, nu_mma[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_storage_is_a_bijection() {
+    let all = specs();
+    Runner::new("block-storage-bijection", 0xA5).run(400, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(2, 7);
+        let intra = g.u32(0, 2.min(r));
+        let rho = spec.s.pow(intra);
+        let b = BlockCtx::new(spec, r, rho).expect("valid rho");
+        let full = MapCtx::new(spec, r);
+        let idx = g.u64(0, full.compact.area() - 1);
+        let e = lambda(&full, Coord::from_linear(idx, full.compact.w));
+        let slot = b
+            .storage_index(e)
+            .ok_or_else(|| format!("{} rho={rho} fractal cell {e} has no slot", spec.name))?;
+        Runner::check(
+            slot < b.stored_cells() && b.expanded_of_slot(slot) == e,
+            &format!("{} r={r} rho={rho} e={e} slot={slot}", spec.name),
+        )
+    });
+}
+
+#[test]
+fn prop_engines_agree_after_random_runs() {
+    let all = specs();
+    Runner::new("engines-agree", 0xA6).run(25, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(2, 4);
+        let steps = g.u32(1, 5);
+        let seed = g.u64(0, u64::MAX / 2);
+        let density_pct = g.u64(10, 90);
+        let rho = spec.s.pow(g.u32(0, 1));
+        let mut hashes = Vec::new();
+        for kind in [
+            EngineKind::Bb,
+            EngineKind::Lambda,
+            EngineKind::Squeeze { rho: 1, tensor: false },
+            EngineKind::Squeeze { rho, tensor: false },
+        ] {
+            let mut e = build(
+                spec,
+                &EngineConfig {
+                    kind,
+                    r,
+                    rule: Rule::game_of_life(),
+                    density: density_pct as f64 / 100.0,
+                    seed,
+                    workers: 2,
+                },
+            );
+            for _ in 0..steps {
+                e.step();
+            }
+            hashes.push((e.name(), e.state_hash()));
+        }
+        let first = hashes[0].1;
+        Runner::check(
+            hashes.iter().all(|(_, h)| *h == first),
+            &format!(
+                "{} r={r} steps={steps} seed={seed} d={density_pct}%: {hashes:?}",
+                spec.name
+            ),
+        )
+    });
+}
+
+#[test]
+fn prop_population_conserved_under_still_life_rule() {
+    // Rule B/S012345678: every live cell survives, nothing is born —
+    // population must stay exactly constant on any fractal.
+    let all = specs();
+    Runner::new("still-life-rule", 0xA7).run(50, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(2, 5);
+        let rule = Rule::parse("B/S012345678").unwrap();
+        let mut e = build(
+            spec,
+            &EngineConfig {
+                kind: EngineKind::Squeeze { rho: 1, tensor: false },
+                r,
+                rule,
+                density: 0.5,
+                seed: g.u64(0, 1 << 40),
+                workers: 1,
+            },
+        );
+        let before = e.population();
+        e.step();
+        e.step();
+        Runner::check(
+            e.population() == before,
+            &format!("{} r={r}: {before} -> {}", spec.name, e.population()),
+        )
+    });
+}
