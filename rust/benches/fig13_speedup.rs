@@ -1,13 +1,19 @@
 //! Regenerates paper Fig. 13: speedup of Squeeze over BB per block size,
-//! and checks the two qualitative claims — speedup grows with the fractal
-//! level, and λ(ω) acts as a performance lower bound (i.e. λ is at least
-//! as fast as thread-level Squeeze).
+//! and checks three qualitative claims — speedup grows with the fractal
+//! level, λ(ω) acts as a performance lower bound (i.e. λ is at least as
+//! fast as thread-level Squeeze), and the cached parallel tiled block
+//! engine beats the serial path at the largest level while staying
+//! bit-identical to the expanded BB reference.
 //!
 //!     cargo bench --bench fig13_speedup
 
-use squeeze::ca::EngineKind;
+use squeeze::ca::bb::BbEngine;
+use squeeze::ca::engine::run_and_hash;
+use squeeze::ca::squeeze_block::SqueezeBlockEngine;
+use squeeze::ca::{Engine, EngineKind, MapPath, Rule};
 use squeeze::fractal::catalog;
-use squeeze::harness::{figures, speedups_vs_bb, BenchOpts};
+use squeeze::harness::{bench, figures, speedups_vs_bb, BenchOpts};
+use squeeze::maps::MapCache;
 
 fn main() {
     let r_max: u32 = std::env::var("SQUEEZE_BENCH_R_MAX")
@@ -65,4 +71,58 @@ fn main() {
         }
     }
     println!("fig13 OK: speedup grows with r; λ(ω) is a performance lower bound");
+
+    // Claim 3 (map-cache + parallel tiled stepping): at the largest level
+    // the cached block engine stepped across the worker pool must beat the
+    // single-worker path, and both must stay bit-identical to BB.
+    let r_big = r_max.min(12);
+    if r_big < 10 {
+        // rho=16 needs 4 intra levels, and below r=10 (3^6 = 729 coarse
+        // blocks) per-step thread-spawn overhead can beat the ~µs of
+        // work, making the serial-vs-parallel comparison meaningless
+        println!("fig13: skipping claim 3 (r_max={r_max} too small for a rho=16 parallel run)");
+        return;
+    }
+    let rule = Rule::game_of_life();
+    let cache = MapCache::new();
+    let mk = |workers: usize| {
+        SqueezeBlockEngine::with_cache(
+            &spec,
+            r_big,
+            16,
+            rule,
+            0.4,
+            42,
+            workers,
+            MapPath::Scalar,
+            Some(&cache),
+        )
+    };
+    let mut serial = mk(1);
+    let mut parallel = mk(workers.max(2));
+    let serial_s = bench(&opts, || serial.step()).mean;
+    let parallel_s = bench(&opts, || parallel.step()).mean;
+    println!(
+        "squeeze:16 r={r_big}: serial {serial_s:.3e}s/step vs parallel({}) {parallel_s:.3e}s/step \
+         ({:.2}x), map_cache {}/{} lookups hit",
+        workers.max(2),
+        serial_s / parallel_s,
+        cache.stats().hits,
+        cache.stats().hits + cache.stats().misses,
+    );
+    if workers >= 2 {
+        assert!(
+            parallel_s < serial_s,
+            "parallel tiled stepping must beat the serial path at r={r_big}: \
+             {parallel_s} vs {serial_s}"
+        );
+    }
+    let mut fresh = mk(workers.max(2));
+    let mut bb = BbEngine::new(&spec, r_big, rule, 0.4, 42, workers.max(2));
+    assert_eq!(
+        run_and_hash(&mut fresh, 4),
+        run_and_hash(&mut bb, 4),
+        "cached parallel block engine must stay bit-identical to BB at r={r_big}"
+    );
+    println!("fig13 OK: cached parallel tiled stepping beats serial and matches BB");
 }

@@ -30,7 +30,9 @@ fn main() {
 
     let spec = catalog::sierpinski_triangle();
     let opts = BenchOpts::sweep().from_env();
-    figures::fig14_measured(&spec, 6, 9, 16, squeeze::util::pool::default_workers(), &opts)
+    // ρ=1: only the thread-level engine still runs the simulated-WMMA
+    // path per step — block engines amortize ν into the cached adjacency
+    figures::fig14_measured(&spec, 6, 9, 1, squeeze::util::pool::default_workers(), &opts)
         .expect("fig14 measured");
     println!("fig14 OK");
 }

@@ -8,6 +8,7 @@ use super::rule::Rule;
 use super::squeeze::{MapPath, SqueezeEngine};
 use super::squeeze_block::SqueezeBlockEngine;
 use crate::fractal::FractalSpec;
+use crate::maps::MapCache;
 use crate::tcu::MmaMode;
 
 /// The paper's three approaches (§4): BB, λ(ω), Squeeze — the latter at
@@ -48,8 +49,19 @@ pub struct EngineConfig {
     pub workers: usize,
 }
 
-/// Build an engine over the given fractal.
+/// Build an engine over the given fractal (no map sharing).
 pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
+    build_with_cache(spec, cfg, None)
+}
+
+/// Build an engine over the given fractal, sourcing its precomputed maps
+/// from `cache` when one is supplied — the seam the coordinator uses to
+/// share λ/ν tables across queued jobs of the same fractal.
+pub fn build_with_cache(
+    spec: &FractalSpec,
+    cfg: &EngineConfig,
+    cache: Option<&MapCache>,
+) -> Box<dyn Engine> {
     match cfg.kind {
         EngineKind::Bb => Box::new(BbEngine::new(
             spec,
@@ -59,13 +71,14 @@ pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
             cfg.seed,
             cfg.workers,
         )),
-        EngineKind::Lambda => Box::new(LambdaEngine::new(
+        EngineKind::Lambda => Box::new(LambdaEngine::with_cache(
             spec,
             cfg.r,
             cfg.rule,
             cfg.density,
             cfg.seed,
             cfg.workers,
+            cache,
         )),
         EngineKind::Squeeze { rho, tensor } => {
             let path = if tensor {
@@ -74,7 +87,7 @@ pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
                 MapPath::Scalar
             };
             if rho <= 1 {
-                Box::new(SqueezeEngine::new(
+                Box::new(SqueezeEngine::with_cache(
                     spec,
                     cfg.r,
                     cfg.rule,
@@ -82,9 +95,10 @@ pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
                     cfg.seed,
                     cfg.workers,
                     path,
+                    cache,
                 ))
             } else {
-                Box::new(SqueezeBlockEngine::new(
+                Box::new(SqueezeBlockEngine::with_cache(
                     spec,
                     cfg.r,
                     rho,
@@ -93,6 +107,7 @@ pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
                     cfg.seed,
                     cfg.workers,
                     path,
+                    cache,
                 ))
             }
         }
@@ -122,6 +137,33 @@ mod tests {
         );
         assert_eq!(EngineKind::parse("hilbert"), None);
         assert_eq!(EngineKind::parse("squeeze:x"), None);
+    }
+
+    #[test]
+    fn cached_builds_share_maps_and_agree_with_uncached() {
+        let spec = catalog::sierpinski_triangle();
+        let cache = MapCache::new();
+        let cfg = EngineConfig {
+            kind: EngineKind::Squeeze { rho: 4, tensor: false },
+            r: 5,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 3,
+            workers: 2,
+        };
+        let mut plain = build(&spec, &cfg);
+        let mut cached_a = build_with_cache(&spec, &cfg, Some(&cache));
+        let mut cached_b = build_with_cache(&spec, &cfg, Some(&cache));
+        for _ in 0..5 {
+            plain.step();
+            cached_a.step();
+            cached_b.step();
+        }
+        assert_eq!(plain.state_hash(), cached_a.state_hash());
+        assert_eq!(plain.state_hash(), cached_b.state_hash());
+        // second cached build reused the first build's tables
+        assert_eq!(cache.stats().misses, 1);
+        assert!(cache.stats().hits >= 1);
     }
 
     #[test]

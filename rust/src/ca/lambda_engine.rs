@@ -11,14 +11,15 @@ use super::engine::{seeded_alive, Engine};
 use super::grid::DoubleBuffer;
 use super::rule::Rule;
 use crate::fractal::{FractalSpec, MOORE};
-use crate::maps::lambda::LambdaTable;
-use crate::maps::{lambda_linear, MapCtx};
+use crate::maps::cache::{MapCache, ThreadMaps};
+use crate::maps::lambda_linear;
 use crate::util::pool::parallel_for_chunks;
+use std::sync::Arc;
 
 pub struct LambdaEngine {
-    ctx: MapCtx,
-    /// Separable λ tables (§Perf iteration 5).
-    lambda_table: LambdaTable,
+    /// Shared (possibly cached) map bundle: context + separable λ tables
+    /// (§Perf iteration 5).
+    maps: Arc<ThreadMaps>,
     rule: Rule,
     /// Expanded-space state (holes permanently dead).
     buf: DoubleBuffer,
@@ -34,19 +35,35 @@ impl LambdaEngine {
         seed: u64,
         workers: usize,
     ) -> LambdaEngine {
-        let ctx = MapCtx::new(spec, r);
+        Self::with_cache(spec, r, rule, density, seed, workers, None)
+    }
+
+    /// Build the engine, taking the map bundle from `cache` when given
+    /// (shared across engines/jobs) or building a private one otherwise.
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        cache: Option<&MapCache>,
+    ) -> LambdaEngine {
+        let maps = match cache {
+            Some(c) => c.thread_maps(spec, r),
+            None => Arc::new(ThreadMaps::build(spec, r)),
+        };
+        let ctx = &maps.ctx;
         let n = ctx.n as u64;
         let mut buf = DoubleBuffer::zeroed(n * n);
         for idx in 0..ctx.compact.area() {
             if seeded_alive(seed, idx, density) {
-                let e = lambda_linear(&ctx, idx);
+                let e = lambda_linear(ctx, idx);
                 buf.cur[e.linear(ctx.n) as usize] = 1;
             }
         }
-        let lambda_table = LambdaTable::new(&ctx);
         LambdaEngine {
-            ctx,
-            lambda_table,
+            maps,
             rule,
             buf,
             workers,
@@ -65,11 +82,11 @@ impl Engine for LambdaEngine {
     }
 
     fn step(&mut self) {
-        let ctx = &self.ctx;
+        let ctx = &self.maps.ctx;
         let n = ctx.n;
         let cur = &self.buf.cur;
         let rule = self.rule;
-        let lam = &self.lambda_table;
+        let lam = &self.maps.lambda_table;
         let out = OutPtr(self.buf.next.as_mut_ptr());
         // Compact grid: one thread per fractal cell.
         parallel_for_chunks(ctx.compact.area(), self.workers, move |start, end| {
@@ -99,7 +116,7 @@ impl Engine for LambdaEngine {
     }
 
     fn cells(&self) -> u64 {
-        self.ctx.compact.area()
+        self.maps.ctx.compact.area()
     }
 
     fn population(&self) -> u64 {
@@ -107,12 +124,13 @@ impl Engine for LambdaEngine {
     }
 
     fn memory_bytes(&self) -> u64 {
-        self.buf.bytes() + self.lambda_table.bytes()
+        self.buf.bytes() + self.maps.lambda_table.bytes()
     }
 
     fn cell(&self, idx: u64) -> u8 {
-        let e = lambda_linear(&self.ctx, idx);
-        self.buf.cur[e.linear(self.ctx.n) as usize]
+        let ctx = &self.maps.ctx;
+        let e = lambda_linear(ctx, idx);
+        self.buf.cur[e.linear(ctx.n) as usize]
     }
 }
 
@@ -158,7 +176,7 @@ mod tests {
         let la = LambdaEngine::new(&spec, 5, Rule::game_of_life(), 0.3, 1, 1);
         assert_eq!(
             la.memory_bytes(),
-            2 * 32 * 32 + la.lambda_table.bytes()
+            2 * 32 * 32 + la.maps.lambda_table.bytes()
         );
     }
 }

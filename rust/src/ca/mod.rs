@@ -11,6 +11,6 @@ pub mod squeeze;
 pub mod squeeze_block;
 
 pub use engine::Engine;
-pub use factory::{build, EngineConfig, EngineKind};
+pub use factory::{build, build_with_cache, EngineConfig, EngineKind};
 pub use rule::Rule;
 pub use squeeze::MapPath;

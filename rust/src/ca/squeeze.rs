@@ -12,11 +12,12 @@ use super::engine::{seeded_alive, Engine};
 use super::grid::DoubleBuffer;
 use super::rule::Rule;
 use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::cache::{MapCache, ThreadMaps};
 use crate::maps::mma::{nu_a_fragment, nu_batch_mma};
-use crate::maps::lambda::LambdaTable;
-use crate::maps::{nu, MapCtx};
+use crate::maps::nu;
 use crate::tcu::{Fragment, MmaMode};
 use crate::util::pool::parallel_for_chunks;
+use std::sync::Arc;
 
 /// How the space maps are evaluated.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,9 +30,9 @@ pub enum MapPath {
 }
 
 pub struct SqueezeEngine {
-    ctx: MapCtx,
-    /// Separable λ tables (§Perf iteration 5): λ per cell is one add.
-    lambda_table: LambdaTable,
+    /// Shared (possibly cached) map bundle: context + separable λ tables
+    /// (§Perf iteration 5: λ per cell is one add).
+    maps: Arc<ThreadMaps>,
     rule: Rule,
     /// Compact-space state, row-major over the compact extent.
     buf: DoubleBuffer,
@@ -51,21 +52,38 @@ impl SqueezeEngine {
         workers: usize,
         path: MapPath,
     ) -> SqueezeEngine {
-        let ctx = MapCtx::new(spec, r);
-        let mut buf = DoubleBuffer::zeroed(ctx.compact.area());
-        for idx in 0..ctx.compact.area() {
+        Self::with_cache(spec, r, rule, density, seed, workers, path, None)
+    }
+
+    /// Build the engine, taking the map bundle from `cache` when given
+    /// (shared across engines/jobs) or building a private one otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+        cache: Option<&MapCache>,
+    ) -> SqueezeEngine {
+        let maps = match cache {
+            Some(c) => c.thread_maps(spec, r),
+            None => Arc::new(ThreadMaps::build(spec, r)),
+        };
+        let mut buf = DoubleBuffer::zeroed(maps.ctx.compact.area());
+        for idx in 0..maps.ctx.compact.area() {
             if seeded_alive(seed, idx, density) {
                 buf.cur[idx as usize] = 1;
             }
         }
         let nu_a = match path {
-            MapPath::Tensor(_) => Some(nu_a_fragment(&ctx)),
+            MapPath::Tensor(_) => Some(nu_a_fragment(&maps.ctx)),
             MapPath::Scalar => None,
         };
-        let lambda_table = LambdaTable::new(&ctx);
         SqueezeEngine {
-            ctx,
-            lambda_table,
+            maps,
             rule,
             buf,
             workers,
@@ -90,14 +108,14 @@ impl Engine for SqueezeEngine {
     }
 
     fn step(&mut self) {
-        let ctx = &self.ctx;
+        let ctx = &self.maps.ctx;
         let w = ctx.compact.w;
         let n = ctx.n as i64;
         let cur = &self.buf.cur;
         let rule = self.rule;
         let path = self.path;
         let nu_a = self.nu_a.as_ref();
-        let lam = &self.lambda_table;
+        let lam = &self.maps.lambda_table;
         let out = OutPtr(self.buf.next.as_mut_ptr());
         parallel_for_chunks(ctx.compact.area(), self.workers, move |start, end| {
             let p = out;
@@ -150,7 +168,7 @@ impl Engine for SqueezeEngine {
     }
 
     fn cells(&self) -> u64 {
-        self.ctx.compact.area()
+        self.maps.ctx.compact.area()
     }
 
     fn population(&self) -> u64 {
@@ -158,7 +176,7 @@ impl Engine for SqueezeEngine {
     }
 
     fn memory_bytes(&self) -> u64 {
-        self.buf.bytes() + self.lambda_table.bytes()
+        self.buf.bytes() + self.maps.lambda_table.bytes()
     }
 
     fn cell(&self, idx: u64) -> u8 {
@@ -245,11 +263,30 @@ mod tests {
         );
         assert_eq!(
             sq.memory_bytes(),
-            2 * spec.cells(8) + sq.lambda_table.bytes()
+            2 * spec.cells(8) + sq.maps.lambda_table.bytes()
         );
         // versus the BB embedding: (s²/k)^r reduction
         let bb_cells = spec.n(8) * spec.n(8);
         assert!(bb_cells / spec.cells(8) >= 9); // (4/3)^8 ≈ 9.99
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached() {
+        let spec = catalog::sierpinski_carpet();
+        let cache = crate::maps::MapCache::new();
+        let mut a = SqueezeEngine::with_cache(
+            &spec,
+            3,
+            Rule::game_of_life(),
+            0.4,
+            5,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        );
+        let mut b = SqueezeEngine::new(&spec, 3, Rule::game_of_life(), 0.4, 5, 2, MapPath::Scalar);
+        assert_eq!(run_and_hash(&mut a, 6), run_and_hash(&mut b, 6));
+        assert_eq!(cache.stats().misses, 1);
     }
 
     #[test]

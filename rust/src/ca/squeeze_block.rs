@@ -2,37 +2,43 @@
 //! paper's performance plots (best at ρ = 16).
 //!
 //! The compact grid is built over *blocks*: a coarse level-`r_b` fractal
-//! whose cells are `ρ × ρ` expanded micro-tiles. The maps run once per
-//! block (on block coordinates), so their `O(log log n)` cost is amortized
-//! over `ρ²` cells, interior neighbor access is plain 2D indexing inside
-//! the tile, and only tile-boundary accesses touch one of the ≤ 8
-//! neighboring blocks — whose storage slots are resolved once per block
-//! (optionally as one tensor-core MMA fragment, 8 ν maps at a time,
-//! exactly the paper's grouping).
+//! whose cells are `ρ × ρ` expanded micro-tiles. The maps run on block
+//! coordinates only, and since this engine went through the map-cache
+//! refactor they no longer run per step at all: the per-block λ and the
+//! ≤ 8 neighbor-block ν maps are materialized once into a
+//! [`BlockMaps`] adjacency table (optionally through the tensor-core MMA
+//! path, 8 ν maps per 16×16 fragment — the paper's grouping) and every
+//! step is pure table-driven tile stencilling.
+//!
+//! Stepping is tiled and parallel: the worker pool (`util::pool`) walks
+//! contiguous chunks of blocks — the CPU analogue of one CUDA thread
+//! block per coarse cell — writing into the back buffer of a
+//! [`DoubleBuffer`], so neighbor reads through the ν-resolved slots are
+//! race-free by construction.
 
 use super::engine::{seeded_alive, Engine};
 use super::grid::DoubleBuffer;
 use super::rule::Rule;
-use crate::fractal::{Coord, FractalSpec, MOORE};
-use crate::maps::mma::{nu_a_fragment, nu_batch_mma};
-use crate::maps::{lambda, nu, BlockCtx, MapCtx};
-use crate::tcu::{Fragment, MmaMode};
-use crate::util::pool::parallel_for_chunks;
 use super::squeeze::MapPath;
+use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
+use crate::maps::lambda::lambda;
+use crate::tcu::MmaMode;
+use crate::util::pool::parallel_for_chunks;
+use std::sync::Arc;
 
 pub struct SqueezeBlockEngine {
-    block: BlockCtx,
-    /// Full-resolution context (canonical indexing only, not the hot path).
-    full: MapCtx,
+    /// Shared (possibly cached) block-level map bundle.
+    maps: Arc<BlockMaps>,
     rule: Rule,
     /// Block-major storage: block slot × ρ² + intra offset.
     buf: DoubleBuffer,
     workers: usize,
     path: MapPath,
-    nu_a: Option<Fragment>,
 }
 
 impl SqueezeBlockEngine {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         spec: &FractalSpec,
         r: u32,
@@ -43,70 +49,60 @@ impl SqueezeBlockEngine {
         workers: usize,
         path: MapPath,
     ) -> SqueezeBlockEngine {
-        let block = BlockCtx::new(spec, r, rho).expect("invalid rho for spec");
-        let full = MapCtx::new(spec, r);
-        let mut buf = DoubleBuffer::zeroed(block.stored_cells());
+        Self::with_cache(spec, r, rho, rule, density, seed, workers, path, None)
+    }
+
+    /// Build the engine, taking the map bundle from `cache` when given
+    /// (shared across engines/jobs) or building a private one otherwise.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+        cache: Option<&MapCache>,
+    ) -> SqueezeBlockEngine {
+        let mma = match path {
+            MapPath::Scalar => None,
+            MapPath::Tensor(mode) => Some(mode),
+        };
+        let maps = match cache {
+            Some(c) => c
+                .block_maps(spec, r, rho, mma, workers)
+                .expect("invalid rho for spec"),
+            None => Arc::new(
+                BlockMaps::build(spec, r, rho, mma, workers).expect("invalid rho for spec"),
+            ),
+        };
+        let mut buf = DoubleBuffer::zeroed(maps.block.stored_cells());
         // Canonical seeding: compact linear index -> expanded -> slot.
+        let full = &maps.full;
         for idx in 0..full.compact.area() {
             if seeded_alive(seed, idx, density) {
-                let e = lambda(&full, Coord::from_linear(idx, full.compact.w));
-                let slot = block.storage_index(e).expect("fractal cell must have a slot");
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = maps
+                    .block
+                    .storage_index(e)
+                    .expect("fractal cell must have a slot");
                 buf.cur[slot as usize] = 1;
             }
         }
-        let nu_a = match path {
-            MapPath::Tensor(_) => Some(nu_a_fragment(&block.coarse)),
-            MapPath::Scalar => None,
-        };
         SqueezeBlockEngine {
-            block,
-            full,
+            maps,
             rule,
             buf,
             workers,
             path,
-            nu_a,
         }
     }
 
-    /// Resolve the storage base slots of the 8 Moore-neighbor blocks of
-    /// the block whose *expanded block coordinate* is `eb`. `None` =
-    /// outside the coarse fractal (or embedding).
-    fn neighbor_blocks(&self, eb: Coord) -> [Option<u64>; 8] {
-        let coarse = &self.block.coarse;
-        let tile = self.block.rho as u64 * self.block.rho as u64;
-        let mut out = [None; 8];
-        match self.path {
-            MapPath::Scalar => {
-                for (i, (dx, dy)) in MOORE.iter().enumerate() {
-                    if let Some(ne) = eb.offset(*dx, *dy) {
-                        out[i] = nu(coarse, ne).map(|cb| cb.linear(coarse.compact.w) * tile);
-                    }
-                }
-            }
-            MapPath::Tensor(mode) => {
-                // all 8 neighbor-block ν maps in one MMA fragment
-                let mut pts = [Coord::new(0, 0); 8];
-                let mut present = [false; 8];
-                let mut m = 0usize;
-                for (i, (dx, dy)) in MOORE.iter().enumerate() {
-                    if let Some(ne) = eb.offset(*dx, *dy) {
-                        pts[m] = ne;
-                        present[i] = true;
-                        m += 1;
-                    }
-                }
-                let mapped = nu_batch_mma(coarse, self.nu_a.as_ref().unwrap(), &pts[..m], mode);
-                let mut j = 0usize;
-                for i in 0..8 {
-                    if present[i] {
-                        out[i] = mapped[j].map(|cb| cb.linear(coarse.compact.w) * tile);
-                        j += 1;
-                    }
-                }
-            }
-        }
-        out
+    /// The shared map bundle (tests / capacity accounting).
+    pub fn maps(&self) -> &BlockMaps {
+        &self.maps
     }
 }
 
@@ -122,27 +118,23 @@ impl Engine for SqueezeBlockEngine {
             MapPath::Tensor(MmaMode::Fp16) => "squeeze-tcu",
             MapPath::Tensor(MmaMode::F32) => "squeeze-tcu-f32",
         };
-        format!("{base}-rho{}", self.block.rho)
+        format!("{base}-rho{}", self.maps.block.rho)
     }
 
     fn step(&mut self) {
-        let block = &self.block;
-        let coarse = &block.coarse;
+        let maps = &*self.maps;
+        let block = &maps.block;
         let rho = block.rho;
         let tile = rho as u64 * rho as u64;
         let cur = &self.buf.cur;
         let rule = self.rule;
         let out = OutPtr(self.buf.next.as_mut_ptr());
-        let this = &*self;
-        // one "thread block" per coarse fractal cell
+        // one "thread block" per coarse fractal cell; the adjacency table
+        // replaces the per-step λ + 8 ν of the pre-cache engine
         parallel_for_chunks(block.blocks(), self.workers, move |start, end| {
             let p = out;
             for bidx in start..end {
-                let cb = Coord::from_linear(bidx, coarse.compact.w);
-                // one λ per block: coarse compact -> coarse expanded
-                let eb = lambda(coarse, cb);
-                // ≤ 8 ν per block: neighbor block base slots
-                let nb = this.neighbor_blocks(eb);
+                let nb = maps.neighbors_of(bidx);
                 let base = bidx * tile;
                 // §Perf iteration 3: interior cells (all of whose Moore
                 // neighbors stay inside this tile) take a branch-free
@@ -182,17 +174,17 @@ impl Engine for SqueezeBlockEngine {
                                 let (bx, wrapped_x) = wrap(jx, rho);
                                 let (by, wrapped_y) = wrap(jy, rho);
                                 let nslot = if bx == 0 && by == 0 {
-                                    Some(base + (wrapped_y * rho + wrapped_x) as u64)
+                                    base + (wrapped_y * rho + wrapped_x) as u64
                                 } else {
-                                    // map (bx,by) ∈ {-1,0,1}² to Moore slot
-                                    let mi = moore_index(bx, by);
-                                    nb[mi].map(|nbase| {
-                                        nbase + (wrapped_y * rho + wrapped_x) as u64
-                                    })
+                                    // (bx,by) ∈ {-1,0,1}² -> Moore slot,
+                                    // resolved from the cached adjacency
+                                    let nbase = nb[moore_index(bx, by)];
+                                    if nbase == NO_BLOCK {
+                                        continue;
+                                    }
+                                    nbase + (wrapped_y * rho + wrapped_x) as u64
                                 };
-                                if let Some(ns) = nslot {
-                                    count += cur[ns as usize] as u32;
-                                }
+                                count += cur[nslot as usize] as u32;
                             }
                             count
                         };
@@ -206,7 +198,7 @@ impl Engine for SqueezeBlockEngine {
     }
 
     fn cells(&self) -> u64 {
-        self.full.compact.area()
+        self.maps.full.compact.area()
     }
 
     fn population(&self) -> u64 {
@@ -214,12 +206,15 @@ impl Engine for SqueezeBlockEngine {
     }
 
     fn memory_bytes(&self) -> u64 {
-        self.buf.bytes()
+        // state buffers + the materialized neighbor adjacency — the same
+        // accounting courtesy the λ-table engines extend to their tables
+        self.buf.bytes() + self.maps.table_bytes()
     }
 
     fn cell(&self, idx: u64) -> u8 {
-        let e = lambda(&self.full, Coord::from_linear(idx, self.full.compact.w));
-        let slot = self.block.storage_index(e).expect("fractal cell");
+        let full = &self.maps.full;
+        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+        let slot = self.maps.block.storage_index(e).expect("fractal cell");
         self.buf.cur[slot as usize]
     }
 }
@@ -348,10 +343,10 @@ mod tests {
                 1,
                 MapPath::Scalar,
             );
-            // two u8 buffers of k^{r_b}·ρ² cells
+            // two u8 buffers of k^{r_b}·ρ² cells, plus the adjacency table
             assert_eq!(
                 sq.memory_bytes(),
-                2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1),
+                2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1) + sq.maps.table_bytes(),
                 "rho={rho}"
             );
         }
@@ -373,7 +368,82 @@ mod tests {
             1,
             MapPath::Scalar,
         );
-        assert_eq!(sq.block.blocks(), 1);
+        assert_eq!(sq.maps.block.blocks(), 1);
         assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+
+    #[test]
+    fn parallel_stepping_is_deterministic_across_worker_counts() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 7;
+        let reference = {
+            let mut serial = SqueezeBlockEngine::new(
+                &spec,
+                r,
+                8,
+                Rule::game_of_life(),
+                0.42,
+                7,
+                1,
+                MapPath::Scalar,
+            );
+            run_and_hash(&mut serial, 8)
+        };
+        for workers in [2usize, 4, 8, 16] {
+            let mut par = SqueezeBlockEngine::new(
+                &spec,
+                r,
+                8,
+                Rule::game_of_life(),
+                0.42,
+                7,
+                workers,
+                MapPath::Scalar,
+            );
+            assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached_and_shares_maps() {
+        let spec = catalog::vicsek();
+        let cache = MapCache::new();
+        let mut uncached = SqueezeBlockEngine::new(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+        );
+        let mut a = SqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        );
+        let b = SqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            4,
+            MapPath::Scalar,
+            Some(&cache),
+        );
+        // two cached engines share one bundle; lookups are counted
+        assert!(Arc::ptr_eq(&a.maps, &b.maps));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(run_and_hash(&mut a, 6), run_and_hash(&mut uncached, 6));
     }
 }

@@ -1,7 +1,11 @@
 //! Coordinator metrics: atomic counters + aggregate throughput, cheap
-//! enough to update from every worker on every job.
+//! enough to update from every worker on every job. Includes the shared
+//! map-cache hit/miss gauges so a deployment can see how much λ/ν table
+//! reuse the job mix achieves.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::maps::CacheStats;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -12,6 +16,10 @@ pub struct Metrics {
     busy_us: AtomicU64,
     /// Total cell updates performed.
     cell_updates: AtomicU64,
+    /// Map-cache lookup counters (gauges mirrored from the shared
+    /// [`crate::maps::MapCache`]; absolute, not deltas).
+    map_cache_hits: AtomicU64,
+    map_cache_misses: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -22,6 +30,8 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     pub busy_us: u64,
     pub cell_updates: u64,
+    pub map_cache_hits: u64,
+    pub map_cache_misses: u64,
 }
 
 impl Metrics {
@@ -40,6 +50,13 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Mirror the shared map-cache counters (called after each job; the
+    /// cache counts cumulatively, so this stores absolute values).
+    pub fn record_map_cache(&self, stats: CacheStats) {
+        self.map_cache_hits.store(stats.hits, Ordering::Relaxed);
+        self.map_cache_misses.store(stats.misses, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             started: self.started.load(Ordering::Relaxed),
@@ -47,6 +64,8 @@ impl Metrics {
             failed: self.failed.load(Ordering::Relaxed),
             busy_us: self.busy_us.load(Ordering::Relaxed),
             cell_updates: self.cell_updates.load(Ordering::Relaxed),
+            map_cache_hits: self.map_cache_hits.load(Ordering::Relaxed),
+            map_cache_misses: self.map_cache_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -61,14 +80,27 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Map-cache hit rate over all lookups (0.0 when none happened).
+    pub fn map_cache_hit_rate(&self) -> f64 {
+        CacheStats {
+            hits: self.map_cache_hits,
+            misses: self.map_cache_misses,
+        }
+        .hit_rate()
+    }
+
     pub fn to_line(&self) -> String {
         format!(
-            "jobs started={} completed={} failed={} busy={:.3}s throughput={:.3e} upd/s",
+            "jobs started={} completed={} failed={} busy={:.3}s throughput={:.3e} upd/s \
+             map_cache={}/{} ({:.0}% hit)",
             self.started,
             self.completed,
             self.failed,
             self.busy_us as f64 / 1e6,
-            self.updates_per_busy_s()
+            self.updates_per_busy_s(),
+            self.map_cache_hits,
+            self.map_cache_hits + self.map_cache_misses,
+            self.map_cache_hit_rate() * 100.0
         )
     }
 }
@@ -95,5 +127,19 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.updates_per_busy_s(), 0.0);
         assert!(s.to_line().contains("completed=0"));
+        assert_eq!(s.map_cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn map_cache_gauges_mirror_stats() {
+        let m = Metrics::default();
+        m.record_map_cache(CacheStats { hits: 3, misses: 1 });
+        let s = m.snapshot();
+        assert_eq!((s.map_cache_hits, s.map_cache_misses), (3, 1));
+        assert!((s.map_cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(s.to_line().contains("map_cache=3/4"), "{}", s.to_line());
+        // gauges are absolute: re-recording overwrites
+        m.record_map_cache(CacheStats { hits: 10, misses: 2 });
+        assert_eq!(m.snapshot().map_cache_hits, 10);
     }
 }

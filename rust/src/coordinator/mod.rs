@@ -9,4 +9,4 @@ pub mod service;
 
 pub use job::{JobResult, JobSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use scheduler::{execute_job, Scheduler};
+pub use scheduler::{execute_job, execute_job_with_cache, Scheduler};

@@ -2,18 +2,33 @@
 //! simulation jobs. The L3 analogue of a serving router's request loop —
 //! requests (jobs) come in, get dispatched to workers, and results stream
 //! back over a channel in completion order.
+//!
+//! All workers share one [`MapCache`]: queued jobs of the same
+//! `(fractal, level, ρ)` reuse each other's precomputed λ/ν tables
+//! instead of rebuilding them per job, and the cache's hit/miss counters
+//! are mirrored into the scheduler [`Metrics`].
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
 use super::job::{JobResult, JobSpec};
 use super::metrics::Metrics;
-use crate::ca::{build, EngineConfig};
+use crate::ca::{build_with_cache, EngineConfig};
 use crate::fractal::catalog;
+use crate::maps::MapCache;
 use crate::util::timer::Timer;
 
-/// Execute one job synchronously (the worker body; also usable directly).
+/// Execute one job synchronously with private (uncached) maps.
 pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
+    execute_job_with_cache(spec, None)
+}
+
+/// Execute one job synchronously (the worker body; also usable directly),
+/// sourcing precomputed maps from `cache` when given.
+pub fn execute_job_with_cache(
+    spec: &JobSpec,
+    cache: Option<&MapCache>,
+) -> Result<JobResult, String> {
     let fractal = catalog::by_name(&spec.fractal)
         .ok_or_else(|| format!("unknown fractal {:?}", spec.fractal))?;
     let cfg = EngineConfig {
@@ -24,7 +39,7 @@ pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
         seed: spec.seed,
         workers: spec.workers,
     };
-    let mut engine = build(&fractal, &cfg);
+    let mut engine = build_with_cache(&fractal, &cfg, cache);
     let t = Timer::start();
     for _ in 0..spec.steps {
         engine.step();
@@ -52,6 +67,8 @@ pub struct Scheduler {
     results_rx: mpsc::Receiver<Result<JobResult, String>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// λ/ν tables shared by every worker (and inspectable by callers).
+    pub map_cache: Arc<MapCache>,
 }
 
 impl Scheduler {
@@ -61,11 +78,13 @@ impl Scheduler {
         let rx = Arc::new(Mutex::new(rx));
         let (results_tx, results_rx) = mpsc::channel();
         let metrics = Arc::new(Metrics::default());
+        let map_cache = Arc::new(MapCache::new());
         let mut handles = Vec::new();
         for _ in 0..workers.max(1) {
             let rx = Arc::clone(&rx);
             let results_tx = results_tx.clone();
             let metrics = Arc::clone(&metrics);
+            let cache = Arc::clone(&map_cache);
             handles.push(std::thread::spawn(move || loop {
                 let job = {
                     let guard = rx.lock().expect("scheduler queue poisoned");
@@ -73,11 +92,12 @@ impl Scheduler {
                 };
                 let Ok(job) = job else { break };
                 metrics.job_started();
-                let result = execute_job(&job);
+                let result = execute_job_with_cache(&job, Some(&cache));
                 match &result {
                     Ok(r) => metrics.job_finished(r.total_s, r.cells * r.steps as u64),
                     Err(_) => metrics.job_failed(),
                 }
+                metrics.record_map_cache(cache.stats());
                 if results_tx.send(result).is_err() {
                     break;
                 }
@@ -88,6 +108,7 @@ impl Scheduler {
             results_rx,
             handles,
             metrics,
+            map_cache,
         }
     }
 
@@ -179,5 +200,31 @@ mod tests {
         assert_eq!(results.len(), 5);
         assert_eq!(metrics.snapshot().completed, 5);
         assert_eq!(metrics.snapshot().failed, 0);
+    }
+
+    #[test]
+    fn queued_jobs_of_one_fractal_share_map_tables() {
+        let sched = Scheduler::start(2);
+        for i in 0..6 {
+            sched.submit(small_job(i, EngineKind::Squeeze { rho: 4, tensor: false }));
+        }
+        let metrics = Arc::clone(&sched.metrics);
+        let cache = Arc::clone(&sched.map_cache);
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 6);
+        // one build, five reuses — regardless of which worker ran which job
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 5);
+        // metrics mirror the cache (each worker records after its job;
+        // the gauges reflect some prefix of the lookup history)
+        let snap = metrics.snapshot();
+        assert!(snap.map_cache_hits + snap.map_cache_misses >= 1);
+        assert!(snap.map_cache_misses >= 1);
+        // and sharing must not change results
+        let hashes: Vec<u64> = results
+            .iter()
+            .map(|r| r.as_ref().unwrap().state_hash)
+            .collect();
+        assert!(hashes.windows(2).all(|w| w[0] == w[1]), "{hashes:?}");
     }
 }

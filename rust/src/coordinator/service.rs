@@ -13,13 +13,17 @@
 use std::io::{BufRead, Write};
 
 use super::job::{JobResult, JobSpec};
-use super::scheduler::execute_job;
 use super::metrics::Metrics;
+use super::scheduler::execute_job_with_cache;
+use crate::maps::MapCache;
 
 /// Run the service until EOF or `quit`. Jobs execute synchronously in
-/// request order (each job parallelizes internally over its `workers`).
+/// request order (each job parallelizes internally over its `workers`);
+/// one session-scoped [`MapCache`] lets consecutive jobs of the same
+/// fractal reuse each other's λ/ν tables.
 pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()> {
     let metrics = Metrics::default();
+    let cache = MapCache::new();
     writeln!(output, "# squeeze coordinator ready")?;
     writeln!(output, "# {}", JobResult::tsv_header())?;
     let mut next_id = 1u64;
@@ -42,7 +46,7 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
         match JobSpec::parse_line(id, trimmed) {
             Ok(spec) => {
                 metrics.job_started();
-                match execute_job(&spec) {
+                match execute_job_with_cache(&spec, Some(&cache)) {
                     Ok(result) => {
                         metrics.job_finished(result.total_s, result.cells * result.steps as u64);
                         writeln!(output, "{}", result.to_tsv())?;
@@ -52,6 +56,7 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
                         writeln!(output, "ERR {id} {msg}")?;
                     }
                 }
+                metrics.record_map_cache(cache.stats());
             }
             Err(msg) => {
                 writeln!(output, "ERR {id} {msg}")?;
@@ -99,6 +104,19 @@ mod tests {
     fn metrics_command_reports() {
         let out = run_session("engine=squeeze r=3 steps=1 workers=1\nmetrics\nquit\n");
         assert!(out.contains("completed=1"), "{out}");
+        assert!(out.contains("map_cache="), "{out}");
+    }
+
+    #[test]
+    fn repeated_jobs_hit_the_session_cache() {
+        let out = run_session(
+            "engine=squeeze:4 r=5 steps=1 workers=1\n\
+             engine=squeeze:4 r=5 steps=1 workers=1\n\
+             engine=squeeze:4 r=5 steps=1 workers=1\n\
+             metrics\nquit\n",
+        );
+        // 3 lookups of one key: 1 miss + 2 hits
+        assert!(out.contains("map_cache=2/3"), "{out}");
     }
 
     #[test]

@@ -114,6 +114,11 @@ pub fn fig14_modeled(r_lo: u32, r_hi: u32, map_frac: f64) -> std::io::Result<()>
 
 /// Fig. 14 measured companion: the simulated-WMMA path vs scalar maps on
 /// this host (validates the encoding; CPU ratios are not GPU ratios).
+///
+/// Use `rho = 1`: block-level engines (ρ>1) materialize their ν maps once
+/// into the cached adjacency table, so their scalar and tensor step loops
+/// are identical and the ratio degenerates to ~1.0 — only the
+/// thread-level engine still evaluates maps (and thus WMMA) per step.
 pub fn fig14_measured(
     spec: &FractalSpec,
     r_lo: u32,

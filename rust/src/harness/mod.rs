@@ -7,4 +7,4 @@ pub mod report;
 pub mod sweep;
 
 pub use bench::{bench, BenchOpts};
-pub use sweep::{measure, speedups_vs_bb, sweep, SweepPoint};
+pub use sweep::{measure, measure_with_cache, speedups_vs_bb, sweep, SweepPoint};

@@ -2,8 +2,9 @@
 //! (execution time) and Fig. 13 (speedup) reproductions.
 
 use super::bench::{bench, BenchOpts};
-use crate::ca::{build, EngineConfig, EngineKind, Rule};
+use crate::ca::{build_with_cache, EngineConfig, EngineKind, Rule};
 use crate::fractal::FractalSpec;
+use crate::maps::MapCache;
 use crate::util::stats::Summary;
 
 /// One measured configuration.
@@ -22,13 +23,27 @@ pub struct SweepPoint {
     pub memory_bytes: u64,
 }
 
-/// Measure one engine configuration: seconds per step.
+/// Measure one engine configuration with private maps: seconds per step.
 pub fn measure(
     spec: &FractalSpec,
     kind: EngineKind,
     r: u32,
     workers: usize,
     opts: &BenchOpts,
+) -> SweepPoint {
+    measure_with_cache(spec, kind, r, workers, opts, None)
+}
+
+/// Measure one engine configuration, sourcing λ/ν tables from `cache`
+/// when given (so a sweep pays each table build once — the deployment
+/// configuration the Fig. 12/13 reproductions now report).
+pub fn measure_with_cache(
+    spec: &FractalSpec,
+    kind: EngineKind,
+    r: u32,
+    workers: usize,
+    opts: &BenchOpts,
+    cache: Option<&MapCache>,
 ) -> SweepPoint {
     let cfg = EngineConfig {
         kind,
@@ -38,7 +53,7 @@ pub fn measure(
         seed: 42,
         workers,
     };
-    let mut engine = build(spec, &cfg);
+    let mut engine = build_with_cache(spec, &cfg, cache);
     let summary: Summary = bench(opts, || engine.step());
     SweepPoint {
         engine: engine.name(),
@@ -64,6 +79,7 @@ pub fn sweep(
     max_embedding_bytes: u64,
     opts: &BenchOpts,
 ) -> Vec<SweepPoint> {
+    let cache = MapCache::new();
     let mut out = Vec::new();
     for &kind in kinds {
         for r in r_lo..=r_hi {
@@ -82,7 +98,7 @@ pub fn sweep(
                     continue; // block larger than fractal
                 }
             }
-            out.push(measure(spec, kind, r, workers, opts));
+            out.push(measure_with_cache(spec, kind, r, workers, opts, Some(&cache)));
         }
     }
     out
@@ -160,6 +176,18 @@ mod tests {
             .map(|p| p.r)
             .collect();
         assert_eq!(sq, vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn measure_with_cache_reuses_tables() {
+        let spec = catalog::sierpinski_triangle();
+        let cache = MapCache::new();
+        let kind = EngineKind::Squeeze { rho: 4, tensor: false };
+        let a = measure_with_cache(&spec, kind, 5, 1, &quick(), Some(&cache));
+        let b = measure_with_cache(&spec, kind, 5, 1, &quick(), Some(&cache));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+        assert_eq!(a.cells, b.cells);
     }
 
     #[test]

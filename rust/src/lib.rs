@@ -14,7 +14,10 @@
 //!
 //! both `O(log_2 log_s n)` per evaluation and both expressible as 16×16
 //! matrix-multiply-accumulate operations ([`maps::mma`], executed by the
-//! software tensor-core simulator in [`tcu`]).
+//! software tensor-core simulator in [`tcu`]). Per-`(fractal, level, ρ)`
+//! map tables — including the block engine's fully materialized neighbor
+//! adjacency — are interned in [`maps::cache::MapCache`] and shared via
+//! `Arc` across engines and coordinator jobs.
 //!
 //! ## Layout (three-layer architecture)
 //!

@@ -1,0 +1,434 @@
+//! Shared map cache — precomputed λ/ν translations per `(fractal, level,
+//! ρ)`, shared via `Arc` across engines and coordinator jobs.
+//!
+//! The maps are pure functions of `(spec, r)`: everything an engine
+//! derives from them — the [`MapCtx`] tables, the separable
+//! [`LambdaTable`], and (for block-level Squeeze) the per-block Moore
+//! neighbor base slots — is immutable after construction and identical
+//! for every engine running the same configuration. Rebuilding them per
+//! engine is pure waste on a coordinator serving many jobs of the same
+//! fractal, and re-evaluating them per *step* (what the seed block engine
+//! did for its ≤ 8 neighbor-ν per block) is waste inside a single run.
+//!
+//! `MapCache` interns these bundles behind `Arc`s. Lookups are counted
+//! (hit/miss) and surfaced through `coordinator::metrics`. Construction
+//! happens under the cache lock, so concurrent first lookups of one key
+//! build exactly once — which keeps the accounting deterministic and
+//! testable. The known tradeoff is that first-time builds of *different*
+//! keys also serialize; builds are one-time and amortized, so per-key
+//! locking (an `Arc<OnceLock>` per entry) is deliberately deferred until
+//! a workload shows the contention.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::block::{BlockCtx, BlockError};
+use super::ctx::MapCtx;
+use super::lambda::{lambda, LambdaTable};
+use super::mma::{nu_a_fragment, nu_batch_mma};
+use super::nu::nu;
+use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::tcu::MmaMode;
+use crate::util::pool::parallel_map_into;
+
+/// Sentinel in the block neighbor table: no neighbor block (fractal hole
+/// or outside the embedding).
+pub const NO_BLOCK: u64 = u64::MAX;
+
+/// Thread-level map bundle for one `(fractal, r)`: the evaluation context
+/// plus the separable λ tables. Everything the ρ=1 engines need.
+#[derive(Clone, Debug)]
+pub struct ThreadMaps {
+    pub ctx: MapCtx,
+    pub lambda_table: LambdaTable,
+}
+
+impl ThreadMaps {
+    pub fn build(spec: &FractalSpec, r: u32) -> ThreadMaps {
+        let ctx = MapCtx::new(spec, r);
+        let lambda_table = LambdaTable::new(&ctx);
+        ThreadMaps { ctx, lambda_table }
+    }
+}
+
+/// Block-level map bundle for one `(fractal, r, ρ)`: the coarse/micro
+/// geometry plus the fully materialized block adjacency — for every coarse
+/// block, the storage base slot of each of its 8 Moore neighbor blocks.
+///
+/// With this table the block engine's hot loop contains *zero* map
+/// evaluations: λ/ν run once here (amortized over every step of every
+/// engine sharing the bundle), exactly the paper's "maps are cheap enough
+/// to amortize" claim pushed to its limit.
+#[derive(Clone, Debug)]
+pub struct BlockMaps {
+    pub block: BlockCtx,
+    /// Full-resolution context (canonical seeding/indexing, not hot).
+    pub full: MapCtx,
+    /// Per-block Moore neighbor base slots; [`NO_BLOCK`] = absent.
+    neighbor_slots: Vec<[u64; 8]>,
+}
+
+impl BlockMaps {
+    /// Build the bundle, resolving neighbor blocks with scalar maps
+    /// (`mma = None`) or the simulated tensor-core path (`Some(mode)`,
+    /// 8 ν maps per 16×16 fragment — the paper's grouping).
+    pub fn build(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        mma: Option<MmaMode>,
+        workers: usize,
+    ) -> Result<BlockMaps, BlockError> {
+        let block = BlockCtx::new(spec, r, rho)?;
+        let full = MapCtx::new(spec, r);
+        let coarse = &block.coarse;
+        let w = coarse.compact.w;
+        let tile = rho as u64 * rho as u64;
+        let nblocks = block.blocks();
+        let nu_a = mma.map(|_| nu_a_fragment(coarse));
+        let nu_a_ref = nu_a.as_ref();
+        let mut neighbor_slots = vec![[NO_BLOCK; 8]; nblocks as usize];
+        parallel_map_into(&mut neighbor_slots, workers, move |bidx| {
+            let cb = Coord::from_linear(bidx, w);
+            let eb = lambda(coarse, cb);
+            let mut slots = [NO_BLOCK; 8];
+            match mma {
+                None => {
+                    for (m, (dx, dy)) in MOORE.iter().enumerate() {
+                        if let Some(ne) = eb.offset(*dx, *dy) {
+                            if let Some(cbn) = nu(coarse, ne) {
+                                slots[m] = cbn.linear(w) * tile;
+                            }
+                        }
+                    }
+                }
+                Some(mode) => {
+                    // all present neighbor-block ν maps in one fragment
+                    let mut pts = [Coord::new(0, 0); 8];
+                    let mut present = [false; 8];
+                    let mut count = 0usize;
+                    for (m, (dx, dy)) in MOORE.iter().enumerate() {
+                        if let Some(ne) = eb.offset(*dx, *dy) {
+                            pts[count] = ne;
+                            present[m] = true;
+                            count += 1;
+                        }
+                    }
+                    let mapped = nu_batch_mma(
+                        coarse,
+                        nu_a_ref.expect("fragment built for mma path"),
+                        &pts[..count],
+                        mode,
+                    );
+                    let mut j = 0usize;
+                    for (m, ok) in present.iter().enumerate() {
+                        if *ok {
+                            if let Some(cbn) = mapped[j] {
+                                slots[m] = cbn.linear(w) * tile;
+                            }
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            slots
+        });
+        Ok(BlockMaps {
+            block,
+            full,
+            neighbor_slots,
+        })
+    }
+
+    /// The 8 Moore neighbor-block base slots of block `bidx`, in
+    /// [`MOORE`] order. [`NO_BLOCK`] marks absent neighbors.
+    #[inline(always)]
+    pub fn neighbors_of(&self, bidx: u64) -> &[u64; 8] {
+        &self.neighbor_slots[bidx as usize]
+    }
+
+    /// Bytes held by the adjacency table (capacity accounting).
+    pub fn table_bytes(&self) -> u64 {
+        (self.neighbor_slots.len() * std::mem::size_of::<[u64; 8]>()) as u64
+    }
+}
+
+/// Cache key. The fractal is identified by its full geometry (name plus
+/// `(k, s, τ)` — two specs may share a name, e.g. ad-hoc
+/// `FractalSpec::new` calls, and must not alias). `rho = 0` marks
+/// thread-level entries; block entries carry their ρ plus the
+/// map-evaluation path used to build the adjacency (FP16 tables may
+/// legitimately differ from scalar outside the exactness envelope, so
+/// they must not alias either).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    fractal: String,
+    k: u32,
+    s: u32,
+    tau: Vec<(u8, u8)>,
+    r: u32,
+    rho: u32,
+    path_tag: u8,
+}
+
+impl CacheKey {
+    fn new(spec: &FractalSpec, r: u32, rho: u32, path_tag: u8) -> CacheKey {
+        CacheKey {
+            fractal: spec.name.clone(),
+            k: spec.k,
+            s: spec.s,
+            tau: spec.tau.clone(),
+            r,
+            rho,
+            path_tag,
+        }
+    }
+}
+
+fn path_tag(mma: Option<MmaMode>) -> u8 {
+    match mma {
+        None => 0,
+        Some(MmaMode::Fp16) => 1,
+        Some(MmaMode::F32) => 2,
+    }
+}
+
+#[derive(Debug)]
+enum Entry {
+    Thread(Arc<ThreadMaps>),
+    Block(Arc<BlockMaps>),
+}
+
+/// Point-in-time lookup counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from cache (0.0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The shared map cache. Cheap to create; share one per scheduler /
+/// service session (or use [`MapCache::global`]) so queued jobs of the
+/// same fractal reuse each other's tables.
+///
+/// Entries are never evicted: residency is bounded by the diversity of
+/// `(fractal, level, ρ)` a cache's owner accepts, which is fine for the
+/// catalog × practical levels. A deployment exposing unbounded
+/// client-chosen levels should scope caches per session (as `serve`
+/// does) or add an LRU cap — tracked as ROADMAP follow-up work.
+#[derive(Debug, Default)]
+pub struct MapCache {
+    entries: Mutex<HashMap<CacheKey, Entry>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MapCache {
+    pub fn new() -> MapCache {
+        MapCache::default()
+    }
+
+    /// Process-wide cache for callers with no natural sharing scope
+    /// (one-shot CLI runs, examples).
+    pub fn global() -> &'static Arc<MapCache> {
+        static GLOBAL: OnceLock<Arc<MapCache>> = OnceLock::new();
+        GLOBAL.get_or_init(|| Arc::new(MapCache::new()))
+    }
+
+    /// Thread-level bundle for `(spec, r)`, built on first use.
+    pub fn thread_maps(&self, spec: &FractalSpec, r: u32) -> Arc<ThreadMaps> {
+        let key = CacheKey::new(spec, r, 0, 0);
+        let mut entries = self.entries.lock().expect("map cache poisoned");
+        if let Some(Entry::Thread(t)) = entries.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(t);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(ThreadMaps::build(spec, r));
+        entries.insert(key, Entry::Thread(Arc::clone(&built)));
+        built
+    }
+
+    /// Block-level bundle for `(spec, r, ρ)` under the given map path,
+    /// built (in parallel over `workers`) on first use.
+    pub fn block_maps(
+        &self,
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        mma: Option<MmaMode>,
+        workers: usize,
+    ) -> Result<Arc<BlockMaps>, BlockError> {
+        let key = CacheKey::new(spec, r, rho, path_tag(mma));
+        let mut entries = self.entries.lock().expect("map cache poisoned");
+        if let Some(Entry::Block(b)) = entries.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(b));
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let built = Arc::new(BlockMaps::build(spec, r, rho, mma, workers)?);
+        entries.insert(key, Entry::Block(Arc::clone(&built)));
+        Ok(built)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of interned bundles.
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("map cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+    use crate::maps::lambda::lambda_linear;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_triangle();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0 });
+        let a = cache.thread_maps(&spec, 4);
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1 });
+        let b = cache.thread_maps(&spec, 4);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert!(Arc::ptr_eq(&a, &b));
+        // a different level is a different entry
+        let _c = cache.thread_maps(&spec, 5);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.is_empty());
+        assert!((cache.stats().hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_entries_key_on_rho_and_path() {
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_triangle();
+        let a = cache.block_maps(&spec, 6, 4, None, 2).unwrap();
+        let b = cache.block_maps(&spec, 6, 4, None, 2).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = cache.block_maps(&spec, 6, 2, None, 2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        let d = cache.block_maps(&spec, 6, 4, Some(MmaMode::Fp16), 2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert_eq!(cache.stats().misses, 3);
+        assert_eq!(cache.stats().hits, 1);
+        // invalid ρ propagates the BlockCtx error and caches nothing
+        assert!(cache.block_maps(&spec, 6, 3, None, 2).is_err());
+    }
+
+    #[test]
+    fn cross_thread_sharing_builds_once() {
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_carpet();
+        let mut arcs: Vec<Arc<ThreadMaps>> = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(|| cache.thread_maps(&spec, 3)))
+                .collect();
+            for h in handles {
+                arcs.push(h.join().unwrap());
+            }
+        });
+        assert!(arcs.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])));
+        // build-under-lock: exactly one miss, the other 7 lookups hit
+        assert_eq!(cache.stats(), CacheStats { hits: 7, misses: 1 });
+    }
+
+    #[test]
+    fn cached_lookup_equals_fresh_lambda_nu() {
+        let cache = MapCache::new();
+        for spec in catalog::all() {
+            for r in 0..=4 {
+                let cached = cache.thread_maps(&spec, r);
+                let fresh = MapCtx::new(&spec, r);
+                for idx in 0..fresh.compact.area() {
+                    let c = Coord::from_linear(idx, fresh.compact.w);
+                    let e = lambda_linear(&fresh, idx);
+                    assert_eq!(cached.lambda_table.eval(c), e, "{} r={r}", spec.name);
+                    assert_eq!(lambda(&cached.ctx, c), e, "{} r={r}", spec.name);
+                    assert_eq!(nu(&cached.ctx, e), Some(c), "{} r={r}", spec.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_neighbor_table_matches_direct_maps() {
+        for spec in catalog::all() {
+            let r = 4;
+            let rho = spec.s; // one intra level
+            let maps = BlockMaps::build(&spec, r, rho, None, 2).unwrap();
+            let coarse = &maps.block.coarse;
+            let tile = rho as u64 * rho as u64;
+            for bidx in 0..maps.block.blocks() {
+                let eb = lambda(coarse, Coord::from_linear(bidx, coarse.compact.w));
+                let nb = maps.neighbors_of(bidx);
+                for (m, (dx, dy)) in MOORE.iter().enumerate() {
+                    let want = eb
+                        .offset(*dx, *dy)
+                        .and_then(|ne| nu(coarse, ne))
+                        .map(|cbn| cbn.linear(coarse.compact.w) * tile)
+                        .unwrap_or(NO_BLOCK);
+                    assert_eq!(nb[m], want, "{} block {bidx} dir {m}", spec.name);
+                }
+            }
+            assert!(maps.table_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn tensor_built_table_matches_scalar_table() {
+        // inside the FP16 exactness envelope the two build paths must
+        // produce identical adjacency
+        let spec = catalog::sierpinski_triangle();
+        let scalar = BlockMaps::build(&spec, 6, 4, None, 2).unwrap();
+        let fp16 = BlockMaps::build(&spec, 6, 4, Some(MmaMode::Fp16), 2).unwrap();
+        assert_eq!(scalar.neighbor_slots, fp16.neighbor_slots);
+    }
+
+    #[test]
+    fn same_name_different_geometry_does_not_alias() {
+        use crate::fractal::FractalSpec;
+        let cache = MapCache::new();
+        let a_spec = FractalSpec::new("custom", 3, 2, vec![(0, 0), (0, 1), (1, 1)]).unwrap();
+        let b_spec = FractalSpec::new("custom", 3, 2, vec![(0, 0), (1, 0), (1, 1)]).unwrap();
+        let a = cache.thread_maps(&a_spec, 3);
+        let b = cache.thread_maps(&b_spec, 3);
+        assert!(!Arc::ptr_eq(&a, &b), "same-name specs must not alias");
+        assert_eq!(cache.stats().misses, 2);
+        assert_eq!(a.ctx.spec.tau, a_spec.tau);
+        assert_eq!(b.ctx.spec.tau, b_spec.tau);
+    }
+
+    #[test]
+    fn global_cache_is_one_instance() {
+        let a = Arc::clone(MapCache::global());
+        let b = Arc::clone(MapCache::global());
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

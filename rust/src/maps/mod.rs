@@ -1,7 +1,9 @@
 //! The Squeeze space maps: `λ(ω)` (compact → expanded), `ν(ω)` (expanded →
-//! compact), their block-level forms, and their tensor-core MMA encodings.
+//! compact), their block-level forms, their tensor-core MMA encodings, and
+//! the shared map cache that amortizes them across engines and jobs.
 
 pub mod block;
+pub mod cache;
 pub mod ctx;
 pub mod lambda;
 pub mod mma;
@@ -9,6 +11,7 @@ pub mod nu;
 pub mod three_d;
 
 pub use block::BlockCtx;
+pub use cache::{BlockMaps, CacheStats, MapCache, ThreadMaps};
 pub use ctx::MapCtx;
 pub use lambda::{lambda, lambda_linear};
 pub use nu::{nu, nu_unchecked, on_fractal};

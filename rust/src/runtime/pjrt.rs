@@ -1,0 +1,159 @@
+//! PJRT-backed runtime (feature `pjrt`): wraps the `xla` crate.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Compiled executables are cached per
+//! artifact name; simulation state is fed output→input across calls
+//! (device-side double buffering).
+//!
+//! This module only compiles with `--features pjrt`, which additionally
+//! requires the `xla` crate to be vendored into the offline build
+//! environment (it is not a default dependency).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::manifest::{self, ArtifactMeta};
+use super::{Result, RuntimeError};
+
+macro_rules! rt_err {
+    ($($arg:tt)*) => {
+        RuntimeError(format!($($arg)*))
+    };
+}
+
+/// The L3-side handle to the AOT artifact store and the PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = manifest::load(&dir)
+            .map_err(|e| rt_err!("loading manifest from {}: {e}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| rt_err!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.iter().find(|m| m.name == name)
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .meta(name)
+                .ok_or_else(|| rt_err!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = meta.path(&self.dir);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| rt_err!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| rt_err!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a single-input/single-output artifact once: `data` is the
+    /// row-major f32 input of shape `(rows, cols)` from the manifest.
+    pub fn run_once(&mut self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+        self.run_steps(name, data, 1)
+    }
+
+    /// Execute a step artifact `outer` times, feeding state output→input.
+    /// Total simulated steps = `outer × meta.iters`.
+    pub fn run_steps(&mut self, name: &str, state: &[f32], outer: u32) -> Result<Vec<f32>> {
+        let meta = self
+            .meta(name)
+            .ok_or_else(|| rt_err!("artifact {name:?} not in manifest"))?
+            .clone();
+        if state.len() as u64 != meta.rows * meta.cols {
+            return Err(rt_err!(
+                "input length {} != {}x{}",
+                state.len(),
+                meta.rows,
+                meta.cols
+            ));
+        }
+        let exe = self.load(name)?;
+        let mut lit = xla::Literal::vec1(state)
+            .reshape(&[meta.rows as i64, meta.cols as i64])
+            .map_err(|e| rt_err!("reshape: {e:?}"))?;
+        for _ in 0..outer {
+            let result = exe
+                .execute::<xla::Literal>(&[lit])
+                .map_err(|e| rt_err!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| rt_err!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            lit = result.to_tuple1().map_err(|e| rt_err!("tuple: {e:?}"))?;
+        }
+        lit.to_vec::<f32>().map_err(|e| rt_err!("to_vec: {e:?}"))
+    }
+
+    /// Execute the ν-probe artifact on a batch of expanded points.
+    /// Returns `Some((cx, cy))` per fractal point, `None` for holes.
+    pub fn run_nu_probe(
+        &mut self,
+        name: &str,
+        pts: &[(f32, f32)],
+    ) -> Result<Vec<Option<(u32, u32)>>> {
+        let meta = self
+            .meta(name)
+            .ok_or_else(|| rt_err!("artifact {name:?} not in manifest"))?
+            .clone();
+        if meta.kind != "nu_probe" {
+            return Err(rt_err!("{name} is not a nu_probe artifact"));
+        }
+        let batch = meta.rows as usize;
+        if pts.len() > batch {
+            return Err(rt_err!("batch too large: {} > {batch}", pts.len()));
+        }
+        let mut flat = vec![0f32; batch * 2];
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            flat[2 * i] = x;
+            flat[2 * i + 1] = y;
+        }
+        let exe = self.load(name)?;
+        let input = xla::Literal::vec1(&flat)
+            .reshape(&[batch as i64, 2])
+            .map_err(|e| rt_err!("reshape: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| rt_err!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err!("to_literal: {e:?}"))?;
+        let (coords_lit, valid_lit) = result.to_tuple2().map_err(|e| rt_err!("tuple2: {e:?}"))?;
+        let coords = coords_lit.to_vec::<f32>().map_err(|e| rt_err!("{e:?}"))?;
+        let valid = valid_lit.to_vec::<f32>().map_err(|e| rt_err!("{e:?}"))?;
+        Ok(pts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                (valid[i] > 0.5).then(|| (coords[2 * i] as u32, coords[2 * i + 1] as u32))
+            })
+            .collect())
+    }
+}

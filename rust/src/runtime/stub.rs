@@ -1,0 +1,103 @@
+//! Default runtime: manifest-aware, execution-free.
+//!
+//! Built when the `pjrt` feature is off (the offline environment cannot
+//! vendor the `xla` crate). Artifact *metadata* still works — `squeeze
+//! artifacts` lists the store — but any attempt to compile or execute an
+//! artifact returns a descriptive error so callers can skip cleanly.
+
+use std::path::{Path, PathBuf};
+
+use super::manifest::{self, ArtifactMeta};
+use super::{Result, RuntimeError};
+
+/// Stub handle to the AOT artifact store (no PJRT client).
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = manifest::load(&dir).map_err(|e| {
+            RuntimeError(format!("loading manifest from {}: {e}", dir.display()))
+        })?;
+        Ok(Runtime { dir, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `pjrt` feature)".into()
+    }
+
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.iter().find(|m| m.name == name)
+    }
+
+    /// Compile an artifact — always unavailable in the stub.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        Err(self.unavailable(name))
+    }
+
+    /// Execute a single-input/single-output artifact once.
+    pub fn run_once(&mut self, name: &str, data: &[f32]) -> Result<Vec<f32>> {
+        self.run_steps(name, data, 1)
+    }
+
+    /// Execute a step artifact `outer` times, feeding state output→input.
+    pub fn run_steps(&mut self, name: &str, _state: &[f32], _outer: u32) -> Result<Vec<f32>> {
+        Err(self.unavailable(name))
+    }
+
+    /// Execute the ν-probe artifact on a batch of expanded points.
+    pub fn run_nu_probe(
+        &mut self,
+        name: &str,
+        _pts: &[(f32, f32)],
+    ) -> Result<Vec<Option<(u32, u32)>>> {
+        Err(self.unavailable(name))
+    }
+
+    fn unavailable(&self, name: &str) -> RuntimeError {
+        RuntimeError(format!(
+            "cannot execute artifact {name:?} from {}: built without the `pjrt` feature \
+             (vendor the `xla` crate and build with `--features pjrt`)",
+            self.dir.display()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_store() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sq-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "name\tfile\tkind\tfractal\tr\tshape\titers\n\
+             sq_r4\tsq_r4.hlo.txt\tsqueeze\tsierpinski-triangle\t4\t9x9\t1\n",
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn lists_metadata_but_refuses_execution() {
+        let dir = sample_store();
+        let mut rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.manifest().len(), 1);
+        assert_eq!(rt.meta("sq_r4").unwrap().r, 4);
+        assert!(rt.platform().contains("stub"));
+        let err = rt.run_steps("sq_r4", &[0.0; 81], 1).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(rt.load("sq_r4").is_err());
+        assert!(rt.run_nu_probe("sq_r4", &[]).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

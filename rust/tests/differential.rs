@@ -1,0 +1,201 @@
+//! Differential test suite — the correctness oracle for the map-cache +
+//! parallel tiled stepping subsystem.
+//!
+//! All engines simulate the *same logical automaton* (see
+//! `ca::engine`), so for every catalog fractal and every rule in the
+//! matrix below, the expanded BB reference, the thread-level Squeeze
+//! engine, and the block-level Squeeze engine (serial and parallel,
+//! cached and uncached, scalar and tensor-path) must produce identical
+//! `state_hash()` after *every* step — not just at the end. A divergence
+//! at step `t` localizes a bug to one transition, which is what makes
+//! this suite the oracle the cache/parallelism refactor is tested
+//! against.
+
+use squeeze::ca::{build_with_cache, Engine, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::catalog;
+use squeeze::maps::MapCache;
+
+/// Rule matrix: Conway, HighLife, Seeds (no survival), the still-life
+/// boundary rule (no birth, total survival), and an asymmetric
+/// birth-heavy rule — together they exercise every branch of
+/// `Rule::next_u8` (birth-only, survive-only, mixed masks).
+const RULES: &[&str] = &["B3/S23", "B36/S23", "B2/S", "B/S012345678", "B13/S0123"];
+
+/// Level per fractal, sized so the expanded BB reference stays cheap
+/// while every engine still crosses block boundaries: s=2 fractals get
+/// r=5 (n=32), s=3 fractals r=3 (n=27).
+fn level_for(s: u32) -> u32 {
+    if s == 2 {
+        5
+    } else {
+        3
+    }
+}
+
+#[test]
+fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
+    let cache = MapCache::new();
+    let steps = 8;
+    for spec in catalog::all() {
+        let r = level_for(spec.s);
+        let rho = spec.s; // one intra level
+        let rho2 = spec.s * spec.s; // two intra levels (fits: r >= 2·1)
+        for rule_text in RULES {
+            let rule = Rule::parse(rule_text).expect("rule matrix entry parses");
+            let cfg = |kind: EngineKind, workers: usize| EngineConfig {
+                kind,
+                r,
+                rule,
+                density: 0.45,
+                seed: 0xD1FF,
+                workers,
+            };
+            let mut engines = vec![
+                (
+                    "bb",
+                    build_with_cache(&spec, &cfg(EngineKind::Bb, 2), None),
+                ),
+                (
+                    "lambda",
+                    build_with_cache(&spec, &cfg(EngineKind::Lambda, 2), Some(&cache)),
+                ),
+                (
+                    "squeeze-thread",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::Squeeze { rho: 1, tensor: false }, 2),
+                        Some(&cache),
+                    ),
+                ),
+                (
+                    "squeeze-block-serial",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::Squeeze { rho, tensor: false }, 1),
+                        Some(&cache),
+                    ),
+                ),
+                (
+                    "squeeze-block-parallel",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::Squeeze { rho, tensor: false }, 4),
+                        Some(&cache),
+                    ),
+                ),
+                (
+                    "squeeze-block-parallel-uncached",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::Squeeze { rho, tensor: false }, 4),
+                        None,
+                    ),
+                ),
+                (
+                    "squeeze-block-rho2-parallel",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::Squeeze { rho: rho2, tensor: false }, 4),
+                        Some(&cache),
+                    ),
+                ),
+            ];
+            let seed_hash = engines[0].1.state_hash();
+            for (name, e) in &engines {
+                assert_eq!(
+                    e.state_hash(),
+                    seed_hash,
+                    "{} rule={rule_text} engine={name}: seed state diverged",
+                    spec.name
+                );
+            }
+            for step in 1..=steps {
+                let mut reference = 0u64;
+                for (i, (name, e)) in engines.iter_mut().enumerate() {
+                    e.step();
+                    let h = e.state_hash();
+                    if i == 0 {
+                        reference = h;
+                    } else {
+                        assert_eq!(
+                            h, reference,
+                            "{} rule={rule_text} engine={name} diverged from bb at step {step}",
+                            spec.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // the differential matrix itself must have exercised cache sharing
+    assert!(cache.stats().hits > 0, "{:?}", cache.stats());
+}
+
+#[test]
+fn tensor_path_engines_agree_with_scalar_inside_fp16_envelope() {
+    let cache = MapCache::new();
+    for spec in catalog::all() {
+        let r = level_for(spec.s);
+        let rho = spec.s;
+        let cfg = |tensor: bool| EngineConfig {
+            kind: EngineKind::Squeeze { rho, tensor },
+            r,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 99,
+            workers: 2,
+        };
+        let mut scalar = build_with_cache(&spec, &cfg(false), Some(&cache));
+        let mut tensor = build_with_cache(&spec, &cfg(true), Some(&cache));
+        for step in 1..=8 {
+            scalar.step();
+            tensor.step();
+            assert_eq!(
+                scalar.state_hash(),
+                tensor.state_hash(),
+                "{} tensor path diverged at step {step}",
+                spec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn long_run_agreement_on_the_paper_headline_fractal() {
+    // 30 steps on the Sierpinski triangle at r=6 across the full engine
+    // set, through the factory exactly as the coordinator builds them.
+    let cache = MapCache::new();
+    let spec = catalog::sierpinski_triangle();
+    let kinds = [
+        EngineKind::Bb,
+        EngineKind::Lambda,
+        EngineKind::Squeeze { rho: 1, tensor: false },
+        EngineKind::Squeeze { rho: 4, tensor: false },
+        EngineKind::Squeeze { rho: 8, tensor: false },
+        EngineKind::Squeeze { rho: 8, tensor: true },
+    ];
+    let mut hashes = Vec::new();
+    for kind in kinds {
+        let mut e = build_with_cache(
+            &spec,
+            &EngineConfig {
+                kind,
+                r: 6,
+                rule: Rule::game_of_life(),
+                density: 0.4,
+                seed: 42,
+                workers: 3,
+            },
+            Some(&cache),
+        );
+        for _ in 0..30 {
+            e.step();
+        }
+        hashes.push((e.name(), e.state_hash(), e.population()));
+    }
+    let (first_hash, first_pop) = (hashes[0].1, hashes[0].2);
+    for (name, h, p) in &hashes {
+        assert_eq!(*h, first_hash, "{name} hash diverged: {hashes:?}");
+        assert_eq!(*p, first_pop, "{name} population diverged");
+    }
+}

@@ -44,12 +44,17 @@ fn memory_ordering_matches_paper_p2() {
     assert!(bb.memory_bytes >= lam.memory_bytes);
     assert!(lam.memory_bytes > sq16.memory_bytes);
     assert!(sq16.memory_bytes > sq1.memory_bytes);
-    // measured engine (u8 cells, 2 buffers + tiny λ tables) matches the
-    // accounting model to within the table overhead
+    // measured engine (u8 cells, 2 buffers + tiny λ tables / the block
+    // adjacency) matches the accounting model to within table overhead
     let spec = catalog::sierpinski_triangle();
     let model1 = 2 * memory::squeeze_bytes(&spec, r, 1, 1);
     assert!(sq1.memory_bytes >= model1 && sq1.memory_bytes < model1 + model1 / 10);
-    assert_eq!(sq16.memory_bytes, 2 * memory::squeeze_bytes(&spec, r, 16, 1));
+    let model16 = 2 * memory::squeeze_bytes(&spec, r, 16, 1);
+    assert!(
+        sq16.memory_bytes >= model16 && sq16.memory_bytes <= model16 + model16 / 4,
+        "block engine memory {} vs model {model16}",
+        sq16.memory_bytes
+    );
 }
 
 #[test]

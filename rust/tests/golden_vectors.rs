@@ -8,12 +8,27 @@ use squeeze::maps::{lambda, nu, MapCtx};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.tsv").exists().then_some(dir)
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!(
+            "skipped: artifacts/ not present at {} (run `make artifacts` to \
+             generate the Python golden vectors)",
+            dir.display()
+        );
+        return None;
+    }
+    Some(dir)
 }
 
+/// Golden vectors are optional build artifacts: absent → skip cleanly,
+/// present-but-unreadable for the requested name → also skip (another
+/// artifact set may have been built), numeric garbage → fail loudly.
 fn load_rows(name: &str) -> Option<Vec<Vec<i64>>> {
     let dir = artifacts_dir()?;
-    let text = std::fs::read_to_string(dir.join(name)).ok()?;
+    let path = dir.join(name);
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipped: golden vector {} not in artifact set", path.display());
+        return None;
+    };
     Some(
         text.lines()
             .filter(|l| !l.starts_with('#') && !l.trim().is_empty())

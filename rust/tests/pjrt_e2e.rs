@@ -8,6 +8,10 @@ use squeeze::maps::{nu, MapCtx};
 use squeeze::runtime::Runtime;
 
 fn open_runtime() -> Option<Runtime> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipped: built without the `pjrt` feature (stub runtime cannot execute)");
+        return None;
+    }
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.tsv").exists() {
         eprintln!("skipped: artifacts not built (run `make artifacts`)");

@@ -3,7 +3,8 @@
 //! levels and coordinates with shrinking on failure.
 
 use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
-use squeeze::fractal::{catalog, Coord};
+use squeeze::fractal::{catalog, Coord, MOORE};
+use squeeze::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
 use squeeze::maps::mma::{lambda_a_fragment, lambda_batch_mma, nu_a_fragment, nu_batch_mma};
 use squeeze::maps::{lambda, nu, on_fractal, BlockCtx, MapCtx};
 use squeeze::tcu::MmaMode;
@@ -101,6 +102,102 @@ fn prop_mma_encoding_matches_scalar_maps() {
             }
         }
         Ok(())
+    });
+}
+
+/// Exhaustive two-way roundtrip at levels 1..=5 for every catalog
+/// fractal, through both the fresh maps and the shared cache:
+/// `ν(λ(ω)) = ω` for all compact coordinates, and `λ(ν(p)) = p` for all
+/// occupied expanded coordinates.
+#[test]
+fn roundtrips_hold_exhaustively_at_levels_1_to_5_with_and_without_cache() {
+    let cache = MapCache::new();
+    for spec in catalog::all() {
+        for r in 1..=5 {
+            let fresh = MapCtx::new(&spec, r);
+            let cached = cache.thread_maps(&spec, r);
+            // ν ∘ λ = id on compact space (fresh and cached λ agree)
+            for idx in 0..fresh.compact.area() {
+                let c = Coord::from_linear(idx, fresh.compact.w);
+                let e = lambda(&fresh, c);
+                assert_eq!(
+                    cached.lambda_table.eval(c),
+                    e,
+                    "{} r={r} {c}: cached λ != fresh λ",
+                    spec.name
+                );
+                assert_eq!(nu(&fresh, e), Some(c), "{} r={r} {c}: ν(λ(ω)) != ω", spec.name);
+                assert_eq!(nu(&cached.ctx, e), Some(c), "{} r={r} {c} (cached ν)", spec.name);
+            }
+            // λ ∘ ν = id on occupied expanded space
+            let n = fresh.n;
+            for y in 0..n {
+                for x in 0..n {
+                    let p = Coord::new(x, y);
+                    if let Some(c) = nu(&fresh, p) {
+                        assert_eq!(
+                            lambda(&fresh, c),
+                            p,
+                            "{} r={r} {p}: λ(ν(p)) != p",
+                            spec.name
+                        );
+                        assert_eq!(lambda(&cached.ctx, c), p, "{} r={r} {p} (cached λ)", spec.name);
+                    }
+                }
+            }
+        }
+    }
+    // 5 fractals × 5 levels, each looked up exactly once
+    assert_eq!(cache.stats().misses, 25);
+}
+
+#[test]
+fn prop_cached_maps_match_fresh_evaluation() {
+    let all = specs();
+    let cache = MapCache::new();
+    Runner::new("cache=fresh", 0xA8).run(2000, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(1, 5);
+        let cached = cache.thread_maps(spec, r);
+        let fresh = MapCtx::new(spec, r);
+        let idx = g.u64(0, fresh.compact.area() - 1);
+        let c = Coord::from_linear(idx, fresh.compact.w);
+        let e = lambda(&fresh, c);
+        Runner::check(
+            cached.lambda_table.eval(c) == e
+                && nu(&cached.ctx, e) == Some(c)
+                && nu(&fresh, e) == Some(c),
+            &format!("{} r={r} c={c} e={e}", spec.name),
+        )
+    });
+    let stats = cache.stats();
+    assert!(stats.hits > 0 && stats.misses <= 25, "{stats:?}");
+}
+
+#[test]
+fn prop_block_adjacency_table_matches_direct_maps() {
+    let all = specs();
+    Runner::new("block-adjacency=maps", 0xA9).run(150, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(2, 5);
+        let intra = g.u32(0, 2.min(r));
+        let rho = spec.s.pow(intra);
+        let maps = BlockMaps::build(spec, r, rho, None, 2).expect("valid rho");
+        let coarse = &maps.block.coarse;
+        let tile = rho as u64 * rho as u64;
+        let bidx = g.u64(0, maps.block.blocks() - 1);
+        let dir = g.usize(0, 7);
+        let (dx, dy) = MOORE[dir];
+        let eb = lambda(coarse, Coord::from_linear(bidx, coarse.compact.w));
+        let want = eb
+            .offset(dx, dy)
+            .and_then(|ne| nu(coarse, ne))
+            .map(|cbn| cbn.linear(coarse.compact.w) * tile)
+            .unwrap_or(NO_BLOCK);
+        Runner::check(
+            maps.neighbors_of(bidx)[dir] == want,
+            &format!("{} r={r} rho={rho} block={bidx} dir={dir}", spec.name),
+        )
     });
 }
 
