@@ -44,8 +44,11 @@ fn main() {
         println!(
             "at r={big_r}:  BB/λ(ω) memory {}  Squeeze memory {}  (MRF {:.1}x)\n",
             human_bytes(memory::bb_bytes(&spec, big_r, memory::PAPER_CELL_BYTES)),
-            human_bytes(memory::squeeze_bytes(&spec, big_r, 1, memory::PAPER_CELL_BYTES)),
-            memory::mrf(&spec, big_r, 1)
+            human_bytes(
+                memory::squeeze_bytes(&spec, big_r, 1, memory::PAPER_CELL_BYTES)
+                    .expect("rho=1 is always valid")
+            ),
+            memory::mrf(&spec, big_r, 1).expect("rho=1 is always valid")
         );
     }
 }

@@ -28,8 +28,11 @@ fn main() {
         println!(
             "r={level}: BB/λ(ω) would need {:>10}; Squeeze ρ=1 needs {:>10}  (MRF {:>6.1}x)",
             human_bytes(memory::bb_bytes(&spec, level, memory::PAPER_CELL_BYTES)),
-            human_bytes(memory::squeeze_bytes(&spec, level, 1, memory::PAPER_CELL_BYTES)),
-            memory::mrf(&spec, level, 1)
+            human_bytes(
+                memory::squeeze_bytes(&spec, level, 1, memory::PAPER_CELL_BYTES)
+                    .expect("rho=1 is always valid")
+            ),
+            memory::mrf(&spec, level, 1).expect("rho=1 is always valid")
         );
     }
 

@@ -1,9 +1,11 @@
 //! Regenerates paper Fig. 13: speedup of Squeeze over BB per block size,
-//! and checks three qualitative claims — speedup grows with the fractal
+//! and checks four qualitative claims — speedup grows with the fractal
 //! level, λ(ω) acts as a performance lower bound (i.e. λ is at least as
-//! fast as thread-level Squeeze), and the cached parallel tiled block
+//! fast as thread-level Squeeze), the cached parallel tiled block
 //! engine beats the serial path at the largest level while staying
-//! bit-identical to the expanded BB reference.
+//! bit-identical to the expanded BB reference, and the halo-exchanged
+//! multi-shard decomposition holds the single-engine cached-parallel
+//! pace (also bit-identical to BB).
 //!
 //!     cargo bench --bench fig13_speedup
 
@@ -14,6 +16,7 @@ use squeeze::ca::{Engine, EngineKind, MapPath, Rule};
 use squeeze::fractal::catalog;
 use squeeze::harness::{bench, figures, speedups_vs_bb, BenchOpts};
 use squeeze::maps::MapCache;
+use squeeze::shard::ShardedSqueezeEngine;
 
 fn main() {
     let r_max: u32 = std::env::var("SQUEEZE_BENCH_R_MAX")
@@ -119,10 +122,57 @@ fn main() {
     }
     let mut fresh = mk(workers.max(2));
     let mut bb = BbEngine::new(&spec, r_big, rule, 0.4, 42, workers.max(2));
+    let bb_hash = run_and_hash(&mut bb, 4);
     assert_eq!(
         run_and_hash(&mut fresh, 4),
-        run_and_hash(&mut bb, 4),
+        bb_hash,
         "cached parallel block engine must stay bit-identical to BB at r={r_big}"
     );
     println!("fig13 OK: cached parallel tiled stepping beats serial and matches BB");
+
+    // Claim 4 (shard subsystem): decomposing the same domain into one
+    // shard per worker must not cost wall time vs the single-engine
+    // cached-parallel path (same parallelism, plus the halo exchange),
+    // and must stay bit-identical to the BB reference.
+    let nshards = workers.max(2) as u32;
+    let mk_sharded = || {
+        ShardedSqueezeEngine::with_cache(
+            &spec,
+            r_big,
+            16,
+            nshards,
+            rule,
+            0.4,
+            42,
+            workers.max(2),
+            MapPath::Scalar,
+            Some(&cache),
+        )
+    };
+    let mut sharded = mk_sharded();
+    let sharded_s = bench(&opts, || sharded.step()).mean;
+    let stats = sharded.shard_stats().expect("sharded engine reports stats");
+    println!(
+        "sharded-squeeze:16:{} r={r_big}: {sharded_s:.3e}s/step vs single-engine parallel \
+         {parallel_s:.3e}s/step ({:.2}x), halo {}B/step, imbalance {:.2}",
+        stats.shards,
+        parallel_s / sharded_s,
+        stats.halo_bytes_per_step,
+        stats.imbalance,
+    );
+    assert!(
+        sharded_s <= parallel_s * 1.25, // same measurement slack as claim 2
+        "multi-shard stepping must be no worse than the single-engine \
+         cached-parallel path at r={r_big}: {sharded_s} vs {parallel_s}"
+    );
+    let mut fresh_sharded = mk_sharded();
+    assert_eq!(
+        run_and_hash(&mut fresh_sharded, 4),
+        bb_hash,
+        "sharded engine must stay bit-identical to BB at r={r_big}"
+    );
+    println!(
+        "fig13 OK: {}-shard halo-exchanged stepping holds the single-engine pace and matches BB",
+        stats.shards
+    );
 }

@@ -17,14 +17,14 @@ fn main() {
     const GIB: f64 = (1u64 << 30) as f64;
     let expect = [(1u32, 99.8), (2, 74.8), (4, 56.1), (8, 42.1), (16, 31.6), (32, 23.7)];
     for (rho, want) in expect {
-        let got = memory::mrf(&spec, 16, rho);
+        let got = memory::mrf(&spec, 16, rho).expect("paper rho values are valid");
         assert!((got - want).abs() < 0.06, "rho={rho}: {got} vs paper {want}");
     }
     assert_eq!(
         memory::bb_bytes(&spec, 16, memory::PAPER_CELL_BYTES) as f64 / GIB,
         16.0
     );
-    let r20 = memory::mrf(&spec, 20, 1);
+    let r20 = memory::mrf(&spec, 20, 1).expect("rho=1 is always valid");
     assert!((r20 - 315.3).abs() < 0.5, "r=20 MRF: {r20}");
     println!("\ntable2 OK: all MRF values match the paper to the digit (r=20: {r20:.1}x)");
 }

@@ -33,6 +33,13 @@ pub trait Engine: Send {
     /// `idx` (0 or 1).
     fn cell(&self, idx: u64) -> u8;
 
+    /// Decomposition facts, for engines that run the domain as
+    /// halo-exchanged shards (`None` for single-buffer engines). The
+    /// coordinator mirrors these into its halo/imbalance gauges.
+    fn shard_stats(&self) -> Option<crate::shard::ShardStats> {
+        None
+    }
+
     /// Canonical FNV-1a hash of the full logical state, in compact-index
     /// order. Engines may override with a faster equivalent.
     fn state_hash(&self) -> u64 {

@@ -9,30 +9,45 @@ use super::squeeze::{MapPath, SqueezeEngine};
 use super::squeeze_block::SqueezeBlockEngine;
 use crate::fractal::FractalSpec;
 use crate::maps::MapCache;
+use crate::shard::ShardedSqueezeEngine;
 use crate::tcu::MmaMode;
 
 /// The paper's three approaches (§4): BB, λ(ω), Squeeze — the latter at
-/// thread level (ρ=1) or block level (ρ>1), with or without tensor cores.
+/// thread level (ρ=1) or block level (ρ>1), with or without tensor
+/// cores — plus the sharded decomposition of the block-level engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Bb,
     Lambda,
     Squeeze { rho: u32, tensor: bool },
+    /// Halo-exchanged domain decomposition over Squeeze blocks
+    /// (`crate::shard`): `shards` contiguous block ranges stepped as
+    /// parallel local sweeps with an exchange barrier between steps.
+    ShardedSqueeze { rho: u32, shards: u32 },
 }
 
 impl EngineKind {
     /// Parse from CLI notation: `bb`, `lambda`, `squeeze`, `squeeze:16`,
-    /// `squeeze-tcu:16`.
+    /// `squeeze-tcu:16`, `sharded-squeeze:16:4` (ρ then shard count;
+    /// the shard count defaults to 2 when omitted).
     pub fn parse(text: &str) -> Option<EngineKind> {
-        let (head, rho) = match text.split_once(':') {
-            Some((h, r)) => (h, r.parse::<u32>().ok()?),
-            None => (text, 1),
-        };
-        match head {
-            "bb" => Some(EngineKind::Bb),
-            "lambda" => Some(EngineKind::Lambda),
-            "squeeze" => Some(EngineKind::Squeeze { rho, tensor: false }),
-            "squeeze-tcu" => Some(EngineKind::Squeeze { rho, tensor: true }),
+        let fields: Vec<&str> = text.split(':').collect();
+        let num = |f: &&str| f.parse::<u32>().ok();
+        match fields.as_slice() {
+            ["bb"] => Some(EngineKind::Bb),
+            ["lambda"] => Some(EngineKind::Lambda),
+            ["squeeze"] => Some(EngineKind::Squeeze { rho: 1, tensor: false }),
+            ["squeeze", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: false }),
+            ["squeeze-tcu"] => Some(EngineKind::Squeeze { rho: 1, tensor: true }),
+            ["squeeze-tcu", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: true }),
+            ["sharded-squeeze", rho] => Some(EngineKind::ShardedSqueeze {
+                rho: num(rho)?,
+                shards: 2,
+            }),
+            ["sharded-squeeze", rho, shards] => {
+                let shards = num(shards)?;
+                (shards >= 1).then_some(EngineKind::ShardedSqueeze { rho: num(rho)?, shards })
+            }
             _ => None,
         }
     }
@@ -111,6 +126,18 @@ pub fn build_with_cache(
                 ))
             }
         }
+        EngineKind::ShardedSqueeze { rho, shards } => Box::new(ShardedSqueezeEngine::with_cache(
+            spec,
+            cfg.r,
+            rho,
+            shards,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+            MapPath::Scalar,
+            cache,
+        )),
     }
 }
 
@@ -135,8 +162,19 @@ mod tests {
             EngineKind::parse("squeeze-tcu:8"),
             Some(EngineKind::Squeeze { rho: 8, tensor: true })
         );
+        assert_eq!(
+            EngineKind::parse("sharded-squeeze:16:4"),
+            Some(EngineKind::ShardedSqueeze { rho: 16, shards: 4 })
+        );
+        assert_eq!(
+            EngineKind::parse("sharded-squeeze:8"),
+            Some(EngineKind::ShardedSqueeze { rho: 8, shards: 2 })
+        );
         assert_eq!(EngineKind::parse("hilbert"), None);
         assert_eq!(EngineKind::parse("squeeze:x"), None);
+        assert_eq!(EngineKind::parse("sharded-squeeze:16:0"), None);
+        assert_eq!(EngineKind::parse("sharded-squeeze:16:4:9"), None);
+        assert_eq!(EngineKind::parse("bb:2"), None);
     }
 
     #[test]
@@ -175,6 +213,7 @@ mod tests {
             EngineKind::Squeeze { rho: 1, tensor: false },
             EngineKind::Squeeze { rho: 4, tensor: false },
             EngineKind::Squeeze { rho: 4, tensor: true },
+            EngineKind::ShardedSqueeze { rho: 4, shards: 3 },
         ];
         let mut hashes = Vec::new();
         for kind in kinds {

@@ -106,10 +106,86 @@ impl SqueezeBlockEngine {
     }
 }
 
+/// Back-buffer pointer handed to the sweep workers (disjoint writes).
+/// Shared with the shard subsystem's per-shard sweeps.
 #[derive(Clone, Copy)]
-struct OutPtr(*mut u8);
+pub(crate) struct OutPtr(pub(crate) *mut u8);
 unsafe impl Send for OutPtr {}
 unsafe impl Sync for OutPtr {}
+
+/// Transition one block's `ρ×ρ` tile: read `cur`, write the tile at
+/// `base` through `out` (same indexing as `cur`). `nb` is the block's
+/// 8 Moore neighbor base slots in whatever buffer `cur` is — the global
+/// adjacency for the single engine, the shard-remapped `local ++ ghost`
+/// table for a `ShardEngine`. This is the one sweep body both the
+/// single-engine and the sharded step loops execute, which is what
+/// keeps them bit-identical by construction.
+#[inline]
+pub(crate) fn sweep_block(
+    cur: &[u8],
+    out: OutPtr,
+    block: &crate::maps::block::BlockCtx,
+    nb: &[u64; 8],
+    base: u64,
+    rule: Rule,
+) {
+    let rho = block.rho;
+    let p = out;
+    // §Perf iteration 3: interior cells (all of whose Moore neighbors
+    // stay inside this tile) take a branch-free direct-indexing path —
+    // at ρ=16 that is (ρ-2)²/ρ² ≈ 77% of the tile. Only the 4ρ-4 rim
+    // cells pay the wrap/neighbor-block logic.
+    let interior =
+        |ix: u32, iy: u32| -> bool { ix >= 1 && iy >= 1 && ix + 1 < rho && iy + 1 < rho };
+    for iy in 0..rho {
+        for ix in 0..rho {
+            let intra = (iy * rho + ix) as u64;
+            let slot = base + intra;
+            // holes of the micro-tile stay dead
+            if !block.intra_on_fractal(ix, iy) {
+                unsafe { p.0.add(slot as usize).write(0) };
+                continue;
+            }
+            let count = if interior(ix, iy) {
+                let i = (base + intra) as usize;
+                let rs = rho as usize;
+                // row above, same row, row below — direct sums
+                cur[i - rs - 1] as u32
+                    + cur[i - rs] as u32
+                    + cur[i - rs + 1] as u32
+                    + cur[i - 1] as u32
+                    + cur[i + 1] as u32
+                    + cur[i + rs - 1] as u32
+                    + cur[i + rs] as u32
+                    + cur[i + rs + 1] as u32
+            } else {
+                let mut count = 0u32;
+                for (dx, dy) in MOORE {
+                    let jx = ix as i64 + dx as i64;
+                    let jy = iy as i64 + dy as i64;
+                    // which block does the neighbor land in?
+                    let (bx, wrapped_x) = wrap(jx, rho);
+                    let (by, wrapped_y) = wrap(jy, rho);
+                    let nslot = if bx == 0 && by == 0 {
+                        base + (wrapped_y * rho + wrapped_x) as u64
+                    } else {
+                        // (bx,by) ∈ {-1,0,1}² -> Moore slot, resolved
+                        // from the cached adjacency
+                        let nbase = nb[moore_index(bx, by)];
+                        if nbase == NO_BLOCK {
+                            continue;
+                        }
+                        nbase + (wrapped_y * rho + wrapped_x) as u64
+                    };
+                    count += cur[nslot as usize] as u32;
+                }
+                count
+            };
+            let v = rule.next_u8(cur[slot as usize], count);
+            unsafe { p.0.add(slot as usize).write(v) };
+        }
+    }
+}
 
 impl Engine for SqueezeBlockEngine {
     fn name(&self) -> String {
@@ -132,66 +208,8 @@ impl Engine for SqueezeBlockEngine {
         // one "thread block" per coarse fractal cell; the adjacency table
         // replaces the per-step λ + 8 ν of the pre-cache engine
         parallel_for_chunks(block.blocks(), self.workers, move |start, end| {
-            let p = out;
             for bidx in start..end {
-                let nb = maps.neighbors_of(bidx);
-                let base = bidx * tile;
-                // §Perf iteration 3: interior cells (all of whose Moore
-                // neighbors stay inside this tile) take a branch-free
-                // direct-indexing path — at ρ=16 that is (ρ-2)²/ρ² ≈ 77%
-                // of the tile. Only the 4ρ-4 rim cells pay the
-                // wrap/neighbor-block logic.
-                let interior = |ix: u32, iy: u32| -> bool {
-                    ix >= 1 && iy >= 1 && ix + 1 < rho && iy + 1 < rho
-                };
-                for iy in 0..rho {
-                    for ix in 0..rho {
-                        let intra = (iy * rho + ix) as u64;
-                        let slot = base + intra;
-                        // holes of the micro-tile stay dead
-                        if !block.intra_on_fractal(ix, iy) {
-                            unsafe { p.0.add(slot as usize).write(0) };
-                            continue;
-                        }
-                        let count = if interior(ix, iy) {
-                            let i = (base + intra) as usize;
-                            let rs = rho as usize;
-                            // row above, same row, row below — direct sums
-                            cur[i - rs - 1] as u32
-                                + cur[i - rs] as u32
-                                + cur[i - rs + 1] as u32
-                                + cur[i - 1] as u32
-                                + cur[i + 1] as u32
-                                + cur[i + rs - 1] as u32
-                                + cur[i + rs] as u32
-                                + cur[i + rs + 1] as u32
-                        } else {
-                            let mut count = 0u32;
-                            for (dx, dy) in MOORE {
-                                let jx = ix as i64 + dx as i64;
-                                let jy = iy as i64 + dy as i64;
-                                // which block does the neighbor land in?
-                                let (bx, wrapped_x) = wrap(jx, rho);
-                                let (by, wrapped_y) = wrap(jy, rho);
-                                let nslot = if bx == 0 && by == 0 {
-                                    base + (wrapped_y * rho + wrapped_x) as u64
-                                } else {
-                                    // (bx,by) ∈ {-1,0,1}² -> Moore slot,
-                                    // resolved from the cached adjacency
-                                    let nbase = nb[moore_index(bx, by)];
-                                    if nbase == NO_BLOCK {
-                                        continue;
-                                    }
-                                    nbase + (wrapped_y * rho + wrapped_x) as u64
-                                };
-                                count += cur[nslot as usize] as u32;
-                            }
-                            count
-                        };
-                        let v = rule.next_u8(cur[slot as usize], count);
-                        unsafe { p.0.add(slot as usize).write(v) };
-                    }
-                }
+                sweep_block(cur, out, block, maps.neighbors_of(bidx), bidx * tile, rule);
             }
         });
         self.buf.swap();
@@ -346,7 +364,8 @@ mod tests {
             // two u8 buffers of k^{r_b}·ρ² cells, plus the adjacency table
             assert_eq!(
                 sq.memory_bytes(),
-                2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1) + sq.maps.table_bytes(),
+                2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1).unwrap()
+                    + sq.maps.table_bytes(),
                 "rho={rho}"
             );
         }

@@ -3,6 +3,8 @@
 //! request protocol) and from config-file sections.
 
 use crate::ca::{EngineKind, Rule};
+use crate::fractal::FractalSpec;
+use crate::shard::ShardStats;
 
 /// One simulation request.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,11 +39,16 @@ impl Default for JobSpec {
 impl JobSpec {
     /// Parse a request line: whitespace-separated `key=value` tokens, e.g.
     /// `engine=squeeze:16 fractal=sierpinski-triangle r=10 steps=100`.
+    /// `shards=N` promotes a (scalar) squeeze engine to the sharded
+    /// decomposition — `engine=squeeze:16 shards=4` is equivalent to
+    /// `engine=sharded-squeeze:16:4` — and overrides the shard count of
+    /// an already-sharded engine.
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
         let mut spec = JobSpec {
             id,
             ..JobSpec::default()
         };
+        let mut shards: Option<u32> = None;
         for tok in line.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
@@ -64,10 +71,45 @@ impl JobSpec {
                 "workers" => {
                     spec.workers = v.parse().map_err(|_| format!("bad workers={v}"))?
                 }
+                "shards" => {
+                    let n: u32 = v.parse().map_err(|_| format!("bad shards={v}"))?;
+                    if n == 0 {
+                        return Err("shards must be >= 1".into());
+                    }
+                    shards = Some(n);
+                }
                 other => return Err(format!("unknown key {other:?}")),
             }
         }
+        if let Some(n) = shards {
+            spec.engine = match spec.engine {
+                EngineKind::Squeeze { rho, tensor: false }
+                | EngineKind::ShardedSqueeze { rho, .. } => {
+                    EngineKind::ShardedSqueeze { rho, shards: n }
+                }
+                other => {
+                    return Err(format!(
+                        "shards= requires a scalar squeeze engine (got {other:?})"
+                    ))
+                }
+            };
+        }
         Ok(spec)
+    }
+
+    /// Semantic validation against the resolved fractal — the checks
+    /// the engines would otherwise enforce by panicking mid-build. The
+    /// service surfaces the message as an `ERR` line instead of letting
+    /// a worker die.
+    pub fn validate(&self, spec: &FractalSpec) -> Result<(), String> {
+        match self.engine {
+            EngineKind::Squeeze { rho, .. } | EngineKind::ShardedSqueeze { rho, .. } => {
+                crate::memory::squeeze_bytes(spec, self.r, rho, 1)
+                    .map(|_| ())
+                    .map_err(|e| e.to_string())
+            }
+            _ => Ok(()),
+        }
     }
 }
 
@@ -85,6 +127,10 @@ pub struct JobResult {
     pub population: u64,
     pub memory_bytes: u64,
     pub state_hash: u64,
+    /// Decomposition facts when the engine ran sharded (`None`
+    /// otherwise). Mirrored into the coordinator's halo/imbalance
+    /// gauges; not part of the TSV row.
+    pub shard: Option<ShardStats>,
 }
 
 impl JobResult {
@@ -139,6 +185,41 @@ mod tests {
     }
 
     #[test]
+    fn shards_key_promotes_squeeze_to_sharded() {
+        // explicit sharded engine
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:4 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 8, shards: 4 });
+        // shards= promotes the (default squeeze:16) engine, in any key order
+        let j = JobSpec::parse_line(1, "shards=2 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 16, shards: 2 });
+        let j = JobSpec::parse_line(1, "shards=3 engine=squeeze:4").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 4, shards: 3 });
+        // shards= overrides an already-sharded engine's count
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:2 shards=5").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 8, shards: 5 });
+        // non-squeeze engines reject the key; zero is invalid
+        assert!(JobSpec::parse_line(1, "engine=bb shards=2").is_err());
+        assert!(JobSpec::parse_line(1, "engine=squeeze-tcu:4 shards=2").is_err());
+        assert!(JobSpec::parse_line(1, "shards=0").is_err());
+    }
+
+    #[test]
+    fn validate_surfaces_bad_rho_as_error() {
+        use crate::fractal::catalog;
+        let tri = catalog::sierpinski_triangle();
+        let ok = JobSpec::parse_line(1, "engine=squeeze:4 r=6").unwrap();
+        assert!(ok.validate(&tri).is_ok());
+        let bad = JobSpec::parse_line(1, "engine=squeeze:3 r=6").unwrap();
+        let msg = bad.validate(&tri).unwrap_err();
+        assert!(msg.contains("rho=3"), "{msg}");
+        let too_big = JobSpec::parse_line(1, "engine=sharded-squeeze:16:2 r=2").unwrap();
+        assert!(too_big.validate(&tri).is_err());
+        // bb never fails rho validation
+        let bb = JobSpec::parse_line(1, "engine=bb r=2").unwrap();
+        assert!(bb.validate(&tri).is_ok());
+    }
+
+    #[test]
     fn tsv_roundtrip_columns() {
         let r = JobResult {
             id: 1,
@@ -151,6 +232,7 @@ mod tests {
             population: 42,
             memory_bytes: 4096,
             state_hash: 0xABCD,
+            shard: None,
         };
         let row = r.to_tsv();
         assert_eq!(

@@ -1,11 +1,13 @@
 //! Coordinator metrics: atomic counters + aggregate throughput, cheap
 //! enough to update from every worker on every job. Includes the shared
 //! map-cache hit/miss gauges so a deployment can see how much λ/ν table
-//! reuse the job mix achieves.
+//! reuse the job mix achieves, plus the shard subsystem's halo-traffic
+//! and load-imbalance gauges.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::maps::CacheStats;
+use crate::shard::ShardStats;
 
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -20,10 +22,17 @@ pub struct Metrics {
     /// [`crate::maps::MapCache`]; absolute, not deltas).
     map_cache_hits: AtomicU64,
     map_cache_misses: AtomicU64,
+    /// Sharded jobs observed (the halo/imbalance gauges below hold the
+    /// most recent sharded job's values).
+    sharded_jobs: AtomicU64,
+    /// Halo-exchange traffic of the last sharded job, bytes per step.
+    halo_bytes_per_step: AtomicU64,
+    /// Shard load imbalance of the last sharded job (f64 bit pattern).
+    shard_imbalance_bits: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MetricsSnapshot {
     pub started: u64,
     pub completed: u64,
@@ -32,6 +41,9 @@ pub struct MetricsSnapshot {
     pub cell_updates: u64,
     pub map_cache_hits: u64,
     pub map_cache_misses: u64,
+    pub sharded_jobs: u64,
+    pub halo_bytes_per_step: u64,
+    pub shard_imbalance: f64,
 }
 
 impl Metrics {
@@ -50,11 +62,21 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Mirror the shared map-cache counters (called after each job; the
-    /// cache counts cumulatively, so this stores absolute values).
+    /// Mirror the shared map-cache counters (called after each job —
+    /// success *or* failure, so the gauges never drift under errors;
+    /// the cache counts cumulatively, so this stores absolute values).
     pub fn record_map_cache(&self, stats: CacheStats) {
         self.map_cache_hits.store(stats.hits, Ordering::Relaxed);
         self.map_cache_misses.store(stats.misses, Ordering::Relaxed);
+    }
+
+    /// Record a finished sharded job's decomposition gauges.
+    pub fn record_sharding(&self, stats: ShardStats) {
+        self.sharded_jobs.fetch_add(1, Ordering::Relaxed);
+        self.halo_bytes_per_step
+            .store(stats.halo_bytes_per_step, Ordering::Relaxed);
+        self.shard_imbalance_bits
+            .store(stats.imbalance.to_bits(), Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -66,6 +88,11 @@ impl Metrics {
             cell_updates: self.cell_updates.load(Ordering::Relaxed),
             map_cache_hits: self.map_cache_hits.load(Ordering::Relaxed),
             map_cache_misses: self.map_cache_misses.load(Ordering::Relaxed),
+            sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
+            halo_bytes_per_step: self.halo_bytes_per_step.load(Ordering::Relaxed),
+            shard_imbalance: f64::from_bits(
+                self.shard_imbalance_bits.load(Ordering::Relaxed),
+            ),
         }
     }
 }
@@ -90,7 +117,7 @@ impl MetricsSnapshot {
     }
 
     pub fn to_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "jobs started={} completed={} failed={} busy={:.3}s throughput={:.3e} upd/s \
              map_cache={}/{} ({:.0}% hit)",
             self.started,
@@ -101,7 +128,14 @@ impl MetricsSnapshot {
             self.map_cache_hits,
             self.map_cache_hits + self.map_cache_misses,
             self.map_cache_hit_rate() * 100.0
-        )
+        );
+        if self.sharded_jobs > 0 {
+            line.push_str(&format!(
+                " sharded={} halo={}B/step imbalance={:.2}",
+                self.sharded_jobs, self.halo_bytes_per_step, self.shard_imbalance
+            ));
+        }
+        line
     }
 }
 
@@ -141,5 +175,34 @@ mod tests {
         // gauges are absolute: re-recording overwrites
         m.record_map_cache(CacheStats { hits: 10, misses: 2 });
         assert_eq!(m.snapshot().map_cache_hits, 10);
+    }
+
+    #[test]
+    fn sharding_gauges_record_and_render() {
+        let m = Metrics::default();
+        // no sharded jobs -> the line omits the shard section
+        assert!(!m.snapshot().to_line().contains("halo="));
+        m.record_sharding(ShardStats {
+            shards: 4,
+            halo_bytes_per_step: 2048,
+            imbalance: 1.25,
+        });
+        let s = m.snapshot();
+        assert_eq!(s.sharded_jobs, 1);
+        assert_eq!(s.halo_bytes_per_step, 2048);
+        assert!((s.shard_imbalance - 1.25).abs() < 1e-12);
+        let line = s.to_line();
+        assert!(line.contains("sharded=1"), "{line}");
+        assert!(line.contains("halo=2048B/step"), "{line}");
+        assert!(line.contains("imbalance=1.25"), "{line}");
+        // gauges hold the latest job; the counter accumulates
+        m.record_sharding(ShardStats {
+            shards: 2,
+            halo_bytes_per_step: 64,
+            imbalance: 1.0,
+        });
+        let s2 = m.snapshot();
+        assert_eq!(s2.sharded_jobs, 2);
+        assert_eq!(s2.halo_bytes_per_step, 64);
     }
 }

@@ -13,7 +13,7 @@ use std::sync::{Arc, Mutex};
 
 use super::job::{JobResult, JobSpec};
 use super::metrics::Metrics;
-use crate::ca::{build_with_cache, EngineConfig};
+use crate::ca::{build_with_cache, EngineConfig, EngineKind};
 use crate::fractal::catalog;
 use crate::maps::MapCache;
 use crate::util::timer::Timer;
@@ -25,12 +25,24 @@ pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
 
 /// Execute one job synchronously (the worker body; also usable directly),
 /// sourcing precomputed maps from `cache` when given.
+///
+/// Validation runs before any engine is built, so a bad request (e.g. a
+/// ρ that is not a power of `s`) comes back as `Err` — an `ERR` line in
+/// the service — instead of a panic killing the worker. Sharded jobs
+/// additionally warm the shared map cache per shard before step 0.
 pub fn execute_job_with_cache(
     spec: &JobSpec,
     cache: Option<&MapCache>,
 ) -> Result<JobResult, String> {
     let fractal = catalog::by_name(&spec.fractal)
         .ok_or_else(|| format!("unknown fractal {:?}", spec.fractal))?;
+    spec.validate(&fractal)?;
+    if let (EngineKind::ShardedSqueeze { rho, shards }, Some(c)) = (spec.engine, cache) {
+        // per-shard cache warmup: every shard interns the bundle
+        // concurrently before the engine (and step 0) exists
+        crate::shard::warm(c, &fractal, spec.r, rho, None, shards, spec.workers)
+            .map_err(|e| e.to_string())?;
+    }
     let cfg = EngineConfig {
         kind: spec.engine,
         r: spec.r,
@@ -58,6 +70,7 @@ pub fn execute_job_with_cache(
         population: engine.population(),
         memory_bytes: engine.memory_bytes(),
         state_hash: engine.state_hash(),
+        shard: engine.shard_stats(),
     })
 }
 
@@ -94,7 +107,12 @@ impl Scheduler {
                 metrics.job_started();
                 let result = execute_job_with_cache(&job, Some(&cache));
                 match &result {
-                    Ok(r) => metrics.job_finished(r.total_s, r.cells * r.steps as u64),
+                    Ok(r) => {
+                        metrics.job_finished(r.total_s, r.cells * r.steps as u64);
+                        if let Some(s) = r.shard {
+                            metrics.record_sharding(s);
+                        }
+                    }
                     Err(_) => metrics.job_failed(),
                 }
                 metrics.record_map_cache(cache.stats());
@@ -143,7 +161,6 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ca::EngineKind;
 
     fn small_job(id: u64, engine: EngineKind) -> JobSpec {
         JobSpec {
@@ -200,6 +217,44 @@ mod tests {
         assert_eq!(results.len(), 5);
         assert_eq!(metrics.snapshot().completed, 5);
         assert_eq!(metrics.snapshot().failed, 0);
+    }
+
+    #[test]
+    fn sharded_jobs_warm_the_cache_and_agree_with_single_engine() {
+        let sched = Scheduler::start(2);
+        sched.submit(small_job(1, EngineKind::Squeeze { rho: 4, tensor: false }));
+        sched.submit(small_job(2, EngineKind::ShardedSqueeze { rho: 4, shards: 3 }));
+        let metrics = Arc::clone(&sched.metrics);
+        let cache = Arc::clone(&sched.map_cache);
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 2);
+        let hashes: Vec<u64> = results
+            .iter()
+            .map(|r| r.as_ref().unwrap().state_hash)
+            .collect();
+        assert_eq!(hashes[0], hashes[1], "sharded decomposition changed the state");
+        // exactly one adjacency build across both jobs (warmup + builds hit)
+        assert_eq!(cache.stats().misses, 1);
+        assert!(cache.stats().hits >= 3, "{:?}", cache.stats());
+        // the sharded job's gauges landed in the metrics
+        let snap = metrics.snapshot();
+        assert_eq!(snap.sharded_jobs, 1);
+        assert!(snap.shard_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn invalid_rho_job_fails_cleanly_without_killing_workers() {
+        let sched = Scheduler::start(1);
+        sched.submit(small_job(1, EngineKind::Squeeze { rho: 3, tensor: false }));
+        sched.submit(small_job(2, EngineKind::Squeeze { rho: 4, tensor: false }));
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 2);
+        let failed: Vec<&Result<JobResult, String>> =
+            results.iter().filter(|r| r.is_err()).collect();
+        assert_eq!(failed.len(), 1);
+        assert!(failed[0].as_ref().unwrap_err().contains("rho=3"));
+        // the worker survived to run the valid job
+        assert!(results.iter().any(|r| r.is_ok()));
     }
 
     #[test]

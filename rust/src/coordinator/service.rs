@@ -5,10 +5,20 @@
 //! Protocol:
 //!   request line  = whitespace-separated `key=value` pairs (see
 //!                   [`JobSpec::parse_line`]), e.g.
-//!                   `engine=squeeze:16 r=10 steps=100 seed=7`
-//!   response line = TSV ([`JobResult::to_tsv`]); errors are
-//!                   `ERR <id> <message>`. `quit` ends the session, and
-//!                   `metrics` dumps the aggregate counters.
+//!                   `engine=squeeze:16 r=10 steps=100 seed=7`.
+//!                   `engine=` accepts `bb`, `lambda`, `squeeze[:RHO]`,
+//!                   `squeeze-tcu[:RHO]`, and the sharded decomposition
+//!                   `sharded-squeeze:RHO[:SHARDS]`; `shards=N`
+//!                   promotes a scalar squeeze engine to
+//!                   `sharded-squeeze` with N shards (and overrides the
+//!                   count of an already-sharded engine).
+//!   response line = TSV ([`JobResult::to_tsv`]); errors — malformed
+//!                   lines, unknown engines/fractals, and semantic
+//!                   failures like a ρ that is not a power of `s` — are
+//!                   `ERR <id> <message>` (the session always
+//!                   survives). `quit` ends the session, and `metrics`
+//!                   dumps the aggregate counters, including the
+//!                   map-cache and shard halo/imbalance gauges.
 
 use std::io::{BufRead, Write};
 
@@ -49,6 +59,9 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
                 match execute_job_with_cache(&spec, Some(&cache)) {
                     Ok(result) => {
                         metrics.job_finished(result.total_s, result.cells * result.steps as u64);
+                        if let Some(s) = result.shard {
+                            metrics.record_sharding(s);
+                        }
                         writeln!(output, "{}", result.to_tsv())?;
                     }
                     Err(msg) => {
@@ -56,12 +69,15 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
                         writeln!(output, "ERR {id} {msg}")?;
                     }
                 }
-                metrics.record_map_cache(cache.stats());
             }
             Err(msg) => {
                 writeln!(output, "ERR {id} {msg}")?;
             }
         }
+        // mirror the cache gauges on every request — error paths
+        // included, so the reported hit-rate never drifts behind
+        // lookups a failed job performed
+        metrics.record_map_cache(cache.stats());
         output.flush()?;
     }
     writeln!(output, "# {}", metrics.snapshot().to_line())?;

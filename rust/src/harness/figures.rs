@@ -159,7 +159,8 @@ pub fn fig14_measured(
 
 /// Table 2 — memory and MRF at level r per block size.
 pub fn table2(spec: &FractalSpec, r: u32, rhos: &[u32]) -> std::io::Result<()> {
-    let rows = memory::table2(spec, r, rhos, memory::PAPER_CELL_BYTES);
+    let rows = memory::table2(spec, r, rhos, memory::PAPER_CELL_BYTES)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
     let mut t = Table::new(&["rho", "bb_lambda", "squeeze", "MRF"]);
     for row in rows {
         t.row(&[
@@ -185,7 +186,8 @@ pub fn r20_feasibility(spec: &FractalSpec) -> std::io::Result<()> {
         "no (4096 GB)".into(),
     ]);
     for rho in [1u32, 16, 32] {
-        let b = memory::squeeze_bytes(spec, 20, rho, memory::PAPER_CELL_BYTES);
+        let b = memory::squeeze_bytes(spec, 20, rho, memory::PAPER_CELL_BYTES)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         t.row(&[
             format!("Squeeze ρ={rho}, r=20"),
             human_bytes(b),
@@ -194,7 +196,11 @@ pub fn r20_feasibility(spec: &FractalSpec) -> std::io::Result<()> {
     }
     t.row(&[
         "MRF at r=20 (ρ=1)".into(),
-        format!("{:.1}x", memory::mrf(spec, 20, 1)),
+        format!(
+            "{:.1}x",
+            memory::mrf(spec, 20, 1)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?
+        ),
         "-".into(),
     ]);
     emit("r20_feasibility", "§4.3 — r=20 feasibility (A100 40 GB)", &t)

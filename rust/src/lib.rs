@@ -17,7 +17,9 @@
 //! software tensor-core simulator in [`tcu`]). Per-`(fractal, level, ρ)`
 //! map tables — including the block engine's fully materialized neighbor
 //! adjacency — are interned in [`maps::cache::MapCache`] and shared via
-//! `Arc` across engines and coordinator jobs.
+//! `Arc` across engines and coordinator jobs. The [`shard`] subsystem
+//! decomposes the block-level domain into halo-exchanged shards so a
+//! job can span more memory than any single engine buffer.
 //!
 //! ## Layout (three-layer architecture)
 //!
@@ -37,5 +39,6 @@ pub mod harness;
 pub mod maps;
 pub mod memory;
 pub mod runtime;
+pub mod shard;
 pub mod tcu;
 pub mod util;

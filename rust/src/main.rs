@@ -65,7 +65,8 @@ fn usage(cmd: Option<&str>) {
     eprintln!(
         "usage: squeeze <command> [options]\n\n\
          commands:\n  \
-         run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n  \
+         run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n             \
+         (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS])\n  \
          serve      (reads job lines from stdin; see coordinator::service)\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
@@ -77,8 +78,9 @@ fn usage(cmd: Option<&str>) {
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
-    let engine = EngineKind::parse(&args.get_or("engine", "squeeze:16"))
-        .ok_or("bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO])")?;
+    let engine = EngineKind::parse(&args.get_or("engine", "squeeze:16")).ok_or(
+        "bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS])",
+    )?;
     let spec = JobSpec {
         id: 0,
         fractal: args.get_or("fractal", "sierpinski-triangle"),

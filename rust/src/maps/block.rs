@@ -41,7 +41,14 @@ pub enum BlockError {
 
 impl std::fmt::Display for BlockError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{self:?}")
+        match self {
+            BlockError::RhoNotPowerOfS { rho, s } => {
+                write!(f, "block size rho={rho} is not a power of s={s}")
+            }
+            BlockError::RhoTooLarge { rho, r } => {
+                write!(f, "block size rho={rho} exceeds the level-{r} fractal")
+            }
+        }
     }
 }
 

@@ -3,10 +3,14 @@
 //! The paper's memory claims (Fig. 10, Table 2, §4.3) are exact arithmetic
 //! over storage layouts, so this module reproduces them to the digit
 //! without allocating: BB and λ(ω) store the full `n × n` embedding;
-//! Squeeze stores `k^{r_b}` blocks of `ρ × ρ` cells.
+//! Squeeze stores `k^{r_b}` blocks of `ρ × ρ` cells. The one exception
+//! is the per-shard report, whose ghost-ring sizes depend on block
+//! topology and therefore build the adjacency once.
 
 use crate::fractal::FractalSpec;
-use crate::maps::block::intra_levels_for;
+use crate::maps::block::{intra_levels_for, BlockError};
+use crate::maps::cache::BlockMaps;
+use crate::shard::{HaloPlan, ShardPartition};
 
 /// Bytes per cell in the paper's experiments (Table 2's 16 GB at r=16
 /// implies 4-byte cells: `(2^16)^2 · 4 B = 16 GiB`).
@@ -24,17 +28,28 @@ pub fn lambda_bytes(spec: &FractalSpec, r: u32, cell_bytes: u64) -> u64 {
 }
 
 /// Squeeze block-level storage: `k^{r - log_s ρ} · ρ² · cell_bytes`.
-/// Panics if ρ is not a power of `s` (mirrors `BlockCtx::new`).
-pub fn squeeze_bytes(spec: &FractalSpec, r: u32, rho: u32, cell_bytes: u64) -> u64 {
-    let intra = intra_levels_for(rho, spec.s)
-        .unwrap_or_else(|| panic!("rho {rho} is not a power of s={}", spec.s));
-    assert!(intra <= r, "rho {rho} larger than the fractal");
-    spec.cells(r - intra) * (rho as u64 * rho as u64) * cell_bytes
+/// Errors (mirroring `BlockCtx::new`) when ρ is not a power of `s` or
+/// exceeds the level-`r` fractal — callers surface this instead of a
+/// panic killing a coordinator session.
+pub fn squeeze_bytes(
+    spec: &FractalSpec,
+    r: u32,
+    rho: u32,
+    cell_bytes: u64,
+) -> Result<u64, BlockError> {
+    let intra = intra_levels_for(rho, spec.s).ok_or(BlockError::RhoNotPowerOfS {
+        rho,
+        s: spec.s,
+    })?;
+    if intra > r {
+        return Err(BlockError::RhoTooLarge { rho, r });
+    }
+    Ok(spec.cells(r - intra) * (rho as u64 * rho as u64) * cell_bytes)
 }
 
 /// Measured MRF of Squeeze at block size ρ over BB (Table 2's last column).
-pub fn mrf(spec: &FractalSpec, r: u32, rho: u32) -> f64 {
-    bb_bytes(spec, r, 1) as f64 / squeeze_bytes(spec, r, rho, 1) as f64
+pub fn mrf(spec: &FractalSpec, r: u32, rho: u32) -> Result<f64, BlockError> {
+    Ok(bb_bytes(spec, r, 1) as f64 / squeeze_bytes(spec, r, rho, 1)? as f64)
 }
 
 /// Theoretical MRF at thread level (Fig. 10): `s^{2r} / k^r`.
@@ -54,13 +69,69 @@ pub struct Table2Row {
 }
 
 /// Regenerate Table 2 for a fractal/level over the given block sizes.
-pub fn table2(spec: &FractalSpec, r: u32, rhos: &[u32], cell_bytes: u64) -> Vec<Table2Row> {
+pub fn table2(
+    spec: &FractalSpec,
+    r: u32,
+    rhos: &[u32],
+    cell_bytes: u64,
+) -> Result<Vec<Table2Row>, BlockError> {
     rhos.iter()
-        .map(|&rho| Table2Row {
-            rho,
-            bb_bytes: bb_bytes(spec, r, cell_bytes),
-            squeeze_bytes: squeeze_bytes(spec, r, rho, cell_bytes),
-            mrf: mrf(spec, r, rho),
+        .map(|&rho| {
+            Ok(Table2Row {
+                rho,
+                bb_bytes: bb_bytes(spec, r, cell_bytes),
+                squeeze_bytes: squeeze_bytes(spec, r, rho, cell_bytes)?,
+                mrf: mrf(spec, r, rho)?,
+            })
+        })
+        .collect()
+}
+
+/// Per-shard byte accounting under the shard subsystem's contiguous
+/// block partition. `local_bytes` is the shard's owned state (one
+/// buffer); their sum over all shards equals [`squeeze_bytes`] exactly,
+/// which is what keeps the MRF reports exact under decomposition.
+/// `halo_bytes` is the ghost-ring overhead the decomposition adds.
+#[derive(Clone, Debug)]
+pub struct ShardBytesRow {
+    pub shard: usize,
+    pub local_blocks: u64,
+    pub ghost_blocks: u64,
+    pub local_bytes: u64,
+    pub halo_bytes: u64,
+}
+
+/// Exact per-shard accounting for `(spec, r, ρ)` split into `shards`
+/// contiguous block ranges. Unlike the arithmetic-only models above,
+/// ghost-ring sizes depend on the fractal's block topology, so this
+/// builds the adjacency + halo plan once (scalar maps, single worker).
+pub fn sharded_squeeze_report(
+    spec: &FractalSpec,
+    r: u32,
+    rho: u32,
+    shards: u32,
+    cell_bytes: u64,
+) -> Result<Vec<ShardBytesRow>, BlockError> {
+    let maps = BlockMaps::build(spec, r, rho, None, 1)?;
+    Ok(sharded_report_for(&maps, shards, cell_bytes))
+}
+
+/// [`sharded_squeeze_report`] over an already-built (e.g. cached) map
+/// bundle.
+pub fn sharded_report_for(maps: &BlockMaps, shards: u32, cell_bytes: u64) -> Vec<ShardBytesRow> {
+    let part = ShardPartition::new(maps.block.blocks(), shards);
+    let plan = HaloPlan::build(maps, &part);
+    let tile = maps.block.rho as u64 * maps.block.rho as u64;
+    (0..part.shards())
+        .map(|s| {
+            let (a, b) = part.range(s);
+            ShardBytesRow {
+                shard: s,
+                local_blocks: b - a,
+                ghost_blocks: plan.ghost_counts[s],
+                local_bytes: (b - a) * tile * cell_bytes,
+                halo_bytes: plan.ghost_counts[s] * tile * cell_bytes,
+            }
         })
         .collect()
 }
@@ -101,7 +172,7 @@ mod tests {
         // GB:     0.16   0.21   0.29   0.38   0.50   0.68
         // MRF:    99.8   74.8   56.1   42.1   31.6   23.7
         let spec = catalog::sierpinski_triangle();
-        let rows = table2(&spec, 16, &[1, 2, 4, 8, 16, 32], PAPER_CELL_BYTES);
+        let rows = table2(&spec, 16, &[1, 2, 4, 8, 16, 32], PAPER_CELL_BYTES).unwrap();
         let expect_gb = [0.16, 0.21, 0.29, 0.38, 0.50, 0.68];
         let expect_mrf = [99.8, 74.8, 56.1, 42.1, 31.6, 23.7];
         for (i, row) in rows.iter().enumerate() {
@@ -129,12 +200,12 @@ mod tests {
         // the MRF is ~315×.
         let spec = catalog::sierpinski_triangle();
         assert_eq!(bb_bytes(&spec, 20, PAPER_CELL_BYTES), 4096 * (1u64 << 30));
-        let squeeze_gb = squeeze_bytes(&spec, 20, 1, PAPER_CELL_BYTES) as f64 / GIB;
+        let squeeze_gb = squeeze_bytes(&spec, 20, 1, PAPER_CELL_BYTES).unwrap() as f64 / GIB;
         assert!((squeeze_gb - 12.99).abs() < 0.05, "got {squeeze_gb}");
-        let m = mrf(&spec, 20, 1);
+        let m = mrf(&spec, 20, 1).unwrap();
         assert!((m - 315.3).abs() < 0.5, "got {m}");
         // largest-ρ end of the "~13 to ~55 GB" range
-        let squeeze32_gb = squeeze_bytes(&spec, 20, 32, PAPER_CELL_BYTES) as f64 / GIB;
+        let squeeze32_gb = squeeze_bytes(&spec, 20, 32, PAPER_CELL_BYTES).unwrap() as f64 / GIB;
         assert!(squeeze32_gb > 50.0 && squeeze32_gb < 60.0, "got {squeeze32_gb}");
     }
 
@@ -164,7 +235,51 @@ mod tests {
     #[test]
     fn full_square_has_mrf_one() {
         let spec = catalog::full_square(2);
-        assert!((mrf(&spec, 8, 1) - 1.0).abs() < 1e-9);
+        assert!((mrf(&spec, 8, 1).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_rho_is_an_error_not_a_panic() {
+        let spec = catalog::sierpinski_triangle();
+        // 3 is not a power of s=2
+        assert_eq!(
+            squeeze_bytes(&spec, 8, 3, 1),
+            Err(BlockError::RhoNotPowerOfS { rho: 3, s: 2 })
+        );
+        // log2(16) = 4 > r = 2
+        assert_eq!(
+            squeeze_bytes(&spec, 2, 16, 1),
+            Err(BlockError::RhoTooLarge { rho: 16, r: 2 })
+        );
+        assert!(mrf(&spec, 8, 5).is_err());
+        assert!(table2(&spec, 8, &[1, 2, 3], 1).is_err());
+        assert!(sharded_squeeze_report(&spec, 8, 3, 4, 1).is_err());
+    }
+
+    #[test]
+    fn shard_report_local_bytes_sum_to_squeeze_bytes() {
+        for spec in [catalog::sierpinski_triangle(), catalog::vicsek()] {
+            let r = if spec.s == 2 { 6 } else { 4 };
+            let rho = spec.s;
+            for shards in [1u32, 2, 4, 7] {
+                let rows =
+                    sharded_squeeze_report(&spec, r, rho, shards, PAPER_CELL_BYTES).unwrap();
+                let local: u64 = rows.iter().map(|row| row.local_bytes).sum();
+                assert_eq!(
+                    local,
+                    squeeze_bytes(&spec, r, rho, PAPER_CELL_BYTES).unwrap(),
+                    "{} shards={shards}: decomposition must not change the MRF",
+                    spec.name
+                );
+                let blocks: u64 = rows.iter().map(|row| row.local_blocks).sum();
+                assert_eq!(blocks * (rho as u64).pow(2) * PAPER_CELL_BYTES, local);
+                // single shard has zero halo overhead; more shards only add ghosts
+                if shards == 1 {
+                    assert_eq!(rows[0].ghost_blocks, 0);
+                    assert_eq!(rows[0].halo_bytes, 0);
+                }
+            }
+        }
     }
 
     #[test]

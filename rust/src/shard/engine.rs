@@ -1,0 +1,550 @@
+//! Shard-local state + the sharded orchestrator engine.
+//!
+//! [`ShardEngine`] owns one contiguous slice of the block-level compact
+//! domain plus a ghost ring of `ρ×ρ` tiles mirroring its remote Moore
+//! neighbors; its sweep is the *same* tile transition the single
+//! engine runs ([`crate::ca::squeeze_block::sweep_block`]), just
+//! indexed through the shard-remapped neighbor table.
+//!
+//! [`ShardedSqueezeEngine`] orchestrates: every step is
+//! `halo exchange → parallel shard-local sweeps → buffer swap`, with
+//! the exchange acting as the inter-step barrier (ghosts always carry
+//! the *previous* step's committed state, so shard sweeps never
+//! observe a mid-step neighbor). It implements [`Engine`], so it drops
+//! into the factory, the differential suite, and the benches unchanged
+//! — and it is the first engine whose domain can exceed any single
+//! buffer: each shard's slice (plus its halo ring) is all a worker
+//! ever touches.
+
+use std::sync::Arc;
+
+use super::partition::ShardPartition;
+use super::plan::{HaloPlan, HaloRoute};
+use super::ShardStats;
+use crate::ca::engine::{seeded_alive, Engine};
+use crate::ca::grid::DoubleBuffer;
+use crate::ca::rule::Rule;
+use crate::ca::squeeze::MapPath;
+use crate::ca::squeeze_block::{sweep_block, OutPtr};
+use crate::fractal::{Coord, FractalSpec};
+use crate::maps::block::BlockCtx;
+use crate::maps::cache::{BlockMaps, MapCache};
+use crate::maps::lambda::lambda;
+use crate::tcu::MmaMode;
+use crate::util::pool::parallel_for_chunks;
+
+/// One shard: a contiguous run of `nlocal` blocks plus `nghost` ghost
+/// tiles, stored as a combined double buffer `[local ++ ghost]` so the
+/// sweep indexes one flat slice.
+pub struct ShardEngine {
+    nlocal: u64,
+    nghost: u64,
+    /// Per local block: 8 Moore neighbor base slots in the combined
+    /// buffer (remapped by the [`HaloPlan`]).
+    neighbors: Vec<[u64; 8]>,
+    /// Local cells occupy `[0, nlocal·ρ²)`; ghosts follow.
+    buf: DoubleBuffer,
+}
+
+impl ShardEngine {
+    fn new(nghost: u64, neighbors: Vec<[u64; 8]>, tile: u64) -> ShardEngine {
+        let nlocal = neighbors.len() as u64;
+        ShardEngine {
+            nlocal,
+            nghost,
+            neighbors,
+            buf: DoubleBuffer::zeroed((nlocal + nghost) * tile),
+        }
+    }
+
+    /// Sweep this shard's local blocks (ghosts are read-only inputs)
+    /// and swap. `workers` parallelizes *within* the shard.
+    fn step(&mut self, block: &BlockCtx, rule: Rule, workers: usize) {
+        let tile = block.rho as u64 * block.rho as u64;
+        let cur = &self.buf.cur;
+        let neighbors = &self.neighbors;
+        let out = OutPtr(self.buf.next.as_mut_ptr());
+        parallel_for_chunks(self.nlocal, workers, move |start, end| {
+            for lb in start..end {
+                sweep_block(cur, out, block, &neighbors[lb as usize], lb * tile, rule);
+            }
+        });
+        self.buf.swap();
+    }
+
+    /// Live cells in the *local* slice (ghosts are replicas and must
+    /// not be counted).
+    fn population(&self, tile: u64) -> u64 {
+        self.buf.cur[..(self.nlocal * tile) as usize]
+            .iter()
+            .map(|&b| b as u64)
+            .sum()
+    }
+
+    /// Blocks owned by this shard.
+    pub fn local_blocks(&self) -> u64 {
+        self.nlocal
+    }
+
+    /// Ghost tiles mirrored from other shards.
+    pub fn ghost_blocks(&self) -> u64 {
+        self.nghost
+    }
+}
+
+/// The sharded block-level Squeeze engine (the `sharded-squeeze:<ρ>:<S>`
+/// factory variant).
+pub struct ShardedSqueezeEngine {
+    /// Shared (possibly cached) global map bundle.
+    maps: Arc<BlockMaps>,
+    part: ShardPartition,
+    routes: Vec<HaloRoute>,
+    shards: Vec<ShardEngine>,
+    /// Per-destination staging for the gather→scatter exchange, sized
+    /// to each shard's ghost ring and reused every step.
+    stage: Vec<Vec<u8>>,
+    rule: Rule,
+    workers: usize,
+    path: MapPath,
+    halo_bytes_per_step: u64,
+    plan_table_bytes: u64,
+}
+
+impl ShardedSqueezeEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        shards: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+    ) -> ShardedSqueezeEngine {
+        Self::with_cache(spec, r, rho, shards, rule, density, seed, workers, path, None)
+    }
+
+    /// Build the engine, taking the global map bundle from `cache` when
+    /// given; the partition and halo plan are derived per engine.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        shards: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        path: MapPath,
+        cache: Option<&MapCache>,
+    ) -> ShardedSqueezeEngine {
+        let mma = match path {
+            MapPath::Scalar => None,
+            MapPath::Tensor(mode) => Some(mode),
+        };
+        let maps = match cache {
+            Some(c) => c
+                .block_maps(spec, r, rho, mma, workers)
+                .expect("invalid rho for spec"),
+            None => Arc::new(
+                BlockMaps::build(spec, r, rho, mma, workers).expect("invalid rho for spec"),
+            ),
+        };
+        let part = ShardPartition::new(maps.block.blocks(), shards);
+        let plan = HaloPlan::build(&maps, &part);
+        let tile = rho as u64 * rho as u64;
+        let halo_bytes_per_step = plan.halo_bytes_per_step();
+        let plan_table_bytes = plan.table_bytes();
+        let HaloPlan {
+            routes,
+            ghost_counts,
+            neighbors,
+            ..
+        } = plan;
+        let mut engines: Vec<ShardEngine> = neighbors
+            .into_iter()
+            .zip(&ghost_counts)
+            .map(|(tables, &nghost)| ShardEngine::new(nghost, tables, tile))
+            .collect();
+        let stage: Vec<Vec<u8>> = ghost_counts
+            .iter()
+            .map(|&g| vec![0u8; (g * tile) as usize])
+            .collect();
+        // Canonical seeding: compact linear index -> expanded -> global
+        // slot -> (owning shard, shard-local slot). Identical decisions
+        // to the single engine, routed through the partition.
+        let full = &maps.full;
+        for idx in 0..full.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = maps
+                    .block
+                    .storage_index(e)
+                    .expect("fractal cell must have a slot");
+                let bidx = slot / tile;
+                let s = part.shard_of(bidx);
+                let local = (bidx - part.range(s).0) * tile + slot % tile;
+                engines[s].buf.cur[local as usize] = 1;
+            }
+        }
+        ShardedSqueezeEngine {
+            maps,
+            part,
+            routes,
+            shards: engines,
+            stage,
+            rule,
+            workers,
+            path,
+            halo_bytes_per_step,
+            plan_table_bytes,
+        }
+    }
+
+    /// Halo exchange: copy every boundary tile's committed state into
+    /// its readers' ghost rings. Gather→scatter through per-destination
+    /// staging keeps the copies safe without locking shard pairs.
+    fn exchange(&mut self) {
+        let tile = (self.maps.block.rho as u64 * self.maps.block.rho as u64) as usize;
+        let stage = &mut self.stage;
+        let shards = &self.shards;
+        for r in &self.routes {
+            let from = r.src_block as usize * tile;
+            let to = r.ghost_slot as usize * tile;
+            stage[r.dst_shard][to..to + tile]
+                .copy_from_slice(&shards[r.src_shard].buf.cur[from..from + tile]);
+        }
+        for (shard, staged) in self.shards.iter_mut().zip(&self.stage) {
+            let ghost_base = (shard.nlocal as usize) * tile;
+            shard.buf.cur[ghost_base..ghost_base + staged.len()].copy_from_slice(staged);
+        }
+    }
+
+    /// The shared map bundle (tests / capacity accounting).
+    pub fn maps(&self) -> &BlockMaps {
+        &self.maps
+    }
+
+    /// The block partition this engine runs under.
+    pub fn partition(&self) -> &ShardPartition {
+        &self.part
+    }
+
+    /// Per-shard `(local_blocks, ghost_blocks)` (capacity accounting).
+    pub fn shard_sizes(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| (s.local_blocks(), s.ghost_blocks()))
+            .collect()
+    }
+}
+
+impl Engine for ShardedSqueezeEngine {
+    fn name(&self) -> String {
+        let base = match self.path {
+            MapPath::Scalar => "sharded-squeeze",
+            MapPath::Tensor(MmaMode::Fp16) => "sharded-squeeze-tcu",
+            MapPath::Tensor(MmaMode::F32) => "sharded-squeeze-tcu-f32",
+        };
+        format!("{base}-rho{}x{}", self.maps.block.rho, self.shards.len())
+    }
+
+    fn step(&mut self) {
+        // barrier 1: ghosts receive the previous step's committed state
+        self.exchange();
+        let rule = self.rule;
+        let block = &self.maps.block;
+        let n = self.shards.len();
+        if n == 1 {
+            self.shards[0].step(block, rule, self.workers);
+            return;
+        }
+        // the worker budget bounds OS threads even when shards ≫
+        // workers: `threads` executors each sweep a contiguous group of
+        // shards; when workers exceed the shard count the surplus goes
+        // to intra-shard parallelism instead
+        let threads = self.workers.max(1).min(n);
+        if threads == 1 {
+            for shard in &mut self.shards {
+                shard.step(block, rule, 1);
+            }
+            return;
+        }
+        let inner = (self.workers / n).max(1);
+        let group = n.div_ceil(threads);
+        // scope join is barrier 2 (no shard starts step t+1 early)
+        std::thread::scope(|scope| {
+            for shards in self.shards.chunks_mut(group) {
+                scope.spawn(move || {
+                    for shard in shards {
+                        shard.step(block, rule, inner);
+                    }
+                });
+            }
+        });
+    }
+
+    fn cells(&self) -> u64 {
+        self.maps.full.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
+        self.shards.iter().map(|s| s.population(tile)).sum()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        // per-shard state (local + ghost, both halves) + the shared
+        // adjacency + the remapped per-shard tables — same accounting
+        // courtesy the single block engine extends to its table
+        let state: u64 = self.shards.iter().map(|s| s.buf.bytes()).sum();
+        state + self.maps.table_bytes() + self.plan_table_bytes
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let full = &self.maps.full;
+        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
+        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+        let slot = self.maps.block.storage_index(e).expect("fractal cell");
+        let bidx = slot / tile;
+        let s = self.part.shard_of(bidx);
+        let local = (bidx - self.part.range(s).0) * tile + slot % tile;
+        self.shards[s].buf.cur[local as usize]
+    }
+
+    fn shard_stats(&self) -> Option<ShardStats> {
+        Some(ShardStats {
+            shards: self.shards.len() as u32,
+            halo_bytes_per_step: self.halo_bytes_per_step,
+            imbalance: self.part.imbalance(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::engine::run_and_hash;
+    use crate::ca::squeeze_block::SqueezeBlockEngine;
+    use crate::fractal::catalog;
+
+    fn reference_hash(spec: &FractalSpec, r: u32, rho: u32, steps: u32) -> u64 {
+        let mut sq = SqueezeBlockEngine::new(
+            spec,
+            r,
+            rho,
+            Rule::game_of_life(),
+            0.4,
+            21,
+            2,
+            MapPath::Scalar,
+        );
+        run_and_hash(&mut sq, steps)
+    }
+
+    #[test]
+    fn sharded_matches_single_engine_for_1_2_4_shards() {
+        let spec = catalog::sierpinski_triangle();
+        let (r, rho, steps) = (5, 2, 6);
+        let want = reference_hash(&spec, r, rho, steps);
+        for shards in [1u32, 2, 4] {
+            let mut sh = ShardedSqueezeEngine::new(
+                &spec,
+                r,
+                rho,
+                shards,
+                Rule::game_of_life(),
+                0.4,
+                21,
+                4,
+                MapPath::Scalar,
+            );
+            assert_eq!(run_and_hash(&mut sh, steps), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_matches_for_s3_fractals_and_any_worker_count() {
+        for spec in [catalog::vicsek(), catalog::sierpinski_carpet()] {
+            let (r, rho, steps) = (3, 3, 5);
+            let want = reference_hash(&spec, r, rho, steps);
+            for (shards, workers) in [(2u32, 1usize), (3, 2), (4, 8)] {
+                let mut sh = ShardedSqueezeEngine::new(
+                    &spec,
+                    r,
+                    rho,
+                    shards,
+                    Rule::game_of_life(),
+                    0.4,
+                    21,
+                    workers,
+                    MapPath::Scalar,
+                );
+                assert_eq!(
+                    run_and_hash(&mut sh, steps),
+                    want,
+                    "{} shards={shards} workers={workers}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn many_more_shards_than_workers_stays_correct_and_bounded() {
+        // shards ≫ workers: the step loop must distribute shard groups
+        // over the worker budget (not thread-per-shard) and still match
+        // the single engine bit for bit — including the degenerate
+        // one-block-per-shard decomposition
+        let spec = catalog::sierpinski_triangle();
+        let (r, rho, steps) = (5, 2, 6);
+        let want = reference_hash(&spec, r, rho, steps);
+        for shards in [27u32, 1_000_000] {
+            let mut sh = ShardedSqueezeEngine::new(
+                &spec,
+                r,
+                rho,
+                shards,
+                Rule::game_of_life(),
+                0.4,
+                21,
+                3,
+                MapPath::Scalar,
+            );
+            // 81 blocks at r=5/ρ=2: the request clamps to ≤ 81 shards
+            assert!(sh.shard_stats().unwrap().shards <= 81);
+            assert_eq!(run_and_hash(&mut sh, steps), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn seed_state_population_and_cells_match_single_engine() {
+        let spec = catalog::sierpinski_triangle();
+        let single = SqueezeBlockEngine::new(
+            &spec,
+            5,
+            4,
+            Rule::game_of_life(),
+            0.5,
+            9,
+            2,
+            MapPath::Scalar,
+        );
+        let sharded = ShardedSqueezeEngine::new(
+            &spec,
+            5,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            9,
+            2,
+            MapPath::Scalar,
+        );
+        assert_eq!(sharded.cells(), single.cells());
+        assert_eq!(sharded.population(), single.population());
+        assert_eq!(sharded.state_hash(), single.state_hash());
+        for idx in 0..sharded.cells() {
+            assert_eq!(sharded.cell(idx), single.cell(idx), "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn shard_stats_report_topology() {
+        let spec = catalog::sierpinski_triangle();
+        let e = ShardedSqueezeEngine::new(
+            &spec,
+            5,
+            2,
+            4,
+            Rule::game_of_life(),
+            0.4,
+            1,
+            2,
+            MapPath::Scalar,
+        );
+        let stats = e.shard_stats().expect("sharded engine has stats");
+        assert_eq!(stats.shards, 4);
+        assert!(stats.halo_bytes_per_step > 0);
+        assert!(stats.imbalance >= 1.0);
+        // a 1-shard decomposition has no halo
+        let single = ShardedSqueezeEngine::new(
+            &spec,
+            5,
+            2,
+            1,
+            Rule::game_of_life(),
+            0.4,
+            1,
+            2,
+            MapPath::Scalar,
+        );
+        assert_eq!(single.shard_stats().unwrap().halo_bytes_per_step, 0);
+    }
+
+    #[test]
+    fn local_state_bytes_sum_to_the_single_engine_buffer() {
+        let spec = catalog::sierpinski_triangle();
+        let e = ShardedSqueezeEngine::new(
+            &spec,
+            6,
+            4,
+            4,
+            Rule::game_of_life(),
+            0.4,
+            7,
+            2,
+            MapPath::Scalar,
+        );
+        let tile = 16u64;
+        let local_cells: u64 = e.shard_sizes().iter().map(|(l, _)| l * tile).sum();
+        assert_eq!(local_cells, e.maps().block.stored_cells());
+        // engine accounting = state + shared table + remapped tables
+        let state: u64 = e
+            .shard_sizes()
+            .iter()
+            .map(|(l, g)| 2 * (l + g) * tile)
+            .sum();
+        assert_eq!(
+            e.memory_bytes(),
+            state + e.maps().table_bytes() + e.plan_table_bytes
+        );
+    }
+
+    #[test]
+    fn cached_sharded_engines_share_the_global_bundle() {
+        let spec = catalog::vicsek();
+        let cache = MapCache::new();
+        let a = ShardedSqueezeEngine::with_cache(
+            &spec,
+            4,
+            3,
+            2,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        );
+        let b = ShardedSqueezeEngine::with_cache(
+            &spec,
+            4,
+            3,
+            4,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        );
+        // different shard counts, one interned adjacency
+        assert!(Arc::ptr_eq(&a.maps, &b.maps));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+    }
+}

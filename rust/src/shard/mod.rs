@@ -1,0 +1,116 @@
+//! Sharded compact-domain subsystem: halo-exchanged domain
+//! decomposition over Squeeze blocks.
+//!
+//! One `SqueezeBlockEngine` owns the whole compact buffer; this module
+//! partitions the block-level domain into contiguous shards
+//! ([`partition`]), derives a static halo-exchange plan from the cached
+//! `BlockMaps` 8-neighbor adjacency ([`plan`]), and steps the shards as
+//! parallel local sweeps separated by an exchange barrier ([`engine`]).
+//! The orchestrator implements the common [`crate::ca::Engine`] trait,
+//! so `engine=sharded-squeeze:<ρ>:<shards>` drops into the factory,
+//! the differential suite, and the benches unchanged — and every step
+//! stays bit-identical to the single-engine and BB references. This is
+//! the seam future distribution/batching work builds on: a shard's
+//! slice + ghost ring is all a worker ever touches, so a domain no
+//! longer has to fit one engine's buffer.
+
+pub mod engine;
+pub mod partition;
+pub mod plan;
+
+pub use engine::{ShardEngine, ShardedSqueezeEngine};
+pub use partition::ShardPartition;
+pub use plan::{HaloPlan, HaloRoute};
+
+use crate::fractal::FractalSpec;
+use crate::maps::block::BlockError;
+use crate::maps::cache::{BlockMaps, MapCache};
+use crate::tcu::MmaMode;
+use std::sync::Arc;
+
+/// Decomposition facts a sharded engine exposes for the coordinator's
+/// gauges (`coordinator::metrics`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardStats {
+    /// Effective shard count (requests beyond the block count clamp).
+    pub shards: u32,
+    /// Cross-shard tile bytes copied per step by the halo exchange.
+    pub halo_bytes_per_step: u64,
+    /// Largest shard over the ideal share (1.0 = perfectly balanced).
+    pub imbalance: f64,
+}
+
+/// Upper bound on concurrent warmup threads: one lookup per shard is
+/// the point, but a client-chosen shard count must never translate
+/// into unbounded OS-thread spawns (a spawn failure would panic the
+/// serve session — the exact failure mode `JobSpec::validate` exists
+/// to prevent). Beyond this bound extra lookups prove nothing anyway:
+/// they all hit the same interned entry.
+pub const MAX_WARM_THREADS: u32 = 64;
+
+/// Per-shard cache warmup: every shard's worker interns the shared
+/// `BlockMaps` bundle concurrently *before step 0*, so no shard pays a
+/// table build mid-run and the cache's build-under-lock guarantee keeps
+/// the accounting deterministic — exactly one miss, `t − 1` hits,
+/// where `t = min(shards, MAX_WARM_THREADS)`.
+pub fn warm(
+    cache: &MapCache,
+    spec: &FractalSpec,
+    r: u32,
+    rho: u32,
+    mma: Option<MmaMode>,
+    shards: u32,
+    workers: usize,
+) -> Result<Arc<BlockMaps>, BlockError> {
+    let threads = shards.clamp(1, MAX_WARM_THREADS);
+    let mut results: Vec<Result<Arc<BlockMaps>, BlockError>> = Vec::new();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| scope.spawn(move || cache.block_maps(spec, r, rho, mma, workers)))
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("warmup thread panicked"));
+        }
+    });
+    results
+        .into_iter()
+        .next()
+        .expect("at least one warmup lookup")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    #[test]
+    fn warmup_interns_once_and_counts_deterministically() {
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_triangle();
+        let maps = warm(&cache, &spec, 5, 4, None, 4, 2).unwrap();
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 3);
+        // a later engine build hits the warmed entry
+        let again = cache.block_maps(&spec, 5, 4, None, 2).unwrap();
+        assert!(Arc::ptr_eq(&maps, &again));
+        assert_eq!(cache.stats().hits, 4);
+    }
+
+    #[test]
+    fn warmup_surfaces_invalid_rho() {
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_triangle();
+        assert!(warm(&cache, &spec, 5, 3, None, 2, 1).is_err());
+    }
+
+    #[test]
+    fn warmup_thread_count_is_bounded() {
+        // a hostile/typo'd shard count must not translate into
+        // unbounded OS-thread spawns (and must still warm the cache)
+        let cache = MapCache::new();
+        let spec = catalog::sierpinski_triangle();
+        warm(&cache, &spec, 4, 2, None, 4_000_000, 1).unwrap();
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, (MAX_WARM_THREADS - 1) as u64);
+    }
+}

@@ -1,0 +1,127 @@
+//! Contiguous partitioning of the block-level compact domain.
+//!
+//! The block engine stores the compact domain block-major: block slot
+//! `b` (row-major over the coarse compact extent) owns cells
+//! `[b·ρ², (b+1)·ρ²)`. A shard partition splits `[0, nblocks)` into
+//! contiguous ranges of blocks, one per shard, so each shard's state
+//! slice is a contiguous sub-range of the single-engine buffer — the
+//! same chunking rule `util::pool` uses for tiles, lifted to ownership.
+//! Contiguity is what keeps per-shard seeding, hashing, and byte
+//! accounting exact: the union of the slices *is* the single-engine
+//! buffer, bit for bit.
+
+/// A static assignment of coarse blocks to shards: shard `i` owns the
+/// half-open block range `range(i)`. Ranges are contiguous, disjoint,
+/// cover `[0, nblocks)`, and are never empty — a request for more
+/// shards than blocks is clamped, so `shards()` reports the *effective*
+/// count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPartition {
+    nblocks: u64,
+    chunk: u64,
+    ranges: Vec<(u64, u64)>,
+}
+
+impl ShardPartition {
+    /// Partition `nblocks` blocks into (at most) `shards` contiguous
+    /// ranges of `ceil(nblocks / shards)` blocks each.
+    pub fn new(nblocks: u64, shards: u32) -> ShardPartition {
+        let want = (shards.max(1) as u64).min(nblocks.max(1));
+        let chunk = nblocks.max(1).div_ceil(want);
+        let mut ranges = Vec::new();
+        let mut start = 0u64;
+        while start < nblocks {
+            let end = (start + chunk).min(nblocks);
+            ranges.push((start, end));
+            start = end;
+        }
+        if ranges.is_empty() {
+            ranges.push((0, 0));
+        }
+        ShardPartition {
+            nblocks,
+            chunk,
+            ranges,
+        }
+    }
+
+    /// Effective number of shards.
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Half-open global block range `[start, end)` owned by shard `s`.
+    pub fn range(&self, s: usize) -> (u64, u64) {
+        self.ranges[s]
+    }
+
+    /// Total blocks across all shards.
+    pub fn nblocks(&self) -> u64 {
+        self.nblocks
+    }
+
+    /// Owning shard of a global block index.
+    #[inline]
+    pub fn shard_of(&self, block: u64) -> usize {
+        ((block / self.chunk) as usize).min(self.ranges.len() - 1)
+    }
+
+    /// Load imbalance: largest shard's block count over the ideal
+    /// `nblocks / shards` (1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        if self.nblocks == 0 {
+            return 1.0;
+        }
+        let max = self
+            .ranges
+            .iter()
+            .map(|(a, b)| b - a)
+            .max()
+            .unwrap_or(0) as f64;
+        max / (self.nblocks as f64 / self.ranges.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_disjointly_and_shard_of_agrees() {
+        for nblocks in [1u64, 3, 7, 81, 100, 6561] {
+            for shards in [1u32, 2, 3, 4, 8, 200] {
+                let p = ShardPartition::new(nblocks, shards);
+                assert!(p.shards() as u64 <= nblocks.max(1));
+                let mut covered = 0u64;
+                for s in 0..p.shards() {
+                    let (a, b) = p.range(s);
+                    assert!(a < b, "empty shard {s} for n={nblocks} shards={shards}");
+                    assert_eq!(a, covered, "gap before shard {s}");
+                    covered = b;
+                    for block in a..b {
+                        assert_eq!(p.shard_of(block), s);
+                    }
+                }
+                assert_eq!(covered, nblocks);
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_to_block_count() {
+        let p = ShardPartition::new(3, 16);
+        assert_eq!(p.shards(), 3);
+        assert!((p.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_reflects_ragged_tail() {
+        // 10 blocks over 4 shards: chunks of 3,3,3,1 -> max 3 vs mean 2.5
+        let p = ShardPartition::new(10, 4);
+        assert_eq!(p.shards(), 4);
+        assert!((p.imbalance() - 1.2).abs() < 1e-12);
+        // exact split is perfectly balanced
+        let q = ShardPartition::new(8, 4);
+        assert!((q.imbalance() - 1.0).abs() < 1e-12);
+    }
+}

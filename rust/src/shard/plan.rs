@@ -1,0 +1,193 @@
+//! Static halo-exchange planning.
+//!
+//! The block engine's [`BlockMaps`] adjacency table already answers the
+//! only topology question decomposition needs: which ≤ 8 Moore neighbor
+//! blocks does each block read? Projecting that table through a
+//! [`ShardPartition`] yields, per shard, (a) the set of *remote* blocks
+//! its boundary reads — the ghost ring — and (b) a remapped neighbor
+//! table whose entries point into the shard's combined
+//! `local ++ ghost` buffer instead of the global one. Routes are
+//! derived once, before step 0; the per-step exchange is pure `memcpy`
+//! along them, with no map evaluations and no topology queries.
+
+use std::collections::HashMap;
+
+use super::partition::ShardPartition;
+use crate::maps::cache::{BlockMaps, NO_BLOCK};
+
+/// One halo copy: the `ρ×ρ` tile of local block `src_block` of shard
+/// `src_shard` is copied into ghost slot `ghost_slot` of `dst_shard`'s
+/// ghost ring (every step, after the previous step's barrier).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HaloRoute {
+    pub src_shard: usize,
+    /// Block index local to the source shard (global − range start).
+    pub src_block: u64,
+    pub dst_shard: usize,
+    /// Ghost-ring slot in the destination shard.
+    pub ghost_slot: u64,
+}
+
+/// The complete exchange plan for one `(BlockMaps, ShardPartition)`.
+#[derive(Clone, Debug)]
+pub struct HaloPlan {
+    /// All cross-shard tile copies, destination-major, ghost slots in
+    /// ascending first-encounter order — fully deterministic.
+    pub routes: Vec<HaloRoute>,
+    /// Ghost-ring size (in blocks) per shard.
+    pub ghost_counts: Vec<u64>,
+    /// Per shard, per *local* block: the 8 Moore neighbor base slots in
+    /// the shard's combined `local ++ ghost` buffer ([`NO_BLOCK`] =
+    /// absent neighbor, exactly as in the global table).
+    pub neighbors: Vec<Vec<[u64; 8]>>,
+    /// Block side ρ (tile is ρ² cells).
+    pub rho: u32,
+}
+
+impl HaloPlan {
+    /// Derive the plan from the cached global adjacency. Pure
+    /// projection: no λ/ν evaluations happen here.
+    pub fn build(maps: &BlockMaps, part: &ShardPartition) -> HaloPlan {
+        let rho = maps.block.rho;
+        let tile = rho as u64 * rho as u64;
+        let mut routes = Vec::new();
+        let mut ghost_counts = Vec::with_capacity(part.shards());
+        let mut neighbors = Vec::with_capacity(part.shards());
+        for s in 0..part.shards() {
+            let (start, end) = part.range(s);
+            let nlocal = end - start;
+            // ghost slots in first-encounter order (blocks ascending,
+            // Moore directions in order) — deterministic
+            let mut ghost_of: HashMap<u64, u64> = HashMap::new();
+            let mut local_tables = Vec::with_capacity(nlocal as usize);
+            for b in start..end {
+                let global = maps.neighbors_of(b);
+                let mut slots = [NO_BLOCK; 8];
+                for (m, &base) in global.iter().enumerate() {
+                    if base == NO_BLOCK {
+                        continue;
+                    }
+                    let nb = base / tile;
+                    slots[m] = if (start..end).contains(&nb) {
+                        (nb - start) * tile
+                    } else {
+                        let next = ghost_of.len() as u64;
+                        let slot = *ghost_of.entry(nb).or_insert(next);
+                        (nlocal + slot) * tile
+                    };
+                }
+                local_tables.push(slots);
+            }
+            let mut ghosts: Vec<(u64, u64)> = ghost_of.into_iter().collect();
+            ghosts.sort_by_key(|&(_, slot)| slot);
+            ghost_counts.push(ghosts.len() as u64);
+            for (block, slot) in ghosts {
+                let src = part.shard_of(block);
+                routes.push(HaloRoute {
+                    src_shard: src,
+                    src_block: block - part.range(src).0,
+                    dst_shard: s,
+                    ghost_slot: slot,
+                });
+            }
+            neighbors.push(local_tables);
+        }
+        HaloPlan {
+            routes,
+            ghost_counts,
+            neighbors,
+            rho,
+        }
+    }
+
+    /// Bytes copied across shard boundaries per step (1-byte cells).
+    pub fn halo_bytes_per_step(&self) -> u64 {
+        self.routes.len() as u64 * self.rho as u64 * self.rho as u64
+    }
+
+    /// Bytes held by the remapped per-shard neighbor tables.
+    pub fn table_bytes(&self) -> u64 {
+        self.neighbors
+            .iter()
+            .map(|t| (t.len() * std::mem::size_of::<[u64; 8]>()) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+
+    fn plan_for(shards: u32) -> (BlockMaps, ShardPartition, HaloPlan) {
+        let spec = catalog::sierpinski_triangle();
+        let maps = BlockMaps::build(&spec, 5, 2, None, 2).unwrap();
+        let part = ShardPartition::new(maps.block.blocks(), shards);
+        let plan = HaloPlan::build(&maps, &part);
+        (maps, part, plan)
+    }
+
+    #[test]
+    fn single_shard_has_no_halo_and_identity_tables() {
+        let (maps, part, plan) = plan_for(1);
+        assert_eq!(part.shards(), 1);
+        assert!(plan.routes.is_empty());
+        assert_eq!(plan.ghost_counts, vec![0]);
+        assert_eq!(plan.halo_bytes_per_step(), 0);
+        // remapped table == global table when one shard owns everything
+        for b in 0..maps.block.blocks() {
+            assert_eq!(&plan.neighbors[0][b as usize], maps.neighbors_of(b));
+        }
+    }
+
+    #[test]
+    fn routes_are_consistent_with_the_global_adjacency() {
+        let (maps, part, plan) = plan_for(4);
+        let tile = maps.block.rho as u64 * maps.block.rho as u64;
+        for s in 0..part.shards() {
+            let (start, end) = part.range(s);
+            let nlocal = end - start;
+            // collect this shard's ghost slots -> source global block
+            let mut ghost_src: HashMap<u64, u64> = HashMap::new();
+            for r in plan.routes.iter().filter(|r| r.dst_shard == s) {
+                let global = part.range(r.src_shard).0 + r.src_block;
+                assert_ne!(part.shard_of(global), s, "route sources a local block");
+                assert!(ghost_src.insert(r.ghost_slot, global).is_none());
+            }
+            assert_eq!(ghost_src.len() as u64, plan.ghost_counts[s]);
+            // ghost slots are contiguous from 0
+            for slot in 0..plan.ghost_counts[s] {
+                assert!(ghost_src.contains_key(&slot));
+            }
+            // every remapped entry resolves to the block the global table named
+            for (lb, slots) in plan.neighbors[s].iter().enumerate() {
+                let global_tbl = maps.neighbors_of(start + lb as u64);
+                for m in 0..8 {
+                    if global_tbl[m] == NO_BLOCK {
+                        assert_eq!(slots[m], NO_BLOCK);
+                        continue;
+                    }
+                    let want = global_tbl[m] / tile;
+                    let got = slots[m] / tile;
+                    let resolved = if got < nlocal {
+                        start + got
+                    } else {
+                        ghost_src[&(got - nlocal)]
+                    };
+                    assert_eq!(resolved, want, "shard {s} block {lb} dir {m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn halo_traffic_scales_with_shard_count() {
+        let (_, _, p1) = plan_for(1);
+        let (_, _, p2) = plan_for(2);
+        let (_, _, p4) = plan_for(4);
+        assert_eq!(p1.halo_bytes_per_step(), 0);
+        assert!(p2.halo_bytes_per_step() > 0);
+        assert!(p4.halo_bytes_per_step() >= p2.halo_bytes_per_step());
+        assert!(p4.table_bytes() > 0);
+    }
+}

@@ -4,12 +4,13 @@
 //! All engines simulate the *same logical automaton* (see
 //! `ca::engine`), so for every catalog fractal and every rule in the
 //! matrix below, the expanded BB reference, the thread-level Squeeze
-//! engine, and the block-level Squeeze engine (serial and parallel,
-//! cached and uncached, scalar and tensor-path) must produce identical
+//! engine, the block-level Squeeze engine (serial and parallel, cached
+//! and uncached, scalar and tensor-path), and the halo-exchanged
+//! sharded decomposition (1, 2, and 4 shards) must produce identical
 //! `state_hash()` after *every* step — not just at the end. A divergence
 //! at step `t` localizes a bug to one transition, which is what makes
-//! this suite the oracle the cache/parallelism refactor is tested
-//! against.
+//! this suite the oracle the cache/parallelism/sharding refactors are
+//! tested against.
 
 use squeeze::ca::{build_with_cache, Engine, EngineConfig, EngineKind, Rule};
 use squeeze::fractal::catalog;
@@ -99,6 +100,30 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         Some(&cache),
                     ),
                 ),
+                (
+                    "sharded-squeeze-1",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::ShardedSqueeze { rho, shards: 1 }, 2),
+                        Some(&cache),
+                    ),
+                ),
+                (
+                    "sharded-squeeze-2",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::ShardedSqueeze { rho, shards: 2 }, 4),
+                        Some(&cache),
+                    ),
+                ),
+                (
+                    "sharded-squeeze-4",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::ShardedSqueeze { rho, shards: 4 }, 4),
+                        Some(&cache),
+                    ),
+                ),
             ];
             let seed_hash = engines[0].1.state_hash();
             for (name, e) in &engines {
@@ -173,6 +198,7 @@ fn long_run_agreement_on_the_paper_headline_fractal() {
         EngineKind::Squeeze { rho: 4, tensor: false },
         EngineKind::Squeeze { rho: 8, tensor: false },
         EngineKind::Squeeze { rho: 8, tensor: true },
+        EngineKind::ShardedSqueeze { rho: 8, shards: 4 },
     ];
     let mut hashes = Vec::new();
     for kind in kinds {

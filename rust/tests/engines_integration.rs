@@ -47,9 +47,9 @@ fn memory_ordering_matches_paper_p2() {
     // measured engine (u8 cells, 2 buffers + tiny λ tables / the block
     // adjacency) matches the accounting model to within table overhead
     let spec = catalog::sierpinski_triangle();
-    let model1 = 2 * memory::squeeze_bytes(&spec, r, 1, 1);
+    let model1 = 2 * memory::squeeze_bytes(&spec, r, 1, 1).unwrap();
     assert!(sq1.memory_bytes >= model1 && sq1.memory_bytes < model1 + model1 / 10);
-    let model16 = 2 * memory::squeeze_bytes(&spec, r, 16, 1);
+    let model16 = 2 * memory::squeeze_bytes(&spec, r, 16, 1).unwrap();
     assert!(
         sq16.memory_bytes >= model16 && sq16.memory_bytes <= model16 + model16 / 4,
         "block engine memory {} vs model {model16}",

@@ -1,0 +1,174 @@
+//! In-memory round-trips of the serve protocol — the coordinator's wire
+//! contract, exercised exactly the way the `squeeze serve` binary runs
+//! it (a `BufRead`/`Write` pair), with no process spawning.
+//!
+//! Covers: well-formed jobs (TSV shape), malformed `key=value` lines
+//! and semantic errors (`ERR` lines that never kill the session),
+//! `metrics`, `quit`, the `shards=` job key, and the differential case
+//! asserting `sharded-squeeze` is bit-identical to the single-engine
+//! `squeeze:<rho>` on every catalog fractal *through the service*.
+
+use squeeze::coordinator::service::serve;
+use squeeze::fractal::catalog;
+
+fn run_session(script: &str) -> String {
+    let mut out = Vec::new();
+    serve(script.as_bytes(), &mut out).expect("in-memory serve cannot fail on io");
+    String::from_utf8(out).expect("protocol output is utf-8")
+}
+
+/// Data (non-comment, non-empty) lines of a session transcript.
+fn data_lines(out: &str) -> Vec<&str> {
+    out.lines()
+        .filter(|l| !l.starts_with('#') && !l.is_empty())
+        .collect()
+}
+
+/// The state-hash column (last TSV field) of a result row by job id.
+fn hash_of<'a>(rows: &[&'a str], id: &str) -> &'a str {
+    rows.iter()
+        .find(|l| l.split('\t').next() == Some(id))
+        .unwrap_or_else(|| panic!("no result row for job {id}"))
+        .split('\t')
+        .last()
+        .expect("rows have columns")
+}
+
+#[test]
+fn well_formed_jobs_round_trip_with_full_tsv_rows() {
+    let out = run_session(
+        "engine=squeeze:4 r=4 steps=2 workers=1 seed=3\n\
+         engine=bb r=4 steps=2 workers=1 seed=3\n\
+         quit\n",
+    );
+    assert!(out.starts_with("# squeeze coordinator ready"), "{out}");
+    let rows = data_lines(&out);
+    assert_eq!(rows.len(), 2, "{out}");
+    let header_cols = squeeze::coordinator::JobResult::tsv_header()
+        .split('\t')
+        .count();
+    for row in &rows {
+        assert_eq!(row.split('\t').count(), header_cols, "{row}");
+    }
+    assert_eq!(hash_of(&rows, "1"), hash_of(&rows, "2"), "{out}");
+}
+
+#[test]
+fn malformed_and_semantic_errors_are_err_lines_and_the_session_survives() {
+    let out = run_session(
+        "this is not key=value\n\
+         engine=warp r=4\n\
+         volume=11\n\
+         engine=squeeze:3 r=4 steps=1 workers=1\n\
+         engine=sharded-squeeze:3:2 r=4 steps=1 workers=1\n\
+         engine=squeeze:16 r=2 steps=1 workers=1\n\
+         fractal=not-a-fractal r=4 steps=1 workers=1\n\
+         engine=squeeze:4 r=4 steps=1 workers=1\n\
+         quit\n",
+    );
+    let errs: Vec<&str> = out.lines().filter(|l| l.starts_with("ERR")).collect();
+    assert_eq!(errs.len(), 7, "{out}");
+    // the ρ-validation satellites: an invalid ρ is a message, not a panic
+    assert!(
+        errs.iter().any(|e| e.contains("rho=3") && e.contains("power")),
+        "{out}"
+    );
+    assert!(errs.iter().any(|e| e.contains("rho=16")), "{out}");
+    // the session kept serving: the final valid job produced a TSV row
+    assert_eq!(data_lines(&out).len(), 1, "{out}");
+}
+
+#[test]
+fn metrics_command_reports_after_mixed_good_and_failed_jobs() {
+    let out = run_session(
+        "engine=squeeze:4 r=5 steps=1 workers=1\n\
+         engine=squeeze:4 r=5 steps=1 workers=1\n\
+         engine=squeeze:3 r=5 steps=1 workers=1\n\
+         fractal=nope r=5 steps=1 workers=1\n\
+         metrics\n\
+         quit\n",
+    );
+    // cache gauges stay consistent under the error paths: two lookups
+    // of one key (1 miss + 1 hit), recorded even though later jobs fail
+    assert!(out.contains("map_cache=1/2"), "{out}");
+    assert!(out.contains("completed=2"), "{out}");
+    assert!(out.contains("failed=2"), "{out}");
+}
+
+#[test]
+fn quit_ends_the_session_before_remaining_lines() {
+    let out = run_session("quit\nengine=squeeze:4 r=4 steps=1 workers=1\n");
+    assert_eq!(data_lines(&out).len(), 0, "{out}");
+    assert!(!out.contains("ERR"), "{out}");
+    // the final summary line still prints
+    assert!(out.contains("jobs started=0"), "{out}");
+}
+
+#[test]
+fn sharded_jobs_report_halo_gauges_in_metrics() {
+    let out = run_session(
+        "engine=sharded-squeeze:4:4 r=5 steps=2 workers=2\n\
+         metrics\nquit\n",
+    );
+    assert_eq!(data_lines(&out).len(), 1, "{out}");
+    assert!(out.contains("sharded=1"), "{out}");
+    assert!(out.contains("halo="), "{out}");
+    assert!(out.contains("imbalance="), "{out}");
+}
+
+#[test]
+fn shards_key_equals_explicit_sharded_engine_and_single_engine() {
+    let out = run_session(
+        "engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         engine=squeeze:4 shards=2 r=5 steps=3 workers=2 seed=9\n\
+         engine=sharded-squeeze:4:2 r=5 steps=3 workers=2 seed=9\n\
+         quit\n",
+    );
+    let rows = data_lines(&out);
+    assert_eq!(rows.len(), 3, "{out}");
+    let single = hash_of(&rows, "1");
+    assert_eq!(single, hash_of(&rows, "2"), "shards= key diverged: {out}");
+    assert_eq!(single, hash_of(&rows, "3"), "explicit sharded diverged: {out}");
+}
+
+#[test]
+fn sharded_squeeze_matches_single_engine_on_every_catalog_fractal() {
+    // the differential case, end to end through the service: for every
+    // catalog fractal, sharded (2 and 4 shards) step hashes must be
+    // bit-identical to the single-engine squeeze:<rho> run
+    let mut script = String::new();
+    let mut ids: Vec<(String, String, String)> = Vec::new(); // (single, s2, s4)
+    let mut next = 1u64;
+    for spec in catalog::all() {
+        let r = if spec.s == 2 { 5 } else { 3 };
+        let rho = spec.s;
+        let base = format!(
+            "fractal={} r={r} steps=4 workers=2 seed=5 density=0.45",
+            spec.name
+        );
+        script.push_str(&format!("{base} engine=squeeze:{rho}\n"));
+        script.push_str(&format!("{base} engine=sharded-squeeze:{rho}:2\n"));
+        script.push_str(&format!("{base} engine=sharded-squeeze:{rho}:4\n"));
+        ids.push((next.to_string(), (next + 1).to_string(), (next + 2).to_string()));
+        next += 3;
+    }
+    script.push_str("quit\n");
+    let out = run_session(&script);
+    assert!(!out.contains("ERR"), "{out}");
+    let rows = data_lines(&out);
+    for (spec, (single, s2, s4)) in catalog::all().iter().zip(&ids) {
+        let want = hash_of(&rows, single);
+        assert_eq!(
+            want,
+            hash_of(&rows, s2),
+            "{}: 2-shard decomposition diverged",
+            spec.name
+        );
+        assert_eq!(
+            want,
+            hash_of(&rows, s4),
+            "{}: 4-shard decomposition diverged",
+            spec.name
+        );
+    }
+}
