@@ -72,7 +72,8 @@ fn main() {
                 seed: 42,
                 workers: squeeze::util::pool::default_workers(),
             },
-        );
+        )
+        .expect("valid engine config");
         let t = Timer::start();
         for _ in 0..total_steps {
             engine.step();

@@ -47,7 +47,8 @@ fn main() {
             seed: 7,
             workers: squeeze::util::pool::default_workers(),
         },
-    );
+    )
+    .expect("valid engine config");
     println!(
         "cells: {} — engine holds {} (BB would hold {})",
         engine.cells(),

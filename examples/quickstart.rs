@@ -25,7 +25,8 @@ fn main() {
             seed: 42,
             workers: squeeze::util::pool::default_workers(),
         },
-    );
+    )
+    .expect("valid engine config");
     println!(
         "game of life on {} at level r={r}: {} cells (embedding would be {}x{})",
         spec.name,

@@ -1,22 +1,94 @@
 //! Regenerates paper Fig. 13: speedup of Squeeze over BB per block size,
-//! and checks four qualitative claims — speedup grows with the fractal
+//! and checks five qualitative claims — speedup grows with the fractal
 //! level, λ(ω) acts as a performance lower bound (i.e. λ is at least as
 //! fast as thread-level Squeeze), the cached parallel tiled block
 //! engine beats the serial path at the largest level while staying
-//! bit-identical to the expanded BB reference, and the halo-exchanged
+//! bit-identical to the expanded BB reference, the halo-exchanged
 //! multi-shard decomposition holds the single-engine cached-parallel
-//! pace (also bit-identical to BB).
+//! pace (also bit-identical to BB), and the bit-planar `squeeze-bits`
+//! backend is at least as fast as the byte-per-cell cached-parallel
+//! path at the largest level (hashing identical to BB).
+//!
+//! Besides the human-readable tables, every run emits a
+//! machine-readable `BENCH_fig13.json` (per-engine ns/cell/step, state
+//! hashes, claim verdicts) under `results/` *and* at the repo root, so
+//! the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench fig13_speedup
 
 use squeeze::ca::bb::BbEngine;
+use squeeze::ca::bitkernel::PackedSqueezeBlockEngine;
 use squeeze::ca::engine::run_and_hash;
 use squeeze::ca::squeeze_block::SqueezeBlockEngine;
 use squeeze::ca::{Engine, EngineKind, MapPath, Rule};
 use squeeze::fractal::catalog;
-use squeeze::harness::{bench, figures, speedups_vs_bb, BenchOpts};
+use squeeze::harness::{bench, figures, results_dir, speedups_vs_bb, BenchOpts, SweepPoint};
 use squeeze::maps::MapCache;
 use squeeze::shard::ShardedSqueezeEngine;
+
+/// One claim verdict for the JSON report.
+struct Claim {
+    name: &'static str,
+    /// "pass" | "fail" | "skip"
+    verdict: &'static str,
+    detail: String,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON (the crate is offline — no serde): engines,
+/// hashes, claims.
+fn write_json(
+    r_max: u32,
+    workers: usize,
+    pts: &[SweepPoint],
+    hashes: &[(String, u64)],
+    claims: &[Claim],
+) {
+    let mut engines = Vec::new();
+    for p in pts {
+        engines.push(format!(
+            "    {{\"engine\": \"{}\", \"r\": {}, \"cells\": {}, \"per_step_s\": {:.6e}, \"ns_per_cell_step\": {:.6}}}",
+            json_escape(&p.engine),
+            p.r,
+            p.cells,
+            p.per_step_s,
+            p.per_step_s * 1e9 / p.cells as f64,
+        ));
+    }
+    let hash_rows: Vec<String> = hashes
+        .iter()
+        .map(|(name, h)| format!("    \"{}\": \"{h:#018x}\"", json_escape(name)))
+        .collect();
+    let claim_rows: Vec<String> = claims
+        .iter()
+        .map(|c| {
+            format!(
+                "    {{\"name\": \"{}\", \"verdict\": \"{}\", \"detail\": \"{}\"}}",
+                c.name,
+                c.verdict,
+                json_escape(&c.detail)
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"fig13\",\n  \"r_max\": {r_max},\n  \"workers\": {workers},\n  \"engines\": [\n{}\n  ],\n  \"hashes\": {{\n{}\n  }},\n  \"claims\": [\n{}\n  ]\n}}\n",
+        engines.join(",\n"),
+        hash_rows.join(",\n"),
+        claim_rows.join(",\n"),
+    );
+    let dir = results_dir();
+    let _ = std::fs::create_dir_all(&dir);
+    for path in [dir.join("BENCH_fig13.json"), "BENCH_fig13.json".into()] {
+        if let Err(e) = std::fs::write(&path, &json) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("[saved {}]", path.display());
+        }
+    }
+}
 
 fn main() {
     let r_max: u32 = std::env::var("SQUEEZE_BENCH_R_MAX")
@@ -38,6 +110,9 @@ fn main() {
     .expect("sweep");
     figures::fig13(&pts).expect("fig13");
 
+    let mut claims: Vec<Claim> = Vec::new();
+    let mut hashes: Vec<(String, u64)> = Vec::new();
+
     // Claim 1: Squeeze-over-BB speedup grows with r (compare the smallest
     // and largest common level for thread-level squeeze).
     let sp = speedups_vs_bb(&pts);
@@ -46,17 +121,26 @@ fn main() {
         .filter(|(name, _, _)| name == "squeeze")
         .collect();
     if squeeze_rows.len() >= 2 {
-        let first = squeeze_rows.first().unwrap().2;
-        let last = squeeze_rows.last().unwrap().2;
-        println!("\nsqueeze speedup at r={}: {first:.2}x -> r={}: {last:.2}x",
-                 squeeze_rows.first().unwrap().1, squeeze_rows.last().unwrap().1);
-        assert!(
-            last > first,
-            "speedup must grow with level (paper Fig. 13): {first} -> {last}"
-        );
+        let (r_first, first) = (squeeze_rows.first().unwrap().1, squeeze_rows.first().unwrap().2);
+        let (r_last, last) = (squeeze_rows.last().unwrap().1, squeeze_rows.last().unwrap().2);
+        println!("\nsqueeze speedup at r={r_first}: {first:.2}x -> r={r_last}: {last:.2}x");
+        claims.push(Claim {
+            name: "speedup_grows_with_level",
+            verdict: if last > first { "pass" } else { "fail" },
+            detail: format!("r={r_first}: {first:.3}x -> r={r_last}: {last:.3}x"),
+        });
+    } else {
+        claims.push(Claim {
+            name: "speedup_grows_with_level",
+            verdict: "skip",
+            detail: "fewer than two common BB levels in the sweep".into(),
+        });
     }
 
     // Claim 2: λ(ω) is a lower bound for thread-level Squeeze's time.
+    let mut lambda_ok = true;
+    let mut lambda_measured = false;
+    let mut lambda_detail = String::from("no common level measured");
     for r in 6..=r_max {
         let lam = pts
             .iter()
@@ -65,25 +149,57 @@ fn main() {
             p.kind == EngineKind::Squeeze { rho: 1, tensor: false } && p.r == r
         });
         if let (Some(l), Some(s)) = (lam, sq) {
-            assert!(
-                l.per_step_s <= s.per_step_s * 1.25, // 25% measurement slack
-                "λ(ω) should lower-bound Squeeze at r={r}: {} vs {}",
-                l.per_step_s,
-                s.per_step_s
+            lambda_measured = true;
+            let ok = l.per_step_s <= s.per_step_s * 1.25; // 25% measurement slack
+            lambda_detail = format!(
+                "r={r}: lambda {:.3e}s vs squeeze {:.3e}s",
+                l.per_step_s, s.per_step_s
             );
+            if !ok {
+                lambda_ok = false;
+                break;
+            }
         }
     }
-    println!("fig13 OK: speedup grows with r; λ(ω) is a performance lower bound");
+    claims.push(Claim {
+        name: "lambda_lower_bounds_thread_squeeze",
+        verdict: if !lambda_measured {
+            // no (lambda, squeeze:1) pair shared a level: unevaluated,
+            // not passing
+            "skip"
+        } else if lambda_ok {
+            "pass"
+        } else {
+            "fail"
+        },
+        detail: lambda_detail,
+    });
+    println!("fig13: claims 1-2 evaluated");
 
-    // Claim 3 (map-cache + parallel tiled stepping): at the largest level
-    // the cached block engine stepped across the worker pool must beat the
-    // single-worker path, and both must stay bit-identical to BB.
+    // Claims 3-5 run the rho=16 engines at the largest level. Below
+    // r=10 (3^6 = 729 coarse blocks) per-step thread-spawn overhead can
+    // beat the ~µs of work, making the comparisons meaningless.
     let r_big = r_max.min(12);
     if r_big < 10 {
-        // rho=16 needs 4 intra levels, and below r=10 (3^6 = 729 coarse
-        // blocks) per-step thread-spawn overhead can beat the ~µs of
-        // work, making the serial-vs-parallel comparison meaningless
-        println!("fig13: skipping claim 3 (r_max={r_max} too small for a rho=16 parallel run)");
+        println!("fig13: skipping claims 3-5 (r_max={r_max} too small for a rho=16 parallel run)");
+        // keep the claim-name set identical to a full run, so cross-PR
+        // tooling keyed on names sees "skip", not a vanished claim
+        for name in [
+            "cached_parallel_beats_serial",
+            "cached_parallel_matches_bb",
+            "sharded_holds_single_engine_pace",
+            "sharded_matches_bb",
+            "packed_at_least_as_fast_as_bytes",
+            "packed_matches_bb",
+        ] {
+            claims.push(Claim {
+                name,
+                verdict: "skip",
+                detail: format!("r_max={r_max} too small"),
+            });
+        }
+        write_json(r_max, workers, &pts, &hashes, &claims);
+        finish(&claims);
         return;
     }
     let rule = Rule::game_of_life();
@@ -100,6 +216,7 @@ fn main() {
             MapPath::Scalar,
             Some(&cache),
         )
+        .expect("rho=16 is valid at r>=10")
     };
     let mut serial = mk(1);
     let mut parallel = mk(workers.max(2));
@@ -113,22 +230,31 @@ fn main() {
         cache.stats().hits,
         cache.stats().hits + cache.stats().misses,
     );
-    if workers >= 2 {
-        assert!(
-            parallel_s < serial_s,
-            "parallel tiled stepping must beat the serial path at r={r_big}: \
-             {parallel_s} vs {serial_s}"
-        );
-    }
+    // Claim 3 (map-cache + parallel tiled stepping): at the largest level
+    // the cached block engine stepped across the worker pool must beat the
+    // single-worker path, and both must stay bit-identical to BB.
+    claims.push(Claim {
+        name: "cached_parallel_beats_serial",
+        verdict: if workers < 2 {
+            "skip"
+        } else if parallel_s < serial_s {
+            "pass"
+        } else {
+            "fail"
+        },
+        detail: format!("serial {serial_s:.3e}s vs parallel {parallel_s:.3e}s at r={r_big}"),
+    });
     let mut fresh = mk(workers.max(2));
     let mut bb = BbEngine::new(&spec, r_big, rule, 0.4, 42, workers.max(2));
     let bb_hash = run_and_hash(&mut bb, 4);
-    assert_eq!(
-        run_and_hash(&mut fresh, 4),
-        bb_hash,
-        "cached parallel block engine must stay bit-identical to BB at r={r_big}"
-    );
-    println!("fig13 OK: cached parallel tiled stepping beats serial and matches BB");
+    let byte_hash = run_and_hash(&mut fresh, 4);
+    hashes.push(("bb".into(), bb_hash));
+    hashes.push(("squeeze-16-cached-parallel".into(), byte_hash));
+    claims.push(Claim {
+        name: "cached_parallel_matches_bb",
+        verdict: if byte_hash == bb_hash { "pass" } else { "fail" },
+        detail: format!("bb {bb_hash:#018x} vs squeeze:16 {byte_hash:#018x} after 4 steps"),
+    });
 
     // Claim 4 (shard subsystem): decomposing the same domain into one
     // shard per worker must not cost wall time vs the single-engine
@@ -148,6 +274,7 @@ fn main() {
             MapPath::Scalar,
             Some(&cache),
         )
+        .expect("rho=16 is valid at r>=10")
     };
     let mut sharded = mk_sharded();
     let sharded_s = bench(&opts, || sharded.step()).mean;
@@ -160,19 +287,84 @@ fn main() {
         stats.halo_bytes_per_step,
         stats.imbalance,
     );
-    assert!(
-        sharded_s <= parallel_s * 1.25, // same measurement slack as claim 2
-        "multi-shard stepping must be no worse than the single-engine \
-         cached-parallel path at r={r_big}: {sharded_s} vs {parallel_s}"
-    );
+    claims.push(Claim {
+        name: "sharded_holds_single_engine_pace",
+        verdict: if sharded_s <= parallel_s * 1.25 {
+            // same measurement slack as claim 2
+            "pass"
+        } else {
+            "fail"
+        },
+        detail: format!("sharded {sharded_s:.3e}s vs parallel {parallel_s:.3e}s at r={r_big}"),
+    });
     let mut fresh_sharded = mk_sharded();
-    assert_eq!(
-        run_and_hash(&mut fresh_sharded, 4),
-        bb_hash,
-        "sharded engine must stay bit-identical to BB at r={r_big}"
-    );
+    let sharded_hash = run_and_hash(&mut fresh_sharded, 4);
+    hashes.push((format!("sharded-squeeze-16-{nshards}"), sharded_hash));
+    claims.push(Claim {
+        name: "sharded_matches_bb",
+        verdict: if sharded_hash == bb_hash { "pass" } else { "fail" },
+        detail: format!("bb {bb_hash:#018x} vs sharded {sharded_hash:#018x} after 4 steps"),
+    });
+
+    // Claim 5 (bit-planar backend): at the largest level the packed
+    // word-parallel engine must be at least as fast as the byte-per-cell
+    // cached-parallel path — the ~64-cells-per-instruction sweep has to
+    // show up on the clock — while hashing identical to BB.
+    let mk_packed = || {
+        PackedSqueezeBlockEngine::with_cache(
+            &spec,
+            r_big,
+            16,
+            rule,
+            0.4,
+            42,
+            workers.max(2),
+            Some(&cache),
+        )
+        .expect("rho=16 is valid at r>=10")
+    };
+    let mut packed = mk_packed();
+    let packed_s = bench(&opts, || packed.step()).mean;
     println!(
-        "fig13 OK: {}-shard halo-exchanged stepping holds the single-engine pace and matches BB",
-        stats.shards
+        "squeeze-bits:16 r={r_big}: {packed_s:.3e}s/step vs byte parallel {parallel_s:.3e}s/step \
+         ({:.2}x), state {}B vs {}B",
+        parallel_s / packed_s,
+        packed.memory_bytes(),
+        parallel.memory_bytes(),
     );
+    claims.push(Claim {
+        name: "packed_at_least_as_fast_as_bytes",
+        verdict: if packed_s <= parallel_s * 1.10 {
+            // 10% slack: the packed sweep is expected to win outright
+            "pass"
+        } else {
+            "fail"
+        },
+        detail: format!("packed {packed_s:.3e}s vs byte parallel {parallel_s:.3e}s at r={r_big}"),
+    });
+    let mut fresh_packed = mk_packed();
+    let packed_hash = run_and_hash(&mut fresh_packed, 4);
+    hashes.push(("squeeze-bits-16".into(), packed_hash));
+    claims.push(Claim {
+        name: "packed_matches_bb",
+        verdict: if packed_hash == bb_hash { "pass" } else { "fail" },
+        detail: format!("bb {bb_hash:#018x} vs packed {packed_hash:#018x} after 4 steps"),
+    });
+
+    write_json(r_max, workers, &pts, &hashes, &claims);
+    finish(&claims);
+}
+
+/// Print the verdict table and abort on any failure (after the JSON has
+/// been written, so a regression still leaves the report behind).
+fn finish(claims: &[Claim]) {
+    let mut failed = Vec::new();
+    for c in claims {
+        println!("claim {:<36} {:<5} {}", c.name, c.verdict, c.detail);
+        if c.verdict == "fail" {
+            failed.push(c.name);
+        }
+    }
+    assert!(failed.is_empty(), "fig13 claims failed: {failed:?}");
+    println!("fig13 OK: all claims hold");
 }

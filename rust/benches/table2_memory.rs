@@ -26,5 +26,18 @@ fn main() {
     );
     let r20 = memory::mrf(&spec, 20, 1).expect("rho=1 is always valid");
     assert!((r20 - 315.3).abs() < 0.5, "r=20 MRF: {r20}");
-    println!("\ntable2 OK: all MRF values match the paper to the digit (r=20: {r20:.1}x)");
+
+    // the 1-bit column: at ρ=16 a packed row is one word (16 of 64 bits
+    // used), so packed memory is exactly half the byte backend — the
+    // packed MRF doubles it; at ρ=64 the full 8x factor lands
+    let m16 = memory::mrf(&spec, 16, 16).unwrap();
+    let p16 = memory::packed_mrf(&spec, 16, 16).unwrap();
+    assert!((p16 / m16 - 2.0).abs() < 1e-9, "packed/byte at rho=16: {}", p16 / m16);
+    let m64 = memory::mrf(&spec, 16, 64).unwrap();
+    let p64 = memory::packed_mrf(&spec, 16, 64).unwrap();
+    assert!((p64 / m64 - 8.0).abs() < 1e-9, "packed/byte at rho=64: {}", p64 / m64);
+    println!(
+        "\ntable2 OK: all MRF values match the paper to the digit (r=20: {r20:.1}x, \
+         1-bit rho=16: {p16:.1}x, rho=64: {p64:.1}x)"
+    );
 }

@@ -1,0 +1,654 @@
+//! Bit-planar word-parallel stepping — the 1-bit-per-cell backend of the
+//! `squeeze-bits` engines.
+//!
+//! Cells are packed 64 per `u64` word, row-padded per `ρ×ρ` tile: every
+//! tile row starts on a word boundary (`wpr = ⌈ρ/64⌉` words per row), so
+//! a tile is `ρ·wpr` words and a block's storage never straddles another
+//! block's words. Bit `i` of a row word is cell `x = 64·wx + i` of that
+//! row (LSB = lowest x).
+//!
+//! One sweep of a word updates up to 64 cells at once:
+//!
+//! 1. For each of the three source rows (above / centre / below) the
+//!    kernel forms three lane-aligned masks — west-shifted, centre,
+//!    east-shifted — stitching in the single boundary bit that crosses a
+//!    word (from the adjacent word of the same row) or a tile edge (from
+//!    the cached `BlockMaps` Moore adjacency, `NO_BLOCK` ⇒ zero). That
+//!    yields the 8 Moore neighbor bit-planes per lane.
+//! 2. Per-lane neighbor counts come from bit-sliced half/full adders
+//!    (a 4-bit carry-save counter per lane, counts 0..=8).
+//! 3. The totalistic rule is applied as boolean algebra over the
+//!    `birth`/`survive` masks: equality planes per populated count value,
+//!    OR-combined into birth/survive selectors, muxed by the alive plane.
+//! 4. The permanently-dead hole mask (the packed micro-fractal rows) is
+//!    ANDed in, so holes and row padding stay dead branch-free.
+//!
+//! The word pipeline is exhaustively tested against `Rule::next_u8` over
+//! all 256 neighbor combinations and randomized B/S masks, and the
+//! packed engines are hash-compared against BB by the differential
+//! suite. `sweep_block_packed` is the one packed sweep body both the
+//! single engine here and the sharded decomposition
+//! (`shard::PackedShardedSqueezeEngine`) execute — same construction
+//! that keeps the byte engines bit-identical under sharding.
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::PackedBuffer;
+use super::rule::Rule;
+use crate::fractal::{Coord, FractalSpec};
+use crate::maps::block::{BlockCtx, BlockError};
+use crate::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
+use crate::maps::lambda::lambda;
+use crate::util::pool::parallel_for_chunks;
+use std::sync::Arc;
+
+/// Bits per storage word.
+pub const WORD_BITS: u32 = 64;
+
+/// Packed-tile geometry: the word layout of one `ρ×ρ` tile plus the
+/// packed micro-fractal hole mask. Derived once per engine from the
+/// shared [`BlockCtx`]; all blocks share it.
+#[derive(Clone, Debug)]
+pub struct PackedGeom {
+    /// Block side ρ.
+    pub rho: u32,
+    /// Words per tile row: `⌈ρ/64⌉`.
+    pub wpr: u32,
+    /// Words per tile: `ρ · wpr`.
+    pub words_per_tile: u64,
+    /// Packed micro-fractal membership, `ρ·wpr` words row-major; bits
+    /// beyond ρ in a row's last word are 0 (padding stays dead).
+    pub mask_rows: Vec<u64>,
+}
+
+impl PackedGeom {
+    pub fn new(block: &BlockCtx) -> PackedGeom {
+        let rho = block.rho;
+        let wpr = rho.div_ceil(WORD_BITS);
+        let mut mask_rows = vec![0u64; (rho * wpr) as usize];
+        for iy in 0..rho {
+            for ix in 0..rho {
+                if block.intra_on_fractal(ix, iy) {
+                    mask_rows[(iy * wpr + ix / WORD_BITS) as usize] |=
+                        1u64 << (ix % WORD_BITS);
+                }
+            }
+        }
+        PackedGeom {
+            rho,
+            wpr,
+            words_per_tile: rho as u64 * wpr as u64,
+            mask_rows,
+        }
+    }
+
+    /// Translate a byte-layout storage slot (`block·ρ² + iy·ρ + ix`, the
+    /// space `BlockCtx::storage_index` speaks) into (word index, bit).
+    #[inline]
+    pub fn slot_to_word_bit(&self, slot: u64) -> (u64, u32) {
+        let tile = self.rho as u64 * self.rho as u64;
+        let block = slot / tile;
+        let intra = (slot % tile) as u32;
+        let (ix, iy) = (intra % self.rho, intra / self.rho);
+        (
+            block * self.words_per_tile + (iy * self.wpr + ix / WORD_BITS) as u64,
+            ix % WORD_BITS,
+        )
+    }
+
+    /// Bytes of one packed state buffer for `blocks` tiles.
+    pub fn buffer_bytes(&self, blocks: u64) -> u64 {
+        blocks * self.words_per_tile * std::mem::size_of::<u64>() as u64
+    }
+}
+
+/// Back-buffer pointer handed to the packed sweep workers (disjoint
+/// per-block word ranges). Shared with the shard subsystem.
+#[derive(Clone, Copy)]
+pub(crate) struct PackedOutPtr(pub(crate) *mut u64);
+unsafe impl Send for PackedOutPtr {}
+unsafe impl Sync for PackedOutPtr {}
+
+/// Bit-sliced full adder over lane planes: per lane, `a + b + c` as
+/// (sum, carry).
+#[inline(always)]
+fn full_add(a: u64, b: u64, c: u64) -> (u64, u64) {
+    (a ^ b ^ c, (a & b) | (c & (a ^ b)))
+}
+
+/// Per-lane Moore neighbor count of the 8 neighbor bit-planes, as four
+/// count-bit planes (b0 = 1s, b1 = 2s, b2 = 4s, b3 = 8s; counts 0..=8).
+#[inline(always)]
+pub(crate) fn count_neighbors_word(
+    aw: u64,
+    ac: u64,
+    ae: u64,
+    cw: u64,
+    ce: u64,
+    sw: u64,
+    sc: u64,
+    se: u64,
+) -> (u64, u64, u64, u64) {
+    // three carry-save columns: 8 inputs -> (3 sums, 3 carries)
+    let (s1, c1) = full_add(aw, ac, ae);
+    let (s2, c2) = full_add(cw, ce, sw);
+    let (s3, c3) = (sc ^ se, sc & se); // half adder
+    // count = (s1+s2+s3) + 2·(c1+c2+c3)
+    let (b0, t1) = full_add(s1, s2, s3);
+    let (u1, u2) = full_add(c1, c2, c3);
+    let b1 = t1 ^ u1;
+    let k = t1 & u1;
+    (b0, b1, u2 ^ k, u2 & k)
+}
+
+/// Apply a totalistic B/S rule per lane: `alive` is the centre plane,
+/// `(b0..b3)` the count planes. Only count values the rule mentions pay
+/// an equality plane.
+#[inline(always)]
+pub(crate) fn apply_rule_word(
+    rule: Rule,
+    alive: u64,
+    b0: u64,
+    b1: u64,
+    b2: u64,
+    b3: u64,
+) -> u64 {
+    let mut birth_sel = 0u64;
+    let mut survive_sel = 0u64;
+    let mentioned = rule.birth | rule.survive;
+    for n in 0..=8u32 {
+        if (mentioned >> n) & 1 == 0 {
+            continue;
+        }
+        let x0 = if n & 1 != 0 { b0 } else { !b0 };
+        let x1 = if n & 2 != 0 { b1 } else { !b1 };
+        let x2 = if n & 4 != 0 { b2 } else { !b2 };
+        let x3 = if n & 8 != 0 { b3 } else { !b3 };
+        let eq = x0 & x1 & x2 & x3;
+        if (rule.birth >> n) & 1 != 0 {
+            birth_sel |= eq;
+        }
+        if (rule.survive >> n) & 1 != 0 {
+            survive_sel |= eq;
+        }
+    }
+    (alive & survive_sel) | (!alive & birth_sel)
+}
+
+/// Word-row sources of one extended tile row: the row's own word base in
+/// `cur`, plus the row bases of the tiles west and east of it (for the
+/// single boundary bit each side). `None` = absent (hole / outside).
+#[derive(Clone, Copy)]
+struct RowRefs {
+    src: Option<u64>,
+    west: Option<u64>,
+    east: Option<u64>,
+}
+
+/// The three lane-aligned masks of one source row at word `wx`:
+/// (west-shifted, centre, east-shifted). `valid` lanes carry real cells;
+/// stray bits beyond them never reach the output (hole mask is 0 there).
+#[inline(always)]
+fn row_words(cur: &[u64], refs: RowRefs, wx: u32, wpr: u32, rho: u32) -> (u64, u64, u64) {
+    let c = match refs.src {
+        Some(b) => cur[(b + wx as u64) as usize],
+        None => 0,
+    };
+    let wbit = if wx > 0 {
+        match refs.src {
+            Some(b) => cur[(b + wx as u64 - 1) as usize] >> (WORD_BITS - 1),
+            None => 0,
+        }
+    } else {
+        match refs.west {
+            Some(b) => (cur[(b + (wpr - 1) as u64) as usize] >> ((rho - 1) % WORD_BITS)) & 1,
+            None => 0,
+        }
+    };
+    let valid = (rho - wx * WORD_BITS).min(WORD_BITS);
+    let ebit = if wx + 1 < wpr {
+        match refs.src {
+            Some(b) => cur[(b + wx as u64 + 1) as usize] & 1,
+            None => 0,
+        }
+    } else {
+        match refs.east {
+            Some(b) => cur[b as usize] & 1,
+            None => 0,
+        }
+    };
+    ((c << 1) | wbit, c, (c >> 1) | (ebit << (valid - 1)))
+}
+
+/// Transition one block's `ρ×ρ` tile word-parallel: read `cur`, write
+/// the tile at word base `base_words` through `out`. `nb` is the block's
+/// 8 Moore neighbor base slots in *cell* units (`block·ρ²`), exactly as
+/// the cached [`BlockMaps`] adjacency (single engine) or the
+/// shard-remapped `local ++ ghost` tables (sharded) store them — the
+/// one packed sweep body both step loops execute, which keeps
+/// sharded-packed bit-identical to single-packed by construction.
+pub(crate) fn sweep_block_packed(
+    cur: &[u64],
+    out: PackedOutPtr,
+    geom: &PackedGeom,
+    nb: &[u64; 8],
+    base_words: u64,
+    rule: Rule,
+) {
+    let rho = geom.rho;
+    let wpr = geom.wpr;
+    let wpt = geom.words_per_tile;
+    let tile_cells = rho as u64 * rho as u64;
+    // cell-base adjacency -> word-base adjacency (MOORE order:
+    // NW N NE W E SW S SE)
+    let mut nbw = [None; 8];
+    for (m, &base) in nb.iter().enumerate() {
+        if base != NO_BLOCK {
+            nbw[m] = Some(base / tile_cells * wpt);
+        }
+    }
+    let row_of = |tile: Option<u64>, row: u32| tile.map(|b| b + (row * wpr) as u64);
+    // extended row jy ∈ [-1, ρ]: its own tile/row plus west/east sources
+    let refs_for = |jy: i64| -> RowRefs {
+        if jy < 0 {
+            let row = rho - 1;
+            RowRefs {
+                src: row_of(nbw[1], row),  // N
+                west: row_of(nbw[0], row), // NW
+                east: row_of(nbw[2], row), // NE
+            }
+        } else if jy >= rho as i64 {
+            RowRefs {
+                src: row_of(nbw[6], 0),  // S
+                west: row_of(nbw[5], 0), // SW
+                east: row_of(nbw[7], 0), // SE
+            }
+        } else {
+            let row = jy as u32;
+            RowRefs {
+                src: Some(base_words + (row * wpr) as u64),
+                west: row_of(nbw[3], row), // W
+                east: row_of(nbw[4], row), // E
+            }
+        }
+    };
+    for iy in 0..rho {
+        let above = refs_for(iy as i64 - 1);
+        let centre = refs_for(iy as i64);
+        let below = refs_for(iy as i64 + 1);
+        for wx in 0..wpr {
+            let (aw, ac, ae) = row_words(cur, above, wx, wpr, rho);
+            let (cw, cc, ce) = row_words(cur, centre, wx, wpr, rho);
+            let (sw, sc, se) = row_words(cur, below, wx, wpr, rho);
+            let (b0, b1, b2, b3) = count_neighbors_word(aw, ac, ae, cw, ce, sw, sc, se);
+            let next = apply_rule_word(rule, cc, b0, b1, b2, b3)
+                & geom.mask_rows[(iy * wpr + wx) as usize];
+            let w = base_words + (iy * wpr + wx) as u64;
+            unsafe { out.0.add(w as usize).write(next) };
+        }
+    }
+}
+
+/// Block-level Squeeze over the bit-planar backend — the
+/// `engine=squeeze-bits:<ρ>` factory variant. Same compact block domain,
+/// same cached adjacency, same canonical indexing as
+/// [`super::squeeze_block::SqueezeBlockEngine`]; only the state
+/// representation (1 bit/cell) and the sweep (word-parallel) differ, so
+/// the two are bit-identical step for step.
+pub struct PackedSqueezeBlockEngine {
+    /// Shared (possibly cached) block-level map bundle — the scalar-built
+    /// adjacency, interned under the same cache key the byte engine uses.
+    maps: Arc<BlockMaps>,
+    geom: PackedGeom,
+    rule: Rule,
+    buf: PackedBuffer,
+    workers: usize,
+}
+
+impl PackedSqueezeBlockEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+    ) -> Result<PackedSqueezeBlockEngine, BlockError> {
+        Self::with_cache(spec, r, rho, rule, density, seed, workers, None)
+    }
+
+    /// Build the engine, taking the map bundle from `cache` when given.
+    /// An invalid ρ comes back as `Err` for the service to surface.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        cache: Option<&MapCache>,
+    ) -> Result<PackedSqueezeBlockEngine, BlockError> {
+        let maps = match cache {
+            Some(c) => c.block_maps(spec, r, rho, None, workers)?,
+            None => Arc::new(BlockMaps::build(spec, r, rho, None, workers)?),
+        };
+        let geom = PackedGeom::new(&maps.block);
+        let mut buf = PackedBuffer::zeroed(maps.block.blocks() * geom.words_per_tile);
+        // Canonical seeding: compact linear index -> expanded -> slot ->
+        // (word, bit). Identical decisions to every other engine.
+        let full = &maps.full;
+        for idx in 0..full.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = maps
+                    .block
+                    .storage_index(e)
+                    .expect("fractal cell must have a slot");
+                let (w, bit) = geom.slot_to_word_bit(slot);
+                buf.cur[w as usize] |= 1u64 << bit;
+            }
+        }
+        Ok(PackedSqueezeBlockEngine {
+            maps,
+            geom,
+            rule,
+            buf,
+            workers,
+        })
+    }
+
+    /// The shared map bundle (tests / capacity accounting).
+    pub fn maps(&self) -> &BlockMaps {
+        &self.maps
+    }
+
+    /// The packed tile geometry (tests / capacity accounting).
+    pub fn geom(&self) -> &PackedGeom {
+        &self.geom
+    }
+}
+
+impl Engine for PackedSqueezeBlockEngine {
+    fn name(&self) -> String {
+        format!("squeeze-bits-rho{}", self.maps.block.rho)
+    }
+
+    fn step(&mut self) {
+        let maps = &*self.maps;
+        let geom = &self.geom;
+        let wpt = geom.words_per_tile;
+        let cur = &self.buf.cur;
+        let rule = self.rule;
+        let out = PackedOutPtr(self.buf.next.as_mut_ptr());
+        parallel_for_chunks(maps.block.blocks(), self.workers, move |start, end| {
+            for bidx in start..end {
+                sweep_block_packed(cur, out, geom, maps.neighbors_of(bidx), bidx * wpt, rule);
+            }
+        });
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.maps.full.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        // packed state buffers + the materialized neighbor adjacency —
+        // the accounting courtesy every table-driven engine extends
+        self.buf.bytes() + self.maps.table_bytes()
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let full = &self.maps.full;
+        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+        let slot = self.maps.block.storage_index(e).expect("fractal cell");
+        let (w, bit) = self.geom.slot_to_word_bit(slot);
+        ((self.buf.cur[w as usize] >> bit) & 1) as u8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bb::BbEngine;
+    use crate::ca::engine::run_and_hash;
+    use crate::ca::squeeze::MapPath;
+    use crate::ca::squeeze_block::SqueezeBlockEngine;
+    use crate::fractal::catalog;
+    use crate::util::prng::Prng;
+
+    /// Drive the word pipeline over all 256 Moore-neighborhood
+    /// combinations at once (4 words × 64 lanes, lane = combination) and
+    /// check counts and rule output per lane against `Rule::next_u8`.
+    fn check_pipeline_exhaustively(rule: Rule) {
+        // words[w][m]: plane of neighbor m over combinations w*64..w*64+63
+        let mut words = [[0u64; 8]; 4];
+        for combo in 0..256usize {
+            for m in 0..8 {
+                if (combo >> m) & 1 == 1 {
+                    words[combo / 64][m] |= 1u64 << (combo % 64);
+                }
+            }
+        }
+        for alive_bit in [0u8, 1] {
+            let alive = if alive_bit == 1 { u64::MAX } else { 0 };
+            for (w, planes) in words.iter().enumerate() {
+                let [aw, ac, ae, cw, ce, sw, sc, se] = *planes;
+                let (b0, b1, b2, b3) = count_neighbors_word(aw, ac, ae, cw, ce, sw, sc, se);
+                let next = apply_rule_word(rule, alive, b0, b1, b2, b3);
+                for lane in 0..64u32 {
+                    let combo = (w * 64) as u32 + lane;
+                    let count = combo.count_ones();
+                    let got_count = ((b0 >> lane) & 1)
+                        + 2 * ((b1 >> lane) & 1)
+                        + 4 * ((b2 >> lane) & 1)
+                        + 8 * ((b3 >> lane) & 1);
+                    assert_eq!(got_count, count as u64, "combo={combo}");
+                    assert_eq!(
+                        ((next >> lane) & 1) as u8,
+                        rule.next_u8(alive_bit, count),
+                        "combo={combo} alive={alive_bit} rule={}",
+                        rule.notation()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adder_and_rule_pipeline_matches_next_u8_exhaustively() {
+        for text in ["B3/S23", "B36/S23", "B2/S", "B/S012345678", "B13/S0123"] {
+            check_pipeline_exhaustively(Rule::parse(text).unwrap());
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_next_u8_for_random_rule_masks() {
+        let mut prng = Prng::new(0xB17);
+        for _ in 0..200 {
+            let rule = Rule {
+                birth: prng.below(512) as u16,
+                survive: prng.below(512) as u16,
+            };
+            check_pipeline_exhaustively(rule);
+        }
+    }
+
+    #[test]
+    fn packed_engine_agrees_with_bb_for_every_rho() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 5;
+        let reference = {
+            let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 21, 2);
+            run_and_hash(&mut bb, 6)
+        };
+        for rho in [1u32, 2, 4, 8, 16, 32] {
+            let mut sq =
+                PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.4, 21, 2)
+                    .unwrap();
+            assert_eq!(run_and_hash(&mut sq, 6), reference, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn packed_engine_agrees_for_s3_fractals() {
+        for spec in [catalog::vicsek(), catalog::sierpinski_carpet()] {
+            let r = 3;
+            let reference = {
+                let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 2, 2);
+                run_and_hash(&mut bb, 5)
+            };
+            for rho in [1u32, 3, 9] {
+                let mut sq =
+                    PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.5, 2, 2)
+                        .unwrap();
+                assert_eq!(run_and_hash(&mut sq, 5), reference, "{} rho={rho}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn multiword_rows_agree_with_bb_at_rho_128() {
+        // ρ=128 -> wpr=2: exercises the cross-word boundary stitching
+        // (and, at r=8 with 3 coarse blocks, the cross-block one too)
+        let spec = catalog::sierpinski_triangle();
+        let r = 8;
+        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 77, 4);
+        let mut sq =
+            PackedSqueezeBlockEngine::new(&spec, r, 128, Rule::game_of_life(), 0.4, 77, 4)
+                .unwrap();
+        assert_eq!(sq.maps().block.blocks(), 3);
+        assert_eq!(sq.geom().wpr, 2);
+        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+
+    #[test]
+    fn ragged_multiword_rows_agree_at_rho_81() {
+        // s=3, ρ=81 -> wpr=2 with a 17-bit ragged last word; r=4 is one
+        // block (pure micro brute force through the word kernels)
+        let spec = catalog::vicsek();
+        let r = 4;
+        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 5, 2);
+        let mut sq =
+            PackedSqueezeBlockEngine::new(&spec, r, 81, Rule::game_of_life(), 0.5, 5, 2).unwrap();
+        assert_eq!(sq.geom().wpr, 2);
+        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+
+    #[test]
+    fn packed_state_is_at_most_an_eighth_plus_padding_of_bytes() {
+        let spec = catalog::sierpinski_triangle();
+        for (r, rho) in [(6u32, 4u32), (7, 16), (8, 128)] {
+            let byte = SqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.3,
+                1,
+                1,
+                MapPath::Scalar,
+            )
+            .unwrap();
+            let packed =
+                PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.3, 1, 1)
+                    .unwrap();
+            let byte_state = 2 * byte.maps().block.stored_cells();
+            let packed_state = packed.buf.bytes();
+            // exact layout model: each of the 2 buffers holds
+            // blocks · ρ rows of ⌈ρ/64⌉ 8-byte words — i.e. ⌈bytes/8⌉
+            // plus the row padding to the next word boundary
+            let padded_eighth =
+                2 * packed.maps().block.blocks() * rho as u64 * 8 * (rho.div_ceil(64) as u64);
+            assert_eq!(packed_state, padded_eighth, "r={r} rho={rho}");
+            if rho >= 16 {
+                // beyond two words of cells per byte-row the 8x factor
+                // dominates the padding: packed strictly undercuts bytes
+                assert!(
+                    packed_state < byte_state,
+                    "packed {packed_state} vs byte {byte_state} at rho={rho}"
+                );
+            }
+            // and the packed engine reports exactly state + table bytes
+            assert_eq!(
+                packed.memory_bytes(),
+                packed_state + packed.maps().table_bytes()
+            );
+            assert_eq!(
+                packed_state,
+                2 * crate::memory::packed_squeeze_bytes(&spec, r, rho).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_parallel_stepping_is_deterministic_across_worker_counts() {
+        let spec = catalog::sierpinski_triangle();
+        let r = 7;
+        let reference = {
+            let mut serial =
+                PackedSqueezeBlockEngine::new(&spec, r, 8, Rule::game_of_life(), 0.42, 7, 1)
+                    .unwrap();
+            run_and_hash(&mut serial, 8)
+        };
+        for workers in [2usize, 4, 8, 16] {
+            let mut par =
+                PackedSqueezeBlockEngine::new(&spec, r, 8, Rule::game_of_life(), 0.42, 7, workers)
+                    .unwrap();
+            assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn packed_engine_shares_the_byte_engines_cache_entry() {
+        // same (fractal, r, ρ, scalar) key: one interned adjacency for
+        // both state backends
+        let spec = catalog::vicsek();
+        let cache = MapCache::new();
+        let byte = SqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        )
+        .unwrap();
+        let packed = PackedSqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            Some(&cache),
+        )
+        .unwrap();
+        assert!(std::ptr::eq(&*packed.maps, byte.maps()));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+        // identical seed state through both layouts
+        assert_eq!(packed.state_hash(), byte.state_hash());
+        assert_eq!(packed.population(), byte.population());
+    }
+
+    #[test]
+    fn invalid_rho_is_an_error_not_a_panic() {
+        let spec = catalog::sierpinski_triangle();
+        assert!(PackedSqueezeBlockEngine::new(&spec, 6, 3, Rule::game_of_life(), 0.4, 1, 1)
+            .is_err());
+        assert!(PackedSqueezeBlockEngine::new(&spec, 2, 16, Rule::game_of_life(), 0.4, 1, 1)
+            .is_err());
+    }
+}

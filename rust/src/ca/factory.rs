@@ -2,19 +2,22 @@
 //! coordinator/CLI layer and the engine implementations.
 
 use super::bb::BbEngine;
+use super::bitkernel::PackedSqueezeBlockEngine;
 use super::engine::Engine;
 use super::lambda_engine::LambdaEngine;
 use super::rule::Rule;
 use super::squeeze::{MapPath, SqueezeEngine};
 use super::squeeze_block::SqueezeBlockEngine;
 use crate::fractal::FractalSpec;
+use crate::maps::block::BlockError;
 use crate::maps::MapCache;
-use crate::shard::ShardedSqueezeEngine;
+use crate::shard::{PackedShardedSqueezeEngine, ShardedSqueezeEngine};
 use crate::tcu::MmaMode;
 
 /// The paper's three approaches (§4): BB, λ(ω), Squeeze — the latter at
 /// thread level (ρ=1) or block level (ρ>1), with or without tensor
-/// cores — plus the sharded decomposition of the block-level engine.
+/// cores — plus the sharded decomposition of the block-level engine and
+/// the bit-planar (`squeeze-bits`) backends of both.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Bb,
@@ -24,12 +27,18 @@ pub enum EngineKind {
     /// (`crate::shard`): `shards` contiguous block ranges stepped as
     /// parallel local sweeps with an exchange barrier between steps.
     ShardedSqueeze { rho: u32, shards: u32 },
+    /// Bit-planar block engine (`ca::bitkernel`): 1-bit cells stepped
+    /// with word-parallel carry-save kernels.
+    PackedSqueeze { rho: u32 },
+    /// The sharded decomposition over the bit-planar backend.
+    PackedShardedSqueeze { rho: u32, shards: u32 },
 }
 
 impl EngineKind {
     /// Parse from CLI notation: `bb`, `lambda`, `squeeze`, `squeeze:16`,
     /// `squeeze-tcu:16`, `sharded-squeeze:16:4` (ρ then shard count;
-    /// the shard count defaults to 2 when omitted).
+    /// the shard count defaults to 2 when omitted), and the bit-planar
+    /// `squeeze-bits:16` / `squeeze-bits:16:4`.
     pub fn parse(text: &str) -> Option<EngineKind> {
         let fields: Vec<&str> = text.split(':').collect();
         let num = |f: &&str| f.parse::<u32>().ok();
@@ -40,6 +49,15 @@ impl EngineKind {
             ["squeeze", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: false }),
             ["squeeze-tcu"] => Some(EngineKind::Squeeze { rho: 1, tensor: true }),
             ["squeeze-tcu", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: true }),
+            ["squeeze-bits"] => Some(EngineKind::PackedSqueeze { rho: 16 }),
+            ["squeeze-bits", rho] => Some(EngineKind::PackedSqueeze { rho: num(rho)? }),
+            ["squeeze-bits", rho, shards] => {
+                let shards = num(shards)?;
+                (shards >= 1).then_some(EngineKind::PackedShardedSqueeze {
+                    rho: num(rho)?,
+                    shards,
+                })
+            }
             ["sharded-squeeze", rho] => Some(EngineKind::ShardedSqueeze {
                 rho: num(rho)?,
                 shards: 2,
@@ -64,20 +82,23 @@ pub struct EngineConfig {
     pub workers: usize,
 }
 
-/// Build an engine over the given fractal (no map sharing).
-pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Box<dyn Engine> {
+/// Build an engine over the given fractal (no map sharing). An invalid
+/// configuration (e.g. a ρ that is not a power of `s`) comes back as
+/// `Err` instead of a panic.
+pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Result<Box<dyn Engine>, BlockError> {
     build_with_cache(spec, cfg, None)
 }
 
 /// Build an engine over the given fractal, sourcing its precomputed maps
 /// from `cache` when one is supplied — the seam the coordinator uses to
-/// share λ/ν tables across queued jobs of the same fractal.
+/// share λ/ν tables across queued jobs of the same fractal. Errors are
+/// surfaced (service `ERR` lines) rather than panicking a worker.
 pub fn build_with_cache(
     spec: &FractalSpec,
     cfg: &EngineConfig,
     cache: Option<&MapCache>,
-) -> Box<dyn Engine> {
-    match cfg.kind {
+) -> Result<Box<dyn Engine>, BlockError> {
+    Ok(match cfg.kind {
         EngineKind::Bb => Box::new(BbEngine::new(
             spec,
             cfg.r,
@@ -123,7 +144,7 @@ pub fn build_with_cache(
                     cfg.workers,
                     path,
                     cache,
-                ))
+                )?)
             }
         }
         EngineKind::ShardedSqueeze { rho, shards } => Box::new(ShardedSqueezeEngine::with_cache(
@@ -137,8 +158,31 @@ pub fn build_with_cache(
             cfg.workers,
             MapPath::Scalar,
             cache,
-        )),
-    }
+        )?),
+        EngineKind::PackedSqueeze { rho } => Box::new(PackedSqueezeBlockEngine::with_cache(
+            spec,
+            cfg.r,
+            rho,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+            cache,
+        )?),
+        EngineKind::PackedShardedSqueeze { rho, shards } => {
+            Box::new(PackedShardedSqueezeEngine::with_cache(
+                spec,
+                cfg.r,
+                rho,
+                shards,
+                cfg.rule,
+                cfg.density,
+                cfg.seed,
+                cfg.workers,
+                cache,
+            )?)
+        }
+    })
 }
 
 #[cfg(test)]
@@ -170,11 +214,46 @@ mod tests {
             EngineKind::parse("sharded-squeeze:8"),
             Some(EngineKind::ShardedSqueeze { rho: 8, shards: 2 })
         );
+        assert_eq!(
+            EngineKind::parse("squeeze-bits"),
+            Some(EngineKind::PackedSqueeze { rho: 16 })
+        );
+        assert_eq!(
+            EngineKind::parse("squeeze-bits:8"),
+            Some(EngineKind::PackedSqueeze { rho: 8 })
+        );
+        assert_eq!(
+            EngineKind::parse("squeeze-bits:16:4"),
+            Some(EngineKind::PackedShardedSqueeze { rho: 16, shards: 4 })
+        );
         assert_eq!(EngineKind::parse("hilbert"), None);
         assert_eq!(EngineKind::parse("squeeze:x"), None);
+        assert_eq!(EngineKind::parse("squeeze-bits:16:0"), None);
+        assert_eq!(EngineKind::parse("squeeze-bits:x"), None);
         assert_eq!(EngineKind::parse("sharded-squeeze:16:0"), None);
         assert_eq!(EngineKind::parse("sharded-squeeze:16:4:9"), None);
         assert_eq!(EngineKind::parse("bb:2"), None);
+    }
+
+    #[test]
+    fn invalid_rho_builds_are_errors_not_panics() {
+        let spec = catalog::sierpinski_triangle();
+        for kind in [
+            EngineKind::Squeeze { rho: 3, tensor: false },
+            EngineKind::ShardedSqueeze { rho: 3, shards: 2 },
+            EngineKind::PackedSqueeze { rho: 3 },
+            EngineKind::PackedShardedSqueeze { rho: 3, shards: 2 },
+        ] {
+            let cfg = EngineConfig {
+                kind,
+                r: 5,
+                rule: Rule::game_of_life(),
+                density: 0.4,
+                seed: 1,
+                workers: 1,
+            };
+            assert!(build(&spec, &cfg).is_err(), "{kind:?}");
+        }
     }
 
     #[test]
@@ -189,9 +268,9 @@ mod tests {
             seed: 3,
             workers: 2,
         };
-        let mut plain = build(&spec, &cfg);
-        let mut cached_a = build_with_cache(&spec, &cfg, Some(&cache));
-        let mut cached_b = build_with_cache(&spec, &cfg, Some(&cache));
+        let mut plain = build(&spec, &cfg).unwrap();
+        let mut cached_a = build_with_cache(&spec, &cfg, Some(&cache)).unwrap();
+        let mut cached_b = build_with_cache(&spec, &cfg, Some(&cache)).unwrap();
         for _ in 0..5 {
             plain.step();
             cached_a.step();
@@ -214,6 +293,8 @@ mod tests {
             EngineKind::Squeeze { rho: 4, tensor: false },
             EngineKind::Squeeze { rho: 4, tensor: true },
             EngineKind::ShardedSqueeze { rho: 4, shards: 3 },
+            EngineKind::PackedSqueeze { rho: 4 },
+            EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 },
         ];
         let mut hashes = Vec::new();
         for kind in kinds {
@@ -227,7 +308,8 @@ mod tests {
                     seed: 17,
                     workers: 2,
                 },
-            );
+            )
+            .unwrap();
             for _ in 0..4 {
                 e.step();
             }

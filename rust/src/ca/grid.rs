@@ -1,8 +1,11 @@
-//! Double-buffered byte grids — the state storage shared by all engines.
+//! Double-buffered grids — the state storage shared by all engines.
 //!
-//! One byte per cell (0 = dead, 1 = alive). Holes of the embedding are
-//! represented as permanently-dead cells, which keeps neighbor counting
-//! branch-free: summing raw bytes counts exactly the live *fractal*
+//! Two representations exist. [`DoubleBuffer`] holds one byte per cell
+//! (0 = dead, 1 = alive). [`PackedBuffer`] holds one *bit* per cell in
+//! `u64` words — the bit-planar backend the `squeeze-bits` engines step
+//! with word-parallel kernels (`ca::bitkernel`). In both, holes of the
+//! embedding are permanently-dead cells, which keeps neighbor counting
+//! branch-free: summing raw cells counts exactly the live *fractal*
 //! neighbors, because a hole can never become alive.
 
 /// A pair of equally-sized byte buffers with swap semantics.
@@ -44,6 +47,48 @@ impl DoubleBuffer {
     /// Number of live cells in the current buffer.
     pub fn population(&self) -> u64 {
         self.cur.iter().map(|&b| b as u64).sum()
+    }
+}
+
+/// A pair of equally-sized `u64`-word buffers with swap semantics — the
+/// 1-bit-per-cell state storage of the packed engines. The word layout
+/// (which bit is which cell) is owned by `ca::bitkernel::PackedGeom`;
+/// this type only manages the raw storage.
+#[derive(Clone, Debug)]
+pub struct PackedBuffer {
+    pub cur: Vec<u64>,
+    pub next: Vec<u64>,
+}
+
+impl PackedBuffer {
+    pub fn zeroed(words: u64) -> PackedBuffer {
+        PackedBuffer {
+            cur: vec![0u64; words as usize],
+            next: vec![0u64; words as usize],
+        }
+    }
+
+    /// Words per buffer.
+    #[inline]
+    pub fn words(&self) -> u64 {
+        self.cur.len() as u64
+    }
+
+    /// Swap current and next after a step.
+    #[inline]
+    pub fn swap(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+    }
+
+    /// Total bytes held (both buffers).
+    pub fn bytes(&self) -> u64 {
+        ((self.cur.len() + self.next.len()) * std::mem::size_of::<u64>()) as u64
+    }
+
+    /// Live cells in the current buffer — a popcount sum, valid because
+    /// padding bits and holes are never set.
+    pub fn population(&self) -> u64 {
+        self.cur.iter().map(|w| w.count_ones() as u64).sum()
     }
 }
 
@@ -90,6 +135,20 @@ mod tests {
         db.cur[7] = 1;
         assert_eq!(db.population(), 2);
         assert_eq!(db.bytes(), 20);
+    }
+
+    #[test]
+    fn packed_buffer_swaps_counts_and_accounts() {
+        let mut pb = PackedBuffer::zeroed(3);
+        pb.cur[0] = 0b1011;
+        pb.cur[2] = 1u64 << 63;
+        pb.next[1] = 0xFF;
+        assert_eq!(pb.population(), 4);
+        assert_eq!(pb.words(), 3);
+        assert_eq!(pb.bytes(), 2 * 3 * 8);
+        pb.swap();
+        assert_eq!(pb.population(), 8);
+        assert_eq!(pb.next[0], 0b1011);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! the tensor-core variants, all over one exact shared semantics.
 
 pub mod bb;
+pub mod bitkernel;
 pub mod engine;
 pub mod factory;
 pub mod grid;
@@ -10,6 +11,7 @@ pub mod rule;
 pub mod squeeze;
 pub mod squeeze_block;
 
+pub use bitkernel::PackedSqueezeBlockEngine;
 pub use engine::Engine;
 pub use factory::{build, build_with_cache, EngineConfig, EngineKind};
 pub use rule::Rule;

@@ -21,6 +21,7 @@ use super::grid::DoubleBuffer;
 use super::rule::Rule;
 use super::squeeze::MapPath;
 use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::maps::block::BlockError;
 use crate::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
 use crate::maps::lambda::lambda;
 use crate::tcu::MmaMode;
@@ -48,12 +49,15 @@ impl SqueezeBlockEngine {
         seed: u64,
         workers: usize,
         path: MapPath,
-    ) -> SqueezeBlockEngine {
+    ) -> Result<SqueezeBlockEngine, BlockError> {
         Self::with_cache(spec, r, rho, rule, density, seed, workers, path, None)
     }
 
     /// Build the engine, taking the map bundle from `cache` when given
     /// (shared across engines/jobs) or building a private one otherwise.
+    /// An invalid ρ (not a power of `s`, or larger than the level-`r`
+    /// fractal) comes back as `Err` — the factory and service surface it
+    /// as an `ERR` line instead of letting a worker panic mid-build.
     #[allow(clippy::too_many_arguments)]
     pub fn with_cache(
         spec: &FractalSpec,
@@ -65,18 +69,14 @@ impl SqueezeBlockEngine {
         workers: usize,
         path: MapPath,
         cache: Option<&MapCache>,
-    ) -> SqueezeBlockEngine {
+    ) -> Result<SqueezeBlockEngine, BlockError> {
         let mma = match path {
             MapPath::Scalar => None,
             MapPath::Tensor(mode) => Some(mode),
         };
         let maps = match cache {
-            Some(c) => c
-                .block_maps(spec, r, rho, mma, workers)
-                .expect("invalid rho for spec"),
-            None => Arc::new(
-                BlockMaps::build(spec, r, rho, mma, workers).expect("invalid rho for spec"),
-            ),
+            Some(c) => c.block_maps(spec, r, rho, mma, workers)?,
+            None => Arc::new(BlockMaps::build(spec, r, rho, mma, workers)?),
         };
         let mut buf = DoubleBuffer::zeroed(maps.block.stored_cells());
         // Canonical seeding: compact linear index -> expanded -> slot.
@@ -91,13 +91,13 @@ impl SqueezeBlockEngine {
                 buf.cur[slot as usize] = 1;
             }
         }
-        SqueezeBlockEngine {
+        Ok(SqueezeBlockEngine {
             maps,
             rule,
             buf,
             workers,
             path,
-        }
+        })
     }
 
     /// The shared map bundle (tests / capacity accounting).
@@ -292,7 +292,8 @@ mod tests {
                 21,
                 2,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             assert_eq!(run_and_hash(&mut sq, 6), reference, "rho={rho}");
         }
     }
@@ -315,7 +316,8 @@ mod tests {
                     2,
                     2,
                     MapPath::Scalar,
-                );
+                )
+                .unwrap();
                 assert_eq!(run_and_hash(&mut sq, 5), reference, "{} rho={rho}", spec.name);
             }
         }
@@ -333,7 +335,8 @@ mod tests {
             13,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         let mut b = SqueezeBlockEngine::new(
             &spec,
             6,
@@ -343,7 +346,8 @@ mod tests {
             13,
             2,
             MapPath::Tensor(MmaMode::Fp16),
-        );
+        )
+        .unwrap();
         assert_eq!(run_and_hash(&mut a, 5), run_and_hash(&mut b, 5));
     }
 
@@ -360,7 +364,8 @@ mod tests {
                 1,
                 1,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             // two u8 buffers of k^{r_b}·ρ² cells, plus the adjacency table
             assert_eq!(
                 sq.memory_bytes(),
@@ -386,7 +391,8 @@ mod tests {
             3,
             1,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         assert_eq!(sq.maps.block.blocks(), 1);
         assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
     }
@@ -405,7 +411,8 @@ mod tests {
                 7,
                 1,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             run_and_hash(&mut serial, 8)
         };
         for workers in [2usize, 4, 8, 16] {
@@ -418,7 +425,8 @@ mod tests {
                 7,
                 workers,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
         }
     }
@@ -436,7 +444,8 @@ mod tests {
             11,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         let mut a = SqueezeBlockEngine::with_cache(
             &spec,
             4,
@@ -447,7 +456,8 @@ mod tests {
             2,
             MapPath::Scalar,
             Some(&cache),
-        );
+        )
+        .unwrap();
         let b = SqueezeBlockEngine::with_cache(
             &spec,
             4,
@@ -458,7 +468,8 @@ mod tests {
             4,
             MapPath::Scalar,
             Some(&cache),
-        );
+        )
+        .unwrap();
         // two cached engines share one bundle; lookups are counted
         assert!(Arc::ptr_eq(&a.maps, &b.maps));
         assert_eq!(cache.stats().misses, 1);

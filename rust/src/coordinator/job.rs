@@ -42,13 +42,16 @@ impl JobSpec {
     /// `shards=N` promotes a (scalar) squeeze engine to the sharded
     /// decomposition — `engine=squeeze:16 shards=4` is equivalent to
     /// `engine=sharded-squeeze:16:4` — and overrides the shard count of
-    /// an already-sharded engine.
+    /// an already-sharded engine. `packed=1` promotes a scalar squeeze
+    /// engine (sharded or not) to its bit-planar `squeeze-bits` twin;
+    /// both keys compose in any order.
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
         let mut spec = JobSpec {
             id,
             ..JobSpec::default()
         };
         let mut shards: Option<u32> = None;
+        let mut packed = false;
         for tok in line.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
@@ -78,6 +81,13 @@ impl JobSpec {
                     }
                     shards = Some(n);
                 }
+                "packed" => {
+                    packed = match v {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        _ => return Err(format!("bad packed={v} (want 0/1/true/false)")),
+                    };
+                }
                 other => return Err(format!("unknown key {other:?}")),
             }
         }
@@ -87,9 +97,30 @@ impl JobSpec {
                 | EngineKind::ShardedSqueeze { rho, .. } => {
                     EngineKind::ShardedSqueeze { rho, shards: n }
                 }
+                EngineKind::PackedSqueeze { rho }
+                | EngineKind::PackedShardedSqueeze { rho, .. } => {
+                    EngineKind::PackedShardedSqueeze { rho, shards: n }
+                }
                 other => {
                     return Err(format!(
                         "shards= requires a scalar squeeze engine (got {other:?})"
+                    ))
+                }
+            };
+        }
+        if packed {
+            spec.engine = match spec.engine {
+                EngineKind::Squeeze { rho, tensor: false } => EngineKind::PackedSqueeze { rho },
+                EngineKind::ShardedSqueeze { rho, shards } => {
+                    EngineKind::PackedShardedSqueeze { rho, shards }
+                }
+                EngineKind::PackedSqueeze { rho } => EngineKind::PackedSqueeze { rho },
+                EngineKind::PackedShardedSqueeze { rho, shards } => {
+                    EngineKind::PackedShardedSqueeze { rho, shards }
+                }
+                other => {
+                    return Err(format!(
+                        "packed= requires a scalar squeeze engine (got {other:?})"
                     ))
                 }
             };
@@ -98,12 +129,15 @@ impl JobSpec {
     }
 
     /// Semantic validation against the resolved fractal — the checks
-    /// the engines would otherwise enforce by panicking mid-build. The
+    /// the engines would otherwise enforce by erroring mid-build. The
     /// service surfaces the message as an `ERR` line instead of letting
     /// a worker die.
     pub fn validate(&self, spec: &FractalSpec) -> Result<(), String> {
         match self.engine {
-            EngineKind::Squeeze { rho, .. } | EngineKind::ShardedSqueeze { rho, .. } => {
+            EngineKind::Squeeze { rho, .. }
+            | EngineKind::ShardedSqueeze { rho, .. }
+            | EngineKind::PackedSqueeze { rho }
+            | EngineKind::PackedShardedSqueeze { rho, .. } => {
                 crate::memory::squeeze_bytes(spec, self.r, rho, 1)
                     .map(|_| ())
                     .map_err(|e| e.to_string())
@@ -204,6 +238,39 @@ mod tests {
     }
 
     #[test]
+    fn packed_key_promotes_to_bit_planar_engines() {
+        // explicit packed engine string
+        let j = JobSpec::parse_line(1, "engine=squeeze-bits:8 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedSqueeze { rho: 8 });
+        let j = JobSpec::parse_line(1, "engine=squeeze-bits:8:4 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 });
+        // packed= promotes the (default squeeze:16) engine
+        let j = JobSpec::parse_line(1, "packed=1 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedSqueeze { rho: 16 });
+        let j = JobSpec::parse_line(1, "packed=true engine=squeeze:4").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedSqueeze { rho: 4 });
+        // packed=0 is a no-op
+        let j = JobSpec::parse_line(1, "packed=0 engine=squeeze:4").unwrap();
+        assert_eq!(j.engine, EngineKind::Squeeze { rho: 4, tensor: false });
+        // packed + shards compose in any key order
+        let j = JobSpec::parse_line(1, "shards=3 packed=1 engine=squeeze:4").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 });
+        let j = JobSpec::parse_line(1, "packed=1 engine=sharded-squeeze:8:2").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 8, shards: 2 });
+        // shards= overrides a packed-sharded engine's count too
+        let j = JobSpec::parse_line(1, "engine=squeeze-bits:8:2 shards=5").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 8, shards: 5 });
+        // packed= on an already-packed engine is idempotent
+        let j = JobSpec::parse_line(1, "engine=squeeze-bits:8 packed=1").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedSqueeze { rho: 8 });
+        // non-squeeze / tensor engines reject the key; garbage values too
+        assert!(JobSpec::parse_line(1, "engine=bb packed=1").is_err());
+        assert!(JobSpec::parse_line(1, "engine=lambda packed=1").is_err());
+        assert!(JobSpec::parse_line(1, "engine=squeeze-tcu:4 packed=1").is_err());
+        assert!(JobSpec::parse_line(1, "packed=yes").is_err());
+    }
+
+    #[test]
     fn validate_surfaces_bad_rho_as_error() {
         use crate::fractal::catalog;
         let tri = catalog::sierpinski_triangle();
@@ -214,6 +281,11 @@ mod tests {
         assert!(msg.contains("rho=3"), "{msg}");
         let too_big = JobSpec::parse_line(1, "engine=sharded-squeeze:16:2 r=2").unwrap();
         assert!(too_big.validate(&tri).is_err());
+        // packed engines validate ρ the same way
+        let bad_packed = JobSpec::parse_line(1, "engine=squeeze-bits:3 r=6").unwrap();
+        assert!(bad_packed.validate(&tri).unwrap_err().contains("rho=3"));
+        let bad_packed_sharded = JobSpec::parse_line(1, "engine=squeeze-bits:16:2 r=2").unwrap();
+        assert!(bad_packed_sharded.validate(&tri).is_err());
         // bb never fails rho validation
         let bb = JobSpec::parse_line(1, "engine=bb r=2").unwrap();
         assert!(bb.validate(&tri).is_ok());

@@ -37,7 +37,12 @@ pub fn execute_job_with_cache(
     let fractal = catalog::by_name(&spec.fractal)
         .ok_or_else(|| format!("unknown fractal {:?}", spec.fractal))?;
     spec.validate(&fractal)?;
-    if let (EngineKind::ShardedSqueeze { rho, shards }, Some(c)) = (spec.engine, cache) {
+    if let (
+        EngineKind::ShardedSqueeze { rho, shards }
+        | EngineKind::PackedShardedSqueeze { rho, shards },
+        Some(c),
+    ) = (spec.engine, cache)
+    {
         // per-shard cache warmup: every shard interns the bundle
         // concurrently before the engine (and step 0) exists
         crate::shard::warm(c, &fractal, spec.r, rho, None, shards, spec.workers)
@@ -51,7 +56,7 @@ pub fn execute_job_with_cache(
         seed: spec.seed,
         workers: spec.workers,
     };
-    let mut engine = build_with_cache(&fractal, &cfg, cache);
+    let mut engine = build_with_cache(&fractal, &cfg, cache).map_err(|e| e.to_string())?;
     let t = Timer::start();
     for _ in 0..spec.steps {
         engine.step();
@@ -240,6 +245,44 @@ mod tests {
         let snap = metrics.snapshot();
         assert_eq!(snap.sharded_jobs, 1);
         assert!(snap.shard_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn packed_jobs_share_tables_and_agree_with_byte_engines() {
+        // ρ=16 at r=4: one coarse block, and 16 cells per packed row use
+        // a quarter of their word — still half the byte-row footprint
+        let sched = Scheduler::start(2);
+        sched.submit(small_job(1, EngineKind::Squeeze { rho: 16, tensor: false }));
+        sched.submit(small_job(2, EngineKind::PackedSqueeze { rho: 16 }));
+        sched.submit(small_job(3, EngineKind::PackedShardedSqueeze { rho: 16, shards: 3 }));
+        let metrics = Arc::clone(&sched.metrics);
+        let cache = Arc::clone(&sched.map_cache);
+        let results = sched.shutdown();
+        assert_eq!(results.len(), 3);
+        let by_id = |id: u64| {
+            results
+                .iter()
+                .map(|r| r.as_ref().unwrap())
+                .find(|r| r.id == id)
+                .expect("job completed")
+        };
+        let hashes: Vec<u64> = (1..=3).map(|id| by_id(id).state_hash).collect();
+        assert!(
+            hashes.windows(2).all(|w| w[0] == w[1]),
+            "bit-planar backends diverged: {hashes:?}"
+        );
+        // byte scalar + packed + packed-sharded all share one scalar bundle
+        assert_eq!(cache.stats().misses, 1);
+        assert!(cache.stats().hits >= 2, "{:?}", cache.stats());
+        // the packed sharded job recorded decomposition gauges
+        assert_eq!(metrics.snapshot().sharded_jobs, 1);
+        // and the packed engine reports strictly less state than bytes
+        assert!(
+            by_id(2).memory_bytes < by_id(1).memory_bytes,
+            "packed {} vs byte {}",
+            by_id(2).memory_bytes,
+            by_id(1).memory_bytes
+        );
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //!                   [`JobSpec::parse_line`]), e.g.
 //!                   `engine=squeeze:16 r=10 steps=100 seed=7`.
 //!                   `engine=` accepts `bb`, `lambda`, `squeeze[:RHO]`,
-//!                   `squeeze-tcu[:RHO]`, and the sharded decomposition
-//!                   `sharded-squeeze:RHO[:SHARDS]`; `shards=N`
-//!                   promotes a scalar squeeze engine to
-//!                   `sharded-squeeze` with N shards (and overrides the
-//!                   count of an already-sharded engine).
+//!                   `squeeze-tcu[:RHO]`, the sharded decomposition
+//!                   `sharded-squeeze:RHO[:SHARDS]`, and the bit-planar
+//!                   backends `squeeze-bits:RHO[:SHARDS]`; `shards=N`
+//!                   promotes a scalar squeeze engine to its sharded
+//!                   twin with N shards (and overrides the count of an
+//!                   already-sharded engine), `packed=1` promotes a
+//!                   scalar squeeze engine to its bit-planar twin.
 //!   response line = TSV ([`JobResult::to_tsv`]); errors — malformed
 //!                   lines, unknown engines/fractals, and semantic
 //!                   failures like a ρ that is not a power of `s` — are

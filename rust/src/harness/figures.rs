@@ -157,17 +157,28 @@ pub fn fig14_measured(
     )
 }
 
-/// Table 2 — memory and MRF at level r per block size.
+/// Table 2 — memory and MRF at level r per block size, extended with
+/// the bit-planar (1-bit cells, `squeeze-bits`) column. The packed MRF
+/// is quoted against a 1-byte-per-cell BB, same basis as `MRF`.
 pub fn table2(spec: &FractalSpec, r: u32, rhos: &[u32]) -> std::io::Result<()> {
     let rows = memory::table2(spec, r, rhos, memory::PAPER_CELL_BYTES)
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
-    let mut t = Table::new(&["rho", "bb_lambda", "squeeze", "MRF"]);
+    let mut t = Table::new(&[
+        "rho",
+        "bb_lambda",
+        "squeeze",
+        "MRF",
+        "squeeze_1bit",
+        "MRF_1bit",
+    ]);
     for row in rows {
         t.row(&[
             format!("{0}x{0}", row.rho),
             human_bytes(row.bb_bytes),
             human_bytes(row.squeeze_bytes),
             format!("{:.1}x", row.mrf),
+            human_bytes(row.packed_bytes),
+            format!("{:.1}x", row.packed_mrf),
         ]);
     }
     emit(

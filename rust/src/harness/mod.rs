@@ -7,4 +7,5 @@ pub mod report;
 pub mod sweep;
 
 pub use bench::{bench, BenchOpts};
+pub use report::results_dir;
 pub use sweep::{measure, measure_with_cache, speedups_vs_bb, sweep, SweepPoint};

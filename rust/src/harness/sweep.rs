@@ -53,7 +53,8 @@ pub fn measure_with_cache(
         seed: 42,
         workers,
     };
-    let mut engine = build_with_cache(spec, &cfg, cache);
+    let mut engine =
+        build_with_cache(spec, &cfg, cache).expect("sweep engine configs are pre-validated");
     let summary: Summary = bench(opts, || engine.step());
     SweepPoint {
         engine: engine.name(),
@@ -90,7 +91,11 @@ pub fn sweep(
                     continue; // the paper's OOM wall
                 }
             }
-            if let EngineKind::Squeeze { rho, .. } = kind {
+            if let EngineKind::Squeeze { rho, .. }
+            | EngineKind::ShardedSqueeze { rho, .. }
+            | EngineKind::PackedSqueeze { rho }
+            | EngineKind::PackedShardedSqueeze { rho, .. } = kind
+            {
                 if crate::maps::block::intra_levels_for(rho, spec.s)
                     .map(|l| l > r)
                     .unwrap_or(true)

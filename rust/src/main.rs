@@ -66,7 +66,7 @@ fn usage(cmd: Option<&str>) {
         "usage: squeeze <command> [options]\n\n\
          commands:\n  \
          run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n             \
-         (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS])\n  \
+         (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])\n  \
          serve      (reads job lines from stdin; see coordinator::service)\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
@@ -79,7 +79,7 @@ fn usage(cmd: Option<&str>) {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let engine = EngineKind::parse(&args.get_or("engine", "squeeze:16")).ok_or(
-        "bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS])",
+        "bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])",
     )?;
     let spec = JobSpec {
         id: 0,
@@ -253,7 +253,8 @@ pub fn squeeze_e2e(dir: &str, name: &str, steps: u32) -> Result<String, String> 
             seed: 42,
             workers: squeeze::util::pool::default_workers(),
         },
-    );
+    )
+    .expect("valid engine config");
     let t = Timer::start();
     for _ in 0..total_steps {
         engine.step();
@@ -368,6 +369,7 @@ fn cmd_perf(args: &Args) -> Result<(), String> {
         EngineKind::Lambda,
         EngineKind::Squeeze { rho: 1, tensor: false },
         EngineKind::Squeeze { rho: 16, tensor: false },
+        EngineKind::PackedSqueeze { rho: 16 },
     ] {
         let needs_embedding = matches!(kind, EngineKind::Bb | EngineKind::Lambda);
         let r_eff = if needs_embedding { r.min(12) } else { r };

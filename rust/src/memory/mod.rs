@@ -47,9 +47,32 @@ pub fn squeeze_bytes(
     Ok(spec.cells(r - intra) * (rho as u64 * rho as u64) * cell_bytes)
 }
 
+/// Bit-planar Squeeze storage (one buffer): 1-bit cells row-padded to
+/// `u64` words per tile row — `k^{r - log_s ρ} · ρ · ⌈ρ/64⌉ · 8` bytes.
+/// Exact model of `ca::bitkernel`'s `PackedBuffer` layout; there is no
+/// `cell_bytes` knob because the backend is definitionally 1 bit/cell.
+pub fn packed_squeeze_bytes(spec: &FractalSpec, r: u32, rho: u32) -> Result<u64, BlockError> {
+    let intra = intra_levels_for(rho, spec.s).ok_or(BlockError::RhoNotPowerOfS {
+        rho,
+        s: spec.s,
+    })?;
+    if intra > r {
+        return Err(BlockError::RhoTooLarge { rho, r });
+    }
+    Ok(spec.cells(r - intra) * rho as u64 * rho.div_ceil(64) as u64 * 8)
+}
+
 /// Measured MRF of Squeeze at block size ρ over BB (Table 2's last column).
 pub fn mrf(spec: &FractalSpec, r: u32, rho: u32) -> Result<f64, BlockError> {
     Ok(bb_bytes(spec, r, 1) as f64 / squeeze_bytes(spec, r, rho, 1)? as f64)
+}
+
+/// Measured MRF of the bit-planar backend over a 1-byte-per-cell BB —
+/// the 1-bit column of Table 2. Below ρ=64 the row padding eats part of
+/// the ideal 8× factor (a ρ=16 row still occupies one full word), so
+/// the gain over [`mrf`] is `64·⌈ρ/64⌉/ρ ≥ 1`-fold smaller than 8×.
+pub fn packed_mrf(spec: &FractalSpec, r: u32, rho: u32) -> Result<f64, BlockError> {
+    Ok(bb_bytes(spec, r, 1) as f64 / packed_squeeze_bytes(spec, r, rho)? as f64)
 }
 
 /// Theoretical MRF at thread level (Fig. 10): `s^{2r} / k^r`.
@@ -59,13 +82,17 @@ pub fn theoretical_mrf(spec: &FractalSpec, r_f: f64) -> f64 {
     ratio.powf(r_f)
 }
 
-/// One row of Table 2.
+/// One row of Table 2, extended with the bit-planar (1-bit) column.
 #[derive(Clone, Debug)]
 pub struct Table2Row {
     pub rho: u32,
     pub bb_bytes: u64,
     pub squeeze_bytes: u64,
     pub mrf: f64,
+    /// One packed state buffer (`packed_squeeze_bytes`).
+    pub packed_bytes: u64,
+    /// MRF of the packed backend over a 1-byte BB (`packed_mrf`).
+    pub packed_mrf: f64,
 }
 
 /// Regenerate Table 2 for a fractal/level over the given block sizes.
@@ -82,6 +109,8 @@ pub fn table2(
                 bb_bytes: bb_bytes(spec, r, cell_bytes),
                 squeeze_bytes: squeeze_bytes(spec, r, rho, cell_bytes)?,
                 mrf: mrf(spec, r, rho)?,
+                packed_bytes: packed_squeeze_bytes(spec, r, rho)?,
+                packed_mrf: packed_mrf(spec, r, rho)?,
             })
         })
         .collect()
@@ -99,6 +128,11 @@ pub struct ShardBytesRow {
     pub ghost_blocks: u64,
     pub local_bytes: u64,
     pub halo_bytes: u64,
+    /// The shard's owned state under the bit-planar backend (one packed
+    /// buffer); sums over shards to [`packed_squeeze_bytes`] exactly.
+    pub packed_local_bytes: u64,
+    /// Ghost-ring overhead under the bit-planar backend.
+    pub packed_halo_bytes: u64,
 }
 
 /// Exact per-shard accounting for `(spec, r, ρ)` split into `shards`
@@ -121,7 +155,10 @@ pub fn sharded_squeeze_report(
 pub fn sharded_report_for(maps: &BlockMaps, shards: u32, cell_bytes: u64) -> Vec<ShardBytesRow> {
     let part = ShardPartition::new(maps.block.blocks(), shards);
     let plan = HaloPlan::build(maps, &part);
-    let tile = maps.block.rho as u64 * maps.block.rho as u64;
+    let rho = maps.block.rho;
+    let tile = rho as u64 * rho as u64;
+    // packed tile: ρ rows of ⌈ρ/64⌉ 8-byte words (ca::bitkernel layout)
+    let packed_tile_bytes = rho as u64 * rho.div_ceil(64) as u64 * 8;
     (0..part.shards())
         .map(|s| {
             let (a, b) = part.range(s);
@@ -131,6 +168,8 @@ pub fn sharded_report_for(maps: &BlockMaps, shards: u32, cell_bytes: u64) -> Vec
                 ghost_blocks: plan.ghost_counts[s],
                 local_bytes: (b - a) * tile * cell_bytes,
                 halo_bytes: plan.ghost_counts[s] * tile * cell_bytes,
+                packed_local_bytes: (b - a) * packed_tile_bytes,
+                packed_halo_bytes: plan.ghost_counts[s] * packed_tile_bytes,
             }
         })
         .collect()
@@ -254,6 +293,71 @@ mod tests {
         assert!(mrf(&spec, 8, 5).is_err());
         assert!(table2(&spec, 8, &[1, 2, 3], 1).is_err());
         assert!(sharded_squeeze_report(&spec, 8, 3, 4, 1).is_err());
+    }
+
+    #[test]
+    fn packed_bytes_model_and_mrf_column() {
+        let spec = catalog::sierpinski_triangle();
+        // ρ=16 at r=16: 3^12 blocks × 16 rows × 1 word — exactly half
+        // the byte backend (16 cells/row in a 64-bit word: 8x bits,
+        // 4x padding)
+        let byte = squeeze_bytes(&spec, 16, 16, 1).unwrap();
+        let packed = packed_squeeze_bytes(&spec, 16, 16).unwrap();
+        assert_eq!(packed, byte / 2);
+        assert!((packed_mrf(&spec, 16, 16).unwrap() / mrf(&spec, 16, 16).unwrap() - 2.0).abs()
+            < 1e-9);
+        // ρ=64 hits the full 8x (no padding)
+        let byte64 = squeeze_bytes(&spec, 16, 64, 1).unwrap();
+        assert_eq!(packed_squeeze_bytes(&spec, 16, 64).unwrap(), byte64 / 8);
+        // ρ=128 rows span 2 words, still the full 8x
+        let byte128 = squeeze_bytes(&spec, 16, 128, 1).unwrap();
+        assert_eq!(packed_squeeze_bytes(&spec, 16, 128).unwrap(), byte128 / 8);
+        // exactly the per-row eighth (⌈ρ/8⌉ bytes) plus the padding to
+        // the next word boundary — the acceptance bound ⌈bytes/8⌉+padding
+        for rho in [1u32, 2, 4, 8, 16, 32, 64] {
+            let p = packed_squeeze_bytes(&spec, 16, rho).unwrap();
+            let intra = intra_levels_for(rho, 2).unwrap();
+            let rows = spec.cells(16 - intra) * rho as u64;
+            let per_row_eighth = (rho as u64).div_ceil(8);
+            let per_row_padding = 8 * rho.div_ceil(64) as u64 - per_row_eighth;
+            assert_eq!(p, rows * (per_row_eighth + per_row_padding), "rho={rho}");
+        }
+        // the packed column rides Table 2
+        let rows = table2(&spec, 16, &[1, 16, 32], PAPER_CELL_BYTES).unwrap();
+        for row in &rows {
+            assert_eq!(
+                row.packed_bytes,
+                packed_squeeze_bytes(&spec, 16, row.rho).unwrap()
+            );
+            assert!(row.packed_mrf > 0.0);
+        }
+        // at ρ=32 the packed MRF beats the byte MRF (31.6 -> ~126)
+        let r32 = rows.iter().find(|r| r.rho == 32).unwrap();
+        assert!(r32.packed_mrf > r32.mrf * 3.9, "{}", r32.packed_mrf);
+        // errors propagate like the byte model
+        assert!(packed_squeeze_bytes(&spec, 8, 3).is_err());
+        assert!(packed_mrf(&spec, 2, 16).is_err());
+    }
+
+    #[test]
+    fn shard_report_packed_local_bytes_sum_to_packed_squeeze_bytes() {
+        for spec in [catalog::sierpinski_triangle(), catalog::vicsek()] {
+            let r = if spec.s == 2 { 6 } else { 4 };
+            let rho = spec.s;
+            for shards in [1u32, 2, 4, 7] {
+                let rows = sharded_squeeze_report(&spec, r, rho, shards, 1).unwrap();
+                let packed_local: u64 = rows.iter().map(|row| row.packed_local_bytes).sum();
+                assert_eq!(
+                    packed_local,
+                    packed_squeeze_bytes(&spec, r, rho).unwrap(),
+                    "{} shards={shards}: decomposition must not change packed bytes",
+                    spec.name
+                );
+                if shards == 1 {
+                    assert_eq!(rows[0].packed_halo_bytes, 0);
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,19 +15,27 @@
 //! — and it is the first engine whose domain can exceed any single
 //! buffer: each shard's slice (plus its halo ring) is all a worker
 //! ever touches.
+//!
+//! [`PackedShardedSqueezeEngine`] is the same decomposition over the
+//! bit-planar backend (`ca::bitkernel`): identical partition, halo plan
+//! and shard-remapped neighbor tables, with packed tiles
+//! (`ρ·⌈ρ/64⌉` words) moved by the exchange and the shard sweeps running
+//! the packed word kernel — bit-identical to the packed single engine
+//! (and therefore to BB) by the same shared-sweep-body construction.
 
 use std::sync::Arc;
 
 use super::partition::ShardPartition;
 use super::plan::{HaloPlan, HaloRoute};
 use super::ShardStats;
+use crate::ca::bitkernel::{sweep_block_packed, PackedGeom, PackedOutPtr};
 use crate::ca::engine::{seeded_alive, Engine};
-use crate::ca::grid::DoubleBuffer;
+use crate::ca::grid::{DoubleBuffer, PackedBuffer};
 use crate::ca::rule::Rule;
 use crate::ca::squeeze::MapPath;
 use crate::ca::squeeze_block::{sweep_block, OutPtr};
 use crate::fractal::{Coord, FractalSpec};
-use crate::maps::block::BlockCtx;
+use crate::maps::block::{BlockCtx, BlockError};
 use crate::maps::cache::{BlockMaps, MapCache};
 use crate::maps::lambda::lambda;
 use crate::tcu::MmaMode;
@@ -122,12 +130,14 @@ impl ShardedSqueezeEngine {
         seed: u64,
         workers: usize,
         path: MapPath,
-    ) -> ShardedSqueezeEngine {
+    ) -> Result<ShardedSqueezeEngine, BlockError> {
         Self::with_cache(spec, r, rho, shards, rule, density, seed, workers, path, None)
     }
 
     /// Build the engine, taking the global map bundle from `cache` when
-    /// given; the partition and halo plan are derived per engine.
+    /// given; the partition and halo plan are derived per engine. An
+    /// invalid ρ comes back as `Err` — the factory and service surface
+    /// it as an `ERR` line instead of letting a worker panic mid-build.
     #[allow(clippy::too_many_arguments)]
     pub fn with_cache(
         spec: &FractalSpec,
@@ -140,18 +150,14 @@ impl ShardedSqueezeEngine {
         workers: usize,
         path: MapPath,
         cache: Option<&MapCache>,
-    ) -> ShardedSqueezeEngine {
+    ) -> Result<ShardedSqueezeEngine, BlockError> {
         let mma = match path {
             MapPath::Scalar => None,
             MapPath::Tensor(mode) => Some(mode),
         };
         let maps = match cache {
-            Some(c) => c
-                .block_maps(spec, r, rho, mma, workers)
-                .expect("invalid rho for spec"),
-            None => Arc::new(
-                BlockMaps::build(spec, r, rho, mma, workers).expect("invalid rho for spec"),
-            ),
+            Some(c) => c.block_maps(spec, r, rho, mma, workers)?,
+            None => Arc::new(BlockMaps::build(spec, r, rho, mma, workers)?),
         };
         let part = ShardPartition::new(maps.block.blocks(), shards);
         let plan = HaloPlan::build(&maps, &part);
@@ -190,7 +196,7 @@ impl ShardedSqueezeEngine {
                 engines[s].buf.cur[local as usize] = 1;
             }
         }
-        ShardedSqueezeEngine {
+        Ok(ShardedSqueezeEngine {
             maps,
             part,
             routes,
@@ -201,7 +207,7 @@ impl ShardedSqueezeEngine {
             path,
             halo_bytes_per_step,
             plan_table_bytes,
-        }
+        })
     }
 
     /// Halo exchange: copy every boundary tile's committed state into
@@ -324,6 +330,291 @@ impl Engine for ShardedSqueezeEngine {
     }
 }
 
+/// One packed shard: a contiguous run of `nlocal` blocks plus `nghost`
+/// ghost tiles, stored as a combined bit-planar double buffer
+/// `[local ++ ghost]` (`ρ·⌈ρ/64⌉` words per tile).
+pub struct PackedShardEngine {
+    nlocal: u64,
+    nghost: u64,
+    /// Per local block: 8 Moore neighbor base slots in the combined
+    /// buffer, in *cell* units exactly as [`HaloPlan`] remapped them —
+    /// the packed sweep converts to word bases internally, so the byte
+    /// and packed decompositions share one plan.
+    neighbors: Vec<[u64; 8]>,
+    buf: PackedBuffer,
+}
+
+impl PackedShardEngine {
+    fn new(nghost: u64, neighbors: Vec<[u64; 8]>, words_per_tile: u64) -> PackedShardEngine {
+        let nlocal = neighbors.len() as u64;
+        PackedShardEngine {
+            nlocal,
+            nghost,
+            neighbors,
+            buf: PackedBuffer::zeroed((nlocal + nghost) * words_per_tile),
+        }
+    }
+
+    /// Sweep this shard's local blocks through the packed word kernel
+    /// (ghosts are read-only inputs) and swap.
+    fn step(&mut self, geom: &PackedGeom, rule: Rule, workers: usize) {
+        let wpt = geom.words_per_tile;
+        let cur = &self.buf.cur;
+        let neighbors = &self.neighbors;
+        let out = PackedOutPtr(self.buf.next.as_mut_ptr());
+        parallel_for_chunks(self.nlocal, workers, move |start, end| {
+            for lb in start..end {
+                sweep_block_packed(cur, out, geom, &neighbors[lb as usize], lb * wpt, rule);
+            }
+        });
+        self.buf.swap();
+    }
+
+    /// Live cells in the *local* slice (ghost replicas excluded) — a
+    /// popcount over the local words.
+    fn population(&self, words_per_tile: u64) -> u64 {
+        self.buf.cur[..(self.nlocal * words_per_tile) as usize]
+            .iter()
+            .map(|w| w.count_ones() as u64)
+            .sum()
+    }
+
+    /// Blocks owned by this shard.
+    pub fn local_blocks(&self) -> u64 {
+        self.nlocal
+    }
+
+    /// Ghost tiles mirrored from other shards.
+    pub fn ghost_blocks(&self) -> u64 {
+        self.nghost
+    }
+}
+
+/// The sharded bit-planar block engine (the `squeeze-bits:<ρ>:<S>`
+/// factory variant): the byte decomposition's partition + halo plan over
+/// [`PackedShardEngine`]s, exchanging packed tiles.
+pub struct PackedShardedSqueezeEngine {
+    /// Shared (possibly cached) global map bundle (scalar-built).
+    maps: Arc<BlockMaps>,
+    geom: PackedGeom,
+    part: ShardPartition,
+    routes: Vec<HaloRoute>,
+    shards: Vec<PackedShardEngine>,
+    /// Per-destination word staging for the gather→scatter exchange.
+    stage: Vec<Vec<u64>>,
+    rule: Rule,
+    workers: usize,
+    halo_bytes_per_step: u64,
+    plan_table_bytes: u64,
+}
+
+impl PackedShardedSqueezeEngine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        shards: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+    ) -> Result<PackedShardedSqueezeEngine, BlockError> {
+        Self::with_cache(spec, r, rho, shards, rule, density, seed, workers, None)
+    }
+
+    /// Build the engine, taking the global map bundle from `cache` when
+    /// given. An invalid ρ comes back as `Err` for the service.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_cache(
+        spec: &FractalSpec,
+        r: u32,
+        rho: u32,
+        shards: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+        cache: Option<&MapCache>,
+    ) -> Result<PackedShardedSqueezeEngine, BlockError> {
+        let maps = match cache {
+            Some(c) => c.block_maps(spec, r, rho, None, workers)?,
+            None => Arc::new(BlockMaps::build(spec, r, rho, None, workers)?),
+        };
+        let geom = PackedGeom::new(&maps.block);
+        let part = ShardPartition::new(maps.block.blocks(), shards);
+        let plan = HaloPlan::build(&maps, &part);
+        let wpt = geom.words_per_tile;
+        // the packed exchange moves ρ·⌈ρ/64⌉ words per route
+        let halo_bytes_per_step =
+            plan.routes.len() as u64 * wpt * std::mem::size_of::<u64>() as u64;
+        let plan_table_bytes = plan.table_bytes();
+        let HaloPlan {
+            routes,
+            ghost_counts,
+            neighbors,
+            ..
+        } = plan;
+        let mut engines: Vec<PackedShardEngine> = neighbors
+            .into_iter()
+            .zip(&ghost_counts)
+            .map(|(tables, &nghost)| PackedShardEngine::new(nghost, tables, wpt))
+            .collect();
+        let stage: Vec<Vec<u64>> = ghost_counts
+            .iter()
+            .map(|&g| vec![0u64; (g * wpt) as usize])
+            .collect();
+        // Canonical seeding: compact linear index -> expanded -> global
+        // slot -> (owning shard, shard-local word/bit).
+        let tile = rho as u64 * rho as u64;
+        let full = &maps.full;
+        for idx in 0..full.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = maps
+                    .block
+                    .storage_index(e)
+                    .expect("fractal cell must have a slot");
+                let bidx = slot / tile;
+                let s = part.shard_of(bidx);
+                let local = (bidx - part.range(s).0) * tile + slot % tile;
+                let (w, bit) = geom.slot_to_word_bit(local);
+                engines[s].buf.cur[w as usize] |= 1u64 << bit;
+            }
+        }
+        Ok(PackedShardedSqueezeEngine {
+            maps,
+            geom,
+            part,
+            routes,
+            shards: engines,
+            stage,
+            rule,
+            workers,
+            halo_bytes_per_step,
+            plan_table_bytes,
+        })
+    }
+
+    /// Halo exchange over packed tiles: word copies along the same
+    /// static routes the byte engine uses, gather→scatter through
+    /// per-destination staging.
+    fn exchange(&mut self) {
+        let wpt = self.geom.words_per_tile as usize;
+        let stage = &mut self.stage;
+        let shards = &self.shards;
+        for r in &self.routes {
+            let from = r.src_block as usize * wpt;
+            let to = r.ghost_slot as usize * wpt;
+            stage[r.dst_shard][to..to + wpt]
+                .copy_from_slice(&shards[r.src_shard].buf.cur[from..from + wpt]);
+        }
+        for (shard, staged) in self.shards.iter_mut().zip(&self.stage) {
+            let ghost_base = (shard.nlocal as usize) * wpt;
+            shard.buf.cur[ghost_base..ghost_base + staged.len()].copy_from_slice(staged);
+        }
+    }
+
+    /// The shared map bundle (tests / capacity accounting).
+    pub fn maps(&self) -> &BlockMaps {
+        &self.maps
+    }
+
+    /// The packed tile geometry (tests / capacity accounting).
+    pub fn geom(&self) -> &PackedGeom {
+        &self.geom
+    }
+
+    /// The block partition this engine runs under.
+    pub fn partition(&self) -> &ShardPartition {
+        &self.part
+    }
+
+    /// Per-shard `(local_blocks, ghost_blocks)` (capacity accounting).
+    pub fn shard_sizes(&self) -> Vec<(u64, u64)> {
+        self.shards
+            .iter()
+            .map(|s| (s.local_blocks(), s.ghost_blocks()))
+            .collect()
+    }
+}
+
+impl Engine for PackedShardedSqueezeEngine {
+    fn name(&self) -> String {
+        format!(
+            "sharded-squeeze-bits-rho{}x{}",
+            self.maps.block.rho,
+            self.shards.len()
+        )
+    }
+
+    fn step(&mut self) {
+        // barrier 1: ghosts receive the previous step's committed state
+        self.exchange();
+        let rule = self.rule;
+        let geom = &self.geom;
+        let n = self.shards.len();
+        if n == 1 {
+            self.shards[0].step(geom, rule, self.workers);
+            return;
+        }
+        // same worker-budget distribution as the byte decomposition
+        let threads = self.workers.max(1).min(n);
+        if threads == 1 {
+            for shard in &mut self.shards {
+                shard.step(geom, rule, 1);
+            }
+            return;
+        }
+        let inner = (self.workers / n).max(1);
+        let group = n.div_ceil(threads);
+        // scope join is barrier 2 (no shard starts step t+1 early)
+        std::thread::scope(|scope| {
+            for shards in self.shards.chunks_mut(group) {
+                scope.spawn(move || {
+                    for shard in shards {
+                        shard.step(geom, rule, inner);
+                    }
+                });
+            }
+        });
+    }
+
+    fn cells(&self) -> u64 {
+        self.maps.full.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        let wpt = self.geom.words_per_tile;
+        self.shards.iter().map(|s| s.population(wpt)).sum()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        let state: u64 = self.shards.iter().map(|s| s.buf.bytes()).sum();
+        state + self.maps.table_bytes() + self.plan_table_bytes
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        let full = &self.maps.full;
+        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
+        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+        let slot = self.maps.block.storage_index(e).expect("fractal cell");
+        let bidx = slot / tile;
+        let s = self.part.shard_of(bidx);
+        let local = (bidx - self.part.range(s).0) * tile + slot % tile;
+        let (w, bit) = self.geom.slot_to_word_bit(local);
+        ((self.shards[s].buf.cur[w as usize] >> bit) & 1) as u8
+    }
+
+    fn shard_stats(&self) -> Option<ShardStats> {
+        Some(ShardStats {
+            shards: self.shards.len() as u32,
+            halo_bytes_per_step: self.halo_bytes_per_step,
+            imbalance: self.part.imbalance(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,7 +632,8 @@ mod tests {
             21,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         run_and_hash(&mut sq, steps)
     }
 
@@ -361,7 +653,8 @@ mod tests {
                 21,
                 4,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             assert_eq!(run_and_hash(&mut sh, steps), want, "shards={shards}");
         }
     }
@@ -382,7 +675,8 @@ mod tests {
                     21,
                     workers,
                     MapPath::Scalar,
-                );
+                )
+                .unwrap();
                 assert_eq!(
                     run_and_hash(&mut sh, steps),
                     want,
@@ -413,7 +707,8 @@ mod tests {
                 21,
                 3,
                 MapPath::Scalar,
-            );
+            )
+            .unwrap();
             // 81 blocks at r=5/ρ=2: the request clamps to ≤ 81 shards
             assert!(sh.shard_stats().unwrap().shards <= 81);
             assert_eq!(run_and_hash(&mut sh, steps), want, "shards={shards}");
@@ -432,7 +727,8 @@ mod tests {
             9,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         let sharded = ShardedSqueezeEngine::new(
             &spec,
             5,
@@ -443,7 +739,8 @@ mod tests {
             9,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         assert_eq!(sharded.cells(), single.cells());
         assert_eq!(sharded.population(), single.population());
         assert_eq!(sharded.state_hash(), single.state_hash());
@@ -465,7 +762,8 @@ mod tests {
             1,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         let stats = e.shard_stats().expect("sharded engine has stats");
         assert_eq!(stats.shards, 4);
         assert!(stats.halo_bytes_per_step > 0);
@@ -481,7 +779,8 @@ mod tests {
             1,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         assert_eq!(single.shard_stats().unwrap().halo_bytes_per_step, 0);
     }
 
@@ -498,7 +797,8 @@ mod tests {
             7,
             2,
             MapPath::Scalar,
-        );
+        )
+        .unwrap();
         let tile = 16u64;
         let local_cells: u64 = e.shard_sizes().iter().map(|(l, _)| l * tile).sum();
         assert_eq!(local_cells, e.maps().block.stored_cells());
@@ -529,7 +829,8 @@ mod tests {
             2,
             MapPath::Scalar,
             Some(&cache),
-        );
+        )
+        .unwrap();
         let b = ShardedSqueezeEngine::with_cache(
             &spec,
             4,
@@ -541,10 +842,158 @@ mod tests {
             2,
             MapPath::Scalar,
             Some(&cache),
-        );
+        )
+        .unwrap();
         // different shard counts, one interned adjacency
         assert!(Arc::ptr_eq(&a.maps, &b.maps));
         assert_eq!(cache.stats().misses, 1);
         assert_eq!(cache.stats().hits, 1);
+    }
+
+    #[test]
+    fn packed_sharded_matches_byte_single_engine_for_1_2_4_shards() {
+        let spec = catalog::sierpinski_triangle();
+        let (r, rho, steps) = (5, 2, 6);
+        let want = reference_hash(&spec, r, rho, steps);
+        for shards in [1u32, 2, 4] {
+            let mut sh = PackedShardedSqueezeEngine::new(
+                &spec,
+                r,
+                rho,
+                shards,
+                Rule::game_of_life(),
+                0.4,
+                21,
+                4,
+            )
+            .unwrap();
+            assert_eq!(run_and_hash(&mut sh, steps), want, "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn packed_sharded_matches_for_s3_fractals_and_any_worker_count() {
+        for spec in [catalog::vicsek(), catalog::sierpinski_carpet()] {
+            let (r, rho, steps) = (3, 3, 5);
+            let want = reference_hash(&spec, r, rho, steps);
+            for (shards, workers) in [(2u32, 1usize), (3, 2), (4, 8)] {
+                let mut sh = PackedShardedSqueezeEngine::new(
+                    &spec,
+                    r,
+                    rho,
+                    shards,
+                    Rule::game_of_life(),
+                    0.4,
+                    21,
+                    workers,
+                )
+                .unwrap();
+                assert_eq!(
+                    run_and_hash(&mut sh, steps),
+                    want,
+                    "{} shards={shards} workers={workers}",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sharded_seed_state_and_stats_match_packed_single() {
+        use crate::ca::bitkernel::PackedSqueezeBlockEngine;
+        let spec = catalog::sierpinski_triangle();
+        let single =
+            PackedSqueezeBlockEngine::new(&spec, 5, 4, Rule::game_of_life(), 0.5, 9, 2).unwrap();
+        let sharded =
+            PackedShardedSqueezeEngine::new(&spec, 5, 4, 3, Rule::game_of_life(), 0.5, 9, 2)
+                .unwrap();
+        assert_eq!(sharded.cells(), single.cells());
+        assert_eq!(sharded.population(), single.population());
+        assert_eq!(sharded.state_hash(), single.state_hash());
+        for idx in 0..sharded.cells() {
+            assert_eq!(sharded.cell(idx), single.cell(idx), "idx={idx}");
+        }
+        let stats = sharded.shard_stats().expect("packed sharded has stats");
+        assert_eq!(stats.shards, 3);
+        assert!(stats.halo_bytes_per_step > 0);
+        // packed halo traffic: whole packed tiles (ρ·⌈ρ/64⌉ words) per route
+        assert_eq!(stats.halo_bytes_per_step % (4 * 8), 0);
+        assert!(stats.imbalance >= 1.0);
+    }
+
+    #[test]
+    fn packed_local_state_bytes_sum_to_the_packed_single_buffer() {
+        let spec = catalog::sierpinski_triangle();
+        let e = PackedShardedSqueezeEngine::new(&spec, 6, 4, 4, Rule::game_of_life(), 0.4, 7, 2)
+            .unwrap();
+        let wpt = e.geom().words_per_tile;
+        let local_words: u64 = e.shard_sizes().iter().map(|(l, _)| l * wpt).sum();
+        // local packed bytes (one buffer) sum exactly to the packed
+        // single-engine buffer — the 1-bit analogue of the byte invariant
+        assert_eq!(
+            local_words * 8,
+            crate::memory::packed_squeeze_bytes(&spec, 6, 4).unwrap()
+        );
+        let state: u64 = e.shard_sizes().iter().map(|(l, g)| 2 * (l + g) * wpt * 8).sum();
+        assert_eq!(
+            e.memory_bytes(),
+            state + e.maps().table_bytes() + e.plan_table_bytes
+        );
+    }
+
+    #[test]
+    fn packed_sharded_many_more_shards_than_workers_stays_correct() {
+        let spec = catalog::sierpinski_triangle();
+        let (r, rho, steps) = (5, 2, 6);
+        let want = reference_hash(&spec, r, rho, steps);
+        let mut sh = PackedShardedSqueezeEngine::new(
+            &spec,
+            r,
+            rho,
+            1_000_000,
+            Rule::game_of_life(),
+            0.4,
+            21,
+            3,
+        )
+        .unwrap();
+        assert!(sh.shard_stats().unwrap().shards <= 81);
+        assert_eq!(run_and_hash(&mut sh, steps), want);
+    }
+
+    #[test]
+    fn cached_packed_sharded_shares_the_byte_engines_bundle() {
+        let spec = catalog::vicsek();
+        let cache = MapCache::new();
+        let byte = ShardedSqueezeEngine::with_cache(
+            &spec,
+            4,
+            3,
+            2,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        )
+        .unwrap();
+        let packed = PackedShardedSqueezeEngine::with_cache(
+            &spec,
+            4,
+            3,
+            2,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            Some(&cache),
+        )
+        .unwrap();
+        assert!(Arc::ptr_eq(&byte.maps, &packed.maps));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+        // identical canonical state through both layouts
+        assert_eq!(byte.state_hash(), packed.state_hash());
     }
 }

@@ -18,7 +18,9 @@ pub mod engine;
 pub mod partition;
 pub mod plan;
 
-pub use engine::{ShardEngine, ShardedSqueezeEngine};
+pub use engine::{
+    PackedShardEngine, PackedShardedSqueezeEngine, ShardEngine, ShardedSqueezeEngine,
+};
 pub use partition::ShardPartition;
 pub use plan::{HaloPlan, HaloRoute};
 

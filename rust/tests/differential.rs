@@ -5,12 +5,14 @@
 //! `ca::engine`), so for every catalog fractal and every rule in the
 //! matrix below, the expanded BB reference, the thread-level Squeeze
 //! engine, the block-level Squeeze engine (serial and parallel, cached
-//! and uncached, scalar and tensor-path), and the halo-exchanged
-//! sharded decomposition (1, 2, and 4 shards) must produce identical
+//! and uncached, scalar and tensor-path), the halo-exchanged sharded
+//! decomposition (1, 2, and 4 shards), and the bit-planar
+//! `squeeze-bits` backends (serial/parallel × cached/uncached, plus
+//! sharded-packed at 1/2/4 shards) must produce identical
 //! `state_hash()` after *every* step — not just at the end. A divergence
 //! at step `t` localizes a bug to one transition, which is what makes
-//! this suite the oracle the cache/parallelism/sharding refactors are
-//! tested against.
+//! this suite the oracle the cache/parallelism/sharding/bit-packing
+//! refactors are tested against.
 
 use squeeze::ca::{build_with_cache, Engine, EngineConfig, EngineKind, Rule};
 use squeeze::fractal::catalog;
@@ -54,11 +56,11 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
             let mut engines = vec![
                 (
                     "bb",
-                    build_with_cache(&spec, &cfg(EngineKind::Bb, 2), None),
+                    build_with_cache(&spec, &cfg(EngineKind::Bb, 2), None).unwrap(),
                 ),
                 (
                     "lambda",
-                    build_with_cache(&spec, &cfg(EngineKind::Lambda, 2), Some(&cache)),
+                    build_with_cache(&spec, &cfg(EngineKind::Lambda, 2), Some(&cache)).unwrap(),
                 ),
                 (
                     "squeeze-thread",
@@ -66,7 +68,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::Squeeze { rho: 1, tensor: false }, 2),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "squeeze-block-serial",
@@ -74,7 +77,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::Squeeze { rho, tensor: false }, 1),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "squeeze-block-parallel",
@@ -82,7 +86,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::Squeeze { rho, tensor: false }, 4),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "squeeze-block-parallel-uncached",
@@ -90,7 +95,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::Squeeze { rho, tensor: false }, 4),
                         None,
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "squeeze-block-rho2-parallel",
@@ -98,7 +104,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::Squeeze { rho: rho2, tensor: false }, 4),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "sharded-squeeze-1",
@@ -106,7 +113,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::ShardedSqueeze { rho, shards: 1 }, 2),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "sharded-squeeze-2",
@@ -114,7 +122,8 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::ShardedSqueeze { rho, shards: 2 }, 4),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
                 ),
                 (
                     "sharded-squeeze-4",
@@ -122,7 +131,67 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                         &spec,
                         &cfg(EngineKind::ShardedSqueeze { rho, shards: 4 }, 4),
                         Some(&cache),
-                    ),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "squeeze-bits-serial",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedSqueeze { rho }, 1),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "squeeze-bits-parallel",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedSqueeze { rho }, 4),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "squeeze-bits-parallel-uncached",
+                    build_with_cache(&spec, &cfg(EngineKind::PackedSqueeze { rho }, 4), None)
+                        .unwrap(),
+                ),
+                (
+                    "squeeze-bits-rho2-parallel",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedSqueeze { rho: rho2 }, 4),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "sharded-squeeze-bits-1",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedShardedSqueeze { rho, shards: 1 }, 2),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "sharded-squeeze-bits-2",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedShardedSqueeze { rho, shards: 2 }, 4),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "sharded-squeeze-bits-4",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedShardedSqueeze { rho, shards: 4 }, 4),
+                        Some(&cache),
+                    )
+                    .unwrap(),
                 ),
             ];
             let seed_hash = engines[0].1.state_hash();
@@ -170,8 +239,8 @@ fn tensor_path_engines_agree_with_scalar_inside_fp16_envelope() {
             seed: 99,
             workers: 2,
         };
-        let mut scalar = build_with_cache(&spec, &cfg(false), Some(&cache));
-        let mut tensor = build_with_cache(&spec, &cfg(true), Some(&cache));
+        let mut scalar = build_with_cache(&spec, &cfg(false), Some(&cache)).unwrap();
+        let mut tensor = build_with_cache(&spec, &cfg(true), Some(&cache)).unwrap();
         for step in 1..=8 {
             scalar.step();
             tensor.step();
@@ -199,6 +268,8 @@ fn long_run_agreement_on_the_paper_headline_fractal() {
         EngineKind::Squeeze { rho: 8, tensor: false },
         EngineKind::Squeeze { rho: 8, tensor: true },
         EngineKind::ShardedSqueeze { rho: 8, shards: 4 },
+        EngineKind::PackedSqueeze { rho: 8 },
+        EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 },
     ];
     let mut hashes = Vec::new();
     for kind in kinds {
@@ -213,7 +284,8 @@ fn long_run_agreement_on_the_paper_headline_fractal() {
                 workers: 3,
             },
             Some(&cache),
-        );
+        )
+        .unwrap();
         for _ in 0..30 {
             e.step();
         }

@@ -58,6 +58,34 @@ fn memory_ordering_matches_paper_p2() {
 }
 
 #[test]
+fn packed_backend_agrees_and_undercuts_byte_memory() {
+    let r = 10;
+    let byte = execute_job(&job(EngineKind::Squeeze { rho: 16, tensor: false }, r, 3)).unwrap();
+    let packed = execute_job(&job(EngineKind::PackedSqueeze { rho: 16 }, r, 3)).unwrap();
+    let packed_sharded =
+        execute_job(&job(EngineKind::PackedShardedSqueeze { rho: 16, shards: 4 }, r, 3)).unwrap();
+    assert_eq!(byte.state_hash, packed.state_hash);
+    assert_eq!(byte.state_hash, packed_sharded.state_hash);
+    assert_eq!(byte.population, packed.population);
+    // 1-bit cells: at ρ=16 the packed state is half the byte state
+    assert!(
+        packed.memory_bytes < byte.memory_bytes,
+        "packed {} vs byte {}",
+        packed.memory_bytes,
+        byte.memory_bytes
+    );
+    // measured engine (2 packed buffers + the shared adjacency) matches
+    // the accounting model to within table overhead
+    let spec = catalog::sierpinski_triangle();
+    let model = 2 * memory::packed_squeeze_bytes(&spec, r, 16).unwrap();
+    assert!(
+        packed.memory_bytes >= model && packed.memory_bytes <= model + model / 2,
+        "packed engine memory {} vs model {model}",
+        packed.memory_bytes
+    );
+}
+
+#[test]
 fn scheduler_handles_a_mixed_batch() {
     let sched = Scheduler::start(3);
     for (i, kind) in [

@@ -100,7 +100,8 @@ fn step_populations_match_python_golden() {
             seed: 42,
             workers: 2,
         },
-    );
+    )
+    .expect("valid engine config");
     assert_eq!(engine.population(), rows[0][1] as u64, "seed state");
     for row in &rows[1..] {
         engine.step();

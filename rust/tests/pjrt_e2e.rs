@@ -51,7 +51,8 @@ fn squeeze_artifact_matches_native_engine() {
             seed: 42,
             workers: 2,
         },
-    );
+    )
+    .expect("valid engine config");
     for _ in 0..5 {
         engine.step();
     }
@@ -104,7 +105,8 @@ fn bb_artifact_matches_native_bb() {
             seed: 42,
             workers: 2,
         },
-    );
+    )
+    .expect("valid engine config");
     for _ in 0..4 {
         engine.step();
     }
@@ -157,7 +159,8 @@ fn vicsek_artifact_cross_fractal() {
             seed: 42,
             workers: 2,
         },
-    );
+    )
+    .expect("valid engine config");
     for _ in 0..3 {
         engine.step();
     }

@@ -239,6 +239,8 @@ fn prop_engines_agree_after_random_runs() {
             EngineKind::Lambda,
             EngineKind::Squeeze { rho: 1, tensor: false },
             EngineKind::Squeeze { rho, tensor: false },
+            EngineKind::PackedSqueeze { rho },
+            EngineKind::PackedShardedSqueeze { rho, shards: 3 },
         ] {
             let mut e = build(
                 spec,
@@ -250,7 +252,8 @@ fn prop_engines_agree_after_random_runs() {
                     seed,
                     workers: 2,
                 },
-            );
+            )
+            .expect("valid engine config");
             for _ in 0..steps {
                 e.step();
             }
@@ -286,7 +289,8 @@ fn prop_population_conserved_under_still_life_rule() {
                 seed: g.u64(0, 1 << 40),
                 workers: 1,
             },
-        );
+        )
+        .expect("valid engine config");
         let before = e.population();
         e.step();
         e.step();

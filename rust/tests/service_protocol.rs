@@ -132,6 +132,48 @@ fn shards_key_equals_explicit_sharded_engine_and_single_engine() {
 }
 
 #[test]
+fn packed_engines_match_byte_engines_through_the_service() {
+    // squeeze-bits:<rho>, the packed= promotion key, and the packed
+    // sharded decomposition must all hash identical to the byte engine
+    let out = run_session(
+        "engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         engine=squeeze-bits:4 r=5 steps=3 workers=2 seed=9\n\
+         engine=squeeze:4 packed=1 r=5 steps=3 workers=2 seed=9\n\
+         engine=squeeze-bits:4:3 r=5 steps=3 workers=2 seed=9\n\
+         packed=1 shards=3 engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         quit\n",
+    );
+    assert!(!out.contains("ERR"), "{out}");
+    let rows = data_lines(&out);
+    assert_eq!(rows.len(), 5, "{out}");
+    let byte = hash_of(&rows, "1");
+    for id in ["2", "3", "4", "5"] {
+        assert_eq!(byte, hash_of(&rows, id), "job {id} diverged: {out}");
+    }
+    // the packed engine advertises its backend in the engine column
+    assert!(out.contains("squeeze-bits-rho4"), "{out}");
+    assert!(out.contains("sharded-squeeze-bits-rho4x3"), "{out}");
+}
+
+#[test]
+fn packed_semantic_errors_are_err_lines() {
+    let out = run_session(
+        "engine=squeeze-bits:3 r=5 steps=1 workers=1\n\
+         engine=squeeze-bits:16:2 r=2 steps=1 workers=1\n\
+         engine=bb packed=1 r=4 steps=1 workers=1\n\
+         engine=squeeze-bits:4 r=5 steps=1 workers=1\n\
+         quit\n",
+    );
+    let errs: Vec<&str> = out.lines().filter(|l| l.starts_with("ERR")).collect();
+    assert_eq!(errs.len(), 3, "{out}");
+    assert!(errs.iter().any(|e| e.contains("rho=3")), "{out}");
+    assert!(errs.iter().any(|e| e.contains("rho=16")), "{out}");
+    assert!(errs.iter().any(|e| e.contains("packed=")), "{out}");
+    // the session survived to run the valid packed job
+    assert_eq!(data_lines(&out).len(), 1, "{out}");
+}
+
+#[test]
 fn sharded_squeeze_matches_single_engine_on_every_catalog_fractal() {
     // the differential case, end to end through the service: for every
     // catalog fractal, sharded (2 and 4 shards) step hashes must be
