@@ -46,6 +46,7 @@ fn main() {
             density: 0.35,
             seed: 7,
             workers: squeeze::util::pool::default_workers(),
+            ..Default::default()
         },
     )
     .expect("valid engine config");

@@ -24,6 +24,7 @@ fn main() {
             density: 0.4,
             seed: 42,
             workers: squeeze::util::pool::default_workers(),
+            ..Default::default()
         },
     )
     .expect("valid engine config");

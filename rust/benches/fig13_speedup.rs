@@ -17,14 +17,14 @@
 //!     cargo bench --bench fig13_speedup
 
 use squeeze::ca::bb::BbEngine;
-use squeeze::ca::bitkernel::PackedSqueezeBlockEngine;
 use squeeze::ca::engine::run_and_hash;
-use squeeze::ca::squeeze_block::SqueezeBlockEngine;
-use squeeze::ca::{Engine, EngineKind, MapPath, Rule};
+use squeeze::ca::{
+    ByteBackend, Engine, EngineKind, MapPath, PackedSqueezeBlockEngine, Rule, SqueezeBlockEngine,
+};
 use squeeze::fractal::catalog;
 use squeeze::harness::{bench, figures, results_dir, speedups_vs_bb, BenchOpts, SweepPoint};
 use squeeze::maps::MapCache;
-use squeeze::shard::ShardedSqueezeEngine;
+use squeeze::shard::{PackedShardedSqueezeEngine, ShardedSqueezeEngine};
 
 /// One claim verdict for the JSON report.
 struct Claim {
@@ -191,6 +191,8 @@ fn main() {
             "sharded_matches_bb",
             "packed_at_least_as_fast_as_bytes",
             "packed_matches_bb",
+            "overlap_compaction_holds_packed_pace",
+            "overlap_compaction_matches_bb",
         ] {
             claims.push(Claim {
                 name,
@@ -262,7 +264,7 @@ fn main() {
     // and must stay bit-identical to the BB reference.
     let nshards = workers.max(2) as u32;
     let mk_sharded = || {
-        ShardedSqueezeEngine::with_cache(
+        ShardedSqueezeEngine::<ByteBackend>::with_cache(
             &spec,
             r_big,
             16,
@@ -319,6 +321,7 @@ fn main() {
             0.4,
             42,
             workers.max(2),
+            MapPath::Scalar,
             Some(&cache),
         )
         .expect("rho=16 is valid at r>=10")
@@ -349,6 +352,60 @@ fn main() {
         name: "packed_matches_bb",
         verdict: if packed_hash == bb_hash { "pass" } else { "fail" },
         detail: format!("bb {bb_hash:#018x} vs packed {packed_hash:#018x} after 4 steps"),
+    });
+
+    // Claim 6 (unified engine stack): the sharded packed engine with its
+    // default interior/exchange overlap + rim-compacted halos must hold
+    // the PR 3 single-engine packed pace at the largest level — the
+    // decomposition's exchange cost has to disappear behind the interior
+    // sweeps — while hashing identical to BB.
+    let mk_overlap = || {
+        PackedShardedSqueezeEngine::with_cache(
+            &spec,
+            r_big,
+            16,
+            nshards,
+            rule,
+            0.4,
+            42,
+            workers.max(2),
+            MapPath::Scalar,
+            Some(&cache),
+        )
+        .expect("rho=16 is valid at r>=10")
+    };
+    let mut overlap = mk_overlap();
+    let overlap_s = bench(&opts, || overlap.step()).mean;
+    let ostats = overlap.shard_stats().expect("sharded engine reports stats");
+    println!(
+        "sharded-squeeze-bits:16:{} (overlap+compaction) r={r_big}: {overlap_s:.3e}s/step vs \
+         packed single {packed_s:.3e}s/step ({:.2}x), halo {}B/step ({:.0}% of whole tiles)",
+        ostats.shards,
+        packed_s / overlap_s,
+        ostats.halo_bytes_per_step,
+        ostats.compaction_ratio() * 100.0,
+    );
+    claims.push(Claim {
+        name: "overlap_compaction_holds_packed_pace",
+        verdict: if overlap_s <= packed_s * 1.25 {
+            // same measurement slack as claims 2 and 4
+            "pass"
+        } else {
+            "fail"
+        },
+        detail: format!(
+            "sharded packed (overlap+compaction) {overlap_s:.3e}s vs packed single \
+             {packed_s:.3e}s at r={r_big}, compaction {:.2}",
+            ostats.compaction_ratio()
+        ),
+    });
+    let mut fresh_overlap = mk_overlap();
+    let overlap_hash = run_and_hash(&mut fresh_overlap, 4);
+    hashes.push((format!("sharded-squeeze-bits-16-{nshards}"), overlap_hash));
+    claims.push(Claim {
+        name: "overlap_compaction_matches_bb",
+        verdict: if overlap_hash == bb_hash { "pass" } else { "fail" },
+        detail: format!("bb {bb_hash:#018x} vs overlap {overlap_hash:#018x} after 4 steps"),
     });
 
     write_json(r_max, workers, &pts, &hashes, &claims);

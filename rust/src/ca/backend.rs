@@ -1,0 +1,693 @@
+//! The state-backend seam: one trait abstracting how a `ρ×ρ` tile is
+//! stored and transitioned, implemented by the byte-per-cell layout
+//! ([`ByteBackend`]) and the bit-planar word layout ([`PackedBackend`],
+//! the geometry type of `ca::bitkernel`).
+//!
+//! Everything above this trait is backend-agnostic: the single block
+//! engine (`ca::squeeze_block::SqueezeEngine<B>`) and the sharded
+//! orchestrator (`shard::ShardedSqueezeEngine<B>`) are generic over it,
+//! so there is exactly one worker-budget split, one staging layout and
+//! one gather→scatter halo exchange in the crate, parameterized on
+//! units-per-tile. The trait speaks two index spaces:
+//!
+//! - **cell slots** — `block·ρ² + iy·ρ + ix`, the space `BlockCtx` and
+//!   the cached `BlockMaps` adjacency (and the shard-remapped
+//!   `local ++ ghost` tables) use. Neighbor tables always hold cell
+//!   slots; backends convert to their unit layout internally, which is
+//!   what lets the byte and packed decompositions share one halo plan.
+//! - **units** — the backend's storage granularity (`u8` cells, `u64`
+//!   words), the space buffers and staging are sized in.
+//!
+//! Rim compaction lives here too: a [`RimSegs`] describes which rows /
+//! columns / corner cells of a boundary tile its readers' ghost rings
+//! actually consume, and `pack_rim`/`unpack_rim` move exactly that
+//! payload — full rows as unit copies, columns and corners bit- (or
+//! byte-) gathered — with `rim_units` giving the exact staging footprint
+//! for byte accounting.
+
+use super::bitkernel::{sweep_block_packed, PackedGeom, WORD_BITS};
+use super::rule::Rule;
+use super::squeeze::MapPath;
+use crate::fractal::MOORE;
+use crate::maps::block::BlockCtx;
+use crate::maps::cache::NO_BLOCK;
+use crate::tcu::MmaMode;
+
+/// Back-buffer pointer handed to sweep workers (disjoint per-tile unit
+/// ranges). Shared by the single and sharded step loops.
+pub struct UnitPtr<U>(pub *mut U);
+impl<U> Clone for UnitPtr<U> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<U> Copy for UnitPtr<U> {}
+unsafe impl<U> Send for UnitPtr<U> {}
+unsafe impl<U> Sync for UnitPtr<U> {}
+
+/// The rim of a tile that a halo route actually ships: full rows, column
+/// segments (excluding cells already covered by shipped rows), and
+/// leftover corner cells. Canonical (deterministic) for a given
+/// direction set, so both endpoints of a route agree on the payload
+/// layout without negotiation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RimSegs {
+    /// Block side ρ.
+    pub rho: u32,
+    /// Full rows shipped, ascending `y`.
+    pub rows: Vec<u32>,
+    /// Column segments `(x, y0, y1)` (half-open `y` range), ascending
+    /// `x`; rows already in `rows` are excluded, which keeps the range
+    /// contiguous because only `y = 0` and `y = ρ−1` can ever be rows.
+    pub cols: Vec<(u32, u32, u32)>,
+    /// Leftover single cells (corners not covered above), ascending
+    /// `(y, x)`.
+    pub cells: Vec<(u32, u32)>,
+}
+
+impl RimSegs {
+    /// The rim consumed by readers holding this tile in the Moore
+    /// directions of `dirs` (bit `m` set ⇔ some reader sees the tile as
+    /// its `MOORE[m]` neighbor). A reader in direction `(dx, dy)` reads
+    /// the tile's facing edge: `x = ρ−1` when `dx = −1`, `x = 0` when
+    /// `dx = 1`, all `x` otherwise — and symmetrically in `y`.
+    pub fn from_dirs(rho: u32, dirs: u8) -> RimSegs {
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut corner_cells = Vec::new();
+        let hi = rho - 1;
+        for (m, &(dx, dy)) in MOORE.iter().enumerate() {
+            if (dirs >> m) & 1 == 0 {
+                continue;
+            }
+            match (dx, dy) {
+                (0, -1) => push_sorted(&mut rows, hi),
+                (0, 1) => push_sorted(&mut rows, 0),
+                (-1, 0) => push_sorted(&mut cols, hi),
+                (1, 0) => push_sorted(&mut cols, 0),
+                (dx, dy) => {
+                    let x = if dx < 0 { hi } else { 0 };
+                    let y = if dy < 0 { hi } else { 0 };
+                    corner_cells.push((x, y));
+                }
+            }
+        }
+        let y0 = if rows.contains(&0) { 1 } else { 0 };
+        let y1 = if rows.contains(&hi) { hi } else { rho };
+        let col_segs: Vec<(u32, u32, u32)> = if y1 > y0 {
+            cols.iter().map(|&x| (x, y0, y1)).collect()
+        } else {
+            Vec::new()
+        };
+        let mut cells: Vec<(u32, u32)> = corner_cells
+            .into_iter()
+            .filter(|&(x, y)| !rows.contains(&y) && !cols.contains(&x))
+            .collect();
+        cells.sort_by_key(|&(x, y)| (y, x));
+        cells.dedup();
+        RimSegs {
+            rho,
+            rows,
+            cols: col_segs,
+            cells,
+        }
+    }
+
+    /// The whole tile as a rim (compaction off): every row shipped.
+    pub fn full_tile(rho: u32) -> RimSegs {
+        RimSegs {
+            rho,
+            rows: (0..rho).collect(),
+            cols: Vec::new(),
+            cells: Vec::new(),
+        }
+    }
+
+    /// Cells the rim covers (each exactly once).
+    pub fn cell_count(&self) -> u64 {
+        self.rows.len() as u64 * self.rho as u64
+            + self.cols.iter().map(|&(_, y0, y1)| (y1 - y0) as u64).sum::<u64>()
+            + self.cells.len() as u64
+    }
+}
+
+fn push_sorted(v: &mut Vec<u32>, x: u32) {
+    if let Err(i) = v.binary_search(&x) {
+        v.insert(i, x);
+    }
+}
+
+/// How a backend stores and transitions `ρ×ρ` tiles. See the module
+/// docs for the cell-slot / unit index-space contract.
+pub trait StateBackend: Send + Sync + Sized + 'static {
+    /// Storage unit: `u8` (one cell) or `u64` (64 bit-planar cells).
+    type Unit: Copy + Default + PartialEq + Send + Sync + std::fmt::Debug;
+
+    /// Derive the per-tile geometry from the shared block context.
+    fn new(block: &BlockCtx) -> Self;
+
+    /// Engine-name stem under the given map path (`"squeeze"`,
+    /// `"squeeze-tcu"`, `"squeeze-bits"`, …).
+    fn base_name(path: MapPath) -> &'static str;
+
+    /// The map-evaluation mode used to build this backend's adjacency.
+    /// The packed backend always answers `None` (scalar): it shares the
+    /// byte engines' cache entry instead of building a twin table.
+    fn mma_mode(path: MapPath) -> Option<MmaMode>;
+
+    /// Storage units per `ρ×ρ` tile.
+    fn units_per_tile(&self) -> u64;
+
+    /// Convert a tile's cell-slot base (`block·ρ²`) to its unit base.
+    fn unit_base(&self, cell_base: u64) -> u64;
+
+    /// Transition one tile: read `cur` (unit-indexed), write the tile's
+    /// `units_per_tile()` units at `unit_base(cell_base)` through `out`.
+    /// `nb` holds the 8 Moore neighbor tile base slots in *cell* units
+    /// ([`NO_BLOCK`] = absent).
+    ///
+    /// Safety: `out` must be valid for the tile's unit range and no
+    /// other concurrent writer may target it.
+    fn sweep_tile(
+        &self,
+        cur: &[Self::Unit],
+        out: UnitPtr<Self::Unit>,
+        nb: &[u64; 8],
+        cell_base: u64,
+        rule: Rule,
+    );
+
+    /// Set the cell at cell slot `slot` alive in `buf`.
+    fn set_cell(&self, buf: &mut [Self::Unit], slot: u64);
+
+    /// Read the cell at cell slot `slot` (0 or 1).
+    fn get_cell(&self, buf: &[Self::Unit], slot: u64) -> u8;
+
+    /// Live cells over `units`.
+    fn population(units: &[Self::Unit]) -> u64;
+
+    /// Units a rim payload occupies in staging — the exact per-route
+    /// halo traffic under compaction.
+    fn rim_units(&self, segs: &RimSegs) -> u64;
+
+    /// Gather the rim of the tile at `tile_base` (a unit index into
+    /// `cur`) into `out` (`rim_units(segs)` long).
+    fn pack_rim(&self, cur: &[Self::Unit], tile_base: u64, segs: &RimSegs, out: &mut [Self::Unit]);
+
+    /// Scatter a staged rim into the tile at `tile_base` (a unit index
+    /// into `dst`). Exact inverse of [`StateBackend::pack_rim`] on the
+    /// rim's cells; units of the tile outside the rim keep their prior
+    /// contents (readers never consume them, by construction of the
+    /// rim).
+    fn unpack_rim(
+        &self,
+        staged: &[Self::Unit],
+        dst: &mut [Self::Unit],
+        tile_base: u64,
+        segs: &RimSegs,
+    );
+}
+
+/// Byte-per-cell tile storage — the layout every pre-backend engine
+/// used. Units are cells, so unit and cell index spaces coincide.
+#[derive(Clone, Debug)]
+pub struct ByteBackend {
+    /// Block side ρ.
+    pub rho: u32,
+    /// ρ×ρ membership mask of the micro-fractal (row-major), cloned from
+    /// the shared `BlockCtx` so sweep workers don't chase the maps Arc.
+    micro_mask: Vec<u8>,
+}
+
+impl StateBackend for ByteBackend {
+    type Unit = u8;
+
+    fn new(block: &BlockCtx) -> ByteBackend {
+        ByteBackend {
+            rho: block.rho,
+            micro_mask: block.micro_mask.clone(),
+        }
+    }
+
+    fn base_name(path: MapPath) -> &'static str {
+        match path {
+            MapPath::Scalar => "squeeze",
+            MapPath::Tensor(MmaMode::Fp16) => "squeeze-tcu",
+            MapPath::Tensor(MmaMode::F32) => "squeeze-tcu-f32",
+        }
+    }
+
+    fn mma_mode(path: MapPath) -> Option<MmaMode> {
+        match path {
+            MapPath::Scalar => None,
+            MapPath::Tensor(mode) => Some(mode),
+        }
+    }
+
+    fn units_per_tile(&self) -> u64 {
+        self.rho as u64 * self.rho as u64
+    }
+
+    #[inline(always)]
+    fn unit_base(&self, cell_base: u64) -> u64 {
+        cell_base
+    }
+
+    fn sweep_tile(&self, cur: &[u8], out: UnitPtr<u8>, nb: &[u64; 8], base: u64, rule: Rule) {
+        let rho = self.rho;
+        let p = out;
+        // §Perf iteration 3: interior cells (all of whose Moore neighbors
+        // stay inside this tile) take a branch-free direct-indexing path —
+        // at ρ=16 that is (ρ-2)²/ρ² ≈ 77% of the tile. Only the 4ρ-4 rim
+        // cells pay the wrap/neighbor-block logic.
+        let interior =
+            |ix: u32, iy: u32| -> bool { ix >= 1 && iy >= 1 && ix + 1 < rho && iy + 1 < rho };
+        for iy in 0..rho {
+            for ix in 0..rho {
+                let intra = (iy * rho + ix) as u64;
+                let slot = base + intra;
+                // holes of the micro-tile stay dead
+                if self.micro_mask[intra as usize] == 0 {
+                    unsafe { p.0.add(slot as usize).write(0) };
+                    continue;
+                }
+                let count = if interior(ix, iy) {
+                    let i = (base + intra) as usize;
+                    let rs = rho as usize;
+                    // row above, same row, row below — direct sums
+                    cur[i - rs - 1] as u32
+                        + cur[i - rs] as u32
+                        + cur[i - rs + 1] as u32
+                        + cur[i - 1] as u32
+                        + cur[i + 1] as u32
+                        + cur[i + rs - 1] as u32
+                        + cur[i + rs] as u32
+                        + cur[i + rs + 1] as u32
+                } else {
+                    let mut count = 0u32;
+                    for (dx, dy) in MOORE {
+                        let jx = ix as i64 + dx as i64;
+                        let jy = iy as i64 + dy as i64;
+                        // which block does the neighbor land in?
+                        let (bx, wrapped_x) = wrap(jx, rho);
+                        let (by, wrapped_y) = wrap(jy, rho);
+                        let nslot = if bx == 0 && by == 0 {
+                            base + (wrapped_y * rho + wrapped_x) as u64
+                        } else {
+                            // (bx,by) ∈ {-1,0,1}² -> Moore slot, resolved
+                            // from the cached adjacency
+                            let nbase = nb[moore_index(bx, by)];
+                            if nbase == NO_BLOCK {
+                                continue;
+                            }
+                            nbase + (wrapped_y * rho + wrapped_x) as u64
+                        };
+                        count += cur[nslot as usize] as u32;
+                    }
+                    count
+                };
+                let v = rule.next_u8(cur[slot as usize], count);
+                unsafe { p.0.add(slot as usize).write(v) };
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn set_cell(&self, buf: &mut [u8], slot: u64) {
+        buf[slot as usize] = 1;
+    }
+
+    #[inline(always)]
+    fn get_cell(&self, buf: &[u8], slot: u64) -> u8 {
+        buf[slot as usize]
+    }
+
+    fn population(units: &[u8]) -> u64 {
+        units.iter().map(|&b| b as u64).sum()
+    }
+
+    fn rim_units(&self, segs: &RimSegs) -> u64 {
+        segs.cell_count()
+    }
+
+    fn pack_rim(&self, cur: &[u8], tile_base: u64, segs: &RimSegs, out: &mut [u8]) {
+        let rho = self.rho as u64;
+        let mut k = 0usize;
+        for &y in &segs.rows {
+            let from = (tile_base + y as u64 * rho) as usize;
+            out[k..k + rho as usize].copy_from_slice(&cur[from..from + rho as usize]);
+            k += rho as usize;
+        }
+        for &(x, y0, y1) in &segs.cols {
+            for y in y0..y1 {
+                out[k] = cur[(tile_base + y as u64 * rho + x as u64) as usize];
+                k += 1;
+            }
+        }
+        for &(x, y) in &segs.cells {
+            out[k] = cur[(tile_base + y as u64 * rho + x as u64) as usize];
+            k += 1;
+        }
+    }
+
+    fn unpack_rim(&self, staged: &[u8], dst: &mut [u8], tile_base: u64, segs: &RimSegs) {
+        let rho = self.rho as u64;
+        let mut k = 0usize;
+        for &y in &segs.rows {
+            let to = (tile_base + y as u64 * rho) as usize;
+            dst[to..to + rho as usize].copy_from_slice(&staged[k..k + rho as usize]);
+            k += rho as usize;
+        }
+        for &(x, y0, y1) in &segs.cols {
+            for y in y0..y1 {
+                dst[(tile_base + y as u64 * rho + x as u64) as usize] = staged[k];
+                k += 1;
+            }
+        }
+        for &(x, y) in &segs.cells {
+            dst[(tile_base + y as u64 * rho + x as u64) as usize] = staged[k];
+            k += 1;
+        }
+    }
+}
+
+/// Bit-planar tile storage: the packed word geometry *is* the backend.
+pub type PackedBackend = PackedGeom;
+
+impl StateBackend for PackedGeom {
+    type Unit = u64;
+
+    fn new(block: &BlockCtx) -> PackedGeom {
+        PackedGeom::new(block)
+    }
+
+    fn base_name(_path: MapPath) -> &'static str {
+        "squeeze-bits"
+    }
+
+    fn mma_mode(_path: MapPath) -> Option<MmaMode> {
+        // always the scalar-built adjacency: shares the byte engines'
+        // cache entry under the same (fractal, r, ρ, scalar) key
+        None
+    }
+
+    fn units_per_tile(&self) -> u64 {
+        self.words_per_tile
+    }
+
+    #[inline(always)]
+    fn unit_base(&self, cell_base: u64) -> u64 {
+        cell_base / (self.rho as u64 * self.rho as u64) * self.words_per_tile
+    }
+
+    fn sweep_tile(&self, cur: &[u64], out: UnitPtr<u64>, nb: &[u64; 8], cell_base: u64, rule: Rule) {
+        sweep_block_packed(cur, out, self, nb, self.unit_base(cell_base), rule);
+    }
+
+    #[inline(always)]
+    fn set_cell(&self, buf: &mut [u64], slot: u64) {
+        let (w, bit) = self.slot_to_word_bit(slot);
+        buf[w as usize] |= 1u64 << bit;
+    }
+
+    #[inline(always)]
+    fn get_cell(&self, buf: &[u64], slot: u64) -> u8 {
+        let (w, bit) = self.slot_to_word_bit(slot);
+        ((buf[w as usize] >> bit) & 1) as u8
+    }
+
+    fn population(units: &[u64]) -> u64 {
+        units.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    fn rim_units(&self, segs: &RimSegs) -> u64 {
+        // rows ship their words verbatim; column runs and leftover
+        // corner cells are bit-gathered, one bit per cell
+        let col_words: u64 = segs
+            .cols
+            .iter()
+            .map(|&(_, y0, y1)| ((y1 - y0) as u64).div_ceil(WORD_BITS as u64))
+            .sum();
+        let cell_words = (segs.cells.len() as u64).div_ceil(WORD_BITS as u64);
+        segs.rows.len() as u64 * self.wpr as u64 + col_words + cell_words
+    }
+
+    fn pack_rim(&self, cur: &[u64], tile_base: u64, segs: &RimSegs, out: &mut [u64]) {
+        let wpr = self.wpr as u64;
+        let mut k = 0usize;
+        for &y in &segs.rows {
+            let from = (tile_base + y as u64 * wpr) as usize;
+            out[k..k + wpr as usize].copy_from_slice(&cur[from..from + wpr as usize]);
+            k += wpr as usize;
+        }
+        for &(x, y0, y1) in &segs.cols {
+            let words = ((y1 - y0) as u64).div_ceil(WORD_BITS as u64) as usize;
+            out[k..k + words].fill(0);
+            let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
+            for (i, y) in (y0..y1).enumerate() {
+                let bit = (cur[(tile_base + y as u64 * wpr + wx as u64) as usize] >> bx) & 1;
+                out[k + i / WORD_BITS as usize] |= bit << (i as u32 % WORD_BITS);
+            }
+            k += words;
+        }
+        if !segs.cells.is_empty() {
+            let words = segs.cells.len().div_ceil(WORD_BITS as usize);
+            out[k..k + words].fill(0);
+            for (i, &(x, y)) in segs.cells.iter().enumerate() {
+                let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
+                let bit = (cur[(tile_base + y as u64 * wpr + wx as u64) as usize] >> bx) & 1;
+                out[k + i / WORD_BITS as usize] |= bit << (i as u32 % WORD_BITS);
+            }
+        }
+    }
+
+    fn unpack_rim(&self, staged: &[u64], dst: &mut [u64], tile_base: u64, segs: &RimSegs) {
+        let wpr = self.wpr as u64;
+        let mut k = 0usize;
+        for &y in &segs.rows {
+            let to = (tile_base + y as u64 * wpr) as usize;
+            dst[to..to + wpr as usize].copy_from_slice(&staged[k..k + wpr as usize]);
+            k += wpr as usize;
+        }
+        let mut set_bit = |x: u32, y: u32, bit: u64| {
+            let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
+            let w = &mut dst[(tile_base + y as u64 * wpr + wx as u64) as usize];
+            *w = (*w & !(1u64 << bx)) | (bit << bx);
+        };
+        for &(x, y0, y1) in &segs.cols {
+            let words = ((y1 - y0) as u64).div_ceil(WORD_BITS as u64) as usize;
+            for (i, y) in (y0..y1).enumerate() {
+                let bit = (staged[k + i / WORD_BITS as usize] >> (i as u32 % WORD_BITS)) & 1;
+                set_bit(x, y, bit);
+            }
+            k += words;
+        }
+        for (i, &(x, y)) in segs.cells.iter().enumerate() {
+            let bit = (staged[k + i / WORD_BITS as usize] >> (i as u32 % WORD_BITS)) & 1;
+            set_bit(x, y, bit);
+        }
+    }
+}
+
+/// Split an intra coordinate that may have stepped out of `[0, rho)` into
+/// (block delta ∈ {-1,0,1}, wrapped intra coordinate).
+#[inline(always)]
+fn wrap(j: i64, rho: u32) -> (i64, u32) {
+    if j < 0 {
+        (-1, (j + rho as i64) as u32)
+    } else if j >= rho as i64 {
+        (1, (j - rho as i64) as u32)
+    } else {
+        (0, j as u32)
+    }
+}
+
+/// Index of direction (dx,dy) ∈ Moore order.
+#[inline(always)]
+fn moore_index(dx: i64, dy: i64) -> usize {
+    // MOORE = [(-1,-1),(0,-1),(1,-1),(-1,0),(1,0),(-1,1),(0,1),(1,1)]
+    match (dx, dy) {
+        (-1, -1) => 0,
+        (0, -1) => 1,
+        (1, -1) => 2,
+        (-1, 0) => 3,
+        (1, 0) => 4,
+        (-1, 1) => 5,
+        (0, 1) => 6,
+        (1, 1) => 7,
+        _ => unreachable!("not a Moore offset: ({dx},{dy})"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fractal::catalog;
+    use crate::util::prng::Prng;
+
+    fn rim_cells_of(segs: &RimSegs) -> Vec<(u32, u32)> {
+        let mut cells = Vec::new();
+        for &y in &segs.rows {
+            for x in 0..segs.rho {
+                cells.push((x, y));
+            }
+        }
+        for &(x, y0, y1) in &segs.cols {
+            for y in y0..y1 {
+                cells.push((x, y));
+            }
+        }
+        cells.extend(segs.cells.iter().copied());
+        cells
+    }
+
+    #[test]
+    fn rim_segs_cover_each_consumed_cell_exactly_once() {
+        for rho in [1u32, 2, 3, 4, 8, 16] {
+            for dirs in 0u16..256 {
+                let dirs = dirs as u8;
+                let segs = RimSegs::from_dirs(rho, dirs);
+                let cells = rim_cells_of(&segs);
+                // no duplicates
+                let mut sorted = cells.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), cells.len(), "rho={rho} dirs={dirs:#010b}");
+                assert_eq!(segs.cell_count() as usize, cells.len());
+                // exactly the union of the facing edges
+                let mut want = Vec::new();
+                let hi = rho - 1;
+                for (m, &(dx, dy)) in MOORE.iter().enumerate() {
+                    if (dirs >> m) & 1 == 0 {
+                        continue;
+                    }
+                    let xs: Vec<u32> = match dx {
+                        -1 => vec![hi],
+                        1 => vec![0],
+                        _ => (0..rho).collect(),
+                    };
+                    let ys: Vec<u32> = match dy {
+                        -1 => vec![hi],
+                        1 => vec![0],
+                        _ => (0..rho).collect(),
+                    };
+                    for &y in &ys {
+                        for &x in &xs {
+                            want.push((x, y));
+                        }
+                    }
+                }
+                want.sort_unstable();
+                want.dedup();
+                assert_eq!(sorted, want, "rho={rho} dirs={dirs:#010b}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_tile_rim_covers_everything() {
+        for rho in [1u32, 2, 5, 16] {
+            let segs = RimSegs::full_tile(rho);
+            assert_eq!(segs.cell_count(), rho as u64 * rho as u64);
+        }
+    }
+
+    #[test]
+    fn compacted_rim_is_never_larger_than_the_tile() {
+        let spec = catalog::sierpinski_triangle();
+        for rho in [2u32, 4, 16, 64, 128] {
+            let r = rho.trailing_zeros() + 2;
+            let block = crate::maps::block::BlockCtx::new(&spec, r, rho).unwrap();
+            let byte = <ByteBackend as StateBackend>::new(&block);
+            let packed = <PackedBackend as StateBackend>::new(&block);
+            for dirs in [0b0000_0010u8, 0b0000_1000, 0b1010_0101, 0xFF] {
+                let segs = RimSegs::from_dirs(rho, dirs);
+                assert!(byte.rim_units(&segs) <= byte.units_per_tile());
+                assert!(packed.rim_units(&segs) <= packed.units_per_tile());
+            }
+            // a single shipped row is strictly cheaper than the tile
+            // whenever the tile has more than one row
+            if rho > 1 {
+                let row = RimSegs::from_dirs(rho, 0b0000_0010);
+                assert!(byte.rim_units(&row) < byte.units_per_tile());
+                assert!(packed.rim_units(&row) < packed.units_per_tile());
+            }
+        }
+    }
+
+    /// Pack → unpack into a scrambled tile must reproduce exactly the rim
+    /// cells and leave every other cell untouched — for both backends.
+    fn roundtrip_for<B: StateBackend>(block: &BlockCtx, seed: u64) {
+        let backend = B::new(block);
+        let rho = block.rho;
+        let tile_cells = rho as u64 * rho as u64;
+        let upt = backend.units_per_tile();
+        let mut prng = Prng::new(seed);
+        // random source tile state (only fractal cells can be alive)
+        let mut src = vec![B::Unit::default(); upt as usize];
+        for iy in 0..rho {
+            for ix in 0..rho {
+                if block.intra_on_fractal(ix, iy) && prng.below(2) == 1 {
+                    backend.set_cell(&mut src, (iy * rho + ix) as u64);
+                }
+            }
+        }
+        for dirs in 0u16..256 {
+            let segs = RimSegs::from_dirs(rho, dirs as u8);
+            let units = backend.rim_units(&segs) as usize;
+            let mut stage = vec![B::Unit::default(); units];
+            backend.pack_rim(&src, 0, &segs, &mut stage);
+            // scrambled destination: every cell alive
+            let mut dst = vec![B::Unit::default(); upt as usize];
+            for slot in 0..tile_cells {
+                backend.set_cell(&mut dst, slot);
+            }
+            let before: Vec<u8> = (0..tile_cells).map(|s| backend.get_cell(&dst, s)).collect();
+            backend.unpack_rim(&stage, &mut dst, 0, &segs);
+            let rim: std::collections::HashSet<(u32, u32)> =
+                rim_cells_of(&segs).into_iter().collect();
+            for iy in 0..rho {
+                for ix in 0..rho {
+                    let slot = (iy * rho + ix) as u64;
+                    let got = backend.get_cell(&dst, slot);
+                    if rim.contains(&(ix, iy)) {
+                        assert_eq!(
+                            got,
+                            backend.get_cell(&src, slot),
+                            "rho={rho} dirs={dirs:#010b} ({ix},{iy}) rim cell"
+                        );
+                    } else {
+                        assert_eq!(
+                            got, before[slot as usize],
+                            "rho={rho} dirs={dirs:#010b} ({ix},{iy}) non-rim cell clobbered"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rim_roundtrip_byte_and_packed_small_rho() {
+        let spec = catalog::sierpinski_triangle();
+        for rho in [1u32, 2, 4, 8] {
+            let block = BlockCtx::new(&spec, rho.trailing_zeros() + 1, rho).unwrap();
+            roundtrip_for::<ByteBackend>(&block, 0xB0 + rho as u64);
+            roundtrip_for::<PackedBackend>(&block, 0xC0 + rho as u64);
+        }
+    }
+
+    #[test]
+    fn rim_roundtrip_multiword_rows() {
+        // ρ=128 (wpr=2) exercises the cross-word column gather; ρ=81
+        // (s=3, ragged 17-bit last word) the non-power-of-two row tail
+        let tri = catalog::sierpinski_triangle();
+        let block = BlockCtx::new(&tri, 7, 128).unwrap();
+        roundtrip_for::<ByteBackend>(&block, 0xD1);
+        roundtrip_for::<PackedBackend>(&block, 0xD2);
+        let vic = catalog::vicsek();
+        let block = BlockCtx::new(&vic, 4, 81).unwrap();
+        roundtrip_for::<ByteBackend>(&block, 0xD3);
+        roundtrip_for::<PackedBackend>(&block, 0xD4);
+    }
+}

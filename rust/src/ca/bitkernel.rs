@@ -1,5 +1,5 @@
-//! Bit-planar word-parallel stepping — the 1-bit-per-cell backend of the
-//! `squeeze-bits` engines.
+//! Bit-planar word-parallel stepping — the 1-bit-per-cell kernels behind
+//! the `squeeze-bits` engines.
 //!
 //! Cells are packed 64 per `u64` word, row-padded per `ρ×ρ` tile: every
 //! tile row starts on a word boundary (`wpr = ⌈ρ/64⌉` words per row), so
@@ -26,27 +26,25 @@
 //! The word pipeline is exhaustively tested against `Rule::next_u8` over
 //! all 256 neighbor combinations and randomized B/S masks, and the
 //! packed engines are hash-compared against BB by the differential
-//! suite. `sweep_block_packed` is the one packed sweep body both the
-//! single engine here and the sharded decomposition
-//! (`shard::PackedShardedSqueezeEngine`) execute — same construction
-//! that keeps the byte engines bit-identical under sharding.
+//! suite. [`PackedGeom`] implements `ca::backend::StateBackend`, so the
+//! generic `SqueezeEngine<PackedBackend>` / `ShardedSqueezeEngine<PackedBackend>`
+//! run these kernels through the same sweep-dispatch and exchange bodies
+//! as the byte backend — which is what keeps every packed configuration
+//! bit-identical to the byte engines (and therefore to BB) by
+//! construction.
 
-use super::engine::{seeded_alive, Engine};
-use super::grid::PackedBuffer;
+use super::backend::UnitPtr;
 use super::rule::Rule;
-use crate::fractal::{Coord, FractalSpec};
-use crate::maps::block::{BlockCtx, BlockError};
-use crate::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
-use crate::maps::lambda::lambda;
-use crate::util::pool::parallel_for_chunks;
-use std::sync::Arc;
+use crate::maps::block::BlockCtx;
+use crate::maps::cache::NO_BLOCK;
 
 /// Bits per storage word.
 pub const WORD_BITS: u32 = 64;
 
 /// Packed-tile geometry: the word layout of one `ρ×ρ` tile plus the
 /// packed micro-fractal hole mask. Derived once per engine from the
-/// shared [`BlockCtx`]; all blocks share it.
+/// shared [`BlockCtx`]; all blocks share it. This type *is* the
+/// `PackedBackend` of `ca::backend`.
 #[derive(Clone, Debug)]
 pub struct PackedGeom {
     /// Block side ρ.
@@ -101,13 +99,6 @@ impl PackedGeom {
     }
 }
 
-/// Back-buffer pointer handed to the packed sweep workers (disjoint
-/// per-block word ranges). Shared with the shard subsystem.
-#[derive(Clone, Copy)]
-pub(crate) struct PackedOutPtr(pub(crate) *mut u64);
-unsafe impl Send for PackedOutPtr {}
-unsafe impl Sync for PackedOutPtr {}
-
 /// Bit-sliced full adder over lane planes: per lane, `a + b + c` as
 /// (sum, carry).
 #[inline(always)]
@@ -118,6 +109,7 @@ fn full_add(a: u64, b: u64, c: u64) -> (u64, u64) {
 /// Per-lane Moore neighbor count of the 8 neighbor bit-planes, as four
 /// count-bit planes (b0 = 1s, b1 = 2s, b2 = 4s, b3 = 8s; counts 0..=8).
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn count_neighbors_word(
     aw: u64,
     ac: u64,
@@ -222,13 +214,13 @@ fn row_words(cur: &[u64], refs: RowRefs, wx: u32, wpr: u32, rho: u32) -> (u64, u
 /// Transition one block's `ρ×ρ` tile word-parallel: read `cur`, write
 /// the tile at word base `base_words` through `out`. `nb` is the block's
 /// 8 Moore neighbor base slots in *cell* units (`block·ρ²`), exactly as
-/// the cached [`BlockMaps`] adjacency (single engine) or the
-/// shard-remapped `local ++ ghost` tables (sharded) store them — the
-/// one packed sweep body both step loops execute, which keeps
-/// sharded-packed bit-identical to single-packed by construction.
+/// the cached [`crate::maps::cache::BlockMaps`] adjacency (single
+/// engine) or the shard-remapped `local ++ ghost` tables (sharded)
+/// store them — the one packed sweep body every packed step loop
+/// executes, via `StateBackend::sweep_tile` on [`PackedGeom`].
 pub(crate) fn sweep_block_packed(
     cur: &[u64],
-    out: PackedOutPtr,
+    out: UnitPtr<u64>,
     geom: &PackedGeom,
     nb: &[u64; 8],
     base_words: u64,
@@ -288,140 +280,9 @@ pub(crate) fn sweep_block_packed(
     }
 }
 
-/// Block-level Squeeze over the bit-planar backend — the
-/// `engine=squeeze-bits:<ρ>` factory variant. Same compact block domain,
-/// same cached adjacency, same canonical indexing as
-/// [`super::squeeze_block::SqueezeBlockEngine`]; only the state
-/// representation (1 bit/cell) and the sweep (word-parallel) differ, so
-/// the two are bit-identical step for step.
-pub struct PackedSqueezeBlockEngine {
-    /// Shared (possibly cached) block-level map bundle — the scalar-built
-    /// adjacency, interned under the same cache key the byte engine uses.
-    maps: Arc<BlockMaps>,
-    geom: PackedGeom,
-    rule: Rule,
-    buf: PackedBuffer,
-    workers: usize,
-}
-
-impl PackedSqueezeBlockEngine {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        spec: &FractalSpec,
-        r: u32,
-        rho: u32,
-        rule: Rule,
-        density: f64,
-        seed: u64,
-        workers: usize,
-    ) -> Result<PackedSqueezeBlockEngine, BlockError> {
-        Self::with_cache(spec, r, rho, rule, density, seed, workers, None)
-    }
-
-    /// Build the engine, taking the map bundle from `cache` when given.
-    /// An invalid ρ comes back as `Err` for the service to surface.
-    #[allow(clippy::too_many_arguments)]
-    pub fn with_cache(
-        spec: &FractalSpec,
-        r: u32,
-        rho: u32,
-        rule: Rule,
-        density: f64,
-        seed: u64,
-        workers: usize,
-        cache: Option<&MapCache>,
-    ) -> Result<PackedSqueezeBlockEngine, BlockError> {
-        let maps = match cache {
-            Some(c) => c.block_maps(spec, r, rho, None, workers)?,
-            None => Arc::new(BlockMaps::build(spec, r, rho, None, workers)?),
-        };
-        let geom = PackedGeom::new(&maps.block);
-        let mut buf = PackedBuffer::zeroed(maps.block.blocks() * geom.words_per_tile);
-        // Canonical seeding: compact linear index -> expanded -> slot ->
-        // (word, bit). Identical decisions to every other engine.
-        let full = &maps.full;
-        for idx in 0..full.compact.area() {
-            if seeded_alive(seed, idx, density) {
-                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
-                let slot = maps
-                    .block
-                    .storage_index(e)
-                    .expect("fractal cell must have a slot");
-                let (w, bit) = geom.slot_to_word_bit(slot);
-                buf.cur[w as usize] |= 1u64 << bit;
-            }
-        }
-        Ok(PackedSqueezeBlockEngine {
-            maps,
-            geom,
-            rule,
-            buf,
-            workers,
-        })
-    }
-
-    /// The shared map bundle (tests / capacity accounting).
-    pub fn maps(&self) -> &BlockMaps {
-        &self.maps
-    }
-
-    /// The packed tile geometry (tests / capacity accounting).
-    pub fn geom(&self) -> &PackedGeom {
-        &self.geom
-    }
-}
-
-impl Engine for PackedSqueezeBlockEngine {
-    fn name(&self) -> String {
-        format!("squeeze-bits-rho{}", self.maps.block.rho)
-    }
-
-    fn step(&mut self) {
-        let maps = &*self.maps;
-        let geom = &self.geom;
-        let wpt = geom.words_per_tile;
-        let cur = &self.buf.cur;
-        let rule = self.rule;
-        let out = PackedOutPtr(self.buf.next.as_mut_ptr());
-        parallel_for_chunks(maps.block.blocks(), self.workers, move |start, end| {
-            for bidx in start..end {
-                sweep_block_packed(cur, out, geom, maps.neighbors_of(bidx), bidx * wpt, rule);
-            }
-        });
-        self.buf.swap();
-    }
-
-    fn cells(&self) -> u64 {
-        self.maps.full.compact.area()
-    }
-
-    fn population(&self) -> u64 {
-        self.buf.population()
-    }
-
-    fn memory_bytes(&self) -> u64 {
-        // packed state buffers + the materialized neighbor adjacency —
-        // the accounting courtesy every table-driven engine extends
-        self.buf.bytes() + self.maps.table_bytes()
-    }
-
-    fn cell(&self, idx: u64) -> u8 {
-        let full = &self.maps.full;
-        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
-        let slot = self.maps.block.storage_index(e).expect("fractal cell");
-        let (w, bit) = self.geom.slot_to_word_bit(slot);
-        ((self.buf.cur[w as usize] >> bit) & 1) as u8
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ca::bb::BbEngine;
-    use crate::ca::engine::run_and_hash;
-    use crate::ca::squeeze::MapPath;
-    use crate::ca::squeeze_block::SqueezeBlockEngine;
-    use crate::fractal::catalog;
     use crate::util::prng::Prng;
 
     /// Drive the word pipeline over all 256 Moore-neighborhood
@@ -479,176 +340,5 @@ mod tests {
             };
             check_pipeline_exhaustively(rule);
         }
-    }
-
-    #[test]
-    fn packed_engine_agrees_with_bb_for_every_rho() {
-        let spec = catalog::sierpinski_triangle();
-        let r = 5;
-        let reference = {
-            let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 21, 2);
-            run_and_hash(&mut bb, 6)
-        };
-        for rho in [1u32, 2, 4, 8, 16, 32] {
-            let mut sq =
-                PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.4, 21, 2)
-                    .unwrap();
-            assert_eq!(run_and_hash(&mut sq, 6), reference, "rho={rho}");
-        }
-    }
-
-    #[test]
-    fn packed_engine_agrees_for_s3_fractals() {
-        for spec in [catalog::vicsek(), catalog::sierpinski_carpet()] {
-            let r = 3;
-            let reference = {
-                let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 2, 2);
-                run_and_hash(&mut bb, 5)
-            };
-            for rho in [1u32, 3, 9] {
-                let mut sq =
-                    PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.5, 2, 2)
-                        .unwrap();
-                assert_eq!(run_and_hash(&mut sq, 5), reference, "{} rho={rho}", spec.name);
-            }
-        }
-    }
-
-    #[test]
-    fn multiword_rows_agree_with_bb_at_rho_128() {
-        // ρ=128 -> wpr=2: exercises the cross-word boundary stitching
-        // (and, at r=8 with 3 coarse blocks, the cross-block one too)
-        let spec = catalog::sierpinski_triangle();
-        let r = 8;
-        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 77, 4);
-        let mut sq =
-            PackedSqueezeBlockEngine::new(&spec, r, 128, Rule::game_of_life(), 0.4, 77, 4)
-                .unwrap();
-        assert_eq!(sq.maps().block.blocks(), 3);
-        assert_eq!(sq.geom().wpr, 2);
-        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
-    }
-
-    #[test]
-    fn ragged_multiword_rows_agree_at_rho_81() {
-        // s=3, ρ=81 -> wpr=2 with a 17-bit ragged last word; r=4 is one
-        // block (pure micro brute force through the word kernels)
-        let spec = catalog::vicsek();
-        let r = 4;
-        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 5, 2);
-        let mut sq =
-            PackedSqueezeBlockEngine::new(&spec, r, 81, Rule::game_of_life(), 0.5, 5, 2).unwrap();
-        assert_eq!(sq.geom().wpr, 2);
-        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
-    }
-
-    #[test]
-    fn packed_state_is_at_most_an_eighth_plus_padding_of_bytes() {
-        let spec = catalog::sierpinski_triangle();
-        for (r, rho) in [(6u32, 4u32), (7, 16), (8, 128)] {
-            let byte = SqueezeBlockEngine::new(
-                &spec,
-                r,
-                rho,
-                Rule::game_of_life(),
-                0.3,
-                1,
-                1,
-                MapPath::Scalar,
-            )
-            .unwrap();
-            let packed =
-                PackedSqueezeBlockEngine::new(&spec, r, rho, Rule::game_of_life(), 0.3, 1, 1)
-                    .unwrap();
-            let byte_state = 2 * byte.maps().block.stored_cells();
-            let packed_state = packed.buf.bytes();
-            // exact layout model: each of the 2 buffers holds
-            // blocks · ρ rows of ⌈ρ/64⌉ 8-byte words — i.e. ⌈bytes/8⌉
-            // plus the row padding to the next word boundary
-            let padded_eighth =
-                2 * packed.maps().block.blocks() * rho as u64 * 8 * (rho.div_ceil(64) as u64);
-            assert_eq!(packed_state, padded_eighth, "r={r} rho={rho}");
-            if rho >= 16 {
-                // beyond two words of cells per byte-row the 8x factor
-                // dominates the padding: packed strictly undercuts bytes
-                assert!(
-                    packed_state < byte_state,
-                    "packed {packed_state} vs byte {byte_state} at rho={rho}"
-                );
-            }
-            // and the packed engine reports exactly state + table bytes
-            assert_eq!(
-                packed.memory_bytes(),
-                packed_state + packed.maps().table_bytes()
-            );
-            assert_eq!(
-                packed_state,
-                2 * crate::memory::packed_squeeze_bytes(&spec, r, rho).unwrap()
-            );
-        }
-    }
-
-    #[test]
-    fn packed_parallel_stepping_is_deterministic_across_worker_counts() {
-        let spec = catalog::sierpinski_triangle();
-        let r = 7;
-        let reference = {
-            let mut serial =
-                PackedSqueezeBlockEngine::new(&spec, r, 8, Rule::game_of_life(), 0.42, 7, 1)
-                    .unwrap();
-            run_and_hash(&mut serial, 8)
-        };
-        for workers in [2usize, 4, 8, 16] {
-            let mut par =
-                PackedSqueezeBlockEngine::new(&spec, r, 8, Rule::game_of_life(), 0.42, 7, workers)
-                    .unwrap();
-            assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
-        }
-    }
-
-    #[test]
-    fn packed_engine_shares_the_byte_engines_cache_entry() {
-        // same (fractal, r, ρ, scalar) key: one interned adjacency for
-        // both state backends
-        let spec = catalog::vicsek();
-        let cache = MapCache::new();
-        let byte = SqueezeBlockEngine::with_cache(
-            &spec,
-            4,
-            3,
-            Rule::game_of_life(),
-            0.5,
-            11,
-            2,
-            MapPath::Scalar,
-            Some(&cache),
-        )
-        .unwrap();
-        let packed = PackedSqueezeBlockEngine::with_cache(
-            &spec,
-            4,
-            3,
-            Rule::game_of_life(),
-            0.5,
-            11,
-            2,
-            Some(&cache),
-        )
-        .unwrap();
-        assert!(std::ptr::eq(&*packed.maps, byte.maps()));
-        assert_eq!(cache.stats().misses, 1);
-        assert_eq!(cache.stats().hits, 1);
-        // identical seed state through both layouts
-        assert_eq!(packed.state_hash(), byte.state_hash());
-        assert_eq!(packed.population(), byte.population());
-    }
-
-    #[test]
-    fn invalid_rho_is_an_error_not_a_panic() {
-        let spec = catalog::sierpinski_triangle();
-        assert!(PackedSqueezeBlockEngine::new(&spec, 6, 3, Rule::game_of_life(), 0.4, 1, 1)
-            .is_err());
-        assert!(PackedSqueezeBlockEngine::new(&spec, 2, 16, Rule::game_of_life(), 0.4, 1, 1)
-            .is_err());
     }
 }

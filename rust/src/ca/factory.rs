@@ -1,17 +1,18 @@
 //! Engine construction from a uniform description — the seam between the
 //! coordinator/CLI layer and the engine implementations.
 
+use super::backend::{ByteBackend, PackedBackend};
 use super::bb::BbEngine;
-use super::bitkernel::PackedSqueezeBlockEngine;
 use super::engine::Engine;
 use super::lambda_engine::LambdaEngine;
 use super::rule::Rule;
-use super::squeeze::{MapPath, SqueezeEngine};
-use super::squeeze_block::SqueezeBlockEngine;
+use super::spec::EngineSpec;
+use super::squeeze::{MapPath, ThreadSqueezeEngine};
+use super::squeeze_block::SqueezeEngine;
 use crate::fractal::FractalSpec;
 use crate::maps::block::BlockError;
 use crate::maps::MapCache;
-use crate::shard::{PackedShardedSqueezeEngine, ShardedSqueezeEngine};
+use crate::shard::{ShardOpts, ShardedSqueezeEngine};
 use crate::tcu::MmaMode;
 
 /// The paper's three approaches (§4): BB, λ(ω), Squeeze — the latter at
@@ -25,53 +26,28 @@ pub enum EngineKind {
     Squeeze { rho: u32, tensor: bool },
     /// Halo-exchanged domain decomposition over Squeeze blocks
     /// (`crate::shard`): `shards` contiguous block ranges stepped as
-    /// parallel local sweeps with an exchange barrier between steps.
+    /// parallel local sweeps around a rim-compacted exchange.
     ShardedSqueeze { rho: u32, shards: u32 },
-    /// Bit-planar block engine (`ca::bitkernel`): 1-bit cells stepped
-    /// with word-parallel carry-save kernels.
+    /// Bit-planar block engine (`ca::bitkernel` kernels): 1-bit cells
+    /// stepped with word-parallel carry-save kernels.
     PackedSqueeze { rho: u32 },
     /// The sharded decomposition over the bit-planar backend.
     PackedShardedSqueeze { rho: u32, shards: u32 },
 }
 
 impl EngineKind {
-    /// Parse from CLI notation: `bb`, `lambda`, `squeeze`, `squeeze:16`,
-    /// `squeeze-tcu:16`, `sharded-squeeze:16:4` (ρ then shard count;
-    /// the shard count defaults to 2 when omitted), and the bit-planar
-    /// `squeeze-bits:16` / `squeeze-bits:16:4`.
+    /// Parse from CLI notation — one grammar with the coordinator's job
+    /// protocol, owned by [`EngineSpec`]: `bb`, `lambda`, `squeeze[:ρ]`,
+    /// `squeeze-tcu[:ρ]`, `sharded-squeeze:<ρ>[:<S>]` (shard count
+    /// defaults to 2), and the bit-planar `squeeze-bits[:<ρ>[:<S>]]`.
     pub fn parse(text: &str) -> Option<EngineKind> {
-        let fields: Vec<&str> = text.split(':').collect();
-        let num = |f: &&str| f.parse::<u32>().ok();
-        match fields.as_slice() {
-            ["bb"] => Some(EngineKind::Bb),
-            ["lambda"] => Some(EngineKind::Lambda),
-            ["squeeze"] => Some(EngineKind::Squeeze { rho: 1, tensor: false }),
-            ["squeeze", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: false }),
-            ["squeeze-tcu"] => Some(EngineKind::Squeeze { rho: 1, tensor: true }),
-            ["squeeze-tcu", rho] => Some(EngineKind::Squeeze { rho: num(rho)?, tensor: true }),
-            ["squeeze-bits"] => Some(EngineKind::PackedSqueeze { rho: 16 }),
-            ["squeeze-bits", rho] => Some(EngineKind::PackedSqueeze { rho: num(rho)? }),
-            ["squeeze-bits", rho, shards] => {
-                let shards = num(shards)?;
-                (shards >= 1).then_some(EngineKind::PackedShardedSqueeze {
-                    rho: num(rho)?,
-                    shards,
-                })
-            }
-            ["sharded-squeeze", rho] => Some(EngineKind::ShardedSqueeze {
-                rho: num(rho)?,
-                shards: 2,
-            }),
-            ["sharded-squeeze", rho, shards] => {
-                let shards = num(shards)?;
-                (shards >= 1).then_some(EngineKind::ShardedSqueeze { rho: num(rho)?, shards })
-            }
-            _ => None,
-        }
+        EngineSpec::parse(text).ok().map(|s| s.kind)
     }
 }
 
-/// Everything needed to build one engine.
+/// Everything needed to build one engine. The `overlap`/`compact`/
+/// `balance` knobs only affect sharded kinds (the `overlap=`, `compact=`
+/// and `shards=auto:` job keys); single-buffer engines ignore them.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub kind: EngineKind,
@@ -80,6 +56,40 @@ pub struct EngineConfig {
     pub density: f64,
     pub seed: u64,
     pub workers: usize,
+    /// Sharded engines: sweep interior blocks during the exchange.
+    pub overlap: bool,
+    /// Sharded engines: ship rim-compacted halos.
+    pub compact: bool,
+    /// Sharded engines: cost-weighted partition from t=0 live cells.
+    pub balance: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        let opts = ShardOpts::default();
+        EngineConfig {
+            kind: EngineKind::Squeeze { rho: 16, tensor: false },
+            r: 8,
+            rule: Rule::game_of_life(),
+            density: 0.4,
+            seed: 42,
+            workers: crate::util::pool::default_workers(),
+            overlap: opts.overlap,
+            compact: opts.compact,
+            balance: opts.balance,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The shard-subsystem knobs this config carries.
+    pub fn shard_opts(&self) -> ShardOpts {
+        ShardOpts {
+            overlap: self.overlap,
+            compact: self.compact,
+            balance: self.balance,
+        }
+    }
 }
 
 /// Build an engine over the given fractal (no map sharing). An invalid
@@ -123,7 +133,7 @@ pub fn build_with_cache(
                 MapPath::Scalar
             };
             if rho <= 1 {
-                Box::new(SqueezeEngine::with_cache(
+                Box::new(ThreadSqueezeEngine::with_cache(
                     spec,
                     cfg.r,
                     cfg.rule,
@@ -134,7 +144,7 @@ pub fn build_with_cache(
                     cache,
                 ))
             } else {
-                Box::new(SqueezeBlockEngine::with_cache(
+                Box::new(SqueezeEngine::<ByteBackend>::with_cache(
                     spec,
                     cfg.r,
                     rho,
@@ -147,30 +157,8 @@ pub fn build_with_cache(
                 )?)
             }
         }
-        EngineKind::ShardedSqueeze { rho, shards } => Box::new(ShardedSqueezeEngine::with_cache(
-            spec,
-            cfg.r,
-            rho,
-            shards,
-            cfg.rule,
-            cfg.density,
-            cfg.seed,
-            cfg.workers,
-            MapPath::Scalar,
-            cache,
-        )?),
-        EngineKind::PackedSqueeze { rho } => Box::new(PackedSqueezeBlockEngine::with_cache(
-            spec,
-            cfg.r,
-            rho,
-            cfg.rule,
-            cfg.density,
-            cfg.seed,
-            cfg.workers,
-            cache,
-        )?),
-        EngineKind::PackedShardedSqueeze { rho, shards } => {
-            Box::new(PackedShardedSqueezeEngine::with_cache(
+        EngineKind::ShardedSqueeze { rho, shards } => {
+            Box::new(ShardedSqueezeEngine::<ByteBackend>::with_opts(
                 spec,
                 cfg.r,
                 rho,
@@ -179,6 +167,34 @@ pub fn build_with_cache(
                 cfg.density,
                 cfg.seed,
                 cfg.workers,
+                MapPath::Scalar,
+                cfg.shard_opts(),
+                cache,
+            )?)
+        }
+        EngineKind::PackedSqueeze { rho } => Box::new(SqueezeEngine::<PackedBackend>::with_cache(
+            spec,
+            cfg.r,
+            rho,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+            MapPath::Scalar,
+            cache,
+        )?),
+        EngineKind::PackedShardedSqueeze { rho, shards } => {
+            Box::new(ShardedSqueezeEngine::<PackedBackend>::with_opts(
+                spec,
+                cfg.r,
+                rho,
+                shards,
+                cfg.rule,
+                cfg.density,
+                cfg.seed,
+                cfg.workers,
+                MapPath::Scalar,
+                cfg.shard_opts(),
                 cache,
             )?)
         }
@@ -251,6 +267,7 @@ mod tests {
                 density: 0.4,
                 seed: 1,
                 workers: 1,
+                ..EngineConfig::default()
             };
             assert!(build(&spec, &cfg).is_err(), "{kind:?}");
         }
@@ -267,6 +284,7 @@ mod tests {
             density: 0.4,
             seed: 3,
             workers: 2,
+            ..EngineConfig::default()
         };
         let mut plain = build(&spec, &cfg).unwrap();
         let mut cached_a = build_with_cache(&spec, &cfg, Some(&cache)).unwrap();
@@ -307,6 +325,7 @@ mod tests {
                     density: 0.4,
                     seed: 17,
                     workers: 2,
+                    ..EngineConfig::default()
                 },
             )
             .unwrap();
@@ -319,5 +338,34 @@ mod tests {
         for (name, h) in &hashes {
             assert_eq!(*h, first, "{name} diverged");
         }
+    }
+
+    #[test]
+    fn shard_knobs_do_not_change_results_through_the_factory() {
+        let spec = catalog::sierpinski_triangle();
+        let mk = |overlap: bool, compact: bool, balance: bool| EngineConfig {
+            kind: EngineKind::ShardedSqueeze { rho: 4, shards: 3 },
+            r: 5,
+            seed: 17,
+            workers: 2,
+            overlap,
+            compact,
+            balance,
+            ..EngineConfig::default()
+        };
+        let mut hashes = Vec::new();
+        for (o, c, b) in [
+            (false, false, false),
+            (true, true, false),
+            (false, true, true),
+            (true, false, true),
+        ] {
+            let mut e = build(&spec, &mk(o, c, b)).unwrap();
+            for _ in 0..4 {
+                e.step();
+            }
+            hashes.push(e.state_hash());
+        }
+        assert!(hashes.windows(2).all(|w| w[0] == w[1]), "{hashes:?}");
     }
 }

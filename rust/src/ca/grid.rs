@@ -1,28 +1,38 @@
 //! Double-buffered grids — the state storage shared by all engines.
 //!
-//! Two representations exist. [`DoubleBuffer`] holds one byte per cell
-//! (0 = dead, 1 = alive). [`PackedBuffer`] holds one *bit* per cell in
+//! One generic [`Buffer`] holds both representations behind its unit
+//! type: `Buffer<u8>` ([`DoubleBuffer`]) is one byte per cell (0 = dead,
+//! 1 = alive); `Buffer<u64>` ([`PackedBuffer`]) is one *bit* per cell in
 //! `u64` words — the bit-planar backend the `squeeze-bits` engines step
 //! with word-parallel kernels (`ca::bitkernel`). In both, holes of the
 //! embedding are permanently-dead cells, which keeps neighbor counting
 //! branch-free: summing raw cells counts exactly the live *fractal*
 //! neighbors, because a hole can never become alive.
 
-/// A pair of equally-sized byte buffers with swap semantics.
+/// A pair of equally-sized unit buffers with swap semantics. The unit
+/// layout (which unit/bit is which cell) is owned by the engine's
+/// `StateBackend`; this type only manages the raw storage.
 #[derive(Clone, Debug)]
-pub struct DoubleBuffer {
-    pub cur: Vec<u8>,
-    pub next: Vec<u8>,
+pub struct Buffer<U> {
+    pub cur: Vec<U>,
+    pub next: Vec<U>,
 }
 
-impl DoubleBuffer {
-    pub fn zeroed(len: u64) -> DoubleBuffer {
-        DoubleBuffer {
-            cur: vec![0u8; len as usize],
-            next: vec![0u8; len as usize],
+/// One byte per cell.
+pub type DoubleBuffer = Buffer<u8>;
+
+/// One bit per cell, packed 64 per `u64` word.
+pub type PackedBuffer = Buffer<u64>;
+
+impl<U: Copy + Default> Buffer<U> {
+    pub fn zeroed(len: u64) -> Buffer<U> {
+        Buffer {
+            cur: vec![U::default(); len as usize],
+            next: vec![U::default(); len as usize],
         }
     }
 
+    /// Units per buffer.
     #[inline]
     pub fn len(&self) -> u64 {
         self.cur.len() as u64
@@ -41,48 +51,22 @@ impl DoubleBuffer {
 
     /// Total bytes held (both buffers).
     pub fn bytes(&self) -> u64 {
-        (self.cur.len() + self.next.len()) as u64
+        ((self.cur.len() + self.next.len()) * std::mem::size_of::<U>()) as u64
     }
+}
 
+impl Buffer<u8> {
     /// Number of live cells in the current buffer.
     pub fn population(&self) -> u64 {
         self.cur.iter().map(|&b| b as u64).sum()
     }
 }
 
-/// A pair of equally-sized `u64`-word buffers with swap semantics — the
-/// 1-bit-per-cell state storage of the packed engines. The word layout
-/// (which bit is which cell) is owned by `ca::bitkernel::PackedGeom`;
-/// this type only manages the raw storage.
-#[derive(Clone, Debug)]
-pub struct PackedBuffer {
-    pub cur: Vec<u64>,
-    pub next: Vec<u64>,
-}
-
-impl PackedBuffer {
-    pub fn zeroed(words: u64) -> PackedBuffer {
-        PackedBuffer {
-            cur: vec![0u64; words as usize],
-            next: vec![0u64; words as usize],
-        }
-    }
-
+impl Buffer<u64> {
     /// Words per buffer.
     #[inline]
     pub fn words(&self) -> u64 {
         self.cur.len() as u64
-    }
-
-    /// Swap current and next after a step.
-    #[inline]
-    pub fn swap(&mut self) {
-        std::mem::swap(&mut self.cur, &mut self.next);
-    }
-
-    /// Total bytes held (both buffers).
-    pub fn bytes(&self) -> u64 {
-        ((self.cur.len() + self.next.len()) * std::mem::size_of::<u64>()) as u64
     }
 
     /// Live cells in the current buffer — a popcount sum, valid because

@@ -1,6 +1,10 @@
 //! Fractal cellular-automaton engines — the paper's three approaches plus
-//! the tensor-core variants, all over one exact shared semantics.
+//! the tensor-core variants, all over one exact shared semantics. The
+//! block-level engines are generic over [`backend::StateBackend`]
+//! (byte-per-cell or bit-planar words), so every storage layout runs the
+//! same step loop, seeding, and canonical indexing.
 
+pub mod backend;
 pub mod bb;
 pub mod bitkernel;
 pub mod engine;
@@ -8,11 +12,14 @@ pub mod factory;
 pub mod grid;
 pub mod lambda_engine;
 pub mod rule;
+pub mod spec;
 pub mod squeeze;
 pub mod squeeze_block;
 
-pub use bitkernel::PackedSqueezeBlockEngine;
+pub use backend::{ByteBackend, PackedBackend, RimSegs, StateBackend};
 pub use engine::Engine;
 pub use factory::{build, build_with_cache, EngineConfig, EngineKind};
 pub use rule::Rule;
+pub use spec::EngineSpec;
 pub use squeeze::MapPath;
+pub use squeeze_block::{PackedSqueezeBlockEngine, SqueezeBlockEngine, SqueezeEngine};

@@ -1,0 +1,251 @@
+//! The one engine-string grammar — shared by the CLI/factory layer
+//! (`EngineKind::parse`) and the coordinator's job protocol
+//! (`coordinator::job`), which previously each carried their own copy
+//! of this parsing and promotion logic.
+//!
+//! Grammar (colon-separated):
+//!
+//! ```text
+//! bb | lambda
+//! squeeze[:<ρ>] | squeeze-tcu[:<ρ>]
+//! sharded-squeeze:<ρ>[:<S>]
+//! squeeze-bits[:<ρ>[:<S>]]
+//! ```
+//!
+//! plus the job-key *promotions* `shards=<S>` ([`EngineSpec::with_shards`])
+//! and `packed=0/1` ([`EngineSpec::with_packed`]), which compose in any
+//! order. `Display` renders the canonical form, and
+//! `parse(display(x)) == x` for every valid kind — the round-trip the
+//! service relies on to echo engine names back losslessly.
+
+use super::factory::EngineKind;
+
+/// A parsed engine description. Thin wrapper over [`EngineKind`] whose
+/// point is the *one* grammar: parsing, promotion, and canonical
+/// rendering all live here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineSpec {
+    pub kind: EngineKind,
+}
+
+impl EngineSpec {
+    /// Parse CLI/protocol notation. Errors carry the service-facing
+    /// message (they become `ERR` lines verbatim).
+    pub fn parse(text: &str) -> Result<EngineSpec, String> {
+        let fields: Vec<&str> = text.split(':').collect();
+        let num = |f: &&str| {
+            f.parse::<u32>()
+                .map_err(|_| format!("unknown engine {text:?}"))
+        };
+        let kind = match fields.as_slice() {
+            ["bb"] => EngineKind::Bb,
+            ["lambda"] => EngineKind::Lambda,
+            ["squeeze"] => EngineKind::Squeeze { rho: 1, tensor: false },
+            ["squeeze", rho] => EngineKind::Squeeze { rho: num(rho)?, tensor: false },
+            ["squeeze-tcu"] => EngineKind::Squeeze { rho: 1, tensor: true },
+            ["squeeze-tcu", rho] => EngineKind::Squeeze { rho: num(rho)?, tensor: true },
+            ["squeeze-bits"] => EngineKind::PackedSqueeze { rho: 16 },
+            ["squeeze-bits", rho] => EngineKind::PackedSqueeze { rho: num(rho)? },
+            ["squeeze-bits", rho, shards] => {
+                let shards = num(shards)?;
+                if shards == 0 {
+                    return Err(format!("unknown engine {text:?}"));
+                }
+                EngineKind::PackedShardedSqueeze { rho: num(rho)?, shards }
+            }
+            ["sharded-squeeze", rho] => EngineKind::ShardedSqueeze { rho: num(rho)?, shards: 2 },
+            ["sharded-squeeze", rho, shards] => {
+                let shards = num(shards)?;
+                if shards == 0 {
+                    return Err(format!("unknown engine {text:?}"));
+                }
+                EngineKind::ShardedSqueeze { rho: num(rho)?, shards }
+            }
+            _ => return Err(format!("unknown engine {text:?}")),
+        };
+        Ok(EngineSpec { kind })
+    }
+
+    /// Promote to the sharded decomposition with `shards` shards (the
+    /// `shards=` job key): a scalar squeeze engine gains a shard count,
+    /// an already-sharded engine has its count overridden. Tensor and
+    /// non-squeeze engines reject the key.
+    pub fn with_shards(self, shards: u32) -> Result<EngineSpec, String> {
+        if shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        let kind = match self.kind {
+            EngineKind::Squeeze { rho, tensor: false }
+            | EngineKind::ShardedSqueeze { rho, .. } => {
+                EngineKind::ShardedSqueeze { rho, shards }
+            }
+            EngineKind::PackedSqueeze { rho }
+            | EngineKind::PackedShardedSqueeze { rho, .. } => {
+                EngineKind::PackedShardedSqueeze { rho, shards }
+            }
+            other => {
+                return Err(format!(
+                    "shards= requires a scalar squeeze engine (got {other:?})"
+                ))
+            }
+        };
+        Ok(EngineSpec { kind })
+    }
+
+    /// Promote to the bit-planar backend (the `packed=` job key):
+    /// idempotent on already-packed engines, a no-op when `packed` is
+    /// false, rejected for tensor and non-squeeze engines.
+    pub fn with_packed(self, packed: bool) -> Result<EngineSpec, String> {
+        if !packed {
+            return Ok(self);
+        }
+        let kind = match self.kind {
+            EngineKind::Squeeze { rho, tensor: false } => EngineKind::PackedSqueeze { rho },
+            EngineKind::ShardedSqueeze { rho, shards } => {
+                EngineKind::PackedShardedSqueeze { rho, shards }
+            }
+            EngineKind::PackedSqueeze { rho } => EngineKind::PackedSqueeze { rho },
+            EngineKind::PackedShardedSqueeze { rho, shards } => {
+                EngineKind::PackedShardedSqueeze { rho, shards }
+            }
+            other => {
+                return Err(format!(
+                    "packed= requires a scalar squeeze engine (got {other:?})"
+                ))
+            }
+        };
+        Ok(EngineSpec { kind })
+    }
+}
+
+impl std::fmt::Display for EngineSpec {
+    /// Canonical notation; `EngineSpec::parse` round-trips it exactly.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            EngineKind::Bb => write!(f, "bb"),
+            EngineKind::Lambda => write!(f, "lambda"),
+            EngineKind::Squeeze { rho: 1, tensor: false } => write!(f, "squeeze"),
+            EngineKind::Squeeze { rho, tensor: false } => write!(f, "squeeze:{rho}"),
+            EngineKind::Squeeze { rho: 1, tensor: true } => write!(f, "squeeze-tcu"),
+            EngineKind::Squeeze { rho, tensor: true } => write!(f, "squeeze-tcu:{rho}"),
+            EngineKind::ShardedSqueeze { rho, shards } => {
+                write!(f, "sharded-squeeze:{rho}:{shards}")
+            }
+            EngineKind::PackedSqueeze { rho } => write!(f, "squeeze-bits:{rho}"),
+            EngineKind::PackedShardedSqueeze { rho, shards } => {
+                write!(f, "squeeze-bits:{rho}:{shards}")
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for EngineSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<EngineSpec, String> {
+        EngineSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds() -> Vec<EngineKind> {
+        vec![
+            EngineKind::Bb,
+            EngineKind::Lambda,
+            EngineKind::Squeeze { rho: 1, tensor: false },
+            EngineKind::Squeeze { rho: 16, tensor: false },
+            EngineKind::Squeeze { rho: 1, tensor: true },
+            EngineKind::Squeeze { rho: 8, tensor: true },
+            EngineKind::ShardedSqueeze { rho: 16, shards: 4 },
+            EngineKind::PackedSqueeze { rho: 16 },
+            EngineKind::PackedShardedSqueeze { rho: 8, shards: 3 },
+        ]
+    }
+
+    #[test]
+    fn display_round_trips_every_kind() {
+        for kind in kinds() {
+            let spec = EngineSpec { kind };
+            let text = spec.to_string();
+            assert_eq!(
+                EngineSpec::parse(&text),
+                Ok(spec),
+                "{kind:?} -> {text:?} failed to round-trip"
+            );
+            // FromStr is the same grammar
+            assert_eq!(text.parse::<EngineSpec>(), Ok(spec));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage_with_the_service_message() {
+        for bad in ["hilbert", "squeeze:x", "squeeze-bits:16:0", "squeeze-bits:x",
+                    "sharded-squeeze:16:0", "sharded-squeeze:16:4:9", "bb:2", ""] {
+            let err = EngineSpec::parse(bad).unwrap_err();
+            assert!(err.contains("unknown engine"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn shards_promotion_matches_the_job_key_contract() {
+        let sq = EngineSpec::parse("squeeze:4").unwrap();
+        assert_eq!(
+            sq.with_shards(3).unwrap().kind,
+            EngineKind::ShardedSqueeze { rho: 4, shards: 3 }
+        );
+        // overrides an existing count
+        let sh = EngineSpec::parse("sharded-squeeze:8:2").unwrap();
+        assert_eq!(
+            sh.with_shards(5).unwrap().kind,
+            EngineKind::ShardedSqueeze { rho: 8, shards: 5 }
+        );
+        // packed engines promote to packed-sharded
+        let pk = EngineSpec::parse("squeeze-bits:8").unwrap();
+        assert_eq!(
+            pk.with_shards(4).unwrap().kind,
+            EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 }
+        );
+        assert!(EngineSpec::parse("bb").unwrap().with_shards(2).is_err());
+        assert!(EngineSpec::parse("squeeze-tcu:4").unwrap().with_shards(2).is_err());
+        assert!(sq.with_shards(0).is_err());
+    }
+
+    #[test]
+    fn packed_promotion_matches_the_job_key_contract() {
+        let sq = EngineSpec::parse("squeeze:4").unwrap();
+        assert_eq!(sq.with_packed(true).unwrap().kind, EngineKind::PackedSqueeze { rho: 4 });
+        assert_eq!(sq.with_packed(false).unwrap(), sq);
+        let sh = EngineSpec::parse("sharded-squeeze:8:2").unwrap();
+        assert_eq!(
+            sh.with_packed(true).unwrap().kind,
+            EngineKind::PackedShardedSqueeze { rho: 8, shards: 2 }
+        );
+        // idempotent
+        let pk = EngineSpec::parse("squeeze-bits:8:2").unwrap();
+        assert_eq!(pk.with_packed(true).unwrap(), pk);
+        assert!(EngineSpec::parse("bb").unwrap().with_packed(true).is_err());
+        assert!(EngineSpec::parse("squeeze-tcu:4").unwrap().with_packed(true).is_err());
+    }
+
+    #[test]
+    fn promotions_compose_in_any_order() {
+        let a = EngineSpec::parse("squeeze:4")
+            .unwrap()
+            .with_shards(3)
+            .unwrap()
+            .with_packed(true)
+            .unwrap();
+        let b = EngineSpec::parse("squeeze:4")
+            .unwrap()
+            .with_packed(true)
+            .unwrap()
+            .with_shards(3)
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.kind, EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 });
+        assert_eq!(a.to_string(), "squeeze-bits:4:3");
+    }
+}

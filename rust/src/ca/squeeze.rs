@@ -29,7 +29,7 @@ pub enum MapPath {
     Tensor(MmaMode),
 }
 
-pub struct SqueezeEngine {
+pub struct ThreadSqueezeEngine {
     /// Shared (possibly cached) map bundle: context + separable λ tables
     /// (§Perf iteration 5: λ per cell is one add).
     maps: Arc<ThreadMaps>,
@@ -42,7 +42,7 @@ pub struct SqueezeEngine {
     nu_a: Option<Fragment>,
 }
 
-impl SqueezeEngine {
+impl ThreadSqueezeEngine {
     pub fn new(
         spec: &FractalSpec,
         r: u32,
@@ -51,7 +51,7 @@ impl SqueezeEngine {
         seed: u64,
         workers: usize,
         path: MapPath,
-    ) -> SqueezeEngine {
+    ) -> ThreadSqueezeEngine {
         Self::with_cache(spec, r, rule, density, seed, workers, path, None)
     }
 
@@ -67,7 +67,7 @@ impl SqueezeEngine {
         workers: usize,
         path: MapPath,
         cache: Option<&MapCache>,
-    ) -> SqueezeEngine {
+    ) -> ThreadSqueezeEngine {
         let maps = match cache {
             Some(c) => c.thread_maps(spec, r),
             None => Arc::new(ThreadMaps::build(spec, r)),
@@ -82,7 +82,7 @@ impl SqueezeEngine {
             MapPath::Tensor(_) => Some(nu_a_fragment(&maps.ctx)),
             MapPath::Scalar => None,
         };
-        SqueezeEngine {
+        ThreadSqueezeEngine {
             maps,
             rule,
             buf,
@@ -98,7 +98,7 @@ struct OutPtr(*mut u8);
 unsafe impl Send for OutPtr {}
 unsafe impl Sync for OutPtr {}
 
-impl Engine for SqueezeEngine {
+impl Engine for ThreadSqueezeEngine {
     fn name(&self) -> String {
         match self.path {
             MapPath::Scalar => "squeeze".into(),
@@ -204,7 +204,7 @@ mod tests {
     fn agrees_with_bb_on_all_catalog() {
         for spec in catalog::all() {
             let mut bb = BbEngine::new(&spec, 3, Rule::game_of_life(), 0.4, 5, 2);
-            let mut sq = SqueezeEngine::new(
+            let mut sq = ThreadSqueezeEngine::new(
                 &spec,
                 3,
                 Rule::game_of_life(),
@@ -227,7 +227,7 @@ mod tests {
     fn tensor_path_agrees_with_scalar_path() {
         let spec = catalog::sierpinski_triangle();
         for mode in [MmaMode::Fp16, MmaMode::F32] {
-            let mut a = SqueezeEngine::new(
+            let mut a = ThreadSqueezeEngine::new(
                 &spec,
                 5,
                 Rule::game_of_life(),
@@ -236,7 +236,7 @@ mod tests {
                 2,
                 MapPath::Scalar,
             );
-            let mut b = SqueezeEngine::new(
+            let mut b = ThreadSqueezeEngine::new(
                 &spec,
                 5,
                 Rule::game_of_life(),
@@ -252,7 +252,7 @@ mod tests {
     #[test]
     fn memory_is_compact_scale() {
         let spec = catalog::sierpinski_triangle();
-        let sq = SqueezeEngine::new(
+        let sq = ThreadSqueezeEngine::new(
             &spec,
             8,
             Rule::game_of_life(),
@@ -274,7 +274,7 @@ mod tests {
     fn cached_engine_matches_uncached() {
         let spec = catalog::sierpinski_carpet();
         let cache = crate::maps::MapCache::new();
-        let mut a = SqueezeEngine::with_cache(
+        let mut a = ThreadSqueezeEngine::with_cache(
             &spec,
             3,
             Rule::game_of_life(),
@@ -284,7 +284,7 @@ mod tests {
             MapPath::Scalar,
             Some(&cache),
         );
-        let mut b = SqueezeEngine::new(&spec, 3, Rule::game_of_life(), 0.4, 5, 2, MapPath::Scalar);
+        let mut b = ThreadSqueezeEngine::new(&spec, 3, Rule::game_of_life(), 0.4, 5, 2, MapPath::Scalar);
         assert_eq!(run_and_hash(&mut a, 6), run_and_hash(&mut b, 6));
         assert_eq!(cache.stats().misses, 1);
     }
@@ -293,7 +293,7 @@ mod tests {
     fn sparse_activity_dies_out_or_stabilizes() {
         // a single live cell must die (underpopulation) in one step
         let spec = catalog::sierpinski_triangle();
-        let mut sq = SqueezeEngine::new(
+        let mut sq = ThreadSqueezeEngine::new(
             &spec,
             4,
             Rule::game_of_life(),

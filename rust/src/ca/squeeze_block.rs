@@ -1,44 +1,62 @@
 //! Block-level Squeeze (paper §3.5) — the configuration that wins the
-//! paper's performance plots (best at ρ = 16).
+//! paper's performance plots (best at ρ = 16) — as ONE engine generic
+//! over the state backend (DESIGN.md §5d).
 //!
 //! The compact grid is built over *blocks*: a coarse level-`r_b` fractal
 //! whose cells are `ρ × ρ` expanded micro-tiles. The maps run on block
-//! coordinates only, and since this engine went through the map-cache
-//! refactor they no longer run per step at all: the per-block λ and the
-//! ≤ 8 neighbor-block ν maps are materialized once into a
-//! [`BlockMaps`] adjacency table (optionally through the tensor-core MMA
-//! path, 8 ν maps per 16×16 fragment — the paper's grouping) and every
-//! step is pure table-driven tile stencilling.
+//! coordinates only, and since the map-cache refactor they no longer run
+//! per step at all: the per-block λ and the ≤ 8 neighbor-block ν maps
+//! are materialized once into a [`BlockMaps`] adjacency table
+//! (optionally through the tensor-core MMA path, 8 ν maps per 16×16
+//! fragment — the paper's grouping) and every step is pure table-driven
+//! tile stencilling.
+//!
+//! How a tile is *stored* and *transitioned* is the backend's business
+//! ([`crate::ca::backend::StateBackend`]): [`SqueezeBlockEngine`]
+//! (`SqueezeEngine<ByteBackend>`) keeps one byte per cell and sweeps
+//! scalar tiles; [`PackedSqueezeBlockEngine`]
+//! (`SqueezeEngine<PackedBackend>`) keeps one *bit* per cell and sweeps
+//! word-parallel carry-save kernels (`ca::bitkernel`). Both share this
+//! file's single step loop, seeding loop, and canonical indexing, so
+//! they are bit-identical step for step by construction.
 //!
 //! Stepping is tiled and parallel: the worker pool (`util::pool`) walks
 //! contiguous chunks of blocks — the CPU analogue of one CUDA thread
-//! block per coarse cell — writing into the back buffer of a
-//! [`DoubleBuffer`], so neighbor reads through the ν-resolved slots are
-//! race-free by construction.
+//! block per coarse cell — writing into the back buffer through the
+//! backend's disjoint-tile contract, so neighbor reads through the
+//! ν-resolved slots are race-free by construction.
 
+use super::backend::{ByteBackend, PackedBackend, StateBackend, UnitPtr};
 use super::engine::{seeded_alive, Engine};
-use super::grid::DoubleBuffer;
+use super::grid::Buffer;
 use super::rule::Rule;
 use super::squeeze::MapPath;
-use crate::fractal::{Coord, FractalSpec, MOORE};
+use crate::fractal::{Coord, FractalSpec};
 use crate::maps::block::BlockError;
-use crate::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
+use crate::maps::cache::{BlockMaps, MapCache};
 use crate::maps::lambda::lambda;
-use crate::tcu::MmaMode;
 use crate::util::pool::parallel_for_chunks;
 use std::sync::Arc;
 
-pub struct SqueezeBlockEngine {
+/// The block-level Squeeze engine over any state backend.
+pub struct SqueezeEngine<B: StateBackend = ByteBackend> {
     /// Shared (possibly cached) block-level map bundle.
     maps: Arc<BlockMaps>,
+    backend: B,
     rule: Rule,
-    /// Block-major storage: block slot × ρ² + intra offset.
-    buf: DoubleBuffer,
+    /// Block-major storage: block slot × units-per-tile + intra offset.
+    buf: Buffer<B::Unit>,
     workers: usize,
     path: MapPath,
 }
 
-impl SqueezeBlockEngine {
+/// Byte-per-cell block engine (the `squeeze:<ρ>` factory variant).
+pub type SqueezeBlockEngine = SqueezeEngine<ByteBackend>;
+
+/// Bit-planar block engine (the `squeeze-bits:<ρ>` factory variant).
+pub type PackedSqueezeBlockEngine = SqueezeEngine<PackedBackend>;
+
+impl<B: StateBackend> SqueezeEngine<B> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         spec: &FractalSpec,
@@ -49,7 +67,7 @@ impl SqueezeBlockEngine {
         seed: u64,
         workers: usize,
         path: MapPath,
-    ) -> Result<SqueezeBlockEngine, BlockError> {
+    ) -> Result<SqueezeEngine<B>, BlockError> {
         Self::with_cache(spec, r, rho, rule, density, seed, workers, path, None)
     }
 
@@ -69,16 +87,14 @@ impl SqueezeBlockEngine {
         workers: usize,
         path: MapPath,
         cache: Option<&MapCache>,
-    ) -> Result<SqueezeBlockEngine, BlockError> {
-        let mma = match path {
-            MapPath::Scalar => None,
-            MapPath::Tensor(mode) => Some(mode),
-        };
+    ) -> Result<SqueezeEngine<B>, BlockError> {
+        let mma = B::mma_mode(path);
         let maps = match cache {
             Some(c) => c.block_maps(spec, r, rho, mma, workers)?,
             None => Arc::new(BlockMaps::build(spec, r, rho, mma, workers)?),
         };
-        let mut buf = DoubleBuffer::zeroed(maps.block.stored_cells());
+        let backend = B::new(&maps.block);
+        let mut buf = Buffer::zeroed(maps.block.blocks() * backend.units_per_tile());
         // Canonical seeding: compact linear index -> expanded -> slot.
         let full = &maps.full;
         for idx in 0..full.compact.area() {
@@ -88,11 +104,12 @@ impl SqueezeBlockEngine {
                     .block
                     .storage_index(e)
                     .expect("fractal cell must have a slot");
-                buf.cur[slot as usize] = 1;
+                backend.set_cell(&mut buf.cur, slot);
             }
         }
-        Ok(SqueezeBlockEngine {
+        Ok(SqueezeEngine {
             maps,
+            backend,
             rule,
             buf,
             workers,
@@ -104,112 +121,36 @@ impl SqueezeBlockEngine {
     pub fn maps(&self) -> &BlockMaps {
         &self.maps
     }
-}
 
-/// Back-buffer pointer handed to the sweep workers (disjoint writes).
-/// Shared with the shard subsystem's per-shard sweeps.
-#[derive(Clone, Copy)]
-pub(crate) struct OutPtr(pub(crate) *mut u8);
-unsafe impl Send for OutPtr {}
-unsafe impl Sync for OutPtr {}
+    /// The backend's tile geometry (tests / capacity accounting).
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
 
-/// Transition one block's `ρ×ρ` tile: read `cur`, write the tile at
-/// `base` through `out` (same indexing as `cur`). `nb` is the block's
-/// 8 Moore neighbor base slots in whatever buffer `cur` is — the global
-/// adjacency for the single engine, the shard-remapped `local ++ ghost`
-/// table for a `ShardEngine`. This is the one sweep body both the
-/// single-engine and the sharded step loops execute, which is what
-/// keeps them bit-identical by construction.
-#[inline]
-pub(crate) fn sweep_block(
-    cur: &[u8],
-    out: OutPtr,
-    block: &crate::maps::block::BlockCtx,
-    nb: &[u64; 8],
-    base: u64,
-    rule: Rule,
-) {
-    let rho = block.rho;
-    let p = out;
-    // §Perf iteration 3: interior cells (all of whose Moore neighbors
-    // stay inside this tile) take a branch-free direct-indexing path —
-    // at ρ=16 that is (ρ-2)²/ρ² ≈ 77% of the tile. Only the 4ρ-4 rim
-    // cells pay the wrap/neighbor-block logic.
-    let interior =
-        |ix: u32, iy: u32| -> bool { ix >= 1 && iy >= 1 && ix + 1 < rho && iy + 1 < rho };
-    for iy in 0..rho {
-        for ix in 0..rho {
-            let intra = (iy * rho + ix) as u64;
-            let slot = base + intra;
-            // holes of the micro-tile stay dead
-            if !block.intra_on_fractal(ix, iy) {
-                unsafe { p.0.add(slot as usize).write(0) };
-                continue;
-            }
-            let count = if interior(ix, iy) {
-                let i = (base + intra) as usize;
-                let rs = rho as usize;
-                // row above, same row, row below — direct sums
-                cur[i - rs - 1] as u32
-                    + cur[i - rs] as u32
-                    + cur[i - rs + 1] as u32
-                    + cur[i - 1] as u32
-                    + cur[i + 1] as u32
-                    + cur[i + rs - 1] as u32
-                    + cur[i + rs] as u32
-                    + cur[i + rs + 1] as u32
-            } else {
-                let mut count = 0u32;
-                for (dx, dy) in MOORE {
-                    let jx = ix as i64 + dx as i64;
-                    let jy = iy as i64 + dy as i64;
-                    // which block does the neighbor land in?
-                    let (bx, wrapped_x) = wrap(jx, rho);
-                    let (by, wrapped_y) = wrap(jy, rho);
-                    let nslot = if bx == 0 && by == 0 {
-                        base + (wrapped_y * rho + wrapped_x) as u64
-                    } else {
-                        // (bx,by) ∈ {-1,0,1}² -> Moore slot, resolved
-                        // from the cached adjacency
-                        let nbase = nb[moore_index(bx, by)];
-                        if nbase == NO_BLOCK {
-                            continue;
-                        }
-                        nbase + (wrapped_y * rho + wrapped_x) as u64
-                    };
-                    count += cur[nslot as usize] as u32;
-                }
-                count
-            };
-            let v = rule.next_u8(cur[slot as usize], count);
-            unsafe { p.0.add(slot as usize).write(v) };
-        }
+    /// Bytes of the state buffers alone (tests / capacity accounting).
+    pub fn state_bytes(&self) -> u64 {
+        self.buf.bytes()
     }
 }
 
-impl Engine for SqueezeBlockEngine {
+impl<B: StateBackend> Engine for SqueezeEngine<B> {
     fn name(&self) -> String {
-        let base = match self.path {
-            MapPath::Scalar => "squeeze",
-            MapPath::Tensor(MmaMode::Fp16) => "squeeze-tcu",
-            MapPath::Tensor(MmaMode::F32) => "squeeze-tcu-f32",
-        };
-        format!("{base}-rho{}", self.maps.block.rho)
+        format!("{}-rho{}", B::base_name(self.path), self.maps.block.rho)
     }
 
     fn step(&mut self) {
         let maps = &*self.maps;
-        let block = &maps.block;
-        let rho = block.rho;
-        let tile = rho as u64 * rho as u64;
+        let backend = &self.backend;
+        let rho = maps.block.rho;
+        let tile_cells = rho as u64 * rho as u64;
         let cur = &self.buf.cur;
         let rule = self.rule;
-        let out = OutPtr(self.buf.next.as_mut_ptr());
+        let out = UnitPtr(self.buf.next.as_mut_ptr());
         // one "thread block" per coarse fractal cell; the adjacency table
         // replaces the per-step λ + 8 ν of the pre-cache engine
-        parallel_for_chunks(block.blocks(), self.workers, move |start, end| {
+        parallel_for_chunks(maps.block.blocks(), self.workers, move |start, end| {
             for bidx in start..end {
-                sweep_block(cur, out, block, maps.neighbors_of(bidx), bidx * tile, rule);
+                backend.sweep_tile(cur, out, maps.neighbors_of(bidx), bidx * tile_cells, rule);
             }
         });
         self.buf.swap();
@@ -220,7 +161,7 @@ impl Engine for SqueezeBlockEngine {
     }
 
     fn population(&self) -> u64 {
-        self.buf.population()
+        B::population(&self.buf.cur)
     }
 
     fn memory_bytes(&self) -> u64 {
@@ -233,37 +174,7 @@ impl Engine for SqueezeBlockEngine {
         let full = &self.maps.full;
         let e = lambda(full, Coord::from_linear(idx, full.compact.w));
         let slot = self.maps.block.storage_index(e).expect("fractal cell");
-        self.buf.cur[slot as usize]
-    }
-}
-
-/// Split an intra coordinate that may have stepped out of `[0, rho)` into
-/// (block delta ∈ {-1,0,1}, wrapped intra coordinate).
-#[inline(always)]
-fn wrap(j: i64, rho: u32) -> (i64, u32) {
-    if j < 0 {
-        (-1, (j + rho as i64) as u32)
-    } else if j >= rho as i64 {
-        (1, (j - rho as i64) as u32)
-    } else {
-        (0, j as u32)
-    }
-}
-
-/// Index of direction (dx,dy) ∈ Moore order.
-#[inline(always)]
-fn moore_index(dx: i64, dy: i64) -> usize {
-    // MOORE = [(-1,-1),(0,-1),(1,-1),(-1,0),(1,0),(-1,1),(0,1),(1,1)]
-    match (dx, dy) {
-        (-1, -1) => 0,
-        (0, -1) => 1,
-        (1, -1) => 2,
-        (-1, 0) => 3,
-        (1, 0) => 4,
-        (-1, 1) => 5,
-        (0, 1) => 6,
-        (1, 1) => 7,
-        _ => unreachable!("not a Moore offset: ({dx},{dy})"),
+        self.backend.get_cell(&self.buf.cur, slot)
     }
 }
 
@@ -275,7 +186,7 @@ mod tests {
     use crate::fractal::catalog;
 
     #[test]
-    fn agrees_with_bb_for_every_rho() {
+    fn agrees_with_bb_for_every_rho_byte_and_packed() {
         let spec = catalog::sierpinski_triangle();
         let r = 5;
         let reference = {
@@ -294,7 +205,19 @@ mod tests {
                 MapPath::Scalar,
             )
             .unwrap();
-            assert_eq!(run_and_hash(&mut sq, 6), reference, "rho={rho}");
+            assert_eq!(run_and_hash(&mut sq, 6), reference, "byte rho={rho}");
+            let mut pk = PackedSqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.4,
+                21,
+                2,
+                MapPath::Scalar,
+            )
+            .unwrap();
+            assert_eq!(run_and_hash(&mut pk, 6), reference, "packed rho={rho}");
         }
     }
 
@@ -319,6 +242,23 @@ mod tests {
                 )
                 .unwrap();
                 assert_eq!(run_and_hash(&mut sq, 5), reference, "{} rho={rho}", spec.name);
+                let mut pk = PackedSqueezeBlockEngine::new(
+                    &spec,
+                    r,
+                    rho,
+                    Rule::game_of_life(),
+                    0.5,
+                    2,
+                    2,
+                    MapPath::Scalar,
+                )
+                .unwrap();
+                assert_eq!(
+                    run_and_hash(&mut pk, 5),
+                    reference,
+                    "{} packed rho={rho}",
+                    spec.name
+                );
             }
         }
     }
@@ -345,9 +285,11 @@ mod tests {
             0.4,
             13,
             2,
-            MapPath::Tensor(MmaMode::Fp16),
+            MapPath::Tensor(crate::tcu::MmaMode::Fp16),
         )
         .unwrap();
+        assert_eq!(a.name(), "squeeze-rho4");
+        assert_eq!(b.name(), "squeeze-tcu-rho4");
         assert_eq!(run_and_hash(&mut a, 5), run_and_hash(&mut b, 5));
     }
 
@@ -370,8 +312,107 @@ mod tests {
             assert_eq!(
                 sq.memory_bytes(),
                 2 * crate::memory::squeeze_bytes(&spec, 8, rho, 1).unwrap()
-                    + sq.maps.table_bytes(),
+                    + sq.maps().table_bytes(),
                 "rho={rho}"
+            );
+        }
+    }
+
+    #[test]
+    fn multiword_rows_agree_with_bb_at_rho_128() {
+        // ρ=128 -> wpr=2: exercises the cross-word boundary stitching
+        // (and, at r=8 with 3 coarse blocks, the cross-block one too)
+        let spec = catalog::sierpinski_triangle();
+        let r = 8;
+        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 77, 4);
+        let mut sq = PackedSqueezeBlockEngine::new(
+            &spec,
+            r,
+            128,
+            Rule::game_of_life(),
+            0.4,
+            77,
+            4,
+            MapPath::Scalar,
+        )
+        .unwrap();
+        assert_eq!(sq.maps().block.blocks(), 3);
+        assert_eq!(sq.backend().wpr, 2);
+        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+
+    #[test]
+    fn ragged_multiword_rows_agree_at_rho_81() {
+        // s=3, ρ=81 -> wpr=2 with a 17-bit ragged last word; r=4 is one
+        // block (pure micro brute force through the word kernels)
+        let spec = catalog::vicsek();
+        let r = 4;
+        let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.5, 5, 2);
+        let mut sq = PackedSqueezeBlockEngine::new(
+            &spec,
+            r,
+            81,
+            Rule::game_of_life(),
+            0.5,
+            5,
+            2,
+            MapPath::Scalar,
+        )
+        .unwrap();
+        assert_eq!(sq.backend().wpr, 2);
+        assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
+    }
+
+    #[test]
+    fn packed_state_is_at_most_an_eighth_plus_padding_of_bytes() {
+        let spec = catalog::sierpinski_triangle();
+        for (r, rho) in [(6u32, 4u32), (7, 16), (8, 128)] {
+            let byte = SqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.3,
+                1,
+                1,
+                MapPath::Scalar,
+            )
+            .unwrap();
+            let packed = PackedSqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.3,
+                1,
+                1,
+                MapPath::Scalar,
+            )
+            .unwrap();
+            let byte_state = 2 * byte.maps().block.stored_cells();
+            let packed_state = packed.state_bytes();
+            // exact layout model: each of the 2 buffers holds
+            // blocks · ρ rows of ⌈ρ/64⌉ 8-byte words — i.e. ⌈bytes/8⌉
+            // plus the row padding to the next word boundary
+            let padded_eighth =
+                2 * packed.maps().block.blocks() * rho as u64 * 8 * (rho.div_ceil(64) as u64);
+            assert_eq!(packed_state, padded_eighth, "r={r} rho={rho}");
+            if rho >= 16 {
+                // beyond two words of cells per byte-row the 8x factor
+                // dominates the padding: packed strictly undercuts bytes
+                assert!(
+                    packed_state < byte_state,
+                    "packed {packed_state} vs byte {byte_state} at rho={rho}"
+                );
+            }
+            // and the packed engine reports exactly state + table bytes
+            assert_eq!(
+                packed.memory_bytes(),
+                packed_state + packed.maps().table_bytes()
+            );
+            assert_eq!(
+                packed_state,
+                2 * crate::memory::packed_squeeze_bytes(&spec, r, rho).unwrap()
             );
         }
     }
@@ -393,42 +434,46 @@ mod tests {
             MapPath::Scalar,
         )
         .unwrap();
-        assert_eq!(sq.maps.block.blocks(), 1);
+        assert_eq!(sq.maps().block.blocks(), 1);
         assert_eq!(run_and_hash(&mut bb, 4), run_and_hash(&mut sq, 4));
     }
 
     #[test]
     fn parallel_stepping_is_deterministic_across_worker_counts() {
-        let spec = catalog::sierpinski_triangle();
-        let r = 7;
-        let reference = {
-            let mut serial = SqueezeBlockEngine::new(
-                &spec,
-                r,
-                8,
-                Rule::game_of_life(),
-                0.42,
-                7,
-                1,
-                MapPath::Scalar,
-            )
-            .unwrap();
-            run_and_hash(&mut serial, 8)
-        };
-        for workers in [2usize, 4, 8, 16] {
-            let mut par = SqueezeBlockEngine::new(
-                &spec,
-                r,
-                8,
-                Rule::game_of_life(),
-                0.42,
-                7,
-                workers,
-                MapPath::Scalar,
-            )
-            .unwrap();
-            assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
+        fn check<B: StateBackend>() {
+            let spec = catalog::sierpinski_triangle();
+            let r = 7;
+            let reference = {
+                let mut serial = SqueezeEngine::<B>::new(
+                    &spec,
+                    r,
+                    8,
+                    Rule::game_of_life(),
+                    0.42,
+                    7,
+                    1,
+                    MapPath::Scalar,
+                )
+                .unwrap();
+                run_and_hash(&mut serial, 8)
+            };
+            for workers in [2usize, 4, 8, 16] {
+                let mut par = SqueezeEngine::<B>::new(
+                    &spec,
+                    r,
+                    8,
+                    Rule::game_of_life(),
+                    0.42,
+                    7,
+                    workers,
+                    MapPath::Scalar,
+                )
+                .unwrap();
+                assert_eq!(run_and_hash(&mut par, 8), reference, "workers={workers}");
+            }
         }
+        check::<ByteBackend>();
+        check::<PackedBackend>();
     }
 
     #[test]
@@ -475,5 +520,73 @@ mod tests {
         assert_eq!(cache.stats().misses, 1);
         assert_eq!(cache.stats().hits, 1);
         assert_eq!(run_and_hash(&mut a, 6), run_and_hash(&mut uncached, 6));
+    }
+
+    #[test]
+    fn packed_engine_shares_the_byte_engines_cache_entry() {
+        // same (fractal, r, ρ, scalar) key: one interned adjacency for
+        // both state backends
+        let spec = catalog::vicsek();
+        let cache = MapCache::new();
+        let byte = SqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        )
+        .unwrap();
+        let packed = PackedSqueezeBlockEngine::with_cache(
+            &spec,
+            4,
+            3,
+            Rule::game_of_life(),
+            0.5,
+            11,
+            2,
+            MapPath::Scalar,
+            Some(&cache),
+        )
+        .unwrap();
+        assert!(std::ptr::eq(&*packed.maps, byte.maps()));
+        assert_eq!(cache.stats().misses, 1);
+        assert_eq!(cache.stats().hits, 1);
+        // identical canonical state through both layouts
+        assert_eq!(packed.state_hash(), byte.state_hash());
+        assert_eq!(packed.population(), byte.population());
+        assert_eq!(packed.name(), "squeeze-bits-rho3");
+    }
+
+    #[test]
+    fn invalid_rho_is_an_error_not_a_panic() {
+        let spec = catalog::sierpinski_triangle();
+        for (r, rho) in [(6u32, 3u32), (2, 16)] {
+            assert!(SqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.4,
+                1,
+                1,
+                MapPath::Scalar
+            )
+            .is_err());
+            assert!(PackedSqueezeBlockEngine::new(
+                &spec,
+                r,
+                rho,
+                Rule::game_of_life(),
+                0.4,
+                1,
+                1,
+                MapPath::Scalar
+            )
+            .is_err());
+        }
     }
 }

@@ -1,8 +1,10 @@
 //! Simulation job specifications and results — the coordinator's wire
 //! types. Jobs are parseable from `key=value` lines (the `serve` mode's
-//! request protocol) and from config-file sections.
+//! request protocol) and from config-file sections. Engine strings and
+//! the `shards=`/`packed=` promotions share one grammar with the
+//! CLI/factory layer: [`EngineSpec`].
 
-use crate::ca::{EngineKind, Rule};
+use crate::ca::{EngineKind, EngineSpec, Rule};
 use crate::fractal::FractalSpec;
 use crate::shard::ShardStats;
 
@@ -18,6 +20,15 @@ pub struct JobSpec {
     pub seed: u64,
     pub rule: Rule,
     pub workers: usize,
+    /// Sharded engines: sweep interior blocks during the exchange
+    /// (`overlap=` key; default on).
+    pub overlap: bool,
+    /// Sharded engines: ship rim-compacted halos (`compact=` key;
+    /// default on).
+    pub compact: bool,
+    /// Sharded engines: cost-weighted partition from t=0 live cells
+    /// (`shards=auto:<S>`; default off).
+    pub balance: bool,
 }
 
 impl Default for JobSpec {
@@ -32,7 +43,18 @@ impl Default for JobSpec {
             seed: 42,
             rule: Rule::game_of_life(),
             workers: crate::util::pool::default_workers(),
+            overlap: true,
+            compact: true,
+            balance: false,
         }
+    }
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool, String> {
+    match v {
+        "1" | "true" => Ok(true),
+        "0" | "false" => Ok(false),
+        _ => Err(format!("bad {key}={v} (want 0/1/true/false)")),
     }
 }
 
@@ -42,9 +64,11 @@ impl JobSpec {
     /// `shards=N` promotes a (scalar) squeeze engine to the sharded
     /// decomposition — `engine=squeeze:16 shards=4` is equivalent to
     /// `engine=sharded-squeeze:16:4` — and overrides the shard count of
-    /// an already-sharded engine. `packed=1` promotes a scalar squeeze
-    /// engine (sharded or not) to its bit-planar `squeeze-bits` twin;
-    /// both keys compose in any order.
+    /// an already-sharded engine; `shards=auto:N` additionally turns on
+    /// the cost-weighted partitioner. `packed=1` promotes a scalar
+    /// squeeze engine (sharded or not) to its bit-planar `squeeze-bits`
+    /// twin. `overlap=0/1` and `compact=0/1` tune the sharded exchange
+    /// (both default on). All keys compose in any order.
     pub fn parse_line(id: u64, line: &str) -> Result<JobSpec, String> {
         let mut spec = JobSpec {
             id,
@@ -52,16 +76,15 @@ impl JobSpec {
         };
         let mut shards: Option<u32> = None;
         let mut packed = false;
+        let mut overlap: Option<bool> = None;
+        let mut compact: Option<bool> = None;
         for tok in line.split_whitespace() {
             let (k, v) = tok
                 .split_once('=')
                 .ok_or_else(|| format!("bad token {tok:?} (want key=value)"))?;
             match k {
                 "fractal" => spec.fractal = v.to_string(),
-                "engine" => {
-                    spec.engine = EngineKind::parse(v)
-                        .ok_or_else(|| format!("unknown engine {v:?}"))?
-                }
+                "engine" => spec.engine = EngineSpec::parse(v)?.kind,
                 "r" => spec.r = v.parse().map_err(|_| format!("bad r={v}"))?,
                 "steps" => spec.steps = v.parse().map_err(|_| format!("bad steps={v}"))?,
                 "density" => {
@@ -75,55 +98,55 @@ impl JobSpec {
                     spec.workers = v.parse().map_err(|_| format!("bad workers={v}"))?
                 }
                 "shards" => {
-                    let n: u32 = v.parse().map_err(|_| format!("bad shards={v}"))?;
+                    let count = match v.strip_prefix("auto:") {
+                        Some(n) => {
+                            spec.balance = true;
+                            n
+                        }
+                        None => v,
+                    };
+                    let n: u32 = count.parse().map_err(|_| format!("bad shards={v}"))?;
                     if n == 0 {
                         return Err("shards must be >= 1".into());
                     }
                     shards = Some(n);
                 }
-                "packed" => {
-                    packed = match v {
-                        "1" | "true" => true,
-                        "0" | "false" => false,
-                        _ => return Err(format!("bad packed={v} (want 0/1/true/false)")),
-                    };
-                }
+                "packed" => packed = parse_bool("packed", v)?,
+                "overlap" => overlap = Some(parse_bool("overlap", v)?),
+                "compact" => compact = Some(parse_bool("compact", v)?),
                 other => return Err(format!("unknown key {other:?}")),
             }
         }
+        let mut engine = EngineSpec { kind: spec.engine };
         if let Some(n) = shards {
-            spec.engine = match spec.engine {
-                EngineKind::Squeeze { rho, tensor: false }
-                | EngineKind::ShardedSqueeze { rho, .. } => {
-                    EngineKind::ShardedSqueeze { rho, shards: n }
-                }
-                EngineKind::PackedSqueeze { rho }
-                | EngineKind::PackedShardedSqueeze { rho, .. } => {
-                    EngineKind::PackedShardedSqueeze { rho, shards: n }
-                }
-                other => {
-                    return Err(format!(
-                        "shards= requires a scalar squeeze engine (got {other:?})"
-                    ))
-                }
-            };
+            engine = engine.with_shards(n)?;
         }
-        if packed {
-            spec.engine = match spec.engine {
-                EngineKind::Squeeze { rho, tensor: false } => EngineKind::PackedSqueeze { rho },
-                EngineKind::ShardedSqueeze { rho, shards } => {
-                    EngineKind::PackedShardedSqueeze { rho, shards }
-                }
-                EngineKind::PackedSqueeze { rho } => EngineKind::PackedSqueeze { rho },
-                EngineKind::PackedShardedSqueeze { rho, shards } => {
-                    EngineKind::PackedShardedSqueeze { rho, shards }
-                }
-                other => {
-                    return Err(format!(
-                        "packed= requires a scalar squeeze engine (got {other:?})"
-                    ))
-                }
-            };
+        engine = engine.with_packed(packed)?;
+        spec.engine = engine.kind;
+        // `balance` needs no sharded-ness check of its own: it is only
+        // set by `shards=auto:`, and `with_shards` above already
+        // rejected every non-sharded engine family.
+        let sharded = matches!(
+            spec.engine,
+            EngineKind::ShardedSqueeze { .. } | EngineKind::PackedShardedSqueeze { .. }
+        );
+        if let Some(v) = overlap {
+            if !sharded {
+                return Err(format!(
+                    "overlap= requires a sharded engine (got {:?})",
+                    spec.engine
+                ));
+            }
+            spec.overlap = v;
+        }
+        if let Some(v) = compact {
+            if !sharded {
+                return Err(format!(
+                    "compact= requires a sharded engine (got {:?})",
+                    spec.engine
+                ));
+            }
+            spec.compact = v;
         }
         Ok(spec)
     }
@@ -162,8 +185,8 @@ pub struct JobResult {
     pub memory_bytes: u64,
     pub state_hash: u64,
     /// Decomposition facts when the engine ran sharded (`None`
-    /// otherwise). Mirrored into the coordinator's halo/imbalance
-    /// gauges; not part of the TSV row.
+    /// otherwise). Mirrored into the coordinator's halo/imbalance/
+    /// compaction gauges; not part of the TSV row.
     pub shard: Option<ShardStats>,
 }
 
@@ -207,6 +230,8 @@ mod tests {
         assert_eq!((j.r, j.steps, j.seed, j.workers), (5, 7, 9, 2));
         assert!((j.density - 0.25).abs() < 1e-12);
         assert_eq!(j.rule.notation(), "B36/S23");
+        // the shard knobs default to the fast path
+        assert!(j.overlap && j.compact && !j.balance);
     }
 
     #[test]
@@ -235,6 +260,39 @@ mod tests {
         assert!(JobSpec::parse_line(1, "engine=bb shards=2").is_err());
         assert!(JobSpec::parse_line(1, "engine=squeeze-tcu:4 shards=2").is_err());
         assert!(JobSpec::parse_line(1, "shards=0").is_err());
+    }
+
+    #[test]
+    fn auto_shards_turns_on_the_weighted_partitioner() {
+        let j = JobSpec::parse_line(1, "shards=auto:4 engine=squeeze:8 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 8, shards: 4 });
+        assert!(j.balance);
+        // composes with packed
+        let j = JobSpec::parse_line(1, "packed=1 shards=auto:3 engine=squeeze:4").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 });
+        assert!(j.balance);
+        // plain shards= stays uniform
+        let j = JobSpec::parse_line(1, "shards=4 engine=squeeze:8").unwrap();
+        assert!(!j.balance);
+        // garbage counts are errors
+        assert!(JobSpec::parse_line(1, "shards=auto:0").is_err());
+        assert!(JobSpec::parse_line(1, "shards=auto:x").is_err());
+        assert!(JobSpec::parse_line(1, "shards=auto:").is_err());
+    }
+
+    #[test]
+    fn overlap_and_compact_keys_tune_sharded_jobs_only() {
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:4 overlap=0 compact=0").unwrap();
+        assert!(!j.overlap && !j.compact);
+        let j = JobSpec::parse_line(1, "overlap=1 compact=1 shards=2").unwrap();
+        assert!(j.overlap && j.compact);
+        // packed sharded accepts them too (keys compose in any order)
+        let j = JobSpec::parse_line(1, "compact=0 engine=squeeze-bits:8:2").unwrap();
+        assert!(j.overlap && !j.compact);
+        // non-sharded engines reject the keys; garbage values too
+        assert!(JobSpec::parse_line(1, "engine=squeeze:4 overlap=0").is_err());
+        assert!(JobSpec::parse_line(1, "engine=bb compact=1").is_err());
+        assert!(JobSpec::parse_line(1, "engine=sharded-squeeze:8:2 overlap=yes").is_err());
     }
 
     #[test]

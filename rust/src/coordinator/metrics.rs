@@ -1,8 +1,8 @@
 //! Coordinator metrics: atomic counters + aggregate throughput, cheap
 //! enough to update from every worker on every job. Includes the shared
 //! map-cache hit/miss gauges so a deployment can see how much λ/ν table
-//! reuse the job mix achieves, plus the shard subsystem's halo-traffic
-//! and load-imbalance gauges.
+//! reuse the job mix achieves, plus the shard subsystem's halo-traffic,
+//! halo-compaction and load-imbalance gauges.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -25,8 +25,11 @@ pub struct Metrics {
     /// Sharded jobs observed (the halo/imbalance gauges below hold the
     /// most recent sharded job's values).
     sharded_jobs: AtomicU64,
-    /// Halo-exchange traffic of the last sharded job, bytes per step.
+    /// Halo-exchange traffic of the last sharded job, bytes per step
+    /// (rim-compacted when compaction was on).
     halo_bytes_per_step: AtomicU64,
+    /// What the last sharded job's routes would ship as whole tiles.
+    halo_tile_bytes_per_step: AtomicU64,
     /// Shard load imbalance of the last sharded job (f64 bit pattern).
     shard_imbalance_bits: AtomicU64,
 }
@@ -43,6 +46,7 @@ pub struct MetricsSnapshot {
     pub map_cache_misses: u64,
     pub sharded_jobs: u64,
     pub halo_bytes_per_step: u64,
+    pub halo_tile_bytes_per_step: u64,
     pub shard_imbalance: f64,
 }
 
@@ -75,6 +79,8 @@ impl Metrics {
         self.sharded_jobs.fetch_add(1, Ordering::Relaxed);
         self.halo_bytes_per_step
             .store(stats.halo_bytes_per_step, Ordering::Relaxed);
+        self.halo_tile_bytes_per_step
+            .store(stats.halo_tile_bytes_per_step, Ordering::Relaxed);
         self.shard_imbalance_bits
             .store(stats.imbalance.to_bits(), Ordering::Relaxed);
     }
@@ -90,6 +96,7 @@ impl Metrics {
             map_cache_misses: self.map_cache_misses.load(Ordering::Relaxed),
             sharded_jobs: self.sharded_jobs.load(Ordering::Relaxed),
             halo_bytes_per_step: self.halo_bytes_per_step.load(Ordering::Relaxed),
+            halo_tile_bytes_per_step: self.halo_tile_bytes_per_step.load(Ordering::Relaxed),
             shard_imbalance: f64::from_bits(
                 self.shard_imbalance_bits.load(Ordering::Relaxed),
             ),
@@ -116,6 +123,16 @@ impl MetricsSnapshot {
         .hit_rate()
     }
 
+    /// Shipped halo bytes over the whole-tile baseline for the last
+    /// sharded job (1.0 when there was no halo).
+    pub fn halo_compaction_ratio(&self) -> f64 {
+        if self.halo_tile_bytes_per_step == 0 {
+            1.0
+        } else {
+            self.halo_bytes_per_step as f64 / self.halo_tile_bytes_per_step as f64
+        }
+    }
+
     pub fn to_line(&self) -> String {
         let mut line = format!(
             "jobs started={} completed={} failed={} busy={:.3}s throughput={:.3e} upd/s \
@@ -131,8 +148,11 @@ impl MetricsSnapshot {
         );
         if self.sharded_jobs > 0 {
             line.push_str(&format!(
-                " sharded={} halo={}B/step imbalance={:.2}",
-                self.sharded_jobs, self.halo_bytes_per_step, self.shard_imbalance
+                " sharded={} halo={}B/step halo_compaction={:.2} imbalance={:.2}",
+                self.sharded_jobs,
+                self.halo_bytes_per_step,
+                self.halo_compaction_ratio(),
+                self.shard_imbalance
             ));
         }
         line
@@ -162,6 +182,7 @@ mod tests {
         assert_eq!(s.updates_per_busy_s(), 0.0);
         assert!(s.to_line().contains("completed=0"));
         assert_eq!(s.map_cache_hit_rate(), 0.0);
+        assert_eq!(s.halo_compaction_ratio(), 1.0);
     }
 
     #[test]
@@ -184,25 +205,31 @@ mod tests {
         assert!(!m.snapshot().to_line().contains("halo="));
         m.record_sharding(ShardStats {
             shards: 4,
-            halo_bytes_per_step: 2048,
+            halo_bytes_per_step: 512,
+            halo_tile_bytes_per_step: 2048,
             imbalance: 1.25,
         });
         let s = m.snapshot();
         assert_eq!(s.sharded_jobs, 1);
-        assert_eq!(s.halo_bytes_per_step, 2048);
+        assert_eq!(s.halo_bytes_per_step, 512);
+        assert_eq!(s.halo_tile_bytes_per_step, 2048);
+        assert!((s.halo_compaction_ratio() - 0.25).abs() < 1e-12);
         assert!((s.shard_imbalance - 1.25).abs() < 1e-12);
         let line = s.to_line();
         assert!(line.contains("sharded=1"), "{line}");
-        assert!(line.contains("halo=2048B/step"), "{line}");
+        assert!(line.contains("halo=512B/step"), "{line}");
+        assert!(line.contains("halo_compaction=0.25"), "{line}");
         assert!(line.contains("imbalance=1.25"), "{line}");
         // gauges hold the latest job; the counter accumulates
         m.record_sharding(ShardStats {
             shards: 2,
             halo_bytes_per_step: 64,
+            halo_tile_bytes_per_step: 64,
             imbalance: 1.0,
         });
         let s2 = m.snapshot();
         assert_eq!(s2.sharded_jobs, 2);
         assert_eq!(s2.halo_bytes_per_step, 64);
+        assert!((s2.halo_compaction_ratio() - 1.0).abs() < 1e-12);
     }
 }

@@ -55,6 +55,9 @@ pub fn execute_job_with_cache(
         density: spec.density,
         seed: spec.seed,
         workers: spec.workers,
+        overlap: spec.overlap,
+        compact: spec.compact,
+        balance: spec.balance,
     };
     let mut engine = build_with_cache(&fractal, &cfg, cache).map_err(|e| e.to_string())?;
     let t = Timer::start();

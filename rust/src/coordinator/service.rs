@@ -12,15 +12,19 @@
 //!                   backends `squeeze-bits:RHO[:SHARDS]`; `shards=N`
 //!                   promotes a scalar squeeze engine to its sharded
 //!                   twin with N shards (and overrides the count of an
-//!                   already-sharded engine), `packed=1` promotes a
-//!                   scalar squeeze engine to its bit-planar twin.
+//!                   already-sharded engine), `shards=auto:N` also turns
+//!                   on the cost-weighted partitioner, `packed=1`
+//!                   promotes a scalar squeeze engine to its bit-planar
+//!                   twin, and `overlap=0/1` / `compact=0/1` tune the
+//!                   sharded exchange (both default on).
 //!   response line = TSV ([`JobResult::to_tsv`]); errors — malformed
 //!                   lines, unknown engines/fractals, and semantic
 //!                   failures like a ρ that is not a power of `s` — are
 //!                   `ERR <id> <message>` (the session always
 //!                   survives). `quit` ends the session, and `metrics`
 //!                   dumps the aggregate counters, including the
-//!                   map-cache and shard halo/imbalance gauges.
+//!                   map-cache and shard halo/compaction/imbalance
+//!                   gauges.
 
 use std::io::{BufRead, Write};
 

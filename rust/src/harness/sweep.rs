@@ -52,6 +52,7 @@ pub fn measure_with_cache(
         density: 0.4,
         seed: 42,
         workers,
+        ..Default::default()
     };
     let mut engine =
         build_with_cache(spec, &cfg, cache).expect("sweep engine configs are pre-validated");

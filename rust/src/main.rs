@@ -93,6 +93,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         workers: args
             .get_u64("workers", squeeze::util::pool::default_workers() as u64)
             .map_err(|e| e.to_string())? as usize,
+        ..JobSpec::default()
     };
     let result = execute_job(&spec)?;
     println!("{}", JobResult::tsv_header());
@@ -252,6 +253,7 @@ pub fn squeeze_e2e(dir: &str, name: &str, steps: u32) -> Result<String, String> 
             density: 0.4,
             seed: 42,
             workers: squeeze::util::pool::default_workers(),
+            ..Default::default()
         },
     )
     .expect("valid engine config");

@@ -120,7 +120,10 @@ pub fn table2(
 /// block partition. `local_bytes` is the shard's owned state (one
 /// buffer); their sum over all shards equals [`squeeze_bytes`] exactly,
 /// which is what keeps the MRF reports exact under decomposition.
-/// `halo_bytes` is the ghost-ring overhead the decomposition adds.
+/// `halo_bytes` is the ghost-ring overhead the decomposition adds, and
+/// `compacted_halo_bytes` is what the rim-compacted exchange actually
+/// ships into this shard per step (≤ `halo_bytes`, strictly below it
+/// whenever any ghost is consumed from a strict subset of directions).
 #[derive(Clone, Debug)]
 pub struct ShardBytesRow {
     pub shard: usize,
@@ -128,11 +131,18 @@ pub struct ShardBytesRow {
     pub ghost_blocks: u64,
     pub local_bytes: u64,
     pub halo_bytes: u64,
+    /// Rim-compacted per-step halo traffic into this shard (byte cells,
+    /// scaled by `cell_bytes` like `halo_bytes`).
+    pub compacted_halo_bytes: u64,
     /// The shard's owned state under the bit-planar backend (one packed
     /// buffer); sums over shards to [`packed_squeeze_bytes`] exactly.
     pub packed_local_bytes: u64,
     /// Ghost-ring overhead under the bit-planar backend.
     pub packed_halo_bytes: u64,
+    /// Rim-compacted per-step halo traffic under the bit-planar backend
+    /// (whole words, 8 bytes each — rows verbatim, columns/corners
+    /// bit-gathered).
+    pub packed_compacted_halo_bytes: u64,
 }
 
 /// Exact per-shard accounting for `(spec, r, ρ)` split into `shards`
@@ -153,12 +163,24 @@ pub fn sharded_squeeze_report(
 /// [`sharded_squeeze_report`] over an already-built (e.g. cached) map
 /// bundle.
 pub fn sharded_report_for(maps: &BlockMaps, shards: u32, cell_bytes: u64) -> Vec<ShardBytesRow> {
+    use crate::ca::backend::{PackedBackend, StateBackend};
     let part = ShardPartition::new(maps.block.blocks(), shards);
     let plan = HaloPlan::build(maps, &part);
     let rho = maps.block.rho;
     let tile = rho as u64 * rho as u64;
     // packed tile: ρ rows of ⌈ρ/64⌉ 8-byte words (ca::bitkernel layout)
     let packed_tile_bytes = rho as u64 * rho.div_ceil(64) as u64 * 8;
+    let packed = <PackedBackend as StateBackend>::new(&maps.block);
+    // per destination shard: exact rim-compacted traffic (the byte
+    // backend ships one cell per rim cell; the packed backend ships
+    // whole row words plus bit-gathered column/corner words)
+    let mut compacted_cells = vec![0u64; part.shards()];
+    let mut packed_compacted_words = vec![0u64; part.shards()];
+    for route in &plan.routes {
+        let rim = route.rim(rho);
+        compacted_cells[route.dst_shard] += rim.cell_count();
+        packed_compacted_words[route.dst_shard] += packed.rim_units(&rim);
+    }
     (0..part.shards())
         .map(|s| {
             let (a, b) = part.range(s);
@@ -168,8 +190,10 @@ pub fn sharded_report_for(maps: &BlockMaps, shards: u32, cell_bytes: u64) -> Vec
                 ghost_blocks: plan.ghost_counts[s],
                 local_bytes: (b - a) * tile * cell_bytes,
                 halo_bytes: plan.ghost_counts[s] * tile * cell_bytes,
+                compacted_halo_bytes: compacted_cells[s] * cell_bytes,
                 packed_local_bytes: (b - a) * packed_tile_bytes,
                 packed_halo_bytes: plan.ghost_counts[s] * packed_tile_bytes,
+                packed_compacted_halo_bytes: packed_compacted_words[s] * 8,
             }
         })
         .collect()
@@ -384,6 +408,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn compacted_halo_bytes_strictly_undercut_whole_tiles_on_the_catalog() {
+        // The acceptance bar for rim compaction: for every catalog
+        // fractal at level ≥ 3, the compacted exchange ships strictly
+        // fewer bytes than the whole-tile exchange (both backends), the
+        // compacted traffic is never zero when a halo exists, and the
+        // local-byte sums still reconcile exactly.
+        let mut fractals_with_halo = 0usize;
+        for spec in catalog::all() {
+            let mut saw_halo = false;
+            for r in 3..=4u32 {
+                let rho = spec.s; // one intra level: every tile has a rim and an interior edge mix
+                for shards in [2u32, 4] {
+                    let rows = sharded_squeeze_report(&spec, r, rho, shards, 1).unwrap();
+                    let whole: u64 = rows.iter().map(|row| row.halo_bytes).sum();
+                    let compact: u64 = rows.iter().map(|row| row.compacted_halo_bytes).sum();
+                    let pwhole: u64 = rows.iter().map(|row| row.packed_halo_bytes).sum();
+                    let pcompact: u64 =
+                        rows.iter().map(|row| row.packed_compacted_halo_bytes).sum();
+                    if whole == 0 {
+                        // a decomposition with no cross-shard reads has
+                        // nothing to compact (and nothing to ship)
+                        assert_eq!(compact, 0, "{} r={r} shards={shards}", spec.name);
+                        assert_eq!(pcompact, 0, "{} r={r} shards={shards}", spec.name);
+                    } else {
+                        saw_halo = true;
+                        assert!(
+                            compact < whole,
+                            "{} r={r} shards={shards}: compacted {compact} !< whole {whole}",
+                            spec.name
+                        );
+                        assert!(compact > 0, "{} r={r} shards={shards}", spec.name);
+                        assert!(
+                            pcompact <= pwhole,
+                            "{} r={r} shards={shards}: packed compacted {pcompact} > {pwhole}",
+                            spec.name
+                        );
+                    }
+                    // and the decomposition still reconciles exactly
+                    let local: u64 = rows.iter().map(|row| row.local_bytes).sum();
+                    assert_eq!(local, squeeze_bytes(&spec, r, rho, 1).unwrap());
+                    let plocal: u64 = rows.iter().map(|row| row.packed_local_bytes).sum();
+                    assert_eq!(plocal, packed_squeeze_bytes(&spec, r, rho).unwrap());
+                }
+            }
+            if saw_halo {
+                fractals_with_halo += 1;
+            }
+        }
+        // every edge-connected catalog fractal exercises a halo at
+        // level ≥ 3 (the diagonal-only chandelier may legitimately cut
+        // between its disconnected diamonds)
+        assert!(
+            fractals_with_halo >= 4,
+            "only {fractals_with_halo} catalog fractals had a halo to compact"
+        );
+        // at a larger ρ the packed saving is strict too: a ρ=64 tile is
+        // 64 words, its compacted rim at most a handful
+        let spec = catalog::sierpinski_triangle();
+        let rows = sharded_squeeze_report(&spec, 8, 64, 4, 1).unwrap();
+        let pwhole: u64 = rows.iter().map(|row| row.packed_halo_bytes).sum();
+        let pcompact: u64 = rows.iter().map(|row| row.packed_compacted_halo_bytes).sum();
+        assert!(pcompact < pwhole, "packed {pcompact} !< {pwhole} at rho=64");
     }
 
     #[test]

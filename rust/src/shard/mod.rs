@@ -1,26 +1,30 @@
 //! Sharded compact-domain subsystem: halo-exchanged domain
 //! decomposition over Squeeze blocks.
 //!
-//! One `SqueezeBlockEngine` owns the whole compact buffer; this module
+//! One `SqueezeEngine<B>` owns the whole compact buffer; this module
 //! partitions the block-level domain into contiguous shards
-//! ([`partition`]), derives a static halo-exchange plan from the cached
-//! `BlockMaps` 8-neighbor adjacency ([`plan`]), and steps the shards as
-//! parallel local sweeps separated by an exchange barrier ([`engine`]).
-//! The orchestrator implements the common [`crate::ca::Engine`] trait,
-//! so `engine=sharded-squeeze:<ρ>:<shards>` drops into the factory,
-//! the differential suite, and the benches unchanged — and every step
-//! stays bit-identical to the single-engine and BB references. This is
-//! the seam future distribution/batching work builds on: a shard's
-//! slice + ghost ring is all a worker ever touches, so a domain no
-//! longer has to fit one engine's buffer.
+//! ([`partition`] — uniform or cost-weighted), derives a static
+//! halo-exchange plan from the cached `BlockMaps` 8-neighbor adjacency
+//! ([`plan`], including per-route rim-consumption masks and the
+//! interior/boundary block split), and steps the shards as parallel
+//! local sweeps around a gather→scatter exchange ([`engine`] — one
+//! generic orchestrator over any `ca::backend::StateBackend`). The
+//! exchange ships rim-compacted payloads by default and overlaps with
+//! the interior sweeps; both refinements are bit-identical to the
+//! serial whole-tile exchange by construction. The orchestrator
+//! implements the common [`crate::ca::Engine`] trait, so
+//! `engine=sharded-squeeze:<ρ>:<shards>` drops into the factory, the
+//! differential suite, and the benches unchanged — and every step stays
+//! bit-identical to the single-engine and BB references. This is the
+//! seam future distribution/batching work builds on: a shard's slice +
+//! ghost ring is all a worker ever touches, so a domain no longer has
+//! to fit one engine's buffer.
 
 pub mod engine;
 pub mod partition;
 pub mod plan;
 
-pub use engine::{
-    PackedShardEngine, PackedShardedSqueezeEngine, ShardEngine, ShardedSqueezeEngine,
-};
+pub use engine::{PackedShardedSqueezeEngine, Shard, ShardedSqueezeEngine};
 pub use partition::ShardPartition;
 pub use plan::{HaloPlan, HaloRoute};
 
@@ -36,10 +40,54 @@ use std::sync::Arc;
 pub struct ShardStats {
     /// Effective shard count (requests beyond the block count clamp).
     pub shards: u32,
-    /// Cross-shard tile bytes copied per step by the halo exchange.
+    /// Cross-shard bytes actually copied per step by the halo exchange
+    /// (rim-compacted when compaction is on).
     pub halo_bytes_per_step: u64,
+    /// What the same routes would copy shipping whole tiles — the
+    /// pre-compaction baseline the compaction ratio is measured against.
+    pub halo_tile_bytes_per_step: u64,
     /// Largest shard over the ideal share (1.0 = perfectly balanced).
+    /// Block-count based for uniform partitions, live-cell-weight based
+    /// for `shards=auto` cost-weighted partitions.
     pub imbalance: f64,
+}
+
+impl ShardStats {
+    /// Shipped bytes over whole-tile bytes (1.0 = no compaction win;
+    /// defined as 1.0 when there is no halo at all).
+    pub fn compaction_ratio(&self) -> f64 {
+        if self.halo_tile_bytes_per_step == 0 {
+            1.0
+        } else {
+            self.halo_bytes_per_step as f64 / self.halo_tile_bytes_per_step as f64
+        }
+    }
+}
+
+/// Tuning knobs of the sharded orchestrator. Defaults are the fast
+/// path — overlap and compaction change nothing observable except the
+/// clock, so they default on; cost-weighted partitioning changes the
+/// decomposition (not the results) and is opt-in via `shards=auto:<S>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardOpts {
+    /// Sweep interior blocks concurrently with the halo exchange.
+    pub overlap: bool,
+    /// Ship only the rim rows/columns readers consume instead of whole
+    /// tiles.
+    pub compact: bool,
+    /// Cost-weighted contiguous partition seeded from per-block live
+    /// cells at t=0 (`ShardPartition::balanced`).
+    pub balance: bool,
+}
+
+impl Default for ShardOpts {
+    fn default() -> ShardOpts {
+        ShardOpts {
+            overlap: true,
+            compact: true,
+            balance: false,
+        }
+    }
 }
 
 /// Upper bound on concurrent warmup threads: one lookup per shard is
@@ -114,5 +162,23 @@ mod tests {
         warm(&cache, &spec, 4, 2, None, 4_000_000, 1).unwrap();
         assert_eq!(cache.stats().misses, 1);
         assert_eq!(cache.stats().hits, (MAX_WARM_THREADS - 1) as u64);
+    }
+
+    #[test]
+    fn compaction_ratio_handles_empty_halo() {
+        let none = ShardStats {
+            shards: 1,
+            halo_bytes_per_step: 0,
+            halo_tile_bytes_per_step: 0,
+            imbalance: 1.0,
+        };
+        assert_eq!(none.compaction_ratio(), 1.0);
+        let some = ShardStats {
+            shards: 4,
+            halo_bytes_per_step: 256,
+            halo_tile_bytes_per_step: 1024,
+            imbalance: 1.0,
+        };
+        assert!((some.compaction_ratio() - 0.25).abs() < 1e-12);
     }
 }

@@ -9,6 +9,12 @@
 //! Contiguity is what keeps per-shard seeding, hashing, and byte
 //! accounting exact: the union of the slices *is* the single-engine
 //! buffer, bit for bit.
+//!
+//! Two constructors exist: [`ShardPartition::new`] cuts uniform block
+//! ranges; [`ShardPartition::balanced`] cuts cost-weighted ranges (the
+//! `shards=auto:<S>` job key), choosing boundaries that minimize the
+//! maximum per-shard weight — by optimality its weighted imbalance never
+//! exceeds the uniform split's.
 
 /// A static assignment of coarse blocks to shards: shard `i` owns the
 /// half-open block range `range(i)`. Ranges are contiguous, disjoint,
@@ -18,7 +24,9 @@
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPartition {
     nblocks: u64,
-    chunk: u64,
+    /// Uniform chunk size (`None` for weighted partitions, which locate
+    /// owners by binary search instead of division).
+    chunk: Option<u64>,
     ranges: Vec<(u64, u64)>,
 }
 
@@ -40,7 +48,53 @@ impl ShardPartition {
         }
         ShardPartition {
             nblocks,
-            chunk,
+            chunk: Some(chunk),
+            ranges,
+        }
+    }
+
+    /// Cost-weighted partition: cut `[0, nblocks)` into (at most)
+    /// `shards` contiguous non-empty ranges minimizing the maximum
+    /// per-range weight sum. `weights[b]` is block `b`'s cost (e.g. its
+    /// live-cell count at t=0). Falls back to the uniform split when
+    /// every weight is zero (no signal to balance on).
+    pub fn balanced(nblocks: u64, shards: u32, weights: &[u64]) -> ShardPartition {
+        assert_eq!(weights.len() as u64, nblocks, "one weight per block");
+        let total: u64 = weights.iter().sum();
+        if total == 0 || nblocks == 0 {
+            return ShardPartition::new(nblocks, shards);
+        }
+        let want = (shards.max(1) as u64).min(nblocks);
+        let max_w = weights.iter().copied().max().unwrap_or(0);
+        // binary search the smallest per-shard capacity that fits
+        // `want` greedy contiguous parts
+        let (mut lo, mut hi) = (max_w, total);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if greedy_parts(weights, mid) <= want {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let cap = lo;
+        // materialize the greedy cut at the optimal capacity
+        let mut ranges = Vec::new();
+        let mut start = 0usize;
+        let mut acc = 0u64;
+        for (b, &w) in weights.iter().enumerate() {
+            if b > start && acc + w > cap {
+                ranges.push((start as u64, b as u64));
+                start = b;
+                acc = 0;
+            }
+            acc += w;
+        }
+        ranges.push((start as u64, nblocks));
+        debug_assert!(ranges.len() as u64 <= want);
+        ShardPartition {
+            nblocks,
+            chunk: None,
             ranges,
         }
     }
@@ -63,11 +117,17 @@ impl ShardPartition {
     /// Owning shard of a global block index.
     #[inline]
     pub fn shard_of(&self, block: u64) -> usize {
-        ((block / self.chunk) as usize).min(self.ranges.len() - 1)
+        match self.chunk {
+            Some(chunk) => ((block / chunk) as usize).min(self.ranges.len() - 1),
+            None => self
+                .ranges
+                .partition_point(|&(_, end)| end <= block)
+                .min(self.ranges.len() - 1),
+        }
     }
 
-    /// Load imbalance: largest shard's block count over the ideal
-    /// `nblocks / shards` (1.0 = perfectly balanced).
+    /// Load imbalance over *block counts*: largest shard's block count
+    /// over the ideal `nblocks / shards` (1.0 = perfectly balanced).
     pub fn imbalance(&self) -> f64 {
         if self.nblocks == 0 {
             return 1.0;
@@ -80,11 +140,47 @@ impl ShardPartition {
             .unwrap_or(0) as f64;
         max / (self.nblocks as f64 / self.ranges.len() as f64)
     }
+
+    /// Load imbalance over per-block `weights`: largest shard's weight
+    /// sum over the ideal `total / shards`. This is the gauge the
+    /// cost-weighted partitioner optimizes (1.0 when total weight is 0).
+    pub fn weighted_imbalance(&self, weights: &[u64]) -> f64 {
+        assert_eq!(weights.len() as u64, self.nblocks, "one weight per block");
+        let total: u64 = weights.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = self
+            .ranges
+            .iter()
+            .map(|&(a, b)| weights[a as usize..b as usize].iter().sum::<u64>())
+            .max()
+            .unwrap_or(0) as f64;
+        max / (total as f64 / self.ranges.len() as f64)
+    }
+}
+
+/// Number of contiguous parts a greedy fill with per-part capacity `cap`
+/// produces (each part takes blocks while its sum stays ≤ `cap`; a block
+/// heavier than `cap` still gets a part to itself, so the count is an
+/// upper bound used only above `max(weights)`).
+fn greedy_parts(weights: &[u64], cap: u64) -> u64 {
+    let mut parts = 1u64;
+    let mut acc = 0u64;
+    for (b, &w) in weights.iter().enumerate() {
+        if b > 0 && acc + w > cap {
+            parts += 1;
+            acc = 0;
+        }
+        acc += w;
+    }
+    parts
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prng::Prng;
 
     #[test]
     fn ranges_cover_disjointly_and_shard_of_agrees() {
@@ -123,5 +219,70 @@ mod tests {
         // exact split is perfectly balanced
         let q = ShardPartition::new(8, 4);
         assert!((q.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_covers_disjointly_and_shard_of_agrees() {
+        let mut prng = Prng::new(0xBA1);
+        for nblocks in [1u64, 5, 81, 257] {
+            for shards in [1u32, 2, 4, 9, 300] {
+                let weights: Vec<u64> = (0..nblocks).map(|_| prng.below(17)).collect();
+                let p = ShardPartition::balanced(nblocks, shards, &weights);
+                assert!(p.shards() as u64 <= (shards.max(1) as u64).min(nblocks.max(1)));
+                let mut covered = 0u64;
+                for s in 0..p.shards() {
+                    let (a, b) = p.range(s);
+                    assert!(a < b, "empty shard {s}");
+                    assert_eq!(a, covered);
+                    covered = b;
+                    for block in a..b {
+                        assert_eq!(p.shard_of(block), s, "n={nblocks} shards={shards}");
+                    }
+                }
+                assert_eq!(covered, nblocks);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_never_exceeds_the_uniform_weighted_imbalance() {
+        let mut prng = Prng::new(0xBA2);
+        for nblocks in [8u64, 81, 100, 729] {
+            for shards in [2u32, 3, 4, 8] {
+                // skewed weights: a hot prefix plus random noise
+                let weights: Vec<u64> = (0..nblocks)
+                    .map(|b| if b < nblocks / 4 { 50 + prng.below(50) } else { prng.below(5) })
+                    .collect();
+                let uniform = ShardPartition::new(nblocks, shards);
+                let balanced = ShardPartition::balanced(nblocks, shards, &weights);
+                let ub = uniform.weighted_imbalance(&weights);
+                let bb = balanced.weighted_imbalance(&weights);
+                assert!(
+                    bb <= ub + 1e-12,
+                    "n={nblocks} shards={shards}: balanced {bb} > uniform {ub}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_with_zero_weights_falls_back_to_uniform() {
+        let weights = vec![0u64; 10];
+        let p = ShardPartition::balanced(10, 4, &weights);
+        assert_eq!(p, ShardPartition::new(10, 4));
+        assert!((p.weighted_imbalance(&weights) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_splits_a_hot_block_domain_evenly() {
+        // all weight in two hot blocks far apart: the optimal 2-cut
+        // isolates them on different shards
+        let mut weights = vec![0u64; 10];
+        weights[0] = 100;
+        weights[9] = 100;
+        let p = ShardPartition::balanced(10, 2, &weights);
+        assert_eq!(p.shards(), 2);
+        assert!((p.weighted_imbalance(&weights) - 1.0).abs() < 1e-12);
+        assert_ne!(p.shard_of(0), p.shard_of(9));
     }
 }

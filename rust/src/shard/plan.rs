@@ -7,15 +7,29 @@
 //! its boundary reads — the ghost ring — and (b) a remapped neighbor
 //! table whose entries point into the shard's combined
 //! `local ++ ghost` buffer instead of the global one. Routes are
-//! derived once, before step 0; the per-step exchange is pure `memcpy`
-//! along them, with no map evaluations and no topology queries.
+//! derived once, before step 0; the per-step exchange is pure gather →
+//! scatter along them, with no map evaluations and no topology queries.
+//!
+//! Two refinements ride on the same projection (DESIGN.md §5d):
+//!
+//! - **Rim compaction**: each route records the Moore-direction mask its
+//!   destination actually reads the ghost tile from, so the exchange can
+//!   ship only the consumed rows/columns/corners
+//!   ([`crate::ca::backend::RimSegs`]) instead of whole tiles — the
+//!   block-level analogue of the paper's "move only what neighborhood
+//!   access requires".
+//! - **Interior/boundary split**: per shard, local blocks whose remapped
+//!   neighbors all stay local ([`HaloPlan::interior`]) can sweep
+//!   concurrently with the exchange; only the [`HaloPlan::boundary`]
+//!   blocks read ghosts and must wait for it.
 
 use std::collections::HashMap;
 
 use super::partition::ShardPartition;
+use crate::ca::backend::RimSegs;
 use crate::maps::cache::{BlockMaps, NO_BLOCK};
 
-/// One halo copy: the `ρ×ρ` tile of local block `src_block` of shard
+/// One halo copy: the rim of local block `src_block` of shard
 /// `src_shard` is copied into ghost slot `ghost_slot` of `dst_shard`'s
 /// ghost ring (every step, after the previous step's barrier).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,6 +40,17 @@ pub struct HaloRoute {
     pub dst_shard: usize,
     /// Ghost-ring slot in the destination shard.
     pub ghost_slot: u64,
+    /// Moore-direction consumption mask: bit `m` set ⇔ some
+    /// `dst_shard`-local block reads this ghost tile as its `MOORE[m]`
+    /// neighbor. Determines the rim the route must ship.
+    pub dirs: u8,
+}
+
+impl HaloRoute {
+    /// The rim this route ships under compaction.
+    pub fn rim(&self, rho: u32) -> RimSegs {
+        RimSegs::from_dirs(rho, self.dirs)
+    }
 }
 
 /// The complete exchange plan for one `(BlockMaps, ShardPartition)`.
@@ -40,6 +65,12 @@ pub struct HaloPlan {
     /// the shard's combined `local ++ ghost` buffer ([`NO_BLOCK`] =
     /// absent neighbor, exactly as in the global table).
     pub neighbors: Vec<Vec<[u64; 8]>>,
+    /// Per shard: local block indices none of whose neighbors are
+    /// ghosts — safe to sweep while the exchange runs.
+    pub interior: Vec<Vec<u64>>,
+    /// Per shard: local block indices with ≥ 1 ghost neighbor — swept
+    /// after the exchange barrier.
+    pub boundary: Vec<Vec<u64>>,
     /// Block side ρ (tile is ρ² cells).
     pub rho: u32,
 }
@@ -53,16 +84,22 @@ impl HaloPlan {
         let mut routes = Vec::new();
         let mut ghost_counts = Vec::with_capacity(part.shards());
         let mut neighbors = Vec::with_capacity(part.shards());
+        let mut interior = Vec::with_capacity(part.shards());
+        let mut boundary = Vec::with_capacity(part.shards());
         for s in 0..part.shards() {
             let (start, end) = part.range(s);
             let nlocal = end - start;
             // ghost slots in first-encounter order (blocks ascending,
-            // Moore directions in order) — deterministic
-            let mut ghost_of: HashMap<u64, u64> = HashMap::new();
+            // Moore directions in order) — deterministic. Each entry
+            // also accumulates the direction mask its readers consume.
+            let mut ghost_of: HashMap<u64, (u64, u8)> = HashMap::new();
             let mut local_tables = Vec::with_capacity(nlocal as usize);
+            let mut inner = Vec::new();
+            let mut rim = Vec::new();
             for b in start..end {
                 let global = maps.neighbors_of(b);
                 let mut slots = [NO_BLOCK; 8];
+                let mut touches_ghost = false;
                 for (m, &base) in global.iter().enumerate() {
                     if base == NO_BLOCK {
                         continue;
@@ -71,38 +108,61 @@ impl HaloPlan {
                     slots[m] = if (start..end).contains(&nb) {
                         (nb - start) * tile
                     } else {
+                        touches_ghost = true;
                         let next = ghost_of.len() as u64;
-                        let slot = *ghost_of.entry(nb).or_insert(next);
-                        (nlocal + slot) * tile
+                        let entry = ghost_of.entry(nb).or_insert((next, 0));
+                        entry.1 |= 1 << m;
+                        (nlocal + entry.0) * tile
                     };
+                }
+                if touches_ghost {
+                    rim.push(b - start);
+                } else {
+                    inner.push(b - start);
                 }
                 local_tables.push(slots);
             }
-            let mut ghosts: Vec<(u64, u64)> = ghost_of.into_iter().collect();
-            ghosts.sort_by_key(|&(_, slot)| slot);
+            let mut ghosts: Vec<(u64, (u64, u8))> = ghost_of.into_iter().collect();
+            ghosts.sort_by_key(|&(_, (slot, _))| slot);
             ghost_counts.push(ghosts.len() as u64);
-            for (block, slot) in ghosts {
+            for (block, (slot, dirs)) in ghosts {
                 let src = part.shard_of(block);
                 routes.push(HaloRoute {
                     src_shard: src,
                     src_block: block - part.range(src).0,
                     dst_shard: s,
                     ghost_slot: slot,
+                    dirs,
                 });
             }
             neighbors.push(local_tables);
+            interior.push(inner);
+            boundary.push(rim);
         }
         HaloPlan {
             routes,
             ghost_counts,
             neighbors,
+            interior,
+            boundary,
             rho,
         }
     }
 
-    /// Bytes copied across shard boundaries per step (1-byte cells).
+    /// Bytes copied across shard boundaries per step when shipping whole
+    /// tiles (1-byte cells) — the pre-compaction traffic model.
     pub fn halo_bytes_per_step(&self) -> u64 {
         self.routes.len() as u64 * self.rho as u64 * self.rho as u64
+    }
+
+    /// Cells the compacted exchange ships per step (sum of the routes'
+    /// rim sizes) — multiply by the backend's unit accounting for exact
+    /// bytes.
+    pub fn compacted_cells_per_step(&self) -> u64 {
+        self.routes
+            .iter()
+            .map(|r| r.rim(self.rho).cell_count())
+            .sum()
     }
 
     /// Bytes held by the remapped per-shard neighbor tables.
@@ -134,6 +194,10 @@ mod tests {
         assert!(plan.routes.is_empty());
         assert_eq!(plan.ghost_counts, vec![0]);
         assert_eq!(plan.halo_bytes_per_step(), 0);
+        assert_eq!(plan.compacted_cells_per_step(), 0);
+        // every block is interior when nothing is remote
+        assert_eq!(plan.interior[0].len() as u64, maps.block.blocks());
+        assert!(plan.boundary[0].is_empty());
         // remapped table == global table when one shard owns everything
         for b in 0..maps.block.blocks() {
             assert_eq!(&plan.neighbors[0][b as usize], maps.neighbors_of(b));
@@ -149,19 +213,25 @@ mod tests {
             let nlocal = end - start;
             // collect this shard's ghost slots -> source global block
             let mut ghost_src: HashMap<u64, u64> = HashMap::new();
+            let mut ghost_dirs: HashMap<u64, u8> = HashMap::new();
             for r in plan.routes.iter().filter(|r| r.dst_shard == s) {
                 let global = part.range(r.src_shard).0 + r.src_block;
                 assert_ne!(part.shard_of(global), s, "route sources a local block");
                 assert!(ghost_src.insert(r.ghost_slot, global).is_none());
+                ghost_dirs.insert(r.ghost_slot, r.dirs);
+                assert_ne!(r.dirs, 0, "a routed ghost must be consumed");
             }
             assert_eq!(ghost_src.len() as u64, plan.ghost_counts[s]);
             // ghost slots are contiguous from 0
             for slot in 0..plan.ghost_counts[s] {
                 assert!(ghost_src.contains_key(&slot));
             }
-            // every remapped entry resolves to the block the global table named
+            // every remapped entry resolves to the block the global table
+            // named, and its direction is flagged in the route's mask
+            let mut seen_boundary = Vec::new();
             for (lb, slots) in plan.neighbors[s].iter().enumerate() {
                 let global_tbl = maps.neighbors_of(start + lb as u64);
+                let mut touches = false;
                 for m in 0..8 {
                     if global_tbl[m] == NO_BLOCK {
                         assert_eq!(slots[m], NO_BLOCK);
@@ -172,16 +242,35 @@ mod tests {
                     let resolved = if got < nlocal {
                         start + got
                     } else {
-                        ghost_src[&(got - nlocal)]
+                        touches = true;
+                        let slot = got - nlocal;
+                        assert_ne!(
+                            ghost_dirs[&slot] & (1 << m),
+                            0,
+                            "shard {s} block {lb} dir {m} missing from rim mask"
+                        );
+                        ghost_src[&slot]
                     };
                     assert_eq!(resolved, want, "shard {s} block {lb} dir {m}");
                 }
+                if touches {
+                    seen_boundary.push(lb as u64);
+                }
             }
+            assert_eq!(seen_boundary, plan.boundary[s], "boundary set mismatch");
+            // interior + boundary partition the local blocks
+            let mut all: Vec<u64> = plan.interior[s]
+                .iter()
+                .chain(plan.boundary[s].iter())
+                .copied()
+                .collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..nlocal).collect::<Vec<u64>>());
         }
     }
 
     #[test]
-    fn halo_traffic_scales_with_shard_count() {
+    fn halo_traffic_scales_with_shard_count_and_compaction_undercuts_it() {
         let (_, _, p1) = plan_for(1);
         let (_, _, p2) = plan_for(2);
         let (_, _, p4) = plan_for(4);
@@ -189,5 +278,16 @@ mod tests {
         assert!(p2.halo_bytes_per_step() > 0);
         assert!(p4.halo_bytes_per_step() >= p2.halo_bytes_per_step());
         assert!(p4.table_bytes() > 0);
+        // the compacted rim never exceeds whole tiles, and at ρ=2 with
+        // partially-consumed ghosts it is strictly below
+        for p in [&p2, &p4] {
+            let compact = p.compacted_cells_per_step();
+            assert!(compact <= p.halo_bytes_per_step());
+            assert!(compact > 0);
+        }
+        assert!(
+            p4.compacted_cells_per_step() < p4.halo_bytes_per_step(),
+            "compaction should drop at least one unread row/column"
+        );
     }
 }

@@ -6,12 +6,14 @@
 //! matrix below, the expanded BB reference, the thread-level Squeeze
 //! engine, the block-level Squeeze engine (serial and parallel, cached
 //! and uncached, scalar and tensor-path), the halo-exchanged sharded
-//! decomposition (1, 2, and 4 shards), and the bit-planar
-//! `squeeze-bits` backends (serial/parallel × cached/uncached, plus
-//! sharded-packed at 1/2/4 shards) must produce identical
-//! `state_hash()` after *every* step — not just at the end. A divergence
-//! at step `t` localizes a bug to one transition, which is what makes
-//! this suite the oracle the cache/parallelism/sharding/bit-packing
+//! decomposition (1, 2, and 4 shards — with every `overlap on/off ×
+//! compaction on/off` combination of the unified exchange), and the
+//! bit-planar `squeeze-bits` backends (serial/parallel ×
+//! cached/uncached, plus sharded-packed at 1/2/4 shards and the same
+//! overlap/compaction matrix) must produce identical `state_hash()`
+//! after *every* step — not just at the end. A divergence at step `t`
+//! localizes a bug to one transition, which is what makes this suite
+//! the oracle the cache/parallelism/sharding/bit-packing/backend-trait
 //! refactors are tested against.
 
 use squeeze::ca::{build_with_cache, Engine, EngineConfig, EngineKind, Rule};
@@ -52,6 +54,14 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                 density: 0.45,
                 seed: 0xD1FF,
                 workers,
+                ..Default::default()
+            };
+            // the default sharded rows run the overlap+compaction path;
+            // this builds the other three exchange-mode combinations
+            let cfg_mode = |kind: EngineKind, overlap: bool, compact: bool| EngineConfig {
+                overlap,
+                compact,
+                ..cfg(kind, 4)
             };
             let mut engines = vec![
                 (
@@ -194,6 +204,44 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                     .unwrap(),
                 ),
             ];
+            // overlap on/off × compaction on/off, byte and packed (the
+            // on/on cell is the default path the rows above already run)
+            for (overlap, compact, tag) in [
+                (false, true, "serial-compact"),
+                (true, false, "overlap-full"),
+                (false, false, "serial-full"),
+            ] {
+                engines.push((
+                    match tag {
+                        "serial-compact" => "sharded-squeeze-2-serial-compact",
+                        "overlap-full" => "sharded-squeeze-2-overlap-full",
+                        _ => "sharded-squeeze-2-serial-full",
+                    },
+                    build_with_cache(
+                        &spec,
+                        &cfg_mode(EngineKind::ShardedSqueeze { rho, shards: 2 }, overlap, compact),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ));
+                engines.push((
+                    match tag {
+                        "serial-compact" => "sharded-squeeze-bits-2-serial-compact",
+                        "overlap-full" => "sharded-squeeze-bits-2-overlap-full",
+                        _ => "sharded-squeeze-bits-2-serial-full",
+                    },
+                    build_with_cache(
+                        &spec,
+                        &cfg_mode(
+                            EngineKind::PackedShardedSqueeze { rho, shards: 2 },
+                            overlap,
+                            compact,
+                        ),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ));
+            }
             let seed_hash = engines[0].1.state_hash();
             for (name, e) in &engines {
                 assert_eq!(
@@ -238,6 +286,7 @@ fn tensor_path_engines_agree_with_scalar_inside_fp16_envelope() {
             density: 0.4,
             seed: 99,
             workers: 2,
+            ..Default::default()
         };
         let mut scalar = build_with_cache(&spec, &cfg(false), Some(&cache)).unwrap();
         let mut tensor = build_with_cache(&spec, &cfg(true), Some(&cache)).unwrap();
@@ -282,6 +331,7 @@ fn long_run_agreement_on_the_paper_headline_fractal() {
                 density: 0.4,
                 seed: 42,
                 workers: 3,
+                ..Default::default()
             },
             Some(&cache),
         )

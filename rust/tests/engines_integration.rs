@@ -17,6 +17,7 @@ fn job(engine: EngineKind, r: u32, steps: u32) -> JobSpec {
         seed: 42,
         rule: Rule::game_of_life(),
         workers: 2,
+        ..JobSpec::default()
     }
 }
 

@@ -99,6 +99,7 @@ fn step_populations_match_python_golden() {
             density: 0.4,
             seed: 42,
             workers: 2,
+            ..Default::default()
         },
     )
     .expect("valid engine config");

@@ -50,6 +50,7 @@ fn squeeze_artifact_matches_native_engine() {
             density: 0.4,
             seed: 42,
             workers: 2,
+            ..Default::default()
         },
     )
     .expect("valid engine config");
@@ -104,6 +105,7 @@ fn bb_artifact_matches_native_bb() {
             density: 0.4,
             seed: 42,
             workers: 2,
+            ..Default::default()
         },
     )
     .expect("valid engine config");
@@ -158,6 +160,7 @@ fn vicsek_artifact_cross_fractal() {
             density: 0.4,
             seed: 42,
             workers: 2,
+            ..Default::default()
         },
     )
     .expect("valid engine config");

@@ -2,7 +2,9 @@
 //! mini-proptest framework (`util::proptest`): randomized fractals,
 //! levels and coordinates with shrinking on failure.
 
-use squeeze::ca::{build, EngineConfig, EngineKind, Rule};
+use squeeze::ca::{
+    build, ByteBackend, EngineConfig, EngineKind, PackedBackend, RimSegs, Rule, StateBackend,
+};
 use squeeze::fractal::{catalog, Coord, MOORE};
 use squeeze::maps::cache::{BlockMaps, MapCache, NO_BLOCK};
 use squeeze::maps::mma::{lambda_a_fragment, lambda_batch_mma, nu_a_fragment, nu_batch_mma};
@@ -223,6 +225,153 @@ fn prop_block_storage_is_a_bijection() {
     });
 }
 
+/// One rim pack→unpack round-trip at a random direction mask: packing
+/// the rim of a random tile and unpacking it into a scrambled
+/// destination must reproduce exactly the rim cells and leave every
+/// other cell of the destination untouched.
+fn rim_roundtrip_case<B: StateBackend>(
+    block: &BlockCtx,
+    g: &mut squeeze::util::proptest::Gen,
+) -> Result<(), String> {
+    let backend = B::new(block);
+    let rho = block.rho;
+    let tile_cells = rho as u64 * rho as u64;
+    let dirs = g.u64(0, 255) as u8;
+    let segs = RimSegs::from_dirs(rho, dirs);
+    // random source tile (only fractal cells alive) + scrambled dst
+    let mut src = vec![B::Unit::default(); backend.units_per_tile() as usize];
+    let mut dst = vec![B::Unit::default(); backend.units_per_tile() as usize];
+    for iy in 0..rho {
+        for ix in 0..rho {
+            let slot = (iy * rho + ix) as u64;
+            if block.intra_on_fractal(ix, iy) && g.bool() {
+                backend.set_cell(&mut src, slot);
+            }
+            if g.bool() {
+                backend.set_cell(&mut dst, slot);
+            }
+        }
+    }
+    let before: Vec<u8> = (0..tile_cells).map(|s| backend.get_cell(&dst, s)).collect();
+    let mut stage = vec![B::Unit::default(); backend.rim_units(&segs) as usize];
+    backend.pack_rim(&src, 0, &segs, &mut stage);
+    backend.unpack_rim(&stage, &mut dst, 0, &segs);
+    // which cells are rim cells?
+    let mut in_rim = vec![false; tile_cells as usize];
+    for &y in &segs.rows {
+        for x in 0..rho {
+            in_rim[(y * rho + x) as usize] = true;
+        }
+    }
+    for &(x, y0, y1) in &segs.cols {
+        for y in y0..y1 {
+            in_rim[(y * rho + x) as usize] = true;
+        }
+    }
+    for &(x, y) in &segs.cells {
+        in_rim[(y * rho + x) as usize] = true;
+    }
+    for slot in 0..tile_cells {
+        let got = backend.get_cell(&dst, slot);
+        let want = if in_rim[slot as usize] {
+            backend.get_cell(&src, slot)
+        } else {
+            before[slot as usize]
+        };
+        if got != want {
+            return Err(format!(
+                "rho={rho} dirs={dirs:#010b} slot={slot}: got {got} want {want} (rim={})",
+                in_rim[slot as usize]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_rim_pack_unpack_round_trips_byte_and_packed() {
+    // the satellite matrix: ρ ∈ {8, 64, 81, 128} covers single-word
+    // rows, exact 64-bit rows, ragged s=3 multi-word rows, and
+    // power-of-two multi-word rows — over both storage units
+    let tri = catalog::sierpinski_triangle();
+    let vic = catalog::vicsek();
+    let blocks: Vec<BlockCtx> = vec![
+        BlockCtx::new(&tri, 3, 8).unwrap(),
+        BlockCtx::new(&tri, 6, 64).unwrap(),
+        BlockCtx::new(&vic, 4, 81).unwrap(),
+        BlockCtx::new(&tri, 7, 128).unwrap(),
+    ];
+    Runner::new("rim-roundtrip", 0xAB).run(48, |g| {
+        let block = g.choose(&blocks);
+        rim_roundtrip_case::<ByteBackend>(block, g)?;
+        rim_roundtrip_case::<PackedBackend>(block, g)
+    });
+}
+
+#[test]
+fn prop_sharded_modes_agree_with_single_engine() {
+    // overlap on/off × compaction on/off × byte/packed, random shard
+    // counts: all bit-identical to the single block engine per run
+    let all = specs();
+    Runner::new("sharded-modes-agree", 0xAC).run(20, |g| {
+        let spec = g.choose(&all);
+        let r = g.u32(2, 4);
+        let steps = g.u32(1, 4);
+        let seed = g.u64(0, u64::MAX / 2);
+        let rho = spec.s;
+        let shards = g.u32(1, 5);
+        let overlap = g.bool();
+        let compact = g.bool();
+        let packed = g.bool();
+        let single = {
+            let mut e = build(
+                spec,
+                &EngineConfig {
+                    kind: EngineKind::Squeeze { rho, tensor: false },
+                    r,
+                    seed,
+                    workers: 2,
+                    ..Default::default()
+                },
+            )
+            .expect("valid engine config");
+            for _ in 0..steps {
+                e.step();
+            }
+            e.state_hash()
+        };
+        let kind = if packed {
+            EngineKind::PackedShardedSqueeze { rho, shards }
+        } else {
+            EngineKind::ShardedSqueeze { rho, shards }
+        };
+        let mut e = build(
+            spec,
+            &EngineConfig {
+                kind,
+                r,
+                seed,
+                workers: g.usize(1, 4),
+                overlap,
+                compact,
+                ..Default::default()
+            },
+        )
+        .expect("valid engine config");
+        for _ in 0..steps {
+            e.step();
+        }
+        Runner::check(
+            e.state_hash() == single,
+            &format!(
+                "{} r={r} steps={steps} shards={shards} overlap={overlap} \
+                 compact={compact} packed={packed}",
+                spec.name
+            ),
+        )
+    });
+}
+
 #[test]
 fn prop_engines_agree_after_random_runs() {
     let all = specs();
@@ -251,6 +400,7 @@ fn prop_engines_agree_after_random_runs() {
                     density: density_pct as f64 / 100.0,
                     seed,
                     workers: 2,
+                    ..Default::default()
                 },
             )
             .expect("valid engine config");
@@ -288,6 +438,7 @@ fn prop_population_conserved_under_still_life_rule() {
                 density: 0.5,
                 seed: g.u64(0, 1 << 40),
                 workers: 1,
+                ..Default::default()
             },
         )
         .expect("valid engine config");

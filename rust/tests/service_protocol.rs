@@ -174,6 +174,67 @@ fn packed_semantic_errors_are_err_lines() {
 }
 
 #[test]
+fn overlap_compaction_and_auto_shards_keys_round_trip_through_the_service() {
+    // every exchange mode (overlap on/off × compaction on/off), the
+    // cost-weighted partitioner, and their packed twins must hash
+    // identical to the single-engine run — end to end through serve
+    let out = run_session(
+        "engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         engine=sharded-squeeze:4:3 r=5 steps=3 workers=2 seed=9\n\
+         engine=sharded-squeeze:4:3 overlap=0 compact=0 r=5 steps=3 workers=2 seed=9\n\
+         engine=sharded-squeeze:4:3 overlap=1 compact=0 r=5 steps=3 workers=2 seed=9\n\
+         engine=sharded-squeeze:4:3 overlap=0 compact=1 r=5 steps=3 workers=2 seed=9\n\
+         shards=auto:3 engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         packed=1 shards=auto:3 overlap=1 compact=1 engine=squeeze:4 r=5 steps=3 workers=2 seed=9\n\
+         quit\n",
+    );
+    assert!(!out.contains("ERR"), "{out}");
+    let rows = data_lines(&out);
+    assert_eq!(rows.len(), 7, "{out}");
+    let single = hash_of(&rows, "1");
+    for id in ["2", "3", "4", "5", "6", "7"] {
+        assert_eq!(single, hash_of(&rows, id), "job {id} diverged: {out}");
+    }
+}
+
+#[test]
+fn sharded_metrics_expose_the_compaction_gauge() {
+    let out = run_session(
+        "engine=sharded-squeeze:4:4 r=5 steps=2 workers=2\n\
+         metrics\nquit\n",
+    );
+    assert!(out.contains("halo_compaction="), "{out}");
+    // compaction is on by default and ρ=4 rims are strictly smaller
+    // than tiles, so the gauge must read below 1.00
+    let ratio: f64 = out
+        .split("halo_compaction=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .expect("gauge present")
+        .parse()
+        .expect("gauge is a number");
+    assert!(ratio > 0.0 && ratio < 1.0, "{out}");
+}
+
+#[test]
+fn overlap_keys_on_non_sharded_engines_are_err_lines() {
+    let out = run_session(
+        "engine=squeeze:4 overlap=1 r=5 steps=1 workers=1\n\
+         engine=bb compact=0 r=4 steps=1 workers=1\n\
+         shards=auto:2 engine=bb r=4 steps=1 workers=1\n\
+         engine=sharded-squeeze:4:2 overlap=2 r=5 steps=1 workers=1\n\
+         engine=squeeze:4 r=5 steps=1 workers=1\n\
+         quit\n",
+    );
+    let errs: Vec<&str> = out.lines().filter(|l| l.starts_with("ERR")).collect();
+    assert_eq!(errs.len(), 4, "{out}");
+    assert!(errs.iter().any(|e| e.contains("overlap=")), "{out}");
+    assert!(errs.iter().any(|e| e.contains("compact=")), "{out}");
+    // the session survived to run the valid job
+    assert_eq!(data_lines(&out).len(), 1, "{out}");
+}
+
+#[test]
 fn sharded_squeeze_matches_single_engine_on_every_catalog_fractal() {
     // the differential case, end to end through the service: for every
     // catalog fractal, sharded (2 and 4 shards) step hashes must be
