@@ -145,6 +145,19 @@ impl Engine for BbEngine {
         let e = lambda_linear(&self.ctx, idx);
         self.buf.cur[e.linear(self.ctx.n) as usize]
     }
+
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        super::engine::check_state_bitmap(bits, self.cells())?;
+        self.buf.cur.fill(0);
+        self.buf.next.fill(0);
+        for idx in 0..self.ctx.compact.area() {
+            if super::engine::state_bit(bits, idx) {
+                let e = lambda_linear(&self.ctx, idx);
+                self.buf.cur[e.linear(self.ctx.n) as usize] = 1;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -49,6 +49,64 @@ pub trait Engine: Send {
         }
         h.finish()
     }
+
+    /// Export the full logical state as a canonical bitmap: bit `idx`
+    /// (LSB-first within byte `idx / 8`) is the cell with compact linear
+    /// index `idx`. Engine-layout independent — a byte engine's export
+    /// loads into a packed sharded engine and vice versa — which is what
+    /// the coordinator's snapshot/restore sessions are built on.
+    fn export_state(&self) -> Vec<u8> {
+        let cells = self.cells();
+        let mut bits = vec![0u8; cells.div_ceil(8) as usize];
+        for idx in 0..cells {
+            if self.cell(idx) != 0 {
+                set_state_bit(&mut bits, idx);
+            }
+        }
+        bits
+    }
+
+    /// Replace the full logical state from a canonical bitmap (the
+    /// [`Engine::export_state`] layout). Restoring an export and stepping
+    /// is bit-identical to stepping the original engine, because stepping
+    /// is a pure function of the logical state. Engines without an import
+    /// path return `Err` (the service surfaces it as an `ERR` line).
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        let _ = bits;
+        Err(format!("{} does not support state import", self.name()))
+    }
+}
+
+/// Read bit `idx` of a canonical state bitmap.
+#[inline]
+pub fn state_bit(bits: &[u8], idx: u64) -> bool {
+    (bits[(idx / 8) as usize] >> (idx % 8)) & 1 == 1
+}
+
+/// Set bit `idx` of a canonical state bitmap.
+#[inline]
+pub fn set_state_bit(bits: &mut [u8], idx: u64) {
+    bits[(idx / 8) as usize] |= 1 << (idx % 8);
+}
+
+/// Shared validation for [`Engine::load_state`] implementations: the
+/// bitmap must be exactly `ceil(cells / 8)` bytes with no stray bits set
+/// past `cells` (stray bits would silently vanish on the next export).
+pub fn check_state_bitmap(bits: &[u8], cells: u64) -> Result<(), String> {
+    let want = cells.div_ceil(8) as usize;
+    if bits.len() != want {
+        return Err(format!(
+            "state bitmap is {} bytes, want {want} for {cells} cells",
+            bits.len()
+        ));
+    }
+    if cells % 8 != 0 {
+        let tail = bits[want - 1] >> (cells % 8);
+        if tail != 0 {
+            return Err(format!("state bitmap sets bits past cell {cells}"));
+        }
+    }
+    Ok(())
 }
 
 /// Deterministic per-cell seeding decision, independent of engine layout:
@@ -73,6 +131,24 @@ pub fn run_and_hash(engine: &mut dyn Engine, steps: u32) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn state_bitmap_helpers_round_trip_and_validate() {
+        let mut bits = vec![0u8; 2];
+        for idx in [0u64, 3, 9, 12] {
+            set_state_bit(&mut bits, idx);
+        }
+        for idx in 0..13 {
+            assert_eq!(state_bit(&bits, idx), [0, 3, 9, 12].contains(&idx));
+        }
+        assert!(check_state_bitmap(&bits, 13).is_ok());
+        // wrong length
+        assert!(check_state_bitmap(&bits, 20).is_err());
+        // stray bit past the cell count
+        set_state_bit(&mut bits, 14);
+        assert!(check_state_bitmap(&bits, 13).is_err());
+        assert!(check_state_bitmap(&bits, 15).is_ok());
+    }
 
     #[test]
     fn seeding_is_deterministic_and_density_sensitive() {

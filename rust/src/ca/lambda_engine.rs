@@ -132,6 +132,20 @@ impl Engine for LambdaEngine {
         let e = lambda_linear(ctx, idx);
         self.buf.cur[e.linear(ctx.n) as usize]
     }
+
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        super::engine::check_state_bitmap(bits, self.cells())?;
+        self.buf.cur.fill(0);
+        self.buf.next.fill(0);
+        let ctx = &self.maps.ctx;
+        for idx in 0..ctx.compact.area() {
+            if super::engine::state_bit(bits, idx) {
+                let e = lambda_linear(ctx, idx);
+                self.buf.cur[e.linear(ctx.n) as usize] = 1;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -183,6 +183,16 @@ impl Engine for ThreadSqueezeEngine {
         self.buf.cur[idx as usize]
     }
 
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        super::engine::check_state_bitmap(bits, self.cells())?;
+        // compact storage IS the canonical order: unpack straight in
+        self.buf.next.fill(0);
+        for idx in 0..self.buf.cur.len() as u64 {
+            self.buf.cur[idx as usize] = super::engine::state_bit(bits, idx) as u8;
+        }
+        Ok(())
+    }
+
     /// Compact state is already in canonical order — hash directly.
     fn state_hash(&self) -> u64 {
         let mut h = super::grid::Fnv::default();

@@ -176,6 +176,22 @@ impl<B: StateBackend> Engine for SqueezeEngine<B> {
         let slot = self.maps.block.storage_index(e).expect("fractal cell");
         self.backend.get_cell(&self.buf.cur, slot)
     }
+
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        super::engine::check_state_bitmap(bits, self.cells())?;
+        // same canonical route as seeding: compact index -> λ -> slot
+        self.buf.cur.fill(B::Unit::default());
+        self.buf.next.fill(B::Unit::default());
+        let full = &self.maps.full;
+        for idx in 0..full.compact.area() {
+            if super::engine::state_bit(bits, idx) {
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = self.maps.block.storage_index(e).expect("fractal cell");
+                self.backend.set_cell(&mut self.buf.cur, slot);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

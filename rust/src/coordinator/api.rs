@@ -1,0 +1,1074 @@
+//! The typed coordinator API — the crate's v2 service surface.
+//!
+//! [`Coordinator`] is a long-lived facade over one shared worker budget,
+//! one shared [`MapCache`], and one [`Metrics`] registry. Two kinds of
+//! work multiplex over it concurrently:
+//!
+//! - **Jobs** — run-to-completion simulations. [`Coordinator::submit`]
+//!   returns a [`JobHandle`] immediately; the job executes on its own
+//!   thread under a budget permit, streaming progress (steps completed,
+//!   cells/sec) into the handle and the metrics gauges. Handles support
+//!   `poll` / `wait` / `cancel` (cancellation lands between steps, so a
+//!   cancelled job never tears mid-sweep).
+//! - **Sessions** — stateful open engines ([`Coordinator::open`]): step
+//!   them incrementally, `inspect` population / canonical hash /
+//!   ν-mapped cell and region probes, `snapshot` the full logical state
+//!   as a canonical bitmap, `restore` a snapshot into a fresh session
+//!   (bit-identical resume — any engine layout, byte or packed, single
+//!   or sharded, because the bitmap speaks compact-index order), and
+//!   `close`.
+//!
+//! The worker budget is admission control: a job waits (status
+//! `Queued`) until at least one permit frees, then runs with
+//! `min(requested, available)` workers — so many small jobs run
+//! concurrently while one big job can still take the whole budget.
+//! Budget occupancy, queued/in-flight jobs, and open sessions are
+//! mirrored into [`Metrics`] and dumped by the `metrics` verb.
+//!
+//! [`Request`]/[`Response`] are the typed wire model (protocol
+//! [`PROTOCOL_VERSION`], advertised in the serve banner);
+//! `coordinator::service` is the thin v1 line-protocol adapter over
+//! this module — old `key=value` one-shot lines execute through
+//! [`Coordinator::submit`] + wait and print byte-identical TSV rows.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::job::{JobResult, JobSpec};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::scheduler::{job_result, prepare_job_engine};
+use crate::ca::engine::Engine;
+use crate::fractal::{Coord, FractalSpec};
+use crate::maps::{nu, MapCache, MapCtx};
+use crate::util::timer::Timer;
+
+/// Version tag of the typed request/response model, shown in the serve
+/// banner (`# protocol=v2`). v1 is the bare `key=value` line protocol,
+/// which survives unchanged as a subset.
+pub const PROTOCOL_VERSION: &str = "v2";
+
+/// Finished-job records kept for late `wait`/`poll` before the submit
+/// path sweeps them (live jobs are never evicted).
+const RETAINED_JOBS_MAX: usize = 1024;
+
+// ---------------------------------------------------------------------
+// Typed wire model
+// ---------------------------------------------------------------------
+
+/// A typed request. `coordinator::service` parses protocol lines into
+/// these; library callers can also construct them directly and go
+/// through [`Coordinator::handle`], or call the facade methods.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Enqueue a job (async submit; pair with `Wait`/`Poll`/`Cancel`).
+    Submit(JobSpec),
+    /// Job status + progress without blocking.
+    Poll { id: u64 },
+    /// Block until the job finishes; returns its result.
+    Wait { id: u64 },
+    /// Request cancellation (lands between steps).
+    Cancel { id: u64 },
+    /// Open a stateful simulation session (`spec.steps` is ignored).
+    Open(JobSpec),
+    /// Advance a session `n` steps.
+    Step { sid: u64, n: u32 },
+    /// Read session facts + optional cell/region probes.
+    Inspect { sid: u64, probes: Vec<Probe> },
+    /// Export a session's full canonical state.
+    Snapshot { sid: u64 },
+    /// Re-create a session from a snapshot (bit-identical resume).
+    Restore(Box<SessionSnapshot>),
+    /// Close a session, returning its final facts.
+    Close { sid: u64 },
+    /// Aggregate counters and gauges.
+    Metrics,
+}
+
+/// A typed response. Every variant renders to one v1 protocol line in
+/// `coordinator::service`.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Submitted { id: u64 },
+    Status { id: u64, status: JobStatus },
+    Finished(Box<JobResult>),
+    CancelRequested { id: u64 },
+    /// `open` and `restore` both answer with the session's facts.
+    Session(SessionInfo),
+    Stepped(StepInfo),
+    Inspected(InspectInfo),
+    Snapshotted { sid: u64, snapshot: Box<SessionSnapshot> },
+    Closed(SessionInfo),
+    Metrics(MetricsSnapshot),
+    Error { id: u64, message: String },
+}
+
+/// Observable job lifecycle. `Done` carries the full result; `Failed`
+/// the service-facing message (`ERR` line verbatim).
+#[derive(Clone, Debug)]
+pub enum JobStatus {
+    Queued,
+    Running(JobProgress),
+    Done(Box<JobResult>),
+    Failed(String),
+    Cancelled,
+}
+
+/// Streaming progress of a running job, updated after every step.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct JobProgress {
+    pub steps_done: u32,
+    pub steps_total: u32,
+    /// Observed throughput so far (cell updates per second).
+    pub cells_per_s: f64,
+}
+
+/// One `inspect` probe into a session's state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Probe {
+    /// State of the cell with this compact linear index.
+    Cell(u64),
+    /// State of the expanded-space coordinate `(x, y)`, resolved through
+    /// ν(ω) — `None` when the coordinate is a hole of the embedding.
+    At(u32, u32),
+    /// Live count over the compact index range `[lo, hi)`.
+    Region(u64, u64),
+}
+
+/// A probe's answer, paired with the probe that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProbeResult {
+    Cell { idx: u64, alive: u8 },
+    At { x: u32, y: u32, state: Option<u8> },
+    Region { lo: u64, hi: u64, live: u64 },
+}
+
+/// Point-in-time session facts (returned by open/restore/close).
+#[derive(Clone, Debug)]
+pub struct SessionInfo {
+    pub sid: u64,
+    pub engine: String,
+    pub cells: u64,
+    pub steps_done: u64,
+    pub population: u64,
+    pub state_hash: u64,
+}
+
+/// Outcome of one `step` call.
+#[derive(Clone, Debug)]
+pub struct StepInfo {
+    pub sid: u64,
+    /// Steps this call advanced.
+    pub stepped: u32,
+    /// Total steps over the session's lifetime (snapshots carry it).
+    pub steps_done: u64,
+    pub population: u64,
+    pub state_hash: u64,
+    pub cells_per_s: f64,
+}
+
+/// Outcome of one `inspect` call.
+#[derive(Clone, Debug)]
+pub struct InspectInfo {
+    pub sid: u64,
+    pub engine: String,
+    pub cells: u64,
+    pub steps_done: u64,
+    pub population: u64,
+    pub state_hash: u64,
+    pub probes: Vec<ProbeResult>,
+}
+
+// ---------------------------------------------------------------------
+// Snapshots
+// ---------------------------------------------------------------------
+
+/// A session's full logical state plus everything needed to rebuild the
+/// engine: the job spec (engine kind, level, rule, knobs) and the
+/// canonical state bitmap ([`Engine::export_state`] layout). Restoring
+/// builds a fresh engine from the spec, loads the bitmap, and verifies
+/// the canonical hash — so a restore is bit-identical or an error,
+/// never silently wrong. The bitmap speaks compact-index order, so a
+/// snapshot taken from a byte engine restores into a packed or sharded
+/// one (and vice versa).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSnapshot {
+    pub spec: JobSpec,
+    pub steps_done: u64,
+    pub state_hash: u64,
+    pub bits: Vec<u8>,
+}
+
+impl SessionSnapshot {
+    /// Render as a single whitespace-free token for the line protocol:
+    /// `SQZSNAP2;job=<spec line, spaces as commas>;steps=..;hash=..;state=<hex>`.
+    pub fn to_token(&self) -> String {
+        use std::fmt::Write as _;
+        let mut state = String::with_capacity(self.bits.len() * 2);
+        for b in &self.bits {
+            let _ = write!(state, "{b:02x}");
+        }
+        format!(
+            "SQZSNAP2;job={};steps={};hash={:016x};state={}",
+            self.spec.to_line().replace(' ', ","),
+            self.steps_done,
+            self.state_hash,
+            state
+        )
+    }
+
+    /// Parse a [`SessionSnapshot::to_token`] rendering.
+    pub fn parse(token: &str) -> Result<SessionSnapshot, String> {
+        let rest = token
+            .strip_prefix("SQZSNAP2;")
+            .ok_or("snapshot token must start with SQZSNAP2;")?;
+        let mut spec = None;
+        let mut steps = None;
+        let mut hash = None;
+        let mut bits = None;
+        for field in rest.split(';') {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| format!("bad snapshot field {field:?}"))?;
+            match k {
+                "job" => {
+                    spec = Some(JobSpec::parse_line(0, &v.replace(',', " "))?);
+                }
+                "steps" => {
+                    steps =
+                        Some(v.parse::<u64>().map_err(|_| format!("bad snapshot steps={v}"))?)
+                }
+                "hash" => {
+                    hash = Some(
+                        u64::from_str_radix(v, 16)
+                            .map_err(|_| format!("bad snapshot hash={v}"))?,
+                    )
+                }
+                "state" => {
+                    // byte-wise (not char-wise) slicing: reject non-ASCII
+                    // up front so malformed input is an ERR, not a panic
+                    if v.len() % 2 != 0 || !v.is_ascii() {
+                        return Err("bad snapshot state hex".into());
+                    }
+                    let mut out = Vec::with_capacity(v.len() / 2);
+                    for i in (0..v.len()).step_by(2) {
+                        out.push(
+                            u8::from_str_radix(&v[i..i + 2], 16)
+                                .map_err(|_| "bad snapshot state hex".to_string())?,
+                        );
+                    }
+                    bits = Some(out);
+                }
+                other => return Err(format!("unknown snapshot field {other:?}")),
+            }
+        }
+        Ok(SessionSnapshot {
+            spec: spec.ok_or("snapshot token missing job=")?,
+            steps_done: steps.ok_or("snapshot token missing steps=")?,
+            state_hash: hash.ok_or("snapshot token missing hash=")?,
+            bits: bits.ok_or("snapshot token missing state=")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker budget
+// ---------------------------------------------------------------------
+
+/// The one shared worker budget: `total` permits, handed out
+/// `min(requested, available)` at a time with at least one permit per
+/// grant — so admission waits only for the budget to be non-full, and a
+/// lone huge request can never starve small ones (nor vice versa).
+///
+/// Permits are *admission* accounting: jobs clamp their engine's thread
+/// pool to the grant exactly, while sessions keep their requested pool
+/// (fixed at build) and the grant only gates how many sessions step at
+/// once — a partial grant bounds concurrent admissions, not every OS
+/// thread.
+struct WorkerBudget {
+    total: usize,
+    in_use: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl WorkerBudget {
+    fn new(total: usize) -> WorkerBudget {
+        WorkerBudget {
+            total: total.max(1),
+            in_use: Mutex::new(0),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Block until a permit frees, then take `min(want, available)`
+    /// (≥ 1). Returns `None` without permits if `cancel` is raised while
+    /// queued — the wait polls the flag (50ms granularity), so a
+    /// cancelled queued job unblocks promptly instead of waiting out
+    /// whatever job holds the budget.
+    fn acquire(&self, want: usize, cancel: &AtomicBool) -> Option<usize> {
+        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        while *in_use >= self.total {
+            if cancel.load(Ordering::Relaxed) {
+                return None;
+            }
+            let (guard, _timed_out) = self
+                .freed
+                .wait_timeout(in_use, std::time::Duration::from_millis(50))
+                .expect("budget poisoned");
+            in_use = guard;
+        }
+        if cancel.load(Ordering::Relaxed) {
+            return None;
+        }
+        let granted = want.max(1).min(self.total - *in_use);
+        *in_use += granted;
+        Some(granted)
+    }
+
+    /// Non-blocking variant for session work: take `min(want, available)`
+    /// immediately — possibly 0 when the budget is saturated — so a
+    /// session `open`/`step` records its occupancy honestly but can
+    /// never wedge a single-threaded protocol loop behind long jobs.
+    fn try_acquire(&self, want: usize) -> usize {
+        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        let granted = want.max(1).min(self.total - (*in_use).min(self.total));
+        *in_use += granted;
+        granted
+    }
+
+    fn release(&self, granted: usize) {
+        if granted == 0 {
+            return;
+        }
+        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        *in_use -= granted;
+        drop(in_use);
+        self.freed.notify_all();
+    }
+
+    fn occupancy(&self) -> (u64, u64) {
+        (
+            *self.in_use.lock().expect("budget poisoned") as u64,
+            self.total as u64,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Jobs
+// ---------------------------------------------------------------------
+
+enum JobPhase {
+    Queued,
+    Running,
+    Finished(JobOutcome),
+}
+
+#[derive(Clone)]
+enum JobOutcome {
+    Done(JobResult),
+    Failed(String),
+    Cancelled,
+}
+
+struct JobState {
+    steps_total: u32,
+    steps_done: AtomicU32,
+    cells_per_s_bits: AtomicU64,
+    cancel: AtomicBool,
+    phase: Mutex<JobPhase>,
+    finished: Condvar,
+}
+
+impl JobState {
+    fn progress(&self) -> JobProgress {
+        JobProgress {
+            steps_done: self.steps_done.load(Ordering::Relaxed),
+            steps_total: self.steps_total,
+            cells_per_s: f64::from_bits(self.cells_per_s_bits.load(Ordering::Relaxed)),
+        }
+    }
+
+    fn status(&self) -> JobStatus {
+        match &*self.phase.lock().expect("job state poisoned") {
+            JobPhase::Queued => JobStatus::Queued,
+            JobPhase::Running => JobStatus::Running(self.progress()),
+            JobPhase::Finished(JobOutcome::Done(r)) => JobStatus::Done(Box::new(r.clone())),
+            JobPhase::Finished(JobOutcome::Failed(m)) => JobStatus::Failed(m.clone()),
+            JobPhase::Finished(JobOutcome::Cancelled) => JobStatus::Cancelled,
+        }
+    }
+
+    fn finish(&self, outcome: JobOutcome) {
+        *self.phase.lock().expect("job state poisoned") = JobPhase::Finished(outcome);
+        self.finished.notify_all();
+    }
+
+    fn wait(&self) -> Result<JobResult, String> {
+        let mut phase = self.phase.lock().expect("job state poisoned");
+        loop {
+            match &*phase {
+                JobPhase::Finished(JobOutcome::Done(r)) => return Ok(r.clone()),
+                JobPhase::Finished(JobOutcome::Failed(m)) => return Err(m.clone()),
+                JobPhase::Finished(JobOutcome::Cancelled) => return Err("cancelled".into()),
+                _ => phase = self.finished.wait(phase).expect("job state poisoned"),
+            }
+        }
+    }
+}
+
+/// A submitted job: poll for streaming progress, block for the result,
+/// or request cancellation. Cloneable and `Send` — hand it to another
+/// thread, or look the job up again by id via [`Coordinator::job`].
+#[derive(Clone)]
+pub struct JobHandle {
+    id: u64,
+    state: Arc<JobState>,
+}
+
+impl JobHandle {
+    /// The id `wait`/`poll`/`cancel` verbs address (equals `spec.id`
+    /// when that was nonzero and unused, else coordinator-assigned).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Status + progress without blocking.
+    pub fn poll(&self) -> JobStatus {
+        self.state.status()
+    }
+
+    /// Block until the job finishes. Failed jobs return their service
+    /// message; cancelled jobs return `Err("cancelled")`.
+    pub fn wait(&self) -> Result<JobResult, String> {
+        self.state.wait()
+    }
+
+    /// Request cancellation; it lands between steps. Returns `false` if
+    /// the job had already finished.
+    pub fn cancel(&self) -> bool {
+        self.state.cancel.store(true, Ordering::Relaxed);
+        !matches!(
+            &*self.state.phase.lock().expect("job state poisoned"),
+            JobPhase::Finished(_)
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sessions
+// ---------------------------------------------------------------------
+
+struct Session {
+    sid: u64,
+    spec: JobSpec,
+    fractal: FractalSpec,
+    engine: Box<dyn Engine>,
+    steps_done: u64,
+    /// The session's requested worker count — the engine's fixed thread
+    /// pool, and the permit count re-acquired around every `step`.
+    workers: usize,
+    /// Lazily built map context for ν-resolved `At` probes.
+    ctx: Option<MapCtx>,
+}
+
+impl Session {
+    fn info(&self) -> SessionInfo {
+        SessionInfo {
+            sid: self.sid,
+            engine: self.engine.name(),
+            cells: self.engine.cells(),
+            steps_done: self.steps_done,
+            population: self.engine.population(),
+            state_hash: self.engine.state_hash(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The coordinator
+// ---------------------------------------------------------------------
+
+struct CoordInner {
+    cache: Arc<MapCache>,
+    metrics: Arc<Metrics>,
+    budget: WorkerBudget,
+    jobs: Mutex<HashMap<u64, Arc<JobState>>>,
+    sessions: Mutex<HashMap<u64, Arc<Mutex<Session>>>>,
+    next_job_id: AtomicU64,
+    next_session_id: AtomicU64,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl CoordInner {
+    fn mirror_budget(&self) {
+        let (in_use, total) = self.budget.occupancy();
+        self.metrics.record_budget(in_use, total);
+    }
+}
+
+/// The long-lived typed-API facade. See the module docs for the model.
+pub struct Coordinator {
+    inner: Arc<CoordInner>,
+}
+
+impl Coordinator {
+    /// A coordinator multiplexing over `budget` worker permits (clamped
+    /// to ≥ 1), with a fresh shared [`MapCache`] and [`Metrics`].
+    pub fn new(budget: usize) -> Coordinator {
+        let inner = CoordInner {
+            cache: Arc::new(MapCache::new()),
+            metrics: Arc::new(Metrics::default()),
+            budget: WorkerBudget::new(budget),
+            jobs: Mutex::new(HashMap::new()),
+            sessions: Mutex::new(HashMap::new()),
+            next_job_id: AtomicU64::new(1),
+            next_session_id: AtomicU64::new(1),
+            threads: Mutex::new(Vec::new()),
+        };
+        inner.mirror_budget();
+        Coordinator {
+            inner: Arc::new(inner),
+        }
+    }
+
+    /// The shared metrics registry (same counters the `metrics` verb
+    /// dumps).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.inner.metrics)
+    }
+
+    /// The shared λ/ν map cache every job and session builds through.
+    pub fn map_cache(&self) -> Arc<MapCache> {
+        Arc::clone(&self.inner.cache)
+    }
+
+    // -- jobs ----------------------------------------------------------
+
+    /// Enqueue a job for concurrent execution; returns immediately.
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        self.submit_with_notify(spec, None)
+    }
+
+    /// `submit`, additionally sending the outcome over `notify` when the
+    /// job finishes — the seam `coordinator::scheduler` (completion-order
+    /// delivery) is built on.
+    ///
+    /// Each job runs on its own OS thread (queued jobs park cheaply in
+    /// the budget's condvar; finished threads are reaped on the next
+    /// submit). A pooled executor for very large async bursts is a
+    /// ROADMAP follow-up.
+    pub(super) fn submit_with_notify(
+        &self,
+        mut spec: JobSpec,
+        notify: Option<mpsc::Sender<Result<JobResult, String>>>,
+    ) -> JobHandle {
+        let state = Arc::new(JobState {
+            steps_total: spec.steps,
+            steps_done: AtomicU32::new(0),
+            cells_per_s_bits: AtomicU64::new(0),
+            cancel: AtomicBool::new(false),
+            phase: Mutex::new(JobPhase::Queued),
+            finished: Condvar::new(),
+        });
+        // the handle id: the caller's nonzero spec id when free (the
+        // serve adapter numbers lines), else coordinator-assigned.
+        // `JobResult::id` always stays `spec.id` as submitted.
+        let id = {
+            let mut jobs = self.inner.jobs.lock().expect("jobs poisoned");
+            // bounded retention: once the map is large, sweep finished
+            // records (their results were observable via wait/poll; a
+            // client that never collects them must not grow the map
+            // forever). Live jobs are always retained.
+            if jobs.len() >= RETAINED_JOBS_MAX {
+                jobs.retain(|_, state| {
+                    !matches!(
+                        &*state.phase.lock().expect("job state poisoned"),
+                        JobPhase::Finished(_)
+                    )
+                });
+            }
+            let mut id = spec.id;
+            while id == 0 || jobs.contains_key(&id) {
+                id = self.inner.next_job_id.fetch_add(1, Ordering::Relaxed);
+            }
+            if spec.id == 0 {
+                spec.id = id;
+            }
+            jobs.insert(id, Arc::clone(&state));
+            id
+        };
+        let inner = Arc::clone(&self.inner);
+        let job_state = Arc::clone(&state);
+        inner.metrics.job_queued(true);
+        let handle = std::thread::spawn(move || {
+            run_job(&inner, id, spec, &job_state, notify);
+        });
+        let mut threads = self.inner.threads.lock().expect("threads poisoned");
+        // reap finished job threads so the handle list stays bounded by
+        // the number of *live* jobs, not the lifetime total
+        threads.retain(|h| !h.is_finished());
+        threads.push(handle);
+        drop(threads);
+        JobHandle { id, state }
+    }
+
+    /// Look up a previously submitted job by id.
+    pub fn job(&self, id: u64) -> Option<JobHandle> {
+        self.inner
+            .jobs
+            .lock()
+            .expect("jobs poisoned")
+            .get(&id)
+            .map(|state| JobHandle {
+                id,
+                state: Arc::clone(state),
+            })
+    }
+
+    /// Block until job `id` finishes, **consuming its record**: the
+    /// outcome is delivered exactly once by id, and the jobs map stays
+    /// bounded in a long-lived deployment. [`JobHandle`]s already held
+    /// keep working (they share the state by `Arc`); a second by-id
+    /// `wait`/`poll` answers `unknown job`.
+    pub fn wait(&self, id: u64) -> Result<JobResult, String> {
+        let handle = self.job(id).ok_or_else(|| format!("unknown job {id}"))?;
+        let outcome = handle.wait();
+        self.forget(id);
+        outcome
+    }
+
+    /// Status + progress of job `id`.
+    pub fn poll(&self, id: u64) -> Result<JobStatus, String> {
+        Ok(self
+            .job(id)
+            .ok_or_else(|| format!("unknown job {id}"))?
+            .poll())
+    }
+
+    /// Request cancellation of job `id`.
+    pub fn cancel(&self, id: u64) -> Result<bool, String> {
+        Ok(self
+            .job(id)
+            .ok_or_else(|| format!("unknown job {id}"))?
+            .cancel())
+    }
+
+    /// Drop the record of a finished (or no-longer-interesting) job so
+    /// the jobs map stays bounded in a long-lived deployment. Later
+    /// `wait`/`poll`/`cancel` on the id answer `unknown job`; handles
+    /// already held keep working (they share the state by `Arc`).
+    pub fn forget(&self, id: u64) {
+        self.inner.jobs.lock().expect("jobs poisoned").remove(&id);
+    }
+
+    /// Join every job thread spawned so far (all outcomes are then
+    /// observable without blocking). New submits remain possible.
+    pub fn join_jobs(&self) {
+        let handles: Vec<_> = self
+            .inner
+            .threads
+            .lock()
+            .expect("threads poisoned")
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    // -- sessions ------------------------------------------------------
+
+    /// Build (but do not register) a session: engine construction under
+    /// a budget permit. Shared by `open` and `restore` so the restore
+    /// path can overwrite the seeded state *before* any info scan or
+    /// registration happens.
+    fn build_session(&self, spec: JobSpec) -> Result<Session, String> {
+        let granted = self.inner.budget.try_acquire(spec.workers);
+        self.inner.mirror_budget();
+        // same panic guard as the job path: a build invariant failure is
+        // an ERR line, never a dead serve process or leaked permits
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prepare_job_engine(&spec, Some(&*self.inner.cache))
+        }))
+        .unwrap_or_else(|payload| {
+            Err(format!("engine build panicked: {}", panic_message(&payload)))
+        });
+        self.inner.budget.release(granted);
+        self.inner.mirror_budget();
+        self.inner.metrics.record_map_cache(self.inner.cache.stats());
+        let (fractal, engine) = built?;
+        let sid = self.inner.next_session_id.fetch_add(1, Ordering::Relaxed);
+        let workers = spec.workers;
+        Ok(Session {
+            sid,
+            spec,
+            fractal,
+            engine,
+            steps_done: 0,
+            workers,
+            ctx: None,
+        })
+    }
+
+    /// Register a built session and answer its facts.
+    fn register_session(&self, session: Session) -> SessionInfo {
+        let info = session.info();
+        self.inner
+            .sessions
+            .lock()
+            .expect("sessions poisoned")
+            .insert(session.sid, Arc::new(Mutex::new(session)));
+        self.inner.metrics.session_open(true);
+        info
+    }
+
+    /// Open a stateful session: build the engine (seeded per the spec;
+    /// `spec.steps` is ignored) and register it. The build and every
+    /// later `step` run under a budget permit (admission accounting);
+    /// the engine keeps its requested `spec.workers` thread count — a
+    /// transiently busy budget never permanently degrades a session's
+    /// parallelism.
+    pub fn open(&self, spec: JobSpec) -> Result<SessionInfo, String> {
+        Ok(self.register_session(self.build_session(spec)?))
+    }
+
+    fn session(&self, sid: u64) -> Result<Arc<Mutex<Session>>, String> {
+        self.inner
+            .sessions
+            .lock()
+            .expect("sessions poisoned")
+            .get(&sid)
+            .cloned()
+            .ok_or_else(|| format!("unknown session {sid}"))
+    }
+
+    /// Advance session `sid` by `n` steps. Occupancy is recorded against
+    /// the worker budget without blocking (`try_acquire`) — a saturated
+    /// budget must never wedge the protocol loop behind long jobs.
+    /// Distinct sessions step concurrently; one session serializes.
+    pub fn step(&self, sid: u64, n: u32) -> Result<StepInfo, String> {
+        let session = self.session(sid)?;
+        let mut s = session.lock().expect("session poisoned");
+        let granted = self.inner.budget.try_acquire(s.workers);
+        self.inner.mirror_budget();
+        let cells = s.engine.cells();
+        let t = Timer::start();
+        // panic guard (caught *inside* the lock, so the mutex is never
+        // poisoned): a mid-step engine panic leaves indeterminate state,
+        // so the session is closed rather than served torn
+        let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for _ in 0..n {
+                s.engine.step();
+            }
+        }));
+        let elapsed = t.elapsed_s();
+        self.inner.budget.release(granted);
+        self.inner.mirror_budget();
+        if let Err(payload) = stepped {
+            drop(s);
+            let _ = self.close(sid);
+            return Err(format!(
+                "session {sid} engine panicked mid-step ({}); session closed",
+                panic_message(&payload)
+            ));
+        }
+        s.steps_done += n as u64;
+        let cells_per_s = (cells * n as u64) as f64 / elapsed.max(1e-12);
+        self.inner.metrics.record_progress(n as u64, cells_per_s);
+        Ok(StepInfo {
+            sid,
+            stepped: n,
+            steps_done: s.steps_done,
+            population: s.engine.population(),
+            state_hash: s.engine.state_hash(),
+            cells_per_s,
+        })
+    }
+
+    /// Read session facts plus any cell/region probes.
+    pub fn inspect(&self, sid: u64, probes: &[Probe]) -> Result<InspectInfo, String> {
+        let session = self.session(sid)?;
+        let mut s = session.lock().expect("session poisoned");
+        let cells = s.engine.cells();
+        let mut results = Vec::with_capacity(probes.len());
+        for &probe in probes {
+            results.push(match probe {
+                Probe::Cell(idx) => {
+                    if idx >= cells {
+                        return Err(format!("cell {idx} out of range (cells={cells})"));
+                    }
+                    ProbeResult::Cell {
+                        idx,
+                        alive: s.engine.cell(idx),
+                    }
+                }
+                Probe::At(x, y) => {
+                    // ν-mapped: expanded coordinate -> compact index (the
+                    // paper's point — the maps are cheap enough to run
+                    // per request)
+                    let Session {
+                        ctx,
+                        fractal,
+                        spec,
+                        engine,
+                        ..
+                    } = &mut *s;
+                    let ctx = ctx.get_or_insert_with(|| MapCtx::new(fractal, spec.r));
+                    let state =
+                        nu(ctx, Coord::new(x, y)).map(|c| engine.cell(c.linear(ctx.compact.w)));
+                    ProbeResult::At { x, y, state }
+                }
+                Probe::Region(lo, hi) => {
+                    if lo > hi || hi > cells {
+                        return Err(format!(
+                            "region {lo}:{hi} out of range (cells={cells})"
+                        ));
+                    }
+                    let live = (lo..hi).map(|i| s.engine.cell(i) as u64).sum();
+                    ProbeResult::Region { lo, hi, live }
+                }
+            });
+        }
+        Ok(InspectInfo {
+            sid,
+            engine: s.engine.name(),
+            cells,
+            steps_done: s.steps_done,
+            population: s.engine.population(),
+            state_hash: s.engine.state_hash(),
+            probes: results,
+        })
+    }
+
+    /// Export session `sid`'s full canonical state.
+    pub fn snapshot(&self, sid: u64) -> Result<SessionSnapshot, String> {
+        let session = self.session(sid)?;
+        let s = session.lock().expect("session poisoned");
+        Ok(SessionSnapshot {
+            spec: s.spec.clone(),
+            steps_done: s.steps_done,
+            state_hash: s.engine.state_hash(),
+            bits: s.engine.export_state(),
+        })
+    }
+
+    /// Re-create a session from a snapshot: fresh engine from the spec,
+    /// state loaded from the bitmap, canonical hash verified — all
+    /// before the session is registered, so a bad snapshot can never
+    /// leak a half-restored session. Stepping the restored session is
+    /// bit-identical to stepping the original.
+    pub fn restore(&self, snap: &SessionSnapshot) -> Result<SessionInfo, String> {
+        // build unseeded (density 0): load_state overwrites the state
+        // anyway, so the constructor's per-live-cell seeding walk is
+        // pure waste. Exception: `shards=auto:` specs derive their
+        // cost-weighted partition from the t=0 seeding, so those build
+        // seeded to keep the same load split they were snapshotted with.
+        let mut build_spec = snap.spec.clone();
+        if !build_spec.balance {
+            build_spec.density = 0.0;
+        }
+        let mut session = self.build_session(build_spec)?;
+        session.spec = snap.spec.clone();
+        session.engine.load_state(&snap.bits)?;
+        let hash = session.engine.state_hash();
+        if hash != snap.state_hash {
+            return Err(format!(
+                "snapshot hash mismatch: state {hash:#018x} vs recorded {:#018x}",
+                snap.state_hash
+            ));
+        }
+        session.steps_done = snap.steps_done;
+        Ok(self.register_session(session))
+    }
+
+    /// Close a session, returning its final facts.
+    pub fn close(&self, sid: u64) -> Result<SessionInfo, String> {
+        let session = self
+            .inner
+            .sessions
+            .lock()
+            .expect("sessions poisoned")
+            .remove(&sid)
+            .ok_or_else(|| format!("unknown session {sid}"))?;
+        self.inner.metrics.session_open(false);
+        let s = session.lock().expect("session poisoned");
+        Ok(s.info())
+    }
+
+    // -- typed dispatch ------------------------------------------------
+
+    /// Dispatch one typed request. Blocking semantics follow the verb
+    /// (`Wait` blocks, everything else returns promptly).
+    pub fn handle(&self, req: Request) -> Response {
+        match req {
+            Request::Submit(spec) => Response::Submitted {
+                id: self.submit(spec).id(),
+            },
+            Request::Poll { id } => match self.poll(id) {
+                Ok(status) => Response::Status { id, status },
+                Err(message) => Response::Error { id, message },
+            },
+            Request::Wait { id } => match self.wait(id) {
+                Ok(r) => Response::Finished(Box::new(r)),
+                Err(message) => Response::Error { id, message },
+            },
+            Request::Cancel { id } => match self.cancel(id) {
+                Ok(_) => Response::CancelRequested { id },
+                Err(message) => Response::Error { id, message },
+            },
+            Request::Open(spec) => match self.open(spec) {
+                Ok(info) => Response::Session(info),
+                Err(message) => Response::Error { id: 0, message },
+            },
+            Request::Step { sid, n } => match self.step(sid, n) {
+                Ok(info) => Response::Stepped(info),
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Inspect { sid, probes } => match self.inspect(sid, &probes) {
+                Ok(info) => Response::Inspected(info),
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Snapshot { sid } => match self.snapshot(sid) {
+                Ok(snapshot) => Response::Snapshotted {
+                    sid,
+                    snapshot: Box::new(snapshot),
+                },
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Restore(snap) => match self.restore(&snap) {
+                Ok(info) => Response::Session(info),
+                Err(message) => Response::Error { id: 0, message },
+            },
+            Request::Close { sid } => match self.close(sid) {
+                Ok(info) => Response::Closed(info),
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Metrics => Response::Metrics(self.inner.metrics.snapshot()),
+        }
+    }
+}
+
+/// The job-executor body: acquire a budget grant, build, step with
+/// per-step cancel checks + progress events, publish the outcome.
+/// Channel-notified jobs (the `Scheduler` shim) are forgotten from the
+/// jobs map on completion — their outcome is delivered over the
+/// channel, so the by-id record would otherwise accumulate forever.
+fn run_job(
+    inner: &CoordInner,
+    id: u64,
+    spec: JobSpec,
+    state: &JobState,
+    notify: Option<mpsc::Sender<Result<JobResult, String>>>,
+) {
+    let (outcome, granted) = match inner.budget.acquire(spec.workers, &state.cancel) {
+        // cancelled while still queued: no permits were taken, no
+        // engine was built — publish the outcome straight away
+        None => {
+            inner.metrics.job_queued(false);
+            (JobOutcome::Cancelled, None)
+        }
+        Some(granted) => {
+            inner.metrics.job_queued(false);
+            inner.metrics.job_inflight(true);
+            inner.mirror_budget();
+            inner.metrics.job_started();
+            *state.phase.lock().expect("job state poisoned") = JobPhase::Running;
+            let mut run_spec = spec.clone();
+            run_spec.workers = granted;
+            // panic guard: an engine invariant failure must become a
+            // Failed outcome — never a forever-Running job with leaked
+            // permits and a wait() that blocks the serve loop for good
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_job_body(inner, &run_spec, state)
+            }))
+            .unwrap_or_else(|payload| {
+                JobOutcome::Failed(format!("job panicked: {}", panic_message(&payload)))
+            });
+            (outcome, Some(granted))
+        }
+    };
+    match &outcome {
+        JobOutcome::Done(r) => {
+            inner
+                .metrics
+                .job_finished(r.total_s, r.cells * r.steps as u64);
+            if let Some(s) = r.shard {
+                inner.metrics.record_sharding(s);
+            }
+        }
+        JobOutcome::Failed(_) => inner.metrics.job_failed(),
+        JobOutcome::Cancelled => inner.metrics.job_cancelled(),
+    }
+    inner.metrics.record_map_cache(inner.cache.stats());
+    if let Some(granted) = granted {
+        inner.budget.release(granted);
+        inner.metrics.job_inflight(false);
+    }
+    inner.mirror_budget();
+    let notified = notify.is_some();
+    if let Some(tx) = notify {
+        let _ = tx.send(match &outcome {
+            JobOutcome::Done(r) => Ok(r.clone()),
+            JobOutcome::Failed(m) => Err(m.clone()),
+            JobOutcome::Cancelled => Err("cancelled".into()),
+        });
+    }
+    state.finish(outcome);
+    if notified {
+        inner.jobs.lock().expect("jobs poisoned").remove(&id);
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "engine panicked".into())
+}
+
+/// Steps between progress publications: frequent enough to be a live
+/// signal, coarse enough that the clock read + atomics stay invisible
+/// next to the sweep itself on tiny fast-stepping grids.
+const PROGRESS_EVERY: u32 = 64;
+
+fn run_job_body(inner: &CoordInner, spec: &JobSpec, state: &JobState) -> JobOutcome {
+    // a cancel that arrived while the job was queued lands before the
+    // (potentially expensive) map build + seeding, not after
+    if state.cancel.load(Ordering::Relaxed) {
+        return JobOutcome::Cancelled;
+    }
+    let mut engine = match prepare_job_engine(spec, Some(&inner.cache)) {
+        Ok((_, e)) => e,
+        Err(m) => return JobOutcome::Failed(m),
+    };
+    let cells = engine.cells();
+    let t = Timer::start();
+    let publish = |done: u32, batch: u32| {
+        state.steps_done.store(done, Ordering::Relaxed);
+        let cells_per_s = (cells * done as u64) as f64 / t.elapsed_s().max(1e-12);
+        state
+            .cells_per_s_bits
+            .store(cells_per_s.to_bits(), Ordering::Relaxed);
+        inner.metrics.record_progress(batch as u64, cells_per_s);
+    };
+    let mut since_publish = 0u32;
+    for done in 1..=spec.steps {
+        if state.cancel.load(Ordering::Relaxed) {
+            if since_publish > 0 {
+                publish(done - 1, since_publish);
+            }
+            return JobOutcome::Cancelled;
+        }
+        engine.step();
+        since_publish += 1;
+        if since_publish == PROGRESS_EVERY || done == spec.steps {
+            publish(done, since_publish);
+            since_publish = 0;
+        }
+    }
+    JobOutcome::Done(job_result(spec, engine.as_ref(), t.elapsed_s()))
+}

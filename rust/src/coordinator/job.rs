@@ -4,7 +4,7 @@
 //! the `shards=`/`packed=` promotions share one grammar with the
 //! CLI/factory layer: [`EngineSpec`].
 
-use crate::ca::{EngineKind, EngineSpec, Rule};
+use crate::ca::{EngineConfig, EngineKind, EngineSpec, Rule};
 use crate::fractal::FractalSpec;
 use crate::shard::ShardStats;
 
@@ -149,6 +149,60 @@ impl JobSpec {
             spec.compact = v;
         }
         Ok(spec)
+    }
+
+    /// Render the canonical request line: `parse_line(id, &to_line())`
+    /// reconstructs this spec exactly (the round-trip the snapshot token
+    /// and the config dump rely on). Engine notation is [`EngineSpec`]'s
+    /// canonical form; the sharded-only knobs are emitted only when the
+    /// engine is sharded (they are meaningless — and rejected by the
+    /// parser — otherwise), and `balance` rides the `shards=auto:<S>`
+    /// key, which re-overrides the same shard count the engine string
+    /// already carries.
+    pub fn to_line(&self) -> String {
+        let engine = EngineSpec { kind: self.engine };
+        let mut line = format!(
+            "fractal={} engine={} r={} steps={} density={} seed={} rule={} workers={}",
+            self.fractal,
+            engine,
+            self.r,
+            self.steps,
+            self.density,
+            self.seed,
+            self.rule.notation(),
+            self.workers
+        );
+        match self.engine {
+            EngineKind::ShardedSqueeze { shards, .. }
+            | EngineKind::PackedShardedSqueeze { shards, .. } => {
+                line.push_str(&format!(
+                    " overlap={} compact={}",
+                    self.overlap as u8, self.compact as u8
+                ));
+                if self.balance {
+                    line.push_str(&format!(" shards=auto:{shards}"));
+                }
+            }
+            _ => {}
+        }
+        line
+    }
+
+    /// The engine-construction view of this job — the one seam between
+    /// the coordinator's wire types and `ca::build_with_cache`, shared by
+    /// the synchronous executor and the async coordinator.
+    pub fn engine_config(&self) -> EngineConfig {
+        EngineConfig {
+            kind: self.engine,
+            r: self.r,
+            rule: self.rule,
+            density: self.density,
+            seed: self.seed,
+            workers: self.workers,
+            overlap: self.overlap,
+            compact: self.compact,
+            balance: self.balance,
+        }
     }
 
     /// Semantic validation against the resolved fractal — the checks
@@ -347,6 +401,37 @@ mod tests {
         // bb never fails rho validation
         let bb = JobSpec::parse_line(1, "engine=bb r=2").unwrap();
         assert!(bb.validate(&tri).is_ok());
+    }
+
+    #[test]
+    fn to_line_round_trips_through_parse_line() {
+        for line in [
+            "r=6",
+            "fractal=vicsek engine=squeeze-tcu:4 r=5 steps=7 density=0.25 seed=9 rule=B36/S23 workers=2",
+            "engine=sharded-squeeze:8:4 overlap=0 compact=1 r=6",
+            "shards=auto:3 engine=squeeze:4 density=0.30000000000000004",
+            "packed=1 shards=auto:5 overlap=1 compact=0 engine=squeeze:16",
+            "engine=squeeze-bits:8 seed=18446744073709551615",
+            "engine=bb rule=B2/S",
+        ] {
+            let spec = JobSpec::parse_line(7, line).unwrap();
+            let rendered = spec.to_line();
+            assert_eq!(
+                JobSpec::parse_line(7, &rendered).unwrap(),
+                spec,
+                "{line:?} -> {rendered:?} failed to round-trip"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_config_mirrors_the_spec() {
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:4 overlap=0 r=6 workers=3")
+            .unwrap();
+        let cfg = j.engine_config();
+        assert_eq!(cfg.kind, j.engine);
+        assert_eq!((cfg.r, cfg.workers), (6, 3));
+        assert!(!cfg.overlap && cfg.compact && !cfg.balance);
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Coordinator metrics: atomic counters + aggregate throughput, cheap
 //! enough to update from every worker on every job. Includes the shared
 //! map-cache hit/miss gauges so a deployment can see how much λ/ν table
-//! reuse the job mix achieves, plus the shard subsystem's halo-traffic,
-//! halo-compaction and load-imbalance gauges.
+//! reuse the job mix achieves, the shard subsystem's halo-traffic,
+//! halo-compaction and load-imbalance gauges, and — since the typed
+//! async API — the multiplexer's liveness gauges: jobs queued vs in
+//! flight, open sessions, worker-budget occupancy, and per-job/-session
+//! progress (steps completed, cells/sec), all dumped by the `metrics`
+//! verb in one stable field order.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -32,6 +36,24 @@ pub struct Metrics {
     halo_tile_bytes_per_step: AtomicU64,
     /// Shard load imbalance of the last sharded job (f64 bit pattern).
     shard_imbalance_bits: AtomicU64,
+    /// Jobs cancelled before completing (the `cancel` verb).
+    cancelled: AtomicU64,
+    /// Jobs admitted but waiting for a worker-budget permit (gauge).
+    jobs_queued: AtomicU64,
+    /// Jobs currently executing (gauge).
+    jobs_inflight: AtomicU64,
+    /// Simulation sessions currently open (gauge).
+    sessions_open: AtomicU64,
+    /// Worker-budget permits currently held (gauge).
+    budget_in_use: AtomicU64,
+    /// Worker-budget size (gauge; 0 until a coordinator registers one).
+    budget_total: AtomicU64,
+    /// Steps completed across all jobs + sessions, updated per progress
+    /// event (counter — unlike `cell_updates`, it advances *while* work
+    /// is in flight, which is what makes it a liveness signal).
+    progress_steps: AtomicU64,
+    /// Most recent progress event's throughput, cells/sec (f64 bits).
+    progress_cells_per_s_bits: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -48,6 +70,14 @@ pub struct MetricsSnapshot {
     pub halo_bytes_per_step: u64,
     pub halo_tile_bytes_per_step: u64,
     pub shard_imbalance: f64,
+    pub cancelled: u64,
+    pub jobs_queued: u64,
+    pub jobs_inflight: u64,
+    pub sessions_open: u64,
+    pub budget_in_use: u64,
+    pub budget_total: u64,
+    pub progress_steps: u64,
+    pub progress_cells_per_s: f64,
 }
 
 impl Metrics {
@@ -64,6 +94,52 @@ impl Metrics {
 
     pub fn job_failed(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn job_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A job entered (`true`) or left (`false`) the budget wait queue.
+    pub fn job_queued(&self, entered: bool) {
+        if entered {
+            self.jobs_queued.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_queued.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A job started (`true`) or finished (`false`) executing.
+    pub fn job_inflight(&self, entered: bool) {
+        if entered {
+            self.jobs_inflight.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.jobs_inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// A session opened (`true`) or closed (`false`).
+    pub fn session_open(&self, opened: bool) {
+        if opened {
+            self.sessions_open.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.sessions_open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Mirror the worker budget's occupancy (absolute, like the cache
+    /// gauges).
+    pub fn record_budget(&self, in_use: u64, total: u64) {
+        self.budget_in_use.store(in_use, Ordering::Relaxed);
+        self.budget_total.store(total, Ordering::Relaxed);
+    }
+
+    /// One progress event: `steps` more steps completed at `cells_per_s`
+    /// observed throughput (jobs and sessions alike).
+    pub fn record_progress(&self, steps: u64, cells_per_s: f64) {
+        self.progress_steps.fetch_add(steps, Ordering::Relaxed);
+        self.progress_cells_per_s_bits
+            .store(cells_per_s.to_bits(), Ordering::Relaxed);
     }
 
     /// Mirror the shared map-cache counters (called after each job —
@@ -99,6 +175,16 @@ impl Metrics {
             halo_tile_bytes_per_step: self.halo_tile_bytes_per_step.load(Ordering::Relaxed),
             shard_imbalance: f64::from_bits(
                 self.shard_imbalance_bits.load(Ordering::Relaxed),
+            ),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            jobs_queued: self.jobs_queued.load(Ordering::Relaxed),
+            jobs_inflight: self.jobs_inflight.load(Ordering::Relaxed),
+            sessions_open: self.sessions_open.load(Ordering::Relaxed),
+            budget_in_use: self.budget_in_use.load(Ordering::Relaxed),
+            budget_total: self.budget_total.load(Ordering::Relaxed),
+            progress_steps: self.progress_steps.load(Ordering::Relaxed),
+            progress_cells_per_s: f64::from_bits(
+                self.progress_cells_per_s_bits.load(Ordering::Relaxed),
             ),
         }
     }
@@ -155,6 +241,20 @@ impl MetricsSnapshot {
                 self.shard_imbalance
             ));
         }
+        // multiplexer gauges, stable order (always printed — a zero is a
+        // fact, and parsers should not have to branch on presence)
+        line.push_str(&format!(
+            " cancelled={} inflight={} queued={} sessions={} budget={}/{} progress_steps={} \
+             progress_cells_per_s={:.3e}",
+            self.cancelled,
+            self.jobs_inflight,
+            self.jobs_queued,
+            self.sessions_open,
+            self.budget_in_use,
+            self.budget_total,
+            self.progress_steps,
+            self.progress_cells_per_s,
+        ));
         line
     }
 }
@@ -196,6 +296,36 @@ mod tests {
         // gauges are absolute: re-recording overwrites
         m.record_map_cache(CacheStats { hits: 10, misses: 2 });
         assert_eq!(m.snapshot().map_cache_hits, 10);
+    }
+
+    #[test]
+    fn multiplexer_gauges_track_liveness_and_render_in_stable_order() {
+        let m = Metrics::default();
+        m.record_budget(0, 8);
+        m.job_queued(true);
+        m.job_queued(false);
+        m.job_inflight(true);
+        m.session_open(true);
+        m.session_open(true);
+        m.session_open(false);
+        m.record_budget(3, 8);
+        m.record_progress(5, 1e6);
+        m.job_cancelled();
+        let s = m.snapshot();
+        assert_eq!((s.jobs_queued, s.jobs_inflight), (0, 1));
+        assert_eq!(s.sessions_open, 1);
+        assert_eq!((s.budget_in_use, s.budget_total), (3, 8));
+        assert_eq!(s.progress_steps, 5);
+        assert_eq!(s.cancelled, 1);
+        assert!((s.progress_cells_per_s - 1e6).abs() < 1.0);
+        let line = s.to_line();
+        // stable order: the multiplexer section always renders, after
+        // the job/cache (and optional shard) sections
+        let tail = line.split("cancelled=").nth(1).expect("section present");
+        assert!(
+            tail.starts_with("1 inflight=1 queued=0 sessions=1 budget=3/8 progress_steps=5"),
+            "{line}"
+        );
     }
 
     #[test]

@@ -1,12 +1,19 @@
-//! L3 coordinator: job specifications, the scheduler/worker pool, the
-//! line-protocol service loop, and aggregate metrics. This is the layer a
+//! L3 coordinator: the typed async API ([`api::Coordinator`] — job
+//! handles, streaming progress, stateful snapshot/restore sessions), the
+//! v1 line-protocol adapter over it ([`service::serve`]), job wire types,
+//! the legacy scheduler shim, and aggregate metrics. This is the layer a
 //! deployment talks to; it owns process topology and never calls Python.
 
+pub mod api;
 pub mod job;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
+pub use api::{
+    Coordinator, InspectInfo, JobHandle, JobProgress, JobStatus, Probe, ProbeResult, Request,
+    Response, SessionInfo, SessionSnapshot, StepInfo, PROTOCOL_VERSION,
+};
 pub use job::{JobResult, JobSpec};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{execute_job, execute_job_with_cache, Scheduler};

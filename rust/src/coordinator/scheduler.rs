@@ -1,39 +1,42 @@
-//! Job scheduler: a bounded work queue with worker threads executing
-//! simulation jobs. The L3 analogue of a serving router's request loop —
-//! requests (jobs) come in, get dispatched to workers, and results stream
-//! back over a channel in completion order.
+//! Job execution bodies + the legacy `Scheduler` shim.
 //!
-//! All workers share one [`MapCache`]: queued jobs of the same
-//! `(fractal, level, ρ)` reuse each other's precomputed λ/ν tables
-//! instead of rebuilding them per job, and the cache's hit/miss counters
-//! are mirrored into the scheduler [`Metrics`].
+//! The one place a [`JobSpec`] becomes a running engine:
+//! [`prepare_job_engine`] (catalog lookup → semantic validation →
+//! per-shard cache warmup → factory build) and [`job_result`] (the
+//! result assembly) are shared by the synchronous executor
+//! ([`execute_job_with_cache`], the CLI `run` path) and the async
+//! coordinator ([`super::api::Coordinator`]), so both paths are
+//! behavior-identical by construction.
+//!
+//! [`Scheduler`] — the original bounded worker-pool API — survives as a
+//! thin shim over the coordinator multiplexer: `start(N)` opens a
+//! coordinator with an `N`-permit worker budget, `submit` enqueues
+//! through it, and `recv`/`shutdown` deliver results in completion
+//! order over a channel, exactly as before. All jobs still share one
+//! [`MapCache`] and one [`Metrics`].
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
+use super::api::Coordinator;
 use super::job::{JobResult, JobSpec};
 use super::metrics::Metrics;
-use crate::ca::{build_with_cache, EngineConfig, EngineKind};
-use crate::fractal::catalog;
+use crate::ca::engine::Engine;
+use crate::ca::{build_with_cache, EngineKind};
+use crate::fractal::{catalog, FractalSpec};
 use crate::maps::MapCache;
 use crate::util::timer::Timer;
 
-/// Execute one job synchronously with private (uncached) maps.
-pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
-    execute_job_with_cache(spec, None)
-}
-
-/// Execute one job synchronously (the worker body; also usable directly),
-/// sourcing precomputed maps from `cache` when given.
-///
-/// Validation runs before any engine is built, so a bad request (e.g. a
-/// ρ that is not a power of `s`) comes back as `Err` — an `ERR` line in
-/// the service — instead of a panic killing the worker. Sharded jobs
-/// additionally warm the shared map cache per shard before step 0.
-pub fn execute_job_with_cache(
+/// Resolve + validate + build the engine for one job, sourcing maps from
+/// `cache` when given. Sharded jobs warm the shared cache per shard
+/// before the engine (and step 0) exists. Every failure is a
+/// service-facing message (an `ERR` line), never a panic. Returns the
+/// resolved fractal too, so callers that keep it (sessions) don't
+/// repeat the catalog lookup.
+pub(super) fn prepare_job_engine(
     spec: &JobSpec,
     cache: Option<&MapCache>,
-) -> Result<JobResult, String> {
+) -> Result<(FractalSpec, Box<dyn Engine>), String> {
     let fractal = catalog::by_name(&spec.fractal)
         .ok_or_else(|| format!("unknown fractal {:?}", spec.fractal))?;
     spec.validate(&fractal)?;
@@ -48,26 +51,16 @@ pub fn execute_job_with_cache(
         crate::shard::warm(c, &fractal, spec.r, rho, None, shards, spec.workers)
             .map_err(|e| e.to_string())?;
     }
-    let cfg = EngineConfig {
-        kind: spec.engine,
-        r: spec.r,
-        rule: spec.rule,
-        density: spec.density,
-        seed: spec.seed,
-        workers: spec.workers,
-        overlap: spec.overlap,
-        compact: spec.compact,
-        balance: spec.balance,
-    };
-    let mut engine = build_with_cache(&fractal, &cfg, cache).map_err(|e| e.to_string())?;
-    let t = Timer::start();
-    for _ in 0..spec.steps {
-        engine.step();
-    }
-    let total_s = t.elapsed_s();
+    let engine = build_with_cache(&fractal, &spec.engine_config(), cache)
+        .map_err(|e| e.to_string())?;
+    Ok((fractal, engine))
+}
+
+/// Assemble the result row for a finished job.
+pub(super) fn job_result(spec: &JobSpec, engine: &dyn Engine, total_s: f64) -> JobResult {
     let cells = engine.cells();
     let per_step_s = total_s / spec.steps.max(1) as f64;
-    Ok(JobResult {
+    JobResult {
         id: spec.id,
         engine_name: engine.name(),
         cells,
@@ -79,72 +72,64 @@ pub fn execute_job_with_cache(
         memory_bytes: engine.memory_bytes(),
         state_hash: engine.state_hash(),
         shard: engine.shard_stats(),
-    })
+    }
 }
 
-/// A running scheduler with `workers` concurrent job executors.
+/// Execute one job synchronously with private (uncached) maps.
+pub fn execute_job(spec: &JobSpec) -> Result<JobResult, String> {
+    execute_job_with_cache(spec, None)
+}
+
+/// Execute one job synchronously on the calling thread (the CLI `run`
+/// path; the coordinator's async executor shares the same build/result
+/// bodies and adds per-step cancel checks + progress events on top).
+pub fn execute_job_with_cache(
+    spec: &JobSpec,
+    cache: Option<&MapCache>,
+) -> Result<JobResult, String> {
+    let (_, mut engine) = prepare_job_engine(spec, cache)?;
+    let t = Timer::start();
+    for _ in 0..spec.steps {
+        engine.step();
+    }
+    Ok(job_result(spec, engine.as_ref(), t.elapsed_s()))
+}
+
+/// The legacy scheduler API, now a shim over the coordinator
+/// multiplexer: jobs run concurrently under an `N`-permit worker budget
+/// instead of on `N` dedicated executor threads, and results stream
+/// back in completion order exactly as before.
 pub struct Scheduler {
-    tx: Option<mpsc::Sender<JobSpec>>,
+    coord: Coordinator,
+    results_tx: Option<mpsc::Sender<Result<JobResult, String>>>,
     results_rx: mpsc::Receiver<Result<JobResult, String>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    /// λ/ν tables shared by every worker (and inspectable by callers).
+    /// λ/ν tables shared by every job (and inspectable by callers).
     pub map_cache: Arc<MapCache>,
 }
 
 impl Scheduler {
-    /// Start `workers` job-executor threads.
+    /// Open a coordinator with a budget of `workers` permits.
     pub fn start(workers: usize) -> Scheduler {
-        let (tx, rx) = mpsc::channel::<JobSpec>();
-        let rx = Arc::new(Mutex::new(rx));
+        let coord = Coordinator::new(workers);
         let (results_tx, results_rx) = mpsc::channel();
-        let metrics = Arc::new(Metrics::default());
-        let map_cache = Arc::new(MapCache::new());
-        let mut handles = Vec::new();
-        for _ in 0..workers.max(1) {
-            let rx = Arc::clone(&rx);
-            let results_tx = results_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            let cache = Arc::clone(&map_cache);
-            handles.push(std::thread::spawn(move || loop {
-                let job = {
-                    let guard = rx.lock().expect("scheduler queue poisoned");
-                    guard.recv()
-                };
-                let Ok(job) = job else { break };
-                metrics.job_started();
-                let result = execute_job_with_cache(&job, Some(&cache));
-                match &result {
-                    Ok(r) => {
-                        metrics.job_finished(r.total_s, r.cells * r.steps as u64);
-                        if let Some(s) = r.shard {
-                            metrics.record_sharding(s);
-                        }
-                    }
-                    Err(_) => metrics.job_failed(),
-                }
-                metrics.record_map_cache(cache.stats());
-                if results_tx.send(result).is_err() {
-                    break;
-                }
-            }));
-        }
         Scheduler {
-            tx: Some(tx),
+            metrics: coord.metrics(),
+            map_cache: coord.map_cache(),
+            coord,
+            results_tx: Some(results_tx),
             results_rx,
-            handles,
-            metrics,
-            map_cache,
         }
     }
 
     /// Enqueue a job.
     pub fn submit(&self, spec: JobSpec) {
-        self.tx
+        let tx = self
+            .results_tx
             .as_ref()
             .expect("scheduler already closed")
-            .send(spec)
-            .expect("scheduler workers gone");
+            .clone();
+        self.coord.submit_with_notify(spec, Some(tx));
     }
 
     /// Receive the next finished result (blocking).
@@ -152,16 +137,14 @@ impl Scheduler {
         self.results_rx.recv().ok()
     }
 
-    /// Close the queue and join workers; returns remaining results.
+    /// Close the queue and join job threads; returns remaining results.
     pub fn shutdown(mut self) -> Vec<Result<JobResult, String>> {
-        self.tx.take(); // drop sender: workers drain and exit
+        self.results_tx.take(); // drop our sender: only running jobs hold clones
         let mut rest = Vec::new();
         while let Ok(r) = self.results_rx.recv() {
             rest.push(r);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.coord.join_jobs();
         rest
     }
 }
@@ -225,6 +208,13 @@ mod tests {
         assert_eq!(results.len(), 5);
         assert_eq!(metrics.snapshot().completed, 5);
         assert_eq!(metrics.snapshot().failed, 0);
+        // the multiplexer's liveness gauges have drained back to zero
+        let snap = metrics.snapshot();
+        assert_eq!((snap.jobs_inflight, snap.jobs_queued), (0, 0));
+        assert_eq!(snap.budget_in_use, 0);
+        assert_eq!(snap.budget_total, 2);
+        // progress events streamed while the jobs ran: 5 jobs × 3 steps
+        assert_eq!(snap.progress_steps, 15);
     }
 
     #[test]
@@ -299,7 +289,7 @@ mod tests {
             results.iter().filter(|r| r.is_err()).collect();
         assert_eq!(failed.len(), 1);
         assert!(failed[0].as_ref().unwrap_err().contains("rho=3"));
-        // the worker survived to run the valid job
+        // the multiplexer survived to run the valid job
         assert!(results.iter().any(|r| r.is_ok()));
     }
 
@@ -313,10 +303,10 @@ mod tests {
         let cache = Arc::clone(&sched.map_cache);
         let results = sched.shutdown();
         assert_eq!(results.len(), 6);
-        // one build, five reuses — regardless of which worker ran which job
+        // one build, five reuses — regardless of execution interleaving
         assert_eq!(cache.stats().misses, 1);
         assert_eq!(cache.stats().hits, 5);
-        // metrics mirror the cache (each worker records after its job;
+        // metrics mirror the cache (each job records after it finishes;
         // the gauges reflect some prefix of the lookup history)
         let snap = metrics.snapshot();
         assert!(snap.map_cache_hits + snap.map_cache_misses >= 1);

@@ -1,48 +1,71 @@
-//! The serve loop: a line-oriented request protocol over any
-//! `BufRead`/`Write` pair (stdin/stdout in the CLI, in-memory buffers in
-//! tests).
+//! The serve loop: the **v1 line protocol as a thin adapter over the
+//! typed API** (`coordinator::api`), over any `BufRead`/`Write` pair
+//! (stdin/stdout in the CLI, in-memory buffers in tests).
 //!
-//! Protocol:
+//! v1 (unchanged, byte-for-byte):
 //!   request line  = whitespace-separated `key=value` pairs (see
 //!                   [`JobSpec::parse_line`]), e.g.
 //!                   `engine=squeeze:16 r=10 steps=100 seed=7`.
 //!                   `engine=` accepts `bb`, `lambda`, `squeeze[:RHO]`,
-//!                   `squeeze-tcu[:RHO]`, the sharded decomposition
-//!                   `sharded-squeeze:RHO[:SHARDS]`, and the bit-planar
-//!                   backends `squeeze-bits:RHO[:SHARDS]`; `shards=N`
-//!                   promotes a scalar squeeze engine to its sharded
-//!                   twin with N shards (and overrides the count of an
-//!                   already-sharded engine), `shards=auto:N` also turns
-//!                   on the cost-weighted partitioner, `packed=1`
-//!                   promotes a scalar squeeze engine to its bit-planar
-//!                   twin, and `overlap=0/1` / `compact=0/1` tune the
-//!                   sharded exchange (both default on).
-//!   response line = TSV ([`JobResult::to_tsv`]); errors — malformed
-//!                   lines, unknown engines/fractals, and semantic
-//!                   failures like a ρ that is not a power of `s` — are
-//!                   `ERR <id> <message>` (the session always
-//!                   survives). `quit` ends the session, and `metrics`
-//!                   dumps the aggregate counters, including the
-//!                   map-cache and shard halo/compaction/imbalance
-//!                   gauges.
+//!                   `squeeze-tcu[:RHO]`, `sharded-squeeze:RHO[:SHARDS]`
+//!                   and `squeeze-bits:RHO[:SHARDS]`; the `shards=`,
+//!                   `packed=`, `overlap=`, `compact=` keys promote/tune
+//!                   as before. Each job line executes to completion and
+//!                   answers one TSV row ([`JobResult::to_tsv`]); errors
+//!                   are `ERR <id> <message>` naming the offending key —
+//!                   the session always survives. `metrics` dumps the
+//!                   aggregate counters (now including the multiplexer
+//!                   gauges), `help` lists every key and verb, `quit`
+//!                   ends the session.
+//!
+//! v2 (additive verbs over the same stream — the banner advertises
+//! `# protocol=v2`):
+//!   `async=1`          job lines now answer `JOB <id> submitted`
+//!                      immediately and run concurrently (shared worker
+//!                      budget); `async=0` restores run-to-completion.
+//!   `wait ID`          block for job ID; answers its TSV row (or ERR).
+//!   `poll ID`          non-blocking status + progress.
+//!   `cancel ID`        request cancellation (lands between steps).
+//!   `open KEY=VAL...`  open a stateful session (job grammar; `steps=`
+//!                      ignored) → `SESSION <sid> open ...`.
+//!   `step SID [N]`     advance N (default 1) steps → population/hash.
+//!   `inspect SID [cell=I] [at=X,Y] [region=A:B]`
+//!                      facts + ν-mapped probes.
+//!   `snapshot SID`     full canonical state as one token.
+//!   `restore TOKEN`    bit-identical resume into a fresh session.
+//!   `close SID`        final facts, session removed.
 
 use std::io::{BufRead, Write};
 
+use super::api::{
+    Coordinator, JobStatus, Probe, Request, Response, SessionSnapshot, PROTOCOL_VERSION,
+};
 use super::job::{JobResult, JobSpec};
-use super::metrics::Metrics;
-use super::scheduler::execute_job_with_cache;
-use crate::maps::MapCache;
 
-/// Run the service until EOF or `quit`. Jobs execute synchronously in
-/// request order (each job parallelizes internally over its `workers`);
-/// one session-scoped [`MapCache`] lets consecutive jobs of the same
-/// fractal reuse each other's λ/ν tables.
+/// Everything the protocol accepts, answered by the `help` verb.
+const HELP: &str = "\
+# job line: key=value pairs — fractal= engine= r= steps= density= seed= rule= workers= \
+shards=[auto:]N packed=0/1 overlap=0/1 compact=0/1
+# engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS] | \
+squeeze-bits[:RHO[:SHARDS]]
+# verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
+inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | close SID | \
+metrics | help | quit";
+
+/// Run the service until EOF or `quit`. One session-scoped
+/// [`Coordinator`] multiplexes every job and session over a shared
+/// worker budget and one shared `MapCache`; plain v1 job lines submit +
+/// wait (run-to-completion, byte-identical output), `async=1` switches
+/// to submit-only.
 pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()> {
-    let metrics = Metrics::default();
-    let cache = MapCache::new();
+    let coord = Coordinator::new(crate::util::pool::default_workers().max(2));
+    let metrics = coord.metrics();
+    let cache = coord.map_cache();
     writeln!(output, "# squeeze coordinator ready")?;
+    writeln!(output, "# protocol={PROTOCOL_VERSION}")?;
     writeln!(output, "# {}", JobResult::tsv_header())?;
     let mut next_id = 1u64;
+    let mut async_mode = false;
     for line in input.lines() {
         let line = line?;
         let trimmed = line.trim();
@@ -57,23 +80,63 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
             output.flush()?;
             continue;
         }
+        if trimmed == "help" {
+            writeln!(output, "{HELP}")?;
+            output.flush()?;
+            continue;
+        }
+        if let Some(v) = trimmed.strip_prefix("async=") {
+            match v {
+                "1" | "true" => async_mode = true,
+                "0" | "false" => async_mode = false,
+                other => {
+                    writeln!(output, "ERR 0 bad async={other} (want 0/1)")?;
+                    output.flush()?;
+                    continue;
+                }
+            }
+            writeln!(output, "# async={}", async_mode as u8)?;
+            output.flush()?;
+            continue;
+        }
+        let verb = trimmed.split_whitespace().next().unwrap_or("");
+        if let Some(req) = parse_verb(verb, trimmed) {
+            match req {
+                Ok(req) => {
+                    let line = render(coord.handle(req));
+                    writeln!(output, "{line}")?;
+                }
+                Err(msg) => writeln!(output, "ERR 0 {msg}")?,
+            }
+            metrics.record_map_cache(cache.stats());
+            output.flush()?;
+            continue;
+        }
+        // a v1 job line: parse, then submit + wait (sync) or submit
+        // (async) through the typed API
         let id = next_id;
         next_id += 1;
+        if !verb.contains('=') {
+            writeln!(
+                output,
+                "ERR {id} unknown verb {verb:?} (try help; job lines are key=value pairs)"
+            )?;
+            output.flush()?;
+            continue;
+        }
         match JobSpec::parse_line(id, trimmed) {
             Ok(spec) => {
-                metrics.job_started();
-                match execute_job_with_cache(&spec, Some(&cache)) {
-                    Ok(result) => {
-                        metrics.job_finished(result.total_s, result.cells * result.steps as u64);
-                        if let Some(s) = result.shard {
-                            metrics.record_sharding(s);
-                        }
-                        writeln!(output, "{}", result.to_tsv())?;
+                let handle = coord.submit(spec);
+                if async_mode {
+                    writeln!(output, "JOB {id} submitted")?;
+                } else {
+                    match handle.wait() {
+                        Ok(result) => writeln!(output, "{}", result.to_tsv())?,
+                        Err(msg) => writeln!(output, "ERR {id} {msg}")?,
                     }
-                    Err(msg) => {
-                        metrics.job_failed();
-                        writeln!(output, "ERR {id} {msg}")?;
-                    }
+                    // run-to-completion lines are done with their record:
+                    // prune so a long-lived serve stays bounded
+                    coord.forget(id);
                 }
             }
             Err(msg) => {
@@ -86,8 +149,157 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
         metrics.record_map_cache(cache.stats());
         output.flush()?;
     }
+    // async jobs may still be in flight: join them so the final summary
+    // (and the process exit) observes every outcome
+    coord.join_jobs();
+    metrics.record_map_cache(cache.stats());
     writeln!(output, "# {}", metrics.snapshot().to_line())?;
     Ok(())
+}
+
+/// Parse a v2 verb line into a typed [`Request`]. Returns `None` when
+/// the first token is not a verb (the line is then treated as a v1 job
+/// line). `Some(Err(msg))` is a malformed verb usage.
+fn parse_verb(verb: &str, line: &str) -> Option<Result<Request, String>> {
+    let rest = line[verb.len()..].trim();
+    let id_arg = |what: &str| -> Result<u64, String> {
+        rest.split_whitespace()
+            .next()
+            .ok_or_else(|| format!("{verb} needs a {what}"))?
+            .parse::<u64>()
+            .map_err(|_| format!("bad {what} {rest:?}"))
+    };
+    let req = match verb {
+        "wait" => id_arg("job id").map(|id| Request::Wait { id }),
+        "poll" => id_arg("job id").map(|id| Request::Poll { id }),
+        "cancel" => id_arg("job id").map(|id| Request::Cancel { id }),
+        "open" => JobSpec::parse_line(0, rest).map(Request::Open),
+        "step" => (|| {
+            let mut toks = rest.split_whitespace();
+            let sid = toks
+                .next()
+                .ok_or("step needs a session id")?
+                .parse::<u64>()
+                .map_err(|_| format!("bad session id {rest:?}"))?;
+            let n = match toks.next() {
+                Some(t) => t.parse::<u32>().map_err(|_| format!("bad step count {t:?}"))?,
+                None => 1,
+            };
+            Ok(Request::Step { sid, n })
+        })(),
+        "inspect" => (|| {
+            let mut toks = rest.split_whitespace();
+            let sid = toks
+                .next()
+                .ok_or("inspect needs a session id")?
+                .parse::<u64>()
+                .map_err(|_| format!("bad session id {rest:?}"))?;
+            let mut probes = Vec::new();
+            for tok in toks {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad probe {tok:?} (want cell=/at=/region=)"))?;
+                probes.push(match k {
+                    "cell" => Probe::Cell(
+                        v.parse().map_err(|_| format!("bad cell index {v:?}"))?,
+                    ),
+                    "at" => {
+                        let (x, y) = v
+                            .split_once(',')
+                            .ok_or_else(|| format!("bad at={v} (want at=X,Y)"))?;
+                        Probe::At(
+                            x.parse().map_err(|_| format!("bad at x {x:?}"))?,
+                            y.parse().map_err(|_| format!("bad at y {y:?}"))?,
+                        )
+                    }
+                    "region" => {
+                        let (a, b) = v
+                            .split_once(':')
+                            .ok_or_else(|| format!("bad region={v} (want region=A:B)"))?;
+                        Probe::Region(
+                            a.parse().map_err(|_| format!("bad region lo {a:?}"))?,
+                            b.parse().map_err(|_| format!("bad region hi {b:?}"))?,
+                        )
+                    }
+                    other => return Err(format!("unknown probe key {other:?}")),
+                });
+            }
+            Ok(Request::Inspect { sid, probes })
+        })(),
+        "snapshot" => id_arg("session id").map(|sid| Request::Snapshot { sid }),
+        "restore" => SessionSnapshot::parse(rest)
+            .map(|snap| Request::Restore(Box::new(snap))),
+        "close" => id_arg("session id").map(|sid| Request::Close { sid }),
+        _ => return None,
+    };
+    Some(req)
+}
+
+/// Render a typed [`Response`] as one protocol line.
+fn render(resp: Response) -> String {
+    match resp {
+        Response::Submitted { id } => format!("JOB {id} submitted"),
+        Response::Status { id, status } => match status {
+            JobStatus::Queued => format!("JOB {id} queued"),
+            JobStatus::Running(p) => format!(
+                "JOB {id} running steps={}/{} cells_per_s={:.3e}",
+                p.steps_done, p.steps_total, p.cells_per_s
+            ),
+            JobStatus::Done(_) => format!("JOB {id} done"),
+            JobStatus::Failed(msg) => format!("JOB {id} failed {msg}"),
+            JobStatus::Cancelled => format!("JOB {id} cancelled"),
+        },
+        Response::Finished(result) => result.to_tsv(),
+        Response::CancelRequested { id } => format!("JOB {id} cancel requested"),
+        Response::Session(info) => format!(
+            "SESSION {} open engine={} cells={} steps={} population={} hash={:#018x}",
+            info.sid, info.engine, info.cells, info.steps_done, info.population, info.state_hash
+        ),
+        Response::Stepped(info) => format!(
+            "STEP {} +{} steps={} population={} hash={:#018x} cells_per_s={:.3e}",
+            info.sid,
+            info.stepped,
+            info.steps_done,
+            info.population,
+            info.state_hash,
+            info.cells_per_s
+        ),
+        Response::Inspected(info) => {
+            let mut line = format!(
+                "INSPECT {} engine={} cells={} steps={} population={} hash={:#018x}",
+                info.sid,
+                info.engine,
+                info.cells,
+                info.steps_done,
+                info.population,
+                info.state_hash
+            );
+            for probe in &info.probes {
+                match probe {
+                    super::api::ProbeResult::Cell { idx, alive } => {
+                        line.push_str(&format!(" cell[{idx}]={alive}"));
+                    }
+                    super::api::ProbeResult::At { x, y, state } => match state {
+                        Some(v) => line.push_str(&format!(" at[{x},{y}]={v}")),
+                        None => line.push_str(&format!(" at[{x},{y}]=hole")),
+                    },
+                    super::api::ProbeResult::Region { lo, hi, live } => {
+                        line.push_str(&format!(" region[{lo}:{hi}]={live}"));
+                    }
+                }
+            }
+            line
+        }
+        Response::Snapshotted { sid, snapshot } => {
+            format!("SNAPSHOT {sid} {}", snapshot.to_token())
+        }
+        Response::Closed(info) => format!(
+            "CLOSED {} steps={} population={} hash={:#018x}",
+            info.sid, info.steps_done, info.population, info.state_hash
+        ),
+        Response::Metrics(snap) => format!("# {}", snap.to_line()),
+        Response::Error { id, message } => format!("ERR {id} {message}"),
+    }
 }
 
 #[cfg(test)]
@@ -142,8 +354,136 @@ mod tests {
     }
 
     #[test]
-    fn comments_and_blanks_ignored(){
+    fn comments_and_blanks_ignored() {
         let out = run_session("# hi\n\n   \nquit\n");
         assert!(!out.contains("ERR"));
+    }
+
+    #[test]
+    fn banner_advertises_protocol_v2_and_help_lists_verbs() {
+        let out = run_session("help\nquit\n");
+        assert!(out.starts_with("# squeeze coordinator ready"), "{out}");
+        assert!(out.contains("# protocol=v2"), "{out}");
+        for needle in ["snapshot SID", "restore TOKEN", "async=0/1", "shards=[auto:]N"] {
+            assert!(out.contains(needle), "help is missing {needle:?}: {out}");
+        }
+    }
+
+    #[test]
+    fn unknown_verbs_and_keys_get_structured_errors() {
+        let out = run_session("snapsht 3\nengine=squeeze:4 volume=11 r=4\nquit\n");
+        assert!(out.contains("unknown verb \"snapsht\""), "{out}");
+        assert!(out.contains("unknown key \"volume\""), "{out}");
+    }
+
+    #[test]
+    fn async_jobs_submit_then_wait_matches_sync_row() {
+        let out = run_session(
+            "engine=squeeze:4 r=5 steps=3 workers=1 seed=9\n\
+             async=1\n\
+             engine=squeeze:4 r=5 steps=3 workers=1 seed=9\n\
+             wait 2\n\
+             quit\n",
+        );
+        assert!(out.contains("JOB 2 submitted"), "{out}");
+        let rows: Vec<&str> = out
+            .lines()
+            .filter(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+            .collect();
+        assert_eq!(rows.len(), 2, "{out}");
+        // the async row is identical to the sync row except for the id
+        // and timing columns: compare engine/cells/steps/pop/mem/hash
+        let pick = |row: &str| -> Vec<String> {
+            row.split('\t')
+                .enumerate()
+                .filter(|(i, _)| ![0, 4, 5, 6].contains(i))
+                .map(|(_, v)| v.to_string())
+                .collect()
+        };
+        assert_eq!(pick(rows[0]), pick(rows[1]), "{out}");
+    }
+
+    #[test]
+    fn session_lifecycle_snapshot_restore_is_bit_identical() {
+        let out = run_session(
+            "engine=squeeze:4 r=5 steps=5 workers=1 seed=9\n\
+             open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             step 1 3\n\
+             snapshot 1\n\
+             step 1 2\n\
+             close 1\n\
+             quit\n",
+        );
+        assert!(!out.contains("ERR"), "{out}");
+        // the 5-step session hash equals the 5-step one-shot job hash
+        let job_hash = out
+            .lines()
+            .find(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+            .and_then(|l| l.split('\t').last())
+            .unwrap();
+        let closed = out.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+        assert!(closed.contains("steps=5"), "{out}");
+        assert!(closed.contains(&format!("hash={job_hash}")), "{out}");
+        // restoring the snapshot and stepping the remaining 2 lands on
+        // the same hash — in a fresh serve session
+        let token = out
+            .lines()
+            .find(|l| l.starts_with("SNAPSHOT 1 "))
+            .unwrap()
+            .split_whitespace()
+            .nth(2)
+            .unwrap();
+        let out2 = run_session(&format!("restore {token}\nstep 1 2\nclose 1\nquit\n"));
+        assert!(!out2.contains("ERR"), "{out2}");
+        let closed2 = out2.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+        assert!(closed2.contains("steps=5"), "{out2}");
+        assert!(closed2.contains(&format!("hash={job_hash}")), "{out2}");
+    }
+
+    #[test]
+    fn inspect_probes_answer_cell_at_and_region() {
+        let out = run_session(
+            "open engine=squeeze:4 r=4 workers=1 seed=3\n\
+             inspect 1 cell=0 at=0,0 region=0:81\n\
+             quit\n",
+        );
+        assert!(!out.contains("ERR"), "{out}");
+        let line = out.lines().find(|l| l.starts_with("INSPECT 1")).unwrap();
+        assert!(line.contains("cell[0]="), "{out}");
+        assert!(line.contains("at[0,0]="), "{out}");
+        // region over the whole domain equals the population
+        let pop: u64 = line
+            .split("population=")
+            .nth(1)
+            .unwrap()
+            .split_whitespace()
+            .next()
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(line.contains(&format!("region[0:81]={pop}")), "{out}");
+    }
+
+    #[test]
+    fn cancel_lands_and_wait_reports_it() {
+        // a job big enough to still be running when the cancel arrives
+        let out = run_session(
+            "async=1\n\
+             engine=squeeze:16 r=8 steps=100000 workers=1 seed=1\n\
+             cancel 1\n\
+             wait 1\n\
+             quit\n",
+        );
+        assert!(out.contains("JOB 1 submitted"), "{out}");
+        assert!(out.contains("JOB 1 cancel requested"), "{out}");
+        // cancellation surfaced either as cancelled or (rarely, if the
+        // job finished first) as a result row — never a hang
+        assert!(
+            out.contains("ERR 1 cancelled")
+                || out
+                    .lines()
+                    .any(|l| !l.starts_with('#') && l.split('\t').count() > 3),
+            "{out}"
+        );
     }
 }

@@ -21,6 +21,16 @@
 //! decomposes the block-level domain into halo-exchanged shards so a
 //! job can span more memory than any single engine buffer.
 //!
+//! Serving happens through the typed async API
+//! ([`coordinator::api::Coordinator`]): jobs submit to handles with
+//! poll/wait/cancel and streaming progress, and stateful **sessions**
+//! step any engine incrementally with ν-mapped inspection and
+//! bit-identical snapshot/restore (canonical compact-order bitmaps via
+//! [`ca::engine::Engine::export_state`]) — all multiplexed over one
+//! shared worker budget and map cache. The v1 `key=value` line protocol
+//! ([`coordinator::service`]) survives byte-for-byte as a thin adapter
+//! over it.
+//!
 //! ## Layout (three-layer architecture)
 //!
 //! - **L3 (this crate)**: fractal geometry + maps + CA engines + the

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   run        one simulation job on a native engine
-//!   serve      line-protocol coordinator loop on stdin/stdout
+//!   serve      coordinator loop on stdin/stdout: v1 key=value job lines
+//!              plus the v2 verbs (async submit/wait/poll/cancel and
+//!              open/step/inspect/snapshot/restore/close sessions)
 //!   gallery    ASCII-render a catalog fractal (expanded + compact views)
 //!   validate   large randomized map/engine self-checks
 //!   artifacts  list + compile-check the AOT artifact store
@@ -67,7 +69,8 @@ fn usage(cmd: Option<&str>) {
          commands:\n  \
          run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n             \
          (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])\n  \
-         serve      (reads job lines from stdin; see coordinator::service)\n  \
+         serve      (reads v1 job lines + v2 verbs from stdin; type 'help' in a session,\n             \
+         or see coordinator::service / coordinator::api)\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
          artifacts  --dir artifacts [--check]\n  \

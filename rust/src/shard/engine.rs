@@ -606,6 +606,31 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
     fn shard_stats(&self) -> Option<ShardStats> {
         Some(self.stats)
     }
+
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        crate::ca::engine::check_state_bitmap(bits, self.cells())?;
+        // same canonical route as seeding: compact index -> λ -> global
+        // slot -> (owning shard, shard-local slot). Ghost rings are left
+        // zeroed — every step's exchange rewrites them from committed
+        // local state before any boundary sweep reads them.
+        for s in &mut self.shards {
+            s.buf.cur.fill(B::Unit::default());
+            s.buf.next.fill(B::Unit::default());
+        }
+        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
+        let full = &self.maps.full;
+        for idx in 0..full.compact.area() {
+            if crate::ca::engine::state_bit(bits, idx) {
+                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+                let slot = self.maps.block.storage_index(e).expect("fractal cell");
+                let bidx = slot / tile;
+                let s = self.part.shard_of(bidx);
+                let local = (bidx - self.part.range(s).0) * tile + slot % tile;
+                self.backend.set_cell(&mut self.shards[s].buf.cur, local);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,357 @@
+//! Integration tests for the typed async coordinator API
+//! (`coordinator::api`): concurrent in-flight jobs over the shared
+//! worker budget, cancellation, streaming progress, stateful sessions,
+//! snapshot/restore bit-identity across engine layouts, and the
+//! differential case — N interleaved sessions through the typed API
+//! hash-identical to the same work run serially through the v1 line
+//! protocol.
+
+use std::sync::Arc;
+
+use squeeze::ca::EngineKind;
+use squeeze::coordinator::service::serve;
+use squeeze::coordinator::{
+    Coordinator, JobSpec, JobStatus, Probe, ProbeResult, SessionSnapshot,
+};
+
+fn job(id: u64, engine: &str, r: u32, steps: u32) -> JobSpec {
+    JobSpec::parse_line(
+        id,
+        &format!("engine={engine} r={r} steps={steps} workers=1 seed=9 density=0.4"),
+    )
+    .expect("valid job line")
+}
+
+/// The four engine layouts the snapshot contract must cover: byte and
+/// packed backends, single and sharded.
+const LAYOUTS: [&str; 4] = [
+    "squeeze:4",
+    "squeeze-bits:4",
+    "sharded-squeeze:4:3",
+    "squeeze-bits:4:3",
+];
+
+#[test]
+fn sustains_two_concurrent_in_flight_jobs() {
+    let coord = Coordinator::new(4);
+    // long enough that both jobs overlap under any scheduling
+    let a = coord.submit(job(1, "squeeze:16", 8, 200_000));
+    let b = coord.submit(job(2, "squeeze:16", 8, 200_000));
+    // poll until both report Running at the same instant
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let mut seen_both = false;
+    while std::time::Instant::now() < deadline {
+        let both = matches!(a.poll(), JobStatus::Running(_))
+            && matches!(b.poll(), JobStatus::Running(_));
+        if both {
+            seen_both = true;
+            let snap = coord.metrics().snapshot();
+            assert!(snap.jobs_inflight >= 2, "{snap:?}");
+            assert!(snap.budget_in_use >= 2, "{snap:?}");
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(seen_both, "jobs never overlapped");
+    // no need to run them to completion
+    a.cancel();
+    b.cancel();
+    coord.join_jobs();
+}
+
+#[test]
+fn cancel_stops_a_job_between_steps_and_progress_streams() {
+    let coord = Coordinator::new(2);
+    let h = coord.submit(job(1, "squeeze:16", 8, 1_000_000));
+    // wait until it made observable progress
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        if let JobStatus::Running(p) = h.poll() {
+            if p.steps_done > 0 {
+                assert_eq!(p.steps_total, 1_000_000);
+                assert!(p.cells_per_s > 0.0, "{p:?}");
+                break;
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "no progress observed");
+        std::thread::yield_now();
+    }
+    assert!(h.cancel());
+    assert_eq!(h.wait().unwrap_err(), "cancelled");
+    assert!(matches!(h.poll(), JobStatus::Cancelled));
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.cancelled, 1, "{snap:?}");
+    assert!(snap.progress_steps > 0, "{snap:?}");
+    coord.join_jobs();
+}
+
+#[test]
+fn failed_and_unknown_jobs_surface_errors() {
+    let coord = Coordinator::new(2);
+    let h = coord.submit(job(1, "squeeze:3", 5, 2)); // invalid ρ
+    let err = h.wait().unwrap_err();
+    assert!(err.contains("rho=3"), "{err}");
+    assert!(matches!(h.poll(), JobStatus::Failed(_)));
+    assert!(coord.wait(99).unwrap_err().contains("unknown job"));
+    assert!(coord.poll(99).is_err());
+    assert!(coord.cancel(99).is_err());
+    coord.join_jobs();
+}
+
+#[test]
+fn snapshot_restore_step_is_hash_identical_for_every_layout() {
+    let coord = Coordinator::new(4);
+    for engine in LAYOUTS {
+        // the uninterrupted reference: one 5-step job
+        let want = coord
+            .submit(job(0, engine, 5, 5))
+            .wait()
+            .unwrap()
+            .state_hash;
+        // session: 3 steps, snapshot, 2 more
+        let spec = job(0, engine, 5, 0);
+        let open = coord.open(spec).unwrap();
+        let s3 = coord.step(open.sid, 3).unwrap();
+        let snap = coord.snapshot(open.sid).unwrap();
+        assert_eq!(snap.steps_done, 3);
+        assert_eq!(snap.state_hash, s3.state_hash);
+        let s5 = coord.step(open.sid, 2).unwrap();
+        assert_eq!(s5.steps_done, 5);
+        assert_eq!(s5.state_hash, want, "{engine}: session diverged from job");
+        // restore the 3-step snapshot and replay the remaining 2
+        let restored = coord.restore(&snap).unwrap();
+        assert_eq!(restored.steps_done, 3);
+        assert_eq!(restored.state_hash, s3.state_hash, "{engine}: restore changed state");
+        let r5 = coord.step(restored.sid, 2).unwrap();
+        assert_eq!(
+            r5.state_hash, want,
+            "{engine}: snapshot->restore->step diverged from uninterrupted stepping"
+        );
+        coord.close(open.sid).unwrap();
+        coord.close(restored.sid).unwrap();
+    }
+    coord.join_jobs();
+}
+
+#[test]
+fn snapshots_restore_across_engine_layouts() {
+    // the bitmap speaks canonical compact order, so a byte snapshot
+    // restores into a packed sharded engine (and keeps stepping right)
+    let coord = Coordinator::new(2);
+    let open = coord.open(job(0, "squeeze:4", 5, 0)).unwrap();
+    coord.step(open.sid, 3).unwrap();
+    let mut snap = coord.snapshot(open.sid).unwrap();
+    let want = coord.step(open.sid, 2).unwrap().state_hash;
+    snap.spec = job(0, "squeeze-bits:4:3", 5, 0);
+    let restored = coord.restore(&snap).unwrap();
+    assert!(restored.engine.contains("squeeze-bits"), "{}", restored.engine);
+    assert_eq!(coord.step(restored.sid, 2).unwrap().state_hash, want);
+    coord.join_jobs();
+}
+
+#[test]
+fn restore_rejects_corrupt_snapshots() {
+    let coord = Coordinator::new(2);
+    let open = coord.open(job(0, "squeeze:4", 4, 0)).unwrap();
+    let snap = coord.snapshot(open.sid).unwrap();
+    // flip the recorded hash: restore must refuse, and must not leak a
+    // half-open session
+    let bad = SessionSnapshot {
+        state_hash: snap.state_hash ^ 1,
+        ..snap.clone()
+    };
+    assert!(coord.restore(&bad).unwrap_err().contains("hash mismatch"));
+    // corrupt bitmap length
+    let bad = SessionSnapshot {
+        bits: vec![0u8; 1],
+        ..snap.clone()
+    };
+    assert!(coord.restore(&bad).unwrap_err().contains("bitmap"));
+    let sessions_open = coord.metrics().snapshot().sessions_open;
+    assert_eq!(sessions_open, 1, "failed restores must not leak sessions");
+    coord.join_jobs();
+}
+
+#[test]
+fn snapshot_token_round_trips() {
+    let coord = Coordinator::new(2);
+    for engine in ["squeeze:4", "squeeze-bits:4:3"] {
+        let open = coord.open(job(0, engine, 4, 0)).unwrap();
+        coord.step(open.sid, 2).unwrap();
+        let snap = coord.snapshot(open.sid).unwrap();
+        let token = snap.to_token();
+        assert!(
+            !token.contains(char::is_whitespace),
+            "token must be one protocol word: {token}"
+        );
+        assert_eq!(SessionSnapshot::parse(&token).unwrap(), snap);
+    }
+    assert!(SessionSnapshot::parse("garbage").is_err());
+    assert!(SessionSnapshot::parse("SQZSNAP2;job=r=4;steps=0;hash=zz;state=00").is_err());
+    coord.join_jobs();
+}
+
+#[test]
+fn inspect_probes_agree_with_engine_state() {
+    use squeeze::fractal::{catalog, Coord};
+    use squeeze::maps::{lambda, MapCtx};
+    let coord = Coordinator::new(2);
+    let open = coord.open(job(0, "squeeze:4", 4, 0)).unwrap();
+    let cells = open.cells;
+    // the expanded embedding of compact cell 0, via λ — the At probe
+    // must resolve it back through ν to the same cell
+    let ctx = MapCtx::new(&catalog::sierpinski_triangle(), 4);
+    let e0 = lambda(&ctx, Coord::new(0, 0));
+    let info = coord
+        .inspect(
+            open.sid,
+            &[Probe::Region(0, cells), Probe::Cell(0), Probe::At(e0.x, e0.y)],
+        )
+        .unwrap();
+    match info.probes[0] {
+        ProbeResult::Region { live, .. } => assert_eq!(live, info.population),
+        ref other => panic!("unexpected probe result {other:?}"),
+    }
+    match (info.probes[1], info.probes[2]) {
+        (ProbeResult::Cell { alive, .. }, ProbeResult::At { state, .. }) => {
+            assert_eq!(state, Some(alive));
+        }
+        other => panic!("unexpected probe results {other:?}"),
+    }
+    // out-of-range probes are errors, not panics
+    assert!(coord.inspect(open.sid, &[Probe::Cell(cells)]).is_err());
+    assert!(coord.inspect(open.sid, &[Probe::Region(5, 4)]).is_err());
+    coord.join_jobs();
+}
+
+#[test]
+fn interleaved_sessions_match_serial_v1_line_protocol() {
+    // N interleaved sessions (mixed byte/packed, single/sharded) stepped
+    // concurrently through the typed API must hash identically to the
+    // same jobs run serially, one at a time, through the v1 protocol.
+    let (r, total_steps) = (5, 6);
+    // serial reference through the v1 line protocol
+    let script: String = LAYOUTS
+        .iter()
+        .map(|e| format!("engine={e} r={r} steps={total_steps} workers=1 seed=9 density=0.4\n"))
+        .collect::<String>()
+        + "quit\n";
+    let mut out = Vec::new();
+    serve(script.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    assert!(!out.contains("ERR"), "{out}");
+    let want: Vec<&str> = out
+        .lines()
+        .filter(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+        .map(|l| l.split('\t').last().unwrap())
+        .collect();
+    assert_eq!(want.len(), LAYOUTS.len(), "{out}");
+    // all reference hashes agree with each other (same logical automaton)
+    assert!(want.windows(2).all(|w| w[0] == w[1]), "{want:?}");
+
+    // typed API: open all four, then interleave their steps from
+    // concurrent threads (2 sessions per thread, alternating)
+    let coord = Arc::new(Coordinator::new(4));
+    let sids: Vec<u64> = LAYOUTS
+        .iter()
+        .map(|e| coord.open(job(0, e, r, 0)).unwrap().sid)
+        .collect();
+    assert_eq!(coord.metrics().snapshot().sessions_open, 4);
+    std::thread::scope(|scope| {
+        for pair in sids.chunks(2) {
+            let coord = Arc::clone(&coord);
+            scope.spawn(move || {
+                for _ in 0..total_steps {
+                    for &sid in pair {
+                        coord.step(sid, 1).unwrap();
+                    }
+                }
+            });
+        }
+    });
+    for (i, &sid) in sids.iter().enumerate() {
+        let info = coord.close(sid).unwrap();
+        assert_eq!(info.steps_done, total_steps as u64);
+        let hash = format!("{:#018x}", info.state_hash);
+        assert_eq!(
+            hash, want[i],
+            "{}: interleaved session diverged from serial v1 run",
+            LAYOUTS[i]
+        );
+    }
+    assert_eq!(coord.metrics().snapshot().sessions_open, 0);
+    coord.join_jobs();
+}
+
+#[test]
+fn sessions_reuse_the_shared_map_cache() {
+    let coord = Coordinator::new(2);
+    let a = coord.open(job(0, "squeeze:4", 5, 0)).unwrap();
+    let b = coord.open(job(0, "squeeze:4", 5, 0)).unwrap();
+    let stats = coord.map_cache().stats();
+    assert_eq!(stats.misses, 1, "{stats:?}");
+    assert!(stats.hits >= 1, "{stats:?}");
+    // and a job of the same shape hits too
+    coord.submit(job(0, "squeeze:4", 5, 2)).wait().unwrap();
+    assert_eq!(coord.map_cache().stats().misses, 1);
+    coord.close(a.sid).unwrap();
+    coord.close(b.sid).unwrap();
+    coord.join_jobs();
+}
+
+#[test]
+fn session_errors_are_messages_not_panics() {
+    let coord = Coordinator::new(2);
+    assert!(coord.step(7, 1).is_err());
+    assert!(coord.close(7).is_err());
+    assert!(coord.snapshot(7).is_err());
+    assert!(coord
+        .open(job(0, "squeeze:3", 5, 0))
+        .unwrap_err()
+        .contains("rho=3"));
+    // engines without an import path reject restore cleanly: lambda has
+    // load_state, so corrupt *spec* fractals fail at open instead
+    let mut spec = job(0, "squeeze:4", 4, 0);
+    spec.fractal = "not-a-fractal".into();
+    assert!(coord.open(spec).unwrap_err().contains("unknown fractal"));
+    assert_eq!(coord.metrics().snapshot().sessions_open, 0);
+    coord.join_jobs();
+}
+
+#[test]
+fn bb_and_lambda_sessions_snapshot_too() {
+    // the canonical bitmap is engine-layout independent: expanded-space
+    // engines snapshot/restore the same way
+    let coord = Coordinator::new(2);
+    for engine in ["bb", "lambda", "squeeze"] {
+        let want = coord
+            .submit(job(0, engine, 4, 4))
+            .wait()
+            .unwrap()
+            .state_hash;
+        let open = coord.open(job(0, engine, 4, 0)).unwrap();
+        coord.step(open.sid, 2).unwrap();
+        let snap = coord.snapshot(open.sid).unwrap();
+        let restored = coord.restore(&snap).unwrap();
+        let done = coord.step(restored.sid, 2).unwrap();
+        assert_eq!(done.state_hash, want, "{engine}");
+        coord.close(open.sid).unwrap();
+        coord.close(restored.sid).unwrap();
+    }
+    coord.join_jobs();
+}
+
+#[test]
+fn engine_kind_is_preserved_through_the_snapshot_spec() {
+    // regression guard for the JobSpec::to_line round-trip inside the
+    // token: a sharded packed engine must come back sharded and packed
+    let coord = Coordinator::new(2);
+    let open = coord.open(job(0, "squeeze-bits:4:3", 5, 0)).unwrap();
+    let token = coord.snapshot(open.sid).unwrap().to_token();
+    let parsed = SessionSnapshot::parse(&token).unwrap();
+    assert_eq!(
+        parsed.spec.engine,
+        EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 }
+    );
+    coord.join_jobs();
+}

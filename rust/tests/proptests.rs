@@ -451,3 +451,120 @@ fn prop_population_conserved_under_still_life_rule() {
         )
     });
 }
+
+#[test]
+fn prop_engine_spec_display_parse_round_trips_every_variant() {
+    use squeeze::ca::EngineSpec;
+    // the one-grammar contract: parse(display(spec)) == spec over every
+    // constructible kind, with randomized ρ and shard counts (including
+    // the rho=1 "bare name" renderings)
+    Runner::new("engine-spec-roundtrip", 0xB1).run(2000, |g| {
+        let rho = *g.choose(&[1u32, 2, 3, 4, 8, 9, 16, 27, 32, 81, 128, 1024]);
+        let shards = g.u32(1, 64);
+        let kind = match g.u32(0, 5) {
+            0 => EngineKind::Bb,
+            1 => EngineKind::Lambda,
+            2 => EngineKind::Squeeze { rho, tensor: g.bool() },
+            3 => EngineKind::ShardedSqueeze { rho, shards },
+            4 => EngineKind::PackedSqueeze { rho },
+            _ => EngineKind::PackedShardedSqueeze { rho, shards },
+        };
+        let spec = EngineSpec { kind };
+        let text = spec.to_string();
+        Runner::check(
+            EngineSpec::parse(&text) == Ok(spec),
+            &format!("{kind:?} -> {text:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_job_spec_to_line_round_trips_including_promotions() {
+    // random valid request lines (engine strings plus the shards=/auto/
+    // packed promotions and the sharded-only overlap/compact keys):
+    // parse -> to_line -> parse must be the identity on JobSpec
+    let all = specs();
+    let rules = ["B3/S23", "B36/S23", "B2/S", "B/S012345678", "B1357/S1357"];
+    Runner::new("job-line-roundtrip", 0xB2).run(2000, |g| {
+        let fractal = g.choose(&all).name.to_string();
+        let rho = *g.choose(&[1u32, 2, 4, 8, 16]);
+        let shards = g.u32(1, 8);
+        let engine = match g.u32(0, 5) {
+            0 => "bb".to_string(),
+            1 => "lambda".to_string(),
+            2 => format!("squeeze:{rho}"),
+            3 => format!("squeeze-tcu:{rho}"),
+            4 => format!("sharded-squeeze:{rho}:{shards}"),
+            _ => format!("squeeze-bits:{rho}:{shards}"),
+        };
+        let mut line = format!(
+            "fractal={fractal} engine={engine} r={} steps={} density=0.{} seed={} rule={} workers={}",
+            g.u32(1, 9),
+            g.u32(0, 100),
+            g.u32(0, 99),
+            g.u64(0, u64::MAX),
+            g.choose(&rules),
+            g.usize(1, 16),
+        );
+        let sharded = engine.starts_with("sharded-squeeze") || engine.matches(':').count() == 2;
+        if sharded {
+            if g.bool() {
+                line.push_str(&format!(" overlap={}", g.u32(0, 1)));
+            }
+            if g.bool() {
+                line.push_str(&format!(" compact={}", g.u32(0, 1)));
+            }
+            if g.bool() {
+                line.push_str(&format!(" shards=auto:{}", g.u32(1, 8)));
+            }
+        } else if engine.starts_with("squeeze:") {
+            // exercise the promotion keys on scalar squeeze too
+            if g.bool() {
+                line.push_str(" packed=1");
+            }
+            if g.bool() {
+                line.push_str(&format!(" shards=auto:{}", g.u32(1, 8)));
+            }
+        }
+        let spec = match squeeze::coordinator::JobSpec::parse_line(3, &line) {
+            Ok(s) => s,
+            Err(e) => return Runner::check(false, &format!("{line:?} failed to parse: {e}")),
+        };
+        let rendered = spec.to_line();
+        let back = squeeze::coordinator::JobSpec::parse_line(3, &rendered);
+        Runner::check(
+            back.as_ref() == Ok(&spec),
+            &format!("{line:?} -> {rendered:?} -> {back:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_snapshot_tokens_round_trip() {
+    // the serve-protocol snapshot token is a faithful encoding: parse ∘
+    // to_token == id over random specs, steps, hashes and state bitmaps
+    let all = specs();
+    Runner::new("snapshot-token-roundtrip", 0xB3).run(500, |g| {
+        let fractal = g.choose(&all).name.to_string();
+        let line = format!(
+            "fractal={fractal} engine=squeeze:{} r={} seed={}",
+            *g.choose(&[1u32, 2, 4, 16]),
+            g.u32(1, 8),
+            g.u64(0, u64::MAX)
+        );
+        let spec = squeeze::coordinator::JobSpec::parse_line(0, &line).unwrap();
+        let bits: Vec<u8> = (0..g.usize(0, 64)).map(|_| g.u64(0, 255) as u8).collect();
+        let snap = squeeze::coordinator::SessionSnapshot {
+            spec,
+            steps_done: g.u64(0, u64::MAX),
+            state_hash: g.u64(0, u64::MAX),
+            bits,
+        };
+        let token = snap.to_token();
+        let back = squeeze::coordinator::SessionSnapshot::parse(&token);
+        Runner::check(
+            back.as_ref() == Ok(&snap) && !token.contains(char::is_whitespace),
+            &format!("{token:.120} -> {back:?}"),
+        )
+    });
+}

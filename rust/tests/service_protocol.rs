@@ -17,10 +17,11 @@ fn run_session(script: &str) -> String {
     String::from_utf8(out).expect("protocol output is utf-8")
 }
 
-/// Data (non-comment, non-empty) lines of a session transcript.
+/// Data (non-comment, non-error, non-empty) lines of a session
+/// transcript — the successful responses.
 fn data_lines(out: &str) -> Vec<&str> {
     out.lines()
-        .filter(|l| !l.starts_with('#') && !l.is_empty())
+        .filter(|l| !l.starts_with('#') && !l.starts_with("ERR") && !l.is_empty())
         .collect()
 }
 
@@ -274,4 +275,156 @@ fn sharded_squeeze_matches_single_engine_on_every_catalog_fractal() {
             spec.name
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// v2: the typed API through the line protocol (additive verbs)
+// ---------------------------------------------------------------------
+
+#[test]
+fn v2_banner_is_additive_and_v1_rows_keep_their_shape() {
+    let out = run_session("engine=squeeze:4 r=4 steps=2 workers=1 seed=3\nquit\n");
+    assert!(out.starts_with("# squeeze coordinator ready"), "{out}");
+    assert!(out.contains("# protocol=v2"), "{out}");
+    // exactly one data row, with the v1 column count
+    let rows = data_lines(&out);
+    assert_eq!(rows.len(), 1, "{out}");
+    let header_cols = squeeze::coordinator::JobResult::tsv_header()
+        .split('\t')
+        .count();
+    assert_eq!(rows[0].split('\t').count(), header_cols, "{out}");
+}
+
+#[test]
+fn async_submit_wait_matches_the_sync_twin_hash() {
+    let out = run_session(
+        "engine=squeeze-bits:4:3 r=5 steps=4 workers=2 seed=5\n\
+         async=1\n\
+         engine=squeeze-bits:4:3 r=5 steps=4 workers=2 seed=5\n\
+         engine=squeeze:4 r=5 steps=4 workers=2 seed=5\n\
+         wait 3\n\
+         wait 2\n\
+         quit\n",
+    );
+    assert!(!out.contains("ERR"), "{out}");
+    assert!(out.contains("JOB 2 submitted"), "{out}");
+    assert!(out.contains("JOB 3 submitted"), "{out}");
+    let rows: Vec<&str> = out
+        .lines()
+        .filter(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+        .collect();
+    assert_eq!(rows.len(), 3, "{out}");
+    let hash = |id: &str| {
+        rows.iter()
+            .find(|l| l.split('\t').next() == Some(id))
+            .unwrap_or_else(|| panic!("no row for job {id}"))
+            .split('\t')
+            .last()
+            .unwrap()
+    };
+    assert_eq!(hash("1"), hash("2"), "{out}");
+    assert_eq!(hash("1"), hash("3"), "{out}");
+}
+
+#[test]
+fn poll_and_cancel_answer_structured_job_lines() {
+    let out = run_session(
+        "async=1\n\
+         engine=squeeze:16 r=8 steps=200000 workers=1 seed=1\n\
+         poll 1\n\
+         cancel 1\n\
+         wait 1\n\
+         poll 99\n\
+         quit\n",
+    );
+    // poll answers a JOB line whatever phase the job is in
+    assert!(out.lines().any(|l| l.starts_with("JOB 1 ")), "{out}");
+    assert!(out.contains("JOB 1 cancel requested"), "{out}");
+    assert!(out.contains("ERR 99 unknown job 99"), "{out}");
+}
+
+#[test]
+fn session_verbs_round_trip_all_layouts_through_serve() {
+    // open/step/close for byte+packed, single+sharded: every session's
+    // final hash must equal the one-shot v1 job's hash
+    let mut script = String::from("engine=squeeze:4 r=5 steps=4 workers=2 seed=5\n");
+    for engine in ["squeeze:4", "squeeze-bits:4", "sharded-squeeze:4:3", "squeeze-bits:4:3"] {
+        script.push_str(&format!("open engine={engine} r=5 workers=2 seed=5\n"));
+    }
+    for sid in 1..=4 {
+        script.push_str(&format!("step {sid} 4\n"));
+    }
+    for sid in 1..=4 {
+        script.push_str(&format!("close {sid}\n"));
+    }
+    script.push_str("quit\n");
+    let out = run_session(&script);
+    assert!(!out.contains("ERR"), "{out}");
+    let job_hash = data_lines(&out)
+        .iter()
+        .find(|l| l.split('\t').count() > 3)
+        .map(|l| l.split('\t').last().unwrap().to_string())
+        .expect("job row");
+    let closes: Vec<&str> = out.lines().filter(|l| l.starts_with("CLOSED")).collect();
+    assert_eq!(closes.len(), 4, "{out}");
+    for line in closes {
+        assert!(line.contains("steps=4"), "{out}");
+        assert!(
+            line.contains(&format!("hash={job_hash}")),
+            "session diverged from the v1 job: {line}\n{out}"
+        );
+    }
+}
+
+#[test]
+fn snapshot_restore_through_serve_is_bit_identical_for_packed_sharded() {
+    let out = run_session(
+        "open engine=squeeze-bits:4:3 r=5 workers=2 seed=5\n\
+         step 1 3\n\
+         snapshot 1\n\
+         step 1 2\n\
+         close 1\n\
+         quit\n",
+    );
+    assert!(!out.contains("ERR"), "{out}");
+    let token = out
+        .lines()
+        .find(|l| l.starts_with("SNAPSHOT 1 "))
+        .and_then(|l| l.split_whitespace().nth(2))
+        .expect("snapshot token");
+    let final_hash = out
+        .lines()
+        .find(|l| l.starts_with("CLOSED 1"))
+        .and_then(|l| l.split("hash=").nth(1))
+        .expect("close line")
+        .to_string();
+    // a brand-new serve process restores the token and replays
+    let out2 = run_session(&format!("restore {token}\nstep 1 2\nclose 1\nquit\n"));
+    assert!(!out2.contains("ERR"), "{out2}");
+    let restored = out2.lines().find(|l| l.starts_with("SESSION 1")).unwrap();
+    assert!(restored.contains("steps=3"), "{out2}");
+    let replay_hash = out2
+        .lines()
+        .find(|l| l.starts_with("CLOSED 1"))
+        .and_then(|l| l.split("hash=").nth(1))
+        .expect("close line");
+    assert_eq!(replay_hash, final_hash, "{out}\n---\n{out2}");
+}
+
+#[test]
+fn metrics_verb_dumps_the_multiplexer_gauges() {
+    let out = run_session(
+        "open engine=squeeze:4 r=4 workers=1 seed=1\n\
+         step 1 2\n\
+         metrics\n\
+         quit\n",
+    );
+    let metrics_line = out
+        .lines()
+        .find(|l| l.contains("sessions="))
+        .expect("metrics line");
+    assert!(metrics_line.contains("sessions=1"), "{out}");
+    assert!(metrics_line.contains("progress_steps=2"), "{out}");
+    assert!(metrics_line.contains("budget="), "{out}");
+    assert!(metrics_line.contains("inflight=0"), "{out}");
 }
