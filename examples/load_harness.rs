@@ -1,0 +1,319 @@
+//! Serve-layer load harness: the acceptance proof for the socket
+//! front-end (`--listen`), the pooled executor, and the LRU map cache.
+//!
+//!     cargo run --release --example load_harness -- \
+//!         [--sessions 1000] [--conns 50] [--steps 3] [--jobs 64] \
+//!         [--cache-mb 8] [--out BENCH_serve.json]
+//!
+//! What it does, in phases:
+//!
+//! 1. **Serial reference** — the whole workload (every session's steps,
+//!    the global sweep, every burst job) runs through one in-process
+//!    coordinator, recording the expected state hash per session and
+//!    per job.
+//! 2. **Load** — a TCP [`SocketServer`] on one shared coordinator with
+//!    a byte-budgeted map cache; `--conns` client threads open all
+//!    `--sessions` sessions **concurrently** (barrier between open and
+//!    step phases, so every session is live at once), step them, run a
+//!    global `stepall` sweep from a control connection at a quiescent
+//!    point, fire an async job burst, then close everything.
+//! 3. **Check + report** — every hash must equal the serial run's
+//!    (socket serving must not change a single bit), the map cache must
+//!    sit at or under its byte budget, and the server's own metrics
+//!    dump must carry finite request-latency percentiles. Client-side
+//!    p50/p99 step latency and aggregate cells/sec land in a JSON
+//!    summary (`--out`), the tracked `BENCH_serve.json` artifact.
+//!
+//! Exits nonzero on any mismatch — CI runs this in a small
+//! configuration as the socket-serve acceptance gate.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier, Mutex};
+
+use squeeze::coordinator::{
+    Coordinator, CoordinatorConfig, JobSpec, SocketServer,
+};
+use squeeze::util::cli::Args;
+use squeeze::util::timer::Timer;
+
+/// Session `i`'s open line: a handful of distinct `(fractal, r, ρ)` keys
+/// so the shared cache is exercised, a unique seed so every hash is its
+/// own evidence.
+fn session_line(i: u64) -> String {
+    format!(
+        "open engine=squeeze:4 r={} workers=1 seed={} density=0.4",
+        4 + (i % 3),
+        i
+    )
+}
+
+/// Burst job `j`'s v1 line (async phase). Small and deterministic.
+fn job_line(j: u64) -> String {
+    format!("engine=squeeze:4 r=5 steps=2 workers=1 seed={} density=0.4", 1000 + j)
+}
+
+/// One protocol client: lock-step request/response over a TCP stream.
+struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    fn connect(endpoint: &str) -> Client {
+        let stream = TcpStream::connect(endpoint).expect("connect to load server");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        let mut c = Client { reader, stream };
+        for _ in 0..3 {
+            let banner = c.read_line();
+            assert!(banner.starts_with('#'), "unexpected banner line: {banner}");
+        }
+        c
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("read from server");
+        assert!(!line.is_empty(), "server closed the connection early");
+        line.trim_end().to_string()
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write");
+        self.read_line()
+    }
+
+    /// `quit` gets no response line — send and hang up.
+    fn quit(mut self) {
+        let _ = self.stream.write_all(b"quit\n");
+    }
+}
+
+/// `key=value` field out of a protocol line.
+fn field(line: &str, key: &str) -> String {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("missing {key}= in {line:?}"))
+        .to_string()
+}
+
+fn percentile_ms(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx] * 1e3
+}
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>()).expect("args");
+    let sessions = args.get_u64("sessions", 1000).expect("--sessions");
+    let conns = args.get_u64("conns", 50).expect("--conns").clamp(1, sessions.max(1));
+    let steps = args.get_u64("steps", 3).expect("--steps") as u32;
+    let jobs = args.get_u64("jobs", 64).expect("--jobs");
+    let cache_mb = args.get_u64("cache-mb", 8).expect("--cache-mb");
+    let out_path = args.get_or("out", "BENCH_serve.json");
+    let config = CoordinatorConfig {
+        budget: squeeze::util::pool::default_workers().max(2),
+        pool_threads: 0,
+        cache_bytes: Some(cache_mb << 20),
+    };
+
+    // -- phase 1: serial reference over one in-process coordinator ----
+    println!("[1/3] serial reference: {sessions} sessions + {jobs} jobs ...");
+    let reference = Coordinator::with_config(config);
+    let mut want_session_hash = Vec::with_capacity(sessions as usize);
+    let mut total_cells = 0u64;
+    {
+        let mut sids = Vec::with_capacity(sessions as usize);
+        for i in 0..sessions {
+            let spec = JobSpec::parse_line(0, &session_line(i)["open ".len()..])
+                .expect("session line parses");
+            let info = reference.open(spec).expect("session opens");
+            total_cells += info.cells;
+            sids.push(info.sid);
+        }
+        for &sid in &sids {
+            reference.step(sid, steps).expect("steps run");
+        }
+        // the quiescent global sweep the load phase runs as `stepall 1`
+        for (_, r) in reference.step_all(1) {
+            r.expect("sweep steps every session");
+        }
+        for &sid in &sids {
+            let info = reference.close(sid).expect("close");
+            want_session_hash.push(format!("{:#018x}", info.state_hash));
+        }
+    }
+    let mut want_job_hash = Vec::with_capacity(jobs as usize);
+    for j in 0..jobs {
+        let spec = JobSpec::parse_line(0, &job_line(j)).expect("job line parses");
+        let result = reference.submit(spec).wait().expect("job runs");
+        want_job_hash.push(format!("{:#018x}", result.state_hash));
+    }
+    reference.join_jobs();
+    drop(reference);
+
+    // -- phase 2: the same workload over TCP on one shared coordinator
+    println!("[2/3] load: {conns} connections, all {sessions} sessions concurrent ...");
+    let server = SocketServer::bind("127.0.0.1:0", config).expect("bind");
+    let endpoint = server.endpoint().to_string();
+    // conns client threads + this thread; 3 sync points: opens done,
+    // steps done (quiescent for the global sweep), sweep done
+    let opened = Arc::new(Barrier::new(conns as usize + 1));
+    let quiescent = Arc::new(Barrier::new(conns as usize + 1));
+    let swept = Arc::new(Barrier::new(conns as usize + 1));
+    let got_session_hash: Arc<Mutex<Vec<Option<String>>>> =
+        Arc::new(Mutex::new(vec![None; sessions as usize]));
+    let got_job_hash: Arc<Mutex<Vec<Option<String>>>> =
+        Arc::new(Mutex::new(vec![None; jobs as usize]));
+    let step_latency: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    let clients: Vec<_> = (0..conns)
+        .map(|c| {
+            let endpoint = endpoint.clone();
+            let (opened, quiescent, swept) =
+                (Arc::clone(&opened), Arc::clone(&quiescent), Arc::clone(&swept));
+            let got_session_hash = Arc::clone(&got_session_hash);
+            let got_job_hash = Arc::clone(&got_job_hash);
+            let step_latency = Arc::clone(&step_latency);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&endpoint);
+                // this connection owns session indices c, c+conns, ...
+                let my_sessions: Vec<u64> = (c..sessions).step_by(conns as usize).collect();
+                let mut my_sids = Vec::with_capacity(my_sessions.len());
+                for &i in &my_sessions {
+                    let resp = client.request(&session_line(i));
+                    assert!(resp.starts_with("SESSION "), "open failed: {resp}");
+                    let sid: u64 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+                    my_sids.push(sid);
+                }
+                opened.wait(); // every session in the process is live now
+                let mut lat = Vec::with_capacity(my_sids.len());
+                for &sid in &my_sids {
+                    let t = Timer::start();
+                    let resp = client.request(&format!("step {sid} {steps}"));
+                    lat.push(t.elapsed_s());
+                    assert!(resp.starts_with("STEP "), "step failed: {resp}");
+                }
+                step_latency.lock().unwrap().extend(lat);
+                quiescent.wait(); // control connection sweeps here
+                swept.wait();
+                // async job burst: this connection's share of the jobs
+                let my_jobs: Vec<u64> = (c..jobs).step_by(conns as usize).collect();
+                if !my_jobs.is_empty() {
+                    let resp = client.request("async=1");
+                    assert_eq!(resp, "# async=1", "{resp}");
+                    let mut ids = Vec::with_capacity(my_jobs.len());
+                    for &j in &my_jobs {
+                        let resp = client.request(&job_line(j));
+                        assert!(resp.ends_with("submitted"), "submit failed: {resp}");
+                        ids.push(resp.split_whitespace().nth(1).unwrap().to_string());
+                    }
+                    for (&j, id) in my_jobs.iter().zip(&ids) {
+                        let row = client.request(&format!("wait {id}"));
+                        assert!(!row.starts_with("ERR"), "job failed: {row}");
+                        let hash = row.split('\t').last().unwrap().to_string();
+                        got_job_hash.lock().unwrap()[j as usize] = Some(hash);
+                    }
+                }
+                for (&i, &sid) in my_sessions.iter().zip(&my_sids) {
+                    let resp = client.request(&format!("close {sid}"));
+                    assert!(resp.starts_with("CLOSED "), "close failed: {resp}");
+                    got_session_hash.lock().unwrap()[i as usize] = Some(field(&resp, "hash"));
+                }
+                client.quit();
+            })
+        })
+        .collect();
+
+    let mut control = Client::connect(&endpoint);
+    opened.wait();
+    let step_phase = Timer::start();
+    quiescent.wait();
+    let step_phase_s = step_phase.elapsed_s();
+    // every client is idle between the two barriers: the global sweep
+    // sees exactly the serial run's states
+    let batch = control.request("stepall 1");
+    assert!(batch.starts_with("BATCH stepped"), "{batch}");
+    assert_eq!(field(&batch, "sessions"), sessions.to_string(), "{batch}");
+    assert_eq!(field(&batch, "errors"), "0", "{batch}");
+    swept.wait();
+    for handle in clients {
+        handle.join().expect("client thread");
+    }
+    let metrics_line = control.request("metrics");
+    control.quit();
+    server.shutdown();
+
+    // -- phase 3: differential + report -------------------------------
+    println!("[3/3] check + report ...");
+    let mut mismatches = 0u64;
+    for (i, got) in got_session_hash.lock().unwrap().iter().enumerate() {
+        let got = got.as_deref().unwrap_or("<missing>");
+        if got != want_session_hash[i] {
+            eprintln!("session {i}: hash {got} != serial {}", want_session_hash[i]);
+            mismatches += 1;
+        }
+    }
+    for (j, got) in got_job_hash.lock().unwrap().iter().enumerate() {
+        let got = got.as_deref().unwrap_or("<missing>");
+        if got != want_job_hash[j] {
+            eprintln!("job {j}: hash {got} != serial {}", want_job_hash[j]);
+            mismatches += 1;
+        }
+    }
+    let resident: u64 = field(&metrics_line, "cache_resident")
+        .trim_end_matches('B')
+        .parse()
+        .expect("cache_resident gauge");
+    let budget_bytes = cache_mb << 20;
+    assert!(
+        resident <= budget_bytes,
+        "map cache over budget: {resident} > {budget_bytes}"
+    );
+    for needle in ["=inf", "NaN"] {
+        assert!(!metrics_line.contains(needle), "bad gauge in {metrics_line}");
+    }
+
+    let mut lat = step_latency.lock().unwrap().clone();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50_ms = percentile_ms(&lat, 0.50);
+    let p99_ms = percentile_ms(&lat, 0.99);
+    // every session advanced `steps` during the timed phase
+    let cells_per_s = (total_cells * steps as u64) as f64 / step_phase_s.max(1e-9);
+
+    let json = format!(
+        "{{\n  \"config\": {{\"sessions\": {sessions}, \"conns\": {conns}, \"steps\": {steps}, \
+         \"jobs\": {jobs}, \"cache_mb\": {cache_mb}}},\n  \
+         \"step_latency_ms\": {{\"p50\": {p50_ms:.3}, \"p99\": {p99_ms:.3}, \"count\": {}}},\n  \
+         \"aggregate_cells_per_s\": {cells_per_s:.3e},\n  \
+         \"cache_resident_bytes\": {resident},\n  \
+         \"cache_budget_bytes\": {budget_bytes},\n  \
+         \"cache_evictions\": {},\n  \
+         \"server_requests\": {},\n  \
+         \"server_req_p50_us\": {},\n  \
+         \"server_req_p99_us\": {},\n  \
+         \"hashes_ok\": {},\n  \
+         \"server_metrics\": \"{}\"\n}}\n",
+        lat.len(),
+        field(&metrics_line, "cache_evictions"),
+        field(&metrics_line, "requests"),
+        field(&metrics_line, "req_p50_us"),
+        field(&metrics_line, "req_p99_us"),
+        mismatches == 0,
+        metrics_line.trim_start_matches("# ").replace('"', "'"),
+    );
+    std::fs::write(&out_path, &json).expect("write summary");
+    println!("{json}");
+    println!(
+        "sessions={sessions} conns={conns} p50={p50_ms:.3}ms p99={p99_ms:.3}ms \
+         agg={cells_per_s:.3e} cells/s -> {out_path}"
+    );
+    if mismatches > 0 {
+        eprintln!("FAIL: {mismatches} hash mismatches vs the serial run");
+        std::process::exit(1);
+    }
+    println!("OK: all {} hashes identical to the serial run", sessions + jobs);
+}

@@ -5,11 +5,11 @@
 //! work multiplex over it concurrently:
 //!
 //! - **Jobs** — run-to-completion simulations. [`Coordinator::submit`]
-//!   returns a [`JobHandle`] immediately; the job executes on its own
-//!   thread under a budget permit, streaming progress (steps completed,
-//!   cells/sec) into the handle and the metrics gauges. Handles support
-//!   `poll` / `wait` / `cancel` (cancellation lands between steps, so a
-//!   cancelled job never tears mid-sweep).
+//!   returns a [`JobHandle`] immediately; the job executes on a fixed
+//!   pool of executor threads under a budget permit, streaming progress
+//!   (steps completed, cells/sec) into the handle and the metrics
+//!   gauges. Handles support `poll` / `wait` / `cancel` (cancellation
+//!   lands between steps, so a cancelled job never tears mid-sweep).
 //! - **Sessions** — stateful open engines ([`Coordinator::open`]): step
 //!   them incrementally, `inspect` population / canonical hash /
 //!   ν-mapped cell and region probes, `snapshot` the full logical state
@@ -31,10 +31,10 @@
 //! this module — old `key=value` one-shot lines execute through
 //! [`Coordinator::submit`] + wait and print byte-identical TSV rows.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 use super::job::{JobResult, JobSpec};
 use super::metrics::{Metrics, MetricsSnapshot};
@@ -50,8 +50,35 @@ use crate::util::timer::Timer;
 pub const PROTOCOL_VERSION: &str = "v2";
 
 /// Finished-job records kept for late `wait`/`poll` before the submit
-/// path sweeps them (live jobs are never evicted).
+/// path and the pool's idle path sweep them (live jobs are never
+/// evicted).
 const RETAINED_JOBS_MAX: usize = 1024;
+
+/// Lock a bookkeeping mutex, recovering from poisoning. The coordinator's
+/// own maps and counters are only ever mutated through small, panic-free
+/// critical sections (engine panics are caught *before* they unwind
+/// through these locks), so a poisoned guard means some caller's panic
+/// crossed a lock boundary — the data is still consistent, and refusing
+/// every later request (the old `.expect("… poisoned")` behavior) turned
+/// one bad job into a dead serve process. Session *state* mutexes are
+/// deliberately not routed through this: a panic mid-step leaves a torn
+/// engine, so those fail the one session closed instead (see
+/// [`Coordinator::lock_session`]).
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Cells/sec over a wall-clock interval, clamped so sub-resolution
+/// timer reads (fast tiny steps can measure 0.0s) never emit `inf` or
+/// `NaN` into progress gauges or protocol lines.
+pub(crate) fn safe_rate(cells: u64, seconds: f64) -> f64 {
+    let r = cells as f64 / seconds.max(1e-9);
+    if r.is_finite() {
+        r
+    } else {
+        0.0
+    }
+}
 
 // ---------------------------------------------------------------------
 // Typed wire model
@@ -74,6 +101,10 @@ pub enum Request {
     Open(JobSpec),
     /// Advance a session `n` steps.
     Step { sid: u64, n: u32 },
+    /// Advance every open session `n` steps in one batched sweep
+    /// (sessions sharing a `(fractal, r, ρ)` map key step under one
+    /// admission grant).
+    StepAll { n: u32 },
     /// Read session facts + optional cell/region probes.
     Inspect { sid: u64, probes: Vec<Probe> },
     /// Export a session's full canonical state.
@@ -97,6 +128,8 @@ pub enum Response {
     /// `open` and `restore` both answer with the session's facts.
     Session(SessionInfo),
     Stepped(StepInfo),
+    /// One entry per open session, in ascending sid order.
+    BatchStepped(Vec<(u64, Result<StepInfo, String>)>),
     Inspected(InspectInfo),
     Snapshotted { sid: u64, snapshot: Box<SessionSnapshot> },
     Closed(SessionInfo),
@@ -307,7 +340,7 @@ impl WorkerBudget {
     /// cancelled queued job unblocks promptly instead of waiting out
     /// whatever job holds the budget.
     fn acquire(&self, want: usize, cancel: &AtomicBool) -> Option<usize> {
-        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        let mut in_use = lock_clean(&self.in_use);
         while *in_use >= self.total {
             if cancel.load(Ordering::Relaxed) {
                 return None;
@@ -315,7 +348,7 @@ impl WorkerBudget {
             let (guard, _timed_out) = self
                 .freed
                 .wait_timeout(in_use, std::time::Duration::from_millis(50))
-                .expect("budget poisoned");
+                .unwrap_or_else(PoisonError::into_inner);
             in_use = guard;
         }
         if cancel.load(Ordering::Relaxed) {
@@ -331,7 +364,7 @@ impl WorkerBudget {
     /// session `open`/`step` records its occupancy honestly but can
     /// never wedge a single-threaded protocol loop behind long jobs.
     fn try_acquire(&self, want: usize) -> usize {
-        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        let mut in_use = lock_clean(&self.in_use);
         let granted = want.max(1).min(self.total - (*in_use).min(self.total));
         *in_use += granted;
         granted
@@ -341,17 +374,14 @@ impl WorkerBudget {
         if granted == 0 {
             return;
         }
-        let mut in_use = self.in_use.lock().expect("budget poisoned");
+        let mut in_use = lock_clean(&self.in_use);
         *in_use -= granted;
         drop(in_use);
         self.freed.notify_all();
     }
 
     fn occupancy(&self) -> (u64, u64) {
-        (
-            *self.in_use.lock().expect("budget poisoned") as u64,
-            self.total as u64,
-        )
+        (*lock_clean(&self.in_use) as u64, self.total as u64)
     }
 }
 
@@ -391,7 +421,7 @@ impl JobState {
     }
 
     fn status(&self) -> JobStatus {
-        match &*self.phase.lock().expect("job state poisoned") {
+        match &*lock_clean(&self.phase) {
             JobPhase::Queued => JobStatus::Queued,
             JobPhase::Running => JobStatus::Running(self.progress()),
             JobPhase::Finished(JobOutcome::Done(r)) => JobStatus::Done(Box::new(r.clone())),
@@ -401,18 +431,23 @@ impl JobState {
     }
 
     fn finish(&self, outcome: JobOutcome) {
-        *self.phase.lock().expect("job state poisoned") = JobPhase::Finished(outcome);
+        *lock_clean(&self.phase) = JobPhase::Finished(outcome);
         self.finished.notify_all();
     }
 
     fn wait(&self) -> Result<JobResult, String> {
-        let mut phase = self.phase.lock().expect("job state poisoned");
+        let mut phase = lock_clean(&self.phase);
         loop {
             match &*phase {
                 JobPhase::Finished(JobOutcome::Done(r)) => return Ok(r.clone()),
                 JobPhase::Finished(JobOutcome::Failed(m)) => return Err(m.clone()),
                 JobPhase::Finished(JobOutcome::Cancelled) => return Err("cancelled".into()),
-                _ => phase = self.finished.wait(phase).expect("job state poisoned"),
+                _ => {
+                    phase = self
+                        .finished
+                        .wait(phase)
+                        .unwrap_or_else(PoisonError::into_inner)
+                }
             }
         }
     }
@@ -449,10 +484,7 @@ impl JobHandle {
     /// the job had already finished.
     pub fn cancel(&self) -> bool {
         self.state.cancel.store(true, Ordering::Relaxed);
-        !matches!(
-            &*self.state.phase.lock().expect("job state poisoned"),
-            JobPhase::Finished(_)
-        )
+        !matches!(&*lock_clean(&self.state.phase), JobPhase::Finished(_))
     }
 }
 
@@ -498,7 +530,10 @@ struct CoordInner {
     sessions: Mutex<HashMap<u64, Arc<Mutex<Session>>>>,
     next_job_id: AtomicU64,
     next_session_id: AtomicU64,
-    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Jobs accepted (enqueued to the pool or running inline) whose
+    /// outcome is not yet published; `join_jobs` waits on this.
+    pending_jobs: Mutex<u64>,
+    all_done: Condvar,
 }
 
 impl CoordInner {
@@ -506,30 +541,142 @@ impl CoordInner {
         let (in_use, total) = self.budget.occupancy();
         self.metrics.record_budget(in_use, total);
     }
+
+    fn job_accepted(&self) {
+        *lock_clean(&self.pending_jobs) += 1;
+    }
+
+    fn job_done(&self) {
+        let mut pending = lock_clean(&self.pending_jobs);
+        *pending = pending.saturating_sub(1);
+        drop(pending);
+        self.all_done.notify_all();
+    }
+
+    /// Bounded retention: once the record map is large, sweep finished
+    /// records (their results were observable via wait/poll; a client
+    /// that never collects them must not grow the map forever). Live
+    /// jobs are always retained. Runs on submit *and* from the pool's
+    /// post-job idle path, so a burst followed by silence still shrinks.
+    fn sweep_finished(&self) {
+        let mut jobs = lock_clean(&self.jobs);
+        if jobs.len() >= RETAINED_JOBS_MAX {
+            jobs.retain(|_, state| {
+                !matches!(&*lock_clean(&state.phase), JobPhase::Finished(_))
+            });
+        }
+    }
+}
+
+/// One unit of work queued to the executor pool.
+struct ExecMsg {
+    id: u64,
+    spec: JobSpec,
+    state: Arc<JobState>,
+    notify: Option<mpsc::Sender<Result<JobResult, String>>>,
+}
+
+/// Construction knobs for [`Coordinator::with_config`]. `Default`
+/// matches `Coordinator::new(default)`: budget-sized pool, unbounded
+/// map cache.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker-budget permits (admission control), clamped to ≥ 1.
+    pub budget: usize,
+    /// Executor pool threads; `0` = auto (`max(budget, 2)` — at least
+    /// two so independent jobs always overlap).
+    pub pool_threads: usize,
+    /// Map-cache LRU byte budget; `None` = never evict.
+    pub cache_bytes: Option<u64>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            budget: 1,
+            pool_threads: 0,
+            cache_bytes: None,
+        }
+    }
 }
 
 /// The long-lived typed-API facade. See the module docs for the model.
+///
+/// Jobs execute on a fixed pool of executor threads created up front
+/// (size [`CoordinatorConfig::pool_threads`]) and fed by a queue — a
+/// burst of N submits costs N queue sends, not N thread spawns, and a
+/// long-running serve process holds a constant thread count however
+/// many jobs pass through. Dropping the coordinator closes the queue
+/// and joins the pool (in-flight jobs finish first; queued jobs still
+/// run — their handles stay valid through the shared `Arc` states).
 pub struct Coordinator {
     inner: Arc<CoordInner>,
+    /// Queue feed; `None` after `Drop` closes it. Behind a mutex because
+    /// `mpsc::Sender` is not `Sync` on older toolchains.
+    pool_tx: Mutex<Option<mpsc::Sender<ExecMsg>>>,
+    pool: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
     /// A coordinator multiplexing over `budget` worker permits (clamped
     /// to ≥ 1), with a fresh shared [`MapCache`] and [`Metrics`].
     pub fn new(budget: usize) -> Coordinator {
+        Coordinator::with_config(CoordinatorConfig {
+            budget,
+            ..CoordinatorConfig::default()
+        })
+    }
+
+    /// A coordinator with explicit executor-pool and cache-budget knobs
+    /// (the serve front-end's `--pool` / `--cache-mb` flags).
+    pub fn with_config(config: CoordinatorConfig) -> Coordinator {
+        let cache = match config.cache_bytes {
+            Some(bytes) => MapCache::with_budget(bytes),
+            None => MapCache::new(),
+        };
         let inner = CoordInner {
-            cache: Arc::new(MapCache::new()),
+            cache: Arc::new(cache),
             metrics: Arc::new(Metrics::default()),
-            budget: WorkerBudget::new(budget),
+            budget: WorkerBudget::new(config.budget),
             jobs: Mutex::new(HashMap::new()),
             sessions: Mutex::new(HashMap::new()),
             next_job_id: AtomicU64::new(1),
             next_session_id: AtomicU64::new(1),
-            threads: Mutex::new(Vec::new()),
+            pending_jobs: Mutex::new(0),
+            all_done: Condvar::new(),
         };
         inner.mirror_budget();
+        let inner = Arc::new(inner);
+        let threads = if config.pool_threads == 0 {
+            config.budget.max(2)
+        } else {
+            config.pool_threads.max(1)
+        };
+        let (tx, rx) = mpsc::channel::<ExecMsg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pool = (0..threads)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    // hold the receiver lock only for the dequeue: the
+                    // other executors must keep draining while this one
+                    // runs its job
+                    let msg = { lock_clean(&rx).recv() };
+                    let Ok(msg) = msg else { break };
+                    run_job(&inner, msg.id, msg.spec, &msg.state, msg.notify);
+                    // idle-path maintenance: retention sweep happens on
+                    // the executor after each job, so a burst followed
+                    // by silence still sheds its finished records
+                    inner.sweep_finished();
+                    inner.job_done();
+                })
+            })
+            .collect();
         Coordinator {
-            inner: Arc::new(inner),
+            inner,
+            pool_tx: Mutex::new(Some(tx)),
+            pool: Mutex::new(pool),
         }
     }
 
@@ -555,10 +702,8 @@ impl Coordinator {
     /// job finishes — the seam `coordinator::scheduler` (completion-order
     /// delivery) is built on.
     ///
-    /// Each job runs on its own OS thread (queued jobs park cheaply in
-    /// the budget's condvar; finished threads are reaped on the next
-    /// submit). A pooled executor for very large async bursts is a
-    /// ROADMAP follow-up.
+    /// The job is enqueued to the fixed executor pool: a submit is one
+    /// allocation plus one channel send, regardless of burst size.
     pub(super) fn submit_with_notify(
         &self,
         mut spec: JobSpec,
@@ -576,17 +721,10 @@ impl Coordinator {
         // serve adapter numbers lines), else coordinator-assigned.
         // `JobResult::id` always stays `spec.id` as submitted.
         let id = {
-            let mut jobs = self.inner.jobs.lock().expect("jobs poisoned");
-            // bounded retention: once the map is large, sweep finished
-            // records (their results were observable via wait/poll; a
-            // client that never collects them must not grow the map
-            // forever). Live jobs are always retained.
+            let mut jobs = lock_clean(&self.inner.jobs);
             if jobs.len() >= RETAINED_JOBS_MAX {
                 jobs.retain(|_, state| {
-                    !matches!(
-                        &*state.phase.lock().expect("job state poisoned"),
-                        JobPhase::Finished(_)
-                    )
+                    !matches!(&*lock_clean(&state.phase), JobPhase::Finished(_))
                 });
             }
             let mut id = spec.id;
@@ -599,32 +737,47 @@ impl Coordinator {
             jobs.insert(id, Arc::clone(&state));
             id
         };
-        let inner = Arc::clone(&self.inner);
-        let job_state = Arc::clone(&state);
-        inner.metrics.job_queued(true);
-        let handle = std::thread::spawn(move || {
-            run_job(&inner, id, spec, &job_state, notify);
-        });
-        let mut threads = self.inner.threads.lock().expect("threads poisoned");
-        // reap finished job threads so the handle list stays bounded by
-        // the number of *live* jobs, not the lifetime total
-        threads.retain(|h| !h.is_finished());
-        threads.push(handle);
-        drop(threads);
+        self.inner.job_accepted();
+        self.inner.metrics.job_queued(true);
+        let msg = ExecMsg {
+            id,
+            spec,
+            state: Arc::clone(&state),
+            notify,
+        };
+        let send_err = {
+            let tx = lock_clean(&self.pool_tx);
+            match tx.as_ref() {
+                Some(tx) => tx.send(msg).err(),
+                None => Some(mpsc::SendError(msg)),
+            }
+        };
+        if let Some(mpsc::SendError(msg)) = send_err {
+            // pool unavailable (shutting down): run inline so the handle
+            // still resolves rather than hanging forever in Queued
+            let inner = Arc::clone(&self.inner);
+            run_job(&inner, msg.id, msg.spec, &msg.state, msg.notify);
+            inner.sweep_finished();
+            inner.job_done();
+        }
         JobHandle { id, state }
+    }
+
+    /// Reserve a fresh globally-unique job id. The serve front-end
+    /// numbers every connection's job lines from this one sequence, so
+    /// `wait ID` / `poll ID` can never cross connections on a shared
+    /// coordinator. (Single-connection stdin serve sees the same ids as
+    /// the old per-loop counter: 1, 2, 3, ….)
+    pub fn allocate_job_id(&self) -> u64 {
+        self.inner.next_job_id.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Look up a previously submitted job by id.
     pub fn job(&self, id: u64) -> Option<JobHandle> {
-        self.inner
-            .jobs
-            .lock()
-            .expect("jobs poisoned")
-            .get(&id)
-            .map(|state| JobHandle {
-                id,
-                state: Arc::clone(state),
-            })
+        lock_clean(&self.inner.jobs).get(&id).map(|state| JobHandle {
+            id,
+            state: Arc::clone(state),
+        })
     }
 
     /// Block until job `id` finishes, **consuming its record**: the
@@ -660,21 +813,20 @@ impl Coordinator {
     /// `wait`/`poll`/`cancel` on the id answer `unknown job`; handles
     /// already held keep working (they share the state by `Arc`).
     pub fn forget(&self, id: u64) {
-        self.inner.jobs.lock().expect("jobs poisoned").remove(&id);
+        lock_clean(&self.inner.jobs).remove(&id);
     }
 
-    /// Join every job thread spawned so far (all outcomes are then
-    /// observable without blocking). New submits remain possible.
+    /// Block until every accepted job has published its outcome (all of
+    /// them are then observable without blocking). New submits remain
+    /// possible; ones that land while waiting are waited for too.
     pub fn join_jobs(&self) {
-        let handles: Vec<_> = self
-            .inner
-            .threads
-            .lock()
-            .expect("threads poisoned")
-            .drain(..)
-            .collect();
-        for h in handles {
-            let _ = h.join();
+        let mut pending = lock_clean(&self.inner.pending_jobs);
+        while *pending > 0 {
+            pending = self
+                .inner
+                .all_done
+                .wait(pending)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -715,13 +867,33 @@ impl Coordinator {
     /// Register a built session and answer its facts.
     fn register_session(&self, session: Session) -> SessionInfo {
         let info = session.info();
-        self.inner
-            .sessions
-            .lock()
-            .expect("sessions poisoned")
+        lock_clean(&self.inner.sessions)
             .insert(session.sid, Arc::new(Mutex::new(session)));
         self.inner.metrics.session_open(true);
         info
+    }
+
+    /// Lock one session's state mutex. Unlike the bookkeeping locks, a
+    /// poisoned session mutex means a panic unwound mid-mutation — the
+    /// engine state may be torn, so the session is failed *closed*
+    /// (removed, gauge decremented) and the caller gets an `ERR`; every
+    /// other session and all later requests keep working.
+    fn lock_session<'a>(
+        &self,
+        sid: u64,
+        session: &'a Arc<Mutex<Session>>,
+    ) -> Result<MutexGuard<'a, Session>, String> {
+        match session.lock() {
+            Ok(guard) => Ok(guard),
+            Err(_) => {
+                if lock_clean(&self.inner.sessions).remove(&sid).is_some() {
+                    self.inner.metrics.session_open(false);
+                }
+                Err(format!(
+                    "session {sid} poisoned by an earlier panic; session closed"
+                ))
+            }
+        }
     }
 
     /// Open a stateful session: build the engine (seeded per the spec;
@@ -735,10 +907,7 @@ impl Coordinator {
     }
 
     fn session(&self, sid: u64) -> Result<Arc<Mutex<Session>>, String> {
-        self.inner
-            .sessions
-            .lock()
-            .expect("sessions poisoned")
+        lock_clean(&self.inner.sessions)
             .get(&sid)
             .cloned()
             .ok_or_else(|| format!("unknown session {sid}"))
@@ -750,9 +919,28 @@ impl Coordinator {
     /// Distinct sessions step concurrently; one session serializes.
     pub fn step(&self, sid: u64, n: u32) -> Result<StepInfo, String> {
         let session = self.session(sid)?;
-        let mut s = session.lock().expect("session poisoned");
-        let granted = self.inner.budget.try_acquire(s.workers);
+        let granted = {
+            let s = self.lock_session(sid, &session)?;
+            self.inner.budget.try_acquire(s.workers)
+        };
         self.inner.mirror_budget();
+        let info = self.step_engine(sid, &session, n);
+        self.inner.budget.release(granted);
+        self.inner.mirror_budget();
+        info
+    }
+
+    /// The admission-free step body: sweep `n` generations under the
+    /// session lock with the panic guard, publish progress. Callers
+    /// ([`Coordinator::step`], [`Coordinator::step_many`]) own the
+    /// budget accounting around it.
+    fn step_engine(
+        &self,
+        sid: u64,
+        session: &Arc<Mutex<Session>>,
+        n: u32,
+    ) -> Result<StepInfo, String> {
+        let mut s = self.lock_session(sid, session)?;
         let cells = s.engine.cells();
         let t = Timer::start();
         // panic guard (caught *inside* the lock, so the mutex is never
@@ -764,8 +952,6 @@ impl Coordinator {
             }
         }));
         let elapsed = t.elapsed_s();
-        self.inner.budget.release(granted);
-        self.inner.mirror_budget();
         if let Err(payload) = stepped {
             drop(s);
             let _ = self.close(sid);
@@ -775,7 +961,7 @@ impl Coordinator {
             ));
         }
         s.steps_done += n as u64;
-        let cells_per_s = (cells * n as u64) as f64 / elapsed.max(1e-12);
+        let cells_per_s = safe_rate(cells * n as u64, elapsed);
         self.inner.metrics.record_progress(n as u64, cells_per_s);
         Ok(StepInfo {
             sid,
@@ -787,10 +973,83 @@ impl Coordinator {
         })
     }
 
+    /// Batched stepping: advance many sessions, grouping them by their
+    /// `(fractal, r, engine-kind)` map key so each group steps under one
+    /// admission grant and one budget/metrics mirror — the serving-layer
+    /// analogue of the paper's map amortization (one interned map set,
+    /// many consumers). Results come back in input order; per-session
+    /// failures (unknown sid, poisoned, mid-step panic) are per-entry
+    /// errors, never a batch abort.
+    pub fn step_many(&self, reqs: &[(u64, u32)]) -> Vec<(u64, Result<StepInfo, String>)> {
+        let mut results: Vec<Option<Result<StepInfo, String>>> =
+            reqs.iter().map(|_| None).collect();
+        // (group key) -> indices into reqs; BTreeMap for deterministic
+        // group sweep order
+        let mut groups: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut handles: Vec<Option<(Arc<Mutex<Session>>, usize)>> =
+            Vec::with_capacity(reqs.len());
+        for (i, &(sid, _)) in reqs.iter().enumerate() {
+            match self.session(sid) {
+                Ok(session) => match self.lock_session(sid, &session) {
+                    Ok(s) => {
+                        let key = format!(
+                            "{}|r{}|{:?}",
+                            s.spec.fractal, s.spec.r, s.spec.engine
+                        );
+                        let workers = s.workers;
+                        drop(s);
+                        groups.entry(key).or_default().push(i);
+                        handles.push(Some((session, workers)));
+                    }
+                    Err(e) => {
+                        results[i] = Some(Err(e));
+                        handles.push(None);
+                    }
+                },
+                Err(e) => {
+                    results[i] = Some(Err(e));
+                    handles.push(None);
+                }
+            }
+        }
+        for idxs in groups.values() {
+            let want = idxs
+                .iter()
+                .filter_map(|&i| handles[i].as_ref().map(|(_, w)| *w))
+                .max()
+                .unwrap_or(1);
+            let granted = self.inner.budget.try_acquire(want);
+            self.inner.mirror_budget();
+            for &i in idxs {
+                let (sid, n) = reqs[i];
+                if let Some((session, _)) = &handles[i] {
+                    results[i] = Some(self.step_engine(sid, session, n));
+                }
+            }
+            self.inner.budget.release(granted);
+            self.inner.mirror_budget();
+        }
+        reqs.iter()
+            .zip(results)
+            .map(|(&(sid, _), r)| {
+                (sid, r.unwrap_or_else(|| Err(format!("unknown session {sid}"))))
+            })
+            .collect()
+    }
+
+    /// Advance every open session `n` steps (ascending sid order) in one
+    /// batched sweep. Backs the protocol's `stepall` verb.
+    pub fn step_all(&self, n: u32) -> Vec<(u64, Result<StepInfo, String>)> {
+        let mut sids: Vec<u64> = lock_clean(&self.inner.sessions).keys().copied().collect();
+        sids.sort_unstable();
+        let reqs: Vec<(u64, u32)> = sids.into_iter().map(|sid| (sid, n)).collect();
+        self.step_many(&reqs)
+    }
+
     /// Read session facts plus any cell/region probes.
     pub fn inspect(&self, sid: u64, probes: &[Probe]) -> Result<InspectInfo, String> {
         let session = self.session(sid)?;
-        let mut s = session.lock().expect("session poisoned");
+        let mut s = self.lock_session(sid, &session)?;
         let cells = s.engine.cells();
         let mut results = Vec::with_capacity(probes.len());
         for &probe in probes {
@@ -845,7 +1104,7 @@ impl Coordinator {
     /// Export session `sid`'s full canonical state.
     pub fn snapshot(&self, sid: u64) -> Result<SessionSnapshot, String> {
         let session = self.session(sid)?;
-        let s = session.lock().expect("session poisoned");
+        let s = self.lock_session(sid, &session)?;
         Ok(SessionSnapshot {
             spec: s.spec.clone(),
             steps_done: s.steps_done,
@@ -885,15 +1144,15 @@ impl Coordinator {
 
     /// Close a session, returning its final facts.
     pub fn close(&self, sid: u64) -> Result<SessionInfo, String> {
-        let session = self
-            .inner
-            .sessions
-            .lock()
-            .expect("sessions poisoned")
+        let session = lock_clean(&self.inner.sessions)
             .remove(&sid)
             .ok_or_else(|| format!("unknown session {sid}"))?;
         self.inner.metrics.session_open(false);
-        let s = session.lock().expect("session poisoned");
+        // already removed + gauge decremented: a poisoned state mutex
+        // here just means the final facts are unreadable
+        let s = session
+            .lock()
+            .map_err(|_| format!("session {sid} poisoned by an earlier panic; session closed"))?;
         Ok(s.info())
     }
 
@@ -926,6 +1185,7 @@ impl Coordinator {
                 Ok(info) => Response::Stepped(info),
                 Err(message) => Response::Error { id: sid, message },
             },
+            Request::StepAll { n } => Response::BatchStepped(self.step_all(n)),
             Request::Inspect { sid, probes } => match self.inspect(sid, &probes) {
                 Ok(info) => Response::Inspected(info),
                 Err(message) => Response::Error { id: sid, message },
@@ -946,6 +1206,20 @@ impl Coordinator {
                 Err(message) => Response::Error { id: sid, message },
             },
             Request::Metrics => Response::Metrics(self.inner.metrics.snapshot()),
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    /// Close the queue and join the pool: executors drain whatever was
+    /// already enqueued (handles held by callers still resolve), then
+    /// exit on the channel's disconnect. No thread outlives the
+    /// coordinator.
+    fn drop(&mut self) {
+        *lock_clean(&self.pool_tx) = None;
+        let workers: Vec<_> = lock_clean(&self.pool).drain(..).collect();
+        for h in workers {
+            let _ = h.join();
         }
     }
 }
@@ -974,7 +1248,7 @@ fn run_job(
             inner.metrics.job_inflight(true);
             inner.mirror_budget();
             inner.metrics.job_started();
-            *state.phase.lock().expect("job state poisoned") = JobPhase::Running;
+            *lock_clean(&state.phase) = JobPhase::Running;
             let mut run_spec = spec.clone();
             run_spec.workers = granted;
             // panic guard: an engine invariant failure must become a
@@ -1017,7 +1291,7 @@ fn run_job(
     }
     state.finish(outcome);
     if notified {
-        inner.jobs.lock().expect("jobs poisoned").remove(&id);
+        lock_clean(&inner.jobs).remove(&id);
     }
 }
 
@@ -1049,7 +1323,7 @@ fn run_job_body(inner: &CoordInner, spec: &JobSpec, state: &JobState) -> JobOutc
     let t = Timer::start();
     let publish = |done: u32, batch: u32| {
         state.steps_done.store(done, Ordering::Relaxed);
-        let cells_per_s = (cells * done as u64) as f64 / t.elapsed_s().max(1e-12);
+        let cells_per_s = safe_rate(cells * done as u64, t.elapsed_s());
         state
             .cells_per_s_bits
             .store(cells_per_s.to_bits(), Ordering::Relaxed);
@@ -1071,4 +1345,185 @@ fn run_job_body(inner: &CoordInner, spec: &JobSpec, state: &JobState) -> JobOutc
         }
     }
     JobOutcome::Done(job_result(spec, engine.as_ref(), t.elapsed_s()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(line: &str) -> JobSpec {
+        JobSpec::parse_line(0, line).expect("valid job line")
+    }
+
+    /// Poison a mutex on purpose: panic while holding its guard, catch
+    /// the unwind. The guard's drop during the unwind marks the lock.
+    fn poison<T>(m: &Mutex<T>) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("deliberate poison");
+        }));
+        assert!(m.is_poisoned());
+    }
+
+    #[test]
+    fn poisoned_bookkeeping_locks_recover() {
+        let coord = Coordinator::new(2);
+        poison(&coord.inner.jobs);
+        poison(&coord.inner.budget.in_use);
+        poison(&coord.inner.sessions);
+        // every later request still works: submit/wait, open/step/close
+        let r = coord
+            .wait(coord.submit(spec("engine=squeeze:4 r=4 steps=2 workers=1")).id())
+            .expect("job survives poisoned bookkeeping locks");
+        assert_eq!(r.steps, 2);
+        let s = coord.open(spec("engine=squeeze:4 r=4 workers=1")).unwrap();
+        assert!(coord.step(s.sid, 1).is_ok());
+        assert!(coord.close(s.sid).is_ok());
+        // budget accounting stayed consistent through the recovery
+        assert_eq!(coord.inner.budget.occupancy().0, 0);
+    }
+
+    #[test]
+    fn panicking_job_fails_and_next_request_succeeds() {
+        let coord = Coordinator::new(2);
+        // lambda skips rho validation and r=33 trips the MapCtx level
+        // assert *inside the shared cache lock* — the worst case the
+        // old `.expect("… poisoned")` cascade turned into process death
+        let bad = coord.submit(spec("engine=lambda r=33 steps=1 workers=1"));
+        let err = bad.wait().expect_err("level-33 job must fail");
+        assert!(err.contains("panicked"), "{err}");
+        // the executor pool and the map cache both survived: a normal
+        // job (same cache) and a session still succeed
+        let ok = coord
+            .wait(coord.submit(spec("engine=squeeze:4 r=4 steps=2 workers=1")).id())
+            .expect("job after a panicked job");
+        assert_eq!(ok.steps, 2);
+        let s = coord.open(spec("engine=squeeze:4 r=4 workers=1")).unwrap();
+        assert!(coord.step(s.sid, 1).is_ok());
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.completed, 1);
+        assert_eq!((snap.jobs_inflight, snap.jobs_queued), (0, 0));
+    }
+
+    #[test]
+    fn poisoned_session_fails_closed_and_others_survive() {
+        let coord = Coordinator::new(2);
+        let a = coord.open(spec("engine=squeeze:4 r=4 seed=1 workers=1")).unwrap();
+        let b = coord.open(spec("engine=squeeze:4 r=4 seed=2 workers=1")).unwrap();
+        poison(&coord.session(a.sid).unwrap());
+        // the poisoned session degrades to one ERR and is failed closed
+        let err = coord.step(a.sid, 1).expect_err("poisoned session must error");
+        assert!(err.contains("poisoned"), "{err}");
+        let err2 = coord.step(a.sid, 1).expect_err("session is gone");
+        assert!(err2.contains("unknown session"), "{err2}");
+        // its sibling and the gauges are untouched
+        assert!(coord.step(b.sid, 1).is_ok());
+        assert_eq!(coord.metrics().snapshot().sessions_open, 1);
+    }
+
+    #[test]
+    fn step_many_batches_match_serial_stepping() {
+        let mk = |seed: u64, engine: &str| {
+            spec(&format!("engine={engine} r=4 density=0.4 seed={seed} workers=1"))
+        };
+        // serial reference: step each session one by one
+        let serial = Coordinator::new(2);
+        let mut want = Vec::new();
+        for (seed, engine) in [(1, "squeeze:4"), (2, "squeeze:4"), (1, "squeeze-bits:4")] {
+            let s = serial.open(mk(seed, engine)).unwrap();
+            let info = serial.step(s.sid, 3).unwrap();
+            want.push((info.state_hash, info.population, info.steps_done));
+        }
+        // batched: same three sessions through one step_many sweep (the
+        // two squeeze:4 sessions share a map-key group)
+        let batched = Coordinator::new(2);
+        let mut sids = Vec::new();
+        for (seed, engine) in [(1, "squeeze:4"), (2, "squeeze:4"), (1, "squeeze-bits:4")] {
+            sids.push(batched.open(mk(seed, engine)).unwrap().sid);
+        }
+        let reqs: Vec<(u64, u32)> = sids.iter().map(|&sid| (sid, 3)).collect();
+        let got = batched.step_many(&reqs);
+        assert_eq!(got.len(), 3);
+        for (i, (sid, res)) in got.iter().enumerate() {
+            assert_eq!(*sid, sids[i], "results keep input order");
+            let info = res.as_ref().expect("batched step succeeds");
+            assert_eq!(
+                (info.state_hash, info.population, info.steps_done),
+                want[i],
+                "batched stepping diverged from serial at session {sid}"
+            );
+        }
+        // unknown sids are per-entry errors, not batch aborts
+        let mixed = batched.step_many(&[(sids[0], 1), (999, 1)]);
+        assert!(mixed[0].1.is_ok());
+        assert!(mixed[1].1.as_ref().unwrap_err().contains("unknown session"));
+    }
+
+    #[test]
+    fn step_all_sweeps_every_session_in_sid_order() {
+        let coord = Coordinator::new(2);
+        let a = coord.open(spec("engine=squeeze:4 r=4 seed=1 workers=1")).unwrap();
+        let b = coord.open(spec("engine=squeeze-bits:4 r=4 seed=1 workers=1")).unwrap();
+        let results = coord.step_all(2);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].0, a.sid.min(b.sid));
+        assert_eq!(results[1].0, a.sid.max(b.sid));
+        for (_, r) in &results {
+            assert_eq!(r.as_ref().unwrap().steps_done, 2);
+        }
+        // same seed + rule: byte and bit-planar layouts stay in lockstep
+        assert_eq!(
+            results[0].1.as_ref().unwrap().state_hash,
+            results[1].1.as_ref().unwrap().state_hash
+        );
+        // the typed dispatch surfaces the batch too
+        match coord.handle(Request::StepAll { n: 1 }) {
+            Response::BatchStepped(batch) => {
+                assert_eq!(batch.len(), 2);
+                assert!(batch.iter().all(|(_, r)| r.is_ok()));
+            }
+            other => panic!("expected BatchStepped, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn pool_drains_queue_on_drop_and_handles_stay_valid() {
+        let handles: Vec<JobHandle> = {
+            let coord = Coordinator::new(1);
+            (0..4)
+                .map(|i| {
+                    coord.submit(spec(&format!(
+                        "engine=squeeze:4 r=4 steps=2 seed={i} workers=1"
+                    )))
+                })
+                .collect()
+            // drop joins the pool: queued jobs still run to completion
+        };
+        for h in handles {
+            assert!(h.wait().is_ok(), "job {} lost by shutdown", h.id());
+        }
+    }
+
+    #[test]
+    fn join_jobs_observes_all_outcomes_without_blocking_later() {
+        let coord = Coordinator::new(2);
+        let ids: Vec<u64> = (0..5)
+            .map(|i| {
+                coord
+                    .submit(spec(&format!(
+                        "engine=squeeze:4 r=4 steps=3 seed={i} workers=1"
+                    )))
+                    .id()
+            })
+            .collect();
+        coord.join_jobs();
+        assert_eq!(*lock_clean(&coord.inner.pending_jobs), 0);
+        for id in ids {
+            match coord.poll(id).unwrap() {
+                JobStatus::Done(r) => assert_eq!(r.steps, 3),
+                other => panic!("job {id} not done after join_jobs: {other:?}"),
+            }
+        }
+    }
 }

@@ -54,6 +54,18 @@ pub struct Metrics {
     progress_steps: AtomicU64,
     /// Most recent progress event's throughput, cells/sec (f64 bits).
     progress_cells_per_s_bits: AtomicU64,
+    /// Map-cache LRU gauges mirrored alongside hit/miss: entries evicted
+    /// under the byte budget, and bytes currently resident.
+    map_cache_evictions: AtomicU64,
+    map_cache_resident_bytes: AtomicU64,
+    /// Protocol requests served (one per handled line/verb).
+    requests: AtomicU64,
+    /// Request-latency histogram: bucket `i` counts requests that took
+    /// `[2^i, 2^{i+1})` microseconds (bucket 0 also absorbs sub-µs;
+    /// bucket 31 absorbs everything ≥ ~36 minutes). 32 log2 buckets
+    /// cover the whole plausible range and keep recording to one
+    /// atomic increment on the serve hot path.
+    req_latency_us: [AtomicU64; 32],
 }
 
 /// A point-in-time copy of the counters.
@@ -78,6 +90,12 @@ pub struct MetricsSnapshot {
     pub budget_total: u64,
     pub progress_steps: u64,
     pub progress_cells_per_s: f64,
+    pub map_cache_evictions: u64,
+    pub map_cache_resident_bytes: u64,
+    pub requests: u64,
+    /// Conservative (upper bucket edge) request-latency quantiles, µs.
+    pub req_p50_us: u64,
+    pub req_p99_us: u64,
 }
 
 impl Metrics {
@@ -135,11 +153,35 @@ impl Metrics {
     }
 
     /// One progress event: `steps` more steps completed at `cells_per_s`
-    /// observed throughput (jobs and sessions alike).
+    /// observed throughput (jobs and sessions alike). Non-finite or
+    /// negative rates (a zero-length interval slipped past a caller's
+    /// clamp) are recorded as 0.0 so the metrics dump never emits
+    /// `inf`/`NaN`.
     pub fn record_progress(&self, steps: u64, cells_per_s: f64) {
+        let rate = if cells_per_s.is_finite() {
+            cells_per_s.max(0.0)
+        } else {
+            0.0
+        };
         self.progress_steps.fetch_add(steps, Ordering::Relaxed);
         self.progress_cells_per_s_bits
-            .store(cells_per_s.to_bits(), Ordering::Relaxed);
+            .store(rate.to_bits(), Ordering::Relaxed);
+    }
+
+    /// One protocol request served in `seconds` (serve front-end latency).
+    pub fn record_request(&self, seconds: f64) {
+        let us = if seconds.is_finite() {
+            (seconds.max(0.0) * 1e6) as u64
+        } else {
+            0
+        };
+        let bucket = if us <= 1 {
+            0
+        } else {
+            ((63 - us.leading_zeros()) as usize).min(31)
+        };
+        self.req_latency_us[bucket].fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Mirror the shared map-cache counters (called after each job —
@@ -148,6 +190,10 @@ impl Metrics {
     pub fn record_map_cache(&self, stats: CacheStats) {
         self.map_cache_hits.store(stats.hits, Ordering::Relaxed);
         self.map_cache_misses.store(stats.misses, Ordering::Relaxed);
+        self.map_cache_evictions
+            .store(stats.evictions, Ordering::Relaxed);
+        self.map_cache_resident_bytes
+            .store(stats.resident_bytes, Ordering::Relaxed);
     }
 
     /// Record a finished sharded job's decomposition gauges.
@@ -162,6 +208,11 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let mut counts = [0u64; 32];
+        for (i, b) in self.req_latency_us.iter().enumerate() {
+            counts[i] = b.load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             started: self.started.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -186,8 +237,30 @@ impl Metrics {
             progress_cells_per_s: f64::from_bits(
                 self.progress_cells_per_s_bits.load(Ordering::Relaxed),
             ),
+            map_cache_evictions: self.map_cache_evictions.load(Ordering::Relaxed),
+            map_cache_resident_bytes: self.map_cache_resident_bytes.load(Ordering::Relaxed),
+            requests,
+            req_p50_us: latency_quantile_us(&counts, requests, 0.50),
+            req_p99_us: latency_quantile_us(&counts, requests, 0.99),
         }
     }
+}
+
+/// Smallest bucket upper edge (µs) whose cumulative count reaches the
+/// `q` quantile. 0 when no requests were recorded.
+fn latency_quantile_us(counts: &[u64; 32], total: u64, q: f64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return 1u64 << (i as u32 + 1);
+        }
+    }
+    1u64 << 32
 }
 
 impl MetricsSnapshot {
@@ -205,6 +278,8 @@ impl MetricsSnapshot {
         CacheStats {
             hits: self.map_cache_hits,
             misses: self.map_cache_misses,
+            evictions: self.map_cache_evictions,
+            resident_bytes: self.map_cache_resident_bytes,
         }
         .hit_rate()
     }
@@ -255,6 +330,16 @@ impl MetricsSnapshot {
             self.progress_steps,
             self.progress_cells_per_s,
         ));
+        // serve front-end gauges (appended after the multiplexer section
+        // so existing parsers keep their field offsets)
+        line.push_str(&format!(
+            " cache_resident={}B cache_evictions={} requests={} req_p50_us={} req_p99_us={}",
+            self.map_cache_resident_bytes,
+            self.map_cache_evictions,
+            self.requests,
+            self.req_p50_us,
+            self.req_p99_us,
+        ));
         line
     }
 }
@@ -288,14 +373,71 @@ mod tests {
     #[test]
     fn map_cache_gauges_mirror_stats() {
         let m = Metrics::default();
-        m.record_map_cache(CacheStats { hits: 3, misses: 1 });
+        m.record_map_cache(CacheStats {
+            hits: 3,
+            misses: 1,
+            evictions: 2,
+            resident_bytes: 4096,
+        });
         let s = m.snapshot();
         assert_eq!((s.map_cache_hits, s.map_cache_misses), (3, 1));
+        assert_eq!((s.map_cache_evictions, s.map_cache_resident_bytes), (2, 4096));
         assert!((s.map_cache_hit_rate() - 0.75).abs() < 1e-12);
         assert!(s.to_line().contains("map_cache=3/4"), "{}", s.to_line());
+        assert!(s.to_line().contains("cache_resident=4096B"), "{}", s.to_line());
+        assert!(s.to_line().contains("cache_evictions=2"), "{}", s.to_line());
         // gauges are absolute: re-recording overwrites
-        m.record_map_cache(CacheStats { hits: 10, misses: 2 });
+        m.record_map_cache(CacheStats {
+            hits: 10,
+            misses: 2,
+            ..Default::default()
+        });
         assert_eq!(m.snapshot().map_cache_hits, 10);
+    }
+
+    #[test]
+    fn request_latency_quantiles_are_conservative_and_finite() {
+        let m = Metrics::default();
+        // empty histogram: quantiles report 0, line renders zeros
+        let s0 = m.snapshot();
+        assert_eq!((s0.requests, s0.req_p50_us, s0.req_p99_us), (0, 0, 0));
+        // 99 fast requests (~8 µs) and one slow (~2 ms)
+        for _ in 0..99 {
+            m.record_request(8e-6);
+        }
+        m.record_request(2e-3);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        // p50 lands in the 8 µs bucket → upper edge 16 µs
+        assert_eq!(s.req_p50_us, 16);
+        // p99 must reach the fast mass's edge but not beyond the slow tail
+        assert!(s.req_p50_us <= s.req_p99_us);
+        assert!(s.req_p99_us <= 4096, "{}", s.req_p99_us);
+        let line = s.to_line();
+        assert!(line.contains("requests=100"), "{line}");
+        assert!(line.contains("req_p50_us=16"), "{line}");
+        // zero-duration and pathological inputs never panic or skew
+        m.record_request(0.0);
+        m.record_request(-1.0);
+        m.record_request(f64::INFINITY);
+        m.record_request(f64::NAN);
+        assert_eq!(m.snapshot().requests, 104);
+    }
+
+    #[test]
+    fn non_finite_progress_rates_are_clamped() {
+        let m = Metrics::default();
+        m.record_progress(1, f64::INFINITY);
+        assert_eq!(m.snapshot().progress_cells_per_s, 0.0);
+        m.record_progress(1, f64::NAN);
+        assert_eq!(m.snapshot().progress_cells_per_s, 0.0);
+        m.record_progress(1, -5.0);
+        assert_eq!(m.snapshot().progress_cells_per_s, 0.0);
+        m.record_progress(1, 123.0);
+        assert_eq!(m.snapshot().progress_cells_per_s, 123.0);
+        assert_eq!(m.snapshot().progress_steps, 4);
+        let line = m.snapshot().to_line();
+        assert!(!line.contains("=inf") && !line.contains("NaN"), "{line}");
     }
 
     #[test]

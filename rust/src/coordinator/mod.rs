@@ -1,19 +1,24 @@
 //! L3 coordinator: the typed async API ([`api::Coordinator`] — job
 //! handles, streaming progress, stateful snapshot/restore sessions), the
-//! v1 line-protocol adapter over it ([`service::serve`]), job wire types,
-//! the legacy scheduler shim, and aggregate metrics. This is the layer a
-//! deployment talks to; it owns process topology and never calls Python.
+//! v1 line-protocol adapter over it ([`service::serve`]), the TCP/Unix
+//! socket front-end running that protocol per connection over one shared
+//! coordinator ([`listener::SocketServer`]), job wire types, the legacy
+//! scheduler shim, and aggregate metrics. This is the layer a deployment
+//! talks to; it owns process topology and never calls Python.
 
 pub mod api;
 pub mod job;
+pub mod listener;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
 
 pub use api::{
-    Coordinator, InspectInfo, JobHandle, JobProgress, JobStatus, Probe, ProbeResult, Request,
-    Response, SessionInfo, SessionSnapshot, StepInfo, PROTOCOL_VERSION,
+    Coordinator, CoordinatorConfig, InspectInfo, JobHandle, JobProgress, JobStatus, Probe,
+    ProbeResult, Request, Response, SessionInfo, SessionSnapshot, StepInfo, PROTOCOL_VERSION,
 };
 pub use job::{JobResult, JobSpec};
+pub use listener::SocketServer;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{execute_job, execute_job_with_cache, Scheduler};
+pub use service::{serve, serve_session};

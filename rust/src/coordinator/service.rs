@@ -29,11 +29,24 @@
 //!   `open KEY=VAL...`  open a stateful session (job grammar; `steps=`
 //!                      ignored) → `SESSION <sid> open ...`.
 //!   `step SID [N]`     advance N (default 1) steps → population/hash.
+//!   `stepall [N]`      advance every open session N steps in one
+//!                      batched sweep (sessions sharing a map key step
+//!                      under one admission grant) → `BATCH ...`.
 //!   `inspect SID [cell=I] [at=X,Y] [region=A:B]`
 //!                      facts + ν-mapped probes.
 //!   `snapshot SID`     full canonical state as one token.
 //!   `restore TOKEN`    bit-identical resume into a fresh session.
 //!   `close SID`        final facts, session removed.
+//!
+//! Multi-connection serving: [`serve_session`] runs the same loop over
+//! one connection's stream against a **shared** [`Coordinator`] — the
+//! socket front-end (`coordinator::listener`) runs one per accepted
+//! connection, so sessions, jobs, the map cache, and the executor pool
+//! are all shared process-wide while each connection keeps its own
+//! `async=` mode and line numbering draws from one global id sequence.
+//! The classic stdin [`serve`] is a thin wrapper: a private coordinator,
+//! one `serve_session`, then join + a final metrics line — byte-for-byte
+//! the historical output.
 
 use std::io::{BufRead, Write};
 
@@ -41,6 +54,7 @@ use super::api::{
     Coordinator, JobStatus, Probe, Request, Response, SessionSnapshot, PROTOCOL_VERSION,
 };
 use super::job::{JobResult, JobSpec};
+use crate::util::timer::Timer;
 
 /// Everything the protocol accepts, answered by the `help` verb.
 const HELP: &str = "\
@@ -49,8 +63,9 @@ shards=[auto:]N packed=0/1 overlap=0/1 compact=0/1
 # engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS] | \
 squeeze-bits[:RHO[:SHARDS]]
 # verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
-inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | close SID | \
-metrics | help | quit";
+stepall [N] | inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | \
+close SID | metrics | help | quit
+# serve knobs (CLI): --listen ADDR (tcp host:port or unix:PATH) --budget N --pool N --cache-mb MB";
 
 /// Run the service until EOF or `quit`. One session-scoped
 /// [`Coordinator`] multiplexes every job and session over a shared
@@ -59,12 +74,32 @@ metrics | help | quit";
 /// to submit-only.
 pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()> {
     let coord = Coordinator::new(crate::util::pool::default_workers().max(2));
+    serve_session(&coord, input, &mut output)?;
+    // async jobs may still be in flight: join them so the final summary
+    // (and the process exit) observes every outcome
+    coord.join_jobs();
+    let metrics = coord.metrics();
+    metrics.record_map_cache(coord.map_cache().stats());
+    writeln!(output, "# {}", metrics.snapshot().to_line())?;
+    Ok(())
+}
+
+/// Serve one connection's request stream against a shared
+/// [`Coordinator`] until EOF or `quit`. This is the per-connection body
+/// of the socket front-end: no join on exit (other connections' jobs
+/// keep running) and no final metrics dump (`metrics` is a verb). Job
+/// lines are numbered from the coordinator's global id sequence so
+/// `wait ID` is unambiguous across connections.
+pub fn serve_session(
+    coord: &Coordinator,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> std::io::Result<()> {
     let metrics = coord.metrics();
     let cache = coord.map_cache();
     writeln!(output, "# squeeze coordinator ready")?;
     writeln!(output, "# protocol={PROTOCOL_VERSION}")?;
     writeln!(output, "# {}", JobResult::tsv_header())?;
-    let mut next_id = 1u64;
     let mut async_mode = false;
     for line in input.lines() {
         let line = line?;
@@ -101,6 +136,7 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
         }
         let verb = trimmed.split_whitespace().next().unwrap_or("");
         if let Some(req) = parse_verb(verb, trimmed) {
+            let t = Timer::start();
             match req {
                 Ok(req) => {
                     let line = render(coord.handle(req));
@@ -108,14 +144,15 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
                 }
                 Err(msg) => writeln!(output, "ERR 0 {msg}")?,
             }
+            metrics.record_request(t.elapsed_s());
             metrics.record_map_cache(cache.stats());
             output.flush()?;
             continue;
         }
         // a v1 job line: parse, then submit + wait (sync) or submit
         // (async) through the typed API
-        let id = next_id;
-        next_id += 1;
+        let t = Timer::start();
+        let id = coord.allocate_job_id();
         if !verb.contains('=') {
             writeln!(
                 output,
@@ -146,14 +183,10 @@ pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()>
         // mirror the cache gauges on every request — error paths
         // included, so the reported hit-rate never drifts behind
         // lookups a failed job performed
+        metrics.record_request(t.elapsed_s());
         metrics.record_map_cache(cache.stats());
         output.flush()?;
     }
-    // async jobs may still be in flight: join them so the final summary
-    // (and the process exit) observes every outcome
-    coord.join_jobs();
-    metrics.record_map_cache(cache.stats());
-    writeln!(output, "# {}", metrics.snapshot().to_line())?;
     Ok(())
 }
 
@@ -186,6 +219,13 @@ fn parse_verb(verb: &str, line: &str) -> Option<Result<Request, String>> {
                 None => 1,
             };
             Ok(Request::Step { sid, n })
+        })(),
+        "stepall" => (|| {
+            let n = match rest.split_whitespace().next() {
+                Some(t) => t.parse::<u32>().map_err(|_| format!("bad step count {t:?}"))?,
+                None => 1,
+            };
+            Ok(Request::StepAll { n })
         })(),
         "inspect" => (|| {
             let mut toks = rest.split_whitespace();
@@ -264,6 +304,32 @@ fn render(resp: Response) -> String {
             info.state_hash,
             info.cells_per_s
         ),
+        Response::BatchStepped(results) => {
+            // one line for the whole sweep: counts plus an FNV-1a fold
+            // of the per-session (sid, hash) pairs in sid order, so two
+            // runs agree on this line iff every session's state agrees
+            let mut sessions = 0u64;
+            let mut errors = 0u64;
+            let mut population = 0u64;
+            let mut combined = 0xcbf2_9ce4_8422_2325u64;
+            for (sid, r) in &results {
+                sessions += 1;
+                match r {
+                    Ok(info) => {
+                        population += info.population;
+                        for word in [*sid, info.state_hash] {
+                            combined ^= word;
+                            combined = combined.wrapping_mul(0x0000_0100_0000_01b3);
+                        }
+                    }
+                    Err(_) => errors += 1,
+                }
+            }
+            format!(
+                "BATCH stepped sessions={sessions} errors={errors} \
+                 population={population} hash={combined:#018x}"
+            )
+        }
         Response::Inspected(info) => {
             let mut line = format!(
                 "INSPECT {} engine={} cells={} steps={} population={} hash={:#018x}",
@@ -364,7 +430,14 @@ mod tests {
         let out = run_session("help\nquit\n");
         assert!(out.starts_with("# squeeze coordinator ready"), "{out}");
         assert!(out.contains("# protocol=v2"), "{out}");
-        for needle in ["snapshot SID", "restore TOKEN", "async=0/1", "shards=[auto:]N"] {
+        for needle in [
+            "snapshot SID",
+            "restore TOKEN",
+            "async=0/1",
+            "shards=[auto:]N",
+            "stepall [N]",
+            "--listen ADDR",
+        ] {
             assert!(out.contains(needle), "help is missing {needle:?}: {out}");
         }
     }
@@ -438,6 +511,82 @@ mod tests {
         let closed2 = out2.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
         assert!(closed2.contains("steps=5"), "{out2}");
         assert!(closed2.contains(&format!("hash={job_hash}")), "{out2}");
+    }
+
+    #[test]
+    fn stepall_matches_stepping_each_session_individually() {
+        let out = run_session(
+            "open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             open engine=squeeze:4 r=4 workers=1 seed=3\n\
+             stepall 3\n\
+             close 1\nclose 2\nquit\n",
+        );
+        assert!(!out.contains("ERR"), "{out}");
+        let batch = out.lines().find(|l| l.starts_with("BATCH stepped")).unwrap();
+        assert!(batch.contains("sessions=2"), "{out}");
+        assert!(batch.contains("errors=0"), "{out}");
+        let serial = run_session(
+            "open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             open engine=squeeze:4 r=4 workers=1 seed=3\n\
+             step 1 3\nstep 2 3\n\
+             close 1\nclose 2\nquit\n",
+        );
+        let closed = |o: &str, sid: u64| {
+            o.lines()
+                .find(|l| l.starts_with(&format!("CLOSED {sid}")))
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(closed(&out, 1), closed(&serial, 1), "{out}\n{serial}");
+        assert_eq!(closed(&out, 2), closed(&serial, 2), "{out}\n{serial}");
+    }
+
+    #[test]
+    fn connections_share_sessions_and_job_ids_on_one_coordinator() {
+        let coord = Coordinator::new(2);
+        let mut out1 = Vec::new();
+        serve_session(
+            &coord,
+            "engine=squeeze:4 r=4 steps=1 workers=1\n\
+             open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             step 1 2\n"
+                .as_bytes(),
+            &mut out1,
+        )
+        .unwrap();
+        let out1 = String::from_utf8(out1).unwrap();
+        assert!(!out1.contains("ERR"), "{out1}");
+        // second "connection": the session opened by the first is live,
+        // and its job line draws the next id from the shared sequence
+        let mut out2 = Vec::new();
+        serve_session(
+            &coord,
+            "engine=squeeze:4 r=4 steps=1 workers=1\n\
+             step 1 3\nclose 1\nquit\n"
+                .as_bytes(),
+            &mut out2,
+        )
+        .unwrap();
+        let out2 = String::from_utf8(out2).unwrap();
+        assert!(!out2.contains("ERR"), "{out2}");
+        let closed = out2.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+        assert!(closed.contains("steps=5"), "{out2}");
+        let row2 = out2
+            .lines()
+            .find(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+            .unwrap();
+        assert!(row2.starts_with("2\t"), "job id not global: {out2}");
+    }
+
+    #[test]
+    fn tiny_one_step_job_reports_finite_rate_gauges() {
+        // a 1-step job this small finishes inside the timer's
+        // resolution — the metrics dump must still be inf/NaN-free
+        let out = run_session("engine=squeeze r=3 steps=1 workers=1\nmetrics\nquit\n");
+        assert!(!out.contains("=inf"), "{out}");
+        assert!(!out.contains("NaN"), "{out}");
+        assert!(out.contains("completed=1"), "{out}");
+        assert!(out.contains("requests="), "{out}");
     }
 
     #[test]

@@ -13,7 +13,9 @@
 //!   perf       hot-path microbenchmarks (§Perf log input)
 
 use squeeze::ca::{EngineKind, Rule};
-use squeeze::coordinator::{execute_job, service, JobResult, JobSpec};
+use squeeze::coordinator::{
+    execute_job, service, CoordinatorConfig, JobResult, JobSpec, SocketServer,
+};
 use squeeze::fractal::{catalog, expanded, Coord};
 use squeeze::harness::{figures, BenchOpts};
 use squeeze::maps::{lambda_linear, nu, MapCtx};
@@ -33,7 +35,7 @@ fn main() {
     };
     let code = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
-        Some("serve") => cmd_serve(),
+        Some("serve") => cmd_serve(&args),
         Some("gallery") => cmd_gallery(&args),
         Some("validate") => cmd_validate(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -69,8 +71,11 @@ fn usage(cmd: Option<&str>) {
          commands:\n  \
          run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n             \
          (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])\n  \
-         serve      (reads v1 job lines + v2 verbs from stdin; type 'help' in a session,\n             \
-         or see coordinator::service / coordinator::api)\n  \
+         serve      (v1 job lines + v2 verbs; stdin/stdout by default, or a socket\n             \
+         front-end with --listen HOST:PORT | --listen unix:PATH — every connection\n             \
+         shares one coordinator. Knobs: --budget N worker permits, --pool N executor\n             \
+         threads [0=auto], --cache-mb MB map-cache LRU budget [0=unbounded].\n             \
+         Type 'help' in a session, or see coordinator::{{service,listener,api}})\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
          artifacts  --dir artifacts [--check]\n  \
@@ -114,10 +119,48 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve() -> Result<(), String> {
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    service::serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string())
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let listen = args.get_or("listen", "");
+    if listen.is_empty() {
+        // classic mode: one session over stdin/stdout
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        return service::serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string());
+    }
+    let budget = args
+        .get_u64(
+            "budget",
+            squeeze::util::pool::default_workers().max(2) as u64,
+        )
+        .map_err(|e| e.to_string())? as usize;
+    let pool = args.get_u64("pool", 0).map_err(|e| e.to_string())? as usize;
+    let cache_mb = args.get_u64("cache-mb", 0).map_err(|e| e.to_string())?;
+    let config = CoordinatorConfig {
+        budget,
+        pool_threads: pool,
+        cache_bytes: if cache_mb == 0 {
+            None
+        } else {
+            Some(cache_mb << 20)
+        },
+    };
+    let server = SocketServer::bind(&listen, config).map_err(|e| e.to_string())?;
+    eprintln!(
+        "# squeeze listening on {} (budget={budget} pool={} cache-mb={})",
+        server.endpoint(),
+        if pool == 0 {
+            "auto".to_string()
+        } else {
+            pool.to_string()
+        },
+        if cache_mb == 0 {
+            "unbounded".to_string()
+        } else {
+            cache_mb.to_string()
+        },
+    );
+    server.join();
+    Ok(())
 }
 
 fn cmd_gallery(args: &Args) -> Result<(), String> {
@@ -278,7 +321,7 @@ pub fn squeeze_e2e(dir: &str, name: &str, steps: u32) -> Result<String, String> 
     Ok(format!(
         "e2e OK: {name} × {total_steps} steps  PJRT {} ({:.3e} upd/s)  native {}  population {pjrt_pop} == {native_pop}",
         human_secs(pjrt_s),
-        (cells * total_steps as u64) as f64 / pjrt_s,
+        (cells * total_steps as u64) as f64 / pjrt_s.max(1e-9),
         human_secs(native_s),
     ))
 }
@@ -363,8 +406,8 @@ fn cmd_perf(args: &Args) -> Result<(), String> {
     std::hint::black_box((acc, acc2));
     println!(
         "maps at r={r}: λ {:.1} Meval/s, ν {:.1} Meval/s (single thread)",
-        samples as f64 / lam_s / 1e6,
-        samples as f64 / nu_s / 1e6
+        samples as f64 / lam_s.max(1e-9) / 1e6,
+        samples as f64 / nu_s.max(1e-9) / 1e6
     );
 
     // step throughput per engine
@@ -390,7 +433,7 @@ fn cmd_perf(args: &Args) -> Result<(), String> {
             p.engine,
             p.r,
             human_secs(p.per_step_s),
-            p.cells as f64 / p.per_step_s,
+            p.cells as f64 / p.per_step_s.max(1e-9),
             human_bytes(p.memory_bytes)
         );
     }

@@ -18,10 +18,22 @@
 //! keys also serialize; builds are one-time and amortized, so per-key
 //! locking (an `Arc<OnceLock>` per entry) is deliberately deferred until
 //! a workload shows the contention.
+//!
+//! **Eviction.** A cache built with [`MapCache::with_budget`] enforces a
+//! byte budget with LRU eviction: every lookup stamps the entry with a
+//! monotonic tick, and an insert that pushes residency over budget
+//! evicts least-recently-used entries (never the entry being returned)
+//! until it fits. Eviction is safe by construction: entries are `Arc`s,
+//! so engines already holding a bundle keep it alive, and a re-built
+//! bundle is bit-identical because the maps are pure functions of the
+//! key. [`MapCache::new`] keeps the historical unbounded behavior —
+//! residency bounded by key diversity — which is fine for the catalog ×
+//! practical levels; a serve front-end exposed to unbounded
+//! client-chosen levels should set a budget.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use super::block::{BlockCtx, BlockError};
 use super::ctx::MapCtx;
@@ -50,6 +62,21 @@ impl ThreadMaps {
         let lambda_table = LambdaTable::new(&ctx);
         ThreadMaps { ctx, lambda_table }
     }
+
+    /// Approximate bytes pinned by this bundle (LRU accounting).
+    pub fn bytes(&self) -> u64 {
+        ctx_bytes(&self.ctx) + self.lambda_table.bytes()
+    }
+}
+
+/// Approximate heap + inline bytes of one `MapCtx` (LRU accounting; the
+/// per-level vectors and the flattened `H_ν` table dominate).
+fn ctx_bytes(ctx: &MapCtx) -> u64 {
+    (std::mem::size_of::<MapCtx>()
+        + ctx.s_pow.len() * std::mem::size_of::<u32>()
+        + ctx.dnu.len() * std::mem::size_of::<u32>()
+        + ctx.tau.len() * std::mem::size_of::<(u32, u32)>()
+        + ctx.hnu_flat.len()) as u64
 }
 
 /// Block-level map bundle for one `(fractal, r, ρ)`: the coarse/micro
@@ -152,6 +179,16 @@ impl BlockMaps {
     pub fn table_bytes(&self) -> u64 {
         (self.neighbor_slots.len() * std::mem::size_of::<[u64; 8]>()) as u64
     }
+
+    /// Approximate bytes pinned by this bundle (LRU accounting): the
+    /// adjacency table dominates, plus the coarse/full contexts and the
+    /// shared micro-fractal membership mask.
+    pub fn bytes(&self) -> u64 {
+        self.table_bytes()
+            + ctx_bytes(&self.block.coarse)
+            + ctx_bytes(&self.full)
+            + self.block.micro_mask.len() as u64
+    }
 }
 
 /// Cache key. The fractal is identified by its full geometry (name plus
@@ -200,11 +237,25 @@ enum Entry {
     Block(Arc<BlockMaps>),
 }
 
+/// One resident bundle plus its LRU bookkeeping.
+#[derive(Debug)]
+struct CacheEntry {
+    entry: Entry,
+    /// Approximate bytes the cache pins while this entry is resident.
+    bytes: u64,
+    /// Monotonic tick of the most recent lookup (LRU ordering).
+    last_used: u64,
+}
+
 /// Point-in-time lookup counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the LRU byte budget (0 on unbounded caches).
+    pub evictions: u64,
+    /// Approximate bytes currently pinned by resident entries.
+    pub resident_bytes: u64,
 }
 
 impl CacheStats {
@@ -223,21 +274,37 @@ impl CacheStats {
 /// service session (or use [`MapCache::global`]) so queued jobs of the
 /// same fractal reuse each other's tables.
 ///
-/// Entries are never evicted: residency is bounded by the diversity of
-/// `(fractal, level, ρ)` a cache's owner accepts, which is fine for the
-/// catalog × practical levels. A deployment exposing unbounded
-/// client-chosen levels should scope caches per session (as `serve`
-/// does) or add an LRU cap — tracked as ROADMAP follow-up work.
+/// [`MapCache::new`] is unbounded — residency limited only by the
+/// diversity of `(fractal, level, ρ)` its owner accepts.
+/// [`MapCache::with_budget`] adds LRU eviction under a byte budget,
+/// which is what a long-running serve front-end accepting client-chosen
+/// levels needs: one bad client can no longer grow the cache forever.
 #[derive(Debug, Default)]
 pub struct MapCache {
-    entries: Mutex<HashMap<CacheKey, Entry>>,
+    entries: Mutex<HashMap<CacheKey, CacheEntry>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
+    resident: AtomicU64,
+    tick: AtomicU64,
+    /// LRU byte budget; `None` = never evict.
+    budget: Option<u64>,
 }
 
 impl MapCache {
     pub fn new() -> MapCache {
         MapCache::default()
+    }
+
+    /// A cache that evicts least-recently-used entries once resident
+    /// bytes exceed `bytes`. The entry being inserted or returned is
+    /// never evicted, so a budget smaller than one bundle degrades to
+    /// "keep exactly the hot entry" rather than thrashing to empty.
+    pub fn with_budget(bytes: u64) -> MapCache {
+        MapCache {
+            budget: Some(bytes),
+            ..MapCache::default()
+        }
     }
 
     /// Process-wide cache for callers with no natural sharing scope
@@ -247,17 +314,75 @@ impl MapCache {
         GLOBAL.get_or_init(|| Arc::new(MapCache::new()))
     }
 
+    /// Lock the entry table, recovering from poisoning: a panic inside a
+    /// bundle build (under this lock) must degrade to that one caller's
+    /// error, not permanently kill every later lookup in the process.
+    /// The table itself is never left torn — inserts happen after the
+    /// build succeeded.
+    fn lock_entries(&self) -> MutexGuard<'_, HashMap<CacheKey, CacheEntry>> {
+        self.entries
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Next LRU tick (monotonic across all lookups).
+    fn touch(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// After an insert: evict LRU entries (never `keep`) until the
+    /// budget holds, then refresh the resident-bytes gauge.
+    fn enforce_budget(
+        &self,
+        entries: &mut HashMap<CacheKey, CacheEntry>,
+        keep: &CacheKey,
+    ) {
+        if let Some(budget) = self.budget {
+            let mut resident: u64 = entries.values().map(|e| e.bytes).sum();
+            while resident > budget && entries.len() > 1 {
+                let victim = entries
+                    .iter()
+                    .filter(|(k, _)| *k != keep)
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone());
+                match victim {
+                    Some(k) => {
+                        if let Some(e) = entries.remove(&k) {
+                            resident -= e.bytes;
+                        }
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+        let resident: u64 = entries.values().map(|e| e.bytes).sum();
+        self.resident.store(resident, Ordering::Relaxed);
+    }
+
     /// Thread-level bundle for `(spec, r)`, built on first use.
     pub fn thread_maps(&self, spec: &FractalSpec, r: u32) -> Arc<ThreadMaps> {
         let key = CacheKey::new(spec, r, 0, 0);
-        let mut entries = self.entries.lock().expect("map cache poisoned");
-        if let Some(Entry::Thread(t)) = entries.get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(t);
+        let mut entries = self.lock_entries();
+        if let Some(e) = entries.get_mut(&key) {
+            if let Entry::Thread(t) = &e.entry {
+                let t = Arc::clone(t);
+                e.last_used = self.touch();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return t;
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let built = Arc::new(ThreadMaps::build(spec, r));
-        entries.insert(key, Entry::Thread(Arc::clone(&built)));
+        entries.insert(
+            key.clone(),
+            CacheEntry {
+                bytes: built.bytes(),
+                last_used: self.touch(),
+                entry: Entry::Thread(Arc::clone(&built)),
+            },
+        );
+        self.enforce_budget(&mut entries, &key);
         built
     }
 
@@ -272,14 +397,26 @@ impl MapCache {
         workers: usize,
     ) -> Result<Arc<BlockMaps>, BlockError> {
         let key = CacheKey::new(spec, r, rho, path_tag(mma));
-        let mut entries = self.entries.lock().expect("map cache poisoned");
-        if let Some(Entry::Block(b)) = entries.get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(b));
+        let mut entries = self.lock_entries();
+        if let Some(e) = entries.get_mut(&key) {
+            if let Entry::Block(b) = &e.entry {
+                let b = Arc::clone(b);
+                e.last_used = self.touch();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(b);
+            }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let built = Arc::new(BlockMaps::build(spec, r, rho, mma, workers)?);
-        entries.insert(key, Entry::Block(Arc::clone(&built)));
+        entries.insert(
+            key.clone(),
+            CacheEntry {
+                bytes: built.bytes(),
+                last_used: self.touch(),
+                entry: Entry::Block(Arc::clone(&built)),
+            },
+        );
+        self.enforce_budget(&mut entries, &key);
         Ok(built)
     }
 
@@ -287,12 +424,24 @@ impl MapCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
         }
+    }
+
+    /// The configured LRU byte budget (`None` = unbounded).
+    pub fn budget_bytes(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Approximate bytes currently pinned by resident entries.
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
     }
 
     /// Number of interned bundles.
     pub fn len(&self) -> usize {
-        self.entries.lock().expect("map cache poisoned").len()
+        self.lock_entries().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -310,18 +459,24 @@ mod tests {
     fn hit_miss_accounting() {
         let cache = MapCache::new();
         let spec = catalog::sierpinski_triangle();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 0 });
+        let s0 = cache.stats();
+        assert_eq!((s0.hits, s0.misses, s0.evictions, s0.resident_bytes), (0, 0, 0, 0));
         let a = cache.thread_maps(&spec, 4);
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 1 });
+        let s1 = cache.stats();
+        assert_eq!((s1.hits, s1.misses), (0, 1));
+        assert_eq!(s1.resident_bytes, a.bytes());
         let b = cache.thread_maps(&spec, 4);
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        let s2 = cache.stats();
+        assert_eq!((s2.hits, s2.misses), (1, 1));
         assert!(Arc::ptr_eq(&a, &b));
         // a different level is a different entry
         let _c = cache.thread_maps(&spec, 5);
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        let s3 = cache.stats();
+        assert_eq!((s3.hits, s3.misses), (1, 2));
         assert_eq!(cache.len(), 2);
         assert!(!cache.is_empty());
-        assert!((cache.stats().hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s3.evictions, 0, "unbounded caches never evict");
+        assert!((s3.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -356,7 +511,8 @@ mod tests {
         });
         assert!(arcs.windows(2).all(|w| Arc::ptr_eq(&w[0], &w[1])));
         // build-under-lock: exactly one miss, the other 7 lookups hit
-        assert_eq!(cache.stats(), CacheStats { hits: 7, misses: 1 });
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (7, 1));
     }
 
     #[test]
@@ -398,6 +554,7 @@ mod tests {
                 }
             }
             assert!(maps.table_bytes() > 0);
+            assert!(maps.bytes() >= maps.table_bytes());
         }
     }
 
@@ -423,6 +580,66 @@ mod tests {
         assert_eq!(cache.stats().misses, 2);
         assert_eq!(a.ctx.spec.tau, a_spec.tau);
         assert_eq!(b.ctx.spec.tau, b_spec.tau);
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_keeps_the_hot_entry() {
+        let spec = catalog::sierpinski_triangle();
+        // budget sized to hold roughly one thread bundle at r=4
+        let one = ThreadMaps::build(&spec, 4).bytes();
+        let cache = MapCache::with_budget(one + one / 2);
+        assert_eq!(cache.budget_bytes(), Some(one + one / 2));
+        let a = cache.thread_maps(&spec, 4);
+        assert_eq!(cache.stats().evictions, 0);
+        // r=5 is bigger; inserting it must evict r=4 (the LRU entry)
+        let b = cache.thread_maps(&spec, 5);
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "{s:?}");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(s.resident_bytes, b.bytes());
+        // the evicted bundle is still alive through our Arc
+        assert_eq!(a.ctx.r, 4);
+        // re-looking-up r=4 is a miss (rebuilt) but bit-identical
+        let a2 = cache.thread_maps(&spec, 4);
+        assert!(!Arc::ptr_eq(&a, &a2), "evicted entries rebuild fresh");
+        assert_eq!(a.ctx.compact, a2.ctx.compact);
+        assert_eq!(a.lambda_table.x_part, a2.lambda_table.x_part);
+        assert_eq!(a.lambda_table.y_part, a2.lambda_table.y_part);
+    }
+
+    #[test]
+    fn budget_smaller_than_one_entry_keeps_exactly_the_hot_entry() {
+        let spec = catalog::sierpinski_triangle();
+        let cache = MapCache::with_budget(1);
+        let a = cache.block_maps(&spec, 6, 4, None, 2).unwrap();
+        // over budget but never evicted below one entry
+        assert_eq!(cache.len(), 1);
+        let b = cache.block_maps(&spec, 6, 2, None, 2).unwrap();
+        // the new entry displaced the old one
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 1);
+        // both bundles stay usable through their Arcs
+        assert!(a.block.rho == 4 && b.block.rho == 2);
+    }
+
+    #[test]
+    fn lru_order_follows_lookups_not_inserts() {
+        let spec = catalog::sierpinski_triangle();
+        let b3 = ThreadMaps::build(&spec, 3).bytes();
+        let b4 = ThreadMaps::build(&spec, 4).bytes();
+        // budget holds the two small bundles, not three
+        let cache = MapCache::with_budget(b3 + b4 + b3 / 2);
+        cache.thread_maps(&spec, 3);
+        cache.thread_maps(&spec, 4);
+        // touch r=3 so r=4 becomes the LRU victim
+        cache.thread_maps(&spec, 3);
+        cache.thread_maps(&spec, 5);
+        let s = cache.stats();
+        assert!(s.evictions >= 1, "{s:?}");
+        // r=3 survived: looking it up again is a hit
+        let hits_before = cache.stats().hits;
+        cache.thread_maps(&spec, 3);
+        assert_eq!(cache.stats().hits, hits_before + 1, "LRU evicted the wrong entry");
     }
 
     #[test]

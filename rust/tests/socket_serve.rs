@@ -1,0 +1,209 @@
+//! Socket front-end integration: N concurrent TCP clients running
+//! interleaved v2 sessions must be bit-identical to the same workload
+//! run serially through one in-process serve, and maps evicted by the
+//! LRU byte budget must rebuild to bit-identical stepping.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use squeeze::coordinator::{
+    serve_session, Coordinator, CoordinatorConfig, JobSpec, SocketServer,
+};
+
+const CLIENTS: u64 = 4;
+const SESSIONS_PER_CLIENT: u64 = 2;
+const STEPS: u32 = 3;
+
+/// Client `c`'s session-`k` open line: distinct seeds everywhere,
+/// rotating levels so clients share map-cache keys with each other.
+fn open_line(c: u64, k: u64) -> String {
+    format!(
+        "open engine=squeeze:4 r={} workers=1 seed={} density=0.4",
+        4 + ((c + k) % 3),
+        10 * c + k
+    )
+}
+
+/// Lock-step line-protocol client over TCP.
+struct Client {
+    reader: BufReader<TcpStream>,
+    stream: TcpStream,
+}
+
+impl Client {
+    fn connect(endpoint: &str) -> Client {
+        let stream = TcpStream::connect(endpoint).expect("connect");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        let mut c = Client { reader, stream };
+        for _ in 0..3 {
+            let banner = c.read_line();
+            assert!(banner.starts_with('#'), "{banner}");
+        }
+        c
+    }
+
+    fn read_line(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("read");
+        assert!(!line.is_empty(), "server hung up early");
+        line.trim_end().to_string()
+    }
+
+    fn request(&mut self, line: &str) -> String {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write");
+        self.read_line()
+    }
+}
+
+fn hash_of(line: &str) -> String {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix("hash="))
+        .unwrap_or_else(|| panic!("no hash= in {line:?}"))
+        .to_string()
+}
+
+/// The serial twin: every client's workload, one after another, through
+/// `serve_session` on one in-process coordinator. Session ids are
+/// deterministic here (1, 2, 3, … in open order), so the scripts can be
+/// written up front. Returns `hash[client][session]`.
+fn serial_reference() -> Vec<Vec<String>> {
+    let coord = Coordinator::new(2);
+    let mut hashes = Vec::new();
+    for c in 0..CLIENTS {
+        let mut script = String::new();
+        let first_sid = c * SESSIONS_PER_CLIENT + 1;
+        for k in 0..SESSIONS_PER_CLIENT {
+            script.push_str(&open_line(c, k));
+            script.push('\n');
+        }
+        for k in 0..SESSIONS_PER_CLIENT {
+            script.push_str(&format!("step {} {STEPS}\n", first_sid + k));
+        }
+        for k in 0..SESSIONS_PER_CLIENT {
+            script.push_str(&format!("close {}\n", first_sid + k));
+        }
+        let mut out = Vec::new();
+        serve_session(&coord, script.as_bytes(), &mut out).unwrap();
+        let out = String::from_utf8(out).unwrap();
+        assert!(!out.contains("ERR"), "{out}");
+        let closed: Vec<String> = out
+            .lines()
+            .filter(|l| l.starts_with("CLOSED "))
+            .map(hash_of)
+            .collect();
+        assert_eq!(closed.len(), SESSIONS_PER_CLIENT as usize, "{out}");
+        hashes.push(closed);
+    }
+    hashes
+}
+
+#[test]
+fn concurrent_tcp_clients_match_the_serial_in_process_serve() {
+    let want = serial_reference();
+    let server = SocketServer::bind("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+    let endpoint = server.endpoint().to_string();
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let endpoint = endpoint.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&endpoint);
+                // open → step → close, reading each sid off the wire
+                // (ids interleave across clients on the shared
+                // coordinator, so nothing can be assumed up front)
+                let mut sids = Vec::new();
+                for k in 0..SESSIONS_PER_CLIENT {
+                    let resp = client.request(&open_line(c, k));
+                    assert!(resp.starts_with("SESSION "), "{resp}");
+                    sids.push(
+                        resp.split_whitespace().nth(1).unwrap().parse::<u64>().unwrap(),
+                    );
+                }
+                for &sid in &sids {
+                    let resp = client.request(&format!("step {sid} {STEPS}"));
+                    assert!(resp.starts_with("STEP "), "{resp}");
+                }
+                let mut hashes = Vec::new();
+                for &sid in &sids {
+                    let resp = client.request(&format!("close {sid}"));
+                    assert!(resp.starts_with("CLOSED "), "{resp}");
+                    hashes.push(hash_of(&resp));
+                }
+                let _ = client.stream.write_all(b"quit\n");
+                hashes
+            })
+        })
+        .collect();
+    let got: Vec<Vec<String>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    server.shutdown();
+    assert_eq!(got, want, "socket serving changed simulation results");
+}
+
+#[test]
+fn stepall_over_a_socket_matches_per_session_steps() {
+    let server = SocketServer::bind("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+    let mut client = Client::connect(server.endpoint());
+    let mut sids = Vec::new();
+    for k in 0..2 {
+        let resp = client.request(&open_line(0, k));
+        sids.push(resp.split_whitespace().nth(1).unwrap().parse::<u64>().unwrap());
+    }
+    let batch = client.request("stepall 2");
+    assert!(batch.starts_with("BATCH stepped sessions=2 errors=0"), "{batch}");
+    let swept: Vec<String> = sids
+        .iter()
+        .map(|sid| hash_of(&client.request(&format!("close {sid}"))))
+        .collect();
+    let _ = client.stream.write_all(b"quit\n");
+    server.shutdown();
+    // twin: same sessions advanced with per-session `step SID 2`
+    let server = SocketServer::bind("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+    let mut client = Client::connect(server.endpoint());
+    let mut sids = Vec::new();
+    for k in 0..2 {
+        let resp = client.request(&open_line(0, k));
+        sids.push(resp.split_whitespace().nth(1).unwrap().parse::<u64>().unwrap());
+    }
+    let stepped: Vec<String> = sids
+        .iter()
+        .map(|sid| {
+            client.request(&format!("step {sid} 2"));
+            hash_of(&client.request(&format!("close {sid}")))
+        })
+        .collect();
+    let _ = client.stream.write_all(b"quit\n");
+    server.shutdown();
+    assert_eq!(swept, stepped);
+}
+
+#[test]
+fn evicted_and_rebuilt_maps_step_bit_identically() {
+    // the differential: a cache squeezed to a 1-byte budget (every new
+    // key evicts the previous entry) vs an unbounded one
+    let run = |cache_bytes: Option<u64>| -> (Vec<u64>, u64) {
+        let coord = Coordinator::with_config(CoordinatorConfig {
+            budget: 1,
+            pool_threads: 0,
+            cache_bytes,
+        });
+        let mut hashes = Vec::new();
+        for i in 0..6u64 {
+            let line = format!(
+                "engine=squeeze:4 r={} workers=1 seed={} density=0.4",
+                4 + (i % 3),
+                i
+            );
+            let spec = JobSpec::parse_line(0, &line).unwrap();
+            let info = coord.open(spec).unwrap();
+            coord.step(info.sid, 2).unwrap();
+            let done = coord.close(info.sid).unwrap();
+            hashes.push(done.state_hash);
+        }
+        (hashes, coord.map_cache().stats().evictions)
+    };
+    let (unbounded, no_evictions) = run(None);
+    let (tiny, evictions) = run(Some(1));
+    assert_eq!(no_evictions, 0);
+    assert!(evictions > 0, "1-byte budget must evict between keys");
+    assert_eq!(unbounded, tiny, "rebuilt maps diverged from originals");
+}
