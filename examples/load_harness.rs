@@ -118,11 +118,12 @@ fn main() {
         budget: squeeze::util::pool::default_workers().max(2),
         pool_threads: 0,
         cache_bytes: Some(cache_mb << 20),
+        ..Default::default()
     };
 
     // -- phase 1: serial reference over one in-process coordinator ----
     println!("[1/3] serial reference: {sessions} sessions + {jobs} jobs ...");
-    let reference = Coordinator::with_config(config);
+    let reference = Coordinator::with_config(config.clone());
     let mut want_session_hash = Vec::with_capacity(sessions as usize);
     let mut total_cells = 0u64;
     {

@@ -32,14 +32,18 @@
 //! [`Coordinator::submit`] + wait and print byte-identical TSV rows.
 
 use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
 
 use super::job::{JobResult, JobSpec};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::scheduler::{job_result, prepare_job_engine};
+use super::store::{CheckpointRecord, CheckpointStore};
 use crate::ca::engine::Engine;
+use crate::ca::{EngineKind, EngineSpec};
 use crate::fractal::{Coord, FractalSpec};
 use crate::maps::{nu, MapCache, MapCtx};
 use crate::util::timer::Timer;
@@ -113,6 +117,15 @@ pub enum Request {
     Restore(Box<SessionSnapshot>),
     /// Close a session, returning its final facts.
     Close { sid: u64 },
+    /// Mark a session durable (checkpoint now + arm the auto-checkpoint
+    /// cadence), or with `off` drop durability and its on-disk file.
+    Persist { sid: u64, every_steps: Option<u32>, every_secs: Option<u32>, off: bool },
+    /// Re-open a hot session under a different engine layout (shard
+    /// count and/or byte↔packed backend), verifying the canonical hash
+    /// before the swap; on any failure the original session is kept.
+    Relayout { sid: u64, engine: String },
+    /// Report what startup crash recovery found in the `--data-dir`.
+    Recovery,
     /// Aggregate counters and gauges.
     Metrics,
 }
@@ -133,8 +146,36 @@ pub enum Response {
     Inspected(InspectInfo),
     Snapshotted { sid: u64, snapshot: Box<SessionSnapshot> },
     Closed(SessionInfo),
+    Persisted(PersistInfo),
+    PersistOff { sid: u64 },
+    /// `relayout` answers with the session's facts under its new engine.
+    Relayouted(SessionInfo),
+    Recovery(Box<RecoveryInfo>),
     Metrics(MetricsSnapshot),
     Error { id: u64, message: String },
+}
+
+/// Outcome of one `persist` call: what was checkpointed and the armed
+/// auto-checkpoint cadence (0 = that trigger is off).
+#[derive(Clone, Debug)]
+pub struct PersistInfo {
+    pub sid: u64,
+    pub steps_done: u64,
+    pub state_hash: u64,
+    /// Encoded bytes written by this checkpoint.
+    pub bytes: u64,
+    pub every_steps: u32,
+    pub every_secs: u32,
+}
+
+/// What startup crash recovery found in the checkpoint store.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryInfo {
+    pub data_dir: String,
+    /// Session ids re-opened at their last checkpoint, ascending.
+    pub recovered: Vec<u64>,
+    /// `(file, reason)` for store entries skipped or partially ignored.
+    pub skipped: Vec<(String, String)>,
 }
 
 /// Observable job lifecycle. `Done` carries the full result; `Failed`
@@ -492,6 +533,24 @@ impl JobHandle {
 // Sessions
 // ---------------------------------------------------------------------
 
+/// Auto-checkpoint cadence + bookkeeping of a durable session. Both
+/// triggers are independent; 0 disables one. `persist <sid>` with both
+/// at 0 still means "durable": checkpoint on demand, at relayout, at
+/// close-of-serve (`checkpoint_all`) — just not from the step loop.
+struct DurablePolicy {
+    every_steps: u32,
+    every_secs: u32,
+    /// Steps advanced since the last successful checkpoint.
+    steps_since: u64,
+    last_write: Instant,
+}
+
+impl DurablePolicy {
+    fn new(every_steps: u32, every_secs: u32) -> DurablePolicy {
+        DurablePolicy { every_steps, every_secs, steps_since: 0, last_write: Instant::now() }
+    }
+}
+
 struct Session {
     sid: u64,
     spec: JobSpec,
@@ -503,6 +562,9 @@ struct Session {
     workers: usize,
     /// Lazily built map context for ν-resolved `At` probes.
     ctx: Option<MapCtx>,
+    /// `Some` once `persist`ed (or crash-recovered): the session is
+    /// checkpointed to the store on this cadence and at shutdown.
+    durable: Option<DurablePolicy>,
 }
 
 impl Session {
@@ -534,6 +596,14 @@ struct CoordInner {
     /// outcome is not yet published; `join_jobs` waits on this.
     pending_jobs: Mutex<u64>,
     all_done: Condvar,
+    /// `Some` when running with `--data-dir`: durable sessions
+    /// checkpoint here and startup recovery scans it.
+    store: Option<CheckpointStore>,
+    /// Default auto-checkpoint cadence a bare `persist <sid>` arms.
+    ckpt_default_steps: u32,
+    ckpt_default_secs: u32,
+    /// Startup recovery report (`Some` iff a data dir was configured).
+    recovery: Mutex<Option<RecoveryInfo>>,
 }
 
 impl CoordInner {
@@ -578,8 +648,8 @@ struct ExecMsg {
 
 /// Construction knobs for [`Coordinator::with_config`]. `Default`
 /// matches `Coordinator::new(default)`: budget-sized pool, unbounded
-/// map cache.
-#[derive(Clone, Copy, Debug)]
+/// map cache, no durability.
+#[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     /// Worker-budget permits (admission control), clamped to ≥ 1.
     pub budget: usize,
@@ -588,6 +658,16 @@ pub struct CoordinatorConfig {
     pub pool_threads: usize,
     /// Map-cache LRU byte budget; `None` = never evict.
     pub cache_bytes: Option<u64>,
+    /// Checkpoint-store directory (the serve front-end's `--data-dir`).
+    /// `Some` opens (creating if needed) the store, runs crash recovery
+    /// over it at construction, and resumes job/session id sequences
+    /// past the recovered high-water mark. `None` = no durability.
+    pub data_dir: Option<PathBuf>,
+    /// Default auto-checkpoint cadence armed by a bare `persist <sid>`:
+    /// every N steps (0 = off).
+    pub checkpoint_every_steps: u32,
+    /// … and every S seconds (0 = off).
+    pub checkpoint_every_secs: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -596,6 +676,9 @@ impl Default for CoordinatorConfig {
             budget: 1,
             pool_threads: 0,
             cache_bytes: None,
+            data_dir: None,
+            checkpoint_every_steps: 0,
+            checkpoint_every_secs: 0,
         }
     }
 }
@@ -634,6 +717,20 @@ impl Coordinator {
             Some(bytes) => MapCache::with_budget(bytes),
             None => MapCache::new(),
         };
+        // open the store up front so recovery can run once the facade
+        // exists; an unopenable data dir degrades to no durability with
+        // the error surfaced through the recovery report (`with_config`
+        // is infallible — callers that need a hard failure, like the
+        // CLI, pre-validate the directory themselves)
+        let store_ctx = config
+            .data_dir
+            .as_ref()
+            .map(|dir| (dir.display().to_string(), CheckpointStore::open(dir)));
+        let (store, store_ctx) = match store_ctx {
+            Some((dir, Ok(store))) => (Some(store), Some((dir, None))),
+            Some((dir, Err(e))) => (None, Some((dir, Some(e)))),
+            None => (None, None),
+        };
         let inner = CoordInner {
             cache: Arc::new(cache),
             metrics: Arc::new(Metrics::default()),
@@ -644,6 +741,10 @@ impl Coordinator {
             next_session_id: AtomicU64::new(1),
             pending_jobs: Mutex::new(0),
             all_done: Condvar::new(),
+            store,
+            ckpt_default_steps: config.checkpoint_every_steps,
+            ckpt_default_secs: config.checkpoint_every_secs,
+            recovery: Mutex::new(None),
         };
         inner.mirror_budget();
         let inner = Arc::new(inner);
@@ -673,11 +774,77 @@ impl Coordinator {
                 })
             })
             .collect();
-        Coordinator {
+        let coordinator = Coordinator {
             inner,
             pool_tx: Mutex::new(Some(tx)),
             pool: Mutex::new(pool),
+        };
+        if let Some((data_dir, open_err)) = store_ctx {
+            let report = coordinator.run_recovery(data_dir, open_err);
+            coordinator
+                .inner
+                .metrics
+                .record_recovery(report.recovered.len() as u64, report.skipped.len() as u64);
+            *lock_clean(&coordinator.inner.recovery) = Some(report);
         }
+        coordinator
+    }
+
+    /// Startup crash recovery: scan the store, re-open every durable
+    /// session at its last intact checkpoint (same sid, re-armed
+    /// cadence), and bump the id sequences past both the persisted
+    /// high-water meta and the largest recovered sid — a restarted
+    /// coordinator never re-issues an id a client saw before the crash.
+    /// Per-record failures (unknown fractal after a catalog change, a
+    /// hash that no longer verifies) are reported, never fatal.
+    fn run_recovery(&self, data_dir: String, open_err: Option<String>) -> RecoveryInfo {
+        let mut report = RecoveryInfo { data_dir, ..RecoveryInfo::default() };
+        let Some(store) = &self.inner.store else {
+            report.skipped.push((
+                "<data-dir>".to_string(),
+                open_err.unwrap_or_else(|| "store unavailable".to_string()),
+            ));
+            return report;
+        };
+        let scan = store.load_all();
+        report.skipped = scan.skipped;
+        let mut max_sid = 0u64;
+        for rec in &scan.records {
+            max_sid = max_sid.max(rec.sid);
+            match self.restore_recovered(rec) {
+                Ok(()) => report.recovered.push(rec.sid),
+                Err(e) => report.skipped.push((format!("sess-{}.ckpt", rec.sid), e)),
+            }
+        }
+        let (meta_job, meta_session) = store.read_meta().unwrap_or((1, 1));
+        self.inner.next_job_id.fetch_max(meta_job, Ordering::Relaxed);
+        self.inner
+            .next_session_id
+            .fetch_max(meta_session.max(max_sid + 1), Ordering::Relaxed);
+        report
+    }
+
+    /// Re-open one recovered checkpoint under its original sid, durable
+    /// with the cadence it was checkpointed with.
+    fn restore_recovered(&self, rec: &CheckpointRecord) -> Result<(), String> {
+        let spec = JobSpec::parse_line(0, &rec.spec_line)?;
+        let snap = SessionSnapshot {
+            spec,
+            steps_done: rec.steps_done,
+            state_hash: rec.state_hash,
+            bits: rec.bits.clone(),
+        };
+        let mut session = self.build_restored(&snap)?;
+        session.sid = rec.sid;
+        session.durable = Some(DurablePolicy::new(rec.every_steps, rec.every_secs));
+        self.register_session(session);
+        Ok(())
+    }
+
+    /// The startup recovery report; `None` unless the coordinator was
+    /// configured with a data dir.
+    pub fn recovery(&self) -> Option<RecoveryInfo> {
+        lock_clean(&self.inner.recovery).clone()
     }
 
     /// The shared metrics registry (same counters the `metrics` verb
@@ -861,6 +1028,7 @@ impl Coordinator {
             steps_done: 0,
             workers,
             ctx: None,
+            durable: None,
         })
     }
 
@@ -961,6 +1129,26 @@ impl Coordinator {
             ));
         }
         s.steps_done += n as u64;
+        // auto-checkpoint: the executor-side durability driver. A due
+        // cadence writes under the already-held session lock; a write
+        // failure degrades to a counter + stderr note — stepping must
+        // never fail because the disk hiccuped (the next due tick
+        // retries, and `steps_since` keeps accumulating until a write
+        // lands).
+        let due = match (&self.inner.store, &mut s.durable) {
+            (Some(_), Some(p)) => {
+                p.steps_since += n as u64;
+                (p.every_steps > 0 && p.steps_since >= p.every_steps as u64)
+                    || (p.every_secs > 0
+                        && p.last_write.elapsed().as_secs() >= p.every_secs as u64)
+            }
+            _ => false,
+        };
+        if due {
+            if let Err(e) = self.write_checkpoint(&mut s) {
+                eprintln!("# {e}");
+            }
+        }
         let cells_per_s = safe_rate(cells * n as u64, elapsed);
         self.inner.metrics.record_progress(n as u64, cells_per_s);
         Ok(StepInfo {
@@ -1119,6 +1307,13 @@ impl Coordinator {
     /// leak a half-restored session. Stepping the restored session is
     /// bit-identical to stepping the original.
     pub fn restore(&self, snap: &SessionSnapshot) -> Result<SessionInfo, String> {
+        Ok(self.register_session(self.build_restored(snap)?))
+    }
+
+    /// The restore body without registration, shared with startup crash
+    /// recovery (which overrides the sid and durability before
+    /// registering).
+    fn build_restored(&self, snap: &SessionSnapshot) -> Result<Session, String> {
         // build unseeded (density 0): load_state overwrites the state
         // anyway, so the constructor's per-live-cell seeding walk is
         // pure waste. Exception: `shards=auto:` specs derive their
@@ -1139,7 +1334,7 @@ impl Coordinator {
             ));
         }
         session.steps_done = snap.steps_done;
-        Ok(self.register_session(session))
+        Ok(session)
     }
 
     /// Close a session, returning its final facts.
@@ -1153,6 +1348,218 @@ impl Coordinator {
         let s = session
             .lock()
             .map_err(|_| format!("session {sid} poisoned by an earlier panic; session closed"))?;
+        // a deliberate close retires the durable state too — recovery
+        // must not resurrect sessions the client ended on purpose
+        if s.durable.is_some() {
+            if let Some(store) = &self.inner.store {
+                if let Err(e) = store.remove(sid) {
+                    eprintln!("# close {sid}: {e}");
+                }
+            }
+        }
+        Ok(s.info())
+    }
+
+    // -- durability ----------------------------------------------------
+
+    /// Mark session `sid` durable: checkpoint it now and arm the
+    /// auto-checkpoint cadence (`None` falls back to the
+    /// [`CoordinatorConfig`] defaults; 0 disables a trigger). Errors
+    /// when the coordinator runs without a `--data-dir` store.
+    pub fn persist(
+        &self,
+        sid: u64,
+        every_steps: Option<u32>,
+        every_secs: Option<u32>,
+    ) -> Result<PersistInfo, String> {
+        if self.inner.store.is_none() {
+            return Err("no checkpoint store (start serve with --data-dir)".to_string());
+        }
+        let session = self.session(sid)?;
+        let mut s = self.lock_session(sid, &session)?;
+        let every_steps = every_steps.unwrap_or(self.inner.ckpt_default_steps);
+        let every_secs = every_secs.unwrap_or(self.inner.ckpt_default_secs);
+        match &mut s.durable {
+            Some(p) => {
+                p.every_steps = every_steps;
+                p.every_secs = every_secs;
+            }
+            None => s.durable = Some(DurablePolicy::new(every_steps, every_secs)),
+        }
+        self.write_checkpoint(&mut s)
+    }
+
+    /// Drop session `sid`'s durability: disarm the cadence and delete
+    /// its on-disk checkpoint (the session itself stays open).
+    pub fn persist_off(&self, sid: u64) -> Result<u64, String> {
+        let session = self.session(sid)?;
+        let mut s = self.lock_session(sid, &session)?;
+        s.durable = None;
+        if let Some(store) = &self.inner.store {
+            store.remove(sid)?;
+        }
+        Ok(sid)
+    }
+
+    /// Checkpoint every durable session now (graceful-shutdown path and
+    /// stdin-serve EOF). Returns `(sessions written, bytes written)`;
+    /// per-session failures are reported to stderr, never fatal.
+    pub fn checkpoint_all(&self) -> (u64, u64) {
+        if self.inner.store.is_none() {
+            return (0, 0);
+        }
+        let mut sids: Vec<u64> = lock_clean(&self.inner.sessions).keys().copied().collect();
+        sids.sort_unstable();
+        let (mut written, mut bytes) = (0u64, 0u64);
+        for sid in sids {
+            let Ok(session) = self.session(sid) else { continue };
+            let Ok(mut s) = self.lock_session(sid, &session) else { continue };
+            if s.durable.is_none() {
+                continue;
+            }
+            match self.write_checkpoint(&mut s) {
+                Ok(info) => {
+                    written += 1;
+                    bytes += info.bytes;
+                }
+                Err(e) => eprintln!("# {e}"),
+            }
+        }
+        (written, bytes)
+    }
+
+    /// Write one checkpoint record for a locked durable session (also
+    /// refreshes the id high-water meta) and reset its cadence clock.
+    fn write_checkpoint(&self, s: &mut Session) -> Result<PersistInfo, String> {
+        let store = self
+            .inner
+            .store
+            .as_ref()
+            .ok_or("no checkpoint store (start serve with --data-dir)")?;
+        let (every_steps, every_secs) = match &s.durable {
+            Some(p) => (p.every_steps, p.every_secs),
+            None => (0, 0),
+        };
+        let rec = CheckpointRecord {
+            sid: s.sid,
+            steps_done: s.steps_done,
+            state_hash: s.engine.state_hash(),
+            every_steps,
+            every_secs,
+            spec_line: s.spec.to_line(),
+            bits: s.engine.export_state(),
+        };
+        let t = Timer::start();
+        let written = store.persist(&rec).and_then(|bytes| {
+            store
+                .write_meta(
+                    self.inner.next_job_id.load(Ordering::Relaxed),
+                    self.inner.next_session_id.load(Ordering::Relaxed),
+                )
+                .map(|()| bytes)
+        });
+        match written {
+            Ok(bytes) => {
+                self.inner.metrics.record_checkpoint(bytes, t.elapsed_s());
+                if let Some(p) = &mut s.durable {
+                    p.steps_since = 0;
+                    p.last_write = Instant::now();
+                }
+                Ok(PersistInfo {
+                    sid: s.sid,
+                    steps_done: s.steps_done,
+                    state_hash: rec.state_hash,
+                    bytes,
+                    every_steps,
+                    every_secs,
+                })
+            }
+            Err(e) => {
+                self.inner.metrics.checkpoint_failed();
+                Err(format!("checkpoint session {}: {e}", s.sid))
+            }
+        }
+    }
+
+    /// Live relayout: re-open hot session `sid` under a different
+    /// engine layout — shard count and/or byte↔packed backend,
+    /// single↔sharded — without losing state. The new engine is built
+    /// and loaded from the old engine's canonical bitmap *while the old
+    /// one stays intact*, the canonical hash is verified, and only then
+    /// is the engine swapped in place (same sid, same step count). Any
+    /// failure — bad spec, build error, hash mismatch — fails closed:
+    /// the original session keeps serving.
+    pub fn relayout(&self, sid: u64, engine: &str) -> Result<SessionInfo, String> {
+        let kind = EngineSpec::parse(engine)?.kind;
+        let session = self.session(sid)?;
+        // same admission accounting as `step`: the rebuild occupies the
+        // session's workers without blocking the protocol loop
+        let granted = {
+            let s = self.lock_session(sid, &session)?;
+            self.inner.budget.try_acquire(s.workers)
+        };
+        self.inner.mirror_budget();
+        let result = self.relayout_locked(sid, &session, kind);
+        self.inner.budget.release(granted);
+        self.inner.mirror_budget();
+        self.inner.metrics.record_relayout(result.is_ok());
+        result
+    }
+
+    fn relayout_locked(
+        &self,
+        sid: u64,
+        session: &Arc<Mutex<Session>>,
+        kind: EngineKind,
+    ) -> Result<SessionInfo, String> {
+        let fail = |e: String| format!("relayout {sid} failed closed (session intact): {e}");
+        let mut s = self.lock_session(sid, session)?;
+        let mut new_spec = s.spec.clone();
+        new_spec.engine = kind;
+        let sharded = matches!(
+            kind,
+            EngineKind::ShardedSqueeze { .. } | EngineKind::PackedShardedSqueeze { .. }
+        );
+        if !sharded {
+            // auto-balance is a sharded-only knob; a relayout to a
+            // single engine must not carry it into the spec line
+            new_spec.balance = false;
+        }
+        // unseeded build, same reasoning as restore (load_state
+        // overwrites; `shards=auto:` still needs the t=0 seeding walk
+        // for its cost-weighted partition)
+        let mut build_spec = new_spec.clone();
+        if !build_spec.balance {
+            build_spec.density = 0.0;
+        }
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prepare_job_engine(&build_spec, Some(&*self.inner.cache))
+        }))
+        .unwrap_or_else(|payload| {
+            Err(format!("engine build panicked: {}", panic_message(&payload)))
+        });
+        self.inner.metrics.record_map_cache(self.inner.cache.stats());
+        let (fractal, mut engine) = built.map_err(fail)?;
+        let want = s.engine.state_hash();
+        engine.load_state(&s.engine.export_state()).map_err(fail)?;
+        let got = engine.state_hash();
+        if got != want {
+            return Err(fail(format!(
+                "canonical hash mismatch {got:#018x} vs {want:#018x}"
+            )));
+        }
+        // verified: swap in place — same sid, same steps_done, fresh
+        // probe ctx (the fractal is unchanged but rebuild is cheap and
+        // lazily deferred anyway)
+        s.engine = engine;
+        s.fractal = fractal;
+        s.spec = new_spec;
+        s.ctx = None;
+        if s.durable.is_some() {
+            if let Err(e) = self.write_checkpoint(&mut s) {
+                eprintln!("# {e}");
+            }
+        }
         Ok(s.info())
     }
 
@@ -1204,6 +1611,30 @@ impl Coordinator {
             Request::Close { sid } => match self.close(sid) {
                 Ok(info) => Response::Closed(info),
                 Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Persist { sid, every_steps, every_secs, off } => {
+                if off {
+                    match self.persist_off(sid) {
+                        Ok(sid) => Response::PersistOff { sid },
+                        Err(message) => Response::Error { id: sid, message },
+                    }
+                } else {
+                    match self.persist(sid, every_steps, every_secs) {
+                        Ok(info) => Response::Persisted(info),
+                        Err(message) => Response::Error { id: sid, message },
+                    }
+                }
+            }
+            Request::Relayout { sid, engine } => match self.relayout(sid, &engine) {
+                Ok(info) => Response::Relayouted(info),
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Recovery => match self.recovery() {
+                Some(report) => Response::Recovery(Box::new(report)),
+                None => Response::Error {
+                    id: 0,
+                    message: "no checkpoint store (start serve with --data-dir)".to_string(),
+                },
             },
             Request::Metrics => Response::Metrics(self.inner.metrics.snapshot()),
         }

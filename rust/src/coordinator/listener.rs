@@ -18,20 +18,55 @@
 //! Unix domain socket (the file is removed again on shutdown, and a
 //! stale socket file left by a dead process is reclaimed on bind).
 //! Shutdown sets a stop flag and nudges the blocked `accept` with a
-//! throwaway self-connection; the accept thread then joins every live
-//! connection thread. Finished connection threads are reaped on each
-//! accept, so a long-lived listener holds handles proportional to
-//! *live* connections, not total connections served.
+//! throwaway self-connection; the accept thread exits and the server
+//! then joins every live connection thread. Finished connection threads
+//! are reaped on each accept, so a long-lived listener holds handles
+//! proportional to *live* connections, not total connections served.
+//!
+//! Backpressure and graceful exit (`ListenOpts`): `max_conns` caps the
+//! number of concurrent connection threads — an over-limit accept gets
+//! one `ERR 0 server at connection capacity` line and a clean close,
+//! never a thread. [`begin_shutdown`] stops accepting without touching
+//! live connections, [`drain`] waits (bounded) for them to finish, and
+//! [`abandon`] detaches whatever is left — the SIGTERM path is
+//! `begin_shutdown` → `drain(deadline)` → checkpoint → exit.
+//!
+//! [`begin_shutdown`]: SocketServer::begin_shutdown
+//! [`drain`]: SocketServer::drain
+//! [`abandon`]: SocketServer::abandon
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::api::{Coordinator, CoordinatorConfig};
 use super::service::serve_session;
+
+/// Listener-side knobs, separate from [`CoordinatorConfig`] because
+/// they shape the accept loop, not the coordinator behind it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ListenOpts {
+    /// Cap on concurrent connection threads; 0 = unlimited. An accept
+    /// past the cap is answered with one
+    /// `ERR 0 server at connection capacity` line and closed.
+    pub max_conns: usize,
+}
+
+/// The shared live-connection registry: the accept thread pushes, the
+/// server joins/drains, everyone reaps finished handles in place.
+type ConnSet = Arc<Mutex<Vec<JoinHandle<()>>>>;
+
+fn lock_conns(conns: &ConnSet) -> MutexGuard<'_, Vec<JoinHandle<()>>> {
+    // a connection thread never touches this lock, so a poisoned guard
+    // can only mean a panic inside the short push/reap sections — the
+    // vec of handles is still structurally sound
+    conns.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// A listening protocol endpoint over a shared [`Coordinator`]. Accepts
 /// in a background thread from `bind` on; drop (or [`shutdown`]) stops
@@ -45,13 +80,23 @@ pub struct SocketServer {
     endpoint: String,
     stop: Arc<AtomicBool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    conns: ConnSet,
 }
 
 impl SocketServer {
     /// Bind `addr` (`host:port`, or `unix:<path>`) and start accepting,
     /// with a fresh coordinator built from `config`.
     pub fn bind(addr: &str, config: CoordinatorConfig) -> std::io::Result<SocketServer> {
-        SocketServer::with_coordinator(addr, Arc::new(Coordinator::with_config(config)))
+        SocketServer::bind_with(addr, config, ListenOpts::default())
+    }
+
+    /// [`bind`](SocketServer::bind) with listener knobs.
+    pub fn bind_with(
+        addr: &str,
+        config: CoordinatorConfig,
+        opts: ListenOpts,
+    ) -> std::io::Result<SocketServer> {
+        SocketServer::with_coordinator_opts(addr, Arc::new(Coordinator::with_config(config)), opts)
     }
 
     /// Bind `addr` over an existing shared coordinator (lets a process
@@ -61,18 +106,36 @@ impl SocketServer {
         addr: &str,
         coord: Arc<Coordinator>,
     ) -> std::io::Result<SocketServer> {
+        SocketServer::with_coordinator_opts(addr, coord, ListenOpts::default())
+    }
+
+    /// [`with_coordinator`](SocketServer::with_coordinator) with
+    /// listener knobs.
+    pub fn with_coordinator_opts(
+        addr: &str,
+        coord: Arc<Coordinator>,
+        opts: ListenOpts,
+    ) -> std::io::Result<SocketServer> {
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: ConnSet = Arc::new(Mutex::new(Vec::new()));
         if let Some(path) = addr.strip_prefix("unix:") {
             #[cfg(unix)]
             {
                 let listener = bind_unix(std::path::Path::new(path))?;
                 let endpoint = format!("unix:{path}");
-                let accept = spawn_unix_accept(listener, Arc::clone(&coord), Arc::clone(&stop));
+                let accept = spawn_unix_accept(
+                    listener,
+                    Arc::clone(&coord),
+                    Arc::clone(&stop),
+                    Arc::clone(&conns),
+                    opts,
+                );
                 return Ok(SocketServer {
                     coord,
                     endpoint,
                     stop,
                     accept: Some(accept),
+                    conns,
                 });
             }
             #[cfg(not(unix))]
@@ -86,12 +149,19 @@ impl SocketServer {
         }
         let listener = TcpListener::bind(addr)?;
         let endpoint = listener.local_addr()?.to_string();
-        let accept = spawn_tcp_accept(listener, Arc::clone(&coord), Arc::clone(&stop));
+        let accept = spawn_tcp_accept(
+            listener,
+            Arc::clone(&coord),
+            Arc::clone(&stop),
+            Arc::clone(&conns),
+            opts,
+        );
         Ok(SocketServer {
             coord,
             endpoint,
             stop,
             accept: Some(accept),
+            conns,
         })
     }
 
@@ -107,11 +177,13 @@ impl SocketServer {
     }
 
     /// Block on the accept loop (the CLI's foreground mode). Returns
-    /// only after another handle triggers shutdown.
+    /// only after another handle triggers shutdown, then joins every
+    /// live connection.
     pub fn join(mut self) {
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
+        self.join_conns();
         self.cleanup_endpoint();
     }
 
@@ -121,7 +193,14 @@ impl SocketServer {
         self.stop_and_join();
     }
 
-    fn stop_and_join(&mut self) {
+    /// Phase one of a graceful exit: stop accepting (new connects are
+    /// refused once the listener closes) and join the accept thread.
+    /// Live connections keep serving — follow with [`drain`] and either
+    /// drop (joins stragglers) or [`abandon`] (detaches them).
+    ///
+    /// [`drain`]: SocketServer::drain
+    /// [`abandon`]: SocketServer::abandon
+    pub fn begin_shutdown(&mut self) {
         if !self.stop.swap(true, Ordering::SeqCst) {
             // the accept thread is parked in accept(): nudge it with a
             // throwaway connection so it observes the flag
@@ -139,7 +218,52 @@ impl SocketServer {
         if let Some(handle) = self.accept.take() {
             let _ = handle.join();
         }
+    }
+
+    /// Wait up to `deadline` for every live connection to finish.
+    /// Returns `true` when the server is fully drained, `false` when
+    /// connections were still in flight at the deadline.
+    pub fn drain(&self, deadline: Duration) -> bool {
+        let start = Instant::now();
+        loop {
+            let live = {
+                let mut conns = lock_conns(&self.conns);
+                conns.retain(|h| !h.is_finished());
+                conns.len()
+            };
+            if live == 0 {
+                return true;
+            }
+            if start.elapsed() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Give up on undrained connections: stop accepting, detach every
+    /// live connection thread, and release the endpoint without
+    /// blocking. The deadline-missed arm of the SIGTERM path — the
+    /// stragglers die with the process.
+    pub fn abandon(mut self) {
+        self.begin_shutdown();
+        lock_conns(&self.conns).clear();
         self.cleanup_endpoint();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.begin_shutdown();
+        self.join_conns();
+        self.cleanup_endpoint();
+    }
+
+    fn join_conns(&self) {
+        // take the handles out before joining — never join under the
+        // lock the accept loop also takes
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_conns(&self.conns));
+        for handle in handles {
+            let _ = handle.join();
+        }
     }
 
     fn cleanup_endpoint(&self) {
@@ -173,28 +297,50 @@ fn bind_unix(path: &std::path::Path) -> std::io::Result<UnixListener> {
     }
 }
 
+/// Reap finished connection threads, then either spawn a serving
+/// thread for this stream or — at the `max_conns` cap — answer the one
+/// capacity line and let the stream drop.
+fn admit<R, W>(
+    coord: &Arc<Coordinator>,
+    conns: &ConnSet,
+    opts: ListenOpts,
+    read_half: R,
+    mut write_half: W,
+) where
+    R: Read + Send + 'static,
+    W: Write + Send + 'static,
+{
+    let mut guard = lock_conns(conns);
+    guard.retain(|h| !h.is_finished());
+    if opts.max_conns > 0 && guard.len() >= opts.max_conns {
+        let _ = write_half.write_all(b"ERR 0 server at connection capacity\n");
+        let _ = write_half.flush();
+        return;
+    }
+    let coord = Arc::clone(coord);
+    guard.push(std::thread::spawn(move || {
+        serve_stream(&coord, read_half, write_half);
+    }));
+}
+
 fn spawn_tcp_accept(
     listener: TcpListener,
     coord: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
+    conns: ConnSet,
+    opts: ListenOpts,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
-        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for stream in listener.incoming() {
             if stop.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            conns.retain(|h| !h.is_finished());
             let Ok(read_half) = stream.try_clone() else { continue };
-            let coord = Arc::clone(&coord);
-            conns.push(std::thread::spawn(move || {
-                serve_stream(&coord, read_half, stream);
-            }));
+            admit(&coord, &conns, opts, read_half, stream);
         }
-        for handle in conns {
-            let _ = handle.join();
-        }
+        // joining the connections is the server handle's job — the
+        // accept thread only stops feeding them
     })
 }
 
@@ -203,23 +349,17 @@ fn spawn_unix_accept(
     listener: UnixListener,
     coord: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
+    conns: ConnSet,
+    opts: ListenOpts,
 ) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
-        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         for stream in listener.incoming() {
             if stop.load(Ordering::SeqCst) {
                 break;
             }
             let Ok(stream) = stream else { continue };
-            conns.retain(|h| !h.is_finished());
             let Ok(read_half) = stream.try_clone() else { continue };
-            let coord = Arc::clone(&coord);
-            conns.push(std::thread::spawn(move || {
-                serve_stream(&coord, read_half, stream);
-            }));
-        }
-        for handle in conns {
-            let _ = handle.join();
+            admit(&coord, &conns, opts, read_half, stream);
         }
     })
 }
@@ -306,6 +446,66 @@ mod tests {
         // coordinator — a third connection can close either
         let out = tcp_client(&endpoint, &format!("close {}\nclose {}\nquit\n", sids[0], sids[1]));
         assert_eq!(out.lines().filter(|l| l.starts_with("CLOSED")).count(), 2, "{out}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn max_conns_backpressure_rejects_over_limit_connections() {
+        let server = SocketServer::bind_with(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+            ListenOpts { max_conns: 1 },
+        )
+        .unwrap();
+        let endpoint = server.endpoint().to_string();
+        // first connection: hold it open; reading one banner byte
+        // guarantees its serving thread is admitted
+        let mut first = TcpStream::connect(&endpoint).unwrap();
+        let mut byte = [0u8; 1];
+        first.read_exact(&mut byte).unwrap();
+        // second connection: one capacity line, then a clean close
+        let mut second = TcpStream::connect(&endpoint).unwrap();
+        let mut out = String::new();
+        second.read_to_string(&mut out).unwrap();
+        assert_eq!(out, "ERR 0 server at connection capacity\n", "{out}");
+        // closing the first frees the slot (the reap happens on the
+        // next accept, so retry briefly)
+        first.write_all(b"quit\n").unwrap();
+        drop(first);
+        let mut admitted = false;
+        for _ in 0..200 {
+            let out = tcp_client(&endpoint, "quit\n");
+            if out.starts_with("# squeeze coordinator ready") {
+                admitted = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(admitted, "capacity never freed after the first connection closed");
+        server.shutdown();
+    }
+
+    #[test]
+    fn begin_shutdown_stops_accepting_and_drain_reports_idle() {
+        let mut server =
+            SocketServer::bind("127.0.0.1:0", CoordinatorConfig::default()).unwrap();
+        let endpoint = server.endpoint().to_string();
+        let out = tcp_client(&endpoint, "engine=squeeze:4 r=4 steps=1 workers=1\nquit\n");
+        assert!(!out.contains("ERR"), "{out}");
+        server.begin_shutdown();
+        // with every connection finished, drain is immediate
+        assert!(server.drain(Duration::from_secs(10)));
+        // the listener is gone: a new connect is refused or closed
+        // without a banner
+        let refused = match TcpStream::connect(&endpoint) {
+            Err(_) => true,
+            Ok(mut s) => {
+                let mut buf = String::new();
+                let _ = s.read_to_string(&mut buf);
+                buf.is_empty()
+            }
+        };
+        assert!(refused, "listener still answering after begin_shutdown");
         server.shutdown();
     }
 

@@ -66,6 +66,19 @@ pub struct Metrics {
     /// cover the whole plausible range and keep recording to one
     /// atomic increment on the serve hot path.
     req_latency_us: [AtomicU64; 32],
+    /// Durability counters: checkpoints written / failed, bytes and
+    /// busy time spent writing them.
+    checkpoints: AtomicU64,
+    checkpoint_failures: AtomicU64,
+    checkpoint_bytes: AtomicU64,
+    checkpoint_us: AtomicU64,
+    /// Startup crash-recovery gauges: sessions re-opened from the
+    /// store, entries skipped with a reason.
+    recovered_sessions: AtomicU64,
+    recovery_skipped: AtomicU64,
+    /// Live relayouts applied / failed closed.
+    relayouts: AtomicU64,
+    relayout_failures: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -96,6 +109,14 @@ pub struct MetricsSnapshot {
     /// Conservative (upper bucket edge) request-latency quantiles, µs.
     pub req_p50_us: u64,
     pub req_p99_us: u64,
+    pub checkpoints: u64,
+    pub checkpoint_failures: u64,
+    pub checkpoint_bytes: u64,
+    pub checkpoint_us: u64,
+    pub recovered_sessions: u64,
+    pub recovery_skipped: u64,
+    pub relayouts: u64,
+    pub relayout_failures: u64,
 }
 
 impl Metrics {
@@ -196,6 +217,38 @@ impl Metrics {
             .store(stats.resident_bytes, Ordering::Relaxed);
     }
 
+    /// One checkpoint written: `bytes` on disk in `seconds`.
+    pub fn record_checkpoint(&self, bytes: u64, seconds: f64) {
+        self.checkpoints.fetch_add(1, Ordering::Relaxed);
+        self.checkpoint_bytes.fetch_add(bytes, Ordering::Relaxed);
+        let us = if seconds.is_finite() {
+            (seconds.max(0.0) * 1e6) as u64
+        } else {
+            0
+        };
+        self.checkpoint_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// One checkpoint write failed (the session keeps stepping).
+    pub fn checkpoint_failed(&self) {
+        self.checkpoint_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Startup crash recovery finished: absolute gauges.
+    pub fn record_recovery(&self, recovered: u64, skipped: u64) {
+        self.recovered_sessions.store(recovered, Ordering::Relaxed);
+        self.recovery_skipped.store(skipped, Ordering::Relaxed);
+    }
+
+    /// One live relayout, applied (`true`) or failed closed (`false`).
+    pub fn record_relayout(&self, applied: bool) {
+        if applied {
+            self.relayouts.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.relayout_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Record a finished sharded job's decomposition gauges.
     pub fn record_sharding(&self, stats: ShardStats) {
         self.sharded_jobs.fetch_add(1, Ordering::Relaxed);
@@ -242,6 +295,14 @@ impl Metrics {
             requests,
             req_p50_us: latency_quantile_us(&counts, requests, 0.50),
             req_p99_us: latency_quantile_us(&counts, requests, 0.99),
+            checkpoints: self.checkpoints.load(Ordering::Relaxed),
+            checkpoint_failures: self.checkpoint_failures.load(Ordering::Relaxed),
+            checkpoint_bytes: self.checkpoint_bytes.load(Ordering::Relaxed),
+            checkpoint_us: self.checkpoint_us.load(Ordering::Relaxed),
+            recovered_sessions: self.recovered_sessions.load(Ordering::Relaxed),
+            recovery_skipped: self.recovery_skipped.load(Ordering::Relaxed),
+            relayouts: self.relayouts.load(Ordering::Relaxed),
+            relayout_failures: self.relayout_failures.load(Ordering::Relaxed),
         }
     }
 }
@@ -339,6 +400,20 @@ impl MetricsSnapshot {
             self.requests,
             self.req_p50_us,
             self.req_p99_us,
+        ));
+        // durability gauges (appended at the very end, same stability
+        // rule: parsers keep their field offsets)
+        line.push_str(&format!(
+            " checkpoints={} checkpoint_failures={} checkpoint_bytes={}B checkpoint_us={} \
+             recovered={} recovery_skipped={} relayouts={} relayout_failures={}",
+            self.checkpoints,
+            self.checkpoint_failures,
+            self.checkpoint_bytes,
+            self.checkpoint_us,
+            self.recovered_sessions,
+            self.recovery_skipped,
+            self.relayouts,
+            self.relayout_failures,
         ));
         line
     }
@@ -503,5 +578,35 @@ mod tests {
         assert_eq!(s2.sharded_jobs, 2);
         assert_eq!(s2.halo_bytes_per_step, 64);
         assert!((s2.halo_compaction_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn durability_gauges_record_and_render_at_line_end() {
+        let m = Metrics::default();
+        m.record_checkpoint(1024, 0.002);
+        m.record_checkpoint(512, f64::NAN); // pathological duration: counted, 0 µs
+        m.checkpoint_failed();
+        m.record_recovery(3, 2);
+        m.record_relayout(true);
+        m.record_relayout(true);
+        m.record_relayout(false);
+        let s = m.snapshot();
+        assert_eq!((s.checkpoints, s.checkpoint_failures), (2, 1));
+        assert_eq!(s.checkpoint_bytes, 1536);
+        assert_eq!(s.checkpoint_us, 2000);
+        assert_eq!((s.recovered_sessions, s.recovery_skipped), (3, 2));
+        assert_eq!((s.relayouts, s.relayout_failures), (2, 1));
+        let line = s.to_line();
+        // the durability section is appended after the serve front-end
+        // section, in one stable order
+        let tail = line.split("checkpoints=").nth(1).expect("section present");
+        assert!(
+            tail.starts_with(
+                "2 checkpoint_failures=1 checkpoint_bytes=1536B checkpoint_us=2000 \
+                 recovered=3 recovery_skipped=2 relayouts=2 relayout_failures=1"
+            ),
+            "{line}"
+        );
+        assert!(line.find("req_p99_us=").unwrap() < line.find("checkpoints=").unwrap());
     }
 }

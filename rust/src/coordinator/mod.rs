@@ -2,9 +2,11 @@
 //! handles, streaming progress, stateful snapshot/restore sessions), the
 //! v1 line-protocol adapter over it ([`service::serve`]), the TCP/Unix
 //! socket front-end running that protocol per connection over one shared
-//! coordinator ([`listener::SocketServer`]), job wire types, the legacy
-//! scheduler shim, and aggregate metrics. This is the layer a deployment
-//! talks to; it owns process topology and never calls Python.
+//! coordinator ([`listener::SocketServer`]), the durability subsystem
+//! ([`store::CheckpointStore`] — on-disk session checkpoints, crash
+//! recovery, live relayout), job wire types, the legacy scheduler shim,
+//! and aggregate metrics. This is the layer a deployment talks to; it
+//! owns process topology and never calls Python.
 
 pub mod api;
 pub mod job;
@@ -12,13 +14,16 @@ pub mod listener;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
+pub mod store;
 
 pub use api::{
-    Coordinator, CoordinatorConfig, InspectInfo, JobHandle, JobProgress, JobStatus, Probe,
-    ProbeResult, Request, Response, SessionInfo, SessionSnapshot, StepInfo, PROTOCOL_VERSION,
+    Coordinator, CoordinatorConfig, InspectInfo, JobHandle, JobProgress, JobStatus, PersistInfo,
+    Probe, ProbeResult, RecoveryInfo, Request, Response, SessionInfo, SessionSnapshot, StepInfo,
+    PROTOCOL_VERSION,
 };
 pub use job::{JobResult, JobSpec};
-pub use listener::SocketServer;
+pub use listener::{ListenOpts, SocketServer};
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use scheduler::{execute_job, execute_job_with_cache, Scheduler};
-pub use service::{serve, serve_session};
+pub use service::{serve, serve_session, serve_with};
+pub use store::{CheckpointRecord, CheckpointStore, StoreScan};

@@ -37,6 +37,18 @@
 //!   `snapshot SID`     full canonical state as one token.
 //!   `restore TOKEN`    bit-identical resume into a fresh session.
 //!   `close SID`        final facts, session removed.
+//!   `persist SID [steps=N] [secs=S]`
+//!                      mark the session durable: checkpoint it now into
+//!                      the `--data-dir` store and again on the given
+//!                      cadence; `persist SID off` drops durability and
+//!                      deletes the on-disk checkpoint.
+//!   `relayout SID ENGINE`
+//!                      rebuild a hot session under a different engine
+//!                      layout (byte↔packed, single↔sharded); the swap is
+//!                      hash-verified and fails closed keeping the old
+//!                      session on any mismatch.
+//!   `recover`          report the startup recovery scan (sessions
+//!                      re-opened from `--data-dir`, files skipped).
 //!
 //! Multi-connection serving: [`serve_session`] runs the same loop over
 //! one connection's stream against a **shared** [`Coordinator`] — the
@@ -64,20 +76,38 @@ shards=[auto:]N packed=0/1 overlap=0/1 compact=0/1
 squeeze-bits[:RHO[:SHARDS]]
 # verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
 stepall [N] | inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | \
-close SID | metrics | help | quit
-# serve knobs (CLI): --listen ADDR (tcp host:port or unix:PATH) --budget N --pool N --cache-mb MB";
+close SID | persist SID [steps=N] [secs=S] | persist SID off | relayout SID ENGINE | \
+recover | metrics | help | quit
+# serve knobs (CLI): --listen ADDR (tcp host:port or unix:PATH) --budget N --pool N --cache-mb MB \
+--data-dir DIR --checkpoint-steps N --checkpoint-secs S --max-conns N --drain-secs S";
 
 /// Run the service until EOF or `quit`. One session-scoped
 /// [`Coordinator`] multiplexes every job and session over a shared
 /// worker budget and one shared `MapCache`; plain v1 job lines submit +
 /// wait (run-to-completion, byte-identical output), `async=1` switches
 /// to submit-only.
-pub fn serve(input: impl BufRead, mut output: impl Write) -> std::io::Result<()> {
+pub fn serve(input: impl BufRead, output: impl Write) -> std::io::Result<()> {
     let coord = Coordinator::new(crate::util::pool::default_workers().max(2));
-    serve_session(&coord, input, &mut output)?;
+    serve_with(&coord, input, output)
+}
+
+/// [`serve`] against a caller-supplied [`Coordinator`] — the stdin
+/// front-end of `squeeze serve --data-dir …`, where the coordinator
+/// carries a checkpoint store and recovered sessions. On EOF/`quit`,
+/// joins in-flight jobs, checkpoints every durable session, and emits
+/// the final metrics line.
+pub fn serve_with(
+    coord: &Coordinator,
+    input: impl BufRead,
+    mut output: impl Write,
+) -> std::io::Result<()> {
+    serve_session(coord, input, &mut output)?;
     // async jobs may still be in flight: join them so the final summary
     // (and the process exit) observes every outcome
     coord.join_jobs();
+    // durable sessions get one last checkpoint so a clean exit is never
+    // staler than the last auto-checkpoint
+    coord.checkpoint_all();
     let metrics = coord.metrics();
     metrics.record_map_cache(coord.map_cache().stats());
     writeln!(output, "# {}", metrics.snapshot().to_line())?;
@@ -270,6 +300,66 @@ fn parse_verb(verb: &str, line: &str) -> Option<Result<Request, String>> {
         "restore" => SessionSnapshot::parse(rest)
             .map(|snap| Request::Restore(Box::new(snap))),
         "close" => id_arg("session id").map(|sid| Request::Close { sid }),
+        "persist" => (|| {
+            let mut toks = rest.split_whitespace();
+            let sid = toks
+                .next()
+                .ok_or("persist needs a session id")?
+                .parse::<u64>()
+                .map_err(|_| format!("bad session id {rest:?}"))?;
+            let mut every_steps = None;
+            let mut every_secs = None;
+            let mut off = false;
+            for tok in toks {
+                if tok == "off" {
+                    off = true;
+                    continue;
+                }
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad persist arg {tok:?} (want steps=/secs=/off)"))?;
+                match k {
+                    "steps" => {
+                        every_steps = Some(
+                            v.parse::<u32>().map_err(|_| format!("bad steps {v:?}"))?,
+                        );
+                    }
+                    "secs" => {
+                        every_secs = Some(
+                            v.parse::<u32>().map_err(|_| format!("bad secs {v:?}"))?,
+                        );
+                    }
+                    other => return Err(format!("unknown persist key {other:?}")),
+                }
+            }
+            if off && (every_steps.is_some() || every_secs.is_some()) {
+                return Err("persist off takes no cadence args".to_string());
+            }
+            Ok(Request::Persist { sid, every_steps, every_secs, off })
+        })(),
+        "relayout" => (|| {
+            let mut toks = rest.split_whitespace();
+            let sid = toks
+                .next()
+                .ok_or("relayout needs a session id")?
+                .parse::<u64>()
+                .map_err(|_| format!("bad session id {rest:?}"))?;
+            let engine = toks
+                .next()
+                .ok_or("relayout needs an engine spec (e.g. squeeze-bits:16:4)")?
+                .to_string();
+            if toks.next().is_some() {
+                return Err(format!("relayout takes exactly SID ENGINE, got {rest:?}"));
+            }
+            Ok(Request::Relayout { sid, engine })
+        })(),
+        "recover" => {
+            if rest.is_empty() {
+                Ok(Request::Recovery)
+            } else {
+                Err(format!("recover takes no arguments, got {rest:?}"))
+            }
+        }
         _ => return None,
     };
     Some(req)
@@ -363,6 +453,28 @@ fn render(resp: Response) -> String {
             "CLOSED {} steps={} population={} hash={:#018x}",
             info.sid, info.steps_done, info.population, info.state_hash
         ),
+        Response::Persisted(info) => format!(
+            "PERSIST {} steps={} bytes={} hash={:#018x} every_steps={} every_secs={}",
+            info.sid, info.steps_done, info.bytes, info.state_hash, info.every_steps,
+            info.every_secs
+        ),
+        Response::PersistOff { sid } => format!("PERSIST {sid} off"),
+        Response::Relayouted(info) => format!(
+            "RELAYOUT {} engine={} cells={} steps={} population={} hash={:#018x}",
+            info.sid, info.engine, info.cells, info.steps_done, info.population, info.state_hash
+        ),
+        Response::Recovery(report) => {
+            let mut line = format!(
+                "RECOVER data_dir={} recovered={} skipped={}",
+                report.data_dir,
+                report.recovered.len(),
+                report.skipped.len()
+            );
+            for sid in &report.recovered {
+                line.push_str(&format!(" sid={sid}"));
+            }
+            line
+        }
         Response::Metrics(snap) => format!("# {}", snap.to_line()),
         Response::Error { id, message } => format!("ERR {id} {message}"),
     }
@@ -437,6 +549,11 @@ mod tests {
             "shards=[auto:]N",
             "stepall [N]",
             "--listen ADDR",
+            "persist SID [steps=N] [secs=S]",
+            "relayout SID ENGINE",
+            "recover",
+            "--data-dir DIR",
+            "--max-conns N",
         ] {
             assert!(out.contains(needle), "help is missing {needle:?}: {out}");
         }
@@ -611,6 +728,62 @@ mod tests {
             .parse()
             .unwrap();
         assert!(line.contains(&format!("region[0:81]={pop}")), "{out}");
+    }
+
+    #[test]
+    fn durability_verbs_error_cleanly_without_a_store() {
+        // the default stdin serve has no --data-dir: persist and recover
+        // must answer structured errors, and the session must survive
+        let out = run_session(
+            "open engine=squeeze:4 r=4 workers=1 seed=3\n\
+             persist 1\n\
+             recover\n\
+             step 1 1\n\
+             close 1\nquit\n",
+        );
+        assert_eq!(out.lines().filter(|l| l.starts_with("ERR")).count(), 2, "{out}");
+        assert!(out.contains("no checkpoint store"), "{out}");
+        assert!(out.contains("CLOSED 1"), "{out}");
+        // malformed usages are caught in the parser, not the API
+        let bad = run_session("persist\npersist 1 volume=3\nrelayout 1\nrecover now\nquit\n");
+        assert_eq!(bad.lines().filter(|l| l.starts_with("ERR")).count(), 4, "{bad}");
+    }
+
+    #[test]
+    fn relayout_preserves_state_and_continues_bit_identically() {
+        let out = run_session(
+            "engine=squeeze:4 r=5 steps=5 workers=1 seed=9\n\
+             open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             step 1 3\n\
+             relayout 1 squeeze-bits:4:2\n\
+             step 1 2\n\
+             close 1\n\
+             quit\n",
+        );
+        assert!(!out.contains("ERR"), "{out}");
+        let relayout = out.lines().find(|l| l.starts_with("RELAYOUT 1")).unwrap();
+        assert!(relayout.contains("engine=sharded-squeeze-bits"), "{out}");
+        assert!(relayout.contains("steps=3"), "{out}");
+        // the relayouted session finishes on the one-shot job's hash
+        let job_hash = out
+            .lines()
+            .find(|l| !l.starts_with('#') && l.split('\t').count() > 3)
+            .and_then(|l| l.split('\t').last())
+            .unwrap();
+        let closed = out.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+        assert!(closed.contains("steps=5"), "{out}");
+        assert!(closed.contains(&format!("hash={job_hash}")), "{out}");
+        // a bogus target fails closed: ERR, then the session still steps
+        let bad = run_session(
+            "open engine=squeeze:4 r=5 workers=1 seed=9\n\
+             relayout 1 warp-drive:9\n\
+             step 1 5\n\
+             close 1\nquit\n",
+        );
+        assert_eq!(bad.lines().filter(|l| l.starts_with("ERR")).count(), 1, "{bad}");
+        let closed = bad.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+        assert!(closed.contains("steps=5"), "{bad}");
+        assert!(closed.contains(&format!("hash={job_hash}")), "{bad}");
     }
 
     #[test]

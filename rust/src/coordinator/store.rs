@@ -1,0 +1,540 @@
+//! Persistent checkpoint store for durable coordinator sessions.
+//!
+//! One append-friendly log file per session under a `--data-dir`
+//! (`sess-<sid>.ckpt`): each write appends a self-delimiting,
+//! CRC-guarded, versioned record holding the session's `JobSpec` line
+//! and its canonical compact-order state bitmap. When a file would grow
+//! past a small multiple of one record it is compacted — the newest
+//! record is rewritten alone via temp-file + atomic rename — so steady
+//! state keeps O(1) records per session while the common path stays a
+//! single `O_APPEND` write + fsync. Recovery scans every file, keeps
+//! the **last intact** record (a torn tail from a crash mid-append is
+//! expected and tolerated), and reports every skipped file or ignored
+//! tail with a reason; it never panics on hostile bytes and never
+//! yields a record whose CRC does not verify.
+//!
+//! A sibling `store.meta` file (same CRC + rename discipline) persists
+//! the job/session id high-water marks so a restarted coordinator
+//! never re-issues an id that a client may have seen before the crash.
+//!
+//! See DESIGN.md §5g for the format and the recovery protocol.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Record magic: "SQZK" (squeeze checkpoint).
+const MAGIC: [u8; 4] = *b"SQZK";
+/// Meta-file magic: "SQZM" (squeeze meta).
+const META_MAGIC: [u8; 4] = *b"SQZM";
+const RECORD_VERSION: u16 = 1;
+const META_VERSION: u16 = 1;
+/// Fixed-size record header: magic(4) version(2) reserved(2) sid(8)
+/// steps_done(8) state_hash(8) every_steps(4) every_secs(4)
+/// spec_len(4) bits_len(4).
+const HEADER_LEN: usize = 48;
+/// magic(4) version(2) reserved(2) next_job(8) next_session(8) crc(4).
+const META_LEN: usize = 28;
+
+/// One durable session checkpoint: everything `Coordinator::restore`
+/// needs (spec line + canonical bits + expected hash) plus the
+/// auto-checkpoint cadence so recovery re-arms the policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointRecord {
+    pub sid: u64,
+    pub steps_done: u64,
+    pub state_hash: u64,
+    /// Auto-checkpoint every N steps (0 = off).
+    pub every_steps: u32,
+    /// Auto-checkpoint every S seconds (0 = off).
+    pub every_secs: u32,
+    /// `JobSpec::to_line()` of the session (exact round-trip).
+    pub spec_line: String,
+    /// Canonical compact-order bitmap from `Engine::export_state`.
+    pub bits: Vec<u8>,
+}
+
+/// Result of a store scan: the recoverable records (one per session,
+/// sorted by sid) plus `(file, reason)` for everything skipped or
+/// partially ignored.
+#[derive(Debug, Default)]
+pub struct StoreScan {
+    pub records: Vec<CheckpointRecord>,
+    pub skipped: Vec<(String, String)>,
+}
+
+/// Bitwise CRC-32 (IEEE, poly 0xEDB88320). Checkpoint records are
+/// written once per cadence tick, so a table-free loop is plenty.
+pub(crate) fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn encode_record(rec: &CheckpointRecord) -> Vec<u8> {
+    let spec = rec.spec_line.as_bytes();
+    let mut out = Vec::with_capacity(HEADER_LEN + spec.len() + rec.bits.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&RECORD_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&rec.sid.to_le_bytes());
+    out.extend_from_slice(&rec.steps_done.to_le_bytes());
+    out.extend_from_slice(&rec.state_hash.to_le_bytes());
+    out.extend_from_slice(&rec.every_steps.to_le_bytes());
+    out.extend_from_slice(&rec.every_secs.to_le_bytes());
+    out.extend_from_slice(&(spec.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(rec.bits.len() as u32).to_le_bytes());
+    out.extend_from_slice(spec);
+    out.extend_from_slice(&rec.bits);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(raw)
+}
+
+/// Decode one record starting at `buf[off..]`. Returns the record and
+/// its encoded length. Every failure is an `Err` with a reason —
+/// hostile bytes must never panic (proptested below).
+fn decode_record(buf: &[u8], off: usize) -> Result<(CheckpointRecord, usize), String> {
+    let b = &buf[off..];
+    if b.len() < HEADER_LEN {
+        return Err(format!("truncated header ({} of {HEADER_LEN} bytes)", b.len()));
+    }
+    if b[..4] != MAGIC {
+        return Err("bad record magic".to_string());
+    }
+    let version = u16::from_le_bytes([b[4], b[5]]);
+    if version != RECORD_VERSION {
+        return Err(format!(
+            "unsupported checkpoint version {version} (this build reads v{RECORD_VERSION})"
+        ));
+    }
+    let spec_len = le_u32(b, 40) as usize;
+    let bits_len = le_u32(b, 44) as usize;
+    let total = HEADER_LEN
+        .checked_add(spec_len)
+        .and_then(|t| t.checked_add(bits_len))
+        .and_then(|t| t.checked_add(4))
+        .ok_or_else(|| "record length overflow".to_string())?;
+    if b.len() < total {
+        return Err(format!("truncated record (want {total} bytes, have {})", b.len()));
+    }
+    let want_crc = le_u32(b, total - 4);
+    let got_crc = crc32(&b[..total - 4]);
+    if want_crc != got_crc {
+        return Err(format!("crc mismatch (stored {want_crc:#010x}, computed {got_crc:#010x})"));
+    }
+    let spec_line = std::str::from_utf8(&b[HEADER_LEN..HEADER_LEN + spec_len])
+        .map_err(|_| "spec line is not utf-8".to_string())?
+        .to_string();
+    let rec = CheckpointRecord {
+        sid: le_u64(b, 8),
+        steps_done: le_u64(b, 16),
+        state_hash: le_u64(b, 24),
+        every_steps: le_u32(b, 32),
+        every_secs: le_u32(b, 36),
+        spec_line,
+        bits: b[HEADER_LEN + spec_len..HEADER_LEN + spec_len + bits_len].to_vec(),
+    };
+    Ok((rec, total))
+}
+
+/// Append-or-compact threshold: rewrite once the file would exceed
+/// 4 records (or 64 KiB for tiny states) so per-session disk stays
+/// bounded while most checkpoints remain a single append.
+fn compact_threshold(record_len: u64) -> u64 {
+    (record_len * 4).max(64 << 10)
+}
+
+/// On-disk checkpoint store rooted at a data directory. All methods
+/// take `&self`; per-session file sizes are tracked under a mutex so
+/// concurrent checkpointers (executor pool + `persist` verbs) stay
+/// coherent about the append/compact decision.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    sizes: Mutex<HashMap<u64, u64>>,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<CheckpointStore, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("create data dir {}: {e}", dir.display()))?;
+        Ok(CheckpointStore { dir: dir.to_path_buf(), sizes: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn session_path(&self, sid: u64) -> PathBuf {
+        self.dir.join(format!("sess-{sid}.ckpt"))
+    }
+
+    fn sizes(&self) -> std::sync::MutexGuard<'_, HashMap<u64, u64>> {
+        self.sizes.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Persist one checkpoint record; returns the encoded byte count.
+    /// Appends when the file stays under the compaction threshold,
+    /// otherwise rewrites the newest record alone via tmp + atomic
+    /// rename. Both paths fsync before returning.
+    pub fn persist(&self, rec: &CheckpointRecord) -> Result<u64, String> {
+        let bytes = encode_record(rec);
+        let rec_len = bytes.len() as u64;
+        let path = self.session_path(rec.sid);
+        let mut sizes = self.sizes();
+        let current = sizes
+            .get(&rec.sid)
+            .copied()
+            .or_else(|| std::fs::metadata(&path).ok().map(|m| m.len()));
+        if let Some(size) = current {
+            let fits = size > 0 && size.saturating_add(rec_len) <= compact_threshold(rec_len);
+            if fits {
+                if let Ok(mut f) = std::fs::OpenOptions::new().append(true).open(&path) {
+                    f.write_all(&bytes)
+                        .and_then(|()| f.sync_all())
+                        .map_err(|e| format!("append {}: {e}", path.display()))?;
+                    sizes.insert(rec.sid, size + rec_len);
+                    return Ok(rec_len);
+                }
+            }
+        }
+        // fresh file or compaction: write the record alone, then swap in
+        let tmp = self.dir.join(format!("sess-{}.tmp", rec.sid));
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+        f.write_all(&bytes)
+            .and_then(|()| f.sync_all())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+        sizes.insert(rec.sid, rec_len);
+        Ok(rec_len)
+    }
+
+    /// Delete a session's checkpoint file (no-op if absent).
+    pub fn remove(&self, sid: u64) -> Result<(), String> {
+        self.sizes().remove(&sid);
+        match std::fs::remove_file(self.session_path(sid)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(format!("remove sess-{sid}.ckpt: {e}")),
+        }
+    }
+
+    /// Scan every `sess-*.ckpt` file, keeping the last intact record of
+    /// each. Unreadable files, garbage, and empty files land in
+    /// `skipped` with a reason; a torn tail behind a valid record is
+    /// reported but the record still recovers. Never panics.
+    pub fn load_all(&self) -> StoreScan {
+        let mut scan = StoreScan::default();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(e) => {
+                scan.skipped.push(("<data-dir>".to_string(), format!("read_dir: {e}")));
+                return scan;
+            }
+        };
+        let mut files: Vec<(String, PathBuf)> = entries
+            .flatten()
+            .filter_map(|ent| {
+                let name = ent.file_name().to_string_lossy().into_owned();
+                (name.starts_with("sess-") && name.ends_with(".ckpt"))
+                    .then(|| (name, ent.path()))
+            })
+            .collect();
+        files.sort();
+        for (name, path) in files {
+            let buf = match std::fs::read(&path) {
+                Ok(b) => b,
+                Err(e) => {
+                    scan.skipped.push((name, format!("read: {e}")));
+                    continue;
+                }
+            };
+            let mut off = 0usize;
+            let mut last: Option<CheckpointRecord> = None;
+            let mut tail_err: Option<String> = None;
+            while off < buf.len() {
+                match decode_record(&buf, off) {
+                    Ok((rec, used)) => {
+                        last = Some(rec);
+                        off += used;
+                    }
+                    Err(e) => {
+                        tail_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            match last {
+                Some(rec) => {
+                    if let Some(e) = tail_err {
+                        scan.skipped.push((
+                            name,
+                            format!(
+                                "torn tail ignored (recovered at step {}): {e}",
+                                rec.steps_done
+                            ),
+                        ));
+                    }
+                    scan.records.push(rec);
+                }
+                None => {
+                    scan.skipped.push((name, tail_err.unwrap_or_else(|| "empty file".to_string())));
+                }
+            }
+        }
+        scan.records.sort_by_key(|r| r.sid);
+        scan
+    }
+
+    /// Persist the id high-water marks (tmp + atomic rename + fsync).
+    pub fn write_meta(&self, next_job_id: u64, next_session_id: u64) -> Result<(), String> {
+        let mut out = Vec::with_capacity(META_LEN);
+        out.extend_from_slice(&META_MAGIC);
+        out.extend_from_slice(&META_VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&next_job_id.to_le_bytes());
+        out.extend_from_slice(&next_session_id.to_le_bytes());
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        let tmp = self.dir.join("store.meta.tmp");
+        let path = self.dir.join("store.meta");
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+        f.write_all(&out)
+            .and_then(|()| f.sync_all())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    }
+
+    /// Read the id high-water marks; `None` when absent or invalid
+    /// (recovery then falls back to the recovered max sid).
+    pub fn read_meta(&self) -> Option<(u64, u64)> {
+        let buf = std::fs::read(self.dir.join("store.meta")).ok()?;
+        if buf.len() != META_LEN || buf[..4] != META_MAGIC {
+            return None;
+        }
+        if u16::from_le_bytes([buf[4], buf[5]]) != META_VERSION {
+            return None;
+        }
+        if le_u32(&buf, META_LEN - 4) != crc32(&buf[..META_LEN - 4]) {
+            return None;
+        }
+        Some((le_u64(&buf, 8), le_u64(&buf, 16)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Runner;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("squeeze-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample(sid: u64, steps: u64, bits: Vec<u8>) -> CheckpointRecord {
+        CheckpointRecord {
+            sid,
+            steps_done: steps,
+            state_hash: 0xDEAD_BEEF_0BAD_F00D ^ steps,
+            every_steps: 8,
+            every_secs: 30,
+            spec_line: "fractal=sierpinski-triangle engine=squeeze:16 r=8 steps=5 \
+                        density=0.4 seed=7 rule=B3/S23 workers=2"
+                .to_string(),
+            bits,
+        }
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // IEEE CRC-32 of "123456789" is the classic check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_round_trips_through_encode_decode() {
+        let rec = sample(42, 1000, vec![0xAB; 137]);
+        let bytes = encode_record(&rec);
+        let (back, used) = decode_record(&bytes, 0).expect("decodes");
+        assert_eq!(back, rec);
+        assert_eq!(used, bytes.len());
+    }
+
+    #[test]
+    fn persist_appends_then_compacts_and_scan_keeps_last() {
+        let dir = tmpdir("compact");
+        let store = CheckpointStore::open(&dir).expect("open");
+        // small records: threshold is 64 KiB, so these all append
+        for steps in 1..=5u64 {
+            store.persist(&sample(3, steps, vec![1, 2, 3])).expect("persist");
+        }
+        let scan = store.load_all();
+        assert!(scan.skipped.is_empty(), "{:?}", scan.skipped);
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.records[0].steps_done, 5);
+        // big records: 4 × 40 KiB crosses the 4-record threshold, so the
+        // 4th persist must rewrite the file down to one record
+        let big = vec![7u8; 40 << 10];
+        for steps in 6..=9u64 {
+            store.persist(&sample(3, steps, big.clone())).expect("persist big");
+        }
+        let size = std::fs::metadata(dir.join("sess-3.ckpt")).expect("meta").len();
+        assert!(size < 2 * (big.len() as u64 + 200), "file did not compact: {size}");
+        let scan = store.load_all();
+        assert_eq!(scan.records[0].steps_done, 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_skips_garbage_and_tolerates_torn_tail() {
+        let dir = tmpdir("scan");
+        let store = CheckpointStore::open(&dir).expect("open");
+        store.persist(&sample(1, 11, vec![9; 64])).expect("persist");
+        store.persist(&sample(2, 22, vec![8; 64])).expect("persist");
+        // garbage file
+        std::fs::write(dir.join("sess-7.ckpt"), b"not a checkpoint at all").expect("write");
+        // empty file
+        std::fs::write(dir.join("sess-8.ckpt"), b"").expect("write");
+        // torn tail: append half a record to sid 2's file
+        let torn = encode_record(&sample(2, 23, vec![7; 64]));
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("sess-2.ckpt"))
+            .expect("open");
+        f.write_all(&torn[..torn.len() / 2]).expect("append torn");
+        drop(f);
+        // corrupt copy of sid 1 under a different name
+        let mut bad = encode_record(&sample(9, 99, vec![6; 64]));
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        std::fs::write(dir.join("sess-9.ckpt"), &bad).expect("write");
+
+        let scan = store.load_all();
+        let sids: Vec<u64> = scan.records.iter().map(|r| r.sid).collect();
+        assert_eq!(sids, vec![1, 2]);
+        assert_eq!(scan.records[1].steps_done, 22, "torn tail must not replace last record");
+        // garbage + empty + corrupt skipped, torn tail reported
+        assert_eq!(scan.skipped.len(), 4, "{:?}", scan.skipped);
+        assert!(scan.skipped.iter().any(|(f, r)| f == "sess-7.ckpt" && r.contains("magic")));
+        assert!(scan.skipped.iter().any(|(f, r)| f == "sess-8.ckpt" && r.contains("truncated")));
+        assert!(scan.skipped.iter().any(|(f, r)| f == "sess-9.ckpt" && r.contains("crc")));
+        assert!(scan
+            .skipped
+            .iter()
+            .any(|(f, r)| f == "sess-2.ckpt" && r.contains("torn tail ignored")));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_round_trips_and_rejects_corruption() {
+        let dir = tmpdir("meta");
+        let store = CheckpointStore::open(&dir).expect("open");
+        assert_eq!(store.read_meta(), None);
+        store.write_meta(17, 1234).expect("write meta");
+        assert_eq!(store.read_meta(), Some((17, 1234)));
+        let path = dir.join("store.meta");
+        let mut buf = std::fs::read(&path).expect("read");
+        buf[10] ^= 1;
+        std::fs::write(&path, &buf).expect("write");
+        assert_eq!(store.read_meta(), None, "corrupt meta must be rejected");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    const SPEC_LINES: [&str; 4] = [
+        "fractal=sierpinski-triangle engine=squeeze:16 r=8 steps=5 density=0.4 seed=7 \
+         rule=B3/S23 workers=2",
+        "fractal=vicsek engine=squeeze-bits:16 r=6 steps=3 density=0.3 seed=11 \
+         rule=B3/S23 workers=1",
+        "fractal=sierpinski-carpet engine=sharded-squeeze:8:3 r=5 steps=9 density=0.5 \
+         seed=42 rule=B36/S23 workers=4 overlap=1 compact=1",
+        "fractal=sierpinski-triangle engine=squeeze-bits:16:4 r=8 steps=7 density=0.4 \
+         seed=9 rule=B3/S23 workers=4 overlap=1 compact=1 shards=auto:4",
+    ];
+
+    fn gen_record(g: &mut crate::util::proptest::Gen) -> CheckpointRecord {
+        let bits_len = g.usize(0, 300);
+        let mut bits = Vec::with_capacity(bits_len);
+        for _ in 0..bits_len {
+            bits.push(g.u64(0, 255) as u8);
+        }
+        CheckpointRecord {
+            sid: g.u64(0, u64::MAX),
+            steps_done: g.u64(0, u64::MAX),
+            state_hash: g.u64(0, u64::MAX),
+            every_steps: g.u32(0, u32::MAX),
+            every_secs: g.u32(0, u32::MAX),
+            spec_line: g.choose(&SPEC_LINES).to_string(),
+            bits,
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_identity() {
+        Runner::new("store_encode_decode_identity", 0x5EED_0001).run(200, |g| {
+            let rec = gen_record(g);
+            let bytes = encode_record(&rec);
+            match decode_record(&bytes, 0) {
+                Ok((back, used)) => Runner::check(
+                    back == rec && used == bytes.len(),
+                    &format!("round-trip mismatch for sid {}", rec.sid),
+                ),
+                Err(e) => Runner::check(false, &format!("decode failed: {e}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_truncation_errors_never_panic() {
+        Runner::new("store_truncation_never_panics", 0x5EED_0002).run(100, |g| {
+            let rec = gen_record(g);
+            let bytes = encode_record(&rec);
+            let cut = g.usize(0, bytes.len() - 1);
+            Runner::check(
+                decode_record(&bytes[..cut], 0).is_err(),
+                &format!("truncation to {cut} of {} bytes must error", bytes.len()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_single_byte_corruption_detected() {
+        Runner::new("store_corruption_detected", 0x5EED_0003).run(200, |g| {
+            let rec = gen_record(g);
+            let mut bytes = encode_record(&rec);
+            let at = g.usize(0, bytes.len() - 1);
+            let flip = g.u64(1, 255) as u8;
+            bytes[at] ^= flip;
+            Runner::check(
+                decode_record(&bytes, 0).is_err(),
+                &format!("flip {flip:#04x} at byte {at} must be detected"),
+            )
+        });
+    }
+}

@@ -12,9 +12,12 @@
 //!   fig10|fig12|fig13|fig14|table2|r20   regenerate paper experiments
 //!   perf       hot-path microbenchmarks (§Perf log input)
 
+use std::path::{Path, PathBuf};
+
 use squeeze::ca::{EngineKind, Rule};
 use squeeze::coordinator::{
-    execute_job, service, CoordinatorConfig, JobResult, JobSpec, SocketServer,
+    execute_job, service, CheckpointStore, Coordinator, CoordinatorConfig, JobResult, JobSpec,
+    ListenOpts, SocketServer,
 };
 use squeeze::fractal::{catalog, expanded, Coord};
 use squeeze::harness::{figures, BenchOpts};
@@ -74,8 +77,13 @@ fn usage(cmd: Option<&str>) {
          serve      (v1 job lines + v2 verbs; stdin/stdout by default, or a socket\n             \
          front-end with --listen HOST:PORT | --listen unix:PATH — every connection\n             \
          shares one coordinator. Knobs: --budget N worker permits, --pool N executor\n             \
-         threads [0=auto], --cache-mb MB map-cache LRU budget [0=unbounded].\n             \
-         Type 'help' in a session, or see coordinator::{{service,listener,api}})\n  \
+         threads [0=auto], --cache-mb MB map-cache LRU budget [0=unbounded],\n             \
+         --max-conns N concurrent-connection cap [0=unlimited],\n             \
+         --drain-secs S graceful-shutdown drain deadline [default 5].\n             \
+         Durability: --data-dir DIR checkpoint store (crash recovery on start;\n             \
+         persist/relayout/recover verbs), --checkpoint-steps N and\n             \
+         --checkpoint-secs S default auto-checkpoint cadence [0=off].\n             \
+         Type 'help' in a session, or see coordinator::{{service,listener,api,store}})\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
          artifacts  --dir artifacts [--check]\n  \
@@ -121,12 +129,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let listen = args.get_or("listen", "");
-    if listen.is_empty() {
-        // classic mode: one session over stdin/stdout
-        let stdin = std::io::stdin();
-        let stdout = std::io::stdout();
-        return service::serve(stdin.lock(), stdout.lock()).map_err(|e| e.to_string());
-    }
+    let data_dir = args.get_or("data-dir", "");
     let budget = args
         .get_u64(
             "budget",
@@ -135,6 +138,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())? as usize;
     let pool = args.get_u64("pool", 0).map_err(|e| e.to_string())? as usize;
     let cache_mb = args.get_u64("cache-mb", 0).map_err(|e| e.to_string())?;
+    let ckpt_steps = args.get_u64("checkpoint-steps", 0).map_err(|e| e.to_string())? as u32;
+    let ckpt_secs = args.get_u64("checkpoint-secs", 0).map_err(|e| e.to_string())? as u32;
+    if !data_dir.is_empty() {
+        // fail fast on an unusable store directory — the coordinator
+        // itself degrades to in-memory, which is wrong for a CLI that
+        // was explicitly asked for durability
+        CheckpointStore::open(Path::new(&data_dir))
+            .map_err(|e| format!("--data-dir {data_dir}: {e}"))?;
+    }
     let config = CoordinatorConfig {
         budget,
         pool_threads: pool,
@@ -143,10 +155,31 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         } else {
             Some(cache_mb << 20)
         },
+        data_dir: if data_dir.is_empty() {
+            None
+        } else {
+            Some(PathBuf::from(&data_dir))
+        },
+        checkpoint_every_steps: ckpt_steps,
+        checkpoint_every_secs: ckpt_secs,
     };
-    let server = SocketServer::bind(&listen, config).map_err(|e| e.to_string())?;
+    if listen.is_empty() {
+        // classic mode: one session over stdin/stdout (with durability
+        // when --data-dir is set: recovery on start, checkpoint on EOF)
+        let coord = Coordinator::with_config(config);
+        report_recovery(&coord);
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        return service::serve_with(&coord, stdin.lock(), stdout.lock()).map_err(|e| e.to_string());
+    }
+    let max_conns = args.get_u64("max-conns", 0).map_err(|e| e.to_string())? as usize;
+    let drain_secs = args.get_u64("drain-secs", 5).map_err(|e| e.to_string())?;
+    let server = SocketServer::bind_with(&listen, config, ListenOpts { max_conns })
+        .map_err(|e| e.to_string())?;
+    let coord = server.coordinator();
+    report_recovery(&coord);
     eprintln!(
-        "# squeeze listening on {} (budget={budget} pool={} cache-mb={})",
+        "# squeeze listening on {} (budget={budget} pool={} cache-mb={} max-conns={} data-dir={})",
         server.endpoint(),
         if pool == 0 {
             "auto".to_string()
@@ -158,9 +191,96 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         } else {
             cache_mb.to_string()
         },
+        if max_conns == 0 {
+            "unlimited".to_string()
+        } else {
+            max_conns.to_string()
+        },
+        if data_dir.is_empty() {
+            "-"
+        } else {
+            data_dir.as_str()
+        },
     );
-    server.join();
+    serve_foreground(server, &coord, drain_secs);
     Ok(())
+}
+
+/// The listen-mode foreground: park until SIGTERM/SIGINT, then the
+/// graceful exit — stop accepting, drain in-flight connections with a
+/// deadline, checkpoint every durable session, release the endpoint.
+#[cfg(unix)]
+fn serve_foreground(mut server: SocketServer, coord: &Coordinator, drain_secs: u64) {
+    sig::install();
+    while !sig::shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    eprintln!("# signal: stopping accepts, draining (deadline {drain_secs}s)");
+    server.begin_shutdown();
+    let drained = server.drain(std::time::Duration::from_secs(drain_secs));
+    let (sessions, bytes) = coord.checkpoint_all();
+    eprintln!("# shutdown: drained={drained} checkpointed_sessions={sessions} bytes={bytes}");
+    if drained {
+        server.shutdown();
+    } else {
+        // deadline missed: detach the stragglers, they die with us
+        server.abandon();
+    }
+}
+
+/// Without unix signals there is no graceful-exit trigger: block on the
+/// accept loop exactly as before.
+#[cfg(not(unix))]
+fn serve_foreground(server: SocketServer, _coord: &Coordinator, _drain_secs: u64) {
+    server.join();
+}
+
+/// One stderr line (plus one per skipped file) describing what startup
+/// crash recovery found — the `recover` verb answers the same report.
+fn report_recovery(coord: &Coordinator) {
+    if let Some(report) = coord.recovery() {
+        eprintln!(
+            "# recovery: data_dir={} recovered={} skipped={}",
+            report.data_dir,
+            report.recovered.len(),
+            report.skipped.len()
+        );
+        for (file, why) in &report.skipped {
+            eprintln!("# recovery skipped {file}: {why}");
+        }
+    }
+}
+
+/// Minimal libc signal plumbing — a latch the serve loop polls, set
+/// from SIGTERM/SIGINT. No external crates: the handler only stores an
+/// atomic, which is async-signal-safe.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn shutdown_requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
 }
 
 fn cmd_gallery(args: &Args) -> Result<(), String> {

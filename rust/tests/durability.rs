@@ -1,0 +1,189 @@
+//! Durability integration: the kill-crash differential (a session
+//! checkpointed mid-run, crash-recovered from the store, and stepped to
+//! completion must be hash-identical to an uninterrupted twin — for
+//! byte and packed backends, single and sharded), corrupt-store
+//! recovery, live relayout across the layout matrix, and the protocol
+//! round-trip (`persist`/`recover` verbs through `serve_with`).
+
+use std::path::{Path, PathBuf};
+
+use squeeze::coordinator::{serve_with, Coordinator, CoordinatorConfig, JobSpec};
+
+/// One open line per layout corner: byte/packed × single/sharded.
+const LAYOUTS: [&str; 4] = [
+    "engine=squeeze:4 r=5 workers=1 seed=9 density=0.4",
+    "engine=squeeze-bits:4 r=5 workers=1 seed=9 density=0.4",
+    "engine=sharded-squeeze:4:3 r=5 workers=1 seed=9 density=0.4",
+    "engine=squeeze-bits:4:3 r=5 workers=1 seed=9 density=0.4",
+];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("squeeze-durable-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn durable_config(dir: &Path) -> CoordinatorConfig {
+    CoordinatorConfig {
+        budget: 2,
+        data_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+/// The 6-step uninterrupted twin's canonical hash for `line`.
+fn twin_hash(line: &str, steps: u32) -> u64 {
+    let twin = Coordinator::new(2);
+    let info = twin.open(JobSpec::parse_line(0, line).unwrap()).unwrap();
+    twin.step(info.sid, steps).unwrap();
+    twin.close(info.sid).unwrap().state_hash
+}
+
+#[test]
+fn crash_recovery_matches_uninterrupted_twin_across_layouts() {
+    for (i, line) in LAYOUTS.iter().enumerate() {
+        let dir = tmpdir(&format!("diff{i}"));
+        let want = twin_hash(line, 6);
+
+        // durable run: checkpoint every step, then "crash" — drop the
+        // coordinator mid-run with no close and no graceful shutdown
+        let coord = Coordinator::with_config(durable_config(&dir));
+        let spec = JobSpec::parse_line(0, line).unwrap();
+        let sid = coord.open(spec.clone()).unwrap().sid;
+        coord.persist(sid, Some(1), None).unwrap();
+        coord.step(sid, 3).unwrap();
+        drop(coord);
+
+        // restart on the same data dir: recovered at step 3, then the
+        // continued run lands on the uninterrupted hash
+        let coord = Coordinator::with_config(durable_config(&dir));
+        let report = coord.recovery().expect("recovery report");
+        assert_eq!(report.recovered, vec![sid], "layout {line}: {report:?}");
+        assert!(report.skipped.is_empty(), "layout {line}: {report:?}");
+        let info = coord.step(sid, 3).unwrap();
+        assert_eq!(info.steps_done, 6, "layout {line}");
+        assert_eq!(coord.close(sid).unwrap().state_hash, want, "layout {line}");
+
+        // fresh ids resume past the recovered high-water mark
+        let fresh = coord.open(spec).unwrap();
+        assert!(fresh.sid > sid, "sid {} not past recovered {sid}", fresh.sid);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn recovery_skips_corrupt_files_and_recovers_the_rest() {
+    let dir = tmpdir("corrupt");
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let a = coord.open(JobSpec::parse_line(0, LAYOUTS[0]).unwrap()).unwrap().sid;
+    let b = coord.open(JobSpec::parse_line(0, LAYOUTS[1]).unwrap()).unwrap().sid;
+    coord.persist(a, Some(1), None).unwrap();
+    coord.persist(b, Some(1), None).unwrap();
+    coord.step(a, 2).unwrap();
+    coord.step(b, 2).unwrap();
+    drop(coord);
+
+    // session a's log becomes garbage end to end; a stray truncated
+    // file rides along in the directory
+    std::fs::write(dir.join(format!("sess-{a}.ckpt")), b"not a checkpoint at all").unwrap();
+    std::fs::write(dir.join("sess-999.ckpt"), vec![0u8; 7]).unwrap();
+
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let report = coord.recovery().expect("recovery report");
+    assert_eq!(report.recovered, vec![b], "{report:?}");
+    assert_eq!(report.skipped.len(), 2, "{report:?}");
+    // the survivor still steps; the wreck is a clean error, not a panic
+    // or a silently-loaded torn state
+    assert_eq!(coord.step(b, 1).unwrap().steps_done, 3);
+    assert!(coord.step(a, 1).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_checkpoint_recovers_at_its_last_intact_record() {
+    let dir = tmpdir("stale");
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let sid = coord.open(JobSpec::parse_line(0, LAYOUTS[0]).unwrap()).unwrap().sid;
+    coord.persist(sid, Some(1), None).unwrap();
+    coord.step(sid, 1).unwrap();
+    coord.step(sid, 1).unwrap();
+    drop(coord);
+
+    // tear the tail: chop bytes off the end of the log, clipping the
+    // newest record — recovery must fall back to the previous one
+    let path = dir.join(format!("sess-{sid}.ckpt"));
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let report = coord.recovery().expect("recovery report");
+    assert_eq!(report.recovered, vec![sid], "{report:?}");
+    // the torn tail is reported, not fatal
+    assert_eq!(report.skipped.len(), 1, "{report:?}");
+    assert!(report.skipped[0].1.contains("torn tail"), "{report:?}");
+    // recovered at step 1: finishing the run still matches the twin
+    let info = coord.step(sid, 5).unwrap();
+    assert_eq!(info.steps_done, 6);
+    assert_eq!(coord.close(sid).unwrap().state_hash, twin_hash(LAYOUTS[0], 6));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn relayout_matrix_preserves_hash_and_fails_closed() {
+    let want = twin_hash(LAYOUTS[0], 8);
+    let coord = Coordinator::new(2);
+    let sid = coord.open(JobSpec::parse_line(0, LAYOUTS[0]).unwrap()).unwrap().sid;
+    // byte single → packed single → byte sharded → packed sharded →
+    // back to byte single, stepping between relayouts
+    let targets = ["squeeze-bits:4", "sharded-squeeze:4:3", "squeeze-bits:4:2", "squeeze:4"];
+    for (k, target) in targets.iter().enumerate() {
+        let before = coord.step(sid, 2).unwrap().state_hash;
+        let info = coord.relayout(sid, target).unwrap();
+        assert_eq!(info.state_hash, before, "relayout {target} changed state");
+        assert_eq!(info.steps_done, 2 * (k as u64 + 1), "relayout {target}");
+    }
+    // a bogus target fails closed: error surfaced, session unharmed
+    assert!(coord.relayout(sid, "warp-drive:3").is_err());
+    assert!(coord.relayout(9999, "squeeze:4").is_err());
+    let closed = coord.close(sid).unwrap();
+    assert_eq!(closed.steps_done, 8);
+    assert_eq!(closed.state_hash, want);
+}
+
+#[test]
+fn serve_with_persists_on_eof_and_recovers_over_the_protocol() {
+    let dir = tmpdir("proto");
+    let want = format!("{:#018x}", twin_hash(LAYOUTS[3], 6));
+
+    // first serve: open, arm durability, step, EOF — serve_with
+    // checkpoints durable sessions on the way out
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let script = format!("open {}\npersist 1 steps=2\nstep 1 3\n", LAYOUTS[3]);
+    let mut out = Vec::new();
+    serve_with(&coord, script.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    assert!(!out.contains("ERR"), "{out}");
+    assert!(out.lines().any(|l| l.starts_with("PERSIST 1 ")), "{out}");
+    drop(coord);
+
+    // second serve on the same dir: recover, finish, close
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let mut out = Vec::new();
+    serve_with(&coord, "recover\nstep 1 3\nclose 1\n".as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    assert!(!out.contains("ERR"), "{out}");
+    let recover = out.lines().find(|l| l.starts_with("RECOVER ")).unwrap();
+    assert!(recover.contains("recovered=1"), "{out}");
+    assert!(recover.contains("skipped=0"), "{out}");
+    let closed = out.lines().find(|l| l.starts_with("CLOSED 1")).unwrap();
+    assert!(closed.contains("steps=6"), "{out}");
+    assert!(closed.contains(&format!("hash={want}")), "{out}");
+    // close removed the durable session's checkpoint: a third start
+    // finds an empty store
+    drop(coord);
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let report = coord.recovery().expect("recovery report");
+    assert!(report.recovered.is_empty(), "{report:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

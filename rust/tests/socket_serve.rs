@@ -185,6 +185,7 @@ fn evicted_and_rebuilt_maps_step_bit_identically() {
             budget: 1,
             pool_threads: 0,
             cache_bytes,
+            ..Default::default()
         });
         let mut hashes = Vec::new();
         for i in 0..6u64 {
