@@ -26,6 +26,20 @@
 //!
 //! Exits nonzero on any mismatch — CI runs this in a small
 //! configuration as the socket-serve acceptance gate.
+//!
+//! **Chaos mode** (`--faults SPEC [--fault-seed N]`): the serve side
+//! runs under a deterministic fault plan (dropped accepts, injected
+//! store-write errors, a mid-run engine panic, …) with a durable store
+//! in a temp directory. Clients behave like robust callers — retrying
+//! dropped connects, re-issuing partial step batches, `revive`-ing
+//! quarantined sessions, resubmitting failed jobs — and the
+//! differential tightens into the self-healing acceptance gate: every
+//! surviving hash must still equal the fault-free serial run's, no
+//! session may end the run fenced, and the fault machinery must have
+//! actually fired. Keep connection faults to `conn.accept` here: mid-
+//! stream read/write drops make retried requests non-idempotent (a
+//! re-sent `step` double-steps) and are covered by `tests/chaos.rs`
+//! instead. The serial reference never sees the plan.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -88,6 +102,73 @@ impl Client {
     fn quit(mut self) {
         let _ = self.stream.write_all(b"quit\n");
     }
+
+    /// Like [`Client::connect`], but any failure (refused, accept
+    /// dropped by the fault plan, torn banner) is a `None`, not a
+    /// panic.
+    fn try_connect(endpoint: &str) -> Option<Client> {
+        let stream = TcpStream::connect(endpoint).ok()?;
+        let reader = BufReader::new(stream.try_clone().ok()?);
+        let mut c = Client { reader, stream };
+        for _ in 0..3 {
+            let mut line = String::new();
+            c.reader.read_line(&mut line).ok()?;
+            if !line.starts_with('#') {
+                return None;
+            }
+        }
+        Some(c)
+    }
+}
+
+/// Chaos-aware connect: retry through `conn.accept` drops.
+fn connect_robustly(endpoint: &str, chaos: bool) -> Client {
+    if !chaos {
+        return Client::connect(endpoint);
+    }
+    for _ in 0..40 {
+        if let Some(c) = Client::try_connect(endpoint) {
+            return c;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    panic!("server never accepted a connection at {endpoint}");
+}
+
+/// Arm durability for `sid`, retrying through injected store errors
+/// (waiting out a tripped checkpoint breaker's probe window).
+fn persist_robustly(client: &mut Client, sid: u64) {
+    for _ in 0..40 {
+        let resp = client.request(&format!("persist {sid} steps=1"));
+        if resp.starts_with("PERSIST ") {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    panic!("session {sid}: durability never armed");
+}
+
+/// Drive `sid` to `target` lifetime steps the way a robust client
+/// would: re-issue after partial batches (deadline shed, injected
+/// worker fault), `revive` after a quarantine. Successful step
+/// round-trips land their latency in `lat`.
+fn step_session_to(client: &mut Client, sid: u64, target: u64, lat: &mut Vec<f64>) {
+    for _ in 0..200 {
+        let info = client.request(&format!("inspect {sid}"));
+        let done: u64 = field(&info, "steps").parse().expect("steps gauge");
+        if done >= target {
+            return;
+        }
+        let t = Timer::start();
+        let resp = client.request(&format!("step {sid} {}", target - done));
+        if resp.starts_with("STEP ") {
+            lat.push(t.elapsed_s());
+        } else if resp.contains("quarantined") {
+            let revived = client.request(&format!("revive {sid}"));
+            assert!(revived.starts_with("REVIVED "), "revive failed: {revived}");
+        }
+    }
+    panic!("session {sid} never reached {target} steps");
 }
 
 /// `key=value` field out of a protocol line.
@@ -114,11 +195,29 @@ fn main() {
     let jobs = args.get_u64("jobs", 64).expect("--jobs");
     let cache_mb = args.get_u64("cache-mb", 8).expect("--cache-mb");
     let out_path = args.get_or("out", "BENCH_serve.json");
+    let faults = args.get("faults").map(str::to_string).filter(|s| !s.is_empty());
+    let fault_seed = args.get_u64("fault-seed", 0).expect("--fault-seed");
+    let chaos = faults.is_some();
     let config = CoordinatorConfig {
         budget: squeeze::util::pool::default_workers().max(2),
         pool_threads: 0,
         cache_bytes: Some(cache_mb << 20),
         ..Default::default()
+    };
+    // chaos mode needs a durable store (quarantined sessions revive
+    // from their checkpoints); the fault plan arms the serve side only
+    let data_dir = chaos.then(|| {
+        let dir = std::env::temp_dir().join(format!("squeeze-harness-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("harness data dir");
+        dir
+    });
+    let serve_config = CoordinatorConfig {
+        faults: faults.clone(),
+        fault_seed,
+        data_dir: data_dir.clone(),
+        breaker_probe_ms: 50,
+        ..config.clone()
     };
 
     // -- phase 1: serial reference over one in-process coordinator ----
@@ -158,7 +257,7 @@ fn main() {
 
     // -- phase 2: the same workload over TCP on one shared coordinator
     println!("[2/3] load: {conns} connections, all {sessions} sessions concurrent ...");
-    let server = SocketServer::bind("127.0.0.1:0", config).expect("bind");
+    let server = SocketServer::bind("127.0.0.1:0", serve_config).expect("bind");
     let endpoint = server.endpoint().to_string();
     // conns client threads + this thread; 3 sync points: opens done,
     // steps done (quiescent for the global sweep), sweep done
@@ -180,7 +279,7 @@ fn main() {
             let got_job_hash = Arc::clone(&got_job_hash);
             let step_latency = Arc::clone(&step_latency);
             std::thread::spawn(move || {
-                let mut client = Client::connect(&endpoint);
+                let mut client = connect_robustly(&endpoint, chaos);
                 // this connection owns session indices c, c+conns, ...
                 let my_sessions: Vec<u64> = (c..sessions).step_by(conns as usize).collect();
                 let mut my_sids = Vec::with_capacity(my_sessions.len());
@@ -188,11 +287,18 @@ fn main() {
                     let resp = client.request(&session_line(i));
                     assert!(resp.starts_with("SESSION "), "open failed: {resp}");
                     let sid: u64 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+                    if chaos {
+                        persist_robustly(&mut client, sid);
+                    }
                     my_sids.push(sid);
                 }
                 opened.wait(); // every session in the process is live now
                 let mut lat = Vec::with_capacity(my_sids.len());
                 for &sid in &my_sids {
+                    if chaos {
+                        step_session_to(&mut client, sid, steps as u64, &mut lat);
+                        continue;
+                    }
                     let t = Timer::start();
                     let resp = client.request(&format!("step {sid} {steps}"));
                     lat.push(t.elapsed_s());
@@ -201,6 +307,13 @@ fn main() {
                 step_latency.lock().unwrap().extend(lat);
                 quiescent.wait(); // control connection sweeps here
                 swept.wait();
+                // the sweep's faults (partial batches, a quarantine)
+                // are this client's to repair before closing
+                if chaos {
+                    for &sid in &my_sids {
+                        step_session_to(&mut client, sid, steps as u64 + 1, &mut Vec::new());
+                    }
+                }
                 // async job burst: this connection's share of the jobs
                 let my_jobs: Vec<u64> = (c..jobs).step_by(conns as usize).collect();
                 if !my_jobs.is_empty() {
@@ -213,7 +326,18 @@ fn main() {
                         ids.push(resp.split_whitespace().nth(1).unwrap().to_string());
                     }
                     for (&j, id) in my_jobs.iter().zip(&ids) {
-                        let row = client.request(&format!("wait {id}"));
+                        let mut row = client.request(&format!("wait {id}"));
+                        // a fault-felled job is resubmitted — results
+                        // are a pure function of the spec, so a retry
+                        // that lands is the same result
+                        let mut retries = 0;
+                        while chaos && row.starts_with("ERR") && retries < 5 {
+                            let resub = client.request(&job_line(j));
+                            assert!(resub.ends_with("submitted"), "resubmit failed: {resub}");
+                            let rid = resub.split_whitespace().nth(1).unwrap().to_string();
+                            row = client.request(&format!("wait {rid}"));
+                            retries += 1;
+                        }
                         assert!(!row.starts_with("ERR"), "job failed: {row}");
                         let hash = row.split('\t').last().unwrap().to_string();
                         got_job_hash.lock().unwrap()[j as usize] = Some(hash);
@@ -229,7 +353,7 @@ fn main() {
         })
         .collect();
 
-    let mut control = Client::connect(&endpoint);
+    let mut control = connect_robustly(&endpoint, chaos);
     opened.wait();
     let step_phase = Timer::start();
     quiescent.wait();
@@ -238,8 +362,15 @@ fn main() {
     // sees exactly the serial run's states
     let batch = control.request("stepall 1");
     assert!(batch.starts_with("BATCH stepped"), "{batch}");
-    assert_eq!(field(&batch, "sessions"), sessions.to_string(), "{batch}");
-    assert_eq!(field(&batch, "errors"), "0", "{batch}");
+    if chaos {
+        // per-session injected faults are expected mid-sweep; the
+        // clients re-step the stragglers after the barrier
+        let health = control.request("health");
+        assert!(health.starts_with("HEALTH ok"), "{health}");
+    } else {
+        assert_eq!(field(&batch, "sessions"), sessions.to_string(), "{batch}");
+        assert_eq!(field(&batch, "errors"), "0", "{batch}");
+    }
     swept.wait();
     for handle in clients {
         handle.join().expect("client thread");
@@ -277,6 +408,19 @@ fn main() {
     for needle in ["=inf", "NaN"] {
         assert!(!metrics_line.contains(needle), "bad gauge in {metrics_line}");
     }
+    if let Some(spec) = &faults {
+        // the plan must actually have fired, and self-healing must have
+        // cleaned up after it: nothing ends the run fenced
+        let retries: u64 = field(&metrics_line, "store_retries").parse().unwrap();
+        let revives: u64 = field(&metrics_line, "revives").parse().unwrap();
+        let fenced: u64 = field(&metrics_line, "quarantined").parse().unwrap();
+        println!("chaos: faults={spec} store_retries={retries} revives={revives}");
+        assert!(retries + revives > 0, "fault plan never fired: {metrics_line}");
+        assert_eq!(fenced, 0, "a session ended the run fenced: {metrics_line}");
+    }
+    if let Some(dir) = &data_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
 
     let mut lat = step_latency.lock().unwrap().clone();
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -287,7 +431,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"config\": {{\"sessions\": {sessions}, \"conns\": {conns}, \"steps\": {steps}, \
-         \"jobs\": {jobs}, \"cache_mb\": {cache_mb}}},\n  \
+         \"jobs\": {jobs}, \"cache_mb\": {cache_mb}, \"faults\": \"{}\"}},\n  \
          \"step_latency_ms\": {{\"p50\": {p50_ms:.3}, \"p99\": {p99_ms:.3}, \"count\": {}}},\n  \
          \"aggregate_cells_per_s\": {cells_per_s:.3e},\n  \
          \"cache_resident_bytes\": {resident},\n  \
@@ -298,6 +442,7 @@ fn main() {
          \"server_req_p99_us\": {},\n  \
          \"hashes_ok\": {},\n  \
          \"server_metrics\": \"{}\"\n}}\n",
+        faults.as_deref().unwrap_or("").replace('"', "'"),
         lat.len(),
         field(&metrics_line, "cache_evictions"),
         field(&metrics_line, "requests"),

@@ -36,8 +36,9 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
+use super::faults::{Backoff, BreakerTransition, CircuitBreaker, FaultAction, FaultPlan, FaultSite};
 use super::job::{JobResult, JobSpec};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::scheduler::{job_result, prepare_job_engine};
@@ -124,8 +125,14 @@ pub enum Request {
     /// count and/or byte↔packed backend), verifying the canonical hash
     /// before the swap; on any failure the original session is kept.
     Relayout { sid: u64, engine: String },
+    /// Rebuild a quarantined session from its last on-disk checkpoint.
+    Revive { sid: u64 },
     /// Report what startup crash recovery found in the `--data-dir`.
     Recovery,
+    /// Liveness + load facts for machine probes.
+    Health,
+    /// Is the coordinator still accepting work?
+    Ready,
     /// Aggregate counters and gauges.
     Metrics,
 }
@@ -150,9 +157,30 @@ pub enum Response {
     PersistOff { sid: u64 },
     /// `relayout` answers with the session's facts under its new engine.
     Relayouted(SessionInfo),
+    /// `revive` answers with the rebuilt session's facts.
+    Revived(SessionInfo),
     Recovery(Box<RecoveryInfo>),
+    Health(HealthInfo),
+    Ready(bool),
     Metrics(MetricsSnapshot),
     Error { id: u64, message: String },
+}
+
+/// Point-in-time liveness + load facts for load-balancer probes (the
+/// `health` verb and `serve --health-check`).
+#[derive(Clone, Copy, Debug)]
+pub struct HealthInfo {
+    pub uptime_s: u64,
+    /// Worker-budget permits in use / total.
+    pub busy: u64,
+    pub budget: u64,
+    pub sessions: u64,
+    /// Sessions currently fenced (engine panic or repeated hash
+    /// verification failure) awaiting `revive`.
+    pub quarantined: u64,
+    /// Sessions whose checkpoint circuit breaker is tripped.
+    pub breaker_open: u64,
+    pub ready: bool,
 }
 
 /// Outcome of one `persist` call: what was checkpointed and the armed
@@ -448,6 +476,10 @@ struct JobState {
     steps_done: AtomicU32,
     cells_per_s_bits: AtomicU64,
     cancel: AtomicBool,
+    /// `Some` when the cancel flag was raised by the watchdog rather
+    /// than a client: the job then finishes `Failed(reason)` instead of
+    /// `Cancelled`, so the caller sees a structured stall error.
+    kill_reason: Mutex<Option<String>>,
     phase: Mutex<JobPhase>,
     finished: Condvar,
 }
@@ -565,6 +597,25 @@ struct Session {
     /// `Some` once `persist`ed (or crash-recovered): the session is
     /// checkpointed to the store on this cadence and at shutdown.
     durable: Option<DurablePolicy>,
+    /// `Some(reason)` once fenced: the engine panicked mid-step or
+    /// failed hash verification twice, so its state is suspect. `step`
+    /// refuses, `inspect` still answers, `revive` rebuilds from the
+    /// last checkpoint and lifts the fence.
+    quarantined: Option<String>,
+    /// Consecutive relayout hash-verification failures; two fence the
+    /// session.
+    hash_strikes: u32,
+    /// Per-session checkpoint circuit breaker: repeated store failures
+    /// trip it open so a dead disk stops taxing the step path.
+    breaker: CircuitBreaker,
+}
+
+/// Why a step sweep stopped short of its requested count.
+enum StepFault {
+    /// The per-request deadline elapsed between steps.
+    Deadline,
+    /// The fault plan injected an `err`/`drop` at the worker seam.
+    Injected,
 }
 
 impl Session {
@@ -604,6 +655,17 @@ struct CoordInner {
     ckpt_default_secs: u32,
     /// Startup recovery report (`Some` iff a data dir was configured).
     recovery: Mutex<Option<RecoveryInfo>>,
+    /// Parsed fault-injection plan (`--faults`); `None` means every
+    /// seam short-circuits to a null check.
+    faults: Option<Arc<FaultPlan>>,
+    /// Per-request step deadline; `None` = unbounded.
+    deadline: Option<Duration>,
+    /// Breaker knobs stamped onto every new session's checkpoint
+    /// breaker.
+    breaker_threshold: u32,
+    breaker_probe: Duration,
+    /// Construction time, for health-probe uptime.
+    started: Instant,
 }
 
 impl CoordInner {
@@ -668,6 +730,27 @@ pub struct CoordinatorConfig {
     pub checkpoint_every_steps: u32,
     /// … and every S seconds (0 = off).
     pub checkpoint_every_secs: u32,
+    /// Fault-injection spec (`--faults`, see [`FaultPlan::parse`]);
+    /// `None` = every seam is a no-op. A spec that fails to parse is
+    /// dropped with a stderr note (the CLI pre-validates for a hard
+    /// error).
+    pub faults: Option<String>,
+    /// Seed for the plan's probabilistic triggers.
+    pub fault_seed: u64,
+    /// Per-`step` wall-clock deadline in milliseconds (0 = off): a
+    /// sweep that overruns stops between steps with an
+    /// `ERR deadline exceeded`, keeping the progress it made.
+    pub deadline_ms: u64,
+    /// Watchdog stall threshold in milliseconds (0 = off): a running
+    /// job publishing no progress for this long is cancelled with a
+    /// structured error.
+    pub watchdog_ms: u64,
+    /// Consecutive checkpoint failures before a session's breaker
+    /// trips open (clamped to ≥ 1).
+    pub breaker_threshold: u32,
+    /// How long a tripped breaker waits before admitting a half-open
+    /// probe.
+    pub breaker_probe_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -679,6 +762,12 @@ impl Default for CoordinatorConfig {
             data_dir: None,
             checkpoint_every_steps: 0,
             checkpoint_every_secs: 0,
+            faults: None,
+            fault_seed: 0,
+            deadline_ms: 0,
+            watchdog_ms: 0,
+            breaker_threshold: 3,
+            breaker_probe_ms: 500,
         }
     }
 }
@@ -698,6 +787,10 @@ pub struct Coordinator {
     /// `mpsc::Sender` is not `Sync` on older toolchains.
     pool_tx: Mutex<Option<mpsc::Sender<ExecMsg>>>,
     pool: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Stall watchdog (`Some` iff `watchdog_ms > 0`); stopped and
+    /// joined on drop.
+    watchdog_stop: Arc<AtomicBool>,
+    watchdog: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl Coordinator {
@@ -726,11 +819,26 @@ impl Coordinator {
             .data_dir
             .as_ref()
             .map(|dir| (dir.display().to_string(), CheckpointStore::open(dir)));
-        let (store, store_ctx) = match store_ctx {
+        let (mut store, store_ctx) = match store_ctx {
             Some((dir, Ok(store))) => (Some(store), Some((dir, None))),
             Some((dir, Err(e))) => (None, Some((dir, Some(e)))),
             None => (None, None),
         };
+        // the one fault plan for the whole process: shared by the store
+        // seams here, the step/executor loops, and (via `fault_plan`)
+        // the listener
+        let faults = config.faults.as_deref().and_then(|spec| {
+            match FaultPlan::parse(spec, config.fault_seed) {
+                Ok(plan) => Some(Arc::new(plan)),
+                Err(e) => {
+                    eprintln!("# ignoring fault spec: {e}");
+                    None
+                }
+            }
+        });
+        if let Some(store) = &mut store {
+            store.set_faults(faults.clone());
+        }
         let inner = CoordInner {
             cache: Arc::new(cache),
             metrics: Arc::new(Metrics::default()),
@@ -745,6 +853,14 @@ impl Coordinator {
             ckpt_default_steps: config.checkpoint_every_steps,
             ckpt_default_secs: config.checkpoint_every_secs,
             recovery: Mutex::new(None),
+            faults,
+            deadline: match config.deadline_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            breaker_threshold: config.breaker_threshold,
+            breaker_probe: Duration::from_millis(config.breaker_probe_ms.max(1)),
+            started: Instant::now(),
         };
         inner.mirror_budget();
         let inner = Arc::new(inner);
@@ -774,10 +890,22 @@ impl Coordinator {
                 })
             })
             .collect();
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let watchdog = match config.watchdog_ms {
+            0 => None,
+            ms => {
+                let stall = Duration::from_millis(ms);
+                let inner = Arc::clone(&inner);
+                let stop = Arc::clone(&watchdog_stop);
+                Some(std::thread::spawn(move || watchdog_loop(&inner, stall, &stop)))
+            }
+        };
         let coordinator = Coordinator {
             inner,
             pool_tx: Mutex::new(Some(tx)),
             pool: Mutex::new(pool),
+            watchdog_stop,
+            watchdog: Mutex::new(watchdog),
         };
         if let Some((data_dir, open_err)) = store_ctx {
             let report = coordinator.run_recovery(data_dir, open_err);
@@ -858,6 +986,12 @@ impl Coordinator {
         Arc::clone(&self.inner.cache)
     }
 
+    /// The parsed fault plan (`--faults`), for the listener's
+    /// connection-level seams; `None` = no injection.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.inner.faults.clone()
+    }
+
     // -- jobs ----------------------------------------------------------
 
     /// Enqueue a job for concurrent execution; returns immediately.
@@ -881,6 +1015,7 @@ impl Coordinator {
             steps_done: AtomicU32::new(0),
             cells_per_s_bits: AtomicU64::new(0),
             cancel: AtomicBool::new(false),
+            kill_reason: Mutex::new(None),
             phase: Mutex::new(JobPhase::Queued),
             finished: Condvar::new(),
         });
@@ -1029,6 +1164,12 @@ impl Coordinator {
             workers,
             ctx: None,
             durable: None,
+            quarantined: None,
+            hash_strikes: 0,
+            breaker: CircuitBreaker::new(
+                self.inner.breaker_threshold,
+                self.inner.breaker_probe,
+            ),
         })
     }
 
@@ -1109,26 +1250,65 @@ impl Coordinator {
         n: u32,
     ) -> Result<StepInfo, String> {
         let mut s = self.lock_session(sid, session)?;
+        if let Some(reason) = &s.quarantined {
+            return Err(format!(
+                "session {sid} quarantined ({reason}); revive {sid} to rebuild \
+                 from its last checkpoint"
+            ));
+        }
         let cells = s.engine.cells();
+        let deadline = self.inner.deadline;
+        let plan = self.inner.faults.clone();
+        let started = Instant::now();
         let t = Timer::start();
         // panic guard (caught *inside* the lock, so the mutex is never
         // poisoned): a mid-step engine panic leaves indeterminate state,
-        // so the session is closed rather than served torn
+        // so the session is quarantined rather than served torn — its
+        // last checkpoint (if durable) can still `revive` it. The
+        // deadline and the worker fault seam are checked *between*
+        // steps: a sweep never tears mid-step, and whatever progress
+        // landed is kept.
         let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut done = 0u32;
+            let mut fault = None;
             for _ in 0..n {
+                if let Some(limit) = deadline {
+                    if started.elapsed() >= limit {
+                        fault = Some(StepFault::Deadline);
+                        break;
+                    }
+                }
+                if let Some(plan) = &plan {
+                    match plan.check(FaultSite::Worker) {
+                        None => {}
+                        Some(FaultAction::Sleep(d)) => std::thread::sleep(d),
+                        Some(FaultAction::Panic) => panic!("injected worker panic"),
+                        Some(_) => {
+                            fault = Some(StepFault::Injected);
+                            break;
+                        }
+                    }
+                }
                 s.engine.step();
+                done += 1;
             }
+            (done, fault)
         }));
         let elapsed = t.elapsed_s();
-        if let Err(payload) = stepped {
-            drop(s);
-            let _ = self.close(sid);
-            return Err(format!(
-                "session {sid} engine panicked mid-step ({}); session closed",
-                panic_message(&payload)
-            ));
-        }
-        s.steps_done += n as u64;
+        let (done, fault) = match stepped {
+            Ok(r) => r,
+            Err(payload) => {
+                let reason =
+                    format!("engine panicked mid-step ({})", panic_message(&payload));
+                s.quarantined = Some(reason.clone());
+                self.inner.metrics.session_quarantined(true);
+                return Err(format!(
+                    "session {sid} quarantined ({reason}); revive {sid} to rebuild \
+                     from its last checkpoint"
+                ));
+            }
+        };
+        s.steps_done += done as u64;
         // auto-checkpoint: the executor-side durability driver. A due
         // cadence writes under the already-held session lock; a write
         // failure degrades to a counter + stderr note — stepping must
@@ -1137,7 +1317,7 @@ impl Coordinator {
         // lands).
         let due = match (&self.inner.store, &mut s.durable) {
             (Some(_), Some(p)) => {
-                p.steps_since += n as u64;
+                p.steps_since += done as u64;
                 (p.every_steps > 0 && p.steps_since >= p.every_steps as u64)
                     || (p.every_secs > 0
                         && p.last_write.elapsed().as_secs() >= p.every_secs as u64)
@@ -1149,16 +1329,30 @@ impl Coordinator {
                 eprintln!("# {e}");
             }
         }
-        let cells_per_s = safe_rate(cells * n as u64, elapsed);
-        self.inner.metrics.record_progress(n as u64, cells_per_s);
-        Ok(StepInfo {
-            sid,
-            stepped: n,
-            steps_done: s.steps_done,
-            population: s.engine.population(),
-            state_hash: s.engine.state_hash(),
-            cells_per_s,
-        })
+        let cells_per_s = safe_rate(cells * done as u64, elapsed);
+        self.inner.metrics.record_progress(done as u64, cells_per_s);
+        match fault {
+            None => Ok(StepInfo {
+                sid,
+                stepped: done,
+                steps_done: s.steps_done,
+                population: s.engine.population(),
+                state_hash: s.engine.state_hash(),
+                cells_per_s,
+            }),
+            Some(StepFault::Deadline) => {
+                self.inner.metrics.record_deadline_exceeded();
+                Err(format!(
+                    "deadline exceeded: session {sid} stepped {done}/{n} within \
+                     the {}ms budget (progress kept)",
+                    deadline.map(|d| d.as_millis()).unwrap_or(0)
+                ))
+            }
+            Some(StepFault::Injected) => Err(format!(
+                "session {sid} stepped {done}/{n}: injected fault at worker \
+                 (progress kept)"
+            )),
+        }
     }
 
     /// Batched stepping: advance many sessions, grouping them by their
@@ -1348,6 +1542,14 @@ impl Coordinator {
         let s = session
             .lock()
             .map_err(|_| format!("session {sid} poisoned by an earlier panic; session closed"))?;
+        // keep the self-healing gauges honest: a closed session leaves
+        // the quarantine and open-breaker populations
+        if s.quarantined.is_some() {
+            self.inner.metrics.session_quarantined(false);
+        }
+        if s.breaker.is_open() {
+            self.inner.metrics.breaker_recovered();
+        }
         // a deliberate close retires the durable state too — recovery
         // must not resurrect sessions the client ended on purpose
         if s.durable.is_some() {
@@ -1436,6 +1638,15 @@ impl Coordinator {
             .store
             .as_ref()
             .ok_or("no checkpoint store (start serve with --data-dir)")?;
+        // tripped breaker: short-circuit without touching the store
+        // until the probe timer admits a half-open attempt
+        if !s.breaker.allow() {
+            self.inner.metrics.checkpoint_failed();
+            return Err(format!(
+                "checkpoint session {}: circuit breaker open (cooling down)",
+                s.sid
+            ));
+        }
         let (every_steps, every_secs) = match &s.durable {
             Some(p) => (p.every_steps, p.every_secs),
             None => (0, 0),
@@ -1450,16 +1661,31 @@ impl Coordinator {
             bits: s.engine.export_state(),
         };
         let t = Timer::start();
-        let written = store.persist(&rec).and_then(|bytes| {
-            store
-                .write_meta(
-                    self.inner.next_job_id.load(Ordering::Relaxed),
-                    self.inner.next_session_id.load(Ordering::Relaxed),
-                )
-                .map(|()| bytes)
-        });
+        let write_once = || {
+            store.persist(&rec).and_then(|bytes| {
+                store
+                    .write_meta(
+                        self.inner.next_job_id.load(Ordering::Relaxed),
+                        self.inner.next_session_id.load(Ordering::Relaxed),
+                    )
+                    .map(|()| bytes)
+            })
+        };
+        // transient store I/O gets a bounded, jittered retry before it
+        // counts as a failure against the breaker
+        let mut backoff = Backoff::new(2, Duration::from_millis(2), s.sid ^ s.steps_done);
+        let mut written = write_once();
+        while written.is_err() {
+            let Some(delay) = backoff.next_delay() else { break };
+            self.inner.metrics.record_store_retry();
+            std::thread::sleep(delay);
+            written = write_once();
+        }
         match written {
             Ok(bytes) => {
+                if s.breaker.on_success() == BreakerTransition::Recovered {
+                    self.inner.metrics.breaker_recovered();
+                }
                 self.inner.metrics.record_checkpoint(bytes, t.elapsed_s());
                 if let Some(p) = &mut s.durable {
                     p.steps_since = 0;
@@ -1475,10 +1701,80 @@ impl Coordinator {
                 })
             }
             Err(e) => {
+                match s.breaker.on_failure() {
+                    BreakerTransition::Tripped => self.inner.metrics.breaker_tripped(true),
+                    BreakerTransition::ReTripped => {
+                        self.inner.metrics.breaker_tripped(false)
+                    }
+                    _ => {}
+                }
                 self.inner.metrics.checkpoint_failed();
                 Err(format!("checkpoint session {}: {e}", s.sid))
             }
         }
+    }
+
+    /// Rebuild a quarantined session from its last on-disk checkpoint:
+    /// fresh engine from the recorded spec, state loaded and
+    /// hash-verified, swapped in place (same sid, same workers, cadence
+    /// re-armed from the record), fence lifted. Any failure — no store,
+    /// no intact record, a hash that no longer verifies — leaves the
+    /// session fenced exactly as it was.
+    pub fn revive(&self, sid: u64) -> Result<SessionInfo, String> {
+        let store = self
+            .inner
+            .store
+            .as_ref()
+            .ok_or("no checkpoint store (start serve with --data-dir)")?;
+        let session = self.session(sid)?;
+        let mut s = self.lock_session(sid, &session)?;
+        if s.quarantined.is_none() {
+            return Err(format!("session {sid} is not quarantined"));
+        }
+        let stays = |e: String| format!("revive {sid}: {e} (session stays quarantined)");
+        let rec = store.load_session(sid).map_err(stays)?;
+        let spec = JobSpec::parse_line(0, &rec.spec_line).map_err(stays)?;
+        let snap = SessionSnapshot {
+            spec,
+            steps_done: rec.steps_done,
+            state_hash: rec.state_hash,
+            bits: rec.bits.clone(),
+        };
+        let rebuilt = self.build_restored(&snap).map_err(stays)?;
+        s.spec = rebuilt.spec;
+        s.fractal = rebuilt.fractal;
+        s.engine = rebuilt.engine;
+        s.steps_done = rebuilt.steps_done;
+        s.ctx = None;
+        s.durable = Some(DurablePolicy::new(rec.every_steps, rec.every_secs));
+        s.quarantined = None;
+        s.hash_strikes = 0;
+        self.inner.metrics.session_quarantined(false);
+        self.inner.metrics.record_revive();
+        Ok(s.info())
+    }
+
+    // -- health --------------------------------------------------------
+
+    /// Liveness + load facts for machine probes (the `health` verb).
+    pub fn health(&self) -> HealthInfo {
+        let snap = self.inner.metrics.snapshot();
+        let (busy, budget) = self.inner.budget.occupancy();
+        HealthInfo {
+            uptime_s: self.inner.started.elapsed().as_secs(),
+            busy,
+            budget,
+            sessions: snap.sessions_open,
+            quarantined: snap.quarantined,
+            breaker_open: snap.breaker_open,
+            ready: self.ready(),
+        }
+    }
+
+    /// `true` while the executor queue accepts new work (`false` once
+    /// shutdown has begun).
+    pub fn ready(&self) -> bool {
+        lock_clean(&self.pool_tx).is_some()
     }
 
     /// Live relayout: re-open hot session `sid` under a different
@@ -1514,6 +1810,12 @@ impl Coordinator {
     ) -> Result<SessionInfo, String> {
         let fail = |e: String| format!("relayout {sid} failed closed (session intact): {e}");
         let mut s = self.lock_session(sid, session)?;
+        if let Some(reason) = &s.quarantined {
+            return Err(format!(
+                "session {sid} quarantined ({reason}); revive {sid} to rebuild \
+                 from its last checkpoint"
+            ));
+        }
         let mut new_spec = s.spec.clone();
         new_spec.engine = kind;
         let sharded = matches!(
@@ -1544,6 +1846,14 @@ impl Coordinator {
         engine.load_state(&s.engine.export_state()).map_err(fail)?;
         let got = engine.state_hash();
         if got != want {
+            // two verification failures on the same session fence it:
+            // either its state or the map layer is lying, and serving
+            // more steps would compound the damage
+            s.hash_strikes += 1;
+            if s.hash_strikes >= 2 && s.quarantined.is_none() {
+                s.quarantined = Some("failed hash verification twice".to_string());
+                self.inner.metrics.session_quarantined(true);
+            }
             return Err(fail(format!(
                 "canonical hash mismatch {got:#018x} vs {want:#018x}"
             )));
@@ -1555,6 +1865,7 @@ impl Coordinator {
         s.fractal = fractal;
         s.spec = new_spec;
         s.ctx = None;
+        s.hash_strikes = 0;
         if s.durable.is_some() {
             if let Err(e) = self.write_checkpoint(&mut s) {
                 eprintln!("# {e}");
@@ -1629,6 +1940,12 @@ impl Coordinator {
                 Ok(info) => Response::Relayouted(info),
                 Err(message) => Response::Error { id: sid, message },
             },
+            Request::Revive { sid } => match self.revive(sid) {
+                Ok(info) => Response::Revived(info),
+                Err(message) => Response::Error { id: sid, message },
+            },
+            Request::Health => Response::Health(self.health()),
+            Request::Ready => Response::Ready(self.ready()),
             Request::Recovery => match self.recovery() {
                 Some(report) => Response::Recovery(Box::new(report)),
                 None => Response::Error {
@@ -1647,11 +1964,58 @@ impl Drop for Coordinator {
     /// exit on the channel's disconnect. No thread outlives the
     /// coordinator.
     fn drop(&mut self) {
+        self.watchdog_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = lock_clean(&self.watchdog).take() {
+            let _ = h.join();
+        }
         *lock_clean(&self.pool_tx) = None;
         let workers: Vec<_> = lock_clean(&self.pool).drain(..).collect();
         for h in workers {
             let _ = h.join();
         }
+    }
+}
+
+/// The stall-watchdog body: poll every running job's published step
+/// counter; one that has not moved for `stall` is cancelled with a
+/// structured kill reason (the executor turns it into a `Failed`
+/// outcome at its next between-steps cancel check). Progress publishes
+/// every [`PROGRESS_EVERY`] steps, so the threshold must comfortably
+/// exceed the time a healthy job takes to sweep that many.
+fn watchdog_loop(inner: &CoordInner, stall: Duration, stop: &AtomicBool) {
+    let tick = Duration::from_millis((stall.as_millis() as u64 / 4).clamp(10, 250));
+    // job id -> (last seen steps_done, when it last moved)
+    let mut seen: HashMap<u64, (u32, Instant)> = HashMap::new();
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        let jobs: Vec<(u64, Arc<JobState>)> = lock_clean(&inner.jobs)
+            .iter()
+            .map(|(&id, state)| (id, Arc::clone(state)))
+            .collect();
+        let mut live: HashMap<u64, (u32, Instant)> = HashMap::new();
+        for (id, state) in jobs {
+            if !matches!(&*lock_clean(&state.phase), JobPhase::Running) {
+                continue;
+            }
+            let done = state.steps_done.load(Ordering::Relaxed);
+            let since = match seen.get(&id) {
+                Some(&(prev, at)) if prev == done => at,
+                _ => Instant::now(),
+            };
+            if since.elapsed() >= stall {
+                *lock_clean(&state.kill_reason) = Some(format!(
+                    "watchdog: job {id} made no progress past step {done} for {}ms; cancelled",
+                    stall.as_millis()
+                ));
+                state.cancel.store(true, Ordering::Relaxed);
+                inner.metrics.record_watchdog_cancel();
+                // cancelled: dropped from the watch map so it is not
+                // re-cancelled every tick while unwinding
+                continue;
+            }
+            live.insert(id, (done, since));
+        }
+        seen = live;
     }
 }
 
@@ -1766,7 +2130,25 @@ fn run_job_body(inner: &CoordInner, spec: &JobSpec, state: &JobState) -> JobOutc
             if since_publish > 0 {
                 publish(done - 1, since_publish);
             }
-            return JobOutcome::Cancelled;
+            // a watchdog kill is a structured failure; a client cancel
+            // stays a plain Cancelled
+            return match lock_clean(&state.kill_reason).take() {
+                Some(reason) => JobOutcome::Failed(reason),
+                None => JobOutcome::Cancelled,
+            };
+        }
+        if let Some(plan) = &inner.faults {
+            match plan.check(FaultSite::Worker) {
+                None => {}
+                Some(FaultAction::Sleep(d)) => std::thread::sleep(d),
+                Some(FaultAction::Panic) => panic!("injected worker panic"),
+                Some(_) => {
+                    if since_publish > 0 {
+                        publish(done - 1, since_publish);
+                    }
+                    return JobOutcome::Failed("injected fault at worker".into());
+                }
+            }
         }
         engine.step();
         since_publish += 1;

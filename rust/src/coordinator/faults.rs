@@ -1,0 +1,512 @@
+//! Deterministic fault injection and the self-healing primitives it
+//! proves out: bounded retry with jittered exponential backoff and the
+//! per-session checkpoint circuit breaker.
+//!
+//! A [`FaultPlan`] is parsed from a `--faults` spec — semicolon-
+//! separated rules of the form `site:action@trigger`:
+//!
+//! ```text
+//! store.write:err@0.02;worker:panic@step=37;conn:drop@n=50;store.fsync:delay=80ms@0.1
+//! ```
+//!
+//! Sites name the three injection seams (store I/O, the executor step
+//! loop, the listener); the `store` and `conn` patterns match their
+//! whole family. Actions are `err` (the operation fails), `panic` (the
+//! worker unwinds), `drop` (the connection dies), and `delay=Nms` /
+//! `stall=Nms` (the operation sleeps first, then proceeds). Triggers
+//! are a probability (`@0.02`, drawn from a seeded generator), a
+//! one-shot ordinal (`@step=37`: the 37th matching event fires once and
+//! disarms), or a cadence (`@n=50`: every 50th matching event). Rule
+//! counters are monotonic per rule, so a plan's firing sequence is a
+//! pure function of its seed and the observed event sequence.
+//!
+//! The plan is consulted through [`FaultPlan::check`] at each seam and
+//! costs nothing when no plan is configured — every seam holds an
+//! `Option` that short-circuits to a null check.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::prng::Prng;
+
+/// Where in the stack a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `store.read` — checkpoint log scans (recovery, revive).
+    StoreRead,
+    /// `store.write` — checkpoint record appends and meta writes.
+    StoreWrite,
+    /// `store.fsync` — the durability barrier after a write.
+    StoreFsync,
+    /// `store.rename` — the compaction tmp-file swap.
+    StoreRename,
+    /// `worker` — one event per engine step in an executor loop.
+    Worker,
+    /// `conn.accept` — a listener accepting a new connection.
+    ConnAccept,
+    /// `conn.read` — a request read off an established connection.
+    ConnRead,
+    /// `conn.write` — a response write to an established connection.
+    ConnWrite,
+}
+
+impl FaultSite {
+    /// The spec-grammar name (`store.write`, `worker`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::StoreRead => "store.read",
+            FaultSite::StoreWrite => "store.write",
+            FaultSite::StoreFsync => "store.fsync",
+            FaultSite::StoreRename => "store.rename",
+            FaultSite::Worker => "worker",
+            FaultSite::ConnAccept => "conn.accept",
+            FaultSite::ConnRead => "conn.read",
+            FaultSite::ConnWrite => "conn.write",
+        }
+    }
+
+    fn family(self) -> &'static str {
+        match self {
+            FaultSite::StoreRead
+            | FaultSite::StoreWrite
+            | FaultSite::StoreFsync
+            | FaultSite::StoreRename => "store",
+            FaultSite::Worker => "worker",
+            FaultSite::ConnAccept | FaultSite::ConnRead | FaultSite::ConnWrite => "conn",
+        }
+    }
+}
+
+/// Every pattern the `site` field of a rule may use.
+const SITE_PATTERNS: [&str; 10] = [
+    "store",
+    "store.read",
+    "store.write",
+    "store.fsync",
+    "store.rename",
+    "worker",
+    "conn",
+    "conn.accept",
+    "conn.read",
+    "conn.write",
+];
+
+/// What happens when a rule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The operation fails with an `injected fault` error.
+    Err,
+    /// The worker unwinds (honoured only where panics are caught; at
+    /// store and connection seams it degrades to [`FaultAction::Err`]).
+    Panic,
+    /// The connection dies mid-operation (connection seams only; at
+    /// other seams it degrades to [`FaultAction::Err`]).
+    Drop,
+    /// The operation sleeps first, then proceeds normally.
+    Sleep(Duration),
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Trigger {
+    /// Fires with probability `p` per matching event.
+    Prob(f64),
+    /// Fires on exactly the `n`-th matching event, then disarms.
+    AtCount(u64),
+    /// Fires on every `n`-th matching event.
+    EveryN(u64),
+}
+
+struct FaultRule {
+    pattern: String,
+    action: FaultAction,
+    trigger: Trigger,
+    hits: AtomicU64,
+}
+
+impl FaultRule {
+    fn matches(&self, site: FaultSite) -> bool {
+        self.pattern == site.name() || self.pattern == site.family()
+    }
+}
+
+fn parse_action(s: &str) -> Result<FaultAction, String> {
+    if let Some(dur) = s.strip_prefix("delay=").or_else(|| s.strip_prefix("stall=")) {
+        let ms: u64 = dur
+            .strip_suffix("ms")
+            .unwrap_or(dur)
+            .parse()
+            .map_err(|_| format!("bad duration {dur:?} (want e.g. 80ms)"))?;
+        return Ok(FaultAction::Sleep(Duration::from_millis(ms)));
+    }
+    match s {
+        "err" => Ok(FaultAction::Err),
+        "panic" => Ok(FaultAction::Panic),
+        "drop" => Ok(FaultAction::Drop),
+        _ => Err(format!("unknown action {s:?} (err | panic | drop | delay=Nms | stall=Nms)")),
+    }
+}
+
+fn parse_trigger(s: &str) -> Result<Trigger, String> {
+    if let Some(n) = s.strip_prefix("step=") {
+        let n: u64 = n.parse().map_err(|_| format!("bad ordinal {n:?}"))?;
+        if n == 0 {
+            return Err("step= ordinal must be >= 1".into());
+        }
+        return Ok(Trigger::AtCount(n));
+    }
+    if let Some(n) = s.strip_prefix("n=") {
+        let n: u64 = n.parse().map_err(|_| format!("bad cadence {n:?}"))?;
+        if n == 0 {
+            return Err("n= cadence must be >= 1".into());
+        }
+        return Ok(Trigger::EveryN(n));
+    }
+    let p: f64 = s
+        .parse()
+        .map_err(|_| format!("unknown trigger {s:?} (probability | step=N | n=N)"))?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(format!("probability {p} out of [0, 1]"));
+    }
+    Ok(Trigger::Prob(p))
+}
+
+fn parse_rule(seg: &str) -> Result<FaultRule, String> {
+    let (site, rest) = seg
+        .split_once(':')
+        .ok_or_else(|| "expected site:action@trigger".to_string())?;
+    let (action, trigger) = rest
+        .split_once('@')
+        .ok_or_else(|| "expected site:action@trigger".to_string())?;
+    if !SITE_PATTERNS.contains(&site) {
+        return Err(format!("unknown site {site:?} (one of {})", SITE_PATTERNS.join(" | ")));
+    }
+    Ok(FaultRule {
+        pattern: site.to_string(),
+        action: parse_action(action)?,
+        trigger: parse_trigger(trigger)?,
+        hits: AtomicU64::new(0),
+    })
+}
+
+/// A seeded, schedule-driven fault plan: the single source of truth for
+/// every injected failure in a process. Shared behind an `Arc` by the
+/// store, the executor, and the listener.
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+    prng: Mutex<Prng>,
+    injected: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Parse `spec` (see module docs for the grammar). Probabilistic
+    /// triggers draw from a generator seeded with `seed`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for (i, seg) in spec.split(';').enumerate() {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                continue;
+            }
+            let rule =
+                parse_rule(seg).map_err(|e| format!("fault spec segment {} ({seg:?}): {e}", i + 1))?;
+            rules.push(rule);
+        }
+        if rules.is_empty() {
+            return Err("empty fault spec".into());
+        }
+        Ok(FaultPlan {
+            rules,
+            prng: Mutex::new(Prng::new(seed)),
+            injected: AtomicU64::new(0),
+        })
+    }
+
+    /// One event at `site`: every matching rule's counter advances, and
+    /// the first rule whose trigger fires decides the action.
+    pub fn check(&self, site: FaultSite) -> Option<FaultAction> {
+        let mut fired = None;
+        for rule in &self.rules {
+            if !rule.matches(site) {
+                continue;
+            }
+            let hit = rule.hits.fetch_add(1, Ordering::Relaxed) + 1;
+            let fire = match rule.trigger {
+                Trigger::Prob(p) => {
+                    let mut prng = match self.prng.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    prng.coin(p)
+                }
+                Trigger::AtCount(n) => hit == n,
+                Trigger::EveryN(n) => hit % n == 0,
+            };
+            if fire && fired.is_none() {
+                fired = Some(rule.action);
+            }
+        }
+        if fired.is_some() {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// Total faults this plan has injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+// ---- bounded retry with jittered exponential backoff ----------------
+
+/// Retry pacing for transient store I/O: a bounded number of retries,
+/// each delay doubling from `base` with deterministic jitter drawn from
+/// `seed` (so a failing run replays identically).
+pub struct Backoff {
+    retries_left: u32,
+    delay: Duration,
+    prng: Prng,
+}
+
+impl Backoff {
+    pub fn new(retries: u32, base: Duration, seed: u64) -> Backoff {
+        Backoff { retries_left: retries, delay: base.max(Duration::from_micros(1)), prng: Prng::new(seed) }
+    }
+
+    /// The delay to sleep before the next retry, or `None` once the
+    /// retry budget is spent.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        if self.retries_left == 0 {
+            return None;
+        }
+        self.retries_left -= 1;
+        let jitter = Duration::from_micros(self.prng.below((self.delay.as_micros() as u64).max(1)));
+        let delay = self.delay + jitter;
+        self.delay *= 2;
+        Some(delay)
+    }
+}
+
+// ---- checkpoint circuit breaker -------------------------------------
+
+/// A state-machine transition worth surfacing as a gauge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerTransition {
+    /// No state change.
+    None,
+    /// Closed → Open: the failure threshold was crossed.
+    Tripped,
+    /// HalfOpen → Open: the probe failed.
+    ReTripped,
+    /// Open/HalfOpen → Closed: a probe succeeded.
+    Recovered,
+}
+
+#[derive(Debug)]
+enum BreakerState {
+    Closed { failures: u32 },
+    Open { since: Instant },
+    HalfOpen,
+}
+
+/// Per-session checkpoint circuit breaker: after `threshold`
+/// consecutive store failures the breaker trips open and checkpoint
+/// attempts short-circuit; after `probe_after` the next attempt runs
+/// half-open as a probe, closing the breaker on success.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    state: BreakerState,
+    threshold: u32,
+    probe_after: Duration,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, probe_after: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            state: BreakerState::Closed { failures: 0 },
+            threshold: threshold.max(1),
+            probe_after,
+        }
+    }
+
+    /// May an attempt run now? Open breakers transition to half-open
+    /// (and answer yes) once the probe timer has elapsed.
+    pub fn allow(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => true,
+            BreakerState::Open { since } => {
+                if since.elapsed() >= self.probe_after {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a successful attempt.
+    pub fn on_success(&mut self) -> BreakerTransition {
+        let recovered = !matches!(self.state, BreakerState::Closed { .. });
+        self.state = BreakerState::Closed { failures: 0 };
+        if recovered {
+            BreakerTransition::Recovered
+        } else {
+            BreakerTransition::None
+        }
+    }
+
+    /// Record a failed attempt.
+    pub fn on_failure(&mut self) -> BreakerTransition {
+        match self.state {
+            BreakerState::Closed { failures } => {
+                let failures = failures + 1;
+                if failures >= self.threshold {
+                    self.state = BreakerState::Open { since: Instant::now() };
+                    BreakerTransition::Tripped
+                } else {
+                    self.state = BreakerState::Closed { failures };
+                    BreakerTransition::None
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.state = BreakerState::Open { since: Instant::now() };
+                BreakerTransition::ReTripped
+            }
+            BreakerState::Open { .. } => BreakerTransition::None,
+        }
+    }
+
+    /// Is the breaker tripped (open or probing half-open)?
+    pub fn is_open(&self) -> bool {
+        !matches!(self.state, BreakerState::Closed { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_patterns_match_every_member_site() {
+        let plan = FaultPlan::parse("store:err@n=1", 0).unwrap();
+        for site in [
+            FaultSite::StoreRead,
+            FaultSite::StoreWrite,
+            FaultSite::StoreFsync,
+            FaultSite::StoreRename,
+        ] {
+            assert_eq!(plan.check(site), Some(FaultAction::Err), "{site:?}");
+        }
+        for site in [
+            FaultSite::Worker,
+            FaultSite::ConnAccept,
+            FaultSite::ConnRead,
+            FaultSite::ConnWrite,
+        ] {
+            assert_eq!(plan.check(site), None, "{site:?}");
+        }
+        assert_eq!(plan.injected(), 4);
+    }
+
+    #[test]
+    fn one_shot_trigger_fires_on_its_ordinal_and_disarms() {
+        let plan = FaultPlan::parse("worker:panic@step=3", 7).unwrap();
+        let fired: Vec<bool> =
+            (0..8).map(|_| plan.check(FaultSite::Worker).is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, false, false, false]);
+        assert_eq!(plan.injected(), 1);
+    }
+
+    #[test]
+    fn cadence_trigger_fires_every_nth_event() {
+        let plan = FaultPlan::parse("conn:drop@n=3", 7).unwrap();
+        let fired: Vec<bool> =
+            (0..9).map(|_| plan.check(FaultSite::ConnRead).is_some()).collect();
+        assert_eq!(fired, [false, false, true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn probability_trigger_is_deterministic_per_seed() {
+        let a = FaultPlan::parse("store.write:err@0.5", 11).unwrap();
+        let b = FaultPlan::parse("store.write:err@0.5", 11).unwrap();
+        let seq_a: Vec<bool> =
+            (0..256).map(|_| a.check(FaultSite::StoreWrite).is_some()).collect();
+        let seq_b: Vec<bool> =
+            (0..256).map(|_| b.check(FaultSite::StoreWrite).is_some()).collect();
+        assert_eq!(seq_a, seq_b, "same seed must replay the same schedule");
+        let fires = seq_a.iter().filter(|&&f| f).count();
+        assert!((64..=192).contains(&fires), "p=0.5 fired {fires}/256 times");
+    }
+
+    #[test]
+    fn first_matching_rule_decides_the_action() {
+        let plan = FaultPlan::parse("store.write:err@n=1;store:panic@n=1", 0).unwrap();
+        assert_eq!(plan.check(FaultSite::StoreWrite), Some(FaultAction::Err));
+        assert_eq!(plan.check(FaultSite::StoreRead), Some(FaultAction::Panic));
+    }
+
+    #[test]
+    fn delay_and_stall_actions_parse_durations() {
+        let plan = FaultPlan::parse("store.fsync:delay=80ms@n=1;worker:stall=5@n=1", 0).unwrap();
+        assert_eq!(
+            plan.check(FaultSite::StoreFsync),
+            Some(FaultAction::Sleep(Duration::from_millis(80)))
+        );
+        assert_eq!(
+            plan.check(FaultSite::Worker),
+            Some(FaultAction::Sleep(Duration::from_millis(5)))
+        );
+    }
+
+    #[test]
+    fn bad_specs_fail_with_segment_context() {
+        for (spec, needle) in [
+            ("", "empty fault spec"),
+            (";;", "empty fault spec"),
+            ("store.write", "expected site:action@trigger"),
+            ("store.write:err", "expected site:action@trigger"),
+            ("disk:err@0.5", "unknown site"),
+            ("store.write:explode@0.5", "unknown action"),
+            ("store.write:err@sometimes", "unknown trigger"),
+            ("store.write:err@1.5", "out of [0, 1]"),
+            ("store.write:err@step=0", "must be >= 1"),
+            ("store.write:err@n=0", "must be >= 1"),
+            ("store.write:delay=fastms@0.5", "bad duration"),
+        ] {
+            let err = FaultPlan::parse(spec, 0).unwrap_err();
+            assert!(err.contains(needle), "{spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_roughly_doubles() {
+        let mut backoff = Backoff::new(3, Duration::from_millis(2), 9);
+        let delays: Vec<Duration> = std::iter::from_fn(|| backoff.next_delay()).collect();
+        assert_eq!(delays.len(), 3, "retry budget is bounded");
+        for (i, d) in delays.iter().enumerate() {
+            let base = Duration::from_millis(2 << i);
+            assert!(*d >= base && *d < base * 2, "delay {i} = {d:?}");
+        }
+    }
+
+    #[test]
+    fn breaker_trips_probes_and_recovers() {
+        let mut b = CircuitBreaker::new(3, Duration::from_millis(20));
+        assert!(b.allow() && !b.is_open());
+        assert_eq!(b.on_failure(), BreakerTransition::None);
+        assert_eq!(b.on_failure(), BreakerTransition::None);
+        assert_eq!(b.on_failure(), BreakerTransition::Tripped);
+        assert!(!b.allow() && b.is_open(), "tripped breaker short-circuits");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.allow(), "probe timer elapsed: half-open admits one attempt");
+        assert_eq!(b.on_failure(), BreakerTransition::ReTripped);
+        assert!(!b.allow() && b.is_open());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.allow());
+        assert_eq!(b.on_success(), BreakerTransition::Recovered);
+        assert!(b.allow() && !b.is_open());
+        assert_eq!(b.on_success(), BreakerTransition::None);
+    }
+}

@@ -45,6 +45,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::api::{Coordinator, CoordinatorConfig};
+use super::faults::{FaultAction, FaultPlan, FaultSite};
 use super::service::serve_session;
 
 /// Listener-side knobs, separate from [`CoordinatorConfig`] because
@@ -53,8 +54,13 @@ use super::service::serve_session;
 pub struct ListenOpts {
     /// Cap on concurrent connection threads; 0 = unlimited. An accept
     /// past the cap is answered with one
-    /// `ERR 0 server at connection capacity` line and closed.
+    /// `ERR 0 server at connection capacity (max-conns=N)` line and
+    /// closed.
     pub max_conns: usize,
+    /// Idle-connection timeout in seconds; 0 = off. A client that goes
+    /// silent for this long is reaped with one `ERR 0 idle timeout`
+    /// line instead of pinning a connection slot until shutdown.
+    pub idle_secs: u64,
 }
 
 /// The shared live-connection registry: the accept thread pushes, the
@@ -310,17 +316,46 @@ fn admit<R, W>(
     R: Read + Send + 'static,
     W: Write + Send + 'static,
 {
-    let mut guard = lock_conns(conns);
-    guard.retain(|h| !h.is_finished());
-    if opts.max_conns > 0 && guard.len() >= opts.max_conns {
-        let _ = write_half.write_all(b"ERR 0 server at connection capacity\n");
-        let _ = write_half.flush();
-        return;
+    {
+        let mut guard = lock_conns(conns);
+        guard.retain(|h| !h.is_finished());
+        if opts.max_conns == 0 || guard.len() < opts.max_conns {
+            let coord = Arc::clone(coord);
+            guard.push(std::thread::spawn(move || {
+                serve_stream(&coord, read_half, write_half);
+            }));
+            return;
+        }
     }
-    let coord = Arc::clone(coord);
-    guard.push(std::thread::spawn(move || {
-        serve_stream(&coord, read_half, write_half);
-    }));
+    // over the cap: the registry lock is already released — a slow or
+    // dead client must never stall later admissions — and this stream
+    // was never registered; it drops closed after the one line telling
+    // the client the limit to back off against
+    let _ = write_half.write_all(
+        format!(
+            "ERR 0 server at connection capacity (max-conns={})\n",
+            opts.max_conns
+        )
+        .as_bytes(),
+    );
+    let _ = write_half.flush();
+}
+
+/// The `conn.accept` fault seam: `true` means this just-accepted stream
+/// is dropped on the floor (the client observes a connection closed
+/// before the banner and can retry).
+fn faulted_accept(coord: &Coordinator) -> bool {
+    let Some(plan) = coord.fault_plan() else {
+        return false;
+    };
+    match plan.check(FaultSite::ConnAccept) {
+        None => false,
+        Some(FaultAction::Sleep(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+        Some(_) => true,
+    }
 }
 
 fn spawn_tcp_accept(
@@ -336,6 +371,15 @@ fn spawn_tcp_accept(
                 break;
             }
             let Ok(stream) = stream else { continue };
+            if faulted_accept(&coord) {
+                continue; // injected accept drop: stream closes unserved
+            }
+            if opts.idle_secs > 0 {
+                // both halves share the socket, so arming the timeout
+                // before the clone covers reads on either
+                let _ = stream
+                    .set_read_timeout(Some(Duration::from_secs(opts.idle_secs)));
+            }
             let Ok(read_half) = stream.try_clone() else { continue };
             admit(&coord, &conns, opts, read_half, stream);
         }
@@ -358,19 +402,86 @@ fn spawn_unix_accept(
                 break;
             }
             let Ok(stream) = stream else { continue };
+            if faulted_accept(&coord) {
+                continue; // injected accept drop: stream closes unserved
+            }
+            if opts.idle_secs > 0 {
+                let _ = stream
+                    .set_read_timeout(Some(Duration::from_secs(opts.idle_secs)));
+            }
             let Ok(read_half) = stream.try_clone() else { continue };
             admit(&coord, &conns, opts, read_half, stream);
         }
     })
 }
 
-/// One connection: buffer both halves and run the shared protocol loop.
-/// Errors (a client vanishing mid-write) end the connection, never the
-/// server.
+/// A fault seam over one direction of a connection: an injected
+/// `err`/`drop`/`panic` surfaces as a `ConnectionReset` I/O error
+/// (ending that connection, never the server), `delay`/`stall` sleeps
+/// first and proceeds. With no plan it forwards with zero overhead.
+struct ConnIo<T> {
+    io: T,
+    plan: Option<Arc<FaultPlan>>,
+    site: FaultSite,
+}
+
+impl<T> ConnIo<T> {
+    fn new(io: T, plan: Option<Arc<FaultPlan>>, site: FaultSite) -> ConnIo<T> {
+        ConnIo { io, plan, site }
+    }
+
+    fn inject(&self) -> std::io::Result<()> {
+        let Some(plan) = &self.plan else { return Ok(()) };
+        match plan.check(self.site) {
+            None => Ok(()),
+            Some(FaultAction::Sleep(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(_) => Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                format!("injected connection fault at {}", self.site.name()),
+            )),
+        }
+    }
+}
+
+impl<T: Read> Read for ConnIo<T> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.inject()?;
+        self.io.read(buf)
+    }
+}
+
+impl<T: Write> Write for ConnIo<T> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.inject()?;
+        self.io.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.io.flush()
+    }
+}
+
+/// One connection: buffer both halves (behind the connection fault
+/// seams) and run the shared protocol loop. Errors (a client vanishing
+/// mid-write, an injected drop) end the connection, never the server —
+/// except an idle-timeout read, which first answers the one
+/// `ERR 0 idle timeout` line the reaped client will see.
 fn serve_stream<R: Read, W: Write>(coord: &Coordinator, read_half: R, write_half: W) {
-    let reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(write_half);
-    let _ = serve_session(coord, reader, &mut writer);
+    let plan = coord.fault_plan();
+    let reader = BufReader::new(ConnIo::new(read_half, plan.clone(), FaultSite::ConnRead));
+    let mut writer = BufWriter::new(ConnIo::new(write_half, plan, FaultSite::ConnWrite));
+    if let Err(e) = serve_session(coord, reader, &mut writer) {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            let _ = writer.write_all(b"ERR 0 idle timeout\n");
+            coord.metrics().record_idle_reaped();
+        }
+    }
     let _ = writer.flush();
 }
 
@@ -454,7 +565,7 @@ mod tests {
         let server = SocketServer::bind_with(
             "127.0.0.1:0",
             CoordinatorConfig::default(),
-            ListenOpts { max_conns: 1 },
+            ListenOpts { max_conns: 1, ..ListenOpts::default() },
         )
         .unwrap();
         let endpoint = server.endpoint().to_string();
@@ -463,11 +574,12 @@ mod tests {
         let mut first = TcpStream::connect(&endpoint).unwrap();
         let mut byte = [0u8; 1];
         first.read_exact(&mut byte).unwrap();
-        // second connection: one capacity line, then a clean close
+        // second connection: one capacity line naming the limit, then a
+        // clean close
         let mut second = TcpStream::connect(&endpoint).unwrap();
         let mut out = String::new();
         second.read_to_string(&mut out).unwrap();
-        assert_eq!(out, "ERR 0 server at connection capacity\n", "{out}");
+        assert_eq!(out, "ERR 0 server at connection capacity (max-conns=1)\n", "{out}");
         // closing the first frees the slot (the reap happens on the
         // next accept, so retry briefly)
         first.write_all(b"quit\n").unwrap();
@@ -482,6 +594,57 @@ mod tests {
             std::thread::sleep(Duration::from_millis(10));
         }
         assert!(admitted, "capacity never freed after the first connection closed");
+        server.shutdown();
+    }
+
+    #[test]
+    fn rejected_connections_never_enter_the_registry() {
+        let server = SocketServer::bind_with(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+            ListenOpts { max_conns: 1, ..ListenOpts::default() },
+        )
+        .unwrap();
+        let endpoint = server.endpoint().to_string();
+        let mut first = TcpStream::connect(&endpoint).unwrap();
+        let mut byte = [0u8; 1];
+        first.read_exact(&mut byte).unwrap();
+        // several rejections in a row: each full read-to-EOF proves the
+        // accept thread finished handling that stream
+        for _ in 0..3 {
+            let mut rejected = TcpStream::connect(&endpoint).unwrap();
+            let mut out = String::new();
+            rejected.read_to_string(&mut out).unwrap();
+            assert!(out.contains("max-conns=1"), "{out}");
+        }
+        // the registry holds exactly the one admitted connection — a
+        // rejected socket never became a thread handle
+        assert_eq!(lock_conns(&server.conns).len(), 1);
+        first.write_all(b"quit\n").unwrap();
+        drop(first);
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_connection_is_reaped_with_a_timeout_line() {
+        let server = SocketServer::bind_with(
+            "127.0.0.1:0",
+            CoordinatorConfig::default(),
+            ListenOpts { idle_secs: 1, ..ListenOpts::default() },
+        )
+        .unwrap();
+        let endpoint = server.endpoint().to_string();
+        // connect and go silent: after idle_secs the server reaps the
+        // connection with one ERR line and a close (the read-to-EOF
+        // below can only finish because the server hung up)
+        let mut stream = TcpStream::connect(&endpoint).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.contains("ERR 0 idle timeout"), "{out}");
+        assert_eq!(server.coordinator().metrics().snapshot().idle_reaped, 1);
+        // the reaped slot is free again for a live client
+        let out = tcp_client(&endpoint, "quit\n");
+        assert!(out.starts_with("# squeeze coordinator ready"), "{out}");
         server.shutdown();
     }
 

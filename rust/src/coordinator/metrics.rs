@@ -79,6 +79,21 @@ pub struct Metrics {
     /// Live relayouts applied / failed closed.
     relayouts: AtomicU64,
     relayout_failures: AtomicU64,
+    /// Self-healing counters: transient store I/O retries, per-request
+    /// deadlines blown, watchdog cancellations, idle connections reaped.
+    store_retries: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    watchdog_cancels: AtomicU64,
+    idle_reaped: AtomicU64,
+    /// Sessions currently fenced in quarantine (gauge) and total
+    /// explicit `revive` rebuilds.
+    quarantined: AtomicU64,
+    revives: AtomicU64,
+    /// Checkpoint circuit breakers: total trips (closed→open and failed
+    /// half-open probes) and sessions whose breaker is currently open
+    /// (gauge).
+    breaker_trips: AtomicU64,
+    breaker_open: AtomicU64,
 }
 
 /// A point-in-time copy of the counters.
@@ -117,6 +132,14 @@ pub struct MetricsSnapshot {
     pub recovery_skipped: u64,
     pub relayouts: u64,
     pub relayout_failures: u64,
+    pub store_retries: u64,
+    pub deadline_exceeded: u64,
+    pub watchdog_cancels: u64,
+    pub idle_reaped: u64,
+    pub quarantined: u64,
+    pub revives: u64,
+    pub breaker_trips: u64,
+    pub breaker_open: u64,
 }
 
 impl Metrics {
@@ -249,6 +272,56 @@ impl Metrics {
         }
     }
 
+    /// One transient store failure absorbed by the retry/backoff loop.
+    pub fn record_store_retry(&self) {
+        self.store_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request gave up at its `--deadline-ms` budget.
+    pub fn record_deadline_exceeded(&self) {
+        self.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The watchdog cancelled one stalled job.
+    pub fn record_watchdog_cancel(&self) {
+        self.watchdog_cancels.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One silent connection reaped at the idle timeout.
+    pub fn record_idle_reaped(&self) {
+        self.idle_reaped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A session entered (`true`) or left (`false`) quarantine.
+    pub fn session_quarantined(&self, entered: bool) {
+        if entered {
+            self.quarantined.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.quarantined.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One quarantined session rebuilt from its checkpoint.
+    pub fn record_revive(&self) {
+        self.revives.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A checkpoint circuit breaker tripped open; `first` marks a
+    /// closed→open transition (the open-breaker gauge rises), a failed
+    /// half-open probe re-trips without moving the gauge.
+    pub fn breaker_tripped(&self, first: bool) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+        if first {
+            self.breaker_open.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// An open breaker's probe succeeded (or its session closed): the
+    /// open-breaker gauge falls.
+    pub fn breaker_recovered(&self) {
+        self.breaker_open.fetch_sub(1, Ordering::Relaxed);
+    }
+
     /// Record a finished sharded job's decomposition gauges.
     pub fn record_sharding(&self, stats: ShardStats) {
         self.sharded_jobs.fetch_add(1, Ordering::Relaxed);
@@ -303,6 +376,14 @@ impl Metrics {
             recovery_skipped: self.recovery_skipped.load(Ordering::Relaxed),
             relayouts: self.relayouts.load(Ordering::Relaxed),
             relayout_failures: self.relayout_failures.load(Ordering::Relaxed),
+            store_retries: self.store_retries.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            watchdog_cancels: self.watchdog_cancels.load(Ordering::Relaxed),
+            idle_reaped: self.idle_reaped.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            revives: self.revives.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            breaker_open: self.breaker_open.load(Ordering::Relaxed),
         }
     }
 }
@@ -414,6 +495,20 @@ impl MetricsSnapshot {
             self.recovery_skipped,
             self.relayouts,
             self.relayout_failures,
+        ));
+        // self-healing gauges (appended at the very end, same stability
+        // rule: parsers keep their field offsets)
+        line.push_str(&format!(
+            " store_retries={} deadline_exceeded={} watchdog_cancels={} quarantined={} \
+             revives={} breaker_trips={} breaker_open={} idle_reaped={}",
+            self.store_retries,
+            self.deadline_exceeded,
+            self.watchdog_cancels,
+            self.quarantined,
+            self.revives,
+            self.breaker_trips,
+            self.breaker_open,
+            self.idle_reaped,
         ));
         line
     }
@@ -608,5 +703,38 @@ mod tests {
             "{line}"
         );
         assert!(line.find("req_p99_us=").unwrap() < line.find("checkpoints=").unwrap());
+    }
+
+    #[test]
+    fn self_healing_gauges_record_and_render_at_line_end() {
+        let m = Metrics::default();
+        m.record_store_retry();
+        m.record_store_retry();
+        m.record_deadline_exceeded();
+        m.record_watchdog_cancel();
+        m.record_idle_reaped();
+        m.session_quarantined(true);
+        m.session_quarantined(true);
+        m.session_quarantined(false);
+        m.record_revive();
+        m.breaker_tripped(true);
+        m.breaker_tripped(false); // failed half-open probe: trips, gauge holds
+        let s = m.snapshot();
+        assert_eq!(s.store_retries, 2);
+        assert_eq!((s.deadline_exceeded, s.watchdog_cancels, s.idle_reaped), (1, 1, 1));
+        assert_eq!((s.quarantined, s.revives), (1, 1));
+        assert_eq!((s.breaker_trips, s.breaker_open), (2, 1));
+        m.breaker_recovered();
+        assert_eq!(m.snapshot().breaker_open, 0);
+        let line = s.to_line();
+        let tail = line.split("store_retries=").nth(1).expect("section present");
+        assert!(
+            tail.starts_with(
+                "2 deadline_exceeded=1 watchdog_cancels=1 quarantined=1 revives=1 \
+                 breaker_trips=2 breaker_open=1 idle_reaped=1"
+            ),
+            "{line}"
+        );
+        assert!(line.find("relayout_failures=").unwrap() < line.find("store_retries=").unwrap());
     }
 }

@@ -9,6 +9,7 @@
 //! owns process topology and never calls Python.
 
 pub mod api;
+pub mod faults;
 pub mod job;
 pub mod listener;
 pub mod metrics;
@@ -17,10 +18,11 @@ pub mod service;
 pub mod store;
 
 pub use api::{
-    Coordinator, CoordinatorConfig, InspectInfo, JobHandle, JobProgress, JobStatus, PersistInfo,
-    Probe, ProbeResult, RecoveryInfo, Request, Response, SessionInfo, SessionSnapshot, StepInfo,
-    PROTOCOL_VERSION,
+    Coordinator, CoordinatorConfig, HealthInfo, InspectInfo, JobHandle, JobProgress, JobStatus,
+    PersistInfo, Probe, ProbeResult, RecoveryInfo, Request, Response, SessionInfo, SessionSnapshot,
+    StepInfo, PROTOCOL_VERSION,
 };
+pub use faults::{Backoff, BreakerTransition, CircuitBreaker, FaultAction, FaultPlan, FaultSite};
 pub use job::{JobResult, JobSpec};
 pub use listener::{ListenOpts, SocketServer};
 pub use metrics::{Metrics, MetricsSnapshot};

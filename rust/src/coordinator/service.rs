@@ -49,6 +49,11 @@
 //!                      session on any mismatch.
 //!   `recover`          report the startup recovery scan (sessions
 //!                      re-opened from `--data-dir`, files skipped).
+//!   `revive SID`       rebuild a quarantined session from its last
+//!                      checkpoint (hash-verified) and lift the fence.
+//!   `health`           one-line liveness + load facts: uptime, budget
+//!                      occupancy, quarantined sessions, open breakers.
+//!   `ready`            `READY ok` while the coordinator accepts work.
 //!
 //! Multi-connection serving: [`serve_session`] runs the same loop over
 //! one connection's stream against a **shared** [`Coordinator`] — the
@@ -77,9 +82,11 @@ squeeze-bits[:RHO[:SHARDS]]
 # verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
 stepall [N] | inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | \
 close SID | persist SID [steps=N] [secs=S] | persist SID off | relayout SID ENGINE | \
-recover | metrics | help | quit
+revive SID | recover | health | ready | metrics | help | quit
 # serve knobs (CLI): --listen ADDR (tcp host:port or unix:PATH) --budget N --pool N --cache-mb MB \
---data-dir DIR --checkpoint-steps N --checkpoint-secs S --max-conns N --drain-secs S";
+--data-dir DIR --checkpoint-steps N --checkpoint-secs S --max-conns N --drain-secs S \
+--idle-secs N --deadline-ms N --watchdog-secs S --faults SPEC --fault-seed N \
+--health-check ADDR";
 
 /// Run the service until EOF or `quit`. One session-scoped
 /// [`Coordinator`] multiplexes every job and session over a shared
@@ -353,11 +360,26 @@ fn parse_verb(verb: &str, line: &str) -> Option<Result<Request, String>> {
             }
             Ok(Request::Relayout { sid, engine })
         })(),
+        "revive" => id_arg("session id").map(|sid| Request::Revive { sid }),
         "recover" => {
             if rest.is_empty() {
                 Ok(Request::Recovery)
             } else {
                 Err(format!("recover takes no arguments, got {rest:?}"))
+            }
+        }
+        "health" => {
+            if rest.is_empty() {
+                Ok(Request::Health)
+            } else {
+                Err(format!("health takes no arguments, got {rest:?}"))
+            }
+        }
+        "ready" => {
+            if rest.is_empty() {
+                Ok(Request::Ready)
+            } else {
+                Err(format!("ready takes no arguments, got {rest:?}"))
             }
         }
         _ => return None,
@@ -463,6 +485,27 @@ fn render(resp: Response) -> String {
             "RELAYOUT {} engine={} cells={} steps={} population={} hash={:#018x}",
             info.sid, info.engine, info.cells, info.steps_done, info.population, info.state_hash
         ),
+        Response::Revived(info) => format!(
+            "REVIVED {} engine={} cells={} steps={} population={} hash={:#018x}",
+            info.sid, info.engine, info.cells, info.steps_done, info.population, info.state_hash
+        ),
+        Response::Health(h) => format!(
+            "HEALTH {} uptime_s={} busy={}/{} sessions={} quarantined={} breaker_open={}",
+            if h.ready { "ok" } else { "draining" },
+            h.uptime_s,
+            h.busy,
+            h.budget,
+            h.sessions,
+            h.quarantined,
+            h.breaker_open
+        ),
+        Response::Ready(ready) => {
+            if ready {
+                "READY ok".to_string()
+            } else {
+                "READY no reason=draining".to_string()
+            }
+        }
         Response::Recovery(report) => {
             let mut line = format!(
                 "RECOVER data_dir={} recovered={} skipped={}",
@@ -551,12 +594,40 @@ mod tests {
             "--listen ADDR",
             "persist SID [steps=N] [secs=S]",
             "relayout SID ENGINE",
+            "revive SID",
             "recover",
+            "health",
+            "ready",
             "--data-dir DIR",
             "--max-conns N",
+            "--idle-secs N",
+            "--deadline-ms N",
+            "--watchdog-secs S",
+            "--faults SPEC",
+            "--health-check ADDR",
         ] {
             assert!(out.contains(needle), "help is missing {needle:?}: {out}");
         }
+    }
+
+    #[test]
+    fn health_and_ready_answer_machine_parseable_lines() {
+        let out = run_session(
+            "open engine=squeeze:4 r=4 workers=1 seed=3\n\
+             health\n\
+             ready\n\
+             close 1\nquit\n",
+        );
+        assert!(!out.contains("ERR"), "{out}");
+        let health = out.lines().find(|l| l.starts_with("HEALTH")).unwrap();
+        assert!(health.starts_with("HEALTH ok uptime_s="), "{out}");
+        for needle in ["busy=", "sessions=1", "quarantined=0", "breaker_open=0"] {
+            assert!(health.contains(needle), "{out}");
+        }
+        assert!(out.lines().any(|l| l == "READY ok"), "{out}");
+        // trailing arguments are usage errors, same as recover's rule
+        let bad = run_session("health now\nready now\nrevive\nquit\n");
+        assert_eq!(bad.lines().filter(|l| l.starts_with("ERR")).count(), 3, "{bad}");
     }
 
     #[test]

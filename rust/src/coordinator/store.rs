@@ -22,7 +22,9 @@
 use std::collections::HashMap;
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+use super::faults::{FaultAction, FaultPlan, FaultSite};
 
 /// Record magic: "SQZK" (squeeze checkpoint).
 const MAGIC: [u8; 4] = *b"SQZK";
@@ -169,6 +171,7 @@ fn compact_threshold(record_len: u64) -> u64 {
 pub struct CheckpointStore {
     dir: PathBuf,
     sizes: Mutex<HashMap<u64, u64>>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl CheckpointStore {
@@ -176,7 +179,30 @@ impl CheckpointStore {
     pub fn open(dir: &Path) -> Result<CheckpointStore, String> {
         std::fs::create_dir_all(dir)
             .map_err(|e| format!("create data dir {}: {e}", dir.display()))?;
-        Ok(CheckpointStore { dir: dir.to_path_buf(), sizes: Mutex::new(HashMap::new()) })
+        Ok(CheckpointStore {
+            dir: dir.to_path_buf(),
+            sizes: Mutex::new(HashMap::new()),
+            faults: None,
+        })
+    }
+
+    /// Arm the store's I/O seams with a fault plan (testing/chaos only).
+    pub fn set_faults(&mut self, plan: Option<Arc<FaultPlan>>) {
+        self.faults = plan;
+    }
+
+    /// Consult the fault plan at one I/O seam. `err`, `panic`, and
+    /// `drop` all surface as an error here (store faults must never
+    /// unwind); `delay`/`stall` sleep, then the real I/O proceeds.
+    fn inject(&self, site: FaultSite) -> Result<(), String> {
+        if let Some(plan) = &self.faults {
+            match plan.check(site) {
+                Some(FaultAction::Sleep(d)) => std::thread::sleep(d),
+                Some(_) => return Err(format!("injected fault at {}", site.name())),
+                None => {}
+            }
+        }
+        Ok(())
     }
 
     pub fn dir(&self) -> &Path {
@@ -196,6 +222,7 @@ impl CheckpointStore {
     /// otherwise rewrites the newest record alone via tmp + atomic
     /// rename. Both paths fsync before returning.
     pub fn persist(&self, rec: &CheckpointRecord) -> Result<u64, String> {
+        self.inject(FaultSite::StoreWrite)?;
         let bytes = encode_record(rec);
         let rec_len = bytes.len() as u64;
         let path = self.session_path(rec.sid);
@@ -209,8 +236,9 @@ impl CheckpointStore {
             if fits {
                 if let Ok(mut f) = std::fs::OpenOptions::new().append(true).open(&path) {
                     f.write_all(&bytes)
-                        .and_then(|()| f.sync_all())
                         .map_err(|e| format!("append {}: {e}", path.display()))?;
+                    self.inject(FaultSite::StoreFsync)?;
+                    f.sync_all().map_err(|e| format!("append {}: {e}", path.display()))?;
                     sizes.insert(rec.sid, size + rec_len);
                     return Ok(rec_len);
                 }
@@ -221,9 +249,11 @@ impl CheckpointStore {
         let mut f = std::fs::File::create(&tmp)
             .map_err(|e| format!("create {}: {e}", tmp.display()))?;
         f.write_all(&bytes)
-            .and_then(|()| f.sync_all())
             .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        self.inject(FaultSite::StoreFsync)?;
+        f.sync_all().map_err(|e| format!("write {}: {e}", tmp.display()))?;
         drop(f);
+        self.inject(FaultSite::StoreRename)?;
         std::fs::rename(&tmp, &path)
             .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
         sizes.insert(rec.sid, rec_len);
@@ -263,6 +293,10 @@ impl CheckpointStore {
             .collect();
         files.sort();
         for (name, path) in files {
+            if let Err(e) = self.inject(FaultSite::StoreRead) {
+                scan.skipped.push((name, e));
+                continue;
+            }
             let buf = match std::fs::read(&path) {
                 Ok(b) => b,
                 Err(e) => {
@@ -307,8 +341,33 @@ impl CheckpointStore {
         scan
     }
 
+    /// The last intact record of one session's log, for an explicit
+    /// rebuild (`revive SID`). Same decode discipline as [`load_all`]:
+    /// a torn tail behind an intact record is silently ignored.
+    ///
+    /// [`load_all`]: CheckpointStore::load_all
+    pub fn load_session(&self, sid: u64) -> Result<CheckpointRecord, String> {
+        self.inject(FaultSite::StoreRead)?;
+        let path = self.session_path(sid);
+        let buf =
+            std::fs::read(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let mut off = 0usize;
+        let mut last: Option<CheckpointRecord> = None;
+        while off < buf.len() {
+            match decode_record(&buf, off) {
+                Ok((rec, used)) => {
+                    last = Some(rec);
+                    off += used;
+                }
+                Err(_) => break,
+            }
+        }
+        last.ok_or_else(|| format!("no intact checkpoint record in {}", path.display()))
+    }
+
     /// Persist the id high-water marks (tmp + atomic rename + fsync).
     pub fn write_meta(&self, next_job_id: u64, next_session_id: u64) -> Result<(), String> {
+        self.inject(FaultSite::StoreWrite)?;
         let mut out = Vec::with_capacity(META_LEN);
         out.extend_from_slice(&META_MAGIC);
         out.extend_from_slice(&META_VERSION.to_le_bytes());
@@ -322,9 +381,11 @@ impl CheckpointStore {
         let mut f = std::fs::File::create(&tmp)
             .map_err(|e| format!("create {}: {e}", tmp.display()))?;
         f.write_all(&out)
-            .and_then(|()| f.sync_all())
             .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        self.inject(FaultSite::StoreFsync)?;
+        f.sync_all().map_err(|e| format!("write {}: {e}", tmp.display()))?;
         drop(f);
+        self.inject(FaultSite::StoreRename)?;
         std::fs::rename(&tmp, &path)
             .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
     }
@@ -464,6 +525,43 @@ mod tests {
         buf[10] ^= 1;
         std::fs::write(&path, &buf).expect("write");
         assert_eq!(store.read_meta(), None, "corrupt meta must be rejected");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_session_returns_last_intact_record() {
+        let dir = tmpdir("loadone");
+        let store = CheckpointStore::open(&dir).expect("open");
+        assert!(store.load_session(5).is_err(), "missing file is a clean error");
+        store.persist(&sample(5, 1, vec![1; 32])).expect("persist");
+        store.persist(&sample(5, 2, vec![2; 32])).expect("persist");
+        assert_eq!(store.load_session(5).expect("load").steps_done, 2);
+        // torn tail behind the intact record is ignored
+        let torn = encode_record(&sample(5, 3, vec![3; 32]));
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("sess-5.ckpt"))
+            .expect("open");
+        f.write_all(&torn[..torn.len() / 2]).expect("append torn");
+        drop(f);
+        assert_eq!(store.load_session(5).expect("load").steps_done, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_store_faults_surface_as_errors_without_corruption() {
+        use super::super::faults::FaultPlan;
+        let dir = tmpdir("faulted");
+        let mut store = CheckpointStore::open(&dir).expect("open");
+        store.set_faults(Some(Arc::new(
+            FaultPlan::parse("store.write:err@step=1", 0).expect("plan"),
+        )));
+        let rec = sample(4, 7, vec![9; 32]);
+        let err = store.persist(&rec).expect_err("first write fails");
+        assert!(err.contains("injected fault at store.write"), "{err}");
+        // one-shot disarmed: the retry lands, and the file is intact
+        store.persist(&rec).expect("retry persists");
+        assert_eq!(store.load_session(4).expect("load"), rec);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -16,8 +16,8 @@ use std::path::{Path, PathBuf};
 
 use squeeze::ca::{EngineKind, Rule};
 use squeeze::coordinator::{
-    execute_job, service, CheckpointStore, Coordinator, CoordinatorConfig, JobResult, JobSpec,
-    ListenOpts, SocketServer,
+    execute_job, service, CheckpointStore, Coordinator, CoordinatorConfig, FaultPlan, JobResult,
+    JobSpec, ListenOpts, SocketServer,
 };
 use squeeze::fractal::{catalog, expanded, Coord};
 use squeeze::harness::{figures, BenchOpts};
@@ -83,6 +83,14 @@ fn usage(cmd: Option<&str>) {
          Durability: --data-dir DIR checkpoint store (crash recovery on start;\n             \
          persist/relayout/recover verbs), --checkpoint-steps N and\n             \
          --checkpoint-secs S default auto-checkpoint cadence [0=off].\n             \
+         Robustness: --idle-secs N idle-connection reap [0=off],\n             \
+         --deadline-ms N per-request step budget [0=off],\n             \
+         --watchdog-secs S stalled-job cancellation [0=off],\n             \
+         --faults SPEC deterministic fault injection (site:action@trigger,\n             \
+         ';'-joined; e.g. 'store.write:err@0.02;worker:panic@step=37';\n             \
+         env fallback SQUEEZE_FAULTS), --fault-seed N injection PRNG seed,\n             \
+         --health-check ADDR one-shot probe of a listening server\n             \
+         (prints its HEALTH line, exits nonzero unless 'HEALTH ok').\n             \
          Type 'help' in a session, or see coordinator::{{service,listener,api,store}})\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
@@ -128,6 +136,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    let probe_addr = args.get_or("health-check", "");
+    if !probe_addr.is_empty() {
+        // client mode: probe a *running* server and exit — none of the
+        // serve knobs below apply
+        return health_check(&probe_addr);
+    }
     let listen = args.get_or("listen", "");
     let data_dir = args.get_or("data-dir", "");
     let budget = args
@@ -140,6 +154,19 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let cache_mb = args.get_u64("cache-mb", 0).map_err(|e| e.to_string())?;
     let ckpt_steps = args.get_u64("checkpoint-steps", 0).map_err(|e| e.to_string())? as u32;
     let ckpt_secs = args.get_u64("checkpoint-secs", 0).map_err(|e| e.to_string())? as u32;
+    let deadline_ms = args.get_u64("deadline-ms", 0).map_err(|e| e.to_string())?;
+    let watchdog_secs = args.get_u64("watchdog-secs", 0).map_err(|e| e.to_string())?;
+    let fault_seed = args.get_u64("fault-seed", 0).map_err(|e| e.to_string())?;
+    let faults = args
+        .get("faults")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SQUEEZE_FAULTS").ok())
+        .filter(|s| !s.is_empty());
+    if let Some(spec) = &faults {
+        // the coordinator only warns on a bad spec; the CLI should fail
+        // hard — a chaos run with a typo'd plan silently tests nothing
+        FaultPlan::parse(spec, fault_seed).map_err(|e| format!("--faults: {e}"))?;
+    }
     if !data_dir.is_empty() {
         // fail fast on an unusable store directory — the coordinator
         // itself degrades to in-memory, which is wrong for a CLI that
@@ -162,7 +189,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         },
         checkpoint_every_steps: ckpt_steps,
         checkpoint_every_secs: ckpt_secs,
+        faults: faults.clone(),
+        fault_seed,
+        deadline_ms,
+        watchdog_ms: watchdog_secs.saturating_mul(1000),
+        ..CoordinatorConfig::default()
     };
+    if let Some(spec) = &faults {
+        eprintln!("# fault injection armed: {spec} (seed={fault_seed})");
+    }
     if listen.is_empty() {
         // classic mode: one session over stdin/stdout (with durability
         // when --data-dir is set: recovery on start, checkpoint on EOF)
@@ -174,7 +209,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let max_conns = args.get_u64("max-conns", 0).map_err(|e| e.to_string())? as usize;
     let drain_secs = args.get_u64("drain-secs", 5).map_err(|e| e.to_string())?;
-    let server = SocketServer::bind_with(&listen, config, ListenOpts { max_conns })
+    let idle_secs = args.get_u64("idle-secs", 0).map_err(|e| e.to_string())?;
+    let server = SocketServer::bind_with(&listen, config, ListenOpts { max_conns, idle_secs })
         .map_err(|e| e.to_string())?;
     let coord = server.coordinator();
     report_recovery(&coord);
@@ -204,6 +240,61 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     serve_foreground(server, &coord, drain_secs);
     Ok(())
+}
+
+/// `serve --health-check ADDR`: one-shot liveness probe of a running
+/// server. Connects (HOST:PORT or unix:PATH, same grammar as --listen),
+/// asks `health`, prints the HEALTH line to stdout and exits 0 only if
+/// the server answered `HEALTH ok` — the shape load balancers and
+/// process supervisors want.
+fn health_check(addr: &str) -> Result<(), String> {
+    let reply = if let Some(path) = addr.strip_prefix("unix:") {
+        probe_unix(path).map_err(|e| format!("health-check {addr}: {e}"))?
+    } else {
+        let stream = std::net::TcpStream::connect(addr)
+            .map_err(|e| format!("health-check {addr}: {e}"))?;
+        let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+        probe_stream(stream).map_err(|e| format!("health-check {addr}: {e}"))?
+    };
+    match reply.lines().find(|l| l.starts_with("HEALTH ")) {
+        Some(line) if line.starts_with("HEALTH ok") => {
+            println!("{line}");
+            Ok(())
+        }
+        Some(line) => {
+            println!("{line}");
+            Err(format!("health-check {addr}: server is not healthy"))
+        }
+        None => Err(format!(
+            "health-check {addr}: no HEALTH line in the reply ({} bytes)",
+            reply.len()
+        )),
+    }
+}
+
+/// Ask `health` then `quit` and collect everything the server says
+/// until it hangs up (banner included — the caller greps for HEALTH).
+fn probe_stream<S: std::io::Read + std::io::Write>(mut stream: S) -> std::io::Result<String> {
+    stream.write_all(b"health\nquit\n")?;
+    stream.flush()?;
+    let mut reply = String::new();
+    stream.read_to_string(&mut reply)?;
+    Ok(reply)
+}
+
+#[cfg(unix)]
+fn probe_unix(path: &str) -> std::io::Result<String> {
+    let stream = std::os::unix::net::UnixStream::connect(path)?;
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(5)));
+    probe_stream(stream)
+}
+
+#[cfg(not(unix))]
+fn probe_unix(_path: &str) -> std::io::Result<String> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "unix sockets are unsupported on this platform",
+    ))
 }
 
 /// The listen-mode foreground: park until SIGTERM/SIGINT, then the

@@ -1,0 +1,273 @@
+//! Chaos integration: deterministic fault injection end to end. The
+//! headline is the chaos differential — under a seeded fault schedule
+//! (disk-write errors, fsync delays, dropped worker batches, one
+//! injected engine panic), every surviving session's canonical hash
+//! equals its fault-free twin's: faults cost retries, revives and
+//! partial batches, never simulation results. The rest exercises the
+//! self-healing machinery one piece at a time: quarantine fencing and
+//! `revive`, the checkpoint circuit breaker, per-request deadlines,
+//! the stall watchdog, and the everything-off baseline.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use squeeze::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+
+/// Same layout corners as the durability suite: byte/packed ×
+/// single/sharded.
+const LAYOUTS: [&str; 4] = [
+    "engine=squeeze:4 r=5 workers=1 seed=9 density=0.4",
+    "engine=squeeze-bits:4 r=5 workers=1 seed=9 density=0.4",
+    "engine=sharded-squeeze:4:3 r=5 workers=1 seed=9 density=0.4",
+    "engine=squeeze-bits:4:3 r=5 workers=1 seed=9 density=0.4",
+];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("squeeze-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A durable coordinator with a fault plan armed and a fast breaker
+/// probe (so a tripped breaker never wedges a retry loop for long).
+fn chaos_config(dir: &Path, faults: &str, seed: u64) -> CoordinatorConfig {
+    CoordinatorConfig {
+        budget: 2,
+        data_dir: Some(dir.to_path_buf()),
+        faults: Some(faults.to_string()),
+        fault_seed: seed,
+        breaker_probe_ms: 50,
+        ..Default::default()
+    }
+}
+
+/// The uninterrupted, fault-free twin's canonical hash for `line`.
+fn twin_hash(line: &str, steps: u32) -> u64 {
+    let twin = Coordinator::new(2);
+    let info = twin.open(JobSpec::parse_line(0, line).unwrap()).unwrap();
+    twin.step(info.sid, steps).unwrap();
+    twin.close(info.sid).unwrap().state_hash
+}
+
+/// Arm durability the way a robust client would: retry the initial
+/// checkpoint through injected write errors (waiting out a tripped
+/// breaker's probe window between attempts).
+fn persist_robustly(coord: &Coordinator, sid: u64) {
+    for _ in 0..40 {
+        if coord.persist(sid, Some(1), None).is_ok() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("session {sid}: initial checkpoint never landed");
+}
+
+/// Drive `sid` to `target` lifetime steps through whatever the fault
+/// plan throws: re-issue after partial batches, `revive` after a
+/// quarantine. Bounded so a wedged coordinator fails the test instead
+/// of hanging it.
+fn step_to(coord: &Coordinator, sid: u64, target: u64) {
+    for _ in 0..400 {
+        let info = coord.inspect(sid, &[]).unwrap();
+        if info.steps_done >= target {
+            return;
+        }
+        let want = (target - info.steps_done) as u32;
+        match coord.step(sid, want) {
+            Ok(_) => {}
+            Err(e) if e.contains("quarantined") => {
+                coord
+                    .revive(sid)
+                    .unwrap_or_else(|r| panic!("step: {e}\nrevive: {r}"));
+            }
+            // partial progress was kept — re-inspect and go again
+            Err(_) => {}
+        }
+    }
+    panic!("session {sid} never reached {target} steps");
+}
+
+#[test]
+fn chaos_differential_matches_fault_free_twin_across_seeds_and_layouts() {
+    // the panic rule leads so its one-shot trigger cannot be shadowed
+    // by a probabilistic rule firing on the same check — every run is
+    // guaranteed one quarantine + revive cycle
+    const PLAN: &str = "worker:panic@step=6;store.write:err@0.3;\
+                        store.fsync:delay=1ms@0.1;worker:err@0.2";
+    for seed in [1u64, 2, 3] {
+        for (i, line) in LAYOUTS.iter().enumerate() {
+            let want = twin_hash(line, 8);
+            let dir = tmpdir(&format!("diff-{seed}-{i}"));
+            let coord = Coordinator::with_config(chaos_config(&dir, PLAN, seed));
+            let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+            persist_robustly(&coord, sid);
+            step_to(&coord, sid, 8);
+            let closed = coord.close(sid).unwrap();
+            assert_eq!(closed.steps_done, 8, "seed {seed} layout {line}");
+            assert_eq!(
+                closed.state_hash, want,
+                "seed {seed} layout {line}: surviving hash diverged from twin"
+            );
+            // the schedule really fired: the one-shot panic quarantined
+            // the session once and revive brought it back
+            assert!(coord.fault_plan().unwrap().injected() > 0);
+            let snap = coord.metrics().snapshot();
+            assert!(snap.revives >= 1, "seed {seed} layout {line}: {snap:?}");
+            assert_eq!(snap.quarantined, 0, "seed {seed} layout {line}: {snap:?}");
+            drop(coord);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn quarantine_fences_step_until_revive_rebuilds_from_checkpoint() {
+    let line = LAYOUTS[0];
+    let dir = tmpdir("quarantine");
+    let coord = Coordinator::with_config(chaos_config(&dir, "worker:panic@step=3", 7));
+    let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+    coord.persist(sid, Some(1), None).unwrap();
+
+    // the third per-step fault check panics mid-sweep: the session is
+    // fenced, not torn, not closed
+    let err = coord.step(sid, 5).unwrap_err();
+    assert!(err.contains("quarantined"), "{err}");
+    assert!(err.contains("revive"), "{err}");
+
+    // fenced: step and relayout answer the structured error, inspect
+    // still works for debugging
+    let again = coord.step(sid, 1).unwrap_err();
+    assert!(again.contains("quarantined"), "{again}");
+    let relayout = coord.relayout(sid, "squeeze-bits:4").unwrap_err();
+    assert!(relayout.contains("quarantined"), "{relayout}");
+    assert!(coord.inspect(sid, &[]).is_ok());
+    assert_eq!(coord.metrics().snapshot().quarantined, 1);
+
+    // revive rebuilds from the last checkpoint (step 0 here) and lifts
+    // the fence; the finished run still matches the fault-free twin
+    let info = coord.revive(sid).unwrap();
+    assert_eq!(info.steps_done, 0);
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.quarantined, 0, "{snap:?}");
+    assert_eq!(snap.revives, 1, "{snap:?}");
+    assert!(coord.revive(sid).unwrap_err().contains("not quarantined"));
+    coord.step(sid, 6).unwrap();
+    assert_eq!(coord.close(sid).unwrap().state_hash, twin_hash(line, 6));
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_breaker_trips_after_repeated_failures_and_probes_half_open() {
+    let dir = tmpdir("breaker");
+    // every store write fails, deterministically; cadence 0/0 so only
+    // explicit persist calls touch the store
+    let coord = Coordinator::with_config(chaos_config(&dir, "store.write:err@n=1", 0));
+    let sid = coord.open(JobSpec::parse_line(0, LAYOUTS[0]).unwrap()).unwrap().sid;
+
+    // three straight failures (each with its own bounded retry) trip
+    // the breaker
+    for _ in 0..3 {
+        let err = coord.persist(sid, Some(0), Some(0)).unwrap_err();
+        assert!(err.contains("injected"), "{err}");
+    }
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.breaker_trips, 1, "{snap:?}");
+    assert_eq!(snap.breaker_open, 1, "{snap:?}");
+    assert!(snap.store_retries >= 2, "{snap:?}");
+
+    // open: the store is not even touched
+    let open = coord.persist(sid, Some(0), Some(0)).unwrap_err();
+    assert!(open.contains("circuit breaker open"), "{open}");
+    // stepping is unaffected by a cooling-down checkpoint path
+    assert_eq!(coord.step(sid, 2).unwrap().steps_done, 2);
+
+    // after the probe window one half-open attempt is admitted; it
+    // still fails, so the breaker re-trips and closes the gate again
+    std::thread::sleep(Duration::from_millis(70));
+    let probed = coord.persist(sid, Some(0), Some(0)).unwrap_err();
+    assert!(probed.contains("injected"), "{probed}");
+    let reopen = coord.persist(sid, Some(0), Some(0)).unwrap_err();
+    assert!(reopen.contains("circuit breaker open"), "{reopen}");
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.breaker_trips, 2, "{snap:?}");
+    assert_eq!(snap.breaker_open, 1, "{snap:?}");
+
+    // closing the session retires its open breaker from the gauge
+    coord.close(sid).unwrap();
+    assert_eq!(coord.metrics().snapshot().breaker_open, 0);
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deadline_keeps_partial_progress_and_the_run_still_matches_the_twin() {
+    let line = LAYOUTS[0];
+    // every step pays a 10ms injected delay against a 35ms budget: a
+    // 10-step request must come back partial
+    let coord = Coordinator::with_config(CoordinatorConfig {
+        budget: 2,
+        faults: Some("worker:delay=10ms@n=1".to_string()),
+        fault_seed: 0,
+        deadline_ms: 35,
+        ..Default::default()
+    });
+    let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+    let err = coord.step(sid, 10).unwrap_err();
+    assert!(err.contains("deadline exceeded"), "{err}");
+    assert!(err.contains("progress kept"), "{err}");
+    let done = coord.inspect(sid, &[]).unwrap().steps_done;
+    assert!(done > 0 && done < 10, "stepped {done}");
+    assert!(coord.metrics().snapshot().deadline_exceeded >= 1);
+
+    // a client that re-issues gets there, and lands on the twin hash —
+    // deadlines shed load, they do not corrupt state
+    step_to(&coord, sid, 10);
+    assert_eq!(coord.close(sid).unwrap().state_hash, twin_hash(line, 10));
+}
+
+#[test]
+fn watchdog_cancels_a_stalled_job_with_a_structured_reason() {
+    // the fifth worker fault check stalls 400ms against a 60ms
+    // no-progress threshold
+    let coord = Coordinator::with_config(CoordinatorConfig {
+        budget: 2,
+        faults: Some("worker:stall=400ms@step=5".to_string()),
+        fault_seed: 0,
+        watchdog_ms: 60,
+        ..Default::default()
+    });
+    let spec = JobSpec::parse_line(
+        0,
+        "engine=squeeze:4 r=5 workers=1 seed=9 density=0.4 steps=50000",
+    )
+    .unwrap();
+    let handle = coord.submit(spec);
+    let err = handle.wait().unwrap_err();
+    assert!(err.contains("watchdog"), "{err}");
+    assert!(err.contains("no progress"), "{err}");
+    assert_eq!(coord.metrics().snapshot().watchdog_cancels, 1);
+}
+
+#[test]
+fn without_a_fault_plan_nothing_changes_and_every_gauge_stays_zero() {
+    let line = LAYOUTS[1];
+    let coord = Coordinator::with_config(CoordinatorConfig {
+        budget: 2,
+        ..Default::default()
+    });
+    assert!(coord.fault_plan().is_none());
+    let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+    coord.step(sid, 6).unwrap();
+    assert_eq!(coord.close(sid).unwrap().state_hash, twin_hash(line, 6));
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.store_retries, 0, "{snap:?}");
+    assert_eq!(snap.deadline_exceeded, 0, "{snap:?}");
+    assert_eq!(snap.watchdog_cancels, 0, "{snap:?}");
+    assert_eq!(snap.idle_reaped, 0, "{snap:?}");
+    assert_eq!(snap.quarantined, 0, "{snap:?}");
+    assert_eq!(snap.revives, 0, "{snap:?}");
+    assert_eq!(snap.breaker_trips, 0, "{snap:?}");
+    assert_eq!(snap.breaker_open, 0, "{snap:?}");
+}

@@ -6,6 +6,7 @@
 //! round-trip (`persist`/`recover` verbs through `serve_with`).
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use squeeze::coordinator::{serve_with, Coordinator, CoordinatorConfig, JobSpec};
 
@@ -149,6 +150,59 @@ fn relayout_matrix_preserves_hash_and_fails_closed() {
     let closed = coord.close(sid).unwrap();
     assert_eq!(closed.steps_done, 8);
     assert_eq!(closed.state_hash, want);
+}
+
+#[test]
+fn checkpoint_all_racing_concurrent_steps_recovers_consistent_sessions() {
+    // the drain-path race: `checkpoint_all` (the graceful-shutdown
+    // sweep) runs while stepper threads are mid-flight on the same
+    // sessions. Every sweep must see both sessions (a skipped or torn
+    // one would drop out), and the records it writes must be
+    // consistent snapshots a restart can serve from.
+    let dir = tmpdir("race");
+    let coord = Arc::new(Coordinator::with_config(durable_config(&dir)));
+    let lines = [LAYOUTS[0], LAYOUTS[1]];
+    let mut sids = Vec::new();
+    for line in lines {
+        let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+        // durable but cadence-free: only the sweeps write
+        coord.persist(sid, Some(0), Some(0)).unwrap();
+        sids.push(sid);
+    }
+    let steppers: Vec<_> = sids
+        .iter()
+        .map(|&sid| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || {
+                for _ in 0..6 {
+                    coord.step(sid, 2).unwrap();
+                }
+            })
+        })
+        .collect();
+    for _ in 0..20 {
+        let (written, _bytes) = coord.checkpoint_all();
+        assert_eq!(written, 2, "a session dropped out of the sweep");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    for h in steppers {
+        h.join().unwrap();
+    }
+    // one quiescent sweep so the newest record sits at 12 steps, then
+    // "crash" without closing anything
+    coord.checkpoint_all();
+    drop(coord);
+
+    let coord = Coordinator::with_config(durable_config(&dir));
+    let report = coord.recovery().expect("recovery report");
+    assert_eq!(report.recovered.len(), 2, "{report:?}");
+    assert!(report.skipped.is_empty(), "{report:?}");
+    for (line, &sid) in lines.iter().zip(&sids) {
+        let closed = coord.close(sid).unwrap();
+        assert_eq!(closed.steps_done, 12, "layout {line}");
+        assert_eq!(closed.state_hash, twin_hash(line, 12), "layout {line}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

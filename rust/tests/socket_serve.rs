@@ -3,8 +3,9 @@
 //! run serially through one in-process serve, and maps evicted by the
 //! LRU byte budget must rebuild to bit-identical stepping.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use squeeze::coordinator::{
     serve_session, Coordinator, CoordinatorConfig, JobSpec, SocketServer,
@@ -174,6 +175,61 @@ fn stepall_over_a_socket_matches_per_session_steps() {
     let _ = client.stream.write_all(b"quit\n");
     server.shutdown();
     assert_eq!(swept, stepped);
+}
+
+#[test]
+fn begin_shutdown_mid_stepall_completes_the_batch_and_drains() {
+    // a 5ms injected delay per step makes the 2-session stepall slow
+    // enough (>= 300ms) that the shutdown reliably begins mid-batch
+    let config = CoordinatorConfig {
+        faults: Some("worker:delay=5ms@n=1".to_string()),
+        ..Default::default()
+    };
+    let mut server = SocketServer::bind("127.0.0.1:0", config).unwrap();
+    let endpoint = server.endpoint().to_string();
+    let mut client = Client::connect(&endpoint);
+    let mut sids = Vec::new();
+    for k in 0..2 {
+        let resp = client.request(&open_line(0, k));
+        sids.push(resp.split_whitespace().nth(1).unwrap().parse::<u64>().unwrap());
+    }
+    client.stream.write_all(b"stepall 30\n").unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    server.begin_shutdown();
+    // new connects are refused mid-drain...
+    let refused = match TcpStream::connect(&endpoint) {
+        Err(_) => true,
+        Ok(mut s) => {
+            let mut buf = String::new();
+            let _ = s.read_to_string(&mut buf);
+            buf.is_empty()
+        }
+    };
+    assert!(refused, "listener still answering after begin_shutdown");
+    // ...while the in-flight batch completes in full, no errors
+    let batch = client.read_line();
+    assert!(batch.starts_with("BATCH stepped sessions=2 errors=0"), "{batch}");
+    let hashes: Vec<String> = sids
+        .iter()
+        .map(|sid| hash_of(&client.request(&format!("close {sid}"))))
+        .collect();
+    let _ = client.stream.write_all(b"quit\n");
+    assert!(server.drain(Duration::from_secs(10)), "connection never drained");
+    server.shutdown();
+    // the injected delays cost time, never state: the drained batch
+    // matches a fault-free serial twin
+    let twin = Coordinator::new(2);
+    let want: Vec<String> = (0..2)
+        .map(|k| {
+            let line = open_line(0, k);
+            let spec =
+                JobSpec::parse_line(0, line.strip_prefix("open ").unwrap()).unwrap();
+            let info = twin.open(spec).unwrap();
+            twin.step(info.sid, 30).unwrap();
+            format!("{:#018x}", twin.close(info.sid).unwrap().state_hash)
+        })
+        .collect();
+    assert_eq!(hashes, want, "shutdown race changed simulation results");
 }
 
 #[test]
