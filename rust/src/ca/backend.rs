@@ -400,7 +400,14 @@ impl StateBackend for PackedGeom {
         cell_base / (self.rho as u64 * self.rho as u64) * self.words_per_tile
     }
 
-    fn sweep_tile(&self, cur: &[u64], out: UnitPtr<u64>, nb: &[u64; 8], cell_base: u64, rule: Rule) {
+    fn sweep_tile(
+        &self,
+        cur: &[u64],
+        out: UnitPtr<u64>,
+        nb: &[u64; 8],
+        cell_base: u64,
+        rule: Rule,
+    ) {
         sweep_block_packed(cur, out, self, nb, self.unit_base(cell_base), rule);
     }
 
@@ -486,6 +493,92 @@ impl StateBackend for PackedGeom {
             let bit = (staged[k + i / WORD_BITS as usize] >> (i as u32 % WORD_BITS)) & 1;
             set_bit(x, y, bit);
         }
+    }
+}
+
+/// Bit-planar tile storage whose rule application runs through the MMA
+/// fragment pipeline (`tcu::rulemma`) instead of the carry-save word
+/// adders: same packed word layout, same rim machinery, same hole mask —
+/// only `sweep_tile` differs. Selected as `squeeze-bits:<ρ>:mma`; the
+/// differential matrix holds it hash-identical to the scalar packed and
+/// byte engines.
+#[derive(Clone, Debug)]
+pub struct MmaPackedBackend {
+    /// The underlying packed word geometry (all storage/rim behavior
+    /// delegates to it).
+    pub geom: PackedGeom,
+}
+
+impl StateBackend for MmaPackedBackend {
+    type Unit = u64;
+
+    fn new(block: &BlockCtx) -> MmaPackedBackend {
+        MmaPackedBackend {
+            geom: PackedGeom::new(block),
+        }
+    }
+
+    fn base_name(_path: MapPath) -> &'static str {
+        "squeeze-bits-mma"
+    }
+
+    fn mma_mode(_path: MapPath) -> Option<MmaMode> {
+        // adjacency tables stay scalar-built (shared cache entry); the
+        // MMA lift applies to rule application, not the λ/ν maps
+        None
+    }
+
+    fn units_per_tile(&self) -> u64 {
+        self.geom.units_per_tile()
+    }
+
+    #[inline(always)]
+    fn unit_base(&self, cell_base: u64) -> u64 {
+        self.geom.unit_base(cell_base)
+    }
+
+    fn sweep_tile(
+        &self,
+        cur: &[u64],
+        out: UnitPtr<u64>,
+        nb: &[u64; 8],
+        cell_base: u64,
+        rule: Rule,
+    ) {
+        crate::tcu::rulemma::sweep_block_mma(
+            cur,
+            out,
+            &self.geom,
+            nb,
+            self.geom.unit_base(cell_base),
+            rule,
+        );
+    }
+
+    #[inline(always)]
+    fn set_cell(&self, buf: &mut [u64], slot: u64) {
+        self.geom.set_cell(buf, slot);
+    }
+
+    #[inline(always)]
+    fn get_cell(&self, buf: &[u64], slot: u64) -> u8 {
+        self.geom.get_cell(buf, slot)
+    }
+
+    fn population(units: &[u64]) -> u64 {
+        <PackedGeom as StateBackend>::population(units)
+    }
+
+    fn rim_units(&self, segs: &RimSegs) -> u64 {
+        self.geom.rim_units(segs)
+    }
+
+    fn pack_rim(&self, cur: &[u64], tile_base: u64, segs: &RimSegs, out: &mut [u64]) {
+        self.geom.pack_rim(cur, tile_base, segs, out);
+    }
+
+    fn unpack_rim(&self, staged: &[u64], dst: &mut [u64], tile_base: u64, segs: &RimSegs) {
+        self.geom.unpack_rim(staged, dst, tile_base, segs);
     }
 }
 

@@ -1,0 +1,257 @@
+//! BB-bits — the expanded bounding-box baseline in bit-planar words
+//! (`engine=bb-bits`).
+//!
+//! Same `n × n` embedding and run-time hole discard as [`super::bb`],
+//! but packed 64 cells per `u64` and stepped with the width-generic word
+//! kernels of [`super::wideword`] — the same adder/rule pipeline the
+//! `squeeze-bits` engines use, minus the tile adjacency (one flat grid,
+//! dead boundary, `wpr = ⌈n/64⌉` words per embedding row). This makes
+//! Fig. 12/13 comparisons apples-to-apples: packed-compact vs
+//! packed-expanded, byte-compact vs byte-expanded, instead of packed
+//! against a byte-only baseline. The BB inefficiency the paper
+//! criticizes (P1/P2) is unchanged — storage and sweep work still grow
+//! as `s^{2r}` words while only `k^r` cells are useful; the words are
+//! just 64× denser.
+
+use super::engine::{seeded_alive, Engine};
+use super::grid::PackedBuffer;
+use super::rule::Rule;
+use super::wideword::{self, RowSrc, WORD_BITS};
+use crate::ca::backend::UnitPtr;
+use crate::fractal::{Coord, FractalSpec};
+use crate::maps::{lambda_linear, MapCtx};
+use crate::util::pool::parallel_for_chunks;
+
+pub struct PackedBbEngine {
+    ctx: MapCtx,
+    rule: Rule,
+    buf: PackedBuffer,
+    /// Packed membership mask of the embedding, `n·wpr` words row-major
+    /// (1-bit = fractal cell; padding bits beyond `n` stay 0).
+    mask: Vec<u64>,
+    /// Words per embedding row: `⌈n/64⌉`.
+    wpr: u32,
+    /// Lane width (1/2/4/8 words) for the sweep, from the row geometry.
+    lane_words: u32,
+    workers: usize,
+}
+
+impl PackedBbEngine {
+    pub fn new(
+        spec: &FractalSpec,
+        r: u32,
+        rule: Rule,
+        density: f64,
+        seed: u64,
+        workers: usize,
+    ) -> PackedBbEngine {
+        let ctx = MapCtx::new(spec, r);
+        let n = ctx.n;
+        let wpr = n.div_ceil(WORD_BITS);
+        let words = n as u64 * wpr as u64;
+        let mut buf = PackedBuffer::zeroed(words);
+        // Packed membership mask, built in parallel word-by-word (each
+        // word is written by exactly one worker).
+        let mut mask = vec![0u64; words as usize];
+        {
+            let ctx_ref = &ctx;
+            let mask_ptr = WordPtr(mask.as_mut_ptr());
+            parallel_for_chunks(words, workers, move |start, end| {
+                let p = mask_ptr;
+                for wi in start..end {
+                    let y = (wi / wpr as u64) as u32;
+                    let wx = (wi % wpr as u64) as u32;
+                    let valid = (n - wx * WORD_BITS).min(WORD_BITS);
+                    let mut w = 0u64;
+                    for bit in 0..valid {
+                        let e = Coord::new(wx * WORD_BITS + bit, y);
+                        if crate::maps::on_fractal(ctx_ref, e) {
+                            w |= 1u64 << bit;
+                        }
+                    }
+                    unsafe { p.0.add(wi as usize).write(w) };
+                }
+            });
+        }
+        // Seed through the canonical compact index so every engine starts
+        // from the identical logical state.
+        for idx in 0..ctx.compact.area() {
+            if seeded_alive(seed, idx, density) {
+                let e = lambda_linear(&ctx, idx);
+                buf.cur[(e.y as u64 * wpr as u64 + (e.x / WORD_BITS) as u64) as usize] |=
+                    1u64 << (e.x % WORD_BITS);
+            }
+        }
+        let full_words = if n % WORD_BITS == 0 { wpr } else { wpr - 1 };
+        PackedBbEngine {
+            ctx,
+            rule,
+            buf,
+            mask,
+            wpr,
+            lane_words: wideword::lane_words_for(full_words),
+            workers,
+        }
+    }
+
+    #[inline]
+    fn bit(&self, e: Coord) -> u8 {
+        let w = e.y as u64 * self.wpr as u64 + (e.x / WORD_BITS) as u64;
+        ((self.buf.cur[w as usize] >> (e.x % WORD_BITS)) & 1) as u8
+    }
+}
+
+/// Disjoint-write pointer wrapper for the parallel mask build.
+#[derive(Clone, Copy)]
+struct WordPtr(*mut u64);
+unsafe impl Send for WordPtr {}
+unsafe impl Sync for WordPtr {}
+
+impl Engine for PackedBbEngine {
+    fn name(&self) -> String {
+        "bb-bits".into()
+    }
+
+    fn step(&mut self) {
+        let n = self.ctx.n;
+        let wpr = self.wpr;
+        let lane_words = self.lane_words;
+        let rule = self.rule;
+        let cur = &self.buf.cur;
+        let mask = &self.mask;
+        let out = UnitPtr(self.buf.next.as_mut_ptr());
+        // rows split across workers; the grid boundary is dead, so every
+        // extended row is just its own word base (or absent)
+        parallel_for_chunks(n as u64, self.workers, move |start, end| {
+            let src_of = |jy: i64| RowSrc {
+                base: (jy >= 0 && jy < n as i64).then(|| jy as u64 * wpr as u64),
+                west_bit: 0,
+                east_bit: 0,
+            };
+            wideword::sweep_rows_auto(
+                cur,
+                out,
+                start as u32,
+                end as u32,
+                n,
+                wpr,
+                lane_words,
+                mask,
+                0,
+                rule,
+                &src_of,
+            );
+        });
+        self.buf.swap();
+    }
+
+    fn cells(&self) -> u64 {
+        self.ctx.compact.area()
+    }
+
+    fn population(&self) -> u64 {
+        self.buf.population()
+    }
+
+    fn memory_bytes(&self) -> u64 {
+        self.buf.bytes() + self.mask.len() as u64 * std::mem::size_of::<u64>() as u64
+    }
+
+    fn cell(&self, idx: u64) -> u8 {
+        self.bit(lambda_linear(&self.ctx, idx))
+    }
+
+    fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
+        super::engine::check_state_bitmap(bits, self.cells())?;
+        self.buf.cur.fill(0);
+        self.buf.next.fill(0);
+        for idx in 0..self.ctx.compact.area() {
+            if super::engine::state_bit(bits, idx) {
+                let e = lambda_linear(&self.ctx, idx);
+                self.buf.cur[(e.y as u64 * self.wpr as u64 + (e.x / WORD_BITS) as u64) as usize] |=
+                    1u64 << (e.x % WORD_BITS);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bb::BbEngine;
+    use crate::ca::engine::run_and_hash;
+    use crate::fractal::catalog;
+
+    fn twin_engines(
+        spec: &FractalSpec,
+        r: u32,
+        density: f64,
+        seed: u64,
+    ) -> (BbEngine, PackedBbEngine) {
+        let rule = Rule::game_of_life();
+        (
+            BbEngine::new(spec, r, rule, density, seed, 2),
+            PackedBbEngine::new(spec, r, rule, density, seed, 2),
+        )
+    }
+
+    #[test]
+    fn packed_bb_matches_byte_bb_hash_for_hash() {
+        for (spec, r) in [
+            (catalog::sierpinski_triangle(), 5u32),
+            (catalog::sierpinski_carpet(), 3),
+            (catalog::vicsek(), 3),
+        ] {
+            let (mut byte, mut bits) = twin_engines(&spec, r, 0.4, 7);
+            assert_eq!(byte.cells(), bits.cells());
+            assert_eq!(byte.state_hash(), bits.state_hash(), "seeding differs");
+            assert_eq!(
+                run_and_hash(&mut byte, 8),
+                run_and_hash(&mut bits, 8),
+                "{} r={r}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn multiword_rows_engage_the_wide_path() {
+        // r=7 on s=2 gives n=128: wpr=2 full words, lane_words=2
+        let spec = catalog::sierpinski_triangle();
+        let (mut byte, mut bits) = twin_engines(&spec, 7, 0.35, 11);
+        assert_eq!(bits.lane_words, 2, "n=128 rows should pick 2-word lanes");
+        assert_eq!(run_and_hash(&mut byte, 4), run_and_hash(&mut bits, 4));
+    }
+
+    #[test]
+    fn holes_stay_dead_forever() {
+        let spec = catalog::sierpinski_triangle();
+        let mut e = PackedBbEngine::new(&spec, 4, Rule::game_of_life(), 0.9, 42, 2);
+        for _ in 0..5 {
+            e.step();
+            for (w, (&cur, &mask)) in e.buf.cur.iter().zip(&e.mask).enumerate() {
+                assert_eq!(cur & !mask, 0, "non-fractal bit alive in word {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_is_embedding_scale_but_bit_packed() {
+        let spec = catalog::sierpinski_triangle();
+        let e = PackedBbEngine::new(&spec, 5, Rule::game_of_life(), 0.3, 42, 2);
+        // n=32: wpr=1, so 32 words per buffer ×2 + 32 mask words
+        assert_eq!(e.memory_bytes(), 32 * 8 * 3);
+    }
+
+    #[test]
+    fn load_state_round_trips() {
+        let spec = catalog::vicsek();
+        let mut e = PackedBbEngine::new(&spec, 3, Rule::game_of_life(), 0.5, 9, 2);
+        let snapshot = e.export_state();
+        let hash = e.state_hash();
+        e.step();
+        e.load_state(&snapshot).unwrap();
+        assert_eq!(e.state_hash(), hash);
+    }
+}

@@ -1,5 +1,5 @@
-//! Bit-planar word-parallel stepping — the 1-bit-per-cell kernels behind
-//! the `squeeze-bits` engines.
+//! Bit-planar word-parallel stepping — the 1-bit-per-cell tile layer
+//! behind the `squeeze-bits` engines.
 //!
 //! Cells are packed 64 per `u64` word, row-padded per `ρ×ρ` tile: every
 //! tile row starts on a word boundary (`wpr = ⌈ρ/64⌉` words per row), so
@@ -7,27 +7,24 @@
 //! block's words. Bit `i` of a row word is cell `x = 64·wx + i` of that
 //! row (LSB = lowest x).
 //!
-//! One sweep of a word updates up to 64 cells at once:
-//!
-//! 1. For each of the three source rows (above / centre / below) the
-//!    kernel forms three lane-aligned masks — west-shifted, centre,
-//!    east-shifted — stitching in the single boundary bit that crosses a
-//!    word (from the adjacent word of the same row) or a tile edge (from
-//!    the cached `BlockMaps` Moore adjacency, `NO_BLOCK` ⇒ zero). That
-//!    yields the 8 Moore neighbor bit-planes per lane.
-//! 2. Per-lane neighbor counts come from bit-sliced half/full adders
-//!    (a 4-bit carry-save counter per lane, counts 0..=8).
-//! 3. The totalistic rule is applied as boolean algebra over the
-//!    `birth`/`survive` masks: equality planes per populated count value,
-//!    OR-combined into birth/survive selectors, muxed by the alive plane.
-//! 4. The permanently-dead hole mask (the packed micro-fractal rows) is
-//!    ANDed in, so holes and row padding stay dead branch-free.
+//! The adder/rule word pipeline itself lives in [`crate::ca::wideword`],
+//! width-generic over a [`crate::ca::wideword::WordLane`]: this module
+//! contributes the *tile* geometry — where each extended source row of a
+//! block lives, which single boundary bits cross a tile edge (from the
+//! cached `BlockMaps` Moore adjacency, `NO_BLOCK` ⇒ zero), and the
+//! permanently-dead hole mask (the packed micro-fractal rows) that keeps
+//! holes and row padding dead branch-free. Each [`PackedGeom`] picks a
+//! lane width once from its row geometry (`wideword::lane_words_for`),
+//! so wide tiles (ρ ≥ 128) step 2–8 words per lane-step while ragged
+//! geometries (ρ = 81, 127) fall back to the scalar word kernel at row
+//! tails.
 //!
 //! The word pipeline is exhaustively tested against `Rule::next_u8` over
-//! all 256 neighbor combinations and randomized B/S masks, and the
-//! packed engines are hash-compared against BB by the differential
-//! suite. [`PackedGeom`] implements `ca::backend::StateBackend`, so the
-//! generic `SqueezeEngine<PackedBackend>` / `ShardedSqueezeEngine<PackedBackend>`
+//! all 256 neighbor combinations and randomized B/S masks (here at W=1,
+//! in `wideword` at every lane width), and the packed engines are
+//! hash-compared against BB by the differential suite. [`PackedGeom`]
+//! implements `ca::backend::StateBackend`, so the generic
+//! `SqueezeEngine<PackedBackend>` / `ShardedSqueezeEngine<PackedBackend>`
 //! run these kernels through the same sweep-dispatch and exchange bodies
 //! as the byte backend — which is what keeps every packed configuration
 //! bit-identical to the byte engines (and therefore to BB) by
@@ -35,11 +32,12 @@
 
 use super::backend::UnitPtr;
 use super::rule::Rule;
+use super::wideword::{self, RowSrc};
 use crate::maps::block::BlockCtx;
 use crate::maps::cache::NO_BLOCK;
 
 /// Bits per storage word.
-pub const WORD_BITS: u32 = 64;
+pub const WORD_BITS: u32 = wideword::WORD_BITS;
 
 /// Packed-tile geometry: the word layout of one `ρ×ρ` tile plus the
 /// packed micro-fractal hole mask. Derived once per engine from the
@@ -53,6 +51,9 @@ pub struct PackedGeom {
     pub wpr: u32,
     /// Words per tile: `ρ · wpr`.
     pub words_per_tile: u64,
+    /// Lane width in words (1/2/4/8) for this tile's sweeps, chosen
+    /// from the row's full-word run by `wideword::lane_words_for`.
+    pub lane_words: u32,
     /// Packed micro-fractal membership, `ρ·wpr` words row-major; bits
     /// beyond ρ in a row's last word are 0 (padding stays dead).
     pub mask_rows: Vec<u64>,
@@ -71,10 +72,12 @@ impl PackedGeom {
                 }
             }
         }
+        let full_words = if rho % WORD_BITS == 0 { wpr } else { wpr - 1 };
         PackedGeom {
             rho,
             wpr,
             words_per_tile: rho as u64 * wpr as u64,
+            lane_words: wideword::lane_words_for(full_words),
             mask_rows,
         }
     }
@@ -99,15 +102,8 @@ impl PackedGeom {
     }
 }
 
-/// Bit-sliced full adder over lane planes: per lane, `a + b + c` as
-/// (sum, carry).
-#[inline(always)]
-fn full_add(a: u64, b: u64, c: u64) -> (u64, u64) {
-    (a ^ b ^ c, (a & b) | (c & (a ^ b)))
-}
-
-/// Per-lane Moore neighbor count of the 8 neighbor bit-planes, as four
-/// count-bit planes (b0 = 1s, b1 = 2s, b2 = 4s, b3 = 8s; counts 0..=8).
+/// Per-lane Moore neighbor count of the 8 neighbor bit-planes at W=1 —
+/// thin scalar instantiation of [`wideword::count_neighbors`].
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn count_neighbors_word(
@@ -120,21 +116,11 @@ pub(crate) fn count_neighbors_word(
     sc: u64,
     se: u64,
 ) -> (u64, u64, u64, u64) {
-    // three carry-save columns: 8 inputs -> (3 sums, 3 carries)
-    let (s1, c1) = full_add(aw, ac, ae);
-    let (s2, c2) = full_add(cw, ce, sw);
-    let (s3, c3) = (sc ^ se, sc & se); // half adder
-    // count = (s1+s2+s3) + 2·(c1+c2+c3)
-    let (b0, t1) = full_add(s1, s2, s3);
-    let (u1, u2) = full_add(c1, c2, c3);
-    let b1 = t1 ^ u1;
-    let k = t1 & u1;
-    (b0, b1, u2 ^ k, u2 & k)
+    wideword::count_neighbors::<u64>(aw, ac, ae, cw, ce, sw, sc, se)
 }
 
-/// Apply a totalistic B/S rule per lane: `alive` is the centre plane,
-/// `(b0..b3)` the count planes. Only count values the rule mentions pay
-/// an equality plane.
+/// Apply a totalistic B/S rule per lane at W=1 — thin scalar
+/// instantiation of [`wideword::apply_rule`].
 #[inline(always)]
 pub(crate) fn apply_rule_word(
     rule: Rule,
@@ -144,71 +130,7 @@ pub(crate) fn apply_rule_word(
     b2: u64,
     b3: u64,
 ) -> u64 {
-    let mut birth_sel = 0u64;
-    let mut survive_sel = 0u64;
-    let mentioned = rule.birth | rule.survive;
-    for n in 0..=8u32 {
-        if (mentioned >> n) & 1 == 0 {
-            continue;
-        }
-        let x0 = if n & 1 != 0 { b0 } else { !b0 };
-        let x1 = if n & 2 != 0 { b1 } else { !b1 };
-        let x2 = if n & 4 != 0 { b2 } else { !b2 };
-        let x3 = if n & 8 != 0 { b3 } else { !b3 };
-        let eq = x0 & x1 & x2 & x3;
-        if (rule.birth >> n) & 1 != 0 {
-            birth_sel |= eq;
-        }
-        if (rule.survive >> n) & 1 != 0 {
-            survive_sel |= eq;
-        }
-    }
-    (alive & survive_sel) | (!alive & birth_sel)
-}
-
-/// Word-row sources of one extended tile row: the row's own word base in
-/// `cur`, plus the row bases of the tiles west and east of it (for the
-/// single boundary bit each side). `None` = absent (hole / outside).
-#[derive(Clone, Copy)]
-struct RowRefs {
-    src: Option<u64>,
-    west: Option<u64>,
-    east: Option<u64>,
-}
-
-/// The three lane-aligned masks of one source row at word `wx`:
-/// (west-shifted, centre, east-shifted). `valid` lanes carry real cells;
-/// stray bits beyond them never reach the output (hole mask is 0 there).
-#[inline(always)]
-fn row_words(cur: &[u64], refs: RowRefs, wx: u32, wpr: u32, rho: u32) -> (u64, u64, u64) {
-    let c = match refs.src {
-        Some(b) => cur[(b + wx as u64) as usize],
-        None => 0,
-    };
-    let wbit = if wx > 0 {
-        match refs.src {
-            Some(b) => cur[(b + wx as u64 - 1) as usize] >> (WORD_BITS - 1),
-            None => 0,
-        }
-    } else {
-        match refs.west {
-            Some(b) => (cur[(b + (wpr - 1) as u64) as usize] >> ((rho - 1) % WORD_BITS)) & 1,
-            None => 0,
-        }
-    };
-    let valid = (rho - wx * WORD_BITS).min(WORD_BITS);
-    let ebit = if wx + 1 < wpr {
-        match refs.src {
-            Some(b) => cur[(b + wx as u64 + 1) as usize] & 1,
-            None => 0,
-        }
-    } else {
-        match refs.east {
-            Some(b) => cur[b as usize] & 1,
-            None => 0,
-        }
-    };
-    ((c << 1) | wbit, c, (c >> 1) | (ebit << (valid - 1)))
+    wideword::apply_rule::<u64>(rule, alive, b0, b1, b2, b3)
 }
 
 /// Transition one block's `ρ×ρ` tile word-parallel: read `cur`, write
@@ -239,45 +161,47 @@ pub(crate) fn sweep_block_packed(
         }
     }
     let row_of = |tile: Option<u64>, row: u32| tile.map(|b| b + (row * wpr) as u64);
-    // extended row jy ∈ [-1, ρ]: its own tile/row plus west/east sources
-    let refs_for = |jy: i64| -> RowRefs {
-        if jy < 0 {
+    // boundary bits entering a row from the adjacent tiles: the west
+    // source contributes its row's last cell, the east its first
+    let west_bit = |tile: Option<u64>| {
+        tile.map_or(0, |b| (cur[(b + (wpr - 1) as u64) as usize] >> ((rho - 1) % WORD_BITS)) & 1)
+    };
+    let east_bit = |tile: Option<u64>| tile.map_or(0, |b| cur[b as usize] & 1);
+    // extended row jy ∈ [-1, ρ]: its own tile/row plus the two single
+    // cells crossing the tile edge each side
+    let src_of = |jy: i64| -> RowSrc {
+        let (src, west, east) = if jy < 0 {
             let row = rho - 1;
-            RowRefs {
-                src: row_of(nbw[1], row),  // N
-                west: row_of(nbw[0], row), // NW
-                east: row_of(nbw[2], row), // NE
-            }
+            (row_of(nbw[1], row), row_of(nbw[0], row), row_of(nbw[2], row)) // N NW NE
         } else if jy >= rho as i64 {
-            RowRefs {
-                src: row_of(nbw[6], 0),  // S
-                west: row_of(nbw[5], 0), // SW
-                east: row_of(nbw[7], 0), // SE
-            }
+            (row_of(nbw[6], 0), row_of(nbw[5], 0), row_of(nbw[7], 0)) // S SW SE
         } else {
             let row = jy as u32;
-            RowRefs {
-                src: Some(base_words + (row * wpr) as u64),
-                west: row_of(nbw[3], row), // W
-                east: row_of(nbw[4], row), // E
-            }
+            (
+                Some(base_words + (row * wpr) as u64),
+                row_of(nbw[3], row), // W
+                row_of(nbw[4], row), // E
+            )
+        };
+        RowSrc {
+            base: src,
+            west_bit: west_bit(west),
+            east_bit: east_bit(east),
         }
     };
-    for iy in 0..rho {
-        let above = refs_for(iy as i64 - 1);
-        let centre = refs_for(iy as i64);
-        let below = refs_for(iy as i64 + 1);
-        for wx in 0..wpr {
-            let (aw, ac, ae) = row_words(cur, above, wx, wpr, rho);
-            let (cw, cc, ce) = row_words(cur, centre, wx, wpr, rho);
-            let (sw, sc, se) = row_words(cur, below, wx, wpr, rho);
-            let (b0, b1, b2, b3) = count_neighbors_word(aw, ac, ae, cw, ce, sw, sc, se);
-            let next = apply_rule_word(rule, cc, b0, b1, b2, b3)
-                & geom.mask_rows[(iy * wpr + wx) as usize];
-            let w = base_words + (iy * wpr + wx) as u64;
-            unsafe { out.0.add(w as usize).write(next) };
-        }
-    }
+    wideword::sweep_rows_auto(
+        cur,
+        out,
+        0,
+        rho,
+        rho,
+        wpr,
+        geom.lane_words,
+        &geom.mask_rows,
+        base_words,
+        rule,
+        &src_of,
+    );
 }
 
 #[cfg(test)]

@@ -1,8 +1,9 @@
 //! Engine construction from a uniform description — the seam between the
 //! coordinator/CLI layer and the engine implementations.
 
-use super::backend::{ByteBackend, PackedBackend};
+use super::backend::{ByteBackend, MmaPackedBackend, PackedBackend};
 use super::bb::BbEngine;
+use super::bb_bits::PackedBbEngine;
 use super::engine::Engine;
 use super::lambda_engine::LambdaEngine;
 use super::rule::Rule;
@@ -22,6 +23,11 @@ use crate::tcu::MmaMode;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
     Bb,
+    /// Bit-planar expanded baseline (`bb-bits`): the BB embedding packed
+    /// 64 cells per word and stepped with the same wide word kernels as
+    /// the packed squeeze engines — the apples-to-apples Fig. 12/13
+    /// baseline.
+    PackedBb,
     Lambda,
     Squeeze { rho: u32, tensor: bool },
     /// Halo-exchanged domain decomposition over Squeeze blocks
@@ -33,6 +39,11 @@ pub enum EngineKind {
     PackedSqueeze { rho: u32 },
     /// The sharded decomposition over the bit-planar backend.
     PackedShardedSqueeze { rho: u32, shards: u32 },
+    /// Bit-planar block engine whose rule application runs through the
+    /// MMA fragment pipeline (`tcu::rulemma`) — `squeeze-bits:<ρ>:mma`.
+    PackedMmaSqueeze { rho: u32 },
+    /// The sharded decomposition over the MMA rule-lift backend.
+    PackedMmaShardedSqueeze { rho: u32, shards: u32 },
 }
 
 impl EngineKind {
@@ -198,6 +209,42 @@ pub fn build_with_cache(
                 cache,
             )?)
         }
+        EngineKind::PackedBb => Box::new(PackedBbEngine::new(
+            spec,
+            cfg.r,
+            cfg.rule,
+            cfg.density,
+            cfg.seed,
+            cfg.workers,
+        )),
+        EngineKind::PackedMmaSqueeze { rho } => {
+            Box::new(SqueezeEngine::<MmaPackedBackend>::with_cache(
+                spec,
+                cfg.r,
+                rho,
+                cfg.rule,
+                cfg.density,
+                cfg.seed,
+                cfg.workers,
+                MapPath::Scalar,
+                cache,
+            )?)
+        }
+        EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
+            Box::new(ShardedSqueezeEngine::<MmaPackedBackend>::with_opts(
+                spec,
+                cfg.r,
+                rho,
+                shards,
+                cfg.rule,
+                cfg.density,
+                cfg.seed,
+                cfg.workers,
+                MapPath::Scalar,
+                cfg.shard_opts(),
+                cache,
+            )?)
+        }
     })
 }
 
@@ -242,6 +289,15 @@ mod tests {
             EngineKind::parse("squeeze-bits:16:4"),
             Some(EngineKind::PackedShardedSqueeze { rho: 16, shards: 4 })
         );
+        assert_eq!(EngineKind::parse("bb-bits"), Some(EngineKind::PackedBb));
+        assert_eq!(
+            EngineKind::parse("squeeze-bits:16:mma"),
+            Some(EngineKind::PackedMmaSqueeze { rho: 16 })
+        );
+        assert_eq!(
+            EngineKind::parse("squeeze-bits:16:4:mma"),
+            Some(EngineKind::PackedMmaShardedSqueeze { rho: 16, shards: 4 })
+        );
         assert_eq!(EngineKind::parse("hilbert"), None);
         assert_eq!(EngineKind::parse("squeeze:x"), None);
         assert_eq!(EngineKind::parse("squeeze-bits:16:0"), None);
@@ -259,6 +315,8 @@ mod tests {
             EngineKind::ShardedSqueeze { rho: 3, shards: 2 },
             EngineKind::PackedSqueeze { rho: 3 },
             EngineKind::PackedShardedSqueeze { rho: 3, shards: 2 },
+            EngineKind::PackedMmaSqueeze { rho: 3 },
+            EngineKind::PackedMmaShardedSqueeze { rho: 3, shards: 2 },
         ] {
             let cfg = EngineConfig {
                 kind,
@@ -311,8 +369,11 @@ mod tests {
             EngineKind::Squeeze { rho: 4, tensor: false },
             EngineKind::Squeeze { rho: 4, tensor: true },
             EngineKind::ShardedSqueeze { rho: 4, shards: 3 },
+            EngineKind::PackedBb,
             EngineKind::PackedSqueeze { rho: 4 },
             EngineKind::PackedShardedSqueeze { rho: 4, shards: 3 },
+            EngineKind::PackedMmaSqueeze { rho: 4 },
+            EngineKind::PackedMmaShardedSqueeze { rho: 4, shards: 3 },
         ];
         let mut hashes = Vec::new();
         for kind in kinds {

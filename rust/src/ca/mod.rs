@@ -6,6 +6,7 @@
 
 pub mod backend;
 pub mod bb;
+pub mod bb_bits;
 pub mod bitkernel;
 pub mod engine;
 pub mod factory;
@@ -15,8 +16,9 @@ pub mod rule;
 pub mod spec;
 pub mod squeeze;
 pub mod squeeze_block;
+pub mod wideword;
 
-pub use backend::{ByteBackend, PackedBackend, RimSegs, StateBackend};
+pub use backend::{ByteBackend, MmaPackedBackend, PackedBackend, RimSegs, StateBackend};
 pub use engine::Engine;
 pub use factory::{build, build_with_cache, EngineConfig, EngineKind};
 pub use rule::Rule;

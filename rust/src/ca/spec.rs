@@ -6,10 +6,10 @@
 //! Grammar (colon-separated):
 //!
 //! ```text
-//! bb | lambda
+//! bb | bb-bits | lambda
 //! squeeze[:<ρ>] | squeeze-tcu[:<ρ>]
 //! sharded-squeeze:<ρ>[:<S>]
-//! squeeze-bits[:<ρ>[:<S>]]
+//! squeeze-bits[:<ρ>[:<S>]][:mma]
 //! ```
 //!
 //! plus the job-key *promotions* `shards=<S>` ([`EngineSpec::with_shards`])
@@ -39,6 +39,7 @@ impl EngineSpec {
         };
         let kind = match fields.as_slice() {
             ["bb"] => EngineKind::Bb,
+            ["bb-bits"] => EngineKind::PackedBb,
             ["lambda"] => EngineKind::Lambda,
             ["squeeze"] => EngineKind::Squeeze { rho: 1, tensor: false },
             ["squeeze", rho] => EngineKind::Squeeze { rho: num(rho)?, tensor: false },
@@ -46,12 +47,20 @@ impl EngineSpec {
             ["squeeze-tcu", rho] => EngineKind::Squeeze { rho: num(rho)?, tensor: true },
             ["squeeze-bits"] => EngineKind::PackedSqueeze { rho: 16 },
             ["squeeze-bits", rho] => EngineKind::PackedSqueeze { rho: num(rho)? },
+            ["squeeze-bits", rho, "mma"] => EngineKind::PackedMmaSqueeze { rho: num(rho)? },
             ["squeeze-bits", rho, shards] => {
                 let shards = num(shards)?;
                 if shards == 0 {
                     return Err(format!("unknown engine {text:?}"));
                 }
                 EngineKind::PackedShardedSqueeze { rho: num(rho)?, shards }
+            }
+            ["squeeze-bits", rho, shards, "mma"] => {
+                let shards = num(shards)?;
+                if shards == 0 {
+                    return Err(format!("unknown engine {text:?}"));
+                }
+                EngineKind::PackedMmaShardedSqueeze { rho: num(rho)?, shards }
             }
             ["sharded-squeeze", rho] => EngineKind::ShardedSqueeze { rho: num(rho)?, shards: 2 },
             ["sharded-squeeze", rho, shards] => {
@@ -83,6 +92,10 @@ impl EngineSpec {
             | EngineKind::PackedShardedSqueeze { rho, .. } => {
                 EngineKind::PackedShardedSqueeze { rho, shards }
             }
+            EngineKind::PackedMmaSqueeze { rho }
+            | EngineKind::PackedMmaShardedSqueeze { rho, .. } => {
+                EngineKind::PackedMmaShardedSqueeze { rho, shards }
+            }
             other => {
                 return Err(format!(
                     "shards= requires a scalar squeeze engine (got {other:?})"
@@ -108,6 +121,12 @@ impl EngineSpec {
             EngineKind::PackedShardedSqueeze { rho, shards } => {
                 EngineKind::PackedShardedSqueeze { rho, shards }
             }
+            // already bit-planar: the key is idempotent
+            EngineKind::PackedBb => EngineKind::PackedBb,
+            EngineKind::PackedMmaSqueeze { rho } => EngineKind::PackedMmaSqueeze { rho },
+            EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
+                EngineKind::PackedMmaShardedSqueeze { rho, shards }
+            }
             other => {
                 return Err(format!(
                     "packed= requires a scalar squeeze engine (got {other:?})"
@@ -123,6 +142,7 @@ impl std::fmt::Display for EngineSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self.kind {
             EngineKind::Bb => write!(f, "bb"),
+            EngineKind::PackedBb => write!(f, "bb-bits"),
             EngineKind::Lambda => write!(f, "lambda"),
             EngineKind::Squeeze { rho: 1, tensor: false } => write!(f, "squeeze"),
             EngineKind::Squeeze { rho, tensor: false } => write!(f, "squeeze:{rho}"),
@@ -134,6 +154,10 @@ impl std::fmt::Display for EngineSpec {
             EngineKind::PackedSqueeze { rho } => write!(f, "squeeze-bits:{rho}"),
             EngineKind::PackedShardedSqueeze { rho, shards } => {
                 write!(f, "squeeze-bits:{rho}:{shards}")
+            }
+            EngineKind::PackedMmaSqueeze { rho } => write!(f, "squeeze-bits:{rho}:mma"),
+            EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
+                write!(f, "squeeze-bits:{rho}:{shards}:mma")
             }
         }
     }
@@ -160,8 +184,11 @@ mod tests {
             EngineKind::Squeeze { rho: 1, tensor: true },
             EngineKind::Squeeze { rho: 8, tensor: true },
             EngineKind::ShardedSqueeze { rho: 16, shards: 4 },
+            EngineKind::PackedBb,
             EngineKind::PackedSqueeze { rho: 16 },
             EngineKind::PackedShardedSqueeze { rho: 8, shards: 3 },
+            EngineKind::PackedMmaSqueeze { rho: 16 },
+            EngineKind::PackedMmaShardedSqueeze { rho: 8, shards: 3 },
         ]
     }
 
@@ -182,8 +209,21 @@ mod tests {
 
     #[test]
     fn parse_rejects_garbage_with_the_service_message() {
-        for bad in ["hilbert", "squeeze:x", "squeeze-bits:16:0", "squeeze-bits:x",
-                    "sharded-squeeze:16:0", "sharded-squeeze:16:4:9", "bb:2", ""] {
+        for bad in [
+            "hilbert",
+            "squeeze:x",
+            "squeeze-bits:16:0",
+            "squeeze-bits:x",
+            "sharded-squeeze:16:0",
+            "sharded-squeeze:16:4:9",
+            "bb:2",
+            "",
+            "squeeze-bits:x:mma",
+            "squeeze-bits:16:0:mma",
+            "bb-bits:2",
+            "squeeze:16:mma",
+            "squeeze-bits:16:mma:2",
+        ] {
             let err = EngineSpec::parse(bad).unwrap_err();
             assert!(err.contains("unknown engine"), "{bad:?}: {err}");
         }
@@ -208,7 +248,14 @@ mod tests {
             pk.with_shards(4).unwrap().kind,
             EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 }
         );
+        // mma engines promote to mma-sharded
+        let mm = EngineSpec::parse("squeeze-bits:8:mma").unwrap();
+        assert_eq!(
+            mm.with_shards(4).unwrap().kind,
+            EngineKind::PackedMmaShardedSqueeze { rho: 8, shards: 4 }
+        );
         assert!(EngineSpec::parse("bb").unwrap().with_shards(2).is_err());
+        assert!(EngineSpec::parse("bb-bits").unwrap().with_shards(2).is_err());
         assert!(EngineSpec::parse("squeeze-tcu:4").unwrap().with_shards(2).is_err());
         assert!(sq.with_shards(0).is_err());
     }
@@ -226,6 +273,10 @@ mod tests {
         // idempotent
         let pk = EngineSpec::parse("squeeze-bits:8:2").unwrap();
         assert_eq!(pk.with_packed(true).unwrap(), pk);
+        let bbb = EngineSpec::parse("bb-bits").unwrap();
+        assert_eq!(bbb.with_packed(true).unwrap(), bbb);
+        let mm = EngineSpec::parse("squeeze-bits:8:2:mma").unwrap();
+        assert_eq!(mm.with_packed(true).unwrap(), mm);
         assert!(EngineSpec::parse("bb").unwrap().with_packed(true).is_err());
         assert!(EngineSpec::parse("squeeze-tcu:4").unwrap().with_packed(true).is_err());
     }

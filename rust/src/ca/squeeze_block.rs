@@ -434,6 +434,31 @@ mod tests {
     }
 
     #[test]
+    fn mma_rule_lift_engine_agrees_with_bb_and_names_itself() {
+        // the MMA backend differs only in sweep_tile; the engine hash
+        // must match BB step for step like every other backend
+        let spec = catalog::sierpinski_triangle();
+        let r = 5;
+        let reference = {
+            let mut bb = BbEngine::new(&spec, r, Rule::game_of_life(), 0.4, 21, 2);
+            run_and_hash(&mut bb, 6)
+        };
+        let mut mm = SqueezeEngine::<crate::ca::backend::MmaPackedBackend>::new(
+            &spec,
+            r,
+            4,
+            Rule::game_of_life(),
+            0.4,
+            21,
+            2,
+            MapPath::Scalar,
+        )
+        .unwrap();
+        assert_eq!(mm.name(), "squeeze-bits-mma-rho4");
+        assert_eq!(run_and_hash(&mut mm, 6), reference);
+    }
+
+    #[test]
     fn rho_equal_to_n_is_single_block_brute_force() {
         // rho = n means r_b = 0: one block, pure micro-brute-force.
         let spec = catalog::sierpinski_triangle();

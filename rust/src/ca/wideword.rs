@@ -1,0 +1,762 @@
+//! Width-generic bit-planar word kernels — the carry-save adder / rule
+//! pipeline of `ca::bitkernel`, lifted over a [`WordLane`] abstraction so
+//! one kernel body steps 1, 2, 4 or 8 `u64` words per lane-step.
+//!
+//! A lane is `W` consecutive row words treated as one 64·W-bit register:
+//! the boolean algebra (adders, equality planes, rule mux) is genuinely
+//! lane-parallel, and only the shift-by-one-cell operations stitch a
+//! single carry bit across word boundaries. Three instantiations:
+//!
+//! - `u64` — `W = 1`, today's scalar kernel, always available;
+//! - [`ArrayLane<W>`] — fixed-size `[u64; W]` with unrolled ops, the
+//!   stable-toolchain wide path (auto-vectorizes well);
+//! - `core::simd::Simd<u64, W>` — explicit SIMD behind the `simd` cargo
+//!   feature (nightly `portable_simd`).
+//!
+//! [`sweep_rows`] drives the pipeline over a row-padded packed grid: the
+//! aligned prefix of *full* words in each row runs at the chosen lane
+//! width, and ragged row tails (`cols % 64 != 0`, e.g. ρ = 81 or 127)
+//! fall back to the scalar word path, which places the east boundary bit
+//! at the row's true last cell. [`lane_words_for`] picks the widest lane
+//! that fits a row's full-word run (override: `SQUEEZE_PACKED_LANE`).
+//! Callers describe each extended source row with a [`RowSrc`] — a word
+//! base plus the two single cells entering from the west/east sides — so
+//! the same sweep body serves the tiled `squeeze-bits` engines (Moore
+//! adjacency sources) and the flat `bb-bits` baseline (zero boundary).
+
+use super::backend::UnitPtr;
+use super::rule::Rule;
+
+/// Bits per storage word.
+pub const WORD_BITS: u32 = 64;
+
+/// One register of `WIDTH` consecutive `u64` row words, supporting the
+/// boolean algebra of the bit-planar pipeline plus whole-lane shifts by
+/// one cell with single-bit carry stitching across word boundaries.
+pub trait WordLane: Copy {
+    /// Words per lane.
+    const WIDTH: usize;
+
+    /// All-zero lane.
+    fn zero() -> Self;
+
+    /// Load `WIDTH` consecutive words from `src[at..]`.
+    fn load(src: &[u64], at: usize) -> Self;
+
+    /// Extract word `i` (`0 <= i < WIDTH`).
+    fn word(self, i: usize) -> u64;
+
+    fn and(self, other: Self) -> Self;
+    fn or(self, other: Self) -> Self;
+    fn xor(self, other: Self) -> Self;
+    fn not(self) -> Self;
+
+    /// Shift the whole lane one cell toward higher bit positions (the
+    /// west-neighbor plane): bit 63 of word `i` moves to bit 0 of word
+    /// `i + 1`, and `carry_in` (0/1) enters bit 0 of word 0.
+    fn shl1(self, carry_in: u64) -> Self;
+
+    /// Shift the whole lane one cell toward lower bit positions (the
+    /// east-neighbor plane): bit 0 of word `i + 1` moves to bit 63 of
+    /// word `i`, and `carry_in` (0/1) enters bit 63 of the last word.
+    /// Only valid when every word of the lane holds 64 real cells.
+    fn shr1(self, carry_in: u64) -> Self;
+}
+
+impl WordLane for u64 {
+    const WIDTH: usize = 1;
+
+    #[inline(always)]
+    fn zero() -> u64 {
+        0
+    }
+
+    #[inline(always)]
+    fn load(src: &[u64], at: usize) -> u64 {
+        src[at]
+    }
+
+    #[inline(always)]
+    fn word(self, _i: usize) -> u64 {
+        self
+    }
+
+    #[inline(always)]
+    fn and(self, other: u64) -> u64 {
+        self & other
+    }
+
+    #[inline(always)]
+    fn or(self, other: u64) -> u64 {
+        self | other
+    }
+
+    #[inline(always)]
+    fn xor(self, other: u64) -> u64 {
+        self ^ other
+    }
+
+    #[inline(always)]
+    fn not(self) -> u64 {
+        !self
+    }
+
+    #[inline(always)]
+    fn shl1(self, carry_in: u64) -> u64 {
+        (self << 1) | carry_in
+    }
+
+    #[inline(always)]
+    fn shr1(self, carry_in: u64) -> u64 {
+        (self >> 1) | (carry_in << (WORD_BITS - 1))
+    }
+}
+
+/// Fixed-width multi-word lane with unrolled scalar ops — the wide path
+/// on stable toolchains (the `simd` feature swaps the lane aliases to
+/// `core::simd::Simd<u64, W>`; this type stays available and tested
+/// either way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayLane<const W: usize>(pub [u64; W]);
+
+impl<const W: usize> WordLane for ArrayLane<W> {
+    const WIDTH: usize = W;
+
+    #[inline(always)]
+    fn zero() -> Self {
+        ArrayLane([0; W])
+    }
+
+    #[inline(always)]
+    fn load(src: &[u64], at: usize) -> Self {
+        let mut a = [0u64; W];
+        a.copy_from_slice(&src[at..at + W]);
+        ArrayLane(a)
+    }
+
+    #[inline(always)]
+    fn word(self, i: usize) -> u64 {
+        self.0[i]
+    }
+
+    #[inline(always)]
+    fn and(self, other: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(other.0) {
+            *x &= y;
+        }
+        ArrayLane(a)
+    }
+
+    #[inline(always)]
+    fn or(self, other: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(other.0) {
+            *x |= y;
+        }
+        ArrayLane(a)
+    }
+
+    #[inline(always)]
+    fn xor(self, other: Self) -> Self {
+        let mut a = self.0;
+        for (x, y) in a.iter_mut().zip(other.0) {
+            *x ^= y;
+        }
+        ArrayLane(a)
+    }
+
+    #[inline(always)]
+    fn not(self) -> Self {
+        let mut a = self.0;
+        for x in a.iter_mut() {
+            *x = !*x;
+        }
+        ArrayLane(a)
+    }
+
+    #[inline(always)]
+    fn shl1(self, carry_in: u64) -> Self {
+        let mut out = [0u64; W];
+        let mut carry = carry_in;
+        for (o, a) in out.iter_mut().zip(self.0) {
+            *o = (a << 1) | carry;
+            carry = a >> (WORD_BITS - 1);
+        }
+        ArrayLane(out)
+    }
+
+    #[inline(always)]
+    fn shr1(self, carry_in: u64) -> Self {
+        let mut out = [0u64; W];
+        let mut carry = carry_in;
+        for (o, a) in out.iter_mut().zip(self.0).rev() {
+            *o = (a >> 1) | (carry << (WORD_BITS - 1));
+            carry = a & 1;
+        }
+        ArrayLane(out)
+    }
+}
+
+#[cfg(feature = "simd")]
+mod simd_lane {
+    use super::{WordLane, WORD_BITS};
+    use core::simd::{LaneCount, Simd, SupportedLaneCount};
+
+    impl<const W: usize> WordLane for Simd<u64, W>
+    where
+        LaneCount<W>: SupportedLaneCount,
+    {
+        const WIDTH: usize = W;
+
+        #[inline(always)]
+        fn zero() -> Self {
+            Simd::splat(0)
+        }
+
+        #[inline(always)]
+        fn load(src: &[u64], at: usize) -> Self {
+            Simd::from_slice(&src[at..at + W])
+        }
+
+        #[inline(always)]
+        fn word(self, i: usize) -> u64 {
+            self.to_array()[i]
+        }
+
+        #[inline(always)]
+        fn and(self, other: Self) -> Self {
+            self & other
+        }
+
+        #[inline(always)]
+        fn or(self, other: Self) -> Self {
+            self | other
+        }
+
+        #[inline(always)]
+        fn xor(self, other: Self) -> Self {
+            self ^ other
+        }
+
+        #[inline(always)]
+        fn not(self) -> Self {
+            !self
+        }
+
+        // The carry-stitched shifts cross element boundaries, which
+        // portable SIMD cannot express as one vector op; they round-trip
+        // through the array form while the adder/rule algebra (the bulk
+        // of the pipeline) stays vectorized.
+        #[inline(always)]
+        fn shl1(self, carry_in: u64) -> Self {
+            let a = self.to_array();
+            let mut out = [0u64; W];
+            let mut carry = carry_in;
+            for (o, a) in out.iter_mut().zip(a) {
+                *o = (a << 1) | carry;
+                carry = a >> (WORD_BITS - 1);
+            }
+            Simd::from_array(out)
+        }
+
+        #[inline(always)]
+        fn shr1(self, carry_in: u64) -> Self {
+            let a = self.to_array();
+            let mut out = [0u64; W];
+            let mut carry = carry_in;
+            for (o, a) in out.iter_mut().zip(a).rev() {
+                *o = (a >> 1) | (carry << (WORD_BITS - 1));
+                carry = a & 1;
+            }
+            Simd::from_array(out)
+        }
+    }
+}
+
+/// The 2-word lane behind `lane_words = 2`.
+#[cfg(feature = "simd")]
+pub type Lane2 = core::simd::Simd<u64, 2>;
+/// The 4-word lane behind `lane_words = 4`.
+#[cfg(feature = "simd")]
+pub type Lane4 = core::simd::Simd<u64, 4>;
+/// The 8-word lane behind `lane_words = 8`.
+#[cfg(feature = "simd")]
+pub type Lane8 = core::simd::Simd<u64, 8>;
+
+/// The 2-word lane behind `lane_words = 2`.
+#[cfg(not(feature = "simd"))]
+pub type Lane2 = ArrayLane<2>;
+/// The 4-word lane behind `lane_words = 4`.
+#[cfg(not(feature = "simd"))]
+pub type Lane4 = ArrayLane<4>;
+/// The 8-word lane behind `lane_words = 8`.
+#[cfg(not(feature = "simd"))]
+pub type Lane8 = ArrayLane<8>;
+
+/// Lane width (in words) for a row whose aligned prefix holds
+/// `full_words` whole 64-cell words: the widest of {8, 4, 2} that fits,
+/// else scalar. Ragged geometries (ρ = 81 wpr = 2 full = 1, ρ = 127
+/// wpr = 2 full = 1) therefore fall back to the scalar kernel cleanly.
+/// The `SQUEEZE_PACKED_LANE` env var (1/2/4/8) overrides the choice —
+/// the fig13 harness pins a forced-scalar twin with it.
+pub fn lane_words_for(full_words: u32) -> u32 {
+    if let Ok(v) = std::env::var("SQUEEZE_PACKED_LANE") {
+        if let Ok(n) = v.parse::<u32>() {
+            if matches!(n, 1 | 2 | 4 | 8) {
+                return n;
+            }
+        }
+    }
+    [8u32, 4, 2]
+        .iter()
+        .copied()
+        .find(|&w| w <= full_words)
+        .unwrap_or(1)
+}
+
+/// Bit-sliced full adder over lane planes: per lane bit, `a + b + c` as
+/// (sum, carry).
+#[inline(always)]
+pub fn full_add<L: WordLane>(a: L, b: L, c: L) -> (L, L) {
+    let axb = a.xor(b);
+    (axb.xor(c), a.and(b).or(c.and(axb)))
+}
+
+/// Per-lane-bit Moore neighbor count of the 8 neighbor bit-planes, as
+/// four count-bit planes (b0 = 1s, b1 = 2s, b2 = 4s, b3 = 8s; counts
+/// 0..=8).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn count_neighbors<L: WordLane>(
+    aw: L,
+    ac: L,
+    ae: L,
+    cw: L,
+    ce: L,
+    sw: L,
+    sc: L,
+    se: L,
+) -> (L, L, L, L) {
+    // three carry-save columns: 8 inputs -> (3 sums, 3 carries)
+    let (s1, c1) = full_add(aw, ac, ae);
+    let (s2, c2) = full_add(cw, ce, sw);
+    let (s3, c3) = (sc.xor(se), sc.and(se)); // half adder
+    // count = (s1+s2+s3) + 2·(c1+c2+c3)
+    let (b0, t1) = full_add(s1, s2, s3);
+    let (u1, u2) = full_add(c1, c2, c3);
+    let b1 = t1.xor(u1);
+    let k = t1.and(u1);
+    (b0, b1, u2.xor(k), u2.and(k))
+}
+
+/// Apply a totalistic B/S rule per lane bit: `alive` is the centre
+/// plane, `(b0..b3)` the count planes. Only count values the rule
+/// mentions pay an equality plane.
+#[inline(always)]
+pub fn apply_rule<L: WordLane>(rule: Rule, alive: L, b0: L, b1: L, b2: L, b3: L) -> L {
+    let mut birth_sel = L::zero();
+    let mut survive_sel = L::zero();
+    let mentioned = rule.birth | rule.survive;
+    for n in 0..=8u32 {
+        if (mentioned >> n) & 1 == 0 {
+            continue;
+        }
+        let x0 = if n & 1 != 0 { b0 } else { b0.not() };
+        let x1 = if n & 2 != 0 { b1 } else { b1.not() };
+        let x2 = if n & 4 != 0 { b2 } else { b2.not() };
+        let x3 = if n & 8 != 0 { b3 } else { b3.not() };
+        let eq = x0.and(x1).and(x2).and(x3);
+        if (rule.birth >> n) & 1 != 0 {
+            birth_sel = birth_sel.or(eq);
+        }
+        if (rule.survive >> n) & 1 != 0 {
+            survive_sel = survive_sel.or(eq);
+        }
+    }
+    alive.and(survive_sel).or(alive.not().and(birth_sel))
+}
+
+/// Word sources of one extended source row: the row's word base in the
+/// state buffer (`None` = all-dead row), plus the two single cells that
+/// enter the row from beyond its west/east ends (tile adjacency for the
+/// block engines, always 0 for a flat grid).
+#[derive(Clone, Copy)]
+pub(crate) struct RowSrc {
+    pub base: Option<u64>,
+    pub west_bit: u64,
+    pub east_bit: u64,
+}
+
+/// The three lane-aligned masks of `L::WIDTH` consecutive **full** words
+/// of one source row starting at word `wx`: (west-shifted, centre,
+/// east-shifted). The caller guarantees every word of the lane holds 64
+/// real cells (the aligned prefix of the row).
+#[inline(always)]
+fn row_lane<L: WordLane>(cur: &[u64], src: RowSrc, wx: u32, wpr: u32) -> (L, L, L) {
+    let w = L::WIDTH as u32;
+    let c = match src.base {
+        Some(b) => L::load(cur, (b + wx as u64) as usize),
+        None => L::zero(),
+    };
+    let wbit = if wx > 0 {
+        match src.base {
+            Some(b) => cur[(b + wx as u64 - 1) as usize] >> (WORD_BITS - 1),
+            None => 0,
+        }
+    } else {
+        src.west_bit
+    };
+    let ebit = if wx + w < wpr {
+        match src.base {
+            Some(b) => cur[(b + wx as u64 + w as u64) as usize] & 1,
+            None => 0,
+        }
+    } else {
+        src.east_bit
+    };
+    (c.shl1(wbit), c, c.shr1(ebit))
+}
+
+/// The three lane-aligned masks of one (possibly ragged) row word at
+/// `wx`: (west-shifted, centre, east-shifted). `valid` lanes carry real
+/// cells; stray bits beyond them never reach the output (the hole mask
+/// is 0 there).
+#[inline(always)]
+pub(crate) fn row_words(cur: &[u64], src: RowSrc, wx: u32, wpr: u32, cols: u32) -> (u64, u64, u64) {
+    let c = match src.base {
+        Some(b) => cur[(b + wx as u64) as usize],
+        None => 0,
+    };
+    let wbit = if wx > 0 {
+        match src.base {
+            Some(b) => cur[(b + wx as u64 - 1) as usize] >> (WORD_BITS - 1),
+            None => 0,
+        }
+    } else {
+        src.west_bit
+    };
+    let valid = (cols - wx * WORD_BITS).min(WORD_BITS);
+    let ebit = if wx + 1 < wpr {
+        match src.base {
+            Some(b) => cur[(b + wx as u64 + 1) as usize] & 1,
+            None => 0,
+        }
+    } else {
+        src.east_bit
+    };
+    ((c << 1) | wbit, c, (c >> 1) | (ebit << (valid - 1)))
+}
+
+/// Step rows `row_lo..row_hi` of a row-padded packed grid (`cols` cells
+/// per row, `wpr` words per row) through the adder/rule pipeline at lane
+/// width `L`: for output row `iy`, `src_of(jy)` describes extended
+/// source row `jy ∈ {iy-1, iy, iy+1}`, the result is ANDed with
+/// `mask[iy·wpr + wx]` and written at `out_base + iy·wpr + wx` through
+/// `out`. The aligned prefix of full words runs lane-wide; the ragged
+/// tail (and any row when `L` is wider than the full-word run) uses the
+/// scalar word path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows<L: WordLane, F: Fn(i64) -> RowSrc>(
+    cur: &[u64],
+    out: UnitPtr<u64>,
+    row_lo: u32,
+    row_hi: u32,
+    cols: u32,
+    wpr: u32,
+    mask: &[u64],
+    out_base: u64,
+    rule: Rule,
+    src_of: &F,
+) {
+    let w = L::WIDTH as u32;
+    let full_words = if cols % WORD_BITS == 0 { wpr } else { wpr - 1 };
+    let wide_end = if w <= full_words {
+        full_words - full_words % w
+    } else {
+        0
+    };
+    for iy in row_lo..row_hi {
+        let above = src_of(iy as i64 - 1);
+        let centre = src_of(iy as i64);
+        let below = src_of(iy as i64 + 1);
+        let row_words_base = iy as u64 * wpr as u64;
+        let mut wx = 0u32;
+        while wx < wide_end {
+            let (aw, ac, ae) = row_lane::<L>(cur, above, wx, wpr);
+            let (cw, cc, ce) = row_lane::<L>(cur, centre, wx, wpr);
+            let (sw, sc, se) = row_lane::<L>(cur, below, wx, wpr);
+            let (b0, b1, b2, b3) = count_neighbors(aw, ac, ae, cw, ce, sw, sc, se);
+            let at = row_words_base + wx as u64;
+            let next = apply_rule(rule, cc, b0, b1, b2, b3).and(L::load(mask, at as usize));
+            for i in 0..L::WIDTH {
+                unsafe { out.0.add((out_base + at) as usize + i).write(next.word(i)) };
+            }
+            wx += w;
+        }
+        while wx < wpr {
+            let (aw, ac, ae) = row_words(cur, above, wx, wpr, cols);
+            let (cw, cc, ce) = row_words(cur, centre, wx, wpr, cols);
+            let (sw, sc, se) = row_words(cur, below, wx, wpr, cols);
+            let (b0, b1, b2, b3) = count_neighbors(aw, ac, ae, cw, ce, sw, sc, se);
+            let at = row_words_base + wx as u64;
+            let next = apply_rule(rule, cc, b0, b1, b2, b3) & mask[at as usize];
+            unsafe { out.0.add((out_base + at) as usize).write(next) };
+            wx += 1;
+        }
+    }
+}
+
+/// [`sweep_rows`] dispatched on a runtime lane width (1/2/4/8 words) —
+/// the per-tile auto-selection seam: `PackedGeom` picks its width once
+/// from the row geometry ([`lane_words_for`]) and every sweep goes
+/// through here.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sweep_rows_auto<F: Fn(i64) -> RowSrc>(
+    cur: &[u64],
+    out: UnitPtr<u64>,
+    row_lo: u32,
+    row_hi: u32,
+    cols: u32,
+    wpr: u32,
+    lane_words: u32,
+    mask: &[u64],
+    out_base: u64,
+    rule: Rule,
+    src_of: &F,
+) {
+    match lane_words {
+        8 => sweep_rows::<Lane8, F>(
+            cur, out, row_lo, row_hi, cols, wpr, mask, out_base, rule, src_of,
+        ),
+        4 => sweep_rows::<Lane4, F>(
+            cur, out, row_lo, row_hi, cols, wpr, mask, out_base, rule, src_of,
+        ),
+        2 => sweep_rows::<Lane2, F>(
+            cur, out, row_lo, row_hi, cols, wpr, mask, out_base, rule, src_of,
+        ),
+        _ => sweep_rows::<u64, F>(
+            cur, out, row_lo, row_hi, cols, wpr, mask, out_base, rule, src_of,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    /// Drive the lane pipeline over all 256 Moore-neighborhood
+    /// combinations (8 words × 64 bits, bit position = combination mod
+    /// 256, so every lane width up to 8 covers the full table) and check
+    /// counts and rule output per bit against `Rule::next_u8`.
+    #[allow(clippy::needless_range_loop)] // w also feeds the combo arithmetic
+    fn check_pipeline<L: WordLane>(rule: Rule) {
+        // planes[m][w]: bit-plane of neighbor m over combos (w*64..w*64+63) % 256
+        let mut planes = [[0u64; 8]; 8];
+        for w in 0..8usize {
+            for bit in 0..64usize {
+                let combo = (w * 64 + bit) % 256;
+                for (m, plane) in planes.iter_mut().enumerate() {
+                    if (combo >> m) & 1 == 1 {
+                        plane[w] |= 1u64 << bit;
+                    }
+                }
+            }
+        }
+        let groups = 8 / L::WIDTH;
+        for alive_bit in [0u8, 1] {
+            let alive = if alive_bit == 1 {
+                L::zero().not()
+            } else {
+                L::zero()
+            };
+            for g in 0..groups {
+                let at = g * L::WIDTH;
+                let (b0, b1, b2, b3) = count_neighbors(
+                    L::load(&planes[0], at),
+                    L::load(&planes[1], at),
+                    L::load(&planes[2], at),
+                    L::load(&planes[3], at),
+                    L::load(&planes[4], at),
+                    L::load(&planes[5], at),
+                    L::load(&planes[6], at),
+                    L::load(&planes[7], at),
+                );
+                let next = apply_rule(rule, alive, b0, b1, b2, b3);
+                for i in 0..L::WIDTH {
+                    for bit in 0..64u32 {
+                        let combo = (((at + i) * 64) as u32 + bit) % 256;
+                        let count = combo.count_ones();
+                        let got_count = ((b0.word(i) >> bit) & 1)
+                            + 2 * ((b1.word(i) >> bit) & 1)
+                            + 4 * ((b2.word(i) >> bit) & 1)
+                            + 8 * ((b3.word(i) >> bit) & 1);
+                        assert_eq!(got_count, count as u64, "combo={combo} W={}", L::WIDTH);
+                        assert_eq!(
+                            ((next.word(i) >> bit) & 1) as u8,
+                            rule.next_u8(alive_bit, count),
+                            "combo={combo} alive={alive_bit} W={} rule={}",
+                            L::WIDTH,
+                            rule.notation()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn check_pipeline_at_every_width(rule: Rule) {
+        check_pipeline::<u64>(rule);
+        check_pipeline::<ArrayLane<2>>(rule);
+        check_pipeline::<ArrayLane<4>>(rule);
+        check_pipeline::<ArrayLane<8>>(rule);
+        check_pipeline::<Lane2>(rule);
+        check_pipeline::<Lane4>(rule);
+        check_pipeline::<Lane8>(rule);
+    }
+
+    #[test]
+    fn pipeline_matches_next_u8_exhaustively_at_every_lane_width() {
+        for text in ["B3/S23", "B36/S23", "B2/S", "B/S012345678", "B13/S0123"] {
+            check_pipeline_at_every_width(Rule::parse(text).unwrap());
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_next_u8_for_random_rule_masks_at_every_width() {
+        let mut prng = Prng::new(0xB17D);
+        for _ in 0..40 {
+            let rule = Rule {
+                birth: prng.below(512) as u16,
+                survive: prng.below(512) as u16,
+            };
+            check_pipeline_at_every_width(rule);
+        }
+    }
+
+    #[test]
+    fn lane_shifts_stitch_carries_across_words() {
+        // a pattern with live bits on every word boundary of the lane
+        let words = [1u64 | (1 << 63), 1 | (1 << 63), 1 | (1 << 63), 1 | (1 << 63)];
+        let lane = ArrayLane::<4>::load(&words, 0);
+        let west = lane.shl1(1);
+        let east = lane.shr1(1);
+        for i in 0..4 {
+            // west plane: everything moved up one bit; bit 0 of word i is
+            // the previous word's bit 63 (or the carry-in at word 0)
+            assert_eq!(west.word(i), (words[i] << 1) | 1, "west word {i}");
+            // east plane: bit 63 of word i is the next word's bit 0 (or
+            // the carry-in at the last word)
+            assert_eq!(east.word(i), (words[i] >> 1) | (1 << 63), "east word {i}");
+        }
+        // scalar agrees with the 1-wide lane
+        assert_eq!(<u64 as WordLane>::shl1(0b101, 1), 0b1011);
+        assert_eq!(<u64 as WordLane>::shr1(0b101, 1), (1 << 63) | 0b10);
+    }
+
+    #[test]
+    fn lane_width_auto_selection_respects_full_word_runs() {
+        // no env override in the test process unless a caller set one
+        std::env::remove_var("SQUEEZE_PACKED_LANE");
+        assert_eq!(lane_words_for(0), 1); // ρ < 64: no full words
+        assert_eq!(lane_words_for(1), 1); // ρ = 81/127: 1 full word
+        assert_eq!(lane_words_for(2), 2); // ρ = 128
+        assert_eq!(lane_words_for(3), 2); // ρ = 192
+        assert_eq!(lane_words_for(4), 4); // ρ = 256
+        assert_eq!(lane_words_for(8), 8); // ρ = 512
+        assert_eq!(lane_words_for(9), 8);
+        std::env::set_var("SQUEEZE_PACKED_LANE", "1");
+        assert_eq!(lane_words_for(8), 1);
+        std::env::set_var("SQUEEZE_PACKED_LANE", "4");
+        assert_eq!(lane_words_for(8), 4);
+        std::env::set_var("SQUEEZE_PACKED_LANE", "banana");
+        assert_eq!(lane_words_for(8), 8);
+        std::env::remove_var("SQUEEZE_PACKED_LANE");
+    }
+
+    /// Reference next-state of a flat `rows × cols` grid with dead
+    /// boundary, straight from `Rule::next_u8`.
+    fn naive_step(grid: &[u64], rows: u32, cols: u32, wpr: u32, rule: Rule) -> Vec<u64> {
+        let get = |g: &[u64], x: i64, y: i64| -> u8 {
+            if x < 0 || y < 0 || x >= cols as i64 || y >= rows as i64 {
+                return 0;
+            }
+            ((g[(y as u64 * wpr as u64 + x as u64 / 64) as usize] >> (x as u64 % 64)) & 1) as u8
+        };
+        let mut out = vec![0u64; (rows * wpr) as usize];
+        for y in 0..rows as i64 {
+            for x in 0..cols as i64 {
+                let mut count = 0u32;
+                for dy in -1..=1i64 {
+                    for dx in -1..=1i64 {
+                        if dx == 0 && dy == 0 {
+                            continue;
+                        }
+                        count += get(grid, x + dx, y + dy) as u32;
+                    }
+                }
+                if rule.next_u8(get(grid, x, y), count) != 0 {
+                    out[(y as u64 * wpr as u64 + x as u64 / 64) as usize] |= 1u64 << (x % 64);
+                }
+            }
+        }
+        out
+    }
+
+    fn sweep_flat(grid: &[u64], rows: u32, cols: u32, wpr: u32, lane: u32, rule: Rule) -> Vec<u64> {
+        // full mask: every real cell live-able, padding bits dead
+        let mut mask = vec![0u64; (rows * wpr) as usize];
+        for y in 0..rows {
+            for x in 0..cols {
+                mask[(y * wpr + x / 64) as usize] |= 1u64 << (x % 64);
+            }
+        }
+        let mut out = vec![0u64; (rows * wpr) as usize];
+        let src_of = |jy: i64| RowSrc {
+            base: (jy >= 0 && jy < rows as i64).then(|| jy as u64 * wpr as u64),
+            west_bit: 0,
+            east_bit: 0,
+        };
+        sweep_rows_auto(
+            grid,
+            UnitPtr(out.as_mut_ptr()),
+            0,
+            rows,
+            cols,
+            wpr,
+            lane,
+            &mask,
+            0,
+            rule,
+            &src_of,
+        );
+        out
+    }
+
+    #[test]
+    fn ragged_geometry_sweeps_agree_at_every_lane_width() {
+        // The tail-word differential the wide path must not disturb:
+        // widths spanning no full words (81, 127), exactly full words
+        // (128, 192), and a wide run plus a ragged tail (200, 513).
+        let mut prng = Prng::new(0x9A6);
+        let rule = Rule::parse("B3/S23").unwrap();
+        for cols in [81u32, 127, 128, 192, 200, 513] {
+            let rows = 24u32;
+            let wpr = cols.div_ceil(WORD_BITS);
+            let mut grid = vec![0u64; (rows * wpr) as usize];
+            for y in 0..rows {
+                for x in 0..cols {
+                    if prng.below(100) < 40 {
+                        grid[(y * wpr + x / 64) as usize] |= 1u64 << (x % 64);
+                    }
+                }
+            }
+            let want = naive_step(&grid, rows, cols, wpr, rule);
+            for lane in [1u32, 2, 4, 8] {
+                let got = sweep_flat(&grid, rows, cols, wpr, lane, rule);
+                assert_eq!(got, want, "cols={cols} lane={lane}");
+            }
+        }
+    }
+}

@@ -1820,7 +1820,9 @@ impl Coordinator {
         new_spec.engine = kind;
         let sharded = matches!(
             kind,
-            EngineKind::ShardedSqueeze { .. } | EngineKind::PackedShardedSqueeze { .. }
+            EngineKind::ShardedSqueeze { .. }
+                | EngineKind::PackedShardedSqueeze { .. }
+                | EngineKind::PackedMmaShardedSqueeze { .. }
         );
         if !sharded {
             // auto-balance is a sharded-only knob; a relayout to a

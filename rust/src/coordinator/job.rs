@@ -128,7 +128,9 @@ impl JobSpec {
         // rejected every non-sharded engine family.
         let sharded = matches!(
             spec.engine,
-            EngineKind::ShardedSqueeze { .. } | EngineKind::PackedShardedSqueeze { .. }
+            EngineKind::ShardedSqueeze { .. }
+                | EngineKind::PackedShardedSqueeze { .. }
+                | EngineKind::PackedMmaShardedSqueeze { .. }
         );
         if let Some(v) = overlap {
             if !sharded {
@@ -174,7 +176,8 @@ impl JobSpec {
         );
         match self.engine {
             EngineKind::ShardedSqueeze { shards, .. }
-            | EngineKind::PackedShardedSqueeze { shards, .. } => {
+            | EngineKind::PackedShardedSqueeze { shards, .. }
+            | EngineKind::PackedMmaShardedSqueeze { shards, .. } => {
                 line.push_str(&format!(
                     " overlap={} compact={}",
                     self.overlap as u8, self.compact as u8
@@ -214,7 +217,9 @@ impl JobSpec {
             EngineKind::Squeeze { rho, .. }
             | EngineKind::ShardedSqueeze { rho, .. }
             | EngineKind::PackedSqueeze { rho }
-            | EngineKind::PackedShardedSqueeze { rho, .. } => {
+            | EngineKind::PackedShardedSqueeze { rho, .. }
+            | EngineKind::PackedMmaSqueeze { rho }
+            | EngineKind::PackedMmaShardedSqueeze { rho, .. } => {
                 crate::memory::squeeze_bytes(spec, self.r, rho, 1)
                     .map(|_| ())
                     .map_err(|e| e.to_string())
@@ -398,9 +403,17 @@ mod tests {
         assert!(bad_packed.validate(&tri).unwrap_err().contains("rho=3"));
         let bad_packed_sharded = JobSpec::parse_line(1, "engine=squeeze-bits:16:2 r=2").unwrap();
         assert!(bad_packed_sharded.validate(&tri).is_err());
-        // bb never fails rho validation
+        // the mma rule lift binds rho the same way as its scalar twin
+        let bad_mma = JobSpec::parse_line(1, "engine=squeeze-bits:3:mma r=6").unwrap();
+        assert!(bad_mma.validate(&tri).unwrap_err().contains("rho=3"));
+        let bad_mma_sharded =
+            JobSpec::parse_line(1, "engine=squeeze-bits:16:2:mma r=2").unwrap();
+        assert!(bad_mma_sharded.validate(&tri).is_err());
+        // bb never fails rho validation (and neither does its packed twin)
         let bb = JobSpec::parse_line(1, "engine=bb r=2").unwrap();
         assert!(bb.validate(&tri).is_ok());
+        let bb_bits = JobSpec::parse_line(1, "engine=bb-bits r=2").unwrap();
+        assert!(bb_bits.validate(&tri).is_ok());
     }
 
     #[test]
@@ -412,6 +425,9 @@ mod tests {
             "shards=auto:3 engine=squeeze:4 density=0.30000000000000004",
             "packed=1 shards=auto:5 overlap=1 compact=0 engine=squeeze:16",
             "engine=squeeze-bits:8 seed=18446744073709551615",
+            "engine=squeeze-bits:8:mma r=6",
+            "engine=squeeze-bits:8:2:mma overlap=0 compact=1 r=6",
+            "engine=bb-bits r=6",
             "engine=bb rule=B2/S",
         ] {
             let spec = JobSpec::parse_line(7, line).unwrap();

@@ -42,7 +42,8 @@ pub(super) fn prepare_job_engine(
     spec.validate(&fractal)?;
     if let (
         EngineKind::ShardedSqueeze { rho, shards }
-        | EngineKind::PackedShardedSqueeze { rho, shards },
+        | EngineKind::PackedShardedSqueeze { rho, shards }
+        | EngineKind::PackedMmaShardedSqueeze { rho, shards },
         Some(c),
     ) = (spec.engine, cache)
     {

@@ -6,9 +6,10 @@
 //!   request line  = whitespace-separated `key=value` pairs (see
 //!                   [`JobSpec::parse_line`]), e.g.
 //!                   `engine=squeeze:16 r=10 steps=100 seed=7`.
-//!                   `engine=` accepts `bb`, `lambda`, `squeeze[:RHO]`,
-//!                   `squeeze-tcu[:RHO]`, `sharded-squeeze:RHO[:SHARDS]`
-//!                   and `squeeze-bits:RHO[:SHARDS]`; the `shards=`,
+//!                   `engine=` accepts `bb`, `bb-bits`, `lambda`,
+//!                   `squeeze[:RHO]`, `squeeze-tcu[:RHO]`,
+//!                   `sharded-squeeze:RHO[:SHARDS]` and
+//!                   `squeeze-bits:RHO[:SHARDS][:mma]`; the `shards=`,
 //!                   `packed=`, `overlap=`, `compact=` keys promote/tune
 //!                   as before. Each job line executes to completion and
 //!                   answers one TSV row ([`JobResult::to_tsv`]); errors
@@ -77,8 +78,8 @@ use crate::util::timer::Timer;
 const HELP: &str = "\
 # job line: key=value pairs — fractal= engine= r= steps= density= seed= rule= workers= \
 shards=[auto:]N packed=0/1 overlap=0/1 compact=0/1
-# engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | sharded-squeeze:RHO[:SHARDS] | \
-squeeze-bits[:RHO[:SHARDS]]
+# engines: bb | bb-bits | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | \
+sharded-squeeze:RHO[:SHARDS] | squeeze-bits[:RHO[:SHARDS]][:mma]
 # verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
 stepall [N] | inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | \
 close SID | persist SID [steps=N] [secs=S] | persist SID off | relayout SID ENGINE | \

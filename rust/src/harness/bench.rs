@@ -77,13 +77,15 @@ pub fn bench(opts: &BenchOpts, mut f: impl FnMut()) -> Summary {
             if budget.elapsed_s() > opts.budget_s {
                 break;
             }
-            let s = Summary::of(&samples);
+            let s = Summary::of(&samples).expect("loop recorded at least one sample");
             if s.stderr_pct() < opts.target_stderr_pct {
                 break;
             }
         }
     }
-    Summary::of(&samples)
+    // the loop body records a sample before any break, so the measurement
+    // set is never empty even at max_reps=0
+    Summary::of(&samples).expect("bench records at least one sample")
 }
 
 #[cfg(test)]

@@ -85,8 +85,11 @@ pub fn sweep(
     let mut out = Vec::new();
     for &kind in kinds {
         for r in r_lo..=r_hi {
-            let needs_embedding = matches!(kind, EngineKind::Bb | EngineKind::Lambda);
+            let needs_embedding =
+                matches!(kind, EngineKind::Bb | EngineKind::PackedBb | EngineKind::Lambda);
             if needs_embedding {
+                // PackedBb's own buffers are 64× smaller, but its working
+                // set is still embedding-scale — the same OOM wall applies.
                 let bytes = crate::memory::bb_bytes(spec, r, 1) * 2;
                 if bytes > max_embedding_bytes {
                     continue; // the paper's OOM wall
@@ -95,7 +98,9 @@ pub fn sweep(
             if let EngineKind::Squeeze { rho, .. }
             | EngineKind::ShardedSqueeze { rho, .. }
             | EngineKind::PackedSqueeze { rho }
-            | EngineKind::PackedShardedSqueeze { rho, .. } = kind
+            | EngineKind::PackedShardedSqueeze { rho, .. }
+            | EngineKind::PackedMmaSqueeze { rho }
+            | EngineKind::PackedMmaShardedSqueeze { rho, .. } = kind
             {
                 if crate::maps::block::intra_levels_for(rho, spec.s)
                     .map(|l| l > r)

@@ -41,6 +41,7 @@
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 pub mod ca;
 pub mod coordinator;

@@ -73,7 +73,7 @@ fn usage(cmd: Option<&str>) {
         "usage: squeeze <command> [options]\n\n\
          commands:\n  \
          run        --engine squeeze:16 --fractal sierpinski-triangle --r 10 --steps 100\n             \
-         (engines: bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])\n  \
+         (engines: bb | bb-bits | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS][:mma] | sharded-squeeze:RHO[:SHARDS])\n  \
          serve      (v1 job lines + v2 verbs; stdin/stdout by default, or a socket\n             \
          front-end with --listen HOST:PORT | --listen unix:PATH — every connection\n             \
          shares one coordinator. Knobs: --budget N worker permits, --pool N executor\n             \
@@ -103,7 +103,7 @@ fn usage(cmd: Option<&str>) {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let engine = EngineKind::parse(&args.get_or("engine", "squeeze:16")).ok_or(
-        "bad --engine (bb | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS] | sharded-squeeze:RHO[:SHARDS])",
+        "bad --engine (bb | bb-bits | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | squeeze-bits:RHO[:SHARDS][:mma] | sharded-squeeze:RHO[:SHARDS])",
     )?;
     let spec = JobSpec {
         id: 0,
@@ -625,12 +625,17 @@ fn cmd_perf(args: &Args) -> Result<(), String> {
     let opts = BenchOpts::sweep().from_env();
     for kind in [
         EngineKind::Bb,
+        EngineKind::PackedBb,
         EngineKind::Lambda,
         EngineKind::Squeeze { rho: 1, tensor: false },
         EngineKind::Squeeze { rho: 16, tensor: false },
         EngineKind::PackedSqueeze { rho: 16 },
+        EngineKind::PackedMmaSqueeze { rho: 16 },
     ] {
-        let needs_embedding = matches!(kind, EngineKind::Bb | EngineKind::Lambda);
+        let needs_embedding = matches!(
+            kind,
+            EngineKind::Bb | EngineKind::PackedBb | EngineKind::Lambda
+        );
         let r_eff = if needs_embedding { r.min(12) } else { r };
         let p = squeeze::harness::measure(
             &spec,

@@ -27,6 +27,15 @@ pub fn lambda_bytes(spec: &FractalSpec, r: u32, cell_bytes: u64) -> u64 {
     bb_bytes(spec, r, cell_bytes)
 }
 
+/// Bit-planar bounding-box storage (one buffer): `n` rows padded to
+/// `⌈n/64⌉` 8-byte words each — the `ca::bb_bits` flat layout. Like
+/// [`packed_squeeze_bytes`] there is no `cell_bytes` knob (1 bit/cell
+/// by construction).
+pub fn packed_bb_bytes(spec: &FractalSpec, r: u32) -> u64 {
+    let n = spec.n(r);
+    n * n.div_ceil(64) * 8
+}
+
 /// Squeeze block-level storage: `k^{r - log_s ρ} · ρ² · cell_bytes`.
 /// Errors (mirroring `BlockCtx::new`) when ρ is not a power of `s` or
 /// exceeds the level-`r` fractal — callers surface this instead of a
@@ -473,6 +482,19 @@ mod tests {
         let pwhole: u64 = rows.iter().map(|row| row.packed_halo_bytes).sum();
         let pcompact: u64 = rows.iter().map(|row| row.packed_compacted_halo_bytes).sum();
         assert!(pcompact < pwhole, "packed {pcompact} !< {pwhole} at rho=64");
+    }
+
+    #[test]
+    fn packed_bb_bytes_models_the_flat_word_layout() {
+        let spec = catalog::sierpinski_triangle();
+        // n=32 at r=5: 32 rows × 1 word — an eighth of the byte BB plus
+        // the half-word row padding (32 bits used of 64)
+        assert_eq!(packed_bb_bytes(&spec, 5), 32 * 8);
+        assert_eq!(packed_bb_bytes(&spec, 5) * 2, bb_bytes(&spec, 5, 1) / 2);
+        // n=128 at r=7: rows span 2 words, exactly the full 8x saving
+        assert_eq!(packed_bb_bytes(&spec, 7), bb_bytes(&spec, 7, 1) / 8);
+        // n=27 (vicsek r=3): ragged rows still pad to one whole word
+        assert_eq!(packed_bb_bytes(&catalog::vicsek(), 3), 27 * 8);
     }
 
     #[test]

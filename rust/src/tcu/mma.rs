@@ -86,6 +86,52 @@ pub fn mma(a: &Fragment, b: &Fragment, c: &Fragment, mode: MmaMode) -> Fragment 
     d
 }
 
+/// Rectangular matmul `A (m×k) · B (k×n)` decomposed into 16×16×16
+/// fragment MMAs — how a kernel drives WMMA over matrices that are not
+/// fragment-shaped: every operand tile is gathered zero-padded into a
+/// [`Fragment`], accumulated along the k blocks with [`mma`], and the
+/// result block scattered back. Row-major slices, `a.len() = m·k`,
+/// `b.len() = k·n`, result `m·n`.
+pub fn mma_rect(a: &[f32], m: usize, k: usize, b: &[f32], n: usize, mode: MmaMode) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    let blocks = |d: usize| d.div_ceil(FRAG);
+    for bi in 0..blocks(m) {
+        for bj in 0..blocks(n) {
+            let mut c = Fragment::zero();
+            for bk in 0..blocks(k) {
+                let afrag = Fragment::from_fn(|r, p| {
+                    let (row, col) = (bi * FRAG + r, bk * FRAG + p);
+                    if row < m && col < k {
+                        a[row * k + col]
+                    } else {
+                        0.0
+                    }
+                });
+                let bfrag = Fragment::from_fn(|p, cj| {
+                    let (row, col) = (bk * FRAG + p, bj * FRAG + cj);
+                    if row < k && col < n {
+                        b[row * n + col]
+                    } else {
+                        0.0
+                    }
+                });
+                c = mma(&afrag, &bfrag, &c, mode);
+            }
+            for r in 0..FRAG {
+                for cj in 0..FRAG {
+                    let (row, col) = (bi * FRAG + r, bj * FRAG + cj);
+                    if row < m && col < n {
+                        out[row * n + col] = c.get(r, cj);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +173,23 @@ mod tests {
         let d16 = mma(&a, &b, &Fragment::zero(), MmaMode::Fp16);
         let d32 = mma(&a, &b, &Fragment::zero(), MmaMode::F32);
         assert_eq!(d16, d32);
+    }
+
+    #[test]
+    fn mma_rect_matches_naive_on_awkward_shapes() {
+        // shapes straddling fragment boundaries, incl. the rule-lift's
+        // ρ×(ρ+2) banded operands at ρ=16
+        for (m, k, n) in [(1usize, 1usize, 1usize), (16, 18, 16), (17, 3, 20), (5, 40, 7)] {
+            let a: Vec<f32> = (0..m * k).map(|i| ((i * 7) % 5) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| ((i * 3) % 4) as f32).collect();
+            let got = mma_rect(&a, m, k, &b, n, MmaMode::Fp16);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                    assert_eq!(got[i * n + j], want, "m={m} k={k} n={n} ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 pub mod cost;
 pub mod fp16;
 pub mod mma;
+pub mod rulemma;
 
 pub use cost::{CostModel, Generation};
-pub use mma::{mma, Fragment, MmaMode, FRAG};
+pub use mma::{mma, mma_rect, Fragment, MmaMode, FRAG};

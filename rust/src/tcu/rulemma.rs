@@ -1,0 +1,216 @@
+//! Rule application on the MMA seam — the paper's tensor-core thesis
+//! applied to the CA transition itself, not just the λ/ν maps.
+//!
+//! A Moore neighbor count is a 3×3 box filter, and a box filter is
+//! separable: with `E` the (ρ+2)×(ρ+2) extended occupancy of a tile
+//! (centre cells plus the one-cell halo ring read from the Moore
+//! adjacency, `NO_BLOCK` ⇒ 0) and `Bv`/`Bh` the banded ones matrices
+//!
+//! ```text
+//!   Bv (ρ×(ρ+2)):  Bv[i][j] = 1  iff  j ∈ {i, i+1, i+2}
+//!   Bh ((ρ+2)×ρ):  Bh[j][x] = 1  iff  j ∈ {x, x+1, x+2}
+//! ```
+//!
+//! the product `C = Bv · E · Bh` is the ρ×ρ matrix of 3×3 window sums,
+//! so `count(i,x) = C[i][x] − E[i+1][x+1]`. Both multiplies run through
+//! [`crate::tcu::mma::mma_rect`], i.e. as 16×16×16 WMMA fragment ops in
+//! the paper's FP16×FP16+FP32 configuration — exact here because every
+//! operand is 0/1 and every partial sum ≤ ρ+2 stays far inside the
+//! binary16 integer range. The counts then drive `Rule::next_u8` per
+//! cell and the result is repacked to words under the hole mask, which
+//! keeps this path bit-identical to the carry-save word pipeline (the
+//! differential matrix enforces it).
+//!
+//! This is a fidelity/measurement path, not a fast path on the CPU
+//! simulator: its value is showing the adder formulation maps onto
+//! integer fragment ops (DESIGN.md §5i) with the exact same observable
+//! behavior as the bit kernels.
+
+use crate::ca::backend::UnitPtr;
+use crate::ca::bitkernel::{PackedGeom, WORD_BITS};
+use crate::ca::rule::Rule;
+use crate::maps::cache::NO_BLOCK;
+use crate::tcu::mma::{mma_rect, MmaMode};
+
+/// Transition one block's `ρ×ρ` tile through the MMA count pipeline:
+/// drop-in for `bitkernel::sweep_block_packed` (same contract — `nb` in
+/// cell-slot units, output tile at word base `base_words` through
+/// `out`).
+pub(crate) fn sweep_block_mma(
+    cur: &[u64],
+    out: UnitPtr<u64>,
+    geom: &PackedGeom,
+    nb: &[u64; 8],
+    base_words: u64,
+    rule: Rule,
+) {
+    let rho = geom.rho as usize;
+    let wpr = geom.wpr as usize;
+    let ext = rho + 2;
+    let tile_cells = geom.rho as u64 * geom.rho as u64;
+    // cell-base adjacency -> word-base adjacency (MOORE order:
+    // NW N NE W E SW S SE)
+    let mut nbw = [None; 8];
+    for (m, &base) in nb.iter().enumerate() {
+        if base != NO_BLOCK {
+            nbw[m] = Some(base / tile_cells * geom.words_per_tile);
+        }
+    }
+    let bit = |tile_base: u64, ix: usize, iy: usize| -> f32 {
+        let w = tile_base + (iy * wpr + ix / WORD_BITS as usize) as u64;
+        ((cur[w as usize] >> (ix as u32 % WORD_BITS)) & 1) as f32
+    };
+    let nbit = |tile: Option<u64>, ix: usize, iy: usize| -> f32 {
+        match tile {
+            Some(b) => bit(b, ix, iy),
+            None => 0.0,
+        }
+    };
+    // extended occupancy E: centre tile framed by the Moore halo ring
+    let mut e = vec![0.0f32; ext * ext];
+    for iy in 0..rho {
+        for ix in 0..rho {
+            e[(iy + 1) * ext + (ix + 1)] = bit(base_words, ix, iy);
+        }
+    }
+    let hi = rho - 1;
+    for ix in 0..rho {
+        e[ix + 1] = nbit(nbw[1], ix, hi); // N bottom row
+        e[(ext - 1) * ext + ix + 1] = nbit(nbw[6], ix, 0); // S top row
+    }
+    for iy in 0..rho {
+        e[(iy + 1) * ext] = nbit(nbw[3], hi, iy); // W east column
+        e[(iy + 1) * ext + (ext - 1)] = nbit(nbw[4], 0, iy); // E west column
+    }
+    e[0] = nbit(nbw[0], hi, hi); // NW
+    e[ext - 1] = nbit(nbw[2], 0, hi); // NE
+    e[(ext - 1) * ext] = nbit(nbw[5], hi, 0); // SW
+    e[(ext - 1) * ext + (ext - 1)] = nbit(nbw[7], 0, 0); // SE
+    // banded ones operands of the separable 3×3 box filter
+    let bv: Vec<f32> = (0..rho * ext)
+        .map(|i| {
+            let (row, col) = (i / ext, i % ext);
+            if col >= row && col <= row + 2 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let bh: Vec<f32> = (0..ext * rho)
+        .map(|i| {
+            let (row, col) = (i / rho, i % rho);
+            if row >= col && row <= col + 2 {
+                1.0
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    // C = (Bv · E) · Bh, both products as fragment MMAs
+    let t1 = mma_rect(&bv, rho, ext, &e, ext, MmaMode::Fp16);
+    let c = mma_rect(&t1, rho, ext, &bh, rho, MmaMode::Fp16);
+    // counts -> rule -> repack under the hole mask
+    for iy in 0..rho {
+        for wx in 0..wpr {
+            let mut next = 0u64;
+            let lanes = (rho - wx * WORD_BITS as usize).min(WORD_BITS as usize);
+            for lane in 0..lanes {
+                let ix = wx * WORD_BITS as usize + lane;
+                let alive = e[(iy + 1) * ext + (ix + 1)];
+                let count = (c[iy * rho + ix] - alive).round() as u32;
+                if rule.next_u8(alive as u8, count) != 0 {
+                    next |= 1u64 << lane;
+                }
+            }
+            next &= geom.mask_rows[iy * wpr + wx];
+            unsafe { out.0.add((base_words + (iy * wpr + wx) as u64) as usize).write(next) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ca::bitkernel::sweep_block_packed;
+    use crate::fractal::catalog;
+    use crate::maps::block::BlockCtx;
+    use crate::util::prng::Prng;
+
+    /// The MMA count pipeline must reproduce the carry-save word
+    /// pipeline word-for-word on an isolated tile — including ragged
+    /// rows (ρ = 81) where the repack loop handles partial last words.
+    fn mma_matches_bitkernel(block: &BlockCtx, seed: u64) {
+        let geom = PackedGeom::new(block);
+        let rho = block.rho;
+        let words = geom.words_per_tile as usize;
+        let mut prng = Prng::new(seed);
+        let mut cur = vec![0u64; words];
+        for iy in 0..rho {
+            for ix in 0..rho {
+                if block.intra_on_fractal(ix, iy) && prng.below(100) < 45 {
+                    cur[(iy * geom.wpr + ix / WORD_BITS) as usize] |= 1u64 << (ix % WORD_BITS);
+                }
+            }
+        }
+        let nb = [NO_BLOCK; 8];
+        for rule_text in ["B3/S23", "B36/S23", "B2/S"] {
+            let rule = Rule::parse(rule_text).unwrap();
+            let mut scalar = vec![0u64; words];
+            let mut lifted = vec![0u64; words];
+            sweep_block_packed(&cur, UnitPtr(scalar.as_mut_ptr()), &geom, &nb, 0, rule);
+            sweep_block_mma(&cur, UnitPtr(lifted.as_mut_ptr()), &geom, &nb, 0, rule);
+            assert_eq!(scalar, lifted, "rho={rho} rule={rule_text}");
+        }
+    }
+
+    #[test]
+    fn mma_rule_lift_matches_word_pipeline_on_isolated_tiles() {
+        let tri = catalog::sierpinski_triangle();
+        mma_matches_bitkernel(&BlockCtx::new(&tri, 6, 16).unwrap(), 0x3A);
+        let vic = catalog::vicsek();
+        mma_matches_bitkernel(&BlockCtx::new(&vic, 3, 27).unwrap(), 0x3B);
+    }
+
+    #[test]
+    fn mma_rule_lift_handles_ragged_rows() {
+        // ρ = 81: one full word plus a 17-bit tail per row
+        let vic = catalog::vicsek();
+        mma_matches_bitkernel(&BlockCtx::new(&vic, 4, 81).unwrap(), 0x3C);
+    }
+
+    /// Neighbor tiles must flow through the halo ring of E: two
+    /// horizontally adjacent tiles, the east tile's west column feeding
+    /// the west tile's counts, checked against the word pipeline.
+    #[test]
+    fn mma_rule_lift_reads_the_moore_halo() {
+        let tri = catalog::sierpinski_triangle();
+        let block = BlockCtx::new(&tri, 6, 16).unwrap();
+        let geom = PackedGeom::new(&block);
+        let words = geom.words_per_tile as usize;
+        let tile_cells = geom.rho as u64 * geom.rho as u64;
+        let mut prng = Prng::new(0x3D);
+        // two tiles: word bases 0 and words_per_tile, cell bases 0 and ρ²
+        let mut cur = vec![0u64; 2 * words];
+        for tile in 0..2u64 {
+            for iy in 0..block.rho {
+                for ix in 0..block.rho {
+                    if block.intra_on_fractal(ix, iy) && prng.below(100) < 45 {
+                        let w = tile * geom.words_per_tile
+                            + (iy * geom.wpr + ix / WORD_BITS) as u64;
+                        cur[w as usize] |= 1u64 << (ix % WORD_BITS);
+                    }
+                }
+            }
+        }
+        let rule = Rule::parse("B3/S23").unwrap();
+        // west tile sees the east tile as its E neighbor (MOORE slot 4)
+        let mut nb = [NO_BLOCK; 8];
+        nb[4] = tile_cells;
+        let mut scalar = vec![0u64; 2 * words];
+        let mut lifted = vec![0u64; 2 * words];
+        sweep_block_packed(&cur, UnitPtr(scalar.as_mut_ptr()), &geom, &nb, 0, rule);
+        sweep_block_mma(&cur, UnitPtr(lifted.as_mut_ptr()), &geom, &nb, 0, rule);
+        assert_eq!(&scalar[..words], &lifted[..words]);
+    }
+}

@@ -87,8 +87,13 @@ pub struct Summary {
 
 impl Summary {
     /// Summarize a sample vector (consumed order-independently).
-    pub fn of(samples: &[f64]) -> Summary {
-        assert!(!samples.is_empty(), "cannot summarize zero samples");
+    /// Returns `None` for an empty slice — zero-sample configurations
+    /// (e.g. a bench point whose every rep was skipped) degrade to a
+    /// reported skip at the call site instead of a panic.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
         let mut w = Welford::new();
         for &x in samples {
             w.push(x);
@@ -100,7 +105,7 @@ impl Summary {
         } else {
             0.5 * (sorted[sorted.len() / 2 - 1] + sorted[sorted.len() / 2])
         };
-        Summary {
+        Some(Summary {
             n: w.count(),
             mean: w.mean(),
             stddev: w.stddev(),
@@ -108,7 +113,7 @@ impl Summary {
             min: w.min(),
             max: w.max(),
             median,
-        }
+        })
     }
 
     /// Standard error as a percentage of the mean (paper's <1% criterion).
@@ -141,25 +146,30 @@ mod tests {
 
     #[test]
     fn summary_median_even_odd() {
-        let s = Summary::of(&[1.0, 3.0, 2.0]);
+        let s = Summary::of(&[1.0, 3.0, 2.0]).unwrap();
         assert_eq!(s.median, 2.0);
-        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(s.median, 2.5);
     }
 
     #[test]
     fn stderr_shrinks_with_n() {
-        let a = Summary::of(&vec![1.0, 2.0, 1.0, 2.0]);
+        let a = Summary::of(&[1.0, 2.0, 1.0, 2.0]).unwrap();
         let many: Vec<f64> = (0..400).map(|i| if i % 2 == 0 { 1.0 } else { 2.0 }).collect();
-        let b = Summary::of(&many);
+        let b = Summary::of(&many).unwrap();
         assert!(b.stderr < a.stderr);
     }
 
     #[test]
     fn single_sample_is_degenerate_but_defined() {
-        let s = Summary::of(&[3.5]);
+        let s = Summary::of(&[3.5]).unwrap();
         assert_eq!(s.mean, 3.5);
         assert_eq!(s.stddev, 0.0);
         assert_eq!(s.median, 3.5);
+    }
+
+    #[test]
+    fn zero_samples_summarize_to_none_not_a_panic() {
+        assert!(Summary::of(&[]).is_none());
     }
 }

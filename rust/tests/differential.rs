@@ -10,7 +10,9 @@
 //! compaction on/off` combination of the unified exchange), and the
 //! bit-planar `squeeze-bits` backends (serial/parallel ×
 //! cached/uncached, plus sharded-packed at 1/2/4 shards and the same
-//! overlap/compaction matrix) must produce identical `state_hash()`
+//! overlap/compaction matrix), the flat bit-planar `bb-bits` twin, and
+//! the MMA rule lift (`squeeze-bits:<ρ>:mma`, single and sharded) must
+//! produce identical `state_hash()`
 //! after *every* step — not just at the end. A divergence at step `t`
 //! localizes a bug to one transition, which is what makes this suite
 //! the oracle the cache/parallelism/sharding/bit-packing/backend-trait
@@ -67,6 +69,10 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                 (
                     "bb",
                     build_with_cache(&spec, &cfg(EngineKind::Bb, 2), None).unwrap(),
+                ),
+                (
+                    "bb-bits",
+                    build_with_cache(&spec, &cfg(EngineKind::PackedBb, 2), None).unwrap(),
                 ),
                 (
                     "lambda",
@@ -172,6 +178,24 @@ fn every_engine_agrees_with_bb_for_every_fractal_and_rule() {
                     build_with_cache(
                         &spec,
                         &cfg(EngineKind::PackedSqueeze { rho: rho2 }, 4),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "squeeze-bits-mma",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedMmaSqueeze { rho }, 2),
+                        Some(&cache),
+                    )
+                    .unwrap(),
+                ),
+                (
+                    "sharded-squeeze-bits-mma-2",
+                    build_with_cache(
+                        &spec,
+                        &cfg(EngineKind::PackedMmaShardedSqueeze { rho, shards: 2 }, 4),
                         Some(&cache),
                     )
                     .unwrap(),
@@ -319,6 +343,9 @@ fn long_run_agreement_on_the_paper_headline_fractal() {
         EngineKind::ShardedSqueeze { rho: 8, shards: 4 },
         EngineKind::PackedSqueeze { rho: 8 },
         EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 },
+        EngineKind::PackedBb,
+        EngineKind::PackedMmaSqueeze { rho: 8 },
+        EngineKind::PackedMmaShardedSqueeze { rho: 8, shards: 4 },
     ];
     let mut hashes = Vec::new();
     for kind in kinds {

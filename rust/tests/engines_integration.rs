@@ -24,13 +24,22 @@ fn job(engine: EngineKind, r: u32, steps: u32) -> JobSpec {
 #[test]
 fn the_three_paper_approaches_agree_over_long_runs() {
     let bb = execute_job(&job(EngineKind::Bb, 6, 30)).unwrap();
+    let bbb = execute_job(&job(EngineKind::PackedBb, 6, 30)).unwrap();
     let lam = execute_job(&job(EngineKind::Lambda, 6, 30)).unwrap();
     let sq = execute_job(&job(EngineKind::Squeeze { rho: 1, tensor: false }, 6, 30)).unwrap();
     let sqb = execute_job(&job(EngineKind::Squeeze { rho: 8, tensor: false }, 6, 30)).unwrap();
+    assert_eq!(bb.state_hash, bbb.state_hash);
     assert_eq!(bb.state_hash, lam.state_hash);
     assert_eq!(bb.state_hash, sq.state_hash);
     assert_eq!(bb.state_hash, sqb.state_hash);
     assert_eq!(bb.population, sq.population);
+    // the bit-planar BB twin carries the embedding at an eighth the bytes
+    assert!(
+        bbb.memory_bytes < bb.memory_bytes / 4,
+        "bb-bits {} vs bb {}",
+        bbb.memory_bytes,
+        bb.memory_bytes
+    );
 }
 
 #[test]
@@ -65,8 +74,10 @@ fn packed_backend_agrees_and_undercuts_byte_memory() {
     let packed = execute_job(&job(EngineKind::PackedSqueeze { rho: 16 }, r, 3)).unwrap();
     let packed_sharded =
         execute_job(&job(EngineKind::PackedShardedSqueeze { rho: 16, shards: 4 }, r, 3)).unwrap();
+    let mma = execute_job(&job(EngineKind::PackedMmaSqueeze { rho: 16 }, r, 3)).unwrap();
     assert_eq!(byte.state_hash, packed.state_hash);
     assert_eq!(byte.state_hash, packed_sharded.state_hash);
+    assert_eq!(byte.state_hash, mma.state_hash);
     assert_eq!(byte.population, packed.population);
     // 1-bit cells: at ρ=16 the packed state is half the byte state
     assert!(
