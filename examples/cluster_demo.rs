@@ -1,0 +1,71 @@
+//! Multi-process sharding demo: an `@hosts=2` cluster placement run end
+//! to end inside one process — a cluster listener, a `squeeze worker`
+//! serve loop on its own thread, and a coordinator-side build that
+//! claims it — stepped in lock-step against the single-process twin to
+//! show the transport is hash-invisible.
+//!
+//!     cargo run --release --example cluster_demo
+//!
+//! The same topology runs across real machines as
+//!
+//!     squeeze serve --listen 0.0.0.0:7171 --cluster-listen 0.0.0.0:7272
+//!     squeeze worker --join COORD_HOST:7272    # on each worker machine
+//!
+//! with jobs submitted as `engine=squeeze-bits:16:4@hosts=2 …`; see
+//! DESIGN.md §5j for the frame format and failure semantics.
+
+use squeeze::ca::{build, Engine, EngineConfig, EngineKind, Rule};
+use squeeze::fractal::catalog;
+use squeeze::net::{run_worker, stats, ClusterListener};
+
+fn main() {
+    let spec = catalog::sierpinski_triangle();
+    let cfg = EngineConfig {
+        kind: EngineKind::PackedShardedSqueeze { rho: 4, shards: 4 },
+        r: 7,
+        rule: Rule::game_of_life(),
+        density: 0.4,
+        seed: 7,
+        workers: 2,
+        hosts: 2,
+        ..Default::default()
+    };
+
+    // the single-process twin: same engine, no placement suffix
+    let mut twin = build(&spec, &EngineConfig { hosts: 1, ..cfg.clone() }).expect("twin builds");
+
+    // bring up the cluster: listener, one worker process stand-in, and
+    // the coordinator-side build that claims it over the Build/Ready
+    // handshake (route tables verified byte-for-byte)
+    let listener = ClusterListener::start("127.0.0.1:0").expect("cluster listener");
+    let addr = listener.local_addr().to_string();
+    let worker = std::thread::spawn(move || run_worker(&addr, None));
+    let mut cluster = build(&spec, &cfg).expect("cluster build claims the worker");
+    println!("placement: {} ({} cells)", cluster.name(), cluster.cells());
+
+    // lock-step: every exchange ships rim segments over TCP and closes
+    // with a step digest, yet the hashes never diverge
+    for step in 1..=30u32 {
+        twin.step();
+        cluster.step();
+        if step % 10 == 0 {
+            let (a, b) = (twin.state_hash(), cluster.state_hash());
+            println!("step {step:>3}: twin {a:#018x}  cluster {b:#018x}");
+            assert_eq!(a, b, "the transport must be hash-invisible");
+        }
+    }
+    assert_eq!(twin.population(), cluster.population());
+
+    // what the serve `metrics` verb reports as net_* and net_peer= rows
+    let net = stats().snapshot();
+    println!("net: frames={} bytes={} p99_us={}", net.frames, net.bytes, net.p99_us);
+    for line in stats().peer_lines() {
+        println!("  {line}");
+    }
+
+    // dropping the coordinator engine sends `Bye`; the worker's serve
+    // loop returns cleanly
+    drop(cluster);
+    worker.join().expect("worker thread").expect("worker exits cleanly");
+    println!("ok: 2-process placement is bit-identical to the single-process twin");
+}

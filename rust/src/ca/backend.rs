@@ -447,23 +447,48 @@ impl StateBackend for PackedGeom {
             out[k..k + wpr as usize].copy_from_slice(&cur[from..from + wpr as usize]);
             k += wpr as usize;
         }
+        // wide-lane column gather: the column's word/bit position is
+        // fixed, so stride the source by wpr and accumulate bits in a
+        // register, flushing one staged word per 64 cells — no
+        // per-cell index arithmetic or read-modify-write on `out`
         for &(x, y0, y1) in &segs.cols {
-            let words = ((y1 - y0) as u64).div_ceil(WORD_BITS as u64) as usize;
-            out[k..k + words].fill(0);
             let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
-            for (i, y) in (y0..y1).enumerate() {
-                let bit = (cur[(tile_base + y as u64 * wpr + wx as u64) as usize] >> bx) & 1;
-                out[k + i / WORD_BITS as usize] |= bit << (i as u32 % WORD_BITS);
+            let mut src = (tile_base + y0 as u64 * wpr + wx as u64) as usize;
+            let mut acc = 0u64;
+            let mut fill = 0u32;
+            for _ in y0..y1 {
+                acc |= ((cur[src] >> bx) & 1) << fill;
+                src += wpr as usize;
+                fill += 1;
+                if fill == WORD_BITS {
+                    out[k] = acc;
+                    k += 1;
+                    acc = 0;
+                    fill = 0;
+                }
             }
-            k += words;
+            if fill > 0 {
+                out[k] = acc;
+                k += 1;
+            }
         }
         if !segs.cells.is_empty() {
-            let words = segs.cells.len().div_ceil(WORD_BITS as usize);
-            out[k..k + words].fill(0);
-            for (i, &(x, y)) in segs.cells.iter().enumerate() {
+            let mut acc = 0u64;
+            let mut fill = 0u32;
+            for &(x, y) in &segs.cells {
                 let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
                 let bit = (cur[(tile_base + y as u64 * wpr + wx as u64) as usize] >> bx) & 1;
-                out[k + i / WORD_BITS as usize] |= bit << (i as u32 % WORD_BITS);
+                acc |= bit << fill;
+                fill += 1;
+                if fill == WORD_BITS {
+                    out[k] = acc;
+                    k += 1;
+                    acc = 0;
+                    fill = 0;
+                }
+            }
+            if fill > 0 {
+                out[k] = acc;
             }
         }
     }
@@ -476,22 +501,40 @@ impl StateBackend for PackedGeom {
             dst[to..to + wpr as usize].copy_from_slice(&staged[k..k + wpr as usize]);
             k += wpr as usize;
         }
-        let mut set_bit = |x: u32, y: u32, bit: u64| {
+        // wide-lane scatter, mirroring pack_rim: pull a staged word
+        // into a register and shift one bit out per cell, walking the
+        // destination column by its fixed wpr stride
+        for &(x, y0, y1) in &segs.cols {
+            let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
+            let mut to = (tile_base + y0 as u64 * wpr + wx as u64) as usize;
+            let mut acc = 0u64;
+            let mut left = 0u32;
+            for _ in y0..y1 {
+                if left == 0 {
+                    acc = staged[k];
+                    k += 1;
+                    left = WORD_BITS;
+                }
+                let w = &mut dst[to];
+                *w = (*w & !(1u64 << bx)) | ((acc & 1) << bx);
+                acc >>= 1;
+                left -= 1;
+                to += wpr as usize;
+            }
+        }
+        let mut acc = 0u64;
+        let mut left = 0u32;
+        for &(x, y) in &segs.cells {
+            if left == 0 {
+                acc = staged[k];
+                k += 1;
+                left = WORD_BITS;
+            }
             let (wx, bx) = (x / WORD_BITS, x % WORD_BITS);
             let w = &mut dst[(tile_base + y as u64 * wpr + wx as u64) as usize];
-            *w = (*w & !(1u64 << bx)) | (bit << bx);
-        };
-        for &(x, y0, y1) in &segs.cols {
-            let words = ((y1 - y0) as u64).div_ceil(WORD_BITS as u64) as usize;
-            for (i, y) in (y0..y1).enumerate() {
-                let bit = (staged[k + i / WORD_BITS as usize] >> (i as u32 % WORD_BITS)) & 1;
-                set_bit(x, y, bit);
-            }
-            k += words;
-        }
-        for (i, &(x, y)) in segs.cells.iter().enumerate() {
-            let bit = (staged[k + i / WORD_BITS as usize] >> (i as u32 % WORD_BITS)) & 1;
-            set_bit(x, y, bit);
+            *w = (*w & !(1u64 << bx)) | ((acc & 1) << bx);
+            acc >>= 1;
+            left -= 1;
         }
     }
 }

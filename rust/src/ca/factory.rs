@@ -73,6 +73,9 @@ pub struct EngineConfig {
     pub compact: bool,
     /// Sharded engines: cost-weighted partition from t=0 live cells.
     pub balance: bool,
+    /// Sharded engines: OS-process count for the cluster placement
+    /// (`@hosts=N`). `> 1` claims `hosts - 1` joined workers at build.
+    pub hosts: u32,
 }
 
 impl Default for EngineConfig {
@@ -88,6 +91,7 @@ impl Default for EngineConfig {
             overlap: opts.overlap,
             compact: opts.compact,
             balance: opts.balance,
+            hosts: 1,
         }
     }
 }
@@ -108,6 +112,20 @@ impl EngineConfig {
 /// `Err` instead of a panic.
 pub fn build(spec: &FractalSpec, cfg: &EngineConfig) -> Result<Box<dyn Engine>, BlockError> {
     build_with_cache(spec, cfg, None)
+}
+
+/// Cluster placements (`hosts > 1`): claim the joined worker processes
+/// and narrow the freshly built sharded engine to its group. A no-op
+/// for the single-process default.
+fn attach_hosts<B: super::backend::StateBackend>(
+    engine: &mut ShardedSqueezeEngine<B>,
+    spec: &FractalSpec,
+    cfg: &EngineConfig,
+) -> Result<(), BlockError> {
+    if cfg.hosts > 1 {
+        crate::net::attach_coordinator(engine, spec, cfg).map_err(BlockError::Cluster)?;
+    }
+    Ok(())
 }
 
 /// Build an engine over the given fractal, sourcing its precomputed maps
@@ -169,7 +187,7 @@ pub fn build_with_cache(
             }
         }
         EngineKind::ShardedSqueeze { rho, shards } => {
-            Box::new(ShardedSqueezeEngine::<ByteBackend>::with_opts(
+            let mut engine = ShardedSqueezeEngine::<ByteBackend>::with_opts(
                 spec,
                 cfg.r,
                 rho,
@@ -181,7 +199,9 @@ pub fn build_with_cache(
                 MapPath::Scalar,
                 cfg.shard_opts(),
                 cache,
-            )?)
+            )?;
+            attach_hosts(&mut engine, spec, cfg)?;
+            Box::new(engine)
         }
         EngineKind::PackedSqueeze { rho } => Box::new(SqueezeEngine::<PackedBackend>::with_cache(
             spec,
@@ -195,7 +215,7 @@ pub fn build_with_cache(
             cache,
         )?),
         EngineKind::PackedShardedSqueeze { rho, shards } => {
-            Box::new(ShardedSqueezeEngine::<PackedBackend>::with_opts(
+            let mut engine = ShardedSqueezeEngine::<PackedBackend>::with_opts(
                 spec,
                 cfg.r,
                 rho,
@@ -207,7 +227,9 @@ pub fn build_with_cache(
                 MapPath::Scalar,
                 cfg.shard_opts(),
                 cache,
-            )?)
+            )?;
+            attach_hosts(&mut engine, spec, cfg)?;
+            Box::new(engine)
         }
         EngineKind::PackedBb => Box::new(PackedBbEngine::new(
             spec,
@@ -231,7 +253,7 @@ pub fn build_with_cache(
             )?)
         }
         EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
-            Box::new(ShardedSqueezeEngine::<MmaPackedBackend>::with_opts(
+            let mut engine = ShardedSqueezeEngine::<MmaPackedBackend>::with_opts(
                 spec,
                 cfg.r,
                 rho,
@@ -243,7 +265,9 @@ pub fn build_with_cache(
                 MapPath::Scalar,
                 cfg.shard_opts(),
                 cache,
-            )?)
+            )?;
+            attach_hosts(&mut engine, spec, cfg)?;
+            Box::new(engine)
         }
     })
 }

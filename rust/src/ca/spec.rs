@@ -12,6 +12,10 @@
 //! squeeze-bits[:<ρ>[:<S>]][:mma]
 //! ```
 //!
+//! optionally suffixed with the cluster placement `@hosts=<H>` —
+//! sharded engines only, `1 <= H <= S`; `H > 1` asks the factory to
+//! split the shard groups across `H` OS processes (`crate::net`) —
+//!
 //! plus the job-key *promotions* `shards=<S>` ([`EngineSpec::with_shards`])
 //! and `packed=0/1` ([`EngineSpec::with_packed`]), which compose in any
 //! order. `Display` renders the canonical form, and
@@ -26,13 +30,27 @@ use super::factory::EngineKind;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EngineSpec {
     pub kind: EngineKind,
+    /// Process count for the cluster placement (`@hosts=N`); 1 means
+    /// single-process, the default everywhere.
+    pub hosts: u32,
 }
 
 impl EngineSpec {
     /// Parse CLI/protocol notation. Errors carry the service-facing
     /// message (they become `ERR` lines verbatim).
     pub fn parse(text: &str) -> Result<EngineSpec, String> {
-        let fields: Vec<&str> = text.split(':').collect();
+        let (base, hosts) = match text.split_once('@') {
+            None => (text, 1),
+            Some((base, opt)) => {
+                let hosts = opt
+                    .strip_prefix("hosts=")
+                    .and_then(|v| v.parse::<u32>().ok())
+                    .filter(|&h| h >= 1)
+                    .ok_or_else(|| format!("unknown engine {text:?}"))?;
+                (base, hosts)
+            }
+        };
+        let fields: Vec<&str> = base.split(':').collect();
         let num = |f: &&str| {
             f.parse::<u32>()
                 .map_err(|_| format!("unknown engine {text:?}"))
@@ -72,7 +90,29 @@ impl EngineSpec {
             }
             _ => return Err(format!("unknown engine {text:?}")),
         };
-        Ok(EngineSpec { kind })
+        let spec = EngineSpec { kind, hosts };
+        spec.validate_hosts()?;
+        Ok(spec)
+    }
+
+    /// `@hosts=N` constraints: `N > 1` needs a sharded engine with at
+    /// least one shard per host (every cluster group must be non-empty).
+    fn validate_hosts(&self) -> Result<(), String> {
+        if self.hosts <= 1 {
+            return Ok(());
+        }
+        match self.kind {
+            EngineKind::ShardedSqueeze { shards, .. }
+            | EngineKind::PackedShardedSqueeze { shards, .. }
+            | EngineKind::PackedMmaShardedSqueeze { shards, .. } => {
+                if self.hosts > shards {
+                    Err(format!("hosts={} exceeds shards={shards}", self.hosts))
+                } else {
+                    Ok(())
+                }
+            }
+            other => Err(format!("@hosts= requires a sharded engine (got {other:?})")),
+        }
     }
 
     /// Promote to the sharded decomposition with `shards` shards (the
@@ -102,7 +142,9 @@ impl EngineSpec {
                 ))
             }
         };
-        Ok(EngineSpec { kind })
+        let spec = EngineSpec { kind, hosts: self.hosts };
+        spec.validate_hosts()?;
+        Ok(spec)
     }
 
     /// Promote to the bit-planar backend (the `packed=` job key):
@@ -133,7 +175,7 @@ impl EngineSpec {
                 ))
             }
         };
-        Ok(EngineSpec { kind })
+        Ok(EngineSpec { kind, hosts: self.hosts })
     }
 }
 
@@ -159,7 +201,11 @@ impl std::fmt::Display for EngineSpec {
             EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
                 write!(f, "squeeze-bits:{rho}:{shards}:mma")
             }
+        }?;
+        if self.hosts > 1 {
+            write!(f, "@hosts={}", self.hosts)?;
         }
+        Ok(())
     }
 }
 
@@ -195,7 +241,7 @@ mod tests {
     #[test]
     fn display_round_trips_every_kind() {
         for kind in kinds() {
-            let spec = EngineSpec { kind };
+            let spec = EngineSpec { kind, hosts: 1 };
             let text = spec.to_string();
             assert_eq!(
                 EngineSpec::parse(&text),
@@ -205,6 +251,43 @@ mod tests {
             // FromStr is the same grammar
             assert_eq!(text.parse::<EngineSpec>(), Ok(spec));
         }
+    }
+
+    #[test]
+    fn hosts_placement_round_trips_on_sharded_kinds() {
+        for text in [
+            "sharded-squeeze:16:4@hosts=2",
+            "squeeze-bits:8:3@hosts=3",
+            "squeeze-bits:8:4:mma@hosts=2",
+        ] {
+            let spec = EngineSpec::parse(text).unwrap();
+            assert!(spec.hosts > 1, "{text}");
+            assert_eq!(spec.to_string(), text);
+            assert_eq!(EngineSpec::parse(&spec.to_string()), Ok(spec));
+        }
+        // hosts=1 is the implicit default and renders without the suffix
+        let one = EngineSpec::parse("sharded-squeeze:16:4@hosts=1").unwrap();
+        assert_eq!(one.hosts, 1);
+        assert_eq!(one.to_string(), "sharded-squeeze:16:4");
+    }
+
+    #[test]
+    fn hosts_placement_rejects_bad_shapes() {
+        // placement errors carry their own message
+        let err = EngineSpec::parse("sharded-squeeze:16:4@hosts=9").unwrap_err();
+        assert!(err.contains("exceeds shards"), "{err}");
+        let err = EngineSpec::parse("bb@hosts=2").unwrap_err();
+        assert!(err.contains("requires a sharded engine"), "{err}");
+        let err = EngineSpec::parse("squeeze:16@hosts=2").unwrap_err();
+        assert!(err.contains("requires a sharded engine"), "{err}");
+        // promotion must not shrink the shard count below the host count
+        let sh = EngineSpec::parse("sharded-squeeze:16:4@hosts=3").unwrap();
+        assert!(sh.with_shards(2).is_err());
+        assert_eq!(sh.with_shards(6).unwrap().to_string(), "sharded-squeeze:16:6@hosts=3");
+        assert_eq!(
+            sh.with_packed(true).unwrap().to_string(),
+            "squeeze-bits:16:4@hosts=3"
+        );
     }
 
     #[test]
@@ -223,6 +306,9 @@ mod tests {
             "bb-bits:2",
             "squeeze:16:mma",
             "squeeze-bits:16:mma:2",
+            "sharded-squeeze:16:4@hosts=0",
+            "sharded-squeeze:16:4@hosts=x",
+            "sharded-squeeze:16:4@host=2",
         ] {
             let err = EngineSpec::parse(bad).unwrap_err();
             assert!(err.contains("unknown engine"), "{bad:?}: {err}");

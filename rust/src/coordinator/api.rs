@@ -666,6 +666,11 @@ struct CoordInner {
     breaker_probe: Duration,
     /// Construction time, for health-probe uptime.
     started: Instant,
+    /// Live protocol connections: `(conn id, requests served)`. The
+    /// `metrics` verb renders one `conn=N requests=M` line per entry;
+    /// [`ConnToken`]'s `Drop` removes its row when the socket closes.
+    conns: Mutex<Vec<(u64, Arc<AtomicU64>)>>,
+    next_conn_id: AtomicU64,
 }
 
 impl CoordInner {
@@ -793,6 +798,39 @@ pub struct Coordinator {
     watchdog: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
+/// RAII handle for one live protocol connection, minted by
+/// [`Coordinator::register_conn`]. The serve loop bumps it once per
+/// request line; dropping the token (socket closed, handler panicked)
+/// retires its `conn=` row from the `metrics` listing.
+pub struct ConnToken {
+    id: u64,
+    counter: Arc<AtomicU64>,
+    inner: Arc<CoordInner>,
+}
+
+impl ConnToken {
+    /// Stable id rendered in this connection's `conn=` metrics line.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Count one request served on this connection.
+    pub fn bump(&self) {
+        self.counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests served so far on this connection.
+    pub fn requests(&self) -> u64 {
+        self.counter.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for ConnToken {
+    fn drop(&mut self) {
+        lock_clean(&self.inner.conns).retain(|(id, _)| *id != self.id);
+    }
+}
+
 impl Coordinator {
     /// A coordinator multiplexing over `budget` worker permits (clamped
     /// to ≥ 1), with a fresh shared [`MapCache`] and [`Metrics`].
@@ -861,6 +899,8 @@ impl Coordinator {
             breaker_threshold: config.breaker_threshold,
             breaker_probe: Duration::from_millis(config.breaker_probe_ms.max(1)),
             started: Instant::now(),
+            conns: Mutex::new(Vec::new()),
+            next_conn_id: AtomicU64::new(1),
         };
         inner.mirror_budget();
         let inner = Arc::new(inner);
@@ -1777,6 +1817,28 @@ impl Coordinator {
         lock_clean(&self.pool_tx).is_some()
     }
 
+    /// Register a live protocol connection for the per-connection
+    /// request counters the `metrics` verb lists (`conn=N requests=M`).
+    pub fn register_conn(&self) -> ConnToken {
+        let id = self.inner.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        let counter = Arc::new(AtomicU64::new(0));
+        lock_clean(&self.inner.conns).push((id, Arc::clone(&counter)));
+        ConnToken {
+            id,
+            counter,
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// One `conn={id} requests={n}` line per live connection, ordered
+    /// by connection id (registration order).
+    pub fn conn_lines(&self) -> Vec<String> {
+        lock_clean(&self.inner.conns)
+            .iter()
+            .map(|(id, n)| format!("conn={id} requests={}", n.load(Ordering::Relaxed)))
+            .collect()
+    }
+
     /// Live relayout: re-open hot session `sid` under a different
     /// engine layout — shard count and/or byte↔packed backend,
     /// single↔sharded — without losing state. The new engine is built
@@ -1786,7 +1848,14 @@ impl Coordinator {
     /// failure — bad spec, build error, hash mismatch — fails closed:
     /// the original session keeps serving.
     pub fn relayout(&self, sid: u64, engine: &str) -> Result<SessionInfo, String> {
-        let kind = EngineSpec::parse(engine)?.kind;
+        let spec = EngineSpec::parse(engine)?;
+        if spec.hosts > 1 {
+            return Err(format!(
+                "relayout {sid} rejected: @hosts= placements cannot be a relayout \
+                 target (open a fresh multi-process session instead)"
+            ));
+        }
+        let kind = spec.kind;
         let session = self.session(sid)?;
         // same admission accounting as `step`: the rebuild occupies the
         // session's workers without blocking the protocol loop
@@ -1814,6 +1883,13 @@ impl Coordinator {
             return Err(format!(
                 "session {sid} quarantined ({reason}); revive {sid} to rebuild \
                  from its last checkpoint"
+            ));
+        }
+        if s.spec.hosts > 1 {
+            return Err(format!(
+                "session {sid} spans {} worker processes; relayout cannot \
+                 re-partition a live cluster placement",
+                s.spec.hosts
             ));
         }
         let mut new_spec = s.spec.clone();
@@ -2340,5 +2416,40 @@ mod tests {
                 other => panic!("job {id} not done after join_jobs: {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn conn_registry_counts_and_retires_connections() {
+        let coord = Coordinator::new(1);
+        assert!(coord.conn_lines().is_empty());
+        let a = coord.register_conn();
+        let b = coord.register_conn();
+        a.bump();
+        a.bump();
+        b.bump();
+        assert_eq!(a.requests(), 2);
+        let lines = coord.conn_lines();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], format!("conn={} requests=2", a.id()));
+        assert_eq!(lines[1], format!("conn={} requests=1", b.id()));
+        drop(a);
+        let lines = coord.conn_lines();
+        assert_eq!(lines.len(), 1, "dropped token retires its row");
+        assert!(lines[0].starts_with(&format!("conn={}", b.id())));
+        drop(b);
+        assert!(coord.conn_lines().is_empty());
+    }
+
+    #[test]
+    fn relayout_rejects_cluster_placements_both_ways() {
+        let coord = Coordinator::new(2);
+        let s = coord.open(spec("engine=squeeze:4 r=4 workers=1")).unwrap();
+        let err = coord
+            .relayout(s.sid, "sharded-squeeze:4:2@hosts=2")
+            .expect_err("@hosts= relayout target must be rejected");
+        assert!(err.contains("@hosts="), "{err}");
+        // the session survived the rejected relayout untouched
+        assert!(coord.step(s.sid, 1).is_ok());
+        assert!(coord.close(s.sid).is_ok());
     }
 }

@@ -9,9 +9,10 @@
 //! store.write:err@0.02;worker:panic@step=37;conn:drop@n=50;store.fsync:delay=80ms@0.1
 //! ```
 //!
-//! Sites name the three injection seams (store I/O, the executor step
-//! loop, the listener); the `store` and `conn` patterns match their
-//! whole family. Actions are `err` (the operation fails), `panic` (the
+//! Sites name the four injection seams (store I/O, the executor step
+//! loop, the listener, the cluster transport); the `store`, `conn` and
+//! `net` patterns match their whole family. Actions are `err` (the
+//! operation fails), `panic` (the
 //! worker unwinds), `drop` (the connection dies), and `delay=Nms` /
 //! `stall=Nms` (the operation sleeps first, then proceeds). Triggers
 //! are a probability (`@0.02`, drawn from a seeded generator), a
@@ -49,6 +50,10 @@ pub enum FaultSite {
     ConnRead,
     /// `conn.write` — a response write to an established connection.
     ConnWrite,
+    /// `net.send` — a cluster transport frame about to be written.
+    NetSend,
+    /// `net.recv` — a cluster transport frame about to be read.
+    NetRecv,
 }
 
 impl FaultSite {
@@ -63,6 +68,8 @@ impl FaultSite {
             FaultSite::ConnAccept => "conn.accept",
             FaultSite::ConnRead => "conn.read",
             FaultSite::ConnWrite => "conn.write",
+            FaultSite::NetSend => "net.send",
+            FaultSite::NetRecv => "net.recv",
         }
     }
 
@@ -74,12 +81,13 @@ impl FaultSite {
             | FaultSite::StoreRename => "store",
             FaultSite::Worker => "worker",
             FaultSite::ConnAccept | FaultSite::ConnRead | FaultSite::ConnWrite => "conn",
+            FaultSite::NetSend | FaultSite::NetRecv => "net",
         }
     }
 }
 
 /// Every pattern the `site` field of a rule may use.
-const SITE_PATTERNS: [&str; 10] = [
+const SITE_PATTERNS: [&str; 13] = [
     "store",
     "store.read",
     "store.write",
@@ -90,6 +98,9 @@ const SITE_PATTERNS: [&str; 10] = [
     "conn.accept",
     "conn.read",
     "conn.write",
+    "net",
+    "net.send",
+    "net.recv",
 ];
 
 /// What happens when a rule fires.
@@ -404,10 +415,17 @@ mod tests {
             FaultSite::ConnAccept,
             FaultSite::ConnRead,
             FaultSite::ConnWrite,
+            FaultSite::NetSend,
+            FaultSite::NetRecv,
         ] {
             assert_eq!(plan.check(site), None, "{site:?}");
         }
         assert_eq!(plan.injected(), 4);
+        let net = FaultPlan::parse("net:err@n=1", 0).unwrap();
+        for site in [FaultSite::NetSend, FaultSite::NetRecv] {
+            assert_eq!(net.check(site), Some(FaultAction::Err), "{site:?}");
+        }
+        assert_eq!(net.check(FaultSite::ConnRead), None);
     }
 
     #[test]

@@ -29,6 +29,9 @@ pub struct JobSpec {
     /// Sharded engines: cost-weighted partition from t=0 live cells
     /// (`shards=auto:<S>`; default off).
     pub balance: bool,
+    /// Cluster placement (`engine=…@hosts=N`): how many OS processes the
+    /// shard groups span. 1 (the default) is single-process.
+    pub hosts: u32,
 }
 
 impl Default for JobSpec {
@@ -46,6 +49,7 @@ impl Default for JobSpec {
             overlap: true,
             compact: true,
             balance: false,
+            hosts: 1,
         }
     }
 }
@@ -84,7 +88,11 @@ impl JobSpec {
                 .ok_or_else(|| format!("bad token {tok:?} (want key=value)"))?;
             match k {
                 "fractal" => spec.fractal = v.to_string(),
-                "engine" => spec.engine = EngineSpec::parse(v)?.kind,
+                "engine" => {
+                    let e = EngineSpec::parse(v)?;
+                    spec.engine = e.kind;
+                    spec.hosts = e.hosts;
+                }
                 "r" => spec.r = v.parse().map_err(|_| format!("bad r={v}"))?,
                 "steps" => spec.steps = v.parse().map_err(|_| format!("bad steps={v}"))?,
                 "density" => {
@@ -117,12 +125,13 @@ impl JobSpec {
                 other => return Err(format!("unknown key {other:?}")),
             }
         }
-        let mut engine = EngineSpec { kind: spec.engine };
+        let mut engine = EngineSpec { kind: spec.engine, hosts: spec.hosts };
         if let Some(n) = shards {
             engine = engine.with_shards(n)?;
         }
         engine = engine.with_packed(packed)?;
         spec.engine = engine.kind;
+        spec.hosts = engine.hosts;
         // `balance` needs no sharded-ness check of its own: it is only
         // set by `shards=auto:`, and `with_shards` above already
         // rejected every non-sharded engine family.
@@ -162,7 +171,7 @@ impl JobSpec {
     /// key, which re-overrides the same shard count the engine string
     /// already carries.
     pub fn to_line(&self) -> String {
-        let engine = EngineSpec { kind: self.engine };
+        let engine = EngineSpec { kind: self.engine, hosts: self.hosts };
         let mut line = format!(
             "fractal={} engine={} r={} steps={} density={} seed={} rule={} workers={}",
             self.fractal,
@@ -205,6 +214,7 @@ impl JobSpec {
             overlap: self.overlap,
             compact: self.compact,
             balance: self.balance,
+            hosts: self.hosts,
         }
     }
 
@@ -427,6 +437,8 @@ mod tests {
             "engine=squeeze-bits:8 seed=18446744073709551615",
             "engine=squeeze-bits:8:mma r=6",
             "engine=squeeze-bits:8:2:mma overlap=0 compact=1 r=6",
+            "engine=sharded-squeeze:8:4@hosts=2 r=6",
+            "engine=squeeze-bits:8:3@hosts=3 overlap=0 r=6",
             "engine=bb-bits r=6",
             "engine=bb rule=B2/S",
         ] {
@@ -448,6 +460,24 @@ mod tests {
         assert_eq!(cfg.kind, j.engine);
         assert_eq!((cfg.r, cfg.workers), (6, 3));
         assert!(!cfg.overlap && cfg.compact && !cfg.balance);
+        assert_eq!(cfg.hosts, 1);
+    }
+
+    #[test]
+    fn hosts_placement_flows_through_job_keys() {
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:4@hosts=2 r=6").unwrap();
+        assert_eq!(j.engine, EngineKind::ShardedSqueeze { rho: 8, shards: 4 });
+        assert_eq!(j.hosts, 2);
+        assert_eq!(j.engine_config().hosts, 2);
+        assert!(j.to_line().contains("engine=sharded-squeeze:8:4@hosts=2"), "{}", j.to_line());
+        // promotions preserve the placement and revalidate it
+        let j = JobSpec::parse_line(1, "engine=sharded-squeeze:8:4@hosts=2 packed=1").unwrap();
+        assert_eq!(j.engine, EngineKind::PackedShardedSqueeze { rho: 8, shards: 4 });
+        assert_eq!(j.hosts, 2);
+        assert!(JobSpec::parse_line(1, "engine=sharded-squeeze:8:4@hosts=3 shards=2").is_err());
+        // non-sharded engines reject the suffix at the grammar layer
+        assert!(JobSpec::parse_line(1, "engine=squeeze:8@hosts=2").is_err());
+        assert!(JobSpec::parse_line(1, "engine=sharded-squeeze:8:2@hosts=4").is_err());
     }
 
     #[test]

@@ -140,6 +140,11 @@ pub struct MetricsSnapshot {
     pub revives: u64,
     pub breaker_trips: u64,
     pub breaker_open: u64,
+    /// Cluster transport counters (absolute, mirrored from
+    /// `crate::net::stats()` at snapshot time).
+    pub net_frames: u64,
+    pub net_bytes: u64,
+    pub net_p99_us: u64,
 }
 
 impl Metrics {
@@ -339,6 +344,7 @@ impl Metrics {
         for (i, b) in self.req_latency_us.iter().enumerate() {
             counts[i] = b.load(Ordering::Relaxed);
         }
+        let net = crate::net::stats().snapshot();
         MetricsSnapshot {
             started: self.started.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -384,13 +390,17 @@ impl Metrics {
             revives: self.revives.load(Ordering::Relaxed),
             breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
             breaker_open: self.breaker_open.load(Ordering::Relaxed),
+            net_frames: net.frames,
+            net_bytes: net.bytes,
+            net_p99_us: net.p99_us,
         }
     }
 }
 
 /// Smallest bucket upper edge (µs) whose cumulative count reaches the
-/// `q` quantile. 0 when no requests were recorded.
-fn latency_quantile_us(counts: &[u64; 32], total: u64, q: f64) -> u64 {
+/// `q` quantile. 0 when no requests were recorded. Shared with the
+/// cluster transport's exchange-latency histogram (`crate::net`).
+pub(crate) fn latency_quantile_us(counts: &[u64; 32], total: u64, q: f64) -> u64 {
     if total == 0 {
         return 0;
     }
@@ -509,6 +519,12 @@ impl MetricsSnapshot {
             self.breaker_trips,
             self.breaker_open,
             self.idle_reaped,
+        ));
+        // cluster transport gauges (appended at the very end, same
+        // stability rule: parsers keep their field offsets)
+        line.push_str(&format!(
+            " net_frames={} net_bytes={} net_p99_us={}",
+            self.net_frames, self.net_bytes, self.net_p99_us,
         ));
         line
     }
@@ -736,5 +752,16 @@ mod tests {
             "{line}"
         );
         assert!(line.find("relayout_failures=").unwrap() < line.find("store_retries=").unwrap());
+    }
+
+    #[test]
+    fn net_gauges_render_at_the_line_end() {
+        // the net counters are process-global (other tests may move
+        // them), so assert presence and ordering only
+        let line = Metrics::default().snapshot().to_line();
+        assert!(line.contains(" net_frames="), "{line}");
+        assert!(line.contains(" net_bytes="), "{line}");
+        assert!(line.contains(" net_p99_us="), "{line}");
+        assert!(line.find("idle_reaped=").unwrap() < line.find("net_frames=").unwrap());
     }
 }

@@ -79,7 +79,8 @@ const HELP: &str = "\
 # job line: key=value pairs — fractal= engine= r= steps= density= seed= rule= workers= \
 shards=[auto:]N packed=0/1 overlap=0/1 compact=0/1
 # engines: bb | bb-bits | lambda | squeeze[:RHO] | squeeze-tcu[:RHO] | \
-sharded-squeeze:RHO[:SHARDS] | squeeze-bits[:RHO[:SHARDS]][:mma]
+sharded-squeeze:RHO[:SHARDS] | squeeze-bits[:RHO[:SHARDS]][:mma]; sharded engines accept a \
+[@hosts=N] placement suffix (multi-process halo exchange)
 # verbs: async=0/1 | wait ID | poll ID | cancel ID | open KEY=VAL... | step SID [N] | \
 stepall [N] | inspect SID [cell=I] [at=X,Y] [region=A:B] | snapshot SID | restore TOKEN | \
 close SID | persist SID [steps=N] [secs=S] | persist SID off | relayout SID ENGINE | \
@@ -87,7 +88,9 @@ revive SID | recover | health | ready | metrics | help | quit
 # serve knobs (CLI): --listen ADDR (tcp host:port or unix:PATH) --budget N --pool N --cache-mb MB \
 --data-dir DIR --checkpoint-steps N --checkpoint-secs S --max-conns N --drain-secs S \
 --idle-secs N --deadline-ms N --watchdog-secs S --faults SPEC --fault-seed N \
---health-check ADDR";
+--health-check ADDR --cluster-listen ADDR
+# cluster: @hosts=N builds wait for N-1 joined workers — start each with: \
+squeeze worker --join ADDR";
 
 /// Run the service until EOF or `quit`. One session-scoped
 /// [`Coordinator`] multiplexes every job and session over a shared
@@ -135,6 +138,7 @@ pub fn serve_session(
 ) -> std::io::Result<()> {
     let metrics = coord.metrics();
     let cache = coord.map_cache();
+    let conn = coord.register_conn();
     writeln!(output, "# squeeze coordinator ready")?;
     writeln!(output, "# protocol={PROTOCOL_VERSION}")?;
     writeln!(output, "# {}", JobResult::tsv_header())?;
@@ -148,8 +152,17 @@ pub fn serve_session(
         if trimmed == "quit" {
             break;
         }
+        conn.bump();
         if trimmed == "metrics" {
             writeln!(output, "# {}", metrics.snapshot().to_line())?;
+            // one row per live protocol connection, then per cluster
+            // peer — '#'-prefixed so line-oriented clients skip them
+            for row in coord.conn_lines() {
+                writeln!(output, "# {row}")?;
+            }
+            for row in crate::net::stats().peer_lines() {
+                writeln!(output, "# {row}")?;
+            }
             output.flush()?;
             continue;
         }
@@ -606,9 +619,24 @@ mod tests {
             "--watchdog-secs S",
             "--faults SPEC",
             "--health-check ADDR",
+            "--cluster-listen ADDR",
+            "[@hosts=N]",
+            "squeeze worker --join ADDR",
         ] {
             assert!(out.contains(needle), "help is missing {needle:?}: {out}");
         }
+    }
+
+    #[test]
+    fn metrics_verb_lists_live_connections() {
+        let out = run_session("engine=squeeze r=3 steps=1 workers=1\nmetrics\nquit\n");
+        // the stdin serve is one live connection; the job line and the
+        // metrics verb itself both count as requests on it
+        let conn = out
+            .lines()
+            .find(|l| l.starts_with("# conn="))
+            .unwrap_or_else(|| panic!("no conn= line: {out}"));
+        assert!(conn.contains("requests=2"), "{out}");
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //! adjacency — are interned in [`maps::cache::MapCache`] and shared via
 //! `Arc` across engines and coordinator jobs. The [`shard`] subsystem
 //! decomposes the block-level domain into halo-exchanged shards so a
-//! job can span more memory than any single engine buffer.
+//! job can span more memory than any single engine buffer, and [`net`]
+//! spans those shard groups across OS processes over a framed,
+//! CRC-checked TCP transport (`…@hosts=N` placements).
 //!
 //! Serving happens through the typed async API
 //! ([`coordinator::api::Coordinator`]): jobs submit to handles with
@@ -49,6 +51,7 @@ pub mod fractal;
 pub mod harness;
 pub mod maps;
 pub mod memory;
+pub mod net;
 pub mod runtime;
 pub mod shard;
 pub mod tcu;

@@ -4,7 +4,10 @@
 //!   run        one simulation job on a native engine
 //!   serve      coordinator loop on stdin/stdout: v1 key=value job lines
 //!              plus the v2 verbs (async submit/wait/poll/cancel and
-//!              open/step/inspect/snapshot/restore/close sessions)
+//!              open/step/inspect/snapshot/restore/close sessions);
+//!              --cluster-listen ADDR accepts joining cluster workers
+//!   worker     join a coordinator's cluster listener and serve one
+//!              shard group of a multi-process (@hosts=N) engine
 //!   gallery    ASCII-render a catalog fractal (expanded + compact views)
 //!   validate   large randomized map/engine self-checks
 //!   artifacts  list + compile-check the AOT artifact store
@@ -39,6 +42,7 @@ fn main() {
     let code = match args.command.as_deref() {
         Some("run") => cmd_run(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("gallery") => cmd_gallery(&args),
         Some("validate") => cmd_validate(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -91,7 +95,11 @@ fn usage(cmd: Option<&str>) {
          env fallback SQUEEZE_FAULTS), --fault-seed N injection PRNG seed,\n             \
          --health-check ADDR one-shot probe of a listening server\n             \
          (prints its HEALTH line, exits nonzero unless 'HEALTH ok').\n             \
+         Cluster: --cluster-listen ADDR accepts `squeeze worker --join` peers\n             \
+         for @hosts=N placements (sharded engines span OS processes).\n             \
          Type 'help' in a session, or see coordinator::{{service,listener,api,store}})\n  \
+         worker     --join HOST:PORT [--workers N]   (serve one shard group of a\n             \
+         multi-process engine; exits nonzero on divergence or coordinator loss)\n  \
          gallery    --fractal vicsek --r 3\n  \
          validate   --r 12 --samples 100000\n  \
          artifacts  --dir artifacts [--check]\n  \
@@ -198,10 +206,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(spec) = &faults {
         eprintln!("# fault injection armed: {spec} (seed={fault_seed})");
     }
+    let cluster_listen = args.get_or("cluster-listen", "");
+    if !cluster_listen.is_empty() {
+        // accept thread runs detached for the process lifetime; joined
+        // workers pool until an @hosts=N build claims them
+        let cl = squeeze::net::ClusterListener::start(&cluster_listen)?;
+        eprintln!("# cluster listening on {}", cl.local_addr());
+    }
     if listen.is_empty() {
         // classic mode: one session over stdin/stdout (with durability
         // when --data-dir is set: recovery on start, checkpoint on EOF)
         let coord = Coordinator::with_config(config);
+        squeeze::net::arm_faults(coord.fault_plan());
         report_recovery(&coord);
         let stdin = std::io::stdin();
         let stdout = std::io::stdout();
@@ -213,6 +229,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let server = SocketServer::bind_with(&listen, config, ListenOpts { max_conns, idle_secs })
         .map_err(|e| e.to_string())?;
     let coord = server.coordinator();
+    squeeze::net::arm_faults(coord.fault_plan());
     report_recovery(&coord);
     eprintln!(
         "# squeeze listening on {} (budget={budget} pool={} cache-mb={} max-conns={} data-dir={})",
@@ -240,6 +257,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     serve_foreground(server, &coord, drain_secs);
     Ok(())
+}
+
+/// `squeeze worker --join ADDR`: the cluster worker role. Joins a
+/// coordinator's `--cluster-listen` endpoint, rebuilds the engine the
+/// Build frame describes, and serves step/query frames until the
+/// coordinator hangs up (clean exit) or something diverges (nonzero).
+fn cmd_worker(args: &Args) -> Result<(), String> {
+    let join = args.get_or("join", "");
+    if join.is_empty() {
+        return Err(
+            "worker needs --join HOST:PORT (a coordinator's --cluster-listen address)".to_string(),
+        );
+    }
+    let workers = args.get_u64("workers", 0).map_err(|e| e.to_string())? as usize;
+    squeeze::net::run_worker(&join, if workers == 0 { None } else { Some(workers) })
 }
 
 /// `serve --health-check ADDR`: one-shot liveness probe of a running

@@ -37,6 +37,9 @@ pub enum BlockError {
     RhoNotPowerOfS { rho: u32, s: u32 },
     /// ρ exceeds the whole fractal (`log_s ρ > r`).
     RhoTooLarge { rho: u32, r: u32 },
+    /// A multi-process (`@hosts=N`) build could not attach its cluster
+    /// (missing workers, handshake failure, route divergence).
+    Cluster(String),
 }
 
 impl std::fmt::Display for BlockError {
@@ -48,6 +51,7 @@ impl std::fmt::Display for BlockError {
             BlockError::RhoTooLarge { rho, r } => {
                 write!(f, "block size rho={rho} exceeds the level-{r} fractal")
             }
+            BlockError::Cluster(msg) => write!(f, "{msg}"),
         }
     }
 }

@@ -1,0 +1,295 @@
+//! The cluster wire format: length-prefixed binary frames with a
+//! versioned header and a trailing CRC.
+//!
+//! Every message between a coordinator and a `squeeze worker` process is
+//! one frame:
+//!
+//! ```text
+//! magic    4  b"SQZF"
+//! version  2  u16 LE (currently 1)
+//! kind     1  SegKind discriminant
+//! reserved 1  must be 0
+//! step     8  u64 LE — simulation step the frame belongs to
+//! src      4  u32 LE — source shard (rim frames; 0 otherwise)
+//! dst      4  u32 LE — destination shard (rim frames; 0 otherwise)
+//! len      4  u32 LE — payload length in bytes
+//! payload  len
+//! crc      4  u32 LE — IEEE CRC-32 over header + payload
+//! ```
+//!
+//! Decoding never panics: torn, truncated, or corrupted frames come back
+//! as `Err` strings (the CRC is checked before the payload is trusted),
+//! and oversized length prefixes are rejected before any allocation.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::store::crc32;
+
+/// Frame magic, first on the wire so a foreign client fails fast.
+pub const MAGIC: [u8; 4] = *b"SQZF";
+/// Wire protocol version carried in every header.
+pub const VERSION: u16 = 1;
+/// Header length in bytes (everything before the payload).
+pub const HEADER_LEN: usize = 28;
+/// Upper bound on payload length — larger prefixes are rejected before
+/// allocating (a torn frame must not look like a 4 GiB request).
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+/// What a frame carries. The discriminant is the on-wire `kind` byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SegKind {
+    /// Worker → listener: "I am a squeeze worker, pool me".
+    Hello = 1,
+    /// Coordinator → worker: build this engine (text header + routes).
+    Build = 2,
+    /// Worker → coordinator: engine built, routes verified.
+    Ready = 3,
+    /// Coordinator → worker: advance one step.
+    StepCmd = 4,
+    /// A rim segment: `[route u32 LE][packed rim units]`.
+    Rim = 5,
+    /// End of one peer's rim traffic for a step: 8-byte FNV of every
+    /// rim payload sent this step, in order.
+    StepHash = 6,
+    /// Coordinator → worker: report owned live-cell count.
+    PopReq = 7,
+    /// Worker → coordinator: `u64 LE` population.
+    PopReply = 8,
+    /// Coordinator → worker: export owned state bitmap.
+    ExportReq = 9,
+    /// Worker → coordinator: full-domain bitmap, non-owned bits zero.
+    ExportReply = 10,
+    /// Coordinator → worker: `u64 LE` cell index.
+    CellReq = 11,
+    /// Worker → coordinator: one byte, the cell state.
+    CellReply = 12,
+    /// Coordinator → worker: load this state bitmap.
+    LoadCmd = 13,
+    /// Worker → coordinator: empty on success, error text otherwise.
+    LoadAck = 14,
+    /// Either side: orderly shutdown (payload may carry a reason).
+    Bye = 15,
+}
+
+impl SegKind {
+    fn from_u8(byte: u8) -> Option<SegKind> {
+        Some(match byte {
+            1 => SegKind::Hello,
+            2 => SegKind::Build,
+            3 => SegKind::Ready,
+            4 => SegKind::StepCmd,
+            5 => SegKind::Rim,
+            6 => SegKind::StepHash,
+            7 => SegKind::PopReq,
+            8 => SegKind::PopReply,
+            9 => SegKind::ExportReq,
+            10 => SegKind::ExportReply,
+            11 => SegKind::CellReq,
+            12 => SegKind::CellReply,
+            13 => SegKind::LoadCmd,
+            14 => SegKind::LoadAck,
+            15 => SegKind::Bye,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: SegKind,
+    pub step: u64,
+    pub src_shard: u32,
+    pub dst_shard: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A control frame (no shard routing) for `kind` at `step`.
+    pub fn control(kind: SegKind, step: u64, payload: Vec<u8>) -> Frame {
+        Frame { kind, step, src_shard: 0, dst_shard: 0, payload }
+    }
+
+    fn header(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        h[6] = self.kind as u8;
+        h[7] = 0;
+        h[8..16].copy_from_slice(&self.step.to_le_bytes());
+        h[16..20].copy_from_slice(&self.src_shard.to_le_bytes());
+        h[20..24].copy_from_slice(&self.dst_shard.to_le_bytes());
+        h[24..28].copy_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        h
+    }
+
+    /// Serialize to one contiguous wire image.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len() + 4);
+        out.extend_from_slice(&self.header());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode exactly one frame from `bytes`. Trailing bytes, truncation,
+    /// bad magic/version/kind, oversized lengths and CRC mismatches are
+    /// all `Err` — never a panic.
+    pub fn decode(bytes: &[u8]) -> Result<Frame, String> {
+        if bytes.len() < HEADER_LEN + 4 {
+            return Err("truncated frame".to_string());
+        }
+        let (frame, len) = decode_header(&bytes[..HEADER_LEN])?;
+        let total = HEADER_LEN + len as usize + 4;
+        if bytes.len() < total {
+            return Err("truncated frame".to_string());
+        }
+        if bytes.len() > total {
+            return Err("trailing bytes after frame".to_string());
+        }
+        let body = &bytes[HEADER_LEN..HEADER_LEN + len as usize];
+        let want = read_u32(&bytes[total - 4..total]);
+        if crc32(&bytes[..total - 4]) != want {
+            return Err("frame crc mismatch".to_string());
+        }
+        Ok(Frame { payload: body.to_vec(), ..frame })
+    }
+}
+
+fn read_u32(bytes: &[u8]) -> u32 {
+    u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+}
+
+/// Parse a header, returning the frame shell and the payload length.
+fn decode_header(h: &[u8]) -> Result<(Frame, u32), String> {
+    if h[0..4] != MAGIC {
+        return Err("bad frame magic".to_string());
+    }
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    if version != VERSION {
+        return Err(format!("unsupported frame version {version}"));
+    }
+    let kind = SegKind::from_u8(h[6]).ok_or_else(|| format!("unknown frame kind {}", h[6]))?;
+    let step = u64::from_le_bytes([h[8], h[9], h[10], h[11], h[12], h[13], h[14], h[15]]);
+    let src_shard = read_u32(&h[16..20]);
+    let dst_shard = read_u32(&h[20..24]);
+    let len = read_u32(&h[24..28]);
+    if len > MAX_FRAME_LEN {
+        return Err(format!("frame too large ({len} bytes)"));
+    }
+    let frame = Frame { kind, step, src_shard, dst_shard, payload: Vec::new() };
+    Ok((frame, len))
+}
+
+/// Write one frame. Errors are rendered as strings so transport code
+/// can thread them to the quarantine path without an error enum.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<(), String> {
+    let bytes = frame.encode();
+    w.write_all(&bytes).map_err(|e| format!("net write: {e}"))?;
+    w.flush().map_err(|e| format!("net write: {e}"))?;
+    Ok(())
+}
+
+/// Read one frame. EOF maps to a `"net closed"` prefix and read
+/// timeouts to `"net timeout"` so callers can tell an orderly shutdown
+/// from a wedged peer.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, String> {
+    let mut head = [0u8; HEADER_LEN];
+    read_exact(r, &mut head)?;
+    let (frame, len) = decode_header(&head)?;
+    let mut payload = vec![0u8; len as usize];
+    read_exact(r, &mut payload)?;
+    let mut crc = [0u8; 4];
+    read_exact(r, &mut crc)?;
+    let mut image = Vec::with_capacity(HEADER_LEN + payload.len());
+    image.extend_from_slice(&head);
+    image.extend_from_slice(&payload);
+    if crc32(&image) != read_u32(&crc) {
+        return Err("frame crc mismatch".to_string());
+    }
+    Ok(Frame { payload, ..frame })
+}
+
+fn read_exact(r: &mut impl Read, buf: &mut [u8]) -> Result<(), String> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => format!("net closed: {e}"),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            format!("net timeout: {e}")
+        }
+        _ => format!("net read: {e}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: SegKind::Rim,
+            step: 7,
+            src_shard: 2,
+            dst_shard: 5,
+            payload: vec![1, 2, 3, 4, 5, 6, 7],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips() {
+        let f = sample();
+        assert_eq!(Frame::decode(&f.encode()), Ok(f));
+        let empty = Frame::control(SegKind::StepCmd, 0, Vec::new());
+        assert_eq!(Frame::decode(&empty.encode()), Ok(empty));
+    }
+
+    #[test]
+    fn stream_round_trips_multiple_frames() {
+        let a = sample();
+        let b = Frame::control(SegKind::StepHash, 9, vec![0xaa; 8]);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        let mut cur = &wire[..];
+        assert_eq!(read_frame(&mut cur).unwrap(), a);
+        assert_eq!(read_frame(&mut cur).unwrap(), b);
+        assert!(read_frame(&mut cur).unwrap_err().starts_with("net closed"));
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicked() {
+        let wire = sample().encode();
+        // every single-byte flip is caught by magic/version/kind/len/crc
+        for i in 0..wire.len() {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x40;
+            assert!(Frame::decode(&bad).is_err(), "flip at byte {i} slipped through");
+        }
+        // truncation at every length
+        for n in 0..wire.len() {
+            assert!(Frame::decode(&wire[..n]).is_err(), "truncation to {n} accepted");
+        }
+        assert!(Frame::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        let mut wire = sample().encode();
+        wire[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&wire).unwrap_err();
+        assert!(err.contains("frame too large"), "{err}");
+        let err = read_frame(&mut &wire[..]).unwrap_err();
+        assert!(err.contains("frame too large"), "{err}");
+    }
+
+    #[test]
+    fn version_and_kind_are_validated() {
+        let mut wire = sample().encode();
+        wire[4] = 9;
+        assert!(Frame::decode(&wire).unwrap_err().contains("unsupported frame version"));
+        let mut wire = sample().encode();
+        wire[6] = 0xee;
+        assert!(Frame::decode(&wire).unwrap_err().contains("unknown frame kind"));
+    }
+}

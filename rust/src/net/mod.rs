@@ -1,0 +1,276 @@
+//! Multi-process sharding: a cluster transport for the halo exchange.
+//!
+//! The sharded engine's exchange is a pure pack → ship → unpack along a
+//! static `HaloPlan` with rim-compacted payloads (see `crate::shard`).
+//! This module puts a socket where the staging `Vec` sits: shard groups
+//! run in separate OS processes — one coordinator plus `squeeze worker
+//! --join ADDR` children — joined by a length-prefixed binary framing
+//! ([`frame`]) over per-peer persistent TCP connections ([`transport`]).
+//!
+//! The pieces:
+//!
+//! - [`frame`] — the versioned wire format, CRC-checked, never panicking
+//!   on torn input.
+//! - [`plan`] — [`ClusterPlan`]: contiguous shard → process-group
+//!   placement derived from the shard count, plus the route codec the
+//!   build handshake uses to prove every process derived the same
+//!   `HaloPlan`. Intra-process routes keep the memcpy path.
+//! - [`transport`] — [`HaloTransport`] with the [`LocalTransport`]
+//!   loopback and the framed [`TcpTransport`]; [`ClusterState`] is the
+//!   star topology the attached engine exchanges through.
+//! - [`worker`] — process bring-up: the coordinator-side
+//!   [`ClusterListener`] + [`attach_coordinator`], and the worker-side
+//!   [`run_worker`] serve loop.
+//!
+//! Failure semantics are fail-closed: every step ends with an FNV
+//! digest handshake per link, and any divergence, torn frame, timeout
+//! or dropped peer errors the exchange, which panics the engine step,
+//! which the coordinator's catch-unwind machinery (PR 8) converts into
+//! a quarantined session — the step loop never wedges and a bad rim is
+//! never silently stepped over.
+//!
+//! Rim payloads travel as raw backend units (native-endian words): the
+//! cluster assumes homogeneous word layout across processes, which the
+//! build handshake's route cross-check enforces in practice. Frame
+//! headers are explicitly little-endian.
+//!
+//! Chaos coverage hooks in via [`arm_faults`]: the `net.send` /
+//! `net.recv` fault sites fire before every frame write/read, erroring
+//! (→ quarantine) or delaying (→ latency, hashes unchanged).
+
+pub mod frame;
+pub mod plan;
+pub mod transport;
+pub mod worker;
+
+pub use frame::{Frame, SegKind};
+pub use plan::{decode_routes, encode_routes, ClusterPlan};
+pub use transport::{ClusterState, HaloTransport, LocalTransport, RoutePayload, TcpTransport};
+pub use worker::{attach_coordinator, run_worker, ClusterListener};
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::faults::{FaultAction, FaultPlan, FaultSite};
+
+// ---- joined-worker registry -----------------------------------------
+
+fn registry() -> &'static Mutex<VecDeque<TcpStream>> {
+    static POOL: OnceLock<Mutex<VecDeque<TcpStream>>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+/// Pool a worker connection that completed the `Hello` handshake. The
+/// next cluster engine build claims it.
+pub fn register_worker(stream: TcpStream) {
+    registry().lock().unwrap().push_back(stream);
+}
+
+/// Workers joined but not yet claimed by an engine build.
+pub fn pending_workers() -> usize {
+    registry().lock().unwrap().len()
+}
+
+/// Claim `n` joined workers, waiting up to `timeout` for stragglers.
+pub fn claim_workers(n: usize, timeout: Duration) -> Result<Vec<TcpStream>, String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        {
+            let mut pool = registry().lock().unwrap();
+            if pool.len() >= n {
+                return Ok(pool.drain(..n).collect());
+            }
+        }
+        if Instant::now() >= deadline {
+            let have = pending_workers();
+            return Err(format!(
+                "cluster build needs {n} joined worker(s), have {have} \
+                 (start `squeeze worker --join ADDR`)"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+// ---- fault injection ------------------------------------------------
+
+fn faults_cell() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static FAULTS: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    FAULTS.get_or_init(|| Mutex::new(None))
+}
+
+/// Arm (or with `None`, disarm) fault injection at the transport seams.
+/// The plan is shared with the coordinator's other seams so `injected`
+/// counts line up in the chaos differential.
+pub fn arm_faults(plan: Option<Arc<FaultPlan>>) {
+    *faults_cell().lock().unwrap() = plan;
+}
+
+/// Consult the armed fault plan at a transport seam.
+pub(crate) fn fault_check(site: FaultSite) -> Result<(), String> {
+    let plan = faults_cell().lock().unwrap().clone();
+    check_with(plan.as_deref(), site)
+}
+
+/// `Err`/`Drop`/`Panic` all surface as `Err` at transport seams (the
+/// connection seam semantics: the step fails closed and quarantines);
+/// `Sleep` delays in place.
+fn check_with(plan: Option<&FaultPlan>, site: FaultSite) -> Result<(), String> {
+    let Some(plan) = plan else {
+        return Ok(());
+    };
+    match plan.check(site) {
+        None => Ok(()),
+        Some(FaultAction::Sleep(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FaultAction::Err) | Some(FaultAction::Panic) | Some(FaultAction::Drop) => {
+            Err(format!("injected fault at {}", site.name()))
+        }
+    }
+}
+
+// ---- transport counters ---------------------------------------------
+
+/// Cumulative transport counters for this process, plus a per-peer
+/// byte gauge. Exchange round-trips feed the same power-of-two bucket
+/// histogram the request-latency metrics use.
+pub struct NetStats {
+    frames_sent: AtomicU64,
+    frames_recv: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    exchanges: AtomicU64,
+    exchange_us: [AtomicU64; 32],
+    peers: Mutex<BTreeMap<String, (u64, u64)>>,
+}
+
+/// A point-in-time read of [`NetStats`], in the shape the metrics line
+/// wants.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    pub frames: u64,
+    pub bytes: u64,
+    pub p99_us: u64,
+}
+
+impl NetStats {
+    fn new() -> NetStats {
+        NetStats {
+            frames_sent: AtomicU64::new(0),
+            frames_recv: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            bytes_recv: AtomicU64::new(0),
+            exchanges: AtomicU64::new(0),
+            exchange_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            peers: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    pub(crate) fn record_sent(&self, peer: &str, bytes: u64) {
+        self.frames_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        if let Ok(mut peers) = self.peers.lock() {
+            peers.entry(peer.to_string()).or_insert((0, 0)).0 += bytes;
+        }
+    }
+
+    pub(crate) fn record_recv(&self, peer: &str, bytes: u64) {
+        self.frames_recv.fetch_add(1, Ordering::Relaxed);
+        self.bytes_recv.fetch_add(bytes, Ordering::Relaxed);
+        if let Ok(mut peers) = self.peers.lock() {
+            peers.entry(peer.to_string()).or_insert((0, 0)).1 += bytes;
+        }
+    }
+
+    pub(crate) fn record_exchange_us(&self, us: u64) {
+        self.exchanges.fetch_add(1, Ordering::Relaxed);
+        let bucket = if us <= 1 { 0 } else { ((63 - us.leading_zeros()) as usize).min(31) };
+        self.exchange_us[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Aggregate counters: total frames/bytes moved either direction,
+    /// and the p99 exchange round-trip.
+    pub fn snapshot(&self) -> NetSnapshot {
+        let mut counts = [0u64; 32];
+        for (slot, bucket) in counts.iter_mut().zip(&self.exchange_us) {
+            *slot = bucket.load(Ordering::Relaxed);
+        }
+        let total = self.exchanges.load(Ordering::Relaxed);
+        NetSnapshot {
+            frames: self.frames_sent.load(Ordering::Relaxed)
+                + self.frames_recv.load(Ordering::Relaxed),
+            bytes: self.bytes_sent.load(Ordering::Relaxed)
+                + self.bytes_recv.load(Ordering::Relaxed),
+            p99_us: crate::coordinator::metrics::latency_quantile_us(&counts, total, 0.99),
+        }
+    }
+
+    /// One `net_peer=… sent_bytes=… recv_bytes=…` gauge line per peer
+    /// this process has exchanged frames with.
+    pub fn peer_lines(&self) -> Vec<String> {
+        match self.peers.lock() {
+            Ok(peers) => peers
+                .iter()
+                .map(|(peer, (sent, recv))| {
+                    format!("net_peer={peer} sent_bytes={sent} recv_bytes={recv}")
+                })
+                .collect(),
+            Err(_) => Vec::new(),
+        }
+    }
+}
+
+/// The process-wide transport counters.
+pub fn stats() -> &'static NetStats {
+    static STATS: OnceLock<NetStats> = OnceLock::new();
+    STATS.get_or_init(NetStats::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_aggregate_and_label_peers() {
+        // other tests in this binary may touch the global counters
+        // concurrently, so assert deltas as lower bounds only.
+        let s = stats();
+        let before = s.snapshot();
+        s.record_sent("peer-a:1", 40);
+        s.record_recv("peer-a:1", 36);
+        s.record_sent("peer-b:2", 10);
+        s.record_exchange_us(130);
+        let after = s.snapshot();
+        assert!(after.frames - before.frames >= 3);
+        assert!(after.bytes - before.bytes >= 86);
+        assert!(after.p99_us >= 1);
+        let lines = s.peer_lines();
+        assert!(lines.iter().any(|l| l.starts_with("net_peer=peer-a:1 sent_bytes=")), "{lines:?}");
+    }
+
+    #[test]
+    fn net_fault_sites_err_and_delay() {
+        // exercised against a local plan (not the armed global) so
+        // concurrent transport tests cannot steal the one-shot rule
+        let plan = FaultPlan::parse("net.send:err@step=1; net.recv:delay=1ms@step=1", 7).unwrap();
+        let first = check_with(Some(&plan), FaultSite::NetSend);
+        assert!(first.unwrap_err().contains("injected fault at net.send"));
+        assert!(check_with(Some(&plan), FaultSite::NetSend).is_ok());
+        let t0 = Instant::now();
+        assert!(check_with(Some(&plan), FaultSite::NetRecv).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+        assert_eq!(plan.injected(), 2);
+        assert!(check_with(None, FaultSite::NetRecv).is_ok());
+    }
+
+    #[test]
+    fn claim_times_out_with_a_helpful_error() {
+        let err = claim_workers(usize::MAX, Duration::from_millis(1)).unwrap_err();
+        assert!(err.contains("squeeze worker --join"), "{err}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Shard placement across processes, and the route codec the build
+//! handshake uses to prove both sides derived the same `HaloPlan`.
+//!
+//! A [`ClusterPlan`] splits the engine's shard list into `hosts`
+//! contiguous groups: group 0 lives in the coordinator process, groups
+//! `1..hosts` each live in one `squeeze worker` process. Contiguity
+//! matters — the sharded engine sweeps an owned *range*, and the
+//! existing intra-process routes keep the memcpy staging path.
+
+use crate::shard::HaloRoute;
+
+/// Bytes each route occupies in the encoded form.
+const ROUTE_BYTES: usize = 25;
+/// Sanity cap on the decoded route count (a torn count prefix must not
+/// become a giant allocation).
+const MAX_ROUTES: u32 = 1 << 24;
+
+/// Contiguous assignment of shards to `hosts` process groups.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterPlan {
+    /// Half-open shard ranges, one per group; group 0 is the coordinator.
+    groups: Vec<(usize, usize)>,
+}
+
+impl ClusterPlan {
+    /// Split `shards` across `hosts` groups, each non-empty, sizes
+    /// differing by at most one. `hosts` must be in `1..=shards`.
+    pub fn new(shards: usize, hosts: u32) -> Result<ClusterPlan, String> {
+        if hosts == 0 {
+            return Err("cluster plan needs at least one host".to_string());
+        }
+        if hosts as usize > shards {
+            return Err(format!("hosts={hosts} exceeds the {shards} shard(s) available"));
+        }
+        let base = shards / hosts as usize;
+        let rem = shards % hosts as usize;
+        let mut groups = Vec::with_capacity(hosts as usize);
+        let mut start = 0;
+        for g in 0..hosts as usize {
+            let len = base + usize::from(g < rem);
+            groups.push((start, start + len));
+            start += len;
+        }
+        Ok(ClusterPlan { groups })
+    }
+
+    /// Number of process groups.
+    pub fn hosts(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total shard count across every group.
+    pub fn shards(&self) -> usize {
+        self.groups.last().map_or(0, |&(_, end)| end)
+    }
+
+    /// Which group owns `shard`.
+    pub fn group_of(&self, shard: usize) -> usize {
+        self.groups
+            .iter()
+            .position(|&(start, end)| shard >= start && shard < end)
+            .unwrap_or(self.groups.len().saturating_sub(1))
+    }
+
+    /// The shard range owned by `group`.
+    pub fn owned(&self, group: usize) -> std::ops::Range<usize> {
+        let (start, end) = self.groups[group];
+        start..end
+    }
+}
+
+/// Encode halo routes for the build handshake:
+/// `[count u32 LE]` then per route
+/// `[src_shard u32][src_block u64][dst_shard u32][ghost_slot u64][dirs u8]`,
+/// all little-endian.
+pub fn encode_routes(routes: &[HaloRoute]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + routes.len() * ROUTE_BYTES);
+    out.extend_from_slice(&(routes.len() as u32).to_le_bytes());
+    for r in routes {
+        out.extend_from_slice(&(r.src_shard as u32).to_le_bytes());
+        out.extend_from_slice(&r.src_block.to_le_bytes());
+        out.extend_from_slice(&(r.dst_shard as u32).to_le_bytes());
+        out.extend_from_slice(&r.ghost_slot.to_le_bytes());
+        out.push(r.dirs);
+    }
+    out
+}
+
+/// Decode an [`encode_routes`] image. Truncated, oversized, or
+/// padded inputs are `Err` — never a panic.
+pub fn decode_routes(bytes: &[u8]) -> Result<Vec<HaloRoute>, String> {
+    if bytes.len() < 4 {
+        return Err("truncated route table".to_string());
+    }
+    let count = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    if count > MAX_ROUTES {
+        return Err(format!("route table too large ({count} routes)"));
+    }
+    let body = &bytes[4..];
+    if body.len() != count as usize * ROUTE_BYTES {
+        return Err(format!(
+            "route table length mismatch: {} bytes for {count} routes",
+            body.len()
+        ));
+    }
+    let mut routes = Vec::with_capacity(count as usize);
+    for chunk in body.chunks_exact(ROUTE_BYTES) {
+        let u32_at =
+            |o: usize| u32::from_le_bytes([chunk[o], chunk[o + 1], chunk[o + 2], chunk[o + 3]]);
+        let u64_at = |o: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&chunk[o..o + 8]);
+            u64::from_le_bytes(b)
+        };
+        routes.push(HaloRoute {
+            src_shard: u32_at(0) as usize,
+            src_block: u64_at(4),
+            dst_shard: u32_at(12) as usize,
+            ghost_slot: u64_at(16),
+            dirs: chunk[24],
+        });
+    }
+    Ok(routes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_splits_are_contiguous_and_balanced() {
+        for shards in 1..20usize {
+            for hosts in 1..=shards.min(6) as u32 {
+                let plan = ClusterPlan::new(shards, hosts).unwrap();
+                assert_eq!(plan.hosts(), hosts as usize);
+                assert_eq!(plan.shards(), shards);
+                let mut seen = 0;
+                for g in 0..plan.hosts() {
+                    let range = plan.owned(g);
+                    assert_eq!(range.start, seen, "group {g} not contiguous");
+                    assert!(!range.is_empty(), "group {g} empty");
+                    for s in range.clone() {
+                        assert_eq!(plan.group_of(s), g);
+                    }
+                    seen = range.end;
+                }
+                assert_eq!(seen, shards);
+                let sizes: Vec<usize> = (0..plan.hosts()).map(|g| plan.owned(g).len()).collect();
+                let max = sizes.iter().max().unwrap();
+                let min = sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "{sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_more_hosts_than_shards() {
+        assert!(ClusterPlan::new(2, 3).is_err());
+        assert!(ClusterPlan::new(4, 0).is_err());
+        assert!(ClusterPlan::new(4, 4).is_ok());
+    }
+
+    #[test]
+    fn route_codec_round_trips() {
+        let routes = vec![
+            HaloRoute { src_shard: 0, src_block: 9, dst_shard: 1, ghost_slot: 3, dirs: 0b1010 },
+            HaloRoute { src_shard: 3, src_block: u64::MAX, dst_shard: 0, ghost_slot: 0, dirs: 255 },
+        ];
+        let bytes = encode_routes(&routes);
+        assert_eq!(decode_routes(&bytes).unwrap(), routes);
+        assert_eq!(decode_routes(&encode_routes(&[])).unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn route_codec_rejects_torn_tables() {
+        let bytes = encode_routes(&[HaloRoute {
+            src_shard: 1,
+            src_block: 2,
+            dst_shard: 3,
+            ghost_slot: 4,
+            dirs: 5,
+        }]);
+        for n in 0..bytes.len() {
+            assert!(decode_routes(&bytes[..n]).is_err(), "truncation to {n} accepted");
+        }
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(decode_routes(&padded).is_err());
+        let mut huge = bytes;
+        huge[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_routes(&huge).unwrap_err().contains("too large"));
+    }
+}

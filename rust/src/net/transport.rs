@@ -1,0 +1,526 @@
+//! Halo transports: how packed rim segments move between shard groups.
+//!
+//! [`HaloTransport`] abstracts one step's rim traffic with a peer.
+//! [`LocalTransport`] is the in-process identity — the sharded engine's
+//! staging `Vec` already is the loopback transport, so `exchange` hands
+//! the outbound payloads straight back and the hosts=1 path stays
+//! byte-for-byte what it was before this subsystem existed.
+//! [`TcpTransport`] frames each rim segment (`net::frame`) over one
+//! persistent connection and closes every step with a [`SegKind::StepHash`]
+//! frame carrying an FNV digest of the step's rim payloads in send
+//! order: delivery is barrier-free (rims stream while interior blocks
+//! sweep) but the step cannot complete on divergent traffic — a
+//! mismatched digest, a torn frame, or a dead peer all surface as `Err`,
+//! which the engine turns into a panic and the coordinator's PR 8
+//! machinery turns into a quarantined session.
+//!
+//! [`ClusterState`] composes transports into the process topology: a
+//! star with the coordinator (group 0) at the center. Workers send
+//! every cross-process rim to the coordinator, which relays third-party
+//! segments on to their owner — with two groups (the common case) the
+//! relay set is empty and every rim moves exactly one hop.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::frame::{read_frame, write_frame, Frame, SegKind, HEADER_LEN};
+use super::plan::ClusterPlan;
+use super::{fault_check, stats};
+use crate::ca::grid::Fnv;
+use crate::coordinator::faults::FaultSite;
+
+/// How long an exchange read may block before the step fails closed.
+pub const EXCHANGE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// One rim segment in flight: `route` indexes the engine's `HaloPlan`
+/// route table (identical on every process — the build handshake proves
+/// it), `bytes` is the packed rim in backend units.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoutePayload {
+    pub route: u32,
+    pub src_shard: u32,
+    pub dst_shard: u32,
+    pub bytes: Vec<u8>,
+}
+
+/// One step's rim traffic with a peer: ship `outbound`, return every
+/// rim segment the peer shipped here.
+pub trait HaloTransport {
+    fn name(&self) -> &'static str;
+    fn exchange(
+        &mut self,
+        step: u64,
+        outbound: Vec<RoutePayload>,
+    ) -> Result<Vec<RoutePayload>, String>;
+}
+
+/// The in-process staging path: `exchange` is the identity, exactly the
+/// memcpy semantics the single-process engine has always had.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalTransport;
+
+impl HaloTransport for LocalTransport {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn exchange(
+        &mut self,
+        _step: u64,
+        outbound: Vec<RoutePayload>,
+    ) -> Result<Vec<RoutePayload>, String> {
+        Ok(outbound)
+    }
+}
+
+/// A framed, CRC-checked, step-hashed connection to one peer process.
+#[derive(Debug)]
+pub struct TcpTransport {
+    stream: TcpStream,
+    peer: String,
+    send_fnv: Fnv,
+    recv_fnv: Fnv,
+    frame_budget: usize,
+}
+
+fn wire_len(frame: &Frame) -> u64 {
+    (HEADER_LEN + frame.payload.len() + 4) as u64
+}
+
+impl TcpTransport {
+    pub fn new(stream: TcpStream) -> TcpTransport {
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "unknown".into());
+        let _ = stream.set_nodelay(true);
+        TcpTransport {
+            stream,
+            peer,
+            send_fnv: Fnv::default(),
+            recv_fnv: Fnv::default(),
+            frame_budget: 1 << 20,
+        }
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
+    /// Cap how many frames one `recv_until_step_hash` may consume — a
+    /// confused peer must not spin this side forever.
+    pub fn set_frame_budget(&mut self, frames: usize) {
+        self.frame_budget = frames.max(8);
+    }
+
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<(), String> {
+        self.stream.set_read_timeout(timeout).map_err(|e| format!("net timeout config: {e}"))
+    }
+
+    /// Send one rim segment, folding its payload into the step digest.
+    pub fn send_rim(&mut self, step: u64, p: &RoutePayload) -> Result<(), String> {
+        fault_check(FaultSite::NetSend)?;
+        let mut payload = Vec::with_capacity(4 + p.bytes.len());
+        payload.extend_from_slice(&p.route.to_le_bytes());
+        payload.extend_from_slice(&p.bytes);
+        for &b in &payload {
+            self.send_fnv.push(b);
+        }
+        let frame = Frame {
+            kind: SegKind::Rim,
+            step,
+            src_shard: p.src_shard,
+            dst_shard: p.dst_shard,
+            payload,
+        };
+        write_frame(&mut &self.stream, &frame)?;
+        stats().record_sent(&self.peer, wire_len(&frame));
+        Ok(())
+    }
+
+    /// Close this side's rim traffic for `step`: ship the digest and
+    /// reset it for the next step.
+    pub fn send_step_hash(&mut self, step: u64) -> Result<(), String> {
+        fault_check(FaultSite::NetSend)?;
+        let digest = self.send_fnv.finish();
+        self.send_fnv = Fnv::default();
+        let frame = Frame::control(SegKind::StepHash, step, digest.to_le_bytes().to_vec());
+        write_frame(&mut &self.stream, &frame)?;
+        stats().record_sent(&self.peer, wire_len(&frame));
+        Ok(())
+    }
+
+    /// Drain rim frames until the peer's step digest arrives, verifying
+    /// it against what was actually received. Fails closed on step
+    /// mismatches, digest divergence, torn frames and dead peers.
+    pub fn recv_until_step_hash(&mut self, step: u64) -> Result<Vec<RoutePayload>, String> {
+        let mut inbound = Vec::new();
+        for _ in 0..self.frame_budget {
+            fault_check(FaultSite::NetRecv)?;
+            let f = read_frame(&mut &self.stream)?;
+            stats().record_recv(&self.peer, wire_len(&f));
+            match f.kind {
+                SegKind::Rim => {
+                    if f.step != step {
+                        return Err(format!(
+                            "rim frame for step {} arrived during step {step}",
+                            f.step
+                        ));
+                    }
+                    for &b in &f.payload {
+                        self.recv_fnv.push(b);
+                    }
+                    if f.payload.len() < 4 {
+                        return Err("short rim payload".to_string());
+                    }
+                    let route =
+                        u32::from_le_bytes([f.payload[0], f.payload[1], f.payload[2], f.payload[3]]);
+                    inbound.push(RoutePayload {
+                        route,
+                        src_shard: f.src_shard,
+                        dst_shard: f.dst_shard,
+                        bytes: f.payload[4..].to_vec(),
+                    });
+                }
+                SegKind::StepHash => {
+                    if f.step != step {
+                        return Err(format!(
+                            "step digest for step {} arrived during step {step}",
+                            f.step
+                        ));
+                    }
+                    let got = self.recv_fnv.finish();
+                    self.recv_fnv = Fnv::default();
+                    if f.payload.len() != 8 {
+                        return Err("malformed step digest".to_string());
+                    }
+                    let mut b = [0u8; 8];
+                    b.copy_from_slice(&f.payload);
+                    let want = u64::from_le_bytes(b);
+                    if got != want {
+                        return Err(format!(
+                            "step {step} halo divergence with {}: received fnv {got:#x} != \
+                             announced {want:#x}",
+                            self.peer
+                        ));
+                    }
+                    return Ok(inbound);
+                }
+                SegKind::Bye => {
+                    return Err(format!(
+                        "peer {} left mid-step: {}",
+                        self.peer,
+                        String::from_utf8_lossy(&f.payload)
+                    ));
+                }
+                other => return Err(format!("unexpected {other:?} frame during exchange")),
+            }
+        }
+        Err(format!("exchange frame budget ({}) exceeded", self.frame_budget))
+    }
+
+    /// Send a control frame (no digest participation). `&self` so the
+    /// engine's read-only query methods can reach the wire.
+    pub fn send_control(&self, kind: SegKind, step: u64, payload: Vec<u8>) -> Result<(), String> {
+        fault_check(FaultSite::NetSend)?;
+        let frame = Frame::control(kind, step, payload);
+        write_frame(&mut &self.stream, &frame)?;
+        stats().record_sent(&self.peer, wire_len(&frame));
+        Ok(())
+    }
+
+    /// Read one control frame (`&self`, see [`TcpTransport::send_control`]).
+    pub fn recv_control(&self) -> Result<Frame, String> {
+        fault_check(FaultSite::NetRecv)?;
+        let f = read_frame(&mut &self.stream)?;
+        stats().record_recv(&self.peer, wire_len(&f));
+        Ok(f)
+    }
+}
+
+impl HaloTransport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn exchange(
+        &mut self,
+        step: u64,
+        outbound: Vec<RoutePayload>,
+    ) -> Result<Vec<RoutePayload>, String> {
+        for p in &outbound {
+            self.send_rim(step, p)?;
+        }
+        self.send_step_hash(step)?;
+        self.recv_until_step_hash(step)
+    }
+}
+
+/// The process topology an attached engine exchanges through: which
+/// group this process is, which shards it owns, and one transport per
+/// peer (coordinator: every worker; worker: just the coordinator).
+#[derive(Debug)]
+pub struct ClusterState {
+    plan: ClusterPlan,
+    group: usize,
+    links: Vec<TcpTransport>,
+    step: u64,
+}
+
+impl ClusterState {
+    /// Group 0: one established connection per worker group, in group
+    /// order (`streams[g - 1]` talks to group `g`).
+    pub fn coordinator(plan: ClusterPlan, streams: Vec<TcpStream>) -> Result<ClusterState, String> {
+        if streams.len() + 1 != plan.hosts() {
+            return Err(format!(
+                "cluster plan wants {} worker link(s), got {}",
+                plan.hosts() - 1,
+                streams.len()
+            ));
+        }
+        let links: Vec<TcpTransport> = streams.into_iter().map(TcpTransport::new).collect();
+        for link in &links {
+            link.set_read_timeout(Some(EXCHANGE_TIMEOUT))?;
+        }
+        Ok(ClusterState { plan, group: 0, links, step: 0 })
+    }
+
+    /// A worker group: a single link back to the coordinator. The link
+    /// stays timeout-free between steps (a worker may sit idle for as
+    /// long as the job queue likes); exchanges bound their reads.
+    pub fn worker(plan: ClusterPlan, group: usize, stream: TcpStream) -> Result<ClusterState, String> {
+        if group == 0 || group >= plan.hosts() {
+            return Err(format!("worker group {group} out of range (hosts={})", plan.hosts()));
+        }
+        Ok(ClusterState { plan, group, links: vec![TcpTransport::new(stream)], step: 0 })
+    }
+
+    pub fn plan(&self) -> &ClusterPlan {
+        &self.plan
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn is_coordinator(&self) -> bool {
+        self.group == 0
+    }
+
+    /// Does this process own `shard`?
+    pub fn owns(&self, shard: usize) -> bool {
+        self.plan.group_of(shard) == self.group
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn set_frame_budget(&mut self, frames: usize) {
+        for link in &mut self.links {
+            link.set_frame_budget(frames);
+        }
+    }
+
+    /// Peer addresses, for the metrics gauges.
+    pub fn peers(&self) -> Vec<String> {
+        self.links.iter().map(|l| l.peer().to_string()).collect()
+    }
+
+    /// Run one step's cross-process rim traffic and advance the step
+    /// counter. `outbound` must only hold rims whose destination shard
+    /// lives in another group.
+    pub fn exchange(&mut self, outbound: Vec<RoutePayload>) -> Result<Vec<RoutePayload>, String> {
+        let step = self.step;
+        self.step += 1;
+        let t0 = Instant::now();
+        let res = if self.group == 0 {
+            self.exchange_coordinator(step, outbound)
+        } else {
+            self.exchange_worker(step, outbound)
+        };
+        if res.is_ok() {
+            stats().record_exchange_us(t0.elapsed().as_micros() as u64);
+        }
+        res
+    }
+
+    fn exchange_coordinator(
+        &mut self,
+        step: u64,
+        outbound: Vec<RoutePayload>,
+    ) -> Result<Vec<RoutePayload>, String> {
+        // Kick every worker into its own engine.step(), then stream our
+        // rims while theirs stream back — no barrier anywhere.
+        for link in &self.links {
+            link.send_control(SegKind::StepCmd, step, Vec::new())?;
+        }
+        for p in &outbound {
+            let g = self.plan.group_of(p.dst_shard as usize);
+            if g == 0 {
+                return Err(format!("rim for shard {} routed to its own process", p.dst_shard));
+            }
+            self.links[g - 1].send_rim(step, p)?;
+        }
+        let mut inbound = Vec::new();
+        let mut relays: Vec<Vec<RoutePayload>> = vec![Vec::new(); self.links.len()];
+        for i in 0..self.links.len() {
+            for p in self.links[i].recv_until_step_hash(step)? {
+                let g = self.plan.group_of(p.dst_shard as usize);
+                if g == 0 {
+                    inbound.push(p);
+                } else {
+                    relays[g - 1].push(p);
+                }
+            }
+        }
+        // Third-party rims hop through the hub; the digest closes each
+        // link only after every segment bound for it has been relayed.
+        for (i, batch) in relays.into_iter().enumerate() {
+            for p in &batch {
+                self.links[i].send_rim(step, p)?;
+            }
+            self.links[i].send_step_hash(step)?;
+        }
+        Ok(inbound)
+    }
+
+    fn exchange_worker(
+        &mut self,
+        step: u64,
+        outbound: Vec<RoutePayload>,
+    ) -> Result<Vec<RoutePayload>, String> {
+        let link = &mut self.links[0];
+        link.set_read_timeout(Some(EXCHANGE_TIMEOUT))?;
+        let res = link.exchange(step, outbound);
+        let _ = link.set_read_timeout(None);
+        res
+    }
+
+    /// Coordinator-side fan-out of a control request, collecting one
+    /// reply payload per worker. `&self` so the engine's read-only
+    /// accessors (population, export) can use it.
+    pub fn broadcast(
+        &self,
+        kind: SegKind,
+        payload: &[u8],
+        reply: SegKind,
+    ) -> Result<Vec<Vec<u8>>, String> {
+        let mut replies = Vec::with_capacity(self.links.len());
+        for link in &self.links {
+            link.send_control(kind, self.step, payload.to_vec())?;
+            let f = link.recv_control()?;
+            if f.kind == SegKind::Bye {
+                return Err(format!(
+                    "peer {} left: {}",
+                    link.peer(),
+                    String::from_utf8_lossy(&f.payload)
+                ));
+            }
+            if f.kind != reply {
+                return Err(format!(
+                    "expected {reply:?} from {}, got {:?}",
+                    link.peer(),
+                    f.kind
+                ));
+            }
+            replies.push(f.payload);
+        }
+        Ok(replies)
+    }
+}
+
+impl Drop for ClusterState {
+    fn drop(&mut self) {
+        // Orderly shutdown so idle workers exit instead of blocking on
+        // a dead socket. Best-effort: the peer may already be gone.
+        if self.group == 0 {
+            for link in &self.links {
+                let frame = Frame::control(SegKind::Bye, self.step, Vec::new());
+                let _ = write_frame(&mut link.stream(), &frame);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    fn payload(route: u32, bytes: &[u8]) -> RoutePayload {
+        RoutePayload { route, src_shard: route, dst_shard: route + 1, bytes: bytes.to_vec() }
+    }
+
+    #[test]
+    fn local_transport_is_the_identity() {
+        let mut t = LocalTransport;
+        assert_eq!(t.name(), "local");
+        let out = vec![payload(0, &[1, 2, 3]), payload(9, &[])];
+        assert_eq!(t.exchange(0, out.clone()).unwrap(), out);
+    }
+
+    #[test]
+    fn tcp_transport_round_trips_rims_both_ways() {
+        let (a, b) = pair();
+        let (mut ta, mut tb) = (TcpTransport::new(a), TcpTransport::new(b));
+        let from_a = vec![payload(0, &[1, 2, 3]), payload(2, &[0xff; 17])];
+        let from_b = vec![payload(1, b"ghost rim")];
+        // stream a's traffic first: both sides write before reading, so
+        // a single thread can drive both ends in order.
+        for p in &from_a {
+            ta.send_rim(4, p).unwrap();
+        }
+        ta.send_step_hash(4).unwrap();
+        let got_b = tb.recv_until_step_hash(4).unwrap();
+        assert_eq!(got_b, from_a);
+        for p in &from_b {
+            tb.send_rim(4, p).unwrap();
+        }
+        tb.send_step_hash(4).unwrap();
+        let got_a = ta.recv_until_step_hash(4).unwrap();
+        assert_eq!(got_a, from_b);
+    }
+
+    #[test]
+    fn divergent_step_digest_fails_closed() {
+        let (a, b) = pair();
+        let (ta, mut tb) = (TcpTransport::new(a), TcpTransport::new(b));
+        // hand-craft a rim whose digest announcement lies
+        let mut rim = 7u32.to_le_bytes().to_vec();
+        rim.extend_from_slice(&[1, 2, 3]);
+        write_frame(
+            &mut ta.stream(),
+            &Frame { kind: SegKind::Rim, step: 0, src_shard: 0, dst_shard: 1, payload: rim },
+        )
+        .unwrap();
+        write_frame(
+            &mut ta.stream(),
+            &Frame::control(SegKind::StepHash, 0, 0xdead_beefu64.to_le_bytes().to_vec()),
+        )
+        .unwrap();
+        let err = tb.recv_until_step_hash(0).unwrap_err();
+        assert!(err.contains("halo divergence"), "{err}");
+    }
+
+    #[test]
+    fn wrong_step_and_dead_peer_fail_closed() {
+        let (a, b) = pair();
+        let (mut ta, mut tb) = (TcpTransport::new(a), TcpTransport::new(b));
+        ta.send_rim(3, &payload(0, &[9])).unwrap();
+        let err = tb.recv_until_step_hash(2).unwrap_err();
+        assert!(err.contains("step 3"), "{err}");
+        drop(ta);
+        let err = tb.recv_until_step_hash(2).unwrap_err();
+        assert!(err.starts_with("net closed"), "{err}");
+    }
+}

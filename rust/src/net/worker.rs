@@ -1,0 +1,380 @@
+//! Cluster process bring-up: the coordinator-side worker pool and the
+//! `squeeze worker --join ADDR` serve loop.
+//!
+//! Lifecycle:
+//!
+//! 1. The coordinator starts a [`ClusterListener`]; each joining worker
+//!    connects, sends `Hello`, and is pooled.
+//! 2. A job with `@hosts=N` builds its engine, then
+//!    [`attach_coordinator`] claims `N - 1` pooled workers and sends
+//!    each a `Build` frame: a text header (fractal, engine spec, rule,
+//!    seed, knobs, group index) plus the coordinator's encoded
+//!    `HaloPlan` routes.
+//! 3. Each worker rebuilds the identical engine from the header —
+//!    deterministic construction means identical shards, routes, and
+//!    t=0 seeding — and proves it by comparing its own encoded routes
+//!    against the coordinator's byte-for-byte. Any mismatch fails the
+//!    build closed. The worker then truncates the shards it does not
+//!    own, replies `Ready`, and enters the serve loop.
+//! 4. `StepCmd` drives lock-step `engine.step()` calls whose halo
+//!    exchanges ship rims back and forth; population/export/cell/load
+//!    requests proxy the read-side engine API.
+//!
+//! A worker that cannot build, diverges, or panics mid-step sends a
+//! best-effort `Bye` with the reason and exits nonzero; the
+//! coordinator's next exchange on that link then fails closed and the
+//! session quarantines.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use super::frame::{read_frame, write_frame, Frame, SegKind};
+use super::plan::{encode_routes, ClusterPlan};
+use super::transport::ClusterState;
+use super::{claim_workers, register_worker};
+use crate::ca::backend::{ByteBackend, MmaPackedBackend, PackedBackend, StateBackend};
+use crate::ca::engine::Engine;
+use crate::ca::factory::{EngineConfig, EngineKind};
+use crate::ca::rule::Rule;
+use crate::ca::spec::EngineSpec;
+use crate::ca::squeeze::MapPath;
+use crate::fractal::{catalog, FractalSpec};
+use crate::shard::{ShardOpts, ShardedSqueezeEngine};
+
+/// How long a cluster build waits for enough joined workers.
+const JOIN_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long the coordinator waits for each worker's `Ready` (the
+/// worker is rebuilding maps and seeding state in the meantime).
+const BUILD_TIMEOUT: Duration = Duration::from_secs(120);
+
+// ---- coordinator side -----------------------------------------------
+
+/// Accepts joining workers on `addr` and pools each one that completes
+/// the `Hello` handshake. The accept thread runs detached for the
+/// lifetime of the process.
+pub struct ClusterListener {
+    local: SocketAddr,
+}
+
+impl ClusterListener {
+    pub fn start(addr: &str) -> Result<ClusterListener, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("cluster listen {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| format!("cluster listen {addr}: {e}"))?;
+        std::thread::Builder::new()
+            .name("cluster-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+                    match read_frame(&mut &stream) {
+                        Ok(f) if f.kind == SegKind::Hello => {
+                            let _ = stream.set_read_timeout(None);
+                            let _ = stream.set_nodelay(true);
+                            register_worker(stream);
+                        }
+                        _ => {} // not a worker; drop the connection
+                    }
+                }
+            })
+            .map_err(|e| format!("cluster accept thread: {e}"))?;
+        Ok(ClusterListener { local })
+    }
+
+    /// The bound address (useful with a `:0` ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+}
+
+/// Claim `cfg.hosts - 1` joined workers, hand each its group of the
+/// engine's shards, verify every rebuild, and attach the resulting
+/// [`ClusterState`] to the coordinator's engine.
+pub fn attach_coordinator<B: StateBackend>(
+    engine: &mut ShardedSqueezeEngine<B>,
+    fractal: &FractalSpec,
+    cfg: &EngineConfig,
+) -> Result<(), String> {
+    let shards = engine.partition().shards();
+    let plan = ClusterPlan::new(shards, cfg.hosts)?;
+    let routes = encode_routes(engine.halo_routes());
+    let spec_text = EngineSpec { kind: cfg.kind, hosts: 1 }.to_string();
+    let streams = claim_workers(plan.hosts() - 1, JOIN_TIMEOUT)?;
+    for (i, stream) in streams.iter().enumerate() {
+        let group = i + 1;
+        let hosts = cfg.hosts;
+        let name = &fractal.name;
+        let (r, seed, workers) = (cfg.r, cfg.seed, cfg.workers);
+        let rule = cfg.rule.notation();
+        let density_bits = cfg.density.to_bits();
+        let (ov, co, ba) = (u8::from(cfg.overlap), u8::from(cfg.compact), u8::from(cfg.balance));
+        let head = format!(
+            "v=1 group={group} hosts={hosts} fractal={name} engine={spec_text} r={r} \
+             rule={rule} density_bits={density_bits} seed={seed} workers={workers} \
+             overlap={ov} compact={co} balance={ba}\n"
+        );
+        let mut payload = head.into_bytes();
+        payload.extend_from_slice(&routes);
+        write_frame(&mut &*stream, &Frame::control(SegKind::Build, 0, payload))?;
+    }
+    for stream in &streams {
+        stream
+            .set_read_timeout(Some(BUILD_TIMEOUT))
+            .map_err(|e| format!("net timeout config: {e}"))?;
+        let f = read_frame(&mut &*stream)?;
+        match f.kind {
+            SegKind::Ready => {}
+            SegKind::Bye => {
+                return Err(format!(
+                    "cluster worker failed to build: {}",
+                    String::from_utf8_lossy(&f.payload)
+                ));
+            }
+            other => return Err(format!("expected Ready from worker, got {other:?}")),
+        }
+    }
+    let state = ClusterState::coordinator(plan, streams)?;
+    engine.attach_cluster(Box::new(state))
+}
+
+// ---- worker side ----------------------------------------------------
+
+/// Everything a worker needs to rebuild the coordinator's engine.
+struct BuildHead {
+    group: usize,
+    hosts: u32,
+    fractal: String,
+    engine: EngineKind,
+    r: u32,
+    rule: Rule,
+    density: f64,
+    seed: u64,
+    workers: usize,
+    opts: ShardOpts,
+}
+
+fn parse_build(payload: &[u8]) -> Result<(BuildHead, Vec<u8>), String> {
+    let nl = payload
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| "malformed build header".to_string())?;
+    let head = std::str::from_utf8(&payload[..nl])
+        .map_err(|_| "malformed build header".to_string())?;
+    let mut kv = std::collections::BTreeMap::new();
+    for tok in head.split_whitespace() {
+        let (k, v) = tok.split_once('=').ok_or_else(|| format!("bad build token {tok:?}"))?;
+        kv.insert(k, v);
+    }
+    let field = |k: &str| -> Result<&str, String> {
+        kv.get(k).copied().ok_or_else(|| format!("build header missing {k}"))
+    };
+    let num = |k: &str| -> Result<u64, String> {
+        field(k)?.parse::<u64>().map_err(|_| format!("bad build field {k}"))
+    };
+    let flag = |k: &str| -> Result<bool, String> { Ok(num(k)? != 0) };
+    if field("v")? != "1" {
+        return Err(format!("unsupported build version {}", field("v")?));
+    }
+    let engine_text = field("engine")?;
+    let engine = EngineSpec::parse(engine_text).map_err(|e| format!("build engine: {e}"))?.kind;
+    let rule_text = field("rule")?;
+    let rule =
+        Rule::parse(rule_text).ok_or_else(|| format!("bad build rule {rule_text:?}"))?;
+    let head = BuildHead {
+        group: num("group")? as usize,
+        hosts: num("hosts")? as u32,
+        fractal: field("fractal")?.to_string(),
+        engine,
+        r: num("r")? as u32,
+        rule,
+        density: f64::from_bits(num("density_bits")?),
+        seed: num("seed")?,
+        workers: num("workers")? as usize,
+        opts: ShardOpts {
+            overlap: flag("overlap")?,
+            compact: flag("compact")?,
+            balance: flag("balance")?,
+        },
+    };
+    Ok((head, payload[nl + 1..].to_vec()))
+}
+
+fn build_one<B: StateBackend + 'static>(
+    head: &BuildHead,
+    rho: u32,
+    shards: u32,
+    route_bytes: &[u8],
+    stream: TcpStream,
+) -> Result<Box<dyn Engine>, String> {
+    let fractal = catalog::by_name(&head.fractal)
+        .ok_or_else(|| format!("unknown fractal {:?}", head.fractal))?;
+    let mut engine = ShardedSqueezeEngine::<B>::with_opts(
+        &fractal,
+        head.r,
+        rho,
+        shards,
+        head.rule,
+        head.density,
+        head.seed,
+        head.workers,
+        MapPath::Scalar,
+        head.opts,
+        None,
+    )
+    .map_err(|e| format!("worker engine build: {e}"))?;
+    if encode_routes(engine.halo_routes()) != route_bytes {
+        return Err("cluster build divergence: halo routes differ from coordinator".to_string());
+    }
+    let plan = ClusterPlan::new(engine.partition().shards(), head.hosts)?;
+    let state = ClusterState::worker(plan, head.group, stream)?;
+    engine.attach_cluster(Box::new(state))?;
+    Ok(Box::new(engine))
+}
+
+fn build_worker_engine(
+    head: &BuildHead,
+    route_bytes: &[u8],
+    stream: TcpStream,
+) -> Result<Box<dyn Engine>, String> {
+    match head.engine {
+        EngineKind::ShardedSqueeze { rho, shards } => {
+            build_one::<ByteBackend>(head, rho, shards, route_bytes, stream)
+        }
+        EngineKind::PackedShardedSqueeze { rho, shards } => {
+            build_one::<PackedBackend>(head, rho, shards, route_bytes, stream)
+        }
+        EngineKind::PackedMmaShardedSqueeze { rho, shards } => {
+            build_one::<MmaPackedBackend>(head, rho, shards, route_bytes, stream)
+        }
+        other => Err(format!("engine {other:?} cannot run as a cluster worker")),
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic".to_string()
+    }
+}
+
+/// The `squeeze worker --join ADDR` role: join a coordinator's cluster
+/// listener, rebuild the engine it describes, and serve step/query
+/// frames until the coordinator says `Bye` or hangs up. Returns `Err`
+/// on any protocol, build, or step failure (the CLI exits nonzero).
+pub fn run_worker(join: &str, workers_override: Option<usize>) -> Result<(), String> {
+    let stream = TcpStream::connect(join).map_err(|e| format!("worker join {join}: {e}"))?;
+    let _ = stream.set_nodelay(true);
+    write_frame(&mut &stream, &Frame::control(SegKind::Hello, 0, b"squeeze-worker".to_vec()))?;
+    let build = read_frame(&mut &stream)?;
+    if build.kind != SegKind::Build {
+        return Err(format!("expected Build frame, got {:?}", build.kind));
+    }
+    let (mut head, route_bytes) = parse_build(&build.payload)?;
+    if let Some(w) = workers_override {
+        head.workers = w.max(1);
+    }
+    let transport = stream.try_clone().map_err(|e| format!("worker socket clone: {e}"))?;
+    let mut engine = match build_worker_engine(&head, &route_bytes, transport) {
+        Ok(engine) => engine,
+        Err(e) => {
+            let bye = Frame::control(SegKind::Bye, 0, e.clone().into_bytes());
+            let _ = write_frame(&mut &stream, &bye);
+            return Err(e);
+        }
+    };
+    write_frame(&mut &stream, &Frame::control(SegKind::Ready, 0, Vec::new()))?;
+    let mut steps = 0u64;
+    loop {
+        let f = match read_frame(&mut &stream) {
+            Ok(f) => f,
+            Err(e) if e.starts_with("net closed") => return Ok(()),
+            Err(e) => return Err(e),
+        };
+        match f.kind {
+            SegKind::StepCmd => {
+                if f.step != steps {
+                    return Err(format!(
+                        "step desync: coordinator at {}, worker at {steps}",
+                        f.step
+                    ));
+                }
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(|| engine.step())) {
+                    let msg = panic_text(&*payload);
+                    let bye = Frame::control(SegKind::Bye, f.step, msg.clone().into_bytes());
+                    let _ = write_frame(&mut &stream, &bye);
+                    return Err(format!("worker step {steps} failed: {msg}"));
+                }
+                steps += 1;
+            }
+            SegKind::PopReq => {
+                let pop = engine.population();
+                let reply = Frame::control(SegKind::PopReply, f.step, pop.to_le_bytes().to_vec());
+                write_frame(&mut &stream, &reply)?;
+            }
+            SegKind::ExportReq => {
+                let reply = Frame::control(SegKind::ExportReply, f.step, engine.export_state());
+                write_frame(&mut &stream, &reply)?;
+            }
+            SegKind::CellReq => {
+                if f.payload.len() != 8 {
+                    return Err("malformed cell request".to_string());
+                }
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&f.payload);
+                let idx = u64::from_le_bytes(b);
+                let state = if idx < engine.cells() { engine.cell(idx) } else { 0 };
+                let reply = Frame::control(SegKind::CellReply, f.step, vec![state]);
+                write_frame(&mut &stream, &reply)?;
+            }
+            SegKind::LoadCmd => {
+                let ack = match engine.load_state(&f.payload) {
+                    Ok(()) => Vec::new(),
+                    Err(e) => e.into_bytes(),
+                };
+                write_frame(&mut &stream, &Frame::control(SegKind::LoadAck, f.step, ack))?;
+            }
+            SegKind::Bye => return Ok(()),
+            other => return Err(format!("unexpected {other:?} frame in worker loop")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_header_round_trips() {
+        let routes = [7u8, 8, 9];
+        let mut payload = b"v=1 group=2 hosts=3 fractal=sierpinski-triangle \
+                            engine=sharded-squeeze:4:6 r=5 rule=B36/S23 density_bits="
+            .to_vec();
+        payload.extend_from_slice(0.4f64.to_bits().to_string().as_bytes());
+        payload.extend_from_slice(b" seed=21 workers=2 overlap=1 compact=0 balance=1\n");
+        payload.extend_from_slice(&routes);
+        let (head, rest) = parse_build(&payload).unwrap();
+        assert_eq!(head.group, 2);
+        assert_eq!(head.hosts, 3);
+        assert_eq!(head.fractal, "sierpinski-triangle");
+        assert_eq!(head.engine, EngineKind::ShardedSqueeze { rho: 4, shards: 6 });
+        assert_eq!(head.r, 5);
+        assert_eq!(head.rule, Rule::parse("B36/S23").unwrap());
+        assert_eq!(head.density, 0.4);
+        assert_eq!(head.seed, 21);
+        assert_eq!(head.workers, 2);
+        assert!(head.opts.overlap && !head.opts.compact && head.opts.balance);
+        assert_eq!(rest, routes);
+    }
+
+    #[test]
+    fn torn_build_headers_are_errors() {
+        assert!(parse_build(b"no newline at all").is_err());
+        assert!(parse_build(b"v=1 group=1\n").is_err());
+        assert!(parse_build(b"v=2 group=1 hosts=2\n").is_err());
+        assert!(parse_build(&[0xff, 0xfe, b'\n']).is_err());
+    }
+}

@@ -40,14 +40,15 @@ use super::partition::ShardPartition;
 use super::plan::{HaloPlan, HaloRoute};
 use super::{ShardOpts, ShardStats};
 use crate::ca::backend::{ByteBackend, PackedBackend, RimSegs, StateBackend, UnitPtr};
-use crate::ca::engine::{seeded_alive, Engine};
-use crate::ca::grid::Buffer;
+use crate::ca::engine::{seeded_alive, set_state_bit, state_bit, Engine};
+use crate::ca::grid::{Buffer, Fnv};
 use crate::ca::rule::Rule;
 use crate::ca::squeeze::MapPath;
 use crate::fractal::{Coord, FractalSpec};
 use crate::maps::block::BlockError;
 use crate::maps::cache::{BlockMaps, MapCache};
 use crate::maps::lambda::lambda;
+use crate::net::SegKind;
 use crate::util::pool::parallel_for_chunks;
 
 /// One shard: a contiguous run of `nlocal` blocks plus `nghost` ghost
@@ -259,6 +260,11 @@ pub struct ShardedSqueezeEngine<B: StateBackend = ByteBackend> {
     overlap: bool,
     stats: ShardStats,
     plan_table_bytes: u64,
+    /// The shard range this process materializes. Single-process engines
+    /// own everything; a cluster attachment narrows it to one group.
+    owned: std::ops::Range<usize>,
+    /// Cross-process transport, when this engine is part of a cluster.
+    cluster: Option<Box<crate::net::ClusterState>>,
 }
 
 /// The sharded bit-planar engine.
@@ -455,6 +461,7 @@ impl<B: StateBackend> ShardedSqueezeEngine<B> {
                 backend.set_cell(&mut shard_states[s].buf.cur, local);
             }
         }
+        let owned = 0..part.shards();
         Ok(ShardedSqueezeEngine {
             maps,
             backend,
@@ -470,6 +477,8 @@ impl<B: StateBackend> ShardedSqueezeEngine<B> {
             overlap: opts.overlap,
             stats,
             plan_table_bytes,
+            owned,
+            cluster: None,
         })
     }
 
@@ -500,16 +509,210 @@ impl<B: StateBackend> ShardedSqueezeEngine<B> {
     pub fn plan_table_bytes(&self) -> u64 {
         self.plan_table_bytes
     }
+
+    /// The static halo routes (cluster handshake cross-check).
+    pub fn halo_routes(&self) -> &[HaloRoute] {
+        &self.routes
+    }
+
+    /// Narrow this engine to its cluster group: drop the state of every
+    /// shard another process owns (every process seeds the full state
+    /// identically at build, so ownership is purely a matter of which
+    /// buffers stay materialized) and route cross-process halo routes
+    /// through the transport from now on.
+    pub fn attach_cluster(
+        &mut self,
+        mut cluster: Box<crate::net::ClusterState>,
+    ) -> Result<(), String> {
+        if cluster.plan().shards() != self.part.shards() {
+            return Err(format!(
+                "cluster plan covers {} shard(s) but the engine has {}",
+                cluster.plan().shards(),
+                self.part.shards()
+            ));
+        }
+        self.owned = cluster.plan().owned(cluster.group());
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            if !self.owned.contains(&s) {
+                shard.buf = Buffer::zeroed(0);
+            }
+        }
+        cluster.set_frame_budget(self.routes.len() + 8);
+        self.cluster = Some(cluster);
+        Ok(())
+    }
+
+    /// Shard + shard-local slot of a compact cell index (the one
+    /// canonical index route seeding / queries / loads share).
+    fn locate(&self, idx: u64) -> (usize, u64) {
+        let full = &self.maps.full;
+        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
+        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
+        let slot = self.maps.block.storage_index(e).expect("fractal cell");
+        let bidx = slot / tile;
+        let s = self.part.shard_of(bidx);
+        let local = (bidx - self.part.range(s).0) * tile + slot % tile;
+        (s, local)
+    }
+
+    /// `cell()` restricted to shards this process owns; foreign cells
+    /// read 0 without touching the transport.
+    fn cell_owned(&self, idx: u64) -> u8 {
+        let (s, local) = self.locate(idx);
+        if self.owned.contains(&s) {
+            self.backend.get_cell(&self.shards[s].buf.cur, local)
+        } else {
+            0
+        }
+    }
+}
+
+/// Reinterpret backend units as raw bytes for the wire. Units are plain
+/// old data (`u8` / `u64` words), so this is layout-sound; the payload
+/// is native-endian, which the cluster's homogeneity assumption covers.
+fn unit_bytes<U>(units: &[U]) -> &[u8] {
+    // SAFETY: POD source, length from size_of_val, alignment 1.
+    unsafe { std::slice::from_raw_parts(units.as_ptr().cast(), std::mem::size_of_val(units)) }
+}
+
+fn unit_bytes_mut<U>(units: &mut [U]) -> &mut [u8] {
+    let len = std::mem::size_of_val(units);
+    // SAFETY: POD destination, any bit pattern is a valid unit.
+    unsafe { std::slice::from_raw_parts_mut(units.as_mut_ptr().cast(), len) }
+}
+
+/// The cluster flavor of [`run_exchange`]: pack only the routes whose
+/// source this process owns, ship the cross-process ones, receive the
+/// step's inbound rims, then scatter into owned ghost rings. Interior
+/// (intra-process) routes keep the staging memcpy path untouched.
+///
+/// Safety: per the [`ShardRun`] contract, and additionally every
+/// non-owned run has zero local/ghost units so its pointers are never
+/// dereferenced.
+#[allow(clippy::too_many_arguments)]
+unsafe fn run_cluster_exchange<B: StateBackend>(
+    backend: &B,
+    routes: &[HaloRoute],
+    meta: &[RouteMeta],
+    rims: &[RimSegs],
+    runs: &[ShardRun<B::Unit>],
+    stage: &mut [Vec<B::Unit>],
+    tile_cells: u64,
+    cluster: &mut crate::net::ClusterState,
+) -> Result<(), String> {
+    use crate::net::RoutePayload;
+    // pack every owned-source route into destination-major staging
+    for (r, m) in routes.iter().zip(meta) {
+        if !cluster.owns(r.src_shard) {
+            continue;
+        }
+        let src = &runs[r.src_shard];
+        let cur = std::slice::from_raw_parts(src.cur as *const B::Unit, src.local_units);
+        let base = backend.unit_base(r.src_block * tile_cells);
+        let out = &mut stage[r.dst_shard][m.off as usize..(m.off + m.units) as usize];
+        backend.pack_rim(cur, base, &rims[m.segs], out);
+    }
+    // ship the cross-process ones
+    let mut outbound = Vec::new();
+    for (i, (r, m)) in routes.iter().zip(meta).enumerate() {
+        if cluster.owns(r.src_shard) && !cluster.owns(r.dst_shard) {
+            let staged = &stage[r.dst_shard][m.off as usize..(m.off + m.units) as usize];
+            outbound.push(RoutePayload {
+                route: i as u32,
+                src_shard: r.src_shard as u32,
+                dst_shard: r.dst_shard as u32,
+                bytes: unit_bytes(staged).to_vec(),
+            });
+        }
+    }
+    let inbound = cluster.exchange(outbound)?;
+    // land inbound rims in the staging slots their routes own
+    let mut seen = vec![false; routes.len()];
+    for p in inbound {
+        let i = p.route as usize;
+        let (Some(r), Some(m)) = (routes.get(i), meta.get(i)) else {
+            return Err(format!("inbound rim names unknown route {i}"));
+        };
+        if cluster.owns(r.src_shard) || !cluster.owns(r.dst_shard) {
+            return Err(format!("inbound rim for route {i} violates the placement"));
+        }
+        if seen[i] {
+            return Err(format!("duplicate inbound rim for route {i}"));
+        }
+        seen[i] = true;
+        let dst = &mut stage[r.dst_shard][m.off as usize..(m.off + m.units) as usize];
+        let want = std::mem::size_of_val(&dst[..]);
+        if p.bytes.len() != want {
+            return Err(format!(
+                "inbound rim for route {i} is {} bytes, expected {want}",
+                p.bytes.len()
+            ));
+        }
+        unit_bytes_mut(dst).copy_from_slice(&p.bytes);
+    }
+    for (i, r) in routes.iter().enumerate() {
+        if !cluster.owns(r.src_shard) && cluster.owns(r.dst_shard) && !seen[i] {
+            return Err(format!("missing inbound rim for route {i}"));
+        }
+    }
+    // scatter staging into owned ghost rings
+    for (r, m) in routes.iter().zip(meta) {
+        if !cluster.owns(r.dst_shard) {
+            continue;
+        }
+        let dst = &runs[r.dst_shard];
+        let ghost =
+            std::slice::from_raw_parts_mut(dst.cur.add(dst.local_units), dst.ghost_units);
+        let staged = &stage[r.dst_shard][m.off as usize..(m.off + m.units) as usize];
+        backend.unpack_rim(
+            staged,
+            ghost,
+            backend.unit_base(r.ghost_slot * tile_cells),
+            &rims[m.segs],
+        );
+    }
+    Ok(())
+}
+
+/// Step-time exchange dispatch: memcpy staging when the engine is
+/// single-process, the framed transport when a cluster is attached. A
+/// transport error must not let the step commit half-exchanged state —
+/// it panics, which the coordinator converts into a quarantine.
+#[allow(clippy::too_many_arguments)]
+unsafe fn exchange_dispatch<B: StateBackend>(
+    backend: &B,
+    routes: &[HaloRoute],
+    meta: &[RouteMeta],
+    rims: &[RimSegs],
+    runs: &[ShardRun<B::Unit>],
+    stage: &mut [Vec<B::Unit>],
+    tile_cells: u64,
+    cluster: Option<&mut crate::net::ClusterState>,
+) {
+    match cluster {
+        None => run_exchange(backend, routes, meta, rims, runs, stage, tile_cells),
+        Some(c) => {
+            if let Err(e) =
+                run_cluster_exchange(backend, routes, meta, rims, runs, stage, tile_cells, c)
+            {
+                panic!("cluster halo exchange failed: {e}");
+            }
+        }
+    }
 }
 
 impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
     fn name(&self) -> String {
-        format!(
+        let base = format!(
             "sharded-{}-rho{}x{}",
             B::base_name(self.path),
             self.maps.block.rho,
             self.shards.len()
-        )
+        );
+        match &self.cluster {
+            Some(c) if c.is_coordinator() => format!("{base}@hosts={}", c.plan().hosts()),
+            _ => base,
+        }
     }
 
     fn step(&mut self) {
@@ -524,15 +727,20 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
         let meta = &self.route_meta;
         let rims = &self.rims;
         let stage = &mut self.stage;
+        let owned = self.owned.clone();
+        let cluster = self.cluster.as_deref_mut();
         let upt = backend.units_per_tile();
         let runs: Vec<ShardRun<'_, B::Unit>> = self
             .shards
             .iter_mut()
-            .map(|s| ShardRun {
+            .enumerate()
+            .map(|(i, s)| ShardRun {
                 cur: s.buf.cur.as_mut_ptr(),
                 next: s.buf.next.as_mut_ptr(),
-                local_units: (s.nlocal * upt) as usize,
-                ghost_units: (s.nghost * upt) as usize,
+                // non-owned shards keep zero-length views so their
+                // (dangling) pointers are never dereferenced
+                local_units: if owned.contains(&i) { (s.nlocal * upt) as usize } else { 0 },
+                ghost_units: if owned.contains(&i) { (s.nghost * upt) as usize } else { 0 },
                 neighbors: &s.neighbors,
                 interior: &s.interior,
                 boundary: &s.boundary,
@@ -541,7 +749,7 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
         // overlap only pays off when there is an exchange to hide and a
         // worker left to run it against; with one worker the serial
         // ordering avoids the per-step exchange-thread spawn
-        if self.overlap && self.workers > 1 && !routes.is_empty() {
+        if self.overlap && workers > 1 && !routes.is_empty() {
             // barrier 1 is the scope join: ghosts carry the previous
             // step's committed state before any boundary sweep runs,
             // while interior sweeps (which never read ghosts) proceed
@@ -554,17 +762,28 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
                     // sweeps read local regions and write `next` — all
                     // disjoint per the ShardRun contract.
                     unsafe {
-                        run_exchange(backend, routes, meta, rims, runs, stage, tile_cells)
+                        exchange_dispatch(
+                            backend, routes, meta, rims, runs, stage, tile_cells, cluster,
+                        )
                     };
                 });
-                sweep_shards(backend, runs, Phase::Interior, workers, rule, tile_cells);
+                sweep_shards(
+                    backend,
+                    &runs[owned.clone()],
+                    Phase::Interior,
+                    workers,
+                    rule,
+                    tile_cells,
+                );
             });
-            sweep_shards(backend, &runs, Phase::Boundary, workers, rule, tile_cells);
+            sweep_shards(backend, &runs[owned], Phase::Boundary, workers, rule, tile_cells);
         } else {
             // serial ordering: exchange, then one sweep over everything
             // SAFETY: exclusive access — no concurrent readers/writers.
-            unsafe { run_exchange(backend, routes, meta, rims, &runs, stage, tile_cells) };
-            sweep_shards(backend, &runs, Phase::All, workers, rule, tile_cells);
+            unsafe {
+                exchange_dispatch(backend, routes, meta, rims, &runs, stage, tile_cells, cluster)
+            };
+            sweep_shards(backend, &runs[owned], Phase::All, workers, rule, tile_cells);
         }
         drop(runs);
         for s in &mut self.shards {
@@ -578,10 +797,27 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
 
     fn population(&self) -> u64 {
         let upt = self.backend.units_per_tile();
-        self.shards
+        let mut total: u64 = self.shards[self.owned.clone()]
             .iter()
             .map(|s| B::population(&s.buf.cur[..(s.nlocal * upt) as usize]))
-            .sum()
+            .sum();
+        if let Some(c) = &self.cluster {
+            if c.is_coordinator() {
+                let replies = match c.broadcast(SegKind::PopReq, &[], SegKind::PopReply) {
+                    Ok(replies) => replies,
+                    Err(e) => panic!("cluster population query failed: {e}"),
+                };
+                for r in replies {
+                    if r.len() != 8 {
+                        panic!("cluster population reply is {} bytes, expected 8", r.len());
+                    }
+                    let mut raw = [0u8; 8];
+                    raw.copy_from_slice(&r);
+                    total += u64::from_le_bytes(raw);
+                }
+            }
+        }
+        total
     }
 
     fn memory_bytes(&self) -> u64 {
@@ -593,18 +829,81 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
     }
 
     fn cell(&self, idx: u64) -> u8 {
-        let full = &self.maps.full;
-        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
-        let e = lambda(full, Coord::from_linear(idx, full.compact.w));
-        let slot = self.maps.block.storage_index(e).expect("fractal cell");
-        let bidx = slot / tile;
-        let s = self.part.shard_of(bidx);
-        let local = (bidx - self.part.range(s).0) * tile + slot % tile;
-        self.backend.get_cell(&self.shards[s].buf.cur, local)
+        let (s, local) = self.locate(idx);
+        if self.owned.contains(&s) {
+            return self.backend.get_cell(&self.shards[s].buf.cur, local);
+        }
+        // a foreign shard owns the cell: only the coordinator may ask
+        // the cluster; workers answer 0 for cells they don't hold (their
+        // serve loop is only ever asked about cells they do)
+        let Some(c) = &self.cluster else { return 0 };
+        if !c.is_coordinator() {
+            return 0;
+        }
+        match c.broadcast(SegKind::CellReq, &idx.to_le_bytes(), SegKind::CellReply) {
+            // exactly one process owns the cell; the rest reply 0
+            Ok(replies) => replies.iter().filter_map(|r| r.first().copied()).max().unwrap_or(0),
+            Err(e) => panic!("cluster cell query failed: {e}"),
+        }
     }
 
     fn shard_stats(&self) -> Option<ShardStats> {
         Some(self.stats)
+    }
+
+    fn state_hash(&self) -> u64 {
+        match &self.cluster {
+            // single-process: the trait-default loop, verbatim
+            None => {
+                let mut h = Fnv::default();
+                for idx in 0..self.cells() {
+                    h.push(self.cell(idx));
+                }
+                h.finish()
+            }
+            // cluster: one bitmap merge instead of one round-trip per
+            // cell, folded in the exact order the default would use so
+            // the digest matches every single-process twin
+            Some(_) => {
+                let bits = self.export_state();
+                let mut h = Fnv::default();
+                for idx in 0..self.cells() {
+                    h.push(u8::from(state_bit(&bits, idx)));
+                }
+                h.finish()
+            }
+        }
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let cells = self.cells();
+        let mut bits = vec![0u8; cells.div_ceil(8) as usize];
+        for idx in 0..cells {
+            if self.cell_owned(idx) != 0 {
+                set_state_bit(&mut bits, idx);
+            }
+        }
+        if let Some(c) = &self.cluster {
+            if c.is_coordinator() {
+                let replies = match c.broadcast(SegKind::ExportReq, &[], SegKind::ExportReply) {
+                    Ok(replies) => replies,
+                    Err(e) => panic!("cluster export failed: {e}"),
+                };
+                for r in replies {
+                    if r.len() != bits.len() {
+                        panic!(
+                            "cluster export reply is {} bytes, expected {}",
+                            r.len(),
+                            bits.len()
+                        );
+                    }
+                    for (dst, src) in bits.iter_mut().zip(&r) {
+                        *dst |= src;
+                    }
+                }
+            }
+        }
+        bits
     }
 
     fn load_state(&mut self, bits: &[u8]) -> Result<(), String> {
@@ -612,21 +911,31 @@ impl<B: StateBackend> Engine for ShardedSqueezeEngine<B> {
         // same canonical route as seeding: compact index -> λ -> global
         // slot -> (owning shard, shard-local slot). Ghost rings are left
         // zeroed — every step's exchange rewrites them from committed
-        // local state before any boundary sweep reads them.
+        // local state before any boundary sweep reads them. Non-owned
+        // shards hold empty buffers; their cells belong to peers.
         for s in &mut self.shards {
             s.buf.cur.fill(B::Unit::default());
             s.buf.next.fill(B::Unit::default());
         }
-        let tile = self.maps.block.rho as u64 * self.maps.block.rho as u64;
         let full = &self.maps.full;
         for idx in 0..full.compact.area() {
-            if crate::ca::engine::state_bit(bits, idx) {
-                let e = lambda(full, Coord::from_linear(idx, full.compact.w));
-                let slot = self.maps.block.storage_index(e).expect("fractal cell");
-                let bidx = slot / tile;
-                let s = self.part.shard_of(bidx);
-                let local = (bidx - self.part.range(s).0) * tile + slot % tile;
-                self.backend.set_cell(&mut self.shards[s].buf.cur, local);
+            if state_bit(bits, idx) {
+                let (s, local) = self.locate(idx);
+                if self.owned.contains(&s) {
+                    self.backend.set_cell(&mut self.shards[s].buf.cur, local);
+                }
+            }
+        }
+        if let Some(c) = &self.cluster {
+            if c.is_coordinator() {
+                for ack in c.broadcast(SegKind::LoadCmd, bits, SegKind::LoadAck)? {
+                    if !ack.is_empty() {
+                        return Err(format!(
+                            "cluster load failed: {}",
+                            String::from_utf8_lossy(&ack)
+                        ));
+                    }
+                }
             }
         }
         Ok(())

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use squeeze::coordinator::{Coordinator, CoordinatorConfig, JobSpec};
+use squeeze::net::{arm_faults, run_worker, ClusterListener};
 
 /// Same layout corners as the durability suite: byte/packed ×
 /// single/sharded.
@@ -248,6 +249,50 @@ fn watchdog_cancels_a_stalled_job_with_a_structured_reason() {
     assert!(err.contains("watchdog"), "{err}");
     assert!(err.contains("no progress"), "{err}");
     assert_eq!(coord.metrics().snapshot().watchdog_cancels, 1);
+}
+
+#[test]
+fn net_faults_quarantine_a_cluster_session_and_revive_rebuilds_it() {
+    let single = "engine=sharded-squeeze:4:4 r=5 workers=1 seed=9 density=0.4";
+    let want = twin_hash(single, 6);
+    let line = "engine=sharded-squeeze:4:4@hosts=2 r=5 workers=1 seed=9 density=0.4";
+    let dir = tmpdir("net");
+    let listener = ClusterListener::start("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().to_string();
+    let spawn_worker = |addr: &str| {
+        let addr = addr.to_string();
+        std::thread::spawn(move || run_worker(&addr, Some(1)))
+    };
+    let w1 = spawn_worker(&addr);
+    // the very first transport send errors; workers=1 keeps the
+    // exchange serial so the full reason reaches the quarantine record
+    let coord = Coordinator::with_config(chaos_config(&dir, "net.send:err@step=1", 5));
+    let sid = coord.open(JobSpec::parse_line(0, line).unwrap()).unwrap().sid;
+    coord.persist(sid, Some(1), None).unwrap();
+    // mirror the CLI's serve wiring: the coordinator's one plan also
+    // covers the transport seams
+    arm_faults(coord.fault_plan());
+    let err = coord.step(sid, 6).unwrap_err();
+    arm_faults(None);
+    assert!(err.contains("quarantined"), "{err}");
+    assert_eq!(coord.metrics().snapshot().quarantined, 1);
+    assert!(coord.fault_plan().unwrap().injected() >= 1);
+    // revive rebuilds the placement from the checkpoint — the rebuild
+    // claims a freshly joined worker and its engine swap releases the
+    // fenced one
+    let w2 = spawn_worker(&addr);
+    coord.revive(sid).unwrap();
+    let _ = w1.join().unwrap();
+    coord.step(sid, 6).unwrap();
+    let closed = coord.close(sid).unwrap();
+    assert_eq!(closed.steps_done, 6);
+    assert_eq!(closed.state_hash, want, "revived cluster diverged from twin");
+    let snap = coord.metrics().snapshot();
+    assert_eq!(snap.quarantined, 0, "{snap:?}");
+    assert_eq!(snap.revives, 1, "{snap:?}");
+    w2.join().unwrap().unwrap();
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,0 +1,228 @@
+//! Multi-process differential: the cluster transport row of the
+//! correctness matrix. An `@hosts=N` placement runs the same halo
+//! exchange as the single-process sharded engine with a socket where
+//! the staging `Vec` sits, so for every rule in the matrix a 2-process
+//! cluster (byte and packed backends) must produce the same
+//! `state_hash()` as its single-process twin and the expanded BB
+//! reference after *every* step — plus a 3-process spot check (the
+//! relay path through the hub), the query/load fan-out, and the
+//! fail-closed seam: an injected `net.send`/`net.recv` fault must
+//! panic the step (→ quarantine upstream), never wedge or corrupt it.
+//!
+//! Workers run as in-process threads driving the real `run_worker`
+//! serve loop over real TCP sockets; the joined-worker pool is
+//! process-global, so every test serializes on one lock and drains
+//! what it spawns.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+use squeeze::ca::{build, Engine, EngineConfig, EngineKind, Rule};
+use squeeze::coordinator::FaultPlan;
+use squeeze::fractal::{catalog, FractalSpec};
+use squeeze::net::{self, ClusterListener};
+
+/// Same rule matrix as the differential suite: Conway, HighLife, Seeds,
+/// the still-life boundary rule, and an asymmetric birth-heavy rule.
+const RULES: &[&str] = &["B3/S23", "B36/S23", "B2/S", "B/S012345678", "B13/S0123"];
+
+/// The joined-worker pool and the transport fault cell are
+/// process-global; cluster tests take this lock so one test's workers
+/// are never claimed by another's build.
+fn lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn config(kind: EngineKind, hosts: u32, rule: Rule) -> EngineConfig {
+    EngineConfig {
+        kind,
+        r: 5,
+        rule,
+        density: 0.45,
+        seed: 0xD1FF,
+        workers: 2,
+        hosts,
+        ..Default::default()
+    }
+}
+
+/// A live cluster: the coordinator-side engine plus one serve-loop
+/// thread per worker process stand-in.
+struct Cluster {
+    engine: Box<dyn Engine>,
+    workers: Vec<JoinHandle<Result<(), String>>>,
+}
+
+impl Cluster {
+    /// Start a listener on an ephemeral port, spawn `hosts - 1`
+    /// workers, and build the coordinator engine (which claims them).
+    fn start(spec: &FractalSpec, cfg: &EngineConfig) -> Cluster {
+        let listener = ClusterListener::start("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().to_string();
+        let workers: Vec<_> = (1..cfg.hosts)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || net::run_worker(&addr, Some(1)))
+            })
+            .collect();
+        let engine = build(spec, cfg).unwrap();
+        Cluster { engine, workers }
+    }
+
+    /// Drop the engine (its `Bye` releases the serve loops) and verify
+    /// every worker exited cleanly.
+    fn shutdown(self) {
+        drop(self.engine);
+        for worker in self.workers {
+            worker.join().unwrap().unwrap();
+        }
+    }
+
+    /// Tear down after an induced failure: workers may exit either way
+    /// (clean `Bye` or a failed serve loop), but they must exit.
+    fn shutdown_after_failure(self) {
+        drop(self.engine);
+        for worker in self.workers {
+            let _ = worker.join().unwrap();
+        }
+    }
+}
+
+#[test]
+fn two_process_byte_and_packed_match_single_process_and_bb_for_every_rule() {
+    let _guard = lock();
+    let spec = catalog::sierpinski_triangle();
+    for rule_text in RULES {
+        let rule = Rule::parse(rule_text).unwrap();
+        for kind in [
+            EngineKind::ShardedSqueeze { rho: 2, shards: 4 },
+            EngineKind::PackedShardedSqueeze { rho: 2, shards: 4 },
+        ] {
+            let mut bb = build(&spec, &config(EngineKind::Bb, 1, rule)).unwrap();
+            let mut single = build(&spec, &config(kind, 1, rule)).unwrap();
+            let cfg = config(kind, 2, rule);
+            let mut cluster = Cluster::start(&spec, &cfg);
+            assert!(
+                cluster.engine.name().ends_with("@hosts=2"),
+                "{}",
+                cluster.engine.name()
+            );
+            for step in 0..6 {
+                bb.step();
+                single.step();
+                cluster.engine.step();
+                let want = bb.state_hash();
+                assert_eq!(
+                    single.state_hash(),
+                    want,
+                    "single {kind:?} rule {rule_text} step {step}"
+                );
+                assert_eq!(
+                    cluster.engine.state_hash(),
+                    want,
+                    "cluster {kind:?} rule {rule_text} step {step}"
+                );
+            }
+            assert_eq!(cluster.engine.population(), single.population(), "{rule_text}");
+            cluster.shutdown();
+        }
+    }
+    assert_eq!(net::pending_workers(), 0);
+}
+
+#[test]
+fn three_process_relay_queries_and_load_agree_with_the_single_twin() {
+    let _guard = lock();
+    let spec = catalog::sierpinski_triangle();
+    let rule = Rule::parse("B3/S23").unwrap();
+    let kind = EngineKind::ShardedSqueeze { rho: 2, shards: 4 };
+    let mut single = build(&spec, &config(kind, 1, rule)).unwrap();
+    let mut cluster = Cluster::start(&spec, &config(kind, 3, rule));
+    assert!(cluster.engine.name().ends_with("@hosts=3"));
+    for _ in 0..4 {
+        single.step();
+        cluster.engine.step();
+    }
+    assert_eq!(cluster.engine.state_hash(), single.state_hash());
+    assert_eq!(cluster.engine.population(), single.population());
+    // per-cell queries fan out to whichever process owns the cell
+    let cells = single.cells();
+    for idx in (0..cells).step_by((cells / 16).max(1) as usize) {
+        assert_eq!(cluster.engine.cell(idx), single.cell(idx), "cell {idx}");
+    }
+    // the load fan-out rebuilds every process's owned state: rewind the
+    // cluster to the twin's exported bitmap and both keep agreeing
+    let bits = single.export_state();
+    cluster.engine.load_state(&bits).unwrap();
+    assert_eq!(cluster.engine.state_hash(), single.state_hash());
+    for _ in 0..2 {
+        single.step();
+        cluster.engine.step();
+    }
+    assert_eq!(cluster.engine.state_hash(), single.state_hash());
+    cluster.shutdown();
+    assert_eq!(net::pending_workers(), 0);
+}
+
+#[test]
+fn injected_send_fault_panics_the_step_and_delay_faults_cost_only_latency() {
+    let _guard = lock();
+    let spec = catalog::sierpinski_triangle();
+    let rule = Rule::parse("B3/S23").unwrap();
+    let kind = EngineKind::ShardedSqueeze { rho: 2, shards: 4 };
+
+    // a delayed frame is pure latency: the step completes and the hash
+    // still matches the twin
+    let mut single = build(&spec, &config(kind, 1, rule)).unwrap();
+    let mut cluster = Cluster::start(&spec, &config(kind, 2, rule));
+    let delay = FaultPlan::parse("net.recv:delay=1ms@step=1", 3).unwrap();
+    net::arm_faults(Some(Arc::new(delay)));
+    cluster.engine.step();
+    net::arm_faults(None);
+    single.step();
+    assert_eq!(cluster.engine.state_hash(), single.state_hash());
+    cluster.shutdown();
+
+    // a failed send errors the exchange, which must panic the step —
+    // upstream, the coordinator's catch-unwind turns exactly this panic
+    // into a quarantined session (chaos suite), never a silent skip.
+    // workers=1 keeps the exchange on the calling thread so the panic
+    // payload (not the scope's replacement) reaches the catch.
+    let serial = EngineConfig { workers: 1, ..config(kind, 2, rule) };
+    let mut cluster = Cluster::start(&spec, &serial);
+    cluster.engine.step();
+    let err = FaultPlan::parse("net.send:err@step=1", 3).unwrap();
+    let plan = Arc::new(err);
+    net::arm_faults(Some(Arc::clone(&plan)));
+    let payload = catch_unwind(AssertUnwindSafe(|| cluster.engine.step())).unwrap_err();
+    net::arm_faults(None);
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "opaque panic".to_string());
+    assert!(msg.contains("cluster halo exchange failed"), "{msg}");
+    assert!(msg.contains("injected fault at net.send"), "{msg}");
+    assert_eq!(plan.injected(), 1);
+    // the failed step is fenced, not wedged: teardown still completes
+    cluster.shutdown_after_failure();
+    assert_eq!(net::pending_workers(), 0);
+}
+
+#[test]
+fn cluster_builds_fail_closed_without_enough_workers() {
+    let _guard = lock();
+    let spec = catalog::sierpinski_triangle();
+    let rule = Rule::parse("B3/S23").unwrap();
+    // no listener, no workers: the claim times out with the hint
+    let cfg = config(EngineKind::ShardedSqueeze { rho: 2, shards: 4 }, 2, rule);
+    let before = std::time::Instant::now();
+    let err = build(&spec, &cfg).map(|_| ()).unwrap_err().to_string();
+    assert!(err.contains("squeeze worker --join"), "{err}");
+    // the join timeout bounds the wait (10s) — it must actually wait,
+    // not fail instantly on an empty pool race
+    assert!(before.elapsed().as_secs() < 60);
+}

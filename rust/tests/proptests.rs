@@ -456,8 +456,8 @@ fn prop_population_conserved_under_still_life_rule() {
 fn prop_engine_spec_display_parse_round_trips_every_variant() {
     use squeeze::ca::EngineSpec;
     // the one-grammar contract: parse(display(spec)) == spec over every
-    // constructible kind, with randomized ρ and shard counts (including
-    // the rho=1 "bare name" renderings)
+    // constructible kind, with randomized ρ, shard counts and @hosts=
+    // placements (including the rho=1 "bare name" renderings)
     Runner::new("engine-spec-roundtrip", 0xB1).run(2000, |g| {
         let rho = *g.choose(&[1u32, 2, 3, 4, 8, 9, 16, 27, 32, 81, 128, 1024]);
         let shards = g.u32(1, 64);
@@ -469,11 +469,83 @@ fn prop_engine_spec_display_parse_round_trips_every_variant() {
             4 => EngineKind::PackedSqueeze { rho },
             _ => EngineKind::PackedShardedSqueeze { rho, shards },
         };
-        let spec = EngineSpec { kind };
+        let hosts = match kind {
+            EngineKind::ShardedSqueeze { .. } | EngineKind::PackedShardedSqueeze { .. } => {
+                g.u32(1, shards.min(4))
+            }
+            _ => 1,
+        };
+        let spec = EngineSpec { kind, hosts };
         let text = spec.to_string();
         Runner::check(
             EngineSpec::parse(&text) == Ok(spec),
-            &format!("{kind:?} -> {text:?}"),
+            &format!("{kind:?} hosts={hosts} -> {text:?}"),
+        )
+    });
+}
+
+#[test]
+fn prop_cluster_route_codec_round_trips_and_rejects_torn_tables() {
+    use squeeze::net::{decode_routes, encode_routes};
+    use squeeze::shard::HaloRoute;
+    Runner::new("route-codec-roundtrip", 0xB4).run(400, |g| {
+        let n = g.usize(0, 40);
+        let routes: Vec<HaloRoute> = (0..n)
+            .map(|_| HaloRoute {
+                src_shard: g.usize(0, 4096),
+                src_block: g.u64(0, u64::MAX),
+                dst_shard: g.usize(0, 4096),
+                ghost_slot: g.u64(0, u64::MAX),
+                dirs: g.u64(0, 255) as u8,
+            })
+            .collect();
+        let bytes = encode_routes(&routes);
+        if decode_routes(&bytes).as_deref() != Ok(&routes[..]) {
+            return Err(format!("{n}-route table failed to round-trip"));
+        }
+        // any strict prefix is a structural error — never a panic
+        let cut = g.usize(0, bytes.len() - 1);
+        if decode_routes(&bytes[..cut]).is_ok() {
+            return Err(format!("truncation to {cut}/{} bytes accepted", bytes.len()));
+        }
+        let mut padded = bytes;
+        padded.push(g.u64(0, 255) as u8);
+        Runner::check(decode_routes(&padded).is_err(), "padded route table accepted")
+    });
+}
+
+#[test]
+fn prop_cluster_frames_reject_corruption_without_panicking() {
+    use squeeze::net::frame::read_frame;
+    use squeeze::net::{Frame, SegKind};
+    let kinds = [SegKind::Rim, SegKind::StepHash, SegKind::StepCmd, SegKind::Bye];
+    Runner::new("frame-corruption", 0xB5).run(400, |g| {
+        let payload: Vec<u8> = (0..g.usize(0, 64)).map(|_| g.u64(0, 255) as u8).collect();
+        let f = Frame {
+            kind: *g.choose(&kinds),
+            step: g.u64(0, u64::MAX),
+            src_shard: g.u64(0, u32::MAX as u64) as u32,
+            dst_shard: g.u64(0, u32::MAX as u64) as u32,
+            payload,
+        };
+        let wire = f.encode();
+        if Frame::decode(&wire).as_ref() != Ok(&f) {
+            return Err("frame failed to round-trip".to_string());
+        }
+        // a random single-bit flip anywhere in the image is always
+        // caught (magic/version/kind/len checks or the trailing CRC)
+        let mut bad = wire.clone();
+        let byte = g.usize(0, bad.len() - 1);
+        let bit = g.u32(0, 7);
+        bad[byte] ^= 1u8 << bit;
+        if Frame::decode(&bad).is_ok() {
+            return Err(format!("bit flip at byte {byte} bit {bit} slipped through"));
+        }
+        // a torn stream read errors cleanly, never panics or blocks
+        let cut = g.usize(0, wire.len() - 1);
+        Runner::check(
+            read_frame(&mut &wire[..cut]).is_err(),
+            &format!("truncated stream read to {cut} accepted"),
         )
     });
 }
